@@ -1,0 +1,78 @@
+//! Compare every controller (bandits + RL baselines + oracle) on one
+//! benchmark: energy, regret, slowdown, switching — a one-app slice of the
+//! paper's Table 1 with extra detail.
+//!
+//! ```sh
+//! cargo run --release --example compare_policies [app] [reps]
+//! ```
+
+use energyucb::bandit::{
+    ConstrainedEnergyUcb, EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, Oracle, Policy,
+    RoundRobin, StaticPolicy, Ucb1,
+};
+use energyucb::control::{run_repeated, RepeatedMetrics, SessionCfg};
+use energyucb::rl::{DrlCap, DrlCapMode, RlPower};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::util::table::{fnum, fnum_sep, Table};
+use energyucb::workload;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let app_name = args.next().unwrap_or_else(|| "miniswp".to_string());
+    let reps: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(5);
+    let seed = 2026;
+
+    let app = workload::app(&app_name).unwrap_or_else(|| {
+        eprintln!("unknown app {app_name}; known: {:?}", workload::APP_NAMES);
+        std::process::exit(2);
+    });
+    let freqs = FreqDomain::aurora();
+    let k = freqs.k();
+
+    let policies: Vec<Box<dyn Policy>> = vec![
+        Box::new(StaticPolicy::labeled(k, freqs.max_arm(), "1.6 GHz (default)")),
+        Box::new(Oracle::for_app(&app)),
+        Box::new(RoundRobin::new(k)),
+        Box::new(EpsilonGreedy::new(k, 0.05, 0.0, seed)),
+        Box::new(EnergyTs::default_for(k, seed)),
+        Box::new(Ucb1::new(k, 0.04)),
+        Box::new(RlPower::new(k, seed)),
+        Box::new(DrlCap::new(k, DrlCapMode::Online, seed)),
+        Box::new(EnergyUcb::new(k, EnergyUcbConfig::default())),
+        Box::new(ConstrainedEnergyUcb::new(k, EnergyUcbConfig::default(), 0.05)),
+    ];
+
+    println!(
+        "comparing {} policies on {app_name} ({reps} reps, seed {seed})\n",
+        policies.len()
+    );
+    let mut table = Table::new(vec![
+        "policy",
+        "energy kJ (±std)",
+        "vs default",
+        "regret kJ",
+        "slowdown %",
+        "switches",
+    ]);
+    let default_kj = app.energy_kj[freqs.max_arm()];
+    for mut policy in policies {
+        let results = run_repeated(&app, policy.as_mut(), &SessionCfg::default(), reps, seed);
+        let agg = RepeatedMetrics::from_runs(
+            &results.iter().map(|r| r.metrics.clone()).collect::<Vec<_>>(),
+        );
+        table.row(vec![
+            policy.name(),
+            format!("{} ± {:.2}", fnum_sep(agg.energy_mean_kj, 2), agg.energy_std_kj),
+            format!("{:+.2}%", 100.0 * (agg.energy_mean_kj - default_kj) / default_kj),
+            fnum(agg.energy_mean_kj - app.optimal_energy_kj(), 2),
+            fnum(100.0 * (agg.time_mean_s / app.t_max_s - 1.0), 2),
+            fnum(agg.switches_mean, 0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "best static = {} @ {:.2} kJ; EnergyUCB should sit within ~1% of it.",
+        freqs.label(app.optimal_arm()),
+        app.optimal_energy_kj()
+    );
+}

@@ -1,0 +1,121 @@
+//! Fleet-scale Monte Carlo through the AOT pipeline: load the compiled
+//! `fleet_step` HLO artifact, run hundreds of seeded environments in
+//! lockstep on the PJRT CPU client, and cross-check the native engine —
+//! the end-to-end proof that L1 (Pallas) → L2 (JAX) → HLO text → L3 (rust)
+//! compose. Falls back to the native engine if artifacts are missing.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example fleet_sweep [batch] [steps]
+//! ```
+
+use std::path::Path;
+
+use energyucb::fleet::{native, FleetEngine, FleetHyper, FleetParams, FleetState};
+use energyucb::runtime::XlaRuntime;
+use energyucb::sim::freq::FreqDomain;
+use energyucb::util::stats::Summary;
+use energyucb::util::table::{fnum, Table};
+use energyucb::util::Rng;
+use energyucb::workload::calibration;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let batch: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let steps: u64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(6_000);
+    let seed = 2026;
+
+    let freqs = FreqDomain::aurora();
+    let apps: Vec<_> = calibration::all_apps();
+    let assigned: Vec<&_> = apps.iter().cycle().take(batch).collect();
+    let params = FleetParams::from_apps(&assigned, &freqs, 0.01);
+    let hyper = FleetHyper::default();
+
+    // HLO engine (if exported for this batch size).
+    let art = Path::new("artifacts");
+    let hlo_available = art.join(format!("fleet_step_b{batch}.hlo.txt")).exists();
+
+    let mut hlo_state = FleetState::fresh(batch, freqs.k());
+    let mut hlo_wall = None;
+    if hlo_available {
+        let runtime = XlaRuntime::cpu()?;
+        println!("PJRT platform: {} ({} devices)", runtime.platform_name(), runtime.device_count());
+        let engine = FleetEngine::load(&runtime, art, params.clone(), hyper)?;
+        let mut rng = Rng::new(seed);
+        let t0 = std::time::Instant::now();
+        engine.run(&mut hlo_state, &mut rng, steps)?;
+        hlo_wall = Some(t0.elapsed());
+    } else {
+        eprintln!("artifacts/fleet_step_b{batch}.hlo.txt missing — run `make artifacts` (native only)");
+    }
+
+    // Native engine, identical noise stream.
+    let mut nat_state = FleetState::fresh(batch, freqs.k());
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    native::native_run(&mut nat_state, &params, &hyper, &mut rng, steps);
+    let nat_wall = t0.elapsed();
+
+    println!("\nfleet sweep: B={batch}, {steps} steps, {} apps cycled", apps.len());
+    let mut table = Table::new(vec!["engine", "wall s", "env-steps/s", "mean cum kJ", "mean regret"]);
+    let mean_kj = |s: &FleetState| {
+        s.cum_energy.iter().map(|e| *e as f64 / 1000.0).sum::<f64>() / batch as f64
+    };
+    let mean_reg =
+        |s: &FleetState| s.cum_regret.iter().map(|r| *r as f64).sum::<f64>() / batch as f64;
+    if let Some(w) = hlo_wall {
+        table.row(vec![
+            "hlo (PJRT)".to_string(),
+            fnum(w.as_secs_f64(), 2),
+            fnum(batch as f64 * steps as f64 / w.as_secs_f64(), 0),
+            fnum(mean_kj(&hlo_state), 2),
+            fnum(mean_reg(&hlo_state), 1),
+        ]);
+    }
+    table.row(vec![
+        "native".to_string(),
+        fnum(nat_wall.as_secs_f64(), 2),
+        fnum(batch as f64 * steps as f64 / nat_wall.as_secs_f64(), 0),
+        fnum(mean_kj(&nat_state), 2),
+        fnum(mean_reg(&nat_state), 1),
+    ]);
+    println!("{}", table.render());
+
+    if hlo_available {
+        // Cross-check.
+        let diffs: Vec<f64> = (0..batch)
+            .map(|e| {
+                let a = hlo_state.cum_energy[e] as f64;
+                let b = nat_state.cum_energy[e] as f64;
+                (a - b).abs() / b.max(1.0)
+            })
+            .collect();
+        let s = Summary::of(&diffs);
+        println!(
+            "cross-check |hlo - native| relative energy: mean {:.2e}, p99 {:.2e}, max {:.2e}",
+            s.mean, s.p99, s.max
+        );
+        assert!(s.max < 0.02, "engines diverged");
+        println!("engines agree ✓ (three-layer AOT pipeline validated)");
+    }
+
+    // Seed-variance summary per app (first occurrence pattern).
+    let mut table = Table::new(vec!["app", "seeds", "mean regret", "std"]);
+    for (i, app) in apps.iter().enumerate() {
+        let regrets: Vec<f64> = (0..batch)
+            .filter(|e| e % apps.len() == i)
+            .map(|e| nat_state.cum_regret[e] as f64)
+            .collect();
+        if regrets.len() < 2 {
+            continue;
+        }
+        let s = Summary::of(&regrets);
+        table.row(vec![
+            app.name.to_string(),
+            regrets.len().to_string(),
+            fnum(s.mean, 1),
+            fnum(s.std, 1),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! End-to-end validation driver: regenerate every table and figure of the
+//! paper on the calibrated workload suite and print the headline metrics.
+//! This is the "one command reproduces the paper" entrypoint
+//! (equivalently: `energyucb exp all`).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example paper_all [--quick]
+//! ```
+
+use energyucb::experiments::{all_experiments, ExpContext};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ctx = ExpContext {
+        quick,
+        reps: if quick { 2 } else { 10 },
+        out_dir: std::path::PathBuf::from("results"),
+        ..ExpContext::default()
+    };
+    let t0 = std::time::Instant::now();
+    for exp in all_experiments() {
+        eprintln!("\n=== {} — {} ===", exp.id(), exp.title());
+        let report = exp.run(&ctx)?;
+        println!("# {} — {}\n\n{}", exp.id(), exp.title(), report.text);
+        report.write(&ctx.out_dir)?;
+    }
+    eprintln!(
+        "\nall experiments done in {:.1}s — results/ has JSON+CSV per experiment",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

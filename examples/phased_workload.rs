@@ -1,0 +1,114 @@
+//! Extension beyond the paper: non-stationary (phased) workloads and the
+//! discounted EnergyUCB variant. A job that switches from compute-bound to
+//! memory-bound mid-run moves its energy-optimal frequency; discounting
+//! (γ < 1) lets the controller track the drift, while the stationary
+//! controller stays stuck on the stale optimum.
+//!
+//! ```sh
+//! cargo run --release --example phased_workload
+//! ```
+
+use energyucb::bandit::{EnergyUcb, EnergyUcbConfig, Policy, RewardNormalizer, RewardForm};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::sim::node::Node;
+use energyucb::util::table::{fnum, Table};
+use energyucb::workload::calibration;
+use energyucb::workload::phase::{Phase, PhasedWorkload};
+
+/// Run a policy over a phased workload by swapping the node's app model at
+/// phase boundaries (progress carries across).
+fn run_phased(workload: &PhasedWorkload, policy: &mut dyn Policy, seed: u64) -> (f64, f64) {
+    let freqs = FreqDomain::aurora();
+    let dt = 0.01;
+    let mut completed = 0.0f64;
+    let mut energy_kj = 0.0;
+    let mut time_s = 0.0;
+    let mut t = 0u64;
+    let mut normalizer = RewardNormalizer::new();
+    let mut phase_idx = usize::MAX;
+    let mut node: Option<Node> = None;
+    let mut consumed_in_phase = 0.0;
+    while completed < 1.0 - 1e-9 && t < 2_000_000 {
+        let (idx, phase) = workload.phase_at(completed);
+        if idx != phase_idx {
+            // Enter the new phase: fresh node on this phase's model, sized
+            // to the phase's share of work.
+            if let Some(n) = node.take() {
+                let tot = n.totals();
+                energy_kj += tot.gpu_energy_kj;
+                time_s += tot.exec_time_s;
+            }
+            node = Some(Node::new(phase.model.clone(), freqs.clone(), dt, seed + idx as u64));
+            phase_idx = idx;
+            consumed_in_phase = 0.0;
+        }
+        let node_ref = node.as_mut().unwrap();
+        t += 1;
+        let arm = policy.select(t);
+        let obs = node_ref.step(arm);
+        let raw = RewardForm::EnergyRatio.raw(obs.gpu_energy_j, obs.core_util, obs.uncore_util);
+        policy.update(arm, normalizer.normalize(raw).max(-3.0), obs.progress);
+        // Node-internal progress is the fraction of the *phase model's*
+        // total work; convert to phase-weighted global progress.
+        consumed_in_phase += obs.progress;
+        completed = (phase_idx as f64).min(1.0) * 0.0
+            + workload.phases()[..phase_idx].iter().map(|p| p.weight).sum::<f64>()
+            + (consumed_in_phase.min(1.0)) * phase.weight;
+        if obs.done {
+            completed = workload.phases()[..=phase_idx].iter().map(|p| p.weight).sum();
+        }
+    }
+    if let Some(n) = node.take() {
+        let tot = n.totals();
+        energy_kj += tot.gpu_energy_kj;
+        time_s += tot.exec_time_s;
+    }
+    (energy_kj, time_s)
+}
+
+fn main() {
+    let lbm = calibration::app("lbm").unwrap(); // compute-bound: opt 1.5 GHz
+    let miniswp = calibration::app("miniswp").unwrap(); // memory-bound: opt 0.8 GHz
+    let workload = PhasedWorkload::new(
+        "lbm -> miniswp",
+        vec![
+            Phase { model: lbm, weight: 0.5 },
+            Phase { model: miniswp, weight: 0.5 },
+        ],
+    );
+
+    println!("phased workload: {} (optimum shifts 1.5 GHz -> 0.8 GHz mid-run)\n", "lbm -> miniswp");
+    let mut table = Table::new(vec!["controller", "energy kJ", "time s"]);
+    let configs = [
+        ("EnergyUCB (stationary)", EnergyUcbConfig::default()),
+        (
+            "EnergyUCB γ=0.999 (discounted)",
+            EnergyUcbConfig { discount: 0.999, alpha: 0.06, ..EnergyUcbConfig::default() },
+        ),
+    ];
+    let mut results = Vec::new();
+    for (label, cfg) in configs {
+        let mut kj_sum = 0.0;
+        let mut t_sum = 0.0;
+        let reps = 5;
+        for rep in 0..reps {
+            let mut policy = EnergyUcb::new(9, cfg);
+            let (kj, t) = run_phased(&workload, &mut policy, 100 + rep);
+            kj_sum += kj;
+            t_sum += t;
+        }
+        table.row(vec![
+            label.to_string(),
+            fnum(kj_sum / reps as f64, 2),
+            fnum(t_sum / reps as f64, 2),
+        ]);
+        results.push(kj_sum / reps as f64);
+    }
+    println!("{}", table.render());
+    let delta = results[0] - results[1];
+    println!(
+        "discounting saves {:.2} kJ on the phase shift ({})",
+        delta,
+        if delta > 0.0 { "tracks the moving optimum ✓" } else { "no benefit at this drift rate" }
+    );
+}

@@ -1,0 +1,56 @@
+//! Quickstart: run EnergyUCB on one calibrated benchmark and print the
+//! paper's headline metrics (energy vs the 1.6 GHz default, energy regret
+//! vs the best static frequency, switching overhead).
+//!
+//! ```sh
+//! cargo run --release --example quickstart [app] [seed]
+//! ```
+
+use energyucb::bandit::{EnergyUcb, EnergyUcbConfig};
+use energyucb::control::{run_session, SessionCfg};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::workload;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let app_name = args.next().unwrap_or_else(|| "tealeaf".to_string());
+    let seed: u64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(2026);
+
+    let app = workload::app(&app_name).unwrap_or_else(|| {
+        eprintln!("unknown app {app_name}; known: {:?}", workload::APP_NAMES);
+        std::process::exit(2);
+    });
+    let freqs = FreqDomain::aurora();
+
+    println!("EnergyUCB quickstart — {app_name} on one simulated Aurora node");
+    println!(
+        "  workload: {:?}, T(1.6 GHz) = {:.1}s, optimal static = {}",
+        app.class,
+        app.t_max_s,
+        freqs.label(app.optimal_arm())
+    );
+
+    let mut policy = EnergyUcb::new(freqs.k(), EnergyUcbConfig::default());
+    let cfg = SessionCfg { seed, ..SessionCfg::default() };
+    let t0 = std::time::Instant::now();
+    let result = run_session(&app, &mut policy, &cfg);
+    let m = &result.metrics;
+
+    let default_kj = app.energy_kj[freqs.max_arm()];
+    println!("\n  decision steps      : {}", m.steps);
+    println!("  execution time      : {:.2} s  ({:+.2}% vs 1.6 GHz)", m.exec_time_s, m.slowdown(&app) * 100.0);
+    println!("  GPU energy          : {:.2} kJ", m.gpu_energy_kj);
+    println!("  default (1.6 GHz)   : {:.2} kJ", default_kj);
+    println!("  saved energy        : {:.2} kJ ({:.2}%)", m.saved_energy_kj(&app, &freqs), 100.0 * m.saved_energy_kj(&app, &freqs) / default_kj);
+    println!("  energy regret       : {:.2} kJ vs best static {:.2} kJ", m.energy_regret_kj(&app), app.optimal_energy_kj());
+    println!("  switches            : {} ({:.2} J, {:.4} s overhead)", m.switches, m.switch_energy_j, m.switch_time_s);
+    println!("\n  simulated {:.0}x faster than real time ({:.2} s wall)", m.exec_time_s / t0.elapsed().as_secs_f64(), t0.elapsed().as_secs_f64());
+
+    // Final arm preferences.
+    println!("\n  learned preference (pull counts):");
+    for i in 0..freqs.k() {
+        let n = policy.count(i);
+        let bar = "#".repeat((60.0 * n / m.steps as f64).round() as usize);
+        println!("    {} {:>7.0} {}", freqs.label(i), n, bar);
+    }
+}

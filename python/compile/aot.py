@@ -1,0 +1,112 @@
+"""AOT export: lower the L2 fleet step to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the rust coordinator loads the
+artifacts through PJRT and python never appears on the run path.
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  artifacts/fleet_step_b{B}.hlo.txt   for B in --batches (default 64,256,1024)
+  artifacts/saucb_b{B}.hlo.txt        kernel-only module (runtime smoke test)
+  artifacts/manifest.json             shapes/dtypes/ordering contract
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.saucb import saucb_select
+from .model import fleet_step, fleet_step_specs, fleet_scan, fleet_scan_specs
+
+K = 9  # 0.8 .. 1.6 GHz in 0.1 steps (paper S4.1)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fleet_step(b: int) -> str:
+    specs = fleet_step_specs(b, K)
+    return to_hlo_text(jax.jit(fleet_step).lower(*specs))
+
+
+def lower_fleet_scan(s: int, b: int) -> str:
+    specs = fleet_scan_specs(s, b, K)
+    return to_hlo_text(jax.jit(fleet_scan).lower(*specs))
+
+
+def lower_saucb(b: int) -> str:
+    f32 = jnp.float32
+    bk = jax.ShapeDtypeStruct((b, K), f32)
+    bb_i = jax.ShapeDtypeStruct((b,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    return to_hlo_text(
+        jax.jit(saucb_select).lower(bk, bk, bb_i, bk, scalar, scalar, scalar)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", default="64,256,1024")
+    ap.add_argument("--scan-steps", type=int, default=16)
+    args = ap.parse_args()
+    batches = [int(x) for x in args.batches.split(",") if x]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"k": K, "fleet_step": {}, "saucb": {}, "input_order": [
+        "n[B,K]f32", "mean[B,K]f32", "prev[B]i32", "t[]f32", "remaining[B]f32",
+        "cum_energy[B]f32", "cum_regret[B]f32", "switches[B]f32",
+        "reward_mean[B,K]f32", "reward_sigma[B,K]f32", "energy_step[B,K]f32",
+        "progress[B,K]f32", "feasible[B,K]f32", "noise[B]f32",
+        "alpha[]f32", "lam[]f32", "mu_init[]f32", "prior_n[]f32",
+    ], "output_order": [
+        "n", "mean", "prev", "t", "remaining", "cum_energy", "cum_regret",
+        "switches", "sel",
+    ]}
+
+    for b in batches:
+        path = os.path.join(args.out_dir, f"fleet_step_b{b}.hlo.txt")
+        text = lower_fleet_step(b)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["fleet_step"][str(b)] = os.path.basename(path)
+        print(f"wrote {path} ({len(text)} chars)")
+        spath = os.path.join(args.out_dir, f"fleet_scan_b{b}_s{args.scan_steps}.hlo.txt")
+        stext = lower_fleet_scan(args.scan_steps, b)
+        with open(spath, "w") as f:
+            f.write(stext)
+        manifest.setdefault("fleet_scan", {})[str(b)] = {
+            "file": os.path.basename(spath), "steps": args.scan_steps,
+        }
+        print(f"wrote {spath} ({len(stext)} chars)")
+
+    # Kernel-only module at the smallest batch for runtime smoke tests.
+    b = batches[0]
+    path = os.path.join(args.out_dir, f"saucb_b{b}.hlo.txt")
+    text = lower_saucb(b)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["saucb"][str(b)] = os.path.basename(path)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

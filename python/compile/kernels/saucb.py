@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the switching-aware UCB index + masked argmax.
+
+This is the fleet engine's per-step hot spot: for B independent controller
+states it computes SA-UCB_{i,t} = mu_hat + alpha*sqrt(ln t / max(1, n)) -
+lambda*1{i != prev} over K arms, applies the QoS feasibility mask, and takes
+the row argmax (first index on ties, matching the rust L3 policy).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's target is
+an Intel PVC GPU, but the *controller* math has no matmul — on a TPU this is
+pure VPU work. The BlockSpec tiles the batch dimension into VMEM-sized rows
+(TB x K, K = 9 fits one lane group); scalars (alpha, lambda, t) ride in as a
+tiny broadcast block. Exported with interpret=True: CPU PJRT cannot execute
+Mosaic custom-calls, and correctness is what the artifact path validates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows per grid step. 128 keeps the working set (5 * TB * K * 4B ~ 23 KiB)
+# far under VMEM even with double buffering.
+DEFAULT_BLOCK_B = 128
+
+
+def _saucb_kernel(scal_ref, mu_ref, n_ref, prev_ref, feas_ref, idx_ref, sel_ref):
+    """One (TB, K) tile: index computation + masked argmax."""
+    mu = mu_ref[...]
+    n = n_ref[...]
+    prev = prev_ref[...]
+    feas = feas_ref[...]
+    alpha = scal_ref[0]
+    lam = scal_ref[1]
+    t = scal_ref[2]
+
+    bonus = alpha * jnp.sqrt(jnp.log(jnp.maximum(t, 2.0)) / jnp.maximum(n, 1.0))
+    arms = jax.lax.broadcasted_iota(jnp.int32, mu.shape, 1)
+    penalty = lam * (arms != prev[:, None]).astype(mu.dtype)
+    idx = mu + bonus - penalty
+    idx = jnp.where(feas > 0, idx, jnp.asarray(ref.NEG_LARGE, mu.dtype))
+    idx_ref[...] = idx
+    sel_ref[...] = jnp.argmax(idx, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def saucb_select(mu_hat, counts, prev, feasible, alpha, lam, t, *, block_b=DEFAULT_BLOCK_B):
+    """Pallas-backed SA-UCB index + argmax over a (B, K) fleet.
+
+    Args mirror `ref.saucb_index_ref`; alpha/lam/t are scalar () arrays.
+    B must be a multiple of `block_b` (the AOT export picks matching sizes).
+    Returns (idx (B, K) f32, sel (B,) i32).
+    """
+    b, k = mu_hat.shape
+    if b % block_b != 0:
+        # Fall back to a single whole-array block for odd sizes.
+        block_b = b
+    scal = jnp.stack(
+        [
+            jnp.asarray(alpha, mu_hat.dtype),
+            jnp.asarray(lam, mu_hat.dtype),
+            jnp.asarray(t, mu_hat.dtype),
+        ]
+    )
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _saucb_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),  # scalars, broadcast
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), mu_hat.dtype),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=True,  # CPU PJRT target; see module docstring
+    )(scal, mu_hat, counts, prev, feasible)

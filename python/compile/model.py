@@ -1,0 +1,178 @@
+"""L2: the vectorized EnergyUCB fleet step (JAX), calling the L1 kernel.
+
+One call advances B independent (app, seed) bandit environments by one
+10 ms decision interval: SA-UCB selection (Pallas kernel), reward draw from
+the calibrated per-arm distributions, incremental mean update, progress /
+energy / regret / switch accounting. The rust fleet engine loads the
+AOT-lowered HLO of `fleet_step` and drives it in a loop, feeding the state
+outputs back as inputs (device-resident buffers; python never runs at
+request time).
+
+Input order (must match rust/src/fleet/engine.rs and the manifest):
+  0  n           (B,K) f32   pull counts
+  1  mean        (B,K) f32   empirical means
+  2  prev        (B,)  i32   previous arm
+  3  t           ()    f32   1-based decision step
+  4  remaining   (B,)  f32   remaining work fraction
+  5  cum_energy  (B,)  f32   Joules
+  6  cum_regret  (B,)  f32   normalized-reward units
+  7  switches    (B,)  f32
+  8  reward_mean (B,K) f32   true expected reward per arm (normalized)
+  9  reward_sigma(B,K) f32   reward noise std per arm
+  10 energy_step (B,K) f32   true Joules per interval per arm
+  11 progress    (B,K) f32   work fraction per interval per arm
+  12 feasible    (B,K) f32   QoS mask (1 = selectable)
+  13 noise       (B,)  f32   standard normal draws for this step
+  14 alpha       ()    f32
+  15 lam         ()    f32
+  16 mu_init     ()    f32
+  17 prior_n     ()    f32
+Outputs: (n', mean', prev', t', remaining', cum_energy', cum_regret',
+          switches', sel).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.saucb import saucb_select
+
+
+def fleet_step(
+    n,
+    mean,
+    prev,
+    t,
+    remaining,
+    cum_energy,
+    cum_regret,
+    switches,
+    reward_mean,
+    reward_sigma,
+    energy_step,
+    progress,
+    feasible,
+    noise,
+    alpha,
+    lam,
+    mu_init,
+    prior_n,
+):
+    """One fleet decision step. See module docstring for the contract."""
+    b = n.shape[0]
+    rows = jnp.arange(b)
+    active = (remaining > 0.0).astype(n.dtype)
+
+    mu_hat = ref.mu_hat_ref(n, mean, mu_init, prior_n)
+    _, sel = saucb_select(mu_hat, n, prev, feasible, alpha, lam, t)
+
+    r = reward_mean[rows, sel] + reward_sigma[rows, sel] * noise
+    n_sel = n[rows, sel] + active
+    new_n = n.at[rows, sel].set(n_sel)
+    delta = (r - mean[rows, sel]) / jnp.maximum(n_sel, 1.0) * active
+    new_mean = mean.at[rows, sel].add(delta)
+
+    switched = (sel != prev).astype(n.dtype) * active
+    useful = 1.0 - 0.015 * switched  # 150 us stall of a 10 ms interval
+    prog = progress[rows, sel] * useful * active
+    new_remaining = jnp.maximum(remaining - prog, 0.0)
+    step_energy = (energy_step[rows, sel] + 0.3 * switched) * active
+    best = jnp.max(jnp.where(feasible > 0, reward_mean, ref.NEG_LARGE), axis=1)
+    regret = (best - reward_mean[rows, sel]) * active
+
+    return (
+        new_n,
+        new_mean,
+        jnp.where(active > 0, sel, prev).astype(jnp.int32),
+        t + 1.0,
+        new_remaining,
+        cum_energy + step_energy,
+        cum_regret + regret,
+        switches + switched,
+        sel,
+    )
+
+
+def fleet_step_specs(b, k):
+    """ShapeDtypeStructs for jit-lowering `fleet_step` at batch B, K arms."""
+    f32 = jnp.float32
+    bk = jax.ShapeDtypeStruct((b, k), f32)
+    bb = jax.ShapeDtypeStruct((b,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    prev = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return (
+        bk,      # n
+        bk,      # mean
+        prev,    # prev
+        scalar,  # t
+        bb,      # remaining
+        bb,      # cum_energy
+        bb,      # cum_regret
+        bb,      # switches
+        bk,      # reward_mean
+        bk,      # reward_sigma
+        bk,      # energy_step
+        bk,      # progress
+        bk,      # feasible
+        bb,      # noise
+        scalar,  # alpha
+        scalar,  # lam
+        scalar,  # mu_init
+        scalar,  # prior_n
+    )
+
+
+def fleet_scan(
+    n,
+    mean,
+    prev,
+    t,
+    remaining,
+    cum_energy,
+    cum_regret,
+    switches,
+    reward_mean,
+    reward_sigma,
+    energy_step,
+    progress,
+    feasible,
+    noise_seq,
+    alpha,
+    lam,
+    mu_init,
+    prior_n,
+):
+    """S decision steps per call via lax.scan (noise_seq: (S, B) f32).
+
+    Same input order as `fleet_step` with `noise` widened to (S, B); same
+    output order (sel is the last step's selection). Amortizes PJRT
+    dispatch + host<->literal packing by S x on the rust fleet hot path
+    (EXPERIMENTS.md §Perf).
+    """
+
+    def body(carry, noise):
+        out = fleet_step(
+            *carry,
+            reward_mean,
+            reward_sigma,
+            energy_step,
+            progress,
+            feasible,
+            noise,
+            alpha,
+            lam,
+            mu_init,
+            prior_n,
+        )
+        return out[:8], out[8]
+
+    carry0 = (n, mean, prev, t, remaining, cum_energy, cum_regret, switches)
+    carry, sels = jax.lax.scan(body, carry0, noise_seq)
+    return (*carry, sels[-1])
+
+
+def fleet_scan_specs(s, b, k):
+    """ShapeDtypeStructs for jit-lowering `fleet_scan` at S steps, batch B."""
+    specs = list(fleet_step_specs(b, k))
+    specs[13] = jax.ShapeDtypeStruct((s, b), jnp.float32)  # noise_seq
+    return tuple(specs)

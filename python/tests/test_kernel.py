@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas SA-UCB kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, parameter ranges, and masks; every case asserts
+allclose between `saucb.saucb_select` (interpret mode) and `ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.saucb import saucb_select
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_both(mu, n, prev, feas, alpha, lam, t, block_b=128):
+    idx_k, sel_k = saucb_select(
+        jnp.asarray(mu), jnp.asarray(n), jnp.asarray(prev), jnp.asarray(feas),
+        jnp.float32(alpha), jnp.float32(lam), jnp.float32(t), block_b=block_b,
+    )
+    idx_r, sel_r = ref.saucb_index_ref(
+        jnp.asarray(mu), jnp.asarray(n), jnp.asarray(prev), jnp.asarray(feas),
+        jnp.float32(alpha), jnp.float32(lam), jnp.float32(t),
+    )
+    return (np.asarray(idx_k), np.asarray(sel_k)), (np.asarray(idx_r), np.asarray(sel_r))
+
+
+@st.composite
+def saucb_case(draw):
+    b = draw(st.sampled_from([1, 3, 8, 64, 128, 256]))
+    k = draw(st.sampled_from([2, 5, 9, 16]))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    mu = rng.uniform(-2.0, 0.0, size=(b, k)).astype(np.float32)
+    n = rng.integers(0, 500, size=(b, k)).astype(np.float32)
+    prev = rng.integers(0, k, size=(b,)).astype(np.int32)
+    feas = (rng.uniform(size=(b, k)) > draw(st.sampled_from([0.0, 0.3]))).astype(
+        np.float32
+    )
+    # Guarantee at least one feasible arm per row.
+    feas[np.arange(b), rng.integers(0, k, size=(b,))] = 1.0
+    alpha = draw(st.sampled_from([0.0, 0.05, 0.3]))
+    lam = draw(st.sampled_from([0.0, 0.03, 0.2]))
+    t = draw(st.sampled_from([1.0, 2.0, 100.0, 48000.0]))
+    return mu, n, prev, feas, alpha, lam, t
+
+
+@settings(max_examples=60, deadline=None)
+@given(saucb_case())
+def test_kernel_matches_ref(case):
+    (idx_k, sel_k), (idx_r, sel_r) = run_both(*case)
+    np.testing.assert_allclose(idx_k, idx_r, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(sel_k, sel_r)
+
+
+def test_switching_penalty_breaks_tie_toward_prev():
+    b, k = 4, 9
+    mu = np.zeros((b, k), np.float32)
+    n = np.ones((b, k), np.float32) * 10
+    prev = np.array([0, 3, 5, 8], np.int32)
+    feas = np.ones((b, k), np.float32)
+    (_, sel), _ = run_both(mu, n, prev, feas, alpha=0.0, lam=0.05, t=100.0)
+    np.testing.assert_array_equal(sel, prev)
+
+
+def test_mask_excludes_infeasible():
+    b, k = 2, 9
+    mu = np.zeros((b, k), np.float32)
+    mu[:, 0] = 1.0  # best arm ...
+    feas = np.ones((b, k), np.float32)
+    feas[:, 0] = 0.0  # ... but masked out
+    n = np.ones((b, k), np.float32)
+    prev = np.zeros((b,), np.int32)
+    (_, sel), _ = run_both(mu, n, prev, feas, alpha=0.0, lam=0.0, t=10.0)
+    assert (sel != 0).all()
+
+
+def test_zero_counts_use_max1_guard():
+    b, k = 1, 3
+    mu = np.zeros((b, k), np.float32)
+    n = np.zeros((b, k), np.float32)
+    prev = np.zeros((b,), np.int32)
+    feas = np.ones((b, k), np.float32)
+    (idx, _), (idx_r, _) = run_both(mu, n, prev, feas, 0.1, 0.0, 1.0)
+    assert np.isfinite(idx).all()
+    np.testing.assert_allclose(idx, idx_r, rtol=1e-6)
+
+
+def test_argmax_first_on_ties():
+    b, k = 1, 5
+    mu = np.zeros((b, k), np.float32)
+    n = np.full((b, k), 7.0, np.float32)
+    prev = np.array([9999 % k], np.int32)
+    feas = np.ones((b, k), np.float32)
+    (_, sel), _ = run_both(mu, n, prev, feas, alpha=0.0, lam=0.0, t=10.0)
+    assert sel[0] == 0
+
+
+def test_block_sizes_agree():
+    rng = np.random.default_rng(0)
+    b, k = 256, 9
+    mu = rng.uniform(-2, 0, (b, k)).astype(np.float32)
+    n = rng.integers(0, 100, (b, k)).astype(np.float32)
+    prev = rng.integers(0, k, (b,)).astype(np.int32)
+    feas = np.ones((b, k), np.float32)
+    out = []
+    for block in (32, 64, 128, 256):
+        (_, sel), _ = run_both(mu, n, prev, feas, 0.05, 0.03, 500.0, block_b=block)
+        out.append(sel)
+    for s in out[1:]:
+        np.testing.assert_array_equal(out[0], s)
+
+
+def test_mu_hat_shrinkage():
+    n = jnp.array([[0.0, 1.0, 100.0]])
+    mean = jnp.array([[-5.0, -1.0, -1.0]])
+    mu = ref.mu_hat_ref(n, mean, jnp.float32(0.0), jnp.float32(3.0))
+    mu = np.asarray(mu)[0]
+    assert mu[0] == 0.0                 # no data -> prior
+    assert -1.0 < mu[1] < 0.0           # shrunk toward prior
+    assert abs(mu[2] - (-1.0)) < 0.05   # data dominates

@@ -1,0 +1,200 @@
+"""L2 correctness: the exported fleet step vs the pure-jnp reference, plus
+behavioral checks (convergence of the vectorized EnergyUCB, bookkeeping
+invariants) and a tiny end-to-end rollout in python.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.model import fleet_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+K = 9
+
+
+def mk_state(b, k=K):
+    return {
+        "n": jnp.zeros((b, k), jnp.float32),
+        "mean": jnp.zeros((b, k), jnp.float32),
+        "prev": jnp.full((b,), k - 1, jnp.int32),
+        "t": jnp.float32(1.0),
+        "remaining": jnp.ones((b,), jnp.float32),
+        "cum_energy": jnp.zeros((b,), jnp.float32),
+        "cum_regret": jnp.zeros((b,), jnp.float32),
+        "switches": jnp.zeros((b,), jnp.float32),
+    }
+
+
+def mk_params(b, k=K, seed=0, best_arm=2):
+    rng = np.random.default_rng(seed)
+    reward_mean = -1.0 - 0.02 * rng.uniform(1.0, 10.0, (b, k)).astype(np.float32)
+    reward_mean[:, best_arm] = -0.95
+    return {
+        "reward_mean": jnp.asarray(reward_mean),
+        "reward_sigma": jnp.full((b, k), 0.05, jnp.float32),
+        "energy_step": jnp.full((b, k), 20.0, jnp.float32),
+        "progress": jnp.full((b, k), 1e-3, jnp.float32),
+        "feasible": jnp.ones((b, k), jnp.float32),
+    }
+
+
+HYPER = {
+    "alpha": jnp.float32(0.05),
+    "lam": jnp.float32(0.03),
+    "mu_init": jnp.float32(0.0),
+    "prior_n": jnp.float32(3.0),
+}
+
+
+def call_fleet_step(state, params, noise, hyper=HYPER):
+    return fleet_step(
+        state["n"], state["mean"], state["prev"], state["t"],
+        state["remaining"], state["cum_energy"], state["cum_regret"],
+        state["switches"], params["reward_mean"], params["reward_sigma"],
+        params["energy_step"], params["progress"], params["feasible"],
+        noise, hyper["alpha"], hyper["lam"], hyper["mu_init"], hyper["prior_n"],
+    )
+
+
+def unpack(out):
+    keys = ["n", "mean", "prev", "t", "remaining", "cum_energy",
+            "cum_regret", "switches"]
+    return dict(zip(keys, out[:8])), out[8]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([1, 8, 64]))
+def test_step_matches_ref(seed, b):
+    rng = np.random.default_rng(seed)
+    state = mk_state(b)
+    # Randomize state a bit.
+    state["n"] = jnp.asarray(rng.integers(0, 50, (b, K)).astype(np.float32))
+    state["mean"] = jnp.asarray(rng.uniform(-1.5, -0.5, (b, K)).astype(np.float32))
+    state["t"] = jnp.float32(rng.integers(1, 5000))
+    params = mk_params(b, seed=seed)
+    noise = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+    out_state, sel = unpack(call_fleet_step(state, params, noise))
+    ref_state, ref_sel = ref.fleet_step_ref(state, params, noise, HYPER)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(ref_sel))
+    for key in out_state:
+        np.testing.assert_allclose(
+            np.asarray(out_state[key]), np.asarray(ref_state[key]),
+            rtol=1e-6, atol=1e-6, err_msg=key,
+        )
+
+
+def rollout(b, steps, seed=0, params=None):
+    state = mk_state(b)
+    params = params or mk_params(b, seed=seed)
+    rng = np.random.default_rng(seed)
+    sels = []
+    step = jax.jit(call_fleet_step)
+    for _ in range(steps):
+        noise = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+        out = step(state, params, noise)
+        state, sel = unpack(out)
+        sels.append(np.asarray(sel))
+    return state, np.stack(sels)
+
+
+def test_vectorized_energyucb_converges():
+    b, steps, best = 32, 1500, 2
+    state, sels = rollout(b, steps)
+    late = sels[steps // 2 :]
+    frac_best = (late == best).mean()
+    assert frac_best > 0.85, frac_best
+
+
+def test_counts_sum_to_steps():
+    b, steps = 16, 200
+    state, _ = rollout(b, steps)
+    np.testing.assert_allclose(np.asarray(state["n"]).sum(axis=1), steps)
+
+
+def test_remaining_monotone_and_completion_freezes():
+    b, steps = 8, 60
+    params = mk_params(b)
+    # Huge progress: finish in ~4 steps.
+    params["progress"] = jnp.full((b, K), 0.3, jnp.float32)
+    state, _ = rollout(b, steps, params=params)
+    assert (np.asarray(state["remaining"]) == 0.0).all()
+    # Energy/counters frozen after completion: about 4 steps' worth.
+    energy = np.asarray(state["cum_energy"])
+    assert (energy < 20.0 * 6 + 0.3 * 6).all(), energy.max()
+    assert (np.asarray(state["n"]).sum(axis=1) <= 5).all()
+
+
+def test_regret_nonnegative_and_grows_for_rr():
+    b, steps = 4, 300
+    state, _ = rollout(b, steps)
+    regret = np.asarray(state["cum_regret"])
+    assert (regret >= -1e-5).all()
+    assert (regret > 0).any()
+
+
+def test_switch_penalty_reduces_switches():
+    b, steps = 32, 1200
+
+    def run(lam):
+        hyper = dict(HYPER)
+        hyper["lam"] = jnp.float32(lam)
+        state = mk_state(b)
+        params = mk_params(b, seed=7)
+        # Near-tie arms to provoke oscillation.
+        rm = np.full((b, K), -1.0, np.float32)
+        rm[:, 3] = -0.99
+        params["reward_mean"] = jnp.asarray(rm)
+        rng = np.random.default_rng(7)
+        step = jax.jit(call_fleet_step)
+        for _ in range(steps):
+            noise = jnp.asarray(rng.normal(size=(b,)).astype(np.float32))
+            state, _ = unpack(step(state, params, noise, hyper))
+        return np.asarray(state["switches"]).mean()
+
+    assert run(0.05) < 0.6 * run(0.0)
+
+
+def test_feasibility_mask_respected_in_rollout():
+    b, steps = 8, 300
+    params = mk_params(b)
+    feas = np.ones((b, K), np.float32)
+    feas[:, :4] = 0.0  # low arms infeasible
+    params["feasible"] = jnp.asarray(feas)
+    _, sels = rollout(b, steps, params=params)
+    assert (sels >= 4).all()
+
+
+def test_fleet_scan_equals_repeated_steps():
+    from compile.model import fleet_scan
+
+    b, s = 8, 5
+    rng = np.random.default_rng(42)
+    state = mk_state(b)
+    params = mk_params(b, seed=42)
+    noise_seq = jnp.asarray(rng.normal(size=(s, b)).astype(np.float32))
+
+    # Sequential single steps.
+    seq = dict(state)
+    for i in range(s):
+        seq, _ = unpack(call_fleet_step(seq, params, noise_seq[i]))
+
+    # One scanned call.
+    out = fleet_scan(
+        state["n"], state["mean"], state["prev"], state["t"],
+        state["remaining"], state["cum_energy"], state["cum_regret"],
+        state["switches"], params["reward_mean"], params["reward_sigma"],
+        params["energy_step"], params["progress"], params["feasible"],
+        noise_seq, HYPER["alpha"], HYPER["lam"], HYPER["mu_init"],
+        HYPER["prior_n"],
+    )
+    scanned, _ = unpack(out)
+    for key in seq:
+        np.testing.assert_allclose(
+            np.asarray(scanned[key]), np.asarray(seq[key]),
+            rtol=1e-6, atol=1e-6, err_msg=key,
+        )

@@ -1,0 +1,90 @@
+//! Fleet engine throughput: native vs HLO (PJRT) across batch sizes — the
+//! L1/L2 perf surface. Regenerates the §Perf numbers in EXPERIMENTS.md.
+
+use std::path::Path;
+
+use energyucb::fleet::{native, FleetEngine, FleetHyper, FleetParams, FleetState};
+use energyucb::runtime::XlaRuntime;
+use energyucb::sim::freq::FreqDomain;
+use energyucb::util::bench::{black_box, Bench};
+use energyucb::util::Rng;
+use energyucb::workload::calibration;
+
+fn params_for(batch: usize) -> FleetParams {
+    let freqs = FreqDomain::aurora();
+    let apps: Vec<_> = calibration::all_apps();
+    let assigned: Vec<&_> = apps.iter().cycle().take(batch).collect();
+    FleetParams::from_apps(&assigned, &freqs, 0.01)
+}
+
+fn main() {
+    let b = Bench::default();
+    let hyper = FleetHyper::default();
+
+    println!("# native fleet step (env-steps/s)");
+    for batch in [64usize, 256, 1024] {
+        let params = params_for(batch);
+        let mut state = FleetState::fresh(batch, 9);
+        let mut rng = Rng::new(1);
+        let mut step_idx = 0u64;
+        b.case(&format!("native/B={batch}"), batch as f64, || {
+            let noise = native::step_noise(&params, step_idx, &mut rng);
+            black_box(native::native_step(&mut state, &params, &hyper, &noise));
+            step_idx += 1;
+            if state.all_done() {
+                state = FleetState::fresh(batch, 9);
+                step_idx = 0;
+            }
+        });
+    }
+
+    let art = Path::new("artifacts");
+    if !art.join("fleet_step_b64.hlo.txt").exists() {
+        println!("\n(artifacts missing — run `make artifacts` for the HLO/PJRT cases)");
+        return;
+    }
+    let runtime = XlaRuntime::cpu().expect("PJRT CPU");
+    println!("\n# HLO fleet step via PJRT (env-steps/s; includes host<->literal packing)");
+    for batch in [64usize, 256, 1024] {
+        if !art.join(format!("fleet_step_b{batch}.hlo.txt")).exists() {
+            continue;
+        }
+        let params = params_for(batch);
+        let engine =
+            FleetEngine::load(&runtime, art, params.clone(), hyper).expect("load engine");
+        let mut state = FleetState::fresh(batch, 9);
+        let mut rng = Rng::new(1);
+        let mut step_idx = 0u64;
+        b.case(&format!("hlo/B={batch}"), batch as f64, || {
+            let noise = native::step_noise(&params, step_idx, &mut rng);
+            black_box(engine.step(&mut state, &noise).expect("step"));
+            step_idx += 1;
+            if state.all_done() {
+                state = FleetState::fresh(batch, 9);
+                step_idx = 0;
+            }
+        });
+        if engine.has_scan() {
+            use energyucb::fleet::engine::SCAN_STEPS;
+            let mut state = FleetState::fresh(batch, 9);
+            let mut rng = Rng::new(1);
+            let mut step_idx = 0u64;
+            b.case(
+                &format!("hlo-scan/B={batch} (S={SCAN_STEPS})"),
+                (batch * SCAN_STEPS) as f64,
+                || {
+                    let mut noise_seq = Vec::with_capacity(SCAN_STEPS * batch);
+                    for s in 0..SCAN_STEPS {
+                        noise_seq.extend(native::step_noise(&params, step_idx + s as u64, &mut rng));
+                    }
+                    black_box(engine.step_scan(&mut state, &noise_seq).expect("scan"));
+                    step_idx += SCAN_STEPS as u64;
+                    if state.all_done() {
+                        state = FleetState::fresh(batch, 9);
+                        step_idx = 0;
+                    }
+                },
+            );
+        }
+    }
+}

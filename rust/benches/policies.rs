@@ -1,0 +1,50 @@
+//! L3 hot-path micro-benchmarks: per-decision latency of every policy.
+//!
+//! The controller has a 10 ms decision budget on the real system; every
+//! `select`+`update` pair must be orders of magnitude below that (target:
+//! < 1 µs for EnergyUCB — see EXPERIMENTS.md §Perf).
+
+use energyucb::bandit::{
+    ConstrainedEnergyUcb, EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, Policy,
+    RoundRobin, Ucb1,
+};
+use energyucb::rl::{DrlCap, DrlCapMode, RlPower};
+use energyucb::util::bench::{black_box, Bench};
+use energyucb::util::Rng;
+
+fn bench_policy(b: &Bench, name: &str, policy: &mut dyn Policy) {
+    let mut rng = Rng::new(7);
+    let mut t = 0u64;
+    // Pre-warm with some history so we measure steady state.
+    for _ in 0..500 {
+        t += 1;
+        let arm = policy.select(t);
+        policy.update(arm, rng.normal(-1.0, 0.05), 1e-4);
+    }
+    b.case(&format!("decide+update/{name}"), 1.0, || {
+        t += 1;
+        let arm = policy.select(black_box(t));
+        policy.update(arm, black_box(rng.normal(-1.0, 0.05)), 1e-4);
+    });
+}
+
+fn main() {
+    let b = Bench::default();
+    let k = 9;
+    println!("# policy decision latency (k = {k} arms)");
+    bench_policy(&b, "EnergyUCB", &mut EnergyUcb::new(k, EnergyUcbConfig::default()));
+    bench_policy(
+        &b,
+        "ConstrainedEnergyUCB",
+        &mut ConstrainedEnergyUcb::new(k, EnergyUcbConfig::default(), 0.05),
+    );
+    bench_policy(&b, "UCB1", &mut Ucb1::new(k, 0.04));
+    bench_policy(&b, "EpsilonGreedy", &mut EpsilonGreedy::new(k, 0.05, 0.0, 1));
+    bench_policy(&b, "EnergyTS", &mut EnergyTs::default_for(k, 1));
+    bench_policy(&b, "RRFreq", &mut RoundRobin::new(k));
+    bench_policy(&b, "RL-Power", &mut RlPower::new(k, 1));
+    bench_policy(&b, "DRLCap-Online", &mut DrlCap::new(k, DrlCapMode::Online, 1));
+
+    // Decision budget check.
+    println!("\n(decision budget on the real system: 10 ms = 10,000,000 ns)");
+}

@@ -1,0 +1,53 @@
+//! Substrate throughput: node decision-interval rate (the quantity that
+//! bounds how fast Table-1-scale sweeps run) and end-to-end session rate.
+
+use energyucb::bandit::{EnergyUcb, EnergyUcbConfig, StaticPolicy};
+use energyucb::control::{run_session, SessionCfg};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::sim::node::Node;
+use energyucb::util::bench::{black_box, Bench};
+use energyucb::workload::calibration;
+
+fn main() {
+    let b = Bench::default();
+    let freqs = FreqDomain::aurora();
+
+    println!("# node simulator throughput");
+    let app = calibration::app("tealeaf").unwrap();
+    {
+        let mut node = Node::new(app.clone(), freqs.clone(), 0.01, 1);
+        let mut arm = 8usize;
+        b.case("node.step (fixed freq)", 1.0, || {
+            if node.done() {
+                node = Node::new(app.clone(), freqs.clone(), 0.01, 1);
+            }
+            black_box(node.step(arm));
+        });
+        let mut node2 = Node::new(app.clone(), freqs.clone(), 0.01, 2);
+        b.case("node.step (switch every step)", 1.0, || {
+            if node2.done() {
+                node2 = Node::new(app.clone(), freqs.clone(), 0.01, 2);
+            }
+            arm = if arm == 0 { 8 } else { 0 };
+            black_box(node2.step(arm));
+        });
+    }
+
+    println!("\n# full sessions (steps/s incl. policy, GEOPM plumbing, metrics)");
+    for (label, fast_app) in [
+        ("clvleaf static", true),
+        ("clvleaf EnergyUCB", false),
+    ] {
+        let app = calibration::app("clvleaf").unwrap();
+        let steps = (app.t_max_s / 0.01) as f64;
+        b.case(&format!("session/{label}"), steps, || {
+            if fast_app {
+                let mut p = StaticPolicy::new(9, 8);
+                black_box(run_session(&app, &mut p, &SessionCfg::default()));
+            } else {
+                let mut p = EnergyUcb::new(9, EnergyUcbConfig::default());
+                black_box(run_session(&app, &mut p, &SessionCfg::default()));
+            }
+        });
+    }
+}

@@ -1,0 +1,26 @@
+//! Table/figure regeneration benches: wall-clock of each paper experiment
+//! in quick mode (the harness itself is part of the deliverable; this
+//! keeps its cost visible and regressions caught).
+
+use energyucb::experiments::{all_experiments, ExpContext};
+use energyucb::util::bench::human_time;
+
+fn main() {
+    let ctx = ExpContext {
+        quick: true,
+        reps: 1,
+        out_dir: std::env::temp_dir().join("energyucb_bench_results"),
+        ..ExpContext::default()
+    };
+    println!("# experiment harness wall-clock (quick mode, reps=1)");
+    for exp in all_experiments() {
+        let t0 = std::time::Instant::now();
+        let result = exp.run(&ctx);
+        let dt = t0.elapsed().as_nanos() as f64;
+        match result {
+            Ok(_) => println!("bench exp/{:<40} {:>12}", exp.id(), human_time(dt)),
+            Err(e) => println!("bench exp/{:<40} FAILED: {e:#}", exp.id()),
+        }
+    }
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("energyucb_bench_results"));
+}

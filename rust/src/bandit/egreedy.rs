@@ -1,0 +1,99 @@
+//! ε-greedy baseline (paper §4.1): explore uniformly with probability ε_t,
+//! exploit the empirical best otherwise. Supports the classic `c/t` decay.
+
+use super::Policy;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EpsilonGreedy {
+    /// Cap on the exploration probability.
+    eps0: f64,
+    /// Decay constant: ε_t = min(eps0, decay_c / t); 0 disables decay.
+    decay_c: f64,
+    n: Vec<u64>,
+    mean: Vec<f64>,
+    rng: Rng,
+}
+
+impl EpsilonGreedy {
+    pub fn new(k: usize, eps0: f64, decay_c: f64, seed: u64) -> EpsilonGreedy {
+        assert!(k > 0);
+        assert!((0.0..=1.0).contains(&eps0));
+        EpsilonGreedy { eps0, decay_c, n: vec![0; k], mean: vec![0.0; k], rng: Rng::new(seed) }
+    }
+
+    pub fn epsilon_at(&self, t: u64) -> f64 {
+        if self.decay_c <= 0.0 {
+            self.eps0
+        } else {
+            self.eps0.min(self.decay_c / t.max(1) as f64)
+        }
+    }
+}
+
+impl Policy for EpsilonGreedy {
+    fn name(&self) -> String {
+        "ε-greedy".into()
+    }
+
+    fn k(&self) -> usize {
+        self.n.len()
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        // Ensure every arm has one sample before going greedy.
+        if let Some(i) = self.n.iter().position(|&n| n == 0) {
+            return i;
+        }
+        if self.rng.chance(self.epsilon_at(t)) {
+            self.rng.index(self.k())
+        } else {
+            crate::util::stats::argmax(&self.mean)
+        }
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, _progress: f64) {
+        self.n[arm] += 1;
+        self.mean[arm] += (reward - self.mean[arm]) / self.n[arm] as f64;
+    }
+
+    fn reset(&mut self) {
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.mean.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn epsilon_decays() {
+        let p = EpsilonGreedy::new(3, 0.2, 20.0, 1);
+        assert!((p.epsilon_at(1) - 0.2).abs() < 1e-12);
+        assert!((p.epsilon_at(1000) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_epsilon_without_decay() {
+        let p = EpsilonGreedy::new(3, 0.1, 0.0, 1);
+        assert_eq!(p.epsilon_at(1), p.epsilon_at(100_000));
+    }
+
+    #[test]
+    fn mostly_exploits_best_arm() {
+        let means = [-1.3, -1.0, -1.2];
+        let mut p = EpsilonGreedy::new(3, 0.1, 0.0, 2);
+        let mut rng = Rng::new(5);
+        let mut pulls = [0u64; 3];
+        for t in 1..=5000u64 {
+            let arm = p.select(t);
+            pulls[arm] += 1;
+            p.update(arm, rng.normal(means[arm], 0.05), 0.0);
+        }
+        assert!(pulls[1] > 4000, "{pulls:?}");
+        // But it keeps exploring (~5% of steps split over other arms).
+        assert!(pulls[0] + pulls[2] > 100, "{pulls:?}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Multi-armed-bandit controllers: the paper's EnergyUCB (§3.2), its
+//! QoS-constrained variant (§3.3), and every dynamic baseline (§4.1).
+//!
+//! Frequencies are arms (ascending: arm 0 = 0.8 GHz ... arm K-1 = 1.6 GHz,
+//! the system default). Policies consume *normalized* rewards
+//! (≈ -1 at the starting frequency; see [`RewardNormalizer`]) so that the
+//! hyper-parameters α, λ, μ_init are scale-free across applications.
+
+pub mod constrained;
+pub mod egreedy;
+pub mod energyucb;
+pub mod oracle;
+pub mod rrfreq;
+pub mod static_;
+pub mod swucb;
+pub mod thompson;
+pub mod ucb1;
+
+pub use constrained::ConstrainedEnergyUcb;
+pub use egreedy::EpsilonGreedy;
+pub use energyucb::{EnergyUcb, EnergyUcbConfig, InitStrategy};
+pub use oracle::Oracle;
+pub use rrfreq::RoundRobin;
+pub use static_::StaticPolicy;
+pub use swucb::SlidingWindowUcb;
+pub use thompson::EnergyTs;
+pub use ucb1::Ucb1;
+
+/// A frequency-selection policy (bandit or otherwise). `Send` so the
+/// cluster leader can move per-node controllers onto worker threads.
+pub trait Policy: Send {
+    /// Display name ("EnergyUCB", "RRFreq", ...).
+    fn name(&self) -> String;
+
+    /// Number of arms.
+    fn k(&self) -> usize;
+
+    /// Choose the arm for decision step `t` (1-based).
+    fn select(&mut self, t: u64) -> usize;
+
+    /// Feed back the observed (normalized) reward and the progress made
+    /// under `arm` during the interval.
+    fn update(&mut self, arm: usize, reward: f64, progress: f64);
+
+    /// Reset all learned state (fresh run).
+    fn reset(&mut self);
+}
+
+/// The paper's reward formulations (§4.5): the product of per-interval
+/// energy and the core-to-uncore utilization ratio, plus the squared
+/// variants evaluated in Fig. 5(a).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RewardForm {
+    /// r = -E · R (the paper's default, Eq. 4).
+    EnergyRatio,
+    /// r = -E² · R (weights energy reduction harder).
+    EnergySquaredRatio,
+    /// r = -E · R² (weights completion speed harder).
+    EnergyRatioSquared,
+}
+
+impl RewardForm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RewardForm::EnergyRatio => "E*R",
+            RewardForm::EnergySquaredRatio => "E^2*R",
+            RewardForm::EnergyRatioSquared => "E*R^2",
+        }
+    }
+
+    /// Raw (unnormalized) reward from counter-derived quantities.
+    /// `energy_j` is the per-interval energy, `core`/`uncore` the engine
+    /// utilizations. Always negative.
+    pub fn raw(&self, energy_j: f64, core: f64, uncore: f64) -> f64 {
+        let e = energy_j.max(0.0);
+        let r = core.max(1e-6) / uncore.max(1e-6);
+        match self {
+            RewardForm::EnergyRatio => -e * r,
+            RewardForm::EnergySquaredRatio => -e * e * r,
+            RewardForm::EnergyRatioSquared => -e * r * r,
+        }
+    }
+}
+
+/// Scale-free reward normalization: divide raw rewards by the median
+/// magnitude of the first few raw rewards, so every app's reward stream
+/// sits near -1 regardless of its power draw. Median (not first-sample)
+/// because the early window is noisy and heavy-tailed: a single spiked
+/// reading must not set the scale 4x off. Purely online — no prior
+/// profiling, preserving the paper's fully-online setting.
+#[derive(Clone, Debug, Default)]
+pub struct RewardNormalizer {
+    warmup: Vec<f64>,
+    scale: Option<f64>,
+}
+
+/// Number of samples the scale estimate is based on.
+const NORM_WARMUP: usize = 11;
+
+impl RewardNormalizer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn normalize(&mut self, raw: f64) -> f64 {
+        let scale = match self.scale {
+            Some(s) => s,
+            None => {
+                self.warmup.push(raw.abs());
+                let mut sorted = self.warmup.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let med = sorted[sorted.len() / 2].max(1e-12);
+                if self.warmup.len() >= NORM_WARMUP {
+                    self.scale = Some(med);
+                    self.warmup = Vec::new();
+                }
+                med
+            }
+        };
+        raw / scale
+    }
+
+    /// The established scale, if fixed yet (median of the warm-up window).
+    pub fn scale(&self) -> Option<f64> {
+        self.scale
+    }
+
+    pub fn reset(&mut self) {
+        self.scale = None;
+        self.warmup.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_forms_are_negative_and_ordered() {
+        let (e, c, u) = (25.0, 0.9, 0.45);
+        let r1 = RewardForm::EnergyRatio.raw(e, c, u);
+        let r2 = RewardForm::EnergySquaredRatio.raw(e, c, u);
+        let r3 = RewardForm::EnergyRatioSquared.raw(e, c, u);
+        assert!(r1 < 0.0 && r2 < 0.0 && r3 < 0.0);
+        assert!((r1 - (-50.0)).abs() < 1e-9);
+        assert!((r2 - (-1250.0)).abs() < 1e-9);
+        assert!((r3 - (-100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reward_guards_div_by_zero() {
+        let r = RewardForm::EnergyRatio.raw(10.0, 0.5, 0.0);
+        assert!(r.is_finite());
+    }
+
+    #[test]
+    fn normalizer_settles_near_minus_one() {
+        let mut n = RewardNormalizer::new();
+        for _ in 0..NORM_WARMUP {
+            n.normalize(-50.0);
+        }
+        assert_eq!(n.scale(), Some(50.0));
+        assert!((n.normalize(-25.0) - (-0.5)).abs() < 1e-12);
+        n.reset();
+        assert_eq!(n.scale(), None);
+    }
+
+    #[test]
+    fn normalizer_rejects_spiked_first_sample() {
+        let mut n = RewardNormalizer::new();
+        // First reading is a 4x glitch; the median must ignore it.
+        n.normalize(-200.0);
+        for _ in 0..NORM_WARMUP {
+            n.normalize(-50.0);
+        }
+        assert_eq!(n.scale(), Some(50.0));
+    }
+
+    #[test]
+    fn normalizer_handles_zero_first_sample() {
+        let mut n = RewardNormalizer::new();
+        assert!(n.normalize(0.0).is_finite());
+        assert!(n.normalize(-3.0).is_finite());
+    }
+}

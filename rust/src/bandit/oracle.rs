@@ -1,0 +1,67 @@
+//! Oracle policy: always plays the arm with the highest true expected
+//! reward (equivalently, the energy-optimal static frequency). Defines the
+//! regret baseline (paper §2.2, Eq. 3) — usable only in simulation, where
+//! ground truth is known.
+
+use super::Policy;
+
+#[derive(Clone, Debug)]
+pub struct Oracle {
+    k: usize,
+    best: usize,
+}
+
+impl Oracle {
+    /// Build from the true per-arm expected rewards.
+    pub fn from_true_rewards(true_means: &[f64]) -> Oracle {
+        Oracle { k: true_means.len(), best: crate::util::stats::argmax(true_means) }
+    }
+
+    /// Build directly from a calibrated app model (energy argmin).
+    pub fn for_app(app: &crate::workload::model::AppModel) -> Oracle {
+        Oracle { k: app.energy_kj.len(), best: app.optimal_arm() }
+    }
+
+    pub fn best_arm(&self) -> usize {
+        self.best
+    }
+}
+
+impl Policy for Oracle {
+    fn name(&self) -> String {
+        "Oracle".into()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select(&mut self, _t: u64) -> usize {
+        self.best
+    }
+
+    fn update(&mut self, _arm: usize, _reward: f64, _progress: f64) {}
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::calibration;
+
+    #[test]
+    fn picks_argmax_of_true_rewards() {
+        let mut o = Oracle::from_true_rewards(&[-1.2, -1.0, -1.1]);
+        assert_eq!(o.select(1), 1);
+    }
+
+    #[test]
+    fn for_app_matches_energy_argmin() {
+        let app = calibration::app("sph_exa").unwrap();
+        let o = Oracle::for_app(&app);
+        assert_eq!(o.best_arm(), 0); // 0.8 GHz
+        let app = calibration::app("lbm").unwrap();
+        assert_eq!(Oracle::for_app(&app).best_arm(), 7); // 1.5 GHz
+    }
+}

@@ -1,0 +1,71 @@
+//! Static-frequency policies (paper §4.1): hold one frequency for the
+//! whole execution. Arm K-1 (1.6 GHz) is the Aurora default configuration
+//! and the "Saved Energy" reference point.
+
+use super::Policy;
+
+#[derive(Clone, Debug)]
+pub struct StaticPolicy {
+    k: usize,
+    arm: usize,
+    label: String,
+}
+
+impl StaticPolicy {
+    pub fn new(k: usize, arm: usize) -> StaticPolicy {
+        assert!(arm < k, "static arm {arm} out of range (k={k})");
+        StaticPolicy { k, arm, label: format!("Static[arm {arm}]") }
+    }
+
+    /// With a human-readable frequency label ("1.6 GHz").
+    pub fn labeled(k: usize, arm: usize, label: impl Into<String>) -> StaticPolicy {
+        let mut p = StaticPolicy::new(k, arm);
+        p.label = label.into();
+        p
+    }
+
+    pub fn arm(&self) -> usize {
+        self.arm
+    }
+}
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select(&mut self, _t: u64) -> usize {
+        self.arm
+    }
+
+    fn update(&mut self, _arm: usize, _reward: f64, _progress: f64) {}
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_same_arm() {
+        let mut p = StaticPolicy::new(9, 4);
+        assert!((1..100u64).all(|t| p.select(t) == 4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range() {
+        StaticPolicy::new(3, 3);
+    }
+
+    #[test]
+    fn label() {
+        let p = StaticPolicy::labeled(9, 8, "1.6 GHz");
+        assert_eq!(p.name(), "1.6 GHz");
+    }
+}

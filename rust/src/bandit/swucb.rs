@@ -1,0 +1,174 @@
+//! Sliding-Window UCB (Garivier & Moulines 2011) — a non-stationarity
+//! extension beyond the paper, complementary to the discounted EnergyUCB:
+//! estimates use only the last `window` observations, so the controller
+//! tracks phase changes in the workload (see `workload::phase`) at the cost
+//! of higher stationary regret.
+
+use std::collections::VecDeque;
+
+use super::Policy;
+
+#[derive(Clone, Debug)]
+pub struct SlidingWindowUcb {
+    alpha: f64,
+    lambda: f64,
+    window: usize,
+    /// Recent (arm, reward) observations, oldest first.
+    history: VecDeque<(usize, f64)>,
+    /// Windowed sums/counts per arm (kept in sync with `history`).
+    sum: Vec<f64>,
+    n: Vec<u64>,
+    prev: Option<usize>,
+}
+
+impl SlidingWindowUcb {
+    pub fn new(k: usize, alpha: f64, lambda: f64, window: usize) -> SlidingWindowUcb {
+        assert!(k > 0 && window > 0);
+        SlidingWindowUcb {
+            alpha,
+            lambda,
+            window,
+            history: VecDeque::with_capacity(window + 1),
+            sum: vec![0.0; k],
+            n: vec![0; k],
+            prev: None,
+        }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Windowed mean for arm `i` (None when unobserved in the window).
+    pub fn windowed_mean(&self, i: usize) -> Option<f64> {
+        (self.n[i] > 0).then(|| self.sum[i] / self.n[i] as f64)
+    }
+
+    fn index(&self, i: usize, t: u64) -> f64 {
+        let horizon = (t as f64).min(self.window as f64).max(2.0);
+        let bonus = self.alpha * (horizon.ln() / (self.n[i].max(1) as f64)).sqrt();
+        let mean = self.windowed_mean(i).unwrap_or(0.0); // optimistic when unseen
+        let penalty = match self.prev {
+            Some(p) if p != i => self.lambda,
+            _ => 0.0,
+        };
+        mean + bonus - penalty
+    }
+}
+
+impl Policy for SlidingWindowUcb {
+    fn name(&self) -> String {
+        format!("SW-UCB(w={})", self.window)
+    }
+
+    fn k(&self) -> usize {
+        self.sum.len()
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..self.k() {
+            let v = self.index(i, t);
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, _progress: f64) {
+        self.history.push_back((arm, reward));
+        self.sum[arm] += reward;
+        self.n[arm] += 1;
+        if self.history.len() > self.window {
+            let (old_arm, old_r) = self.history.pop_front().unwrap();
+            self.sum[old_arm] -= old_r;
+            self.n[old_arm] -= 1;
+        }
+        self.prev = Some(arm);
+    }
+
+    fn reset(&mut self) {
+        self.history.clear();
+        self.sum.iter_mut().for_each(|x| *x = 0.0);
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.prev = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn window_evicts_old_observations() {
+        let mut p = SlidingWindowUcb::new(3, 0.05, 0.0, 4);
+        for _ in 0..4 {
+            p.update(0, -2.0, 0.0);
+        }
+        assert_eq!(p.windowed_mean(0), Some(-2.0));
+        // Push 4 fresh observations on arm 1 — arm 0 falls out entirely.
+        for _ in 0..4 {
+            p.update(1, -1.0, 0.0);
+        }
+        assert_eq!(p.windowed_mean(0), None);
+        assert_eq!(p.windowed_mean(1), Some(-1.0));
+    }
+
+    #[test]
+    fn tracks_abrupt_change_faster_than_lifetime_means() {
+        // Both policies get a long, balanced stationary history; then the
+        // optimum flips. Lifetime means are anchored by thousands of stale
+        // samples (and the bonus is too small to re-explore), while the
+        // window forgets in ~300 steps.
+        let mut sw = SlidingWindowUcb::new(2, 0.1, 0.0, 300);
+        let mut lifetime = crate::bandit::Ucb1::new(2, 0.1);
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            for arm in 0..2usize {
+                let r = rng.normal(if arm == 0 { -1.0 } else { -1.1 }, 0.05);
+                sw.update(arm, r, 0.0);
+                lifetime.update(arm, r, 0.0);
+            }
+        }
+        // Post-flip free-running phase: arm 1 is now the optimum.
+        let mut sw_late = 0u64;
+        let mut lt_late = 0u64;
+        for t in 4001..=6000u64 {
+            let means = [-1.1, -1.0];
+            for (pol, late) in [
+                (&mut sw as &mut dyn Policy, &mut sw_late),
+                (&mut lifetime as &mut dyn Policy, &mut lt_late),
+            ] {
+                let arm = pol.select(t);
+                pol.update(arm, rng.normal(means[arm], 0.05), 0.0);
+                if t > 4800 && arm == 1 {
+                    *late += 1;
+                }
+            }
+        }
+        assert!(sw_late > 1000, "sw adapted only {sw_late}/1200");
+        assert!(sw_late > lt_late + 200, "sw {sw_late} vs lifetime {lt_late}");
+    }
+
+    #[test]
+    fn reset_clears_window() {
+        let mut p = SlidingWindowUcb::new(2, 0.1, 0.0, 10);
+        p.update(0, -1.0, 0.0);
+        p.reset();
+        assert_eq!(p.windowed_mean(0), None);
+        assert!(p.history.is_empty());
+    }
+
+    #[test]
+    fn unseen_arms_are_optimistic() {
+        let mut p = SlidingWindowUcb::new(3, 0.05, 0.0, 8);
+        p.update(0, -1.0, 0.0);
+        // Arms 1, 2 unseen: mean 0 (optimistic) -> selected next.
+        let arm = p.select(2);
+        assert!(arm != 0);
+    }
+}

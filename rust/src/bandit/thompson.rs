@@ -1,0 +1,131 @@
+//! EnergyTS baseline (paper §4.1): Gaussian Thompson sampling.
+//!
+//! Maintains a Normal posterior over each arm's mean reward with a fixed
+//! observation-noise scale and samples one draw per arm per step, playing
+//! the argmax. Bayesian exploration without confidence bonuses.
+
+use super::Policy;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct EnergyTs {
+    /// Prior mean (0 = optimistic for negative rewards).
+    prior_mean: f64,
+    /// Prior std-dev (breadth of initial exploration).
+    prior_std: f64,
+    /// Assumed observation noise std-dev.
+    obs_std: f64,
+    n: Vec<u64>,
+    mean: Vec<f64>,
+    rng: Rng,
+}
+
+impl EnergyTs {
+    pub fn new(k: usize, prior_mean: f64, prior_std: f64, obs_std: f64, seed: u64) -> EnergyTs {
+        assert!(k > 0 && prior_std > 0.0 && obs_std > 0.0);
+        EnergyTs {
+            prior_mean,
+            prior_std,
+            obs_std,
+            n: vec![0; k],
+            mean: vec![0.0; k],
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Defaults for the normalized reward scale: weakly-informative prior
+    /// and a conservative observation-noise assumption (the counter stream
+    /// is heavy-tailed, so a Gaussian TS must assume generous noise or its
+    /// posterior over-tightens on glitched samples).
+    pub fn default_for(k: usize, seed: u64) -> EnergyTs {
+        EnergyTs::new(k, 0.0, 0.4, 0.2, seed)
+    }
+
+    /// Posterior (mean, std) for arm `i` under the conjugate Normal model.
+    pub fn posterior(&self, i: usize) -> (f64, f64) {
+        let n = self.n[i] as f64;
+        let prior_prec = 1.0 / (self.prior_std * self.prior_std);
+        let obs_prec = n / (self.obs_std * self.obs_std);
+        let prec = prior_prec + obs_prec;
+        let mean = (self.prior_mean * prior_prec + self.mean[i] * obs_prec) / prec;
+        (mean, (1.0 / prec).sqrt())
+    }
+}
+
+impl Policy for EnergyTs {
+    fn name(&self) -> String {
+        "EnergyTS".into()
+    }
+
+    fn k(&self) -> usize {
+        self.n.len()
+    }
+
+    fn select(&mut self, _t: u64) -> usize {
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..self.k() {
+            let (m, s) = self.posterior(i);
+            let draw = self.rng.normal(m, s);
+            if draw > best_v {
+                best_v = draw;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, _progress: f64) {
+        self.n[arm] += 1;
+        self.mean[arm] += (reward - self.mean[arm]) / self.n[arm] as f64;
+    }
+
+    fn reset(&mut self) {
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.mean.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn posterior_tightens_with_data() {
+        let mut p = EnergyTs::default_for(2, 1);
+        let (_, s0) = p.posterior(0);
+        for _ in 0..100 {
+            p.update(0, -1.0, 0.0);
+        }
+        let (m, s1) = p.posterior(0);
+        assert!(s1 < s0 / 5.0, "s0={s0} s1={s1}");
+        assert!((m - (-1.0)).abs() < 0.05, "{m}");
+    }
+
+    #[test]
+    fn converges_to_best_arm() {
+        let means = [-1.2, -1.0, -1.15];
+        let mut p = EnergyTs::default_for(3, 2);
+        let mut rng = Rng::new(6);
+        let mut pulls = [0u64; 3];
+        for t in 1..=4000u64 {
+            let arm = p.select(t);
+            pulls[arm] += 1;
+            p.update(arm, rng.normal(means[arm], 0.05), 0.0);
+        }
+        assert!(pulls[1] > 3200, "{pulls:?}");
+    }
+
+    #[test]
+    fn prior_drives_initial_exploration() {
+        let mut p = EnergyTs::default_for(9, 3);
+        let mut seen = [false; 9];
+        for t in 1..=300u64 {
+            let arm = p.select(t);
+            seen[arm] = true;
+            p.update(arm, -1.0, 0.0);
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 8, "{seen:?}");
+    }
+}

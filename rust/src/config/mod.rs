@@ -1,0 +1,7 @@
+//! Configuration: TOML-subset parsing plus the typed experiment schema.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ExperimentConfig, PolicyConfig};
+pub use toml::{parse, Value};

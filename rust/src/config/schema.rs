@@ -1,0 +1,323 @@
+//! Typed configuration schema: maps parsed TOML onto experiment/run
+//! settings with validation and defaults. This is the launcher's config
+//! surface (`energyucb run --config run.toml`).
+
+use super::toml::{self, Value};
+use crate::bandit::energyucb::{EnergyUcbConfig, InitStrategy};
+use crate::bandit::RewardForm;
+
+/// Which policy to construct.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PolicyConfig {
+    EnergyUcb(EnergyUcbConfig),
+    ConstrainedEnergyUcb { ucb: EnergyUcbConfig, delta: f64 },
+    Ucb1 { alpha: f64 },
+    EpsilonGreedy { eps0: f64, decay_c: f64 },
+    EnergyTs,
+    RoundRobin,
+    Static { arm: usize },
+    RlPower,
+    DrlCap { mode: String },
+}
+
+/// A full experiment/run configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Benchmarks to run (must be names from the calibrated suite).
+    pub apps: Vec<String>,
+    pub policy: PolicyConfig,
+    pub reps: usize,
+    pub seed: u64,
+    pub dt_s: f64,
+    pub reward_form: RewardForm,
+    pub record_trace: bool,
+    /// Output directory for CSV/JSON results.
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            apps: vec!["tealeaf".into()],
+            policy: PolicyConfig::EnergyUcb(EnergyUcbConfig::default()),
+            reps: 1,
+            seed: 0,
+            dt_s: 0.01,
+            reward_form: RewardForm::EnergyRatio,
+            record_trace: false,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+/// Schema errors.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error(transparent)]
+    Parse(#[from] toml::ParseError),
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+fn invalid<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError::Invalid(msg.into()))
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig, ConfigError> {
+        let root = toml::parse(text)?;
+        Self::from_value(&root)
+    }
+
+    pub fn from_value(root: &Value) -> Result<ExperimentConfig, ConfigError> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(apps) = root.get("apps") {
+            let arr = apps
+                .as_array()
+                .ok_or_else(|| ConfigError::Invalid("apps must be an array".into()))?;
+            cfg.apps = arr
+                .iter()
+                .map(|v| v.as_str().map(str::to_string))
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| ConfigError::Invalid("apps must be strings".into()))?;
+        }
+        for app in &cfg.apps {
+            if crate::workload::calibration::app(app).is_none() {
+                return invalid(format!("unknown app: {app}"));
+            }
+        }
+        if let Some(v) = root.get_int("reps") {
+            if v < 1 {
+                return invalid("reps must be >= 1");
+            }
+            cfg.reps = v as usize;
+        }
+        if let Some(v) = root.get_int("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = root.get_float("dt_s") {
+            if v <= 0.0 || v > 1.0 {
+                return invalid("dt_s must be in (0, 1]");
+            }
+            cfg.dt_s = v;
+        }
+        if let Some(v) = root.get_bool("record_trace") {
+            cfg.record_trace = v;
+        }
+        if let Some(v) = root.get_str("out_dir") {
+            cfg.out_dir = v.to_string();
+        }
+        if let Some(v) = root.get_str("reward_form") {
+            cfg.reward_form = match v {
+                "E*R" => RewardForm::EnergyRatio,
+                "E^2*R" => RewardForm::EnergySquaredRatio,
+                "E*R^2" => RewardForm::EnergyRatioSquared,
+                other => return invalid(format!("unknown reward_form: {other}")),
+            };
+        }
+        if let Some(name) = root.get_str("policy.name") {
+            cfg.policy = Self::parse_policy(name, root)?;
+        }
+        Ok(cfg)
+    }
+
+    fn parse_policy(name: &str, root: &Value) -> Result<PolicyConfig, ConfigError> {
+        let ucb_cfg = |root: &Value| -> Result<EnergyUcbConfig, ConfigError> {
+            let mut c = EnergyUcbConfig::default();
+            if let Some(v) = root.get_float("policy.alpha") {
+                if v < 0.0 {
+                    return invalid("alpha must be >= 0");
+                }
+                c.alpha = v;
+            }
+            if let Some(v) = root.get_float("policy.lambda") {
+                if v < 0.0 {
+                    return invalid("lambda must be >= 0");
+                }
+                c.lambda = v;
+            }
+            if let Some(v) = root.get_float("policy.mu_init") {
+                c.mu_init = v;
+            }
+            if let Some(v) = root.get_float("policy.prior_n") {
+                c.prior_n = v;
+            }
+            if let Some(v) = root.get_float("policy.discount") {
+                if v <= 0.0 || v > 1.0 {
+                    return invalid("discount must be in (0, 1]");
+                }
+                c.discount = v;
+            }
+            if let Some(v) = root.get_str("policy.init") {
+                c.init = match v {
+                    "optimistic" => InitStrategy::Optimistic,
+                    "warmup" => InitStrategy::WarmupRoundRobin,
+                    other => return invalid(format!("unknown init: {other}")),
+                };
+            }
+            Ok(c)
+        };
+        Ok(match name {
+            "energyucb" => PolicyConfig::EnergyUcb(ucb_cfg(root)?),
+            "constrained" => {
+                let delta = root.get_float("policy.delta").unwrap_or(0.05);
+                if !(0.0..1.0).contains(&delta) {
+                    return invalid("delta must be in [0, 1)");
+                }
+                PolicyConfig::ConstrainedEnergyUcb { ucb: ucb_cfg(root)?, delta }
+            }
+            "ucb1" => PolicyConfig::Ucb1 { alpha: root.get_float("policy.alpha").unwrap_or(0.05) },
+            "egreedy" => PolicyConfig::EpsilonGreedy {
+                eps0: root.get_float("policy.eps0").unwrap_or(0.1),
+                decay_c: root.get_float("policy.decay_c").unwrap_or(20.0),
+            },
+            "energyts" => PolicyConfig::EnergyTs,
+            "rrfreq" => PolicyConfig::RoundRobin,
+            "static" => {
+                let arm = root.get_int("policy.arm").unwrap_or(8);
+                if !(0..9).contains(&arm) {
+                    return invalid("static arm must be in 0..9");
+                }
+                PolicyConfig::Static { arm: arm as usize }
+            }
+            "rlpower" => PolicyConfig::RlPower,
+            "drlcap" => PolicyConfig::DrlCap {
+                mode: root.get_str("policy.mode").unwrap_or("pretrain").to_string(),
+            },
+            other => return invalid(format!("unknown policy: {other}")),
+        })
+    }
+
+    /// Instantiate the configured policy.
+    pub fn build_policy(&self, k: usize, seed: u64) -> Box<dyn crate::bandit::Policy> {
+        use crate::bandit::*;
+        use crate::rl::{DrlCap, DrlCapMode, RlPower};
+        match &self.policy {
+            PolicyConfig::EnergyUcb(c) => Box::new(EnergyUcb::new(k, *c)),
+            PolicyConfig::ConstrainedEnergyUcb { ucb, delta } => {
+                Box::new(ConstrainedEnergyUcb::new(k, *ucb, *delta))
+            }
+            PolicyConfig::Ucb1 { alpha } => Box::new(Ucb1::new(k, *alpha)),
+            PolicyConfig::EpsilonGreedy { eps0, decay_c } => {
+                Box::new(EpsilonGreedy::new(k, *eps0, *decay_c, seed))
+            }
+            PolicyConfig::EnergyTs => Box::new(EnergyTs::default_for(k, seed)),
+            PolicyConfig::RoundRobin => Box::new(RoundRobin::new(k)),
+            PolicyConfig::Static { arm } => Box::new(StaticPolicy::new(k, *arm)),
+            PolicyConfig::RlPower => Box::new(RlPower::new(k, seed)),
+            PolicyConfig::DrlCap { mode } => {
+                let m = match mode.as_str() {
+                    "online" => DrlCapMode::Online,
+                    "cross" => DrlCapMode::CrossDeploy,
+                    _ => DrlCapMode::PretrainDeploy,
+                };
+                Box::new(DrlCap::new(k, m, seed))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(c.reps, 1);
+        assert_eq!(c.apps, vec!["tealeaf".to_string()]);
+        assert!(matches!(c.policy, PolicyConfig::EnergyUcb(_)));
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"
+apps = ["llama", "sph_exa"]
+reps = 10
+seed = 42
+reward_form = "E*R"
+
+[policy]
+name = "constrained"
+alpha = 0.07
+lambda = 0.02
+delta = 0.05
+"#;
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.apps.len(), 2);
+        assert_eq!(c.reps, 10);
+        match &c.policy {
+            PolicyConfig::ConstrainedEnergyUcb { ucb, delta } => {
+                assert!((ucb.alpha - 0.07).abs() < 1e-12);
+                assert!((ucb.lambda - 0.02).abs() < 1e-12);
+                assert!((delta - 0.05).abs() < 1e-12);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_app() {
+        assert!(ExperimentConfig::from_toml("apps = [\"nope\"]").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_hyperparams() {
+        let bad = "
+[policy]
+name = \"energyucb\"
+alpha = -1.0
+";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+        assert!(ExperimentConfig::from_toml("dt_s = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[policy]\nname = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn builds_each_policy_kind() {
+        for name in
+            ["energyucb", "constrained", "ucb1", "egreedy", "energyts", "rrfreq", "static", "rlpower", "drlcap"]
+        {
+            let text = format!("[policy]\nname = \"{name}\"");
+            let c = ExperimentConfig::from_toml(&text).unwrap();
+            let p = c.build_policy(9, 1);
+            assert_eq!(p.k(), 9, "{name}");
+        }
+    }
+
+    #[test]
+    fn warmup_init_parses() {
+        let text = "[policy]\nname = \"energyucb\"\ninit = \"warmup\"";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        match c.policy {
+            PolicyConfig::EnergyUcb(u) => assert_eq!(u.init, InitStrategy::WarmupRoundRobin),
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod shipped_config_tests {
+    use super::*;
+
+    /// The checked-in configs under configs/ must always parse and build.
+    #[test]
+    fn shipped_configs_parse_and_build() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/configs");
+        let mut seen = 0;
+        for entry in std::fs::read_dir(dir).expect("configs/ exists") {
+            let path = entry.unwrap().path();
+            if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path).unwrap();
+            let cfg = ExperimentConfig::from_toml(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            let policy = cfg.build_policy(9, 1);
+            assert_eq!(policy.k(), 9, "{}", path.display());
+            seen += 1;
+        }
+        assert!(seen >= 2, "expected shipped configs, found {seen}");
+    }
+}

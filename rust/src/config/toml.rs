@@ -1,0 +1,424 @@
+//! Minimal TOML-subset parser for run/experiment configuration files.
+//!
+//! Supported: `[table]` and `[dotted.table]` headers, `key = value` with
+//! string / integer / float / boolean / homogeneous-array values, dotted
+//! keys, `#` comments, and basic-string escapes. This covers everything the
+//! launcher's config files use; exotic TOML (multi-line strings, dates,
+//! inline tables, arrays-of-tables) is intentionally rejected with a clear
+//! error rather than mis-parsed.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`alpha = 1` is a valid float).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Look up a dotted path like `"bandit.alpha"`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn get_float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+    pub fn get_int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err<T>(line: usize, message: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError { line, message: message.into() })
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse(input: &str) -> Result<Value, ParseError> {
+    let mut root = BTreeMap::new();
+    // Path of the currently open [table].
+    let mut current: Vec<String> = Vec::new();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = lineno + 1;
+        let text = strip_comment(raw);
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix('[') {
+            if rest.starts_with('[') {
+                return err(line, "arrays of tables ([[...]]) are not supported");
+            }
+            let Some(inner) = rest.strip_suffix(']') else {
+                return err(line, "unterminated table header");
+            };
+            let path = parse_key_path(inner, line)?;
+            if path.is_empty() {
+                return err(line, "empty table header");
+            }
+            ensure_table(&mut root, &path, line)?;
+            current = path;
+            continue;
+        }
+        // key = value
+        let Some(eq) = find_unquoted(text, '=') else {
+            return err(line, format!("expected `key = value`, got: {text}"));
+        };
+        let key_part = text[..eq].trim();
+        let val_part = text[eq + 1..].trim();
+        if key_part.is_empty() {
+            return err(line, "empty key");
+        }
+        if val_part.is_empty() {
+            return err(line, "empty value");
+        }
+        let mut path = current.clone();
+        path.extend(parse_key_path(key_part, line)?);
+        let value = parse_value(val_part, line)?;
+        insert(&mut root, &path, value, line)?;
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_unquoted(s: &str, target: char) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            c if c == target && !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_key_path(s: &str, line: usize) -> Result<Vec<String>, ParseError> {
+    let mut out = Vec::new();
+    for part in s.split('.') {
+        let part = part.trim();
+        let part = part.strip_prefix('"').and_then(|p| p.strip_suffix('"')).unwrap_or(part);
+        if part.is_empty() {
+            return err(line, "empty key segment");
+        }
+        if !part.chars().all(|c| c.is_alphanumeric() || c == '_' || c == '-') {
+            return err(line, format!("invalid key segment: {part:?}"));
+        }
+        out.push(part.to_string());
+    }
+    Ok(out)
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, ParseError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur.entry(part.clone()).or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => return err(line, format!("key {part:?} is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    value: Value,
+    line: usize,
+) -> Result<(), ParseError> {
+    let (last, prefix) = path.split_last().expect("non-empty path");
+    let table = ensure_table(root, prefix, line)?;
+    if table.contains_key(last) {
+        return err(line, format!("duplicate key: {last:?}"));
+    }
+    table.insert(last.clone(), value);
+    Ok(())
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s.starts_with('"') {
+        return parse_string(s, line);
+    }
+    if s.starts_with('[') {
+        return parse_array(s, line);
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    err(line, format!("cannot parse value: {s:?}"))
+}
+
+fn parse_string(s: &str, line: usize) -> Result<Value, ParseError> {
+    let inner = &s[1..];
+    let mut out = String::new();
+    let mut chars = inner.chars();
+    loop {
+        match chars.next() {
+            None => return err(line, "unterminated string"),
+            Some('"') => break,
+            Some('\\') => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return err(line, format!("bad escape: \\{other:?}")),
+            },
+            Some(c) => out.push(c),
+        }
+    }
+    let rest: String = chars.collect();
+    if !rest.trim().is_empty() {
+        return err(line, format!("trailing characters after string: {rest:?}"));
+    }
+    Ok(Value::Str(out))
+}
+
+fn parse_array(s: &str, line: usize) -> Result<Value, ParseError> {
+    let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) else {
+        return err(line, "unterminated array");
+    };
+    let mut items = Vec::new();
+    // Split on top-level commas (no nested arrays supported — reject).
+    if inner.contains('[') {
+        return err(line, "nested arrays are not supported");
+    }
+    for part in split_top_level(inner) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        items.push(parse_value(part, line)?);
+    }
+    // Homogeneity check (ints promote to float if mixed with floats).
+    let any_float = items.iter().any(|v| matches!(v, Value::Float(_)));
+    if any_float {
+        for v in items.iter_mut() {
+            if let Value::Int(i) = v {
+                *v = Value::Float(*i as f64);
+            }
+        }
+    }
+    let homogeneous = items
+        .windows(2)
+        .all(|w| std::mem::discriminant(&w[0]) == std::mem::discriminant(&w[1]));
+    if !homogeneous {
+        return err(line, "heterogeneous arrays are not supported");
+    }
+    Ok(Value::Array(items))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = r#"
+# experiment config
+name = "table1"
+reps = 10
+alpha = 0.3
+qos = false
+
+[bandit]
+lambda = 0.05
+arms = [0.8, 0.9, 1.0]
+
+[bandit.init]
+mu = 0.0
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get_str("name"), Some("table1"));
+        assert_eq!(v.get_int("reps"), Some(10));
+        assert_eq!(v.get_float("alpha"), Some(0.3));
+        assert_eq!(v.get_bool("qos"), Some(false));
+        assert_eq!(v.get_float("bandit.lambda"), Some(0.05));
+        assert_eq!(v.get_float("bandit.init.mu"), Some(0.0));
+        let arms = v.get("bandit.arms").unwrap().as_array().unwrap();
+        assert_eq!(arms.len(), 3);
+        assert_eq!(arms[0].as_float(), Some(0.8));
+    }
+
+    #[test]
+    fn int_promotes_to_float_in_mixed_array() {
+        let v = parse("xs = [1, 2.5]").unwrap();
+        let xs = v.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs[0].as_float(), Some(1.0));
+    }
+
+    #[test]
+    fn dotted_keys() {
+        let v = parse("a.b.c = 3").unwrap();
+        assert_eq!(v.get_int("a.b.c"), Some(3));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(v.get_str("s"), Some("a\nb\"c"));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let v = parse("s = \"has # inside\" # trailing").unwrap();
+        assert_eq!(v.get_str("s"), Some("has # inside"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_value_reports_line() {
+        let e = parse("\n\nx = @@@").unwrap_err();
+        assert_eq!(e.line, 3);
+    }
+
+    #[test]
+    fn array_of_tables_rejected() {
+        assert!(parse("[[servers]]").is_err());
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let v = parse("n = 1_000_000").unwrap();
+        assert_eq!(v.get_int("n"), Some(1_000_000));
+    }
+
+    #[test]
+    fn float_from_int_lookup() {
+        let v = parse("alpha = 1").unwrap();
+        assert_eq!(v.get_float("alpha"), Some(1.0));
+    }
+
+    #[test]
+    fn heterogeneous_array_rejected() {
+        assert!(parse("xs = [1, \"a\"]").is_err());
+    }
+
+    #[test]
+    fn empty_doc_is_empty_table() {
+        let v = parse("  \n# nothing\n").unwrap();
+        assert!(v.as_table().unwrap().is_empty());
+    }
+}

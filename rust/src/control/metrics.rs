@@ -1,0 +1,141 @@
+//! Evaluation metrics (paper §4.1): Saved Energy, Energy Regret, slowdown,
+//! switching overhead, and reward-space cumulative regret.
+
+use crate::sim::freq::FreqDomain;
+use crate::workload::model::AppModel;
+
+/// Final metrics of one controlled run of one app.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub app: String,
+    pub policy: String,
+    /// Total GPU energy, kJ (the paper's Table-1 quantity).
+    pub gpu_energy_kj: f64,
+    /// Execution time, seconds.
+    pub exec_time_s: f64,
+    /// Frequency transitions performed.
+    pub switches: u64,
+    /// Energy charged to transitions, J.
+    pub switch_energy_j: f64,
+    /// Stall time charged to transitions, s.
+    pub switch_time_s: f64,
+    /// Final cumulative reward-space regret (raw reward units).
+    pub cumulative_regret: f64,
+    /// Decision steps taken.
+    pub steps: u64,
+}
+
+impl RunMetrics {
+    /// Saved Energy vs the default maximum frequency (kJ; positive = saved).
+    pub fn saved_energy_kj(&self, app: &AppModel, freqs: &FreqDomain) -> f64 {
+        app.energy_kj[freqs.max_arm()] - self.gpu_energy_kj
+    }
+
+    /// Energy Regret vs the best static configuration (kJ; >= 0 for any
+    /// honest online method, up to simulation noise).
+    pub fn energy_regret_kj(&self, app: &AppModel) -> f64 {
+        self.gpu_energy_kj - app.optimal_energy_kj()
+    }
+
+    /// Relative slowdown vs the max-frequency execution time.
+    pub fn slowdown(&self, app: &AppModel) -> f64 {
+        self.exec_time_s / app.t_max_s - 1.0
+    }
+}
+
+/// Aggregate of repeated runs (mean ± sample std), Table-2 style.
+#[derive(Clone, Debug)]
+pub struct RepeatedMetrics {
+    pub app: String,
+    pub policy: String,
+    pub reps: usize,
+    pub energy_mean_kj: f64,
+    pub energy_std_kj: f64,
+    pub time_mean_s: f64,
+    pub switches_mean: f64,
+    pub switch_energy_mean_j: f64,
+    pub switch_time_mean_s: f64,
+    pub regret_mean: f64,
+}
+
+impl RepeatedMetrics {
+    pub fn from_runs(runs: &[RunMetrics]) -> RepeatedMetrics {
+        assert!(!runs.is_empty());
+        let energies: Vec<f64> = runs.iter().map(|r| r.gpu_energy_kj).collect();
+        let times: Vec<f64> = runs.iter().map(|r| r.exec_time_s).collect();
+        RepeatedMetrics {
+            app: runs[0].app.clone(),
+            policy: runs[0].policy.clone(),
+            reps: runs.len(),
+            energy_mean_kj: crate::util::stats::mean(&energies),
+            energy_std_kj: crate::util::stats::sample_std(&energies),
+            time_mean_s: crate::util::stats::mean(&times),
+            switches_mean: crate::util::stats::mean(
+                &runs.iter().map(|r| r.switches as f64).collect::<Vec<_>>(),
+            ),
+            switch_energy_mean_j: crate::util::stats::mean(
+                &runs.iter().map(|r| r.switch_energy_j).collect::<Vec<_>>(),
+            ),
+            switch_time_mean_s: crate::util::stats::mean(
+                &runs.iter().map(|r| r.switch_time_s).collect::<Vec<_>>(),
+            ),
+            regret_mean: crate::util::stats::mean(
+                &runs.iter().map(|r| r.cumulative_regret).collect::<Vec<_>>(),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::calibration;
+
+    fn run(kj: f64, time: f64) -> RunMetrics {
+        RunMetrics {
+            app: "tealeaf".into(),
+            policy: "test".into(),
+            gpu_energy_kj: kj,
+            exec_time_s: time,
+            switches: 10,
+            switch_energy_j: 3.0,
+            switch_time_s: 0.0015,
+            cumulative_regret: 100.0,
+            steps: 4500,
+        }
+    }
+
+    #[test]
+    fn saved_energy_vs_default() {
+        let app = calibration::app("tealeaf").unwrap();
+        let f = FreqDomain::aurora();
+        let m = run(99.06, 50.0);
+        // Paper: tealeaf default 109.79, EnergyUCB 99.06 => saved 10.73.
+        assert!((m.saved_energy_kj(&app, &f) - 10.73).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_regret_vs_best_static() {
+        let app = calibration::app("tealeaf").unwrap();
+        let m = run(99.06, 50.0);
+        // Best static 98.61 @1.0 GHz => regret 0.45 (the paper's row).
+        assert!((m.energy_regret_kj(&app) - 0.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slowdown_vs_tmax() {
+        let app = calibration::app("tealeaf").unwrap();
+        let m = run(99.06, 49.5);
+        assert!((m.slowdown(&app) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeated_metrics_aggregate() {
+        let runs = vec![run(100.0, 50.0), run(102.0, 52.0), run(98.0, 48.0)];
+        let agg = RepeatedMetrics::from_runs(&runs);
+        assert_eq!(agg.reps, 3);
+        assert!((agg.energy_mean_kj - 100.0).abs() < 1e-9);
+        assert!((agg.energy_std_kj - 2.0).abs() < 1e-9);
+        assert!((agg.time_mean_s - 50.0).abs() < 1e-9);
+    }
+}

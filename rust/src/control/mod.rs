@@ -1,0 +1,7 @@
+//! Control plane: binds policies to the GEOPM stack and accounts metrics.
+
+pub mod metrics;
+pub mod session;
+
+pub use metrics::{RepeatedMetrics, RunMetrics};
+pub use session::{run_repeated, run_session, RunResult, SessionCfg};

@@ -1,0 +1,268 @@
+//! A control session: one policy driving one application on one node,
+//! from job start to completion — the paper's experimental unit.
+//!
+//! The session wires policy ↔ GEOPM: each interval it reads the previous
+//! observation, forms the reward from counters (Eq. 4 or a Fig.-5a
+//! variant), normalizes it, lets the policy pick the next arm, and applies
+//! it through the service. Ground-truth regret accounting happens here
+//! (simulation-only knowledge, never shown to the policy).
+
+use crate::bandit::{Policy, RewardForm, RewardNormalizer};
+use crate::geopm::{Control, Service};
+use crate::sim::freq::FreqDomain;
+use crate::sim::node::Node;
+use crate::workload::model::AppModel;
+use crate::workload::trace::{Trace, TraceStep};
+
+use super::metrics::RunMetrics;
+
+/// Session configuration.
+#[derive(Clone, Debug)]
+pub struct SessionCfg {
+    /// Decision/sampling interval, seconds (paper: 10 ms).
+    pub dt_s: f64,
+    /// Simulation seed.
+    pub seed: u64,
+    /// Record the full per-step trace (memory-heavy on long runs).
+    pub record_trace: bool,
+    /// Safety cap on decision steps.
+    pub max_steps: u64,
+    /// Reward formulation (Fig. 5(a) axis).
+    pub reward_form: RewardForm,
+    /// Number of progress checkpoints for phase-energy accounting.
+    pub checkpoints: usize,
+}
+
+impl Default for SessionCfg {
+    fn default() -> Self {
+        SessionCfg {
+            dt_s: 0.01,
+            seed: 0,
+            record_trace: false,
+            max_steps: 2_000_000,
+            reward_form: RewardForm::EnergyRatio,
+            checkpoints: 100,
+        }
+    }
+}
+
+/// Everything a completed session yields.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub metrics: RunMetrics,
+    pub trace: Option<Trace>,
+    /// Cumulative true GPU energy (J) at each progress checkpoint
+    /// i/checkpoints, i = 1..=checkpoints (for the DRLCap 20 %/80 %
+    /// protocol).
+    pub energy_checkpoints_j: Vec<f64>,
+}
+
+impl RunResult {
+    /// True GPU energy consumed up to progress fraction `frac`, Joules
+    /// (linear interpolation between checkpoints).
+    pub fn energy_at_progress_j(&self, frac: f64) -> f64 {
+        let n = self.energy_checkpoints_j.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let pos = (frac.clamp(0.0, 1.0) * n as f64) - 1.0;
+        if pos <= 0.0 {
+            return self.energy_checkpoints_j[0] * (frac.clamp(0.0, 1.0) * n as f64);
+        }
+        let lo = pos.floor() as usize;
+        let hi = (lo + 1).min(n - 1);
+        let t = pos - lo as f64;
+        self.energy_checkpoints_j[lo] * (1.0 - t) + self.energy_checkpoints_j[hi] * t
+    }
+}
+
+/// Run one session to completion.
+pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) -> RunResult {
+    let freqs = FreqDomain::aurora();
+    assert_eq!(policy.k(), freqs.k(), "policy arity must match frequency domain");
+    let node = Node::new(app.clone(), freqs.clone(), cfg.dt_s, cfg.seed);
+    let mut service = Service::new(node);
+    let mut normalizer = RewardNormalizer::new();
+    let mut trace = cfg.record_trace.then(Trace::new);
+
+    // Ground truth for regret accounting (raw reward units).
+    let true_rewards: Vec<f64> =
+        (0..freqs.k()).map(|i| app.true_reward(&freqs, i, cfg.dt_s)).collect();
+    let mu_star = true_rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+    let mut cumulative_regret = 0.0;
+    let mut t: u64 = 0;
+    let mut checkpoints = vec![0.0f64; cfg.checkpoints];
+    let mut next_cp = 0usize;
+    let mut cum_true_energy_j = 0.0;
+
+    while !service.done() && t < cfg.max_steps {
+        t += 1;
+        let arm = policy.select(t);
+        service.write(Control::GpuFrequency(arm)).expect("valid arm");
+        let sample = service.sample().expect("not done");
+        let obs = sample.obs;
+
+        // Reward from counter-visible quantities only (Eq. 4).
+        let raw =
+            cfg.reward_form.raw(obs.gpu_energy_j, obs.core_util, obs.uncore_util);
+        // Winsorize: counter glitches (heavy-tail spikes) are capped at 3x
+        // the typical magnitude before any policy sees them — a controller
+        // robustness choice every method benefits from equally.
+        let reward = normalizer.normalize(raw).max(-3.0);
+        policy.update(arm, reward, obs.progress);
+
+        cumulative_regret += mu_star - true_rewards[arm];
+        cum_true_energy_j += obs.true_gpu_energy_j;
+
+        // Progress checkpoints.
+        let completed = 1.0 - obs.remaining;
+        while next_cp < cfg.checkpoints
+            && completed >= (next_cp + 1) as f64 / cfg.checkpoints as f64 - 1e-12
+        {
+            checkpoints[next_cp] = cum_true_energy_j;
+            next_cp += 1;
+        }
+
+        if let Some(tr) = trace.as_mut() {
+            tr.push(TraceStep {
+                t,
+                arm,
+                reward,
+                energy_j: obs.true_gpu_energy_j,
+                regret: mu_star - true_rewards[arm],
+                switched: sample.switched,
+            });
+        }
+    }
+    // Fill any remaining checkpoints (e.g. run hit max_steps).
+    for cp in checkpoints.iter_mut().skip(next_cp) {
+        *cp = cum_true_energy_j;
+    }
+
+    let totals = service.totals();
+    let metrics = RunMetrics {
+        app: app.name.to_string(),
+        policy: policy.name(),
+        gpu_energy_kj: totals.gpu_energy_kj,
+        exec_time_s: totals.exec_time_s,
+        switches: totals.switches,
+        switch_energy_j: totals.switch_energy_j,
+        switch_time_s: totals.switch_time_s,
+        cumulative_regret,
+        steps: t,
+    };
+    RunResult { metrics, trace, energy_checkpoints_j: checkpoints }
+}
+
+/// Run `reps` sessions with seeds `seed0..seed0+reps`, resetting the policy
+/// between runs.
+pub fn run_repeated(
+    app: &AppModel,
+    policy: &mut dyn Policy,
+    cfg: &SessionCfg,
+    reps: usize,
+    seed0: u64,
+) -> Vec<RunResult> {
+    (0..reps)
+        .map(|r| {
+            policy.reset();
+            let cfg = SessionCfg { seed: seed0 + r as u64, ..cfg.clone() };
+            run_session(app, policy, &cfg)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::{EnergyUcb, EnergyUcbConfig, RoundRobin, StaticPolicy};
+    use crate::workload::calibration;
+
+    #[test]
+    fn static_session_reproduces_table1() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = StaticPolicy::new(9, 8);
+        let res = run_session(&app, &mut policy, &SessionCfg::default());
+        assert!((res.metrics.gpu_energy_kj - 100.65).abs() < 0.8, "{}", res.metrics.gpu_energy_kj);
+        assert_eq!(res.metrics.switches, 0);
+        assert_eq!(res.metrics.cumulative_regret > 0.0, true);
+    }
+
+    #[test]
+    fn energyucb_beats_default_frequency() {
+        let app = calibration::app("tealeaf").unwrap();
+        let mut policy = EnergyUcb::new(9, EnergyUcbConfig::default());
+        let res = run_session(
+            &app,
+            &mut policy,
+            &SessionCfg { seed: 3, ..SessionCfg::default() },
+        );
+        // Default 1.6 GHz = 109.79 kJ; EnergyUCB must save energy.
+        assert!(
+            res.metrics.gpu_energy_kj < 105.0,
+            "energy {}",
+            res.metrics.gpu_energy_kj
+        );
+        // And not be below the physically-optimal static config minus noise.
+        assert!(res.metrics.gpu_energy_kj > 95.0);
+    }
+
+    #[test]
+    fn rrfreq_has_linear_regret() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = RoundRobin::new(9);
+        let cfg = SessionCfg { record_trace: true, ..SessionCfg::default() };
+        let res = run_session(&app, &mut policy, &cfg);
+        let trace = res.trace.unwrap();
+        let cum = trace.cumulative_regret();
+        // Regret at the halfway point should be ~half the final value.
+        let half = cum[cum.len() / 2];
+        let fin = *cum.last().unwrap();
+        assert!((half / fin - 0.5).abs() < 0.05, "half={half} fin={fin}");
+    }
+
+    #[test]
+    fn checkpoints_monotone_and_complete() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = StaticPolicy::new(9, 4);
+        let res = run_session(&app, &mut policy, &SessionCfg::default());
+        let cps = &res.energy_checkpoints_j;
+        assert_eq!(cps.len(), 100);
+        assert!(cps.windows(2).all(|w| w[1] >= w[0]));
+        // Final checkpoint equals total energy.
+        assert!(
+            (cps[99] / 1000.0 - res.metrics.gpu_energy_kj).abs() < 0.5,
+            "{} vs {}",
+            cps[99] / 1000.0,
+            res.metrics.gpu_energy_kj
+        );
+        // 20 % checkpoint is ~20 % of total (static run, constant power).
+        let e20 = res.energy_at_progress_j(0.2);
+        assert!((e20 / cps[99] - 0.2).abs() < 0.02, "{}", e20 / cps[99]);
+    }
+
+    #[test]
+    fn repeated_runs_vary_by_seed_only() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = EnergyUcb::new(9, EnergyUcbConfig::default());
+        let results = run_repeated(&app, &mut policy, &SessionCfg::default(), 3, 100);
+        assert_eq!(results.len(), 3);
+        // Different seeds -> different trajectories (energy differs).
+        let e: Vec<f64> = results.iter().map(|r| r.metrics.gpu_energy_kj).collect();
+        assert!(e[0] != e[1] || e[1] != e[2], "{e:?}");
+        // All in a sane band.
+        for v in &e {
+            assert!(*v > 85.0 && *v < 105.0, "{v}");
+        }
+    }
+
+    #[test]
+    fn trace_switches_match_metrics() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = RoundRobin::new(9);
+        let cfg = SessionCfg { record_trace: true, ..SessionCfg::default() };
+        let res = run_session(&app, &mut policy, &cfg);
+        assert_eq!(res.trace.unwrap().switch_count(), res.metrics.switches);
+    }
+}

@@ -1,0 +1,177 @@
+//! Fig. 1 (motivation): (a) node energy split across components per app;
+//! (b) the pot3d performance–energy trade-off across 1.6/1.1/0.8 GHz.
+
+use anyhow::Result;
+
+use super::paper;
+use super::report::{vs_paper, ExpContext, Report};
+use super::Experiment;
+use crate::bandit::StaticPolicy;
+use crate::control::{run_session, SessionCfg};
+use crate::sim::freq::FreqDomain;
+use crate::util::io::Json;
+use crate::util::table::{fnum, Table};
+use crate::workload::calibration;
+
+pub struct Fig1a;
+
+impl Experiment for Fig1a {
+    fn id(&self) -> &'static str {
+        "fig1a"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig. 1(a): component energy distribution per HPC application"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> Result<Report> {
+        let mut report = Report::new(self.id());
+        let freqs = FreqDomain::aurora();
+        let mut table = Table::new(vec!["app", "GPU %", "CPU %", "other %", "total kJ"]);
+        let mut json_rows = Vec::new();
+        for app in calibration::all_apps() {
+            // Run the node at the default frequency to completion (the
+            // motivation figure's setting).
+            let mut policy = StaticPolicy::labeled(freqs.k(), freqs.max_arm(), "1.6 GHz");
+            let cfg = SessionCfg { seed: ctx.seed, ..SessionCfg::default() };
+            let app_run = if ctx.quick { scale_app(&app, 8.0) } else { app.clone() };
+            let res = run_session(&app_run, &mut policy, &cfg);
+            let gpu = res.metrics.gpu_energy_kj;
+            // CPU/other accounted by the node model.
+            let cpu = app_run.cpu_kw * res.metrics.exec_time_s;
+            let other = app_run.other_kw * res.metrics.exec_time_s;
+            let total = gpu + cpu + other;
+            table.row(vec![
+                app.name.to_string(),
+                fnum(100.0 * gpu / total, 2),
+                fnum(100.0 * cpu / total, 2),
+                fnum(100.0 * other / total, 2),
+                fnum(total, 1),
+            ]);
+            let mut j = Json::obj();
+            j.set("app", app.name);
+            j.set("gpu_frac", gpu / total);
+            j.set("cpu_frac", cpu / total);
+            j.set("other_frac", other / total);
+            json_rows.push(j);
+
+            if app.name == "pot3d" && !ctx.quick {
+                let (pg, pc, po) = paper::FIG1A_POT3D;
+                report.push_text(format!(
+                    "pot3d shares — GPU {}, CPU {}, other {}",
+                    vs_paper(gpu / total, pg, 3),
+                    vs_paper(cpu / total, pc, 3),
+                    vs_paper(other / total, po, 3)
+                ));
+            }
+        }
+        report.push_text(table.render());
+        report.push_text("GPUs dominate node energy for every application (paper: >4x CPUs on pot3d).");
+        report.json.set("rows", Json::Arr(json_rows));
+        Ok(report)
+    }
+}
+
+pub struct Fig1b;
+
+impl Experiment for Fig1b {
+    fn id(&self) -> &'static str {
+        "fig1b"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig. 1(b): pot3d performance-energy trade-off (1.6/1.1/0.8 GHz)"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> Result<Report> {
+        let mut report = Report::new(self.id());
+        let freqs = FreqDomain::aurora();
+        let app = calibration::app("pot3d").expect("pot3d");
+        let app_run = if ctx.quick { scale_app(&app, 8.0) } else { app.clone() };
+        let scale = if ctx.quick { 8.0 } else { 1.0 };
+        let mut table =
+            Table::new(vec!["GHz", "power kW", "time s", "energy kJ", "paper kJ (Fig.1b)"]);
+        let mut json_rows = Vec::new();
+        for (ghz, p_kw, t_s, e_kj) in paper::FIG1B {
+            let arm = freqs.index_of_ghz(ghz).unwrap();
+            let mut policy = StaticPolicy::new(freqs.k(), arm);
+            let cfg = SessionCfg { seed: ctx.seed, ..SessionCfg::default() };
+            let res = run_session(&app_run, &mut policy, &cfg);
+            let time = res.metrics.exec_time_s * scale;
+            let energy = res.metrics.gpu_energy_kj * scale;
+            let power = energy / time;
+            table.row(vec![
+                format!("{ghz:.1}"),
+                fnum(power, 3),
+                fnum(time, 2),
+                fnum(energy, 2),
+                format!("{e_kj:.2} ({p_kw:.3} kW x {t_s:.2} s)"),
+            ]);
+            let mut j = Json::obj();
+            j.set("ghz", ghz);
+            j.set("power_kw", power);
+            j.set("time_s", time);
+            j.set("energy_kj", energy);
+            json_rows.push(j);
+        }
+        report.push_text(table.render());
+        report.push_text(
+            "Shape check: energy dips at 1.1 GHz and rises again at 0.8 GHz \
+             (the non-monotone trade-off motivating online control).",
+        );
+        report.json.set("rows", Json::Arr(json_rows));
+        Ok(report)
+    }
+}
+
+/// Shrink an app's execution length by `factor` for quick mode. Power and
+/// the optimal-arm structure are preserved exactly; energies scale by
+/// 1/factor.
+pub(crate) fn scale_app(
+    app: &crate::workload::model::AppModel,
+    factor: f64,
+) -> crate::workload::model::AppModel {
+    let mut a = app.clone();
+    a.t_max_s /= factor;
+    for e in a.energy_kj.iter_mut() {
+        *e /= factor;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1a_runs_quick() {
+        let ctx = ExpContext::quick();
+        let report = Fig1a.run(&ctx).unwrap();
+        assert!(report.text.contains("pot3d"));
+        assert!(report.text.contains("GPU %"));
+    }
+
+    #[test]
+    fn fig1b_shape_holds() {
+        let ctx = ExpContext::quick();
+        let report = Fig1b.run(&ctx).unwrap();
+        // Extract the three energies from JSON.
+        let rows = match report.json.get("rows") {
+            Some(crate::util::io::Json::Arr(rows)) => rows.clone(),
+            _ => panic!("no rows"),
+        };
+        let energy = |i: usize| rows[i].get_num("energy_kj").unwrap();
+        let (e16, e11, e08) = (energy(0), energy(1), energy(2));
+        assert!(e11 < e16, "{e11} {e16}");
+        assert!(e11 < e08, "{e11} {e08}");
+    }
+
+    #[test]
+    fn scale_app_preserves_structure() {
+        let app = calibration::app("sph_exa").unwrap();
+        let scaled = scale_app(&app, 8.0);
+        assert_eq!(scaled.optimal_arm(), app.optimal_arm());
+        let f = FreqDomain::aurora();
+        assert!((scaled.power_kw(&f, 8) - app.power_kw(&f, 8)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,153 @@
+//! Fig. 4: switching-cost analysis on llama — the switching-aware penalty
+//! suppresses frequency oscillation, shrinking the controller's own
+//! overhead (#switches, switch energy, switch time) by several ×.
+
+use anyhow::Result;
+
+use super::fig1::scale_app;
+use super::paper;
+use super::report::{ExpContext, Report};
+use super::Experiment;
+use crate::bandit::{EnergyUcb, EnergyUcbConfig};
+use crate::control::{run_repeated, SessionCfg};
+use crate::util::io::Json;
+use crate::util::stats::mean;
+use crate::util::table::{fnum, fnum_sep, Table};
+use crate::workload::calibration;
+
+pub struct Fig4;
+
+impl Experiment for Fig4 {
+    fn id(&self) -> &'static str {
+        "fig4"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig. 4: switching cost with vs without the switching-aware penalty (llama)"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> Result<Report> {
+        let mut report = Report::new(self.id());
+        let app0 = calibration::app("llama").unwrap();
+        let app = if ctx.quick { scale_app(&app0, 16.0) } else { app0.clone() };
+        let reps = ctx.effective_reps();
+
+        // Regime 2 (supplementary): degraded telemetry. The paper's
+        // measured 20.85k switches over ~43k intervals imply its reward
+        // stream kept near-optimal arms statistically tied essentially
+        // forever; in our calibrated (stationary) simulator a consistent
+        // estimator converges and oscillation dies out, so the calibrated
+        // regime shows the converged scale while this regime reproduces
+        // the paper's oscillation-suppression mechanism. Full analysis in
+        // EXPERIMENTS.md §Deviations.
+        let mut noisy = app.clone();
+        noisy.noise = crate::workload::model::NoiseSpec {
+            energy_frac: 0.25,
+            util_std: 0.10,
+            spike_prob: 0.05,
+            spike_mult: 6.0,
+            ..noisy.noise
+        };
+
+        let regimes: [(&str, &crate::workload::model::AppModel); 2] =
+            [("calibrated", &app), ("noisy telemetry", &noisy)];
+        let mut all_json = Vec::new();
+        let mut reductions = Vec::new();
+        for (regime, app_r) in regimes {
+            let configs = [
+                ("w/o Penalty", EnergyUcbConfig { lambda: 0.0, ..EnergyUcbConfig::default() }),
+                ("with Penalty", EnergyUcbConfig::default()),
+            ];
+            let mut table = Table::new(vec![
+                "variant",
+                "switches",
+                "switch energy (kJ)",
+                "switch time (s)",
+                "total energy (kJ)",
+            ]);
+            let mut measured = Vec::new();
+            for (label, cfg) in configs {
+                let mut policy = EnergyUcb::new(9, cfg);
+                let results =
+                    run_repeated(app_r, &mut policy, &SessionCfg::default(), reps, ctx.seed);
+                let switches = mean(
+                    &results.iter().map(|r| r.metrics.switches as f64).collect::<Vec<_>>(),
+                );
+                let sw_kj = mean(
+                    &results
+                        .iter()
+                        .map(|r| r.metrics.switch_energy_j / 1_000.0)
+                        .collect::<Vec<_>>(),
+                );
+                let sw_s = mean(
+                    &results.iter().map(|r| r.metrics.switch_time_s).collect::<Vec<_>>(),
+                );
+                let kj = mean(
+                    &results.iter().map(|r| r.metrics.gpu_energy_kj).collect::<Vec<_>>(),
+                );
+                table.row(vec![
+                    label.to_string(),
+                    fnum(switches, 0),
+                    fnum(sw_kj, 3),
+                    fnum(sw_s, 3),
+                    fnum_sep(kj, 2),
+                ]);
+                let mut j = Json::obj();
+                j.set("regime", regime);
+                j.set("variant", label);
+                j.set("switches", switches);
+                j.set("switch_energy_kj", sw_kj);
+                j.set("switch_time_s", sw_s);
+                j.set("total_energy_kj", kj);
+                measured.push(j);
+            }
+            let get = |i: usize, k: &str| measured[i].get_num(k).unwrap();
+            let reduction = get(0, "switches") / get(1, "switches").max(1.0);
+            reductions.push(reduction);
+            report.push_text(format!("--- regime: {regime} ---"));
+            report.push_text(table.render());
+            report.push_text(format!("penalty reduces switches by {reduction:.1}x\n"));
+            all_json.extend(measured);
+        }
+
+        report.push_text(format!(
+            "Paper (llama): {:.0} -> {:.0} switches (6.7x), overhead {:.2} kJ -> {:.2} kJ, \
+             {:.2} s -> {:.2} s.",
+            paper::FIG4_WO_PENALTY.0,
+            paper::FIG4_WITH_PENALTY.0,
+            paper::FIG4_WO_PENALTY.1,
+            paper::FIG4_WITH_PENALTY.1,
+            paper::FIG4_WO_PENALTY.2,
+            paper::FIG4_WITH_PENALTY.2,
+        ));
+        report.push_text(
+            "Per-switch cost model: 150 µs + 0.3 J (paper §4.4) — overhead rows are \
+             switches × cost by construction, matching the paper's arithmetic.",
+        );
+        report.json.set("variants", Json::Arr(all_json));
+        report.json.set("reduction_factor", reductions[0]);
+        report.json.set("reduction_factor_noisy", reductions[1]);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn penalty_reduces_switching_quick() {
+        let ctx = ExpContext {
+            quick: true,
+            reps: 2,
+            out_dir: std::env::temp_dir().join("energyucb_f4_test"),
+            ..ExpContext::default()
+        };
+        let report = Fig4.run(&ctx).unwrap();
+        // The noisy-telemetry regime must show clear oscillation
+        // suppression (the calibrated regime converges to few switches).
+        let red = report.json.get_num("reduction_factor_noisy").unwrap();
+        assert!(red > 1.25, "reduction {red}");
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("energyucb_f4_test"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Fig. 5(b): QoS analysis on clvleaf and miniswp — execution time across
+//! static frequencies, overlaid with unconstrained EnergyUCB and the
+//! constrained variant under a δ = 0.05 slowdown budget.
+
+use anyhow::Result;
+
+use super::fig1::scale_app;
+use super::paper;
+use super::report::{ExpContext, Report};
+use super::Experiment;
+use crate::bandit::{ConstrainedEnergyUcb, EnergyUcb, EnergyUcbConfig, Policy, StaticPolicy};
+use crate::control::{run_repeated, SessionCfg};
+use crate::sim::freq::FreqDomain;
+use crate::util::io::Json;
+use crate::util::stats::mean;
+use crate::util::table::{fnum, Table};
+use crate::workload::calibration;
+
+const APPS: [&str; 2] = ["clvleaf", "miniswp"];
+const DELTA: f64 = 0.05;
+
+pub struct Fig5b;
+
+impl Experiment for Fig5b {
+    fn id(&self) -> &'static str {
+        "fig5b"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig. 5(b): QoS — execution time, unconstrained vs δ=0.05-constrained"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> Result<Report> {
+        let mut report = Report::new(self.id());
+        let freqs = FreqDomain::aurora();
+        let reps = ctx.effective_reps();
+        let mut json_apps = Vec::new();
+        for name in APPS {
+            let app0 = calibration::app(name).unwrap();
+            let app = if ctx.quick { scale_app(&app0, 8.0) } else { app0.clone() };
+            let scale = if ctx.quick { 8.0 } else { 1.0 };
+            let mut table = Table::new(vec!["config", "exec time (s)", "slowdown %", "energy (kJ)"]);
+
+            // Static curve.
+            let mut t_max = 0.0;
+            for arm in (0..freqs.k()).rev() {
+                let mut policy = StaticPolicy::new(freqs.k(), arm);
+                let res = &run_repeated(&app, &mut policy, &SessionCfg::default(), 1, ctx.seed)[0];
+                let t = res.metrics.exec_time_s * scale;
+                if arm == freqs.max_arm() {
+                    t_max = t;
+                }
+                table.row(vec![
+                    freqs.label(arm),
+                    fnum(t, 2),
+                    fnum((t / t_max - 1.0) * 100.0, 2),
+                    fnum(res.metrics.gpu_energy_kj * scale, 2),
+                ]);
+            }
+            table.rule();
+
+            // Unconstrained and constrained EnergyUCB.
+            let mut json_app = Json::obj();
+            json_app.set("app", name);
+            let variants: Vec<(&str, Box<dyn Policy>)> = vec![
+                (
+                    "EnergyUCB (unconstrained)",
+                    Box::new(EnergyUcb::new(9, EnergyUcbConfig::default())),
+                ),
+                (
+                    "Constrained (δ=0.05)",
+                    Box::new(ConstrainedEnergyUcb::new(9, EnergyUcbConfig::default(), DELTA)),
+                ),
+            ];
+            for (label, mut policy) in variants {
+                let results =
+                    run_repeated(&app, policy.as_mut(), &SessionCfg::default(), reps, ctx.seed);
+                let t =
+                    mean(&results.iter().map(|r| r.metrics.exec_time_s * scale).collect::<Vec<_>>());
+                let kj = mean(
+                    &results
+                        .iter()
+                        .map(|r| r.metrics.gpu_energy_kj * scale)
+                        .collect::<Vec<_>>(),
+                );
+                let slowdown = t / t_max - 1.0;
+                table.row(vec![
+                    label.to_string(),
+                    fnum(t, 2),
+                    fnum(slowdown * 100.0, 2),
+                    fnum(kj, 2),
+                ]);
+                let key = if label.starts_with("Constrained") {
+                    "constrained_slowdown"
+                } else {
+                    "unconstrained_slowdown"
+                };
+                json_app.set(key, slowdown);
+                json_app.set(format!("{key}_energy_kj"), kj);
+            }
+            report.push_text(format!("--- {name} ---"));
+            report.push_text(table.render());
+            json_apps.push(json_app);
+        }
+
+        if !ctx.quick {
+            for ((name, p_unc), (_, p_con)) in
+                paper::FIG5B_UNCONSTRAINED.iter().zip(paper::FIG5B_CONSTRAINED.iter())
+            {
+                report.push_text(format!(
+                    "paper {name}: unconstrained slowdown {:.2}%, constrained {:.2}% (δ=5%)",
+                    p_unc * 100.0,
+                    p_con * 100.0
+                ));
+            }
+        }
+        report.push_text(
+            "Shape: the constrained variant keeps slowdown within the 5% budget \
+             without reverting to 1.6 GHz, still saving energy vs the default.",
+        );
+        report.json.set("apps", Json::Arr(json_apps));
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_constrained_respects_budget() {
+        let ctx = ExpContext {
+            quick: true,
+            reps: 2,
+            out_dir: std::env::temp_dir().join("energyucb_f5b_test"),
+            ..ExpContext::default()
+        };
+        let report = Fig5b.run(&ctx).unwrap();
+        let apps = match report.json.get("apps") {
+            Some(Json::Arr(a)) => a.clone(),
+            _ => panic!(),
+        };
+        for app in &apps {
+            let con = app.get_num("constrained_slowdown").unwrap();
+            let unc = app.get_num("unconstrained_slowdown").unwrap();
+            // Budget respected with a small estimation margin.
+            assert!(con <= 0.07, "constrained slowdown {con}");
+            // Constrained never slower than unconstrained (clvleaf's
+            // unconstrained optimum is ~14% slow).
+            assert!(con <= unc + 0.02, "con {con} unc {unc}");
+        }
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("energyucb_f5b_test"));
+    }
+}

@@ -1,0 +1,34 @@
+//! Experiment harness: one module per table/figure of the paper.
+//!
+//! Every experiment implements [`Experiment`]: it runs the workloads,
+//! prints the paper's rows/series next to our measurements, and writes
+//! machine-readable results (JSON + CSV) under the output directory. The
+//! registry maps experiment ids (`fig1a`, `table1`, ...) to
+//! implementations; `energyucb exp <id>` and the bench harness both go
+//! through it.
+
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5a;
+pub mod fig5b;
+pub mod impact;
+pub mod paper;
+pub mod registry;
+pub mod sweeps;
+pub mod report;
+pub mod table1;
+pub mod table2;
+
+pub use registry::{all_experiments, experiment_by_id};
+pub use report::{ExpContext, Report};
+
+/// One reproducible experiment (a paper table or figure).
+pub trait Experiment {
+    /// Short id used on the CLI ("table1", "fig3", ...).
+    fn id(&self) -> &'static str;
+    /// Human title.
+    fn title(&self) -> &'static str;
+    /// Execute, printing progress to stderr, returning the report.
+    fn run(&self, ctx: &ExpContext) -> anyhow::Result<Report>;
+}

@@ -1,0 +1,54 @@
+//! Experiment registry: id → implementation.
+
+use super::{fig1, fig3, fig4, fig5a, fig5b, impact, sweeps, table1, table2, Experiment};
+
+/// Every experiment, in paper order.
+pub fn all_experiments() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(fig1::Fig1a),
+        Box::new(fig1::Fig1b),
+        Box::new(table1::Table1),
+        Box::new(fig3::Fig3),
+        Box::new(table2::Table2),
+        Box::new(fig4::Fig4),
+        Box::new(fig5a::Fig5a),
+        Box::new(fig5b::Fig5b),
+        Box::new(impact::Impact),
+        Box::new(sweeps::Sweeps),
+    ]
+}
+
+/// Find by id.
+pub fn experiment_by_id(id: &str) -> Option<Box<dyn Experiment>> {
+    all_experiments().into_iter().find(|e| e.id() == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        let ids: Vec<&str> = all_experiments().iter().map(|e| e.id()).collect();
+        for required in
+            ["fig1a", "fig1b", "table1", "fig3", "table2", "fig4", "fig5a", "fig5b"]
+        {
+            assert!(ids.contains(&required), "{required} missing");
+        }
+    }
+
+    #[test]
+    fn lookup_by_id() {
+        assert!(experiment_by_id("table1").is_some());
+        assert!(experiment_by_id("nope").is_none());
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let mut ids: Vec<&str> = all_experiments().iter().map(|e| e.id()).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+}

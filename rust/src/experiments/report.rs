@@ -1,0 +1,123 @@
+//! Experiment execution context and report plumbing.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::io::{self, Json};
+
+/// Shared knobs for experiment runs.
+#[derive(Clone, Debug)]
+pub struct ExpContext {
+    /// Repetitions for stochastic policies (paper: 10).
+    pub reps: usize,
+    /// Base seed; run r uses seed + r.
+    pub seed: u64,
+    /// Output directory for JSON/CSV results.
+    pub out_dir: PathBuf,
+    /// Quick mode: fewer reps / shorter horizons (CI-friendly).
+    pub quick: bool,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext { reps: 10, seed: 2026, out_dir: PathBuf::from("results"), quick: false }
+    }
+}
+
+impl ExpContext {
+    /// Quick-mode preset (used by tests and `--quick`).
+    pub fn quick() -> ExpContext {
+        ExpContext { reps: 2, quick: true, ..ExpContext::default() }
+    }
+
+    /// Effective repetition count.
+    pub fn effective_reps(&self) -> usize {
+        if self.quick {
+            self.reps.min(2)
+        } else {
+            self.reps
+        }
+    }
+}
+
+/// The rendered output of one experiment.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub id: String,
+    /// Human-readable text (tables, comparisons) — printed to stdout.
+    pub text: String,
+    /// Machine-readable results.
+    pub json: Json,
+}
+
+impl Report {
+    pub fn new(id: &str) -> Report {
+        Report { id: id.to_string(), text: String::new(), json: Json::obj() }
+    }
+
+    pub fn push_text(&mut self, s: impl AsRef<str>) {
+        self.text.push_str(s.as_ref());
+        if !s.as_ref().ends_with('\n') {
+            self.text.push('\n');
+        }
+    }
+
+    /// Write `results/<id>.json` (and return its path).
+    pub fn write(&self, out_dir: &Path) -> std::io::Result<PathBuf> {
+        let path = out_dir.join(format!("{}.json", self.id));
+        io::write_file(&path, &self.json.render())?;
+        let txt = out_dir.join(format!("{}.txt", self.id));
+        io::write_file(&txt, &self.text)?;
+        Ok(path)
+    }
+}
+
+/// Relative deviation helper for paper-vs-ours lines.
+pub fn rel_dev(ours: f64, paper: f64) -> f64 {
+    if paper == 0.0 {
+        return 0.0;
+    }
+    (ours - paper) / paper.abs()
+}
+
+/// Format a paper-vs-ours comparison cell: "ours (paper P, Δ+x.x%)".
+pub fn vs_paper(ours: f64, paper: f64, digits: usize) -> String {
+    format!(
+        "{:.d$} (paper {:.d$}, Δ{:+.1}%)",
+        ours,
+        paper,
+        rel_dev(ours, paper) * 100.0,
+        d = digits
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_caps_reps() {
+        let ctx = ExpContext::quick();
+        assert_eq!(ctx.effective_reps(), 2);
+        let full = ExpContext::default();
+        assert_eq!(full.effective_reps(), 10);
+    }
+
+    #[test]
+    fn report_write_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("energyucb_rep_{}", std::process::id()));
+        let mut r = Report::new("test_exp");
+        r.push_text("hello");
+        r.json.set("x", 1.0);
+        let path = r.write(&dir).unwrap();
+        assert!(path.exists());
+        assert!(dir.join("test_exp.txt").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn vs_paper_formats() {
+        let s = vs_paper(99.0, 100.0, 2);
+        assert!(s.contains("99.00"), "{s}");
+        assert!(s.contains("-1.0%"), "{s}");
+    }
+}

@@ -1,0 +1,354 @@
+//! Table 1: energy consumption (kJ) of every method on every application,
+//! plus the Saved Energy and Energy Regret rows.
+//!
+//! Methods: 9 static frequencies, RRFreq, ε-greedy, EnergyTS, RL-Power,
+//! DRLCap (+Online, +Cross), EnergyUCB. DRLCap follows the paper's
+//! protocol: the first 20 % of execution trains and is energy-scaled by
+//! 1.25× for fairness against fully-online methods (see
+//! [`scored_energy_kj`] for why the scaling lands on the 20 %);
+//! DRLCap-Cross is pre-trained on the *other* benchmarks.
+
+use anyhow::Result;
+
+use super::fig1::scale_app;
+use super::paper;
+use super::report::{ExpContext, Report};
+use super::Experiment;
+use crate::bandit::{
+    EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, Policy, RoundRobin, StaticPolicy,
+};
+use crate::control::{run_session, RunResult, SessionCfg};
+use crate::rl::{DrlCap, DrlCapMode, RlPower};
+use crate::sim::freq::FreqDomain;
+use crate::util::io::{Csv, Json};
+use crate::util::stats::mean;
+use crate::util::table::{fnum_sep, Table};
+use crate::workload::calibration;
+use crate::workload::model::AppModel;
+
+/// A method under evaluation: name + per-seed policy factory.
+pub struct Method {
+    pub name: &'static str,
+    factory: Box<dyn Fn(u64) -> Box<dyn Policy>>,
+    /// Apply the paper's 20 %/80 % + 1.25× energy protocol.
+    pub pretrain_scaled: bool,
+    /// Needs cross-benchmark pretraining (DRLCap-Cross).
+    pub cross: bool,
+}
+
+impl Method {
+    fn new(
+        name: &'static str,
+        factory: impl Fn(u64) -> Box<dyn Policy> + 'static,
+    ) -> Method {
+        Method { name, factory: Box::new(factory), pretrain_scaled: false, cross: false }
+    }
+
+    pub fn build(&self, seed: u64) -> Box<dyn Policy> {
+        (self.factory)(seed)
+    }
+}
+
+/// The dynamic method roster in the paper's row order.
+pub fn dynamic_methods(k: usize) -> Vec<Method> {
+    vec![
+        Method::new("RRFreq", move |_s| Box::new(RoundRobin::new(k))),
+        Method::new("ε-greedy", move |s| Box::new(EpsilonGreedy::new(k, 0.05, 0.0, s))),
+        Method::new("EnergyTS", move |s| Box::new(EnergyTs::default_for(k, s))),
+        Method::new("RL-Power", move |s| Box::new(RlPower::new(k, s))),
+        Method {
+            name: "DRLCap",
+            factory: Box::new(move |s| Box::new(DrlCap::new(k, DrlCapMode::PretrainDeploy, s))),
+            pretrain_scaled: true,
+            cross: false,
+        },
+        Method::new("DRLCap-Online", move |s| {
+            Box::new(DrlCap::new(k, DrlCapMode::Online, s))
+        }),
+        Method {
+            name: "DRLCap-Cross",
+            factory: Box::new(move |s| Box::new(DrlCap::new(k, DrlCapMode::Online, s))),
+            pretrain_scaled: false,
+            cross: true,
+        },
+        Method::new("EnergyUCB", move |_s| {
+            Box::new(EnergyUcb::new(k, EnergyUcbConfig::default()))
+        }),
+    ]
+}
+
+/// Table-1 energy of a method on an app (mean over reps), applying the
+/// DRLCap protocol where flagged.
+pub fn method_energy_kj(
+    method: &Method,
+    app: &AppModel,
+    reps: usize,
+    seed0: u64,
+    cfg: &SessionCfg,
+) -> f64 {
+    let energies: Vec<f64> = (0..reps)
+        .map(|r| {
+            let seed = seed0 + r as u64;
+            let mut policy = if method.cross {
+                build_cross_policy(app, seed)
+            } else {
+                method.build(seed)
+            };
+            let cfg = SessionCfg { seed, ..cfg.clone() };
+            let res = run_session(app, policy.as_mut(), &cfg);
+            scored_energy_kj(method, &res)
+        })
+        .collect();
+    mean(&energies)
+}
+
+/// Apply the paper's DRLCap fairness scaling if flagged.
+///
+/// The paper's text says the *remaining 80 %* is scaled by 1.25×, but its
+/// published rows are only arithmetically consistent with scaling the
+/// *training 20 %* (scaling the 80 % would put DRLCap's implied raw energy
+/// below the best static frequency — impossible). We implement what the
+/// numbers say: scored = 1.25·E(first 20 %) + E(rest). Recorded in
+/// EXPERIMENTS.md §Deviations.
+pub fn scored_energy_kj(method: &Method, res: &RunResult) -> f64 {
+    if method.pretrain_scaled {
+        let total = res.metrics.gpu_energy_kj * 1_000.0;
+        let e20 = res.energy_at_progress_j(0.2);
+        (1.25 * e20 + (total - e20)) / 1_000.0
+    } else {
+        res.metrics.gpu_energy_kj
+    }
+}
+
+/// DRLCap-Cross: pre-train on every *other* benchmark, deploy frozen.
+fn build_cross_policy(target: &AppModel, seed: u64) -> Box<dyn Policy> {
+    let k = FreqDomain::aurora().k();
+    let mut transitions = Vec::new();
+    for other in calibration::all_apps() {
+        if other.name == target.name {
+            continue;
+        }
+        // Short online episodes on a shrunk copy of the donor benchmark.
+        let donor_app = scale_app(&other, 16.0);
+        let mut donor = DrlCap::new(k, DrlCapMode::Online, seed ^ 0xCAFE);
+        let cfg = SessionCfg { seed, max_steps: 1500, ..SessionCfg::default() };
+        let _ = run_session(&donor_app, &mut donor, &cfg);
+        transitions.extend(donor.replay_snapshot());
+    }
+    let mut cross = DrlCap::new(k, DrlCapMode::CrossDeploy, seed);
+    cross.pretrain_on(&transitions, 1);
+    Box::new(cross)
+}
+
+pub struct Table1;
+
+impl Experiment for Table1 {
+    fn id(&self) -> &'static str {
+        "table1"
+    }
+
+    fn title(&self) -> &'static str {
+        "Table 1: energy consumption (kJ) across methods and applications"
+    }
+
+    fn run(&self, ctx: &ExpContext) -> Result<Report> {
+        let mut report = Report::new(self.id());
+        let freqs = FreqDomain::aurora();
+        let apps: Vec<AppModel> = calibration::all_apps()
+            .iter()
+            .map(|a| if ctx.quick { scale_app(a, 16.0) } else { a.clone() })
+            .collect();
+        let reps = ctx.effective_reps();
+        let cfg = SessionCfg::default();
+
+        let mut header: Vec<String> = vec!["Methods".into()];
+        header.extend(apps.iter().map(|a| a.name.to_string()));
+        let mut table = Table::new(header);
+        let mut csv = Csv::new();
+        csv.row(&{
+            let mut h = vec!["method".to_string()];
+            h.extend(apps.iter().map(|a| a.name.to_string()));
+            h
+        });
+        let mut json_rows = Vec::new();
+
+        let push_row = |label: &str, values: &[f64], table: &mut Table, csv: &mut Csv,
+                            json_rows: &mut Vec<Json>| {
+            let mut cells = vec![label.to_string()];
+            cells.extend(values.iter().map(|v| fnum_sep(*v, 2)));
+            table.row(cells);
+            csv.row_mixed(label, values, 3);
+            let mut j = Json::obj();
+            j.set("method", label);
+            j.set("kj", values.to_vec());
+            json_rows.push(j);
+        };
+
+        // Static rows (descending frequency, like the paper).
+        let mut static_energy = vec![vec![0.0; apps.len()]; freqs.k()];
+        for arm in (0..freqs.k()).rev() {
+            let mut row = Vec::new();
+            for (a, app) in apps.iter().enumerate() {
+                let mut policy = StaticPolicy::new(freqs.k(), arm);
+                let res = run_session(
+                    app,
+                    &mut policy,
+                    &SessionCfg { seed: ctx.seed, ..cfg.clone() },
+                );
+                static_energy[arm][a] = res.metrics.gpu_energy_kj;
+                row.push(res.metrics.gpu_energy_kj);
+            }
+            push_row(&freqs.label(arm), &row, &mut table, &mut csv, &mut json_rows);
+        }
+        table.rule();
+
+        // Dynamic + RL methods.
+        let methods = dynamic_methods(freqs.k());
+        let mut ucb_row = vec![0.0; apps.len()];
+        for method in &methods {
+            eprintln!("table1: running {} ({} reps x {} apps)", method.name, reps, apps.len());
+            let mut row = Vec::new();
+            for app in apps.iter() {
+                let e = method_energy_kj(method, app, reps, ctx.seed, &cfg);
+                row.push(e);
+            }
+            if method.name == "EnergyUCB" {
+                ucb_row = row.clone();
+            }
+            push_row(method.name, &row, &mut table, &mut csv, &mut json_rows);
+        }
+        table.rule();
+
+        // Saved Energy and Energy Regret rows (vs our measured statics).
+        let saved: Vec<f64> = (0..apps.len())
+            .map(|a| static_energy[freqs.k() - 1][a] - ucb_row[a])
+            .collect();
+        let best_static: Vec<f64> = (0..apps.len())
+            .map(|a| {
+                (0..freqs.k())
+                    .map(|arm| static_energy[arm][a])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let regret: Vec<f64> =
+            (0..apps.len()).map(|a| ucb_row[a] - best_static[a]).collect();
+        push_row("Saved Energy", &saved, &mut table, &mut csv, &mut json_rows);
+        push_row("Energy Regret", &regret, &mut table, &mut csv, &mut json_rows);
+
+        report.push_text(table.render());
+
+        // Paper-vs-ours for the EnergyUCB row (full mode only; quick mode
+        // rescales the workload so absolute kJ differ by design).
+        if !ctx.quick {
+            let mut cmp = Table::new(vec!["app", "EnergyUCB kJ (ours)", "paper", "Δ%"]);
+            let paper_row = &paper::TABLE1_DYNAMIC[7];
+            for (a, app) in apps.iter().enumerate() {
+                let dev = super::report::rel_dev(ucb_row[a], paper_row.kj[a]);
+                cmp.row(vec![
+                    app.name.to_string(),
+                    fnum_sep(ucb_row[a], 2),
+                    fnum_sep(paper_row.kj[a], 2),
+                    format!("{:+.2}", dev * 100.0),
+                ]);
+            }
+            report.push_text("\nEnergyUCB vs paper:\n");
+            report.push_text(cmp.render());
+        }
+
+        // Shape assertions recorded in the report.
+        let wins = (0..apps.len())
+            .filter(|&a| saved[a] > 0.0)
+            .count();
+        report.push_text(format!(
+            "EnergyUCB saves energy vs the 1.6 GHz default on {wins}/{} apps; \
+             mean energy regret {:.2} kJ.",
+            apps.len(),
+            mean(&regret)
+        ));
+        report.json.set("rows", Json::Arr(json_rows));
+        report.json.set("saved_energy", saved);
+        report.json.set("energy_regret", regret);
+        let _ = csv.write_to(&ctx.out_dir.join("table1.csv"));
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_matches_paper_rows() {
+        let methods = dynamic_methods(9);
+        let names: Vec<&str> = methods.iter().map(|m| m.name).collect();
+        let paper_names: Vec<&str> =
+            paper::TABLE1_DYNAMIC.iter().map(|r| r.method).collect();
+        assert_eq!(names, paper_names);
+    }
+
+    #[test]
+    fn drlcap_scaling_applies() {
+        let m = &dynamic_methods(9)[4];
+        assert_eq!(m.name, "DRLCap");
+        assert!(m.pretrain_scaled);
+        // Synthetic result: 1000 J total, uniform accumulation.
+        let res = RunResult {
+            metrics: crate::control::RunMetrics {
+                app: "x".into(),
+                policy: "DRLCap".into(),
+                gpu_energy_kj: 1.0,
+                exec_time_s: 1.0,
+                switches: 0,
+                switch_energy_j: 0.0,
+                switch_time_s: 0.0,
+                cumulative_regret: 0.0,
+                steps: 100,
+            },
+            trace: None,
+            energy_checkpoints_j: (1..=100).map(|i| i as f64 * 10.0).collect(),
+        };
+        let scored = scored_energy_kj(m, &res);
+        // E20 = 200 J, scaled = 1.25*200 + 800 = 1050 J.
+        assert!((scored - 1.05).abs() < 1e-9, "{scored}");
+    }
+
+    #[test]
+    fn quick_table1_shape() {
+        // Quick mode: shrunk workloads, 2 reps — verifies the full table
+        // machinery end-to-end.
+        let ctx = ExpContext {
+            quick: true,
+            reps: 1,
+            out_dir: std::env::temp_dir().join("energyucb_t1_test"),
+            ..ExpContext::default()
+        };
+        let report = Table1.run(&ctx).unwrap();
+        assert!(report.text.contains("EnergyUCB"));
+        assert!(report.text.contains("Saved Energy"));
+        // EnergyUCB should beat RRFreq on most apps.
+        let rows = match report.json.get("rows") {
+            Some(Json::Arr(rows)) => rows.clone(),
+            _ => panic!(),
+        };
+        let find = |name: &str| -> Vec<f64> {
+            rows.iter()
+                .find(|r| matches!(r.get("method"), Some(Json::Str(s)) if s == name))
+                .map(|r| match r.get("kj") {
+                    Some(Json::Arr(xs)) => xs
+                        .iter()
+                        .map(|x| match x {
+                            Json::Num(v) => *v,
+                            _ => 0.0,
+                        })
+                        .collect(),
+                    _ => vec![],
+                })
+                .unwrap()
+        };
+        let ucb = find("EnergyUCB");
+        let rr = find("RRFreq");
+        let wins = ucb.iter().zip(&rr).filter(|(u, r)| u < r).count();
+        assert!(wins >= 6, "EnergyUCB beats RRFreq on {wins}/9");
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("energyucb_t1_test"));
+    }
+}

@@ -1,0 +1,217 @@
+//! HLO-backed fleet engine: drives the AOT-compiled `fleet_step` artifact
+//! through PJRT, one `execute` per decision interval for the whole batch.
+//!
+//! The rust side owns the RNG (noise is an input), so a trajectory is fully
+//! determined by (artifact, params, hyper, seed) and can be cross-validated
+//! against [`super::native`].
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::state::{FleetHyper, FleetParams, FleetState};
+use crate::runtime::{literal, LoadedModule, XlaRuntime};
+use crate::util::Rng;
+
+/// Scan chunk size the AOT export uses (aot.py --scan-steps).
+pub const SCAN_STEPS: usize = 16;
+
+/// The compiled fleet-step executable plus its constant input literals.
+pub struct FleetEngine {
+    module: LoadedModule,
+    /// Multi-step (lax.scan) variant: S steps per execute. Loaded when the
+    /// artifact exists; `run` prefers it (EXPERIMENTS.md §Perf: ~7x).
+    scan_module: Option<LoadedModule>,
+    params: FleetParams,
+    hyper: FleetHyper,
+    /// Pre-built constant literals (params + hyper), reused every step.
+    const_inputs: Vec<xla::Literal>,
+}
+
+impl FleetEngine {
+    /// Load `fleet_step_b{B}.hlo.txt` (and the scan variant if present)
+    /// for the batch size of `params`.
+    pub fn load(
+        runtime: &XlaRuntime,
+        artifact_dir: &Path,
+        params: FleetParams,
+        hyper: FleetHyper,
+    ) -> Result<FleetEngine> {
+        let name = format!("fleet_step_b{}.hlo.txt", params.b);
+        let path = artifact_dir.join(&name);
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` (batch sizes are fixed at export)",
+                path.display()
+            );
+        }
+        let module = runtime.load_hlo_text(&path).context("loading fleet_step")?;
+        let scan_path =
+            artifact_dir.join(format!("fleet_scan_b{}_s{SCAN_STEPS}.hlo.txt", params.b));
+        let scan_module = if scan_path.exists() {
+            Some(runtime.load_hlo_text(&scan_path).context("loading fleet_scan")?)
+        } else {
+            None
+        };
+        let const_inputs = Self::build_const_inputs(&params, &hyper)?;
+        Ok(FleetEngine { module, scan_module, params, hyper, const_inputs })
+    }
+
+    /// Whether the multi-step scan artifact is available.
+    pub fn has_scan(&self) -> bool {
+        self.scan_module.is_some()
+    }
+
+    fn build_const_inputs(params: &FleetParams, hyper: &FleetHyper) -> Result<Vec<xla::Literal>> {
+        let (b, k) = (params.b, params.k);
+        Ok(vec![
+            literal::mat_f32(&params.reward_mean, b, k)?,
+            literal::mat_f32(&params.reward_sigma, b, k)?,
+            literal::mat_f32(&params.energy_step, b, k)?,
+            literal::mat_f32(&params.progress, b, k)?,
+            literal::mat_f32(&params.feasible, b, k)?,
+            // noise is per-step; hyper scalars:
+            literal::scalar_f32(hyper.alpha),
+            literal::scalar_f32(hyper.lambda),
+            literal::scalar_f32(hyper.mu_init),
+            literal::scalar_f32(hyper.prior_n),
+        ])
+    }
+
+    pub fn params(&self) -> &FleetParams {
+        &self.params
+    }
+
+    pub fn hyper(&self) -> &FleetHyper {
+        &self.hyper
+    }
+
+    /// Advance the fleet one interval through the compiled artifact.
+    /// Input order must match python/compile/model.py.
+    ///
+    /// Perf note (§Perf in EXPERIMENTS.md): the five (B, K) parameter
+    /// matrices and four hyper scalars are *borrowed* from the pre-built
+    /// constant literals — only the state (~6 B·K f32) is re-packed per
+    /// step. Cloning the constants per step cost ~35 % at B = 1024.
+    pub fn step(&self, state: &mut FleetState, noise: &[f32]) -> Result<Vec<i32>> {
+        let (b, k) = (state.b, state.k);
+        assert_eq!(b, self.params.b, "state batch != engine batch");
+        let state_lits: [xla::Literal; 9] = [
+            literal::mat_f32(&state.n, b, k)?,
+            literal::mat_f32(&state.mean, b, k)?,
+            literal::vec_i32(&state.prev),
+            literal::scalar_f32(state.t),
+            literal::vec_f32(&state.remaining),
+            literal::vec_f32(&state.cum_energy),
+            literal::vec_f32(&state.cum_regret),
+            literal::vec_f32(&state.switches),
+            literal::vec_f32(noise),
+        ];
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(18);
+        inputs.extend(&state_lits[0..8]);
+        inputs.extend(&self.const_inputs[0..5]); // params, borrowed
+        inputs.push(&state_lits[8]); // noise
+        inputs.extend(&self.const_inputs[5..9]); // hyper scalars, borrowed
+
+        let outputs = self.module.run_borrowed(&inputs)?;
+        if outputs.len() != 9 {
+            bail!("fleet_step returned {} outputs, expected 9", outputs.len());
+        }
+        state.n = literal::to_vec_f32(&outputs[0])?;
+        state.mean = literal::to_vec_f32(&outputs[1])?;
+        state.prev = literal::to_vec_i32(&outputs[2])?;
+        state.t = literal::to_scalar_f32(&outputs[3])?;
+        state.remaining = literal::to_vec_f32(&outputs[4])?;
+        state.cum_energy = literal::to_vec_f32(&outputs[5])?;
+        state.cum_regret = literal::to_vec_f32(&outputs[6])?;
+        state.switches = literal::to_vec_f32(&outputs[7])?;
+        literal::to_vec_i32(&outputs[8])
+    }
+
+    /// Advance `SCAN_STEPS` intervals in ONE execute via the scanned
+    /// artifact. `noise_seq` is step-major (S × B). Returns the last
+    /// step's selections.
+    pub fn step_scan(&self, state: &mut FleetState, noise_seq: &[f32]) -> Result<Vec<i32>> {
+        let Some(scan) = &self.scan_module else {
+            bail!("scan artifact not loaded");
+        };
+        let (b, k) = (state.b, state.k);
+        assert_eq!(noise_seq.len(), SCAN_STEPS * b, "noise must be (S, B)");
+        let state_lits: [xla::Literal; 9] = [
+            literal::mat_f32(&state.n, b, k)?,
+            literal::mat_f32(&state.mean, b, k)?,
+            literal::vec_i32(&state.prev),
+            literal::scalar_f32(state.t),
+            literal::vec_f32(&state.remaining),
+            literal::vec_f32(&state.cum_energy),
+            literal::vec_f32(&state.cum_regret),
+            literal::vec_f32(&state.switches),
+            literal::mat_f32(noise_seq, SCAN_STEPS, b)?,
+        ];
+        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(18);
+        inputs.extend(&state_lits[0..8]);
+        inputs.extend(&self.const_inputs[0..5]);
+        inputs.push(&state_lits[8]);
+        inputs.extend(&self.const_inputs[5..9]);
+        let outputs = scan.run_borrowed(&inputs)?;
+        if outputs.len() != 9 {
+            bail!("fleet_scan returned {} outputs, expected 9", outputs.len());
+        }
+        state.n = literal::to_vec_f32(&outputs[0])?;
+        state.mean = literal::to_vec_f32(&outputs[1])?;
+        state.prev = literal::to_vec_i32(&outputs[2])?;
+        state.t = literal::to_scalar_f32(&outputs[3])?;
+        state.remaining = literal::to_vec_f32(&outputs[4])?;
+        state.cum_energy = literal::to_vec_f32(&outputs[5])?;
+        state.cum_regret = literal::to_vec_f32(&outputs[6])?;
+        state.switches = literal::to_vec_f32(&outputs[7])?;
+        literal::to_vec_i32(&outputs[8])
+    }
+
+    /// Run until every environment completes (or `max_steps`). Prefers the
+    /// scanned artifact (S steps per execute) when available, finishing
+    /// the tail with single steps. Returns the steps taken.
+    pub fn run(&self, state: &mut FleetState, rng: &mut Rng, max_steps: u64) -> Result<u64> {
+        let mut steps = 0;
+        if self.has_scan() {
+            while !state.all_done() && steps + SCAN_STEPS as u64 <= max_steps {
+                let mut noise_seq = Vec::with_capacity(SCAN_STEPS * state.b);
+                for s in 0..SCAN_STEPS {
+                    noise_seq.extend(super::native::step_noise(
+                        &self.params,
+                        steps + s as u64,
+                        rng,
+                    ));
+                }
+                self.step_scan(state, &noise_seq)?;
+                steps += SCAN_STEPS as u64;
+            }
+        }
+        while !state.all_done() && steps < max_steps {
+            let noise = super::native::step_noise(&self.params, steps, rng);
+            self.step(state, &noise)?;
+            steps += 1;
+        }
+        Ok(steps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent behavior is covered by rust/tests/fleet_cross.rs
+    // (integration), which needs the artifacts built. Unit scope here is
+    // limited to input packing arity.
+    use super::*;
+    use crate::sim::freq::FreqDomain;
+    use crate::workload::calibration;
+
+    #[test]
+    fn const_inputs_have_expected_arity() {
+        let freqs = FreqDomain::aurora();
+        let app = calibration::app("tealeaf").unwrap();
+        let params = FleetParams::from_apps(&[&app], &freqs, 0.01);
+        let consts =
+            FleetEngine::build_const_inputs(&params, &FleetHyper::default()).unwrap();
+        assert_eq!(consts.len(), 9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Vectorized fleet Monte Carlo: B independent bandit environments
+//! advanced in lockstep, either through the AOT-compiled HLO artifact
+//! ([`engine::FleetEngine`], PJRT) or the bit-compatible pure-Rust
+//! reference ([`native`]). Used for seed-variance studies, regret-curve
+//! averaging, and the paper's fleet-scale energy extrapolation.
+
+pub mod engine;
+pub mod native;
+pub mod state;
+
+pub use engine::FleetEngine;
+pub use state::{FleetHyper, FleetParams, FleetState};

@@ -1,0 +1,213 @@
+//! Fleet state and per-environment parameters for the vectorized Monte
+//! Carlo engine.
+//!
+//! A fleet is B independent (app, seed) bandit environments advanced in
+//! lockstep. The parameter block holds each environment's calibrated
+//! per-arm quantities (normalized expected reward, reward noise, Joules and
+//! progress per interval, QoS mask); the state block is the controllers'
+//! learned state plus accounting. Layouts are row-major (B, K) f32,
+//! matching the AOT artifact contract in `python/compile/model.py`.
+
+use crate::sim::freq::FreqDomain;
+use crate::workload::model::AppModel;
+
+/// Hyper-parameters fed to the step (matches `EnergyUcbConfig` semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct FleetHyper {
+    pub alpha: f32,
+    pub lambda: f32,
+    pub mu_init: f32,
+    pub prior_n: f32,
+}
+
+impl Default for FleetHyper {
+    fn default() -> Self {
+        let c = crate::bandit::energyucb::EnergyUcbConfig::default();
+        FleetHyper {
+            alpha: c.alpha as f32,
+            lambda: c.lambda as f32,
+            mu_init: c.mu_init as f32,
+            prior_n: c.prior_n as f32,
+        }
+    }
+}
+
+/// Per-environment calibrated parameters, row-major (B, K).
+#[derive(Clone, Debug)]
+pub struct FleetParams {
+    pub b: usize,
+    pub k: usize,
+    pub reward_mean: Vec<f32>,
+    pub reward_sigma: Vec<f32>,
+    pub energy_step: Vec<f32>,
+    pub progress: Vec<f32>,
+    pub feasible: Vec<f32>,
+    /// Early-window noise inflation per env (multiplier, steps).
+    pub early_mult: Vec<f32>,
+    pub early_steps: Vec<u32>,
+}
+
+impl FleetParams {
+    /// Build a fleet from `(app)` assignments, one env per entry; the
+    /// reward normalization scale is |true reward at the max frequency|
+    /// (the arm every run starts from).
+    pub fn from_apps(apps: &[&AppModel], freqs: &FreqDomain, dt_s: f64) -> FleetParams {
+        let b = apps.len();
+        let k = freqs.k();
+        let mut p = FleetParams {
+            b,
+            k,
+            reward_mean: vec![0.0; b * k],
+            reward_sigma: vec![0.0; b * k],
+            energy_step: vec![0.0; b * k],
+            progress: vec![0.0; b * k],
+            feasible: vec![1.0; b * k],
+            early_mult: vec![1.0; b],
+            early_steps: vec![0; b],
+        };
+        for (e, app) in apps.iter().enumerate() {
+            let scale = app.true_reward(freqs, freqs.max_arm(), dt_s).abs();
+            // Combined relative reward noise: energy counter noise plus the
+            // utilization-ratio contribution (first-order).
+            let rel_noise = app.noise.energy_frac
+                + app.noise.util_std * (1.0 / app.core_util + 1.0);
+            for i in 0..k {
+                let idx = e * k + i;
+                let mu = app.true_reward(freqs, i, dt_s) / scale;
+                p.reward_mean[idx] = mu as f32;
+                p.reward_sigma[idx] = (mu.abs() * rel_noise) as f32;
+                p.energy_step[idx] = app.energy_per_step_j(freqs, i, dt_s) as f32;
+                p.progress[idx] = app.progress_per_step(freqs, i, dt_s) as f32;
+            }
+            p.early_mult[e] = app.noise.early_mult as f32;
+            p.early_steps[e] = (app.noise.early_window_s / dt_s).round() as u32;
+        }
+        p
+    }
+
+    /// Apply a QoS feasibility mask from a slowdown budget (oracle mask —
+    /// the fleet engine models the constrained variant's steady state).
+    pub fn constrain(&mut self, apps: &[&AppModel], freqs: &FreqDomain, delta: f64) {
+        assert_eq!(apps.len(), self.b);
+        for (e, app) in apps.iter().enumerate() {
+            for i in 0..self.k {
+                let feasible = i == self.k - 1 || app.slowdown(freqs, i) <= delta;
+                self.feasible[e * self.k + i] = if feasible { 1.0 } else { 0.0 };
+            }
+        }
+    }
+
+    /// Best (feasible) normalized reward per env.
+    pub fn best_reward(&self, e: usize) -> f32 {
+        let row = &self.reward_mean[e * self.k..(e + 1) * self.k];
+        let feas = &self.feasible[e * self.k..(e + 1) * self.k];
+        row.iter()
+            .zip(feas)
+            .filter(|(_, &f)| f > 0.0)
+            .map(|(r, _)| *r)
+            .fold(f32::NEG_INFINITY, f32::max)
+    }
+}
+
+/// Mutable fleet state (controllers + accounting).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetState {
+    pub b: usize,
+    pub k: usize,
+    pub n: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub prev: Vec<i32>,
+    pub t: f32,
+    pub remaining: Vec<f32>,
+    pub cum_energy: Vec<f32>,
+    pub cum_regret: Vec<f32>,
+    pub switches: Vec<f32>,
+}
+
+impl FleetState {
+    /// Fresh fleet: everything zero, previous arm = the max frequency
+    /// (Aurora's default), full remaining work.
+    pub fn fresh(b: usize, k: usize) -> FleetState {
+        FleetState {
+            b,
+            k,
+            n: vec![0.0; b * k],
+            mean: vec![0.0; b * k],
+            prev: vec![(k - 1) as i32; b],
+            t: 1.0,
+            remaining: vec![1.0; b],
+            cum_energy: vec![0.0; b],
+            cum_regret: vec![0.0; b],
+            switches: vec![0.0; b],
+        }
+    }
+
+    /// All environments finished?
+    pub fn all_done(&self) -> bool {
+        self.remaining.iter().all(|&r| r <= 0.0)
+    }
+
+    /// Number of still-running environments.
+    pub fn active_count(&self) -> usize {
+        self.remaining.iter().filter(|&&r| r > 0.0).count()
+    }
+
+    /// Total energy in kJ per env.
+    pub fn energy_kj(&self, e: usize) -> f64 {
+        self.cum_energy[e] as f64 / 1_000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::calibration;
+
+    #[test]
+    fn params_from_apps_shapes() {
+        let freqs = FreqDomain::aurora();
+        let a = calibration::app("tealeaf").unwrap();
+        let b = calibration::app("lbm").unwrap();
+        let apps = vec![&a, &b];
+        let p = FleetParams::from_apps(&apps, &freqs, 0.01);
+        assert_eq!(p.b, 2);
+        assert_eq!(p.k, 9);
+        assert_eq!(p.reward_mean.len(), 18);
+        // Normalization: reward at max arm = -1.
+        assert!((p.reward_mean[8] - (-1.0)).abs() < 1e-6);
+        assert!((p.reward_mean[9 + 8] - (-1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn best_reward_is_energy_optimum() {
+        let freqs = FreqDomain::aurora();
+        let a = calibration::app("tealeaf").unwrap();
+        let p = FleetParams::from_apps(&[&a], &freqs, 0.01);
+        let best_arm = a.optimal_arm();
+        let row = &p.reward_mean[0..9];
+        let argmax = crate::util::stats::argmax(&row.iter().map(|x| *x as f64).collect::<Vec<_>>());
+        assert_eq!(argmax, best_arm);
+    }
+
+    #[test]
+    fn constrain_masks_slow_arms() {
+        let freqs = FreqDomain::aurora();
+        let a = calibration::app("clvleaf").unwrap();
+        let mut p = FleetParams::from_apps(&[&a], &freqs, 0.01);
+        p.constrain(&[&a], &freqs, 0.05);
+        // clvleaf theta=0.5: arm 0 slowdown 0.5 -> masked; arm 8 always ok.
+        assert_eq!(p.feasible[0], 0.0);
+        assert_eq!(p.feasible[8], 1.0);
+        // Some mid arm feasible: s(1.5GHz) = 0.5*(1.6/1.5-1) = 0.033.
+        assert_eq!(p.feasible[7], 1.0);
+    }
+
+    #[test]
+    fn fresh_state_invariants() {
+        let s = FleetState::fresh(4, 9);
+        assert!(!s.all_done());
+        assert_eq!(s.active_count(), 4);
+        assert!(s.prev.iter().all(|&p| p == 8));
+        assert_eq!(s.t, 1.0);
+    }
+}

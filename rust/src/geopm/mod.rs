@@ -1,0 +1,14 @@
+//! Simulated GEOPM (Global Extensible Open Power Manager) stack.
+//!
+//! Mirrors the real tool's split (paper §4.1): the **service** grants
+//! user-level access to hardware signals and controls; the **runtime**
+//! drives an agent loop that adjusts settings from real-time telemetry.
+//! All controller↔hardware interaction goes through here.
+
+pub mod runtime;
+pub mod service;
+pub mod signals;
+
+pub use runtime::{Agent, AgentObs, Runtime, RuntimeReport};
+pub use service::{Service, ServiceError, ServiceSample};
+pub use signals::{Control, Signal};

@@ -1,0 +1,177 @@
+//! The (simulated) GEOPM runtime: the agent loop.
+//!
+//! Mirrors real GEOPM's runtime component: every sampling period (10 ms,
+//! matching the paper) it reads the service's counters, derives the
+//! per-interval observation an energy agent consumes (energy delta,
+//! core/uncore utilization, progress delta), asks the agent for a frequency
+//! decision, and writes the control back. Agents are the pluggable policy
+//! surface — EnergyUCB, the baselines, and the RL controllers all implement
+//! [`Agent`].
+
+use super::service::{Service, ServiceError, ServiceSample};
+use super::signals::Control;
+
+/// Per-interval observation handed to the agent, derived purely from
+/// service signals (the controller-visible world).
+#[derive(Clone, Copy, Debug)]
+pub struct AgentObs {
+    /// Decision index, 1-based.
+    pub t: u64,
+    /// Measured GPU energy over the interval, Joules.
+    pub energy_j: f64,
+    /// Aggregate core-engine utilization in [0, 1].
+    pub core_util: f64,
+    /// Aggregate uncore-engine utilization in [0, 1].
+    pub uncore_util: f64,
+    /// Progress made this interval (fraction of the app).
+    pub progress: f64,
+    /// Arm in effect during the interval.
+    pub arm: usize,
+    /// Whether this interval paid a switch.
+    pub switched: bool,
+}
+
+/// An energy-management agent: decides the next frequency arm.
+pub trait Agent {
+    /// Called once per interval with the previous interval's observation;
+    /// returns the arm for the next interval. `obs` is `None` on the very
+    /// first call (no telemetry yet).
+    fn decide(&mut self, obs: Option<&AgentObs>, k: usize) -> usize;
+}
+
+/// Outcome of a completed agent-driven run.
+#[derive(Clone, Debug)]
+pub struct RuntimeReport {
+    pub steps: u64,
+    /// Every interval observation, in order (empty if recording disabled).
+    pub observations: Vec<AgentObs>,
+}
+
+/// The runtime loop driving one agent against one service.
+pub struct Runtime {
+    service: Service,
+    record: bool,
+}
+
+impl Runtime {
+    pub fn new(service: Service) -> Runtime {
+        Runtime { service, record: false }
+    }
+
+    /// Record all observations in the report (costs memory on long runs).
+    pub fn recording(mut self, on: bool) -> Runtime {
+        self.record = on;
+        self
+    }
+
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+
+    /// Drive the agent until application completion (or `max_steps`).
+    pub fn run(&mut self, agent: &mut dyn Agent, max_steps: u64) -> Result<RuntimeReport, ServiceError> {
+        let k = self.service.k();
+        let mut t: u64 = 0;
+        let mut last: Option<AgentObs> = None;
+        let mut observations = Vec::new();
+        while !self.service.done() && t < max_steps {
+            t += 1;
+            let arm = agent.decide(last.as_ref(), k);
+            self.service.write(Control::GpuFrequency(arm))?;
+            let ServiceSample { obs, arm, switched } = self.service.sample()?;
+            let agent_obs = AgentObs {
+                t,
+                energy_j: obs.gpu_energy_j,
+                core_util: obs.core_util,
+                uncore_util: obs.uncore_util,
+                progress: obs.progress,
+                arm,
+                switched,
+            };
+            if self.record {
+                observations.push(agent_obs);
+            }
+            last = Some(agent_obs);
+        }
+        Ok(RuntimeReport { steps: t, observations })
+    }
+
+    /// Consume the runtime and return the service for final accounting.
+    pub fn into_service(self) -> Service {
+        self.service
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::freq::FreqDomain;
+    use crate::sim::node::Node;
+    use crate::workload::calibration;
+
+    struct FixedAgent(usize);
+    impl Agent for FixedAgent {
+        fn decide(&mut self, _obs: Option<&AgentObs>, _k: usize) -> usize {
+            self.0
+        }
+    }
+
+    struct CyclingAgent;
+    impl Agent for CyclingAgent {
+        fn decide(&mut self, obs: Option<&AgentObs>, k: usize) -> usize {
+            match obs {
+                None => 0,
+                Some(o) => (o.arm + 1) % k,
+            }
+        }
+    }
+
+    fn mk_runtime(app: &str, seed: u64) -> Runtime {
+        let node = Node::new(calibration::app(app).unwrap(), FreqDomain::aurora(), 0.01, seed);
+        Runtime::new(Service::new(node))
+    }
+
+    #[test]
+    fn fixed_agent_runs_to_completion() {
+        let mut rt = mk_runtime("clvleaf", 1);
+        let mut agent = FixedAgent(8);
+        let report = rt.run(&mut agent, 1_000_000).unwrap();
+        assert!(rt.service().done());
+        // clvleaf @1.6 GHz: ~40 s / 10 ms.
+        assert!((report.steps as f64 - 4000.0).abs() < 40.0, "{}", report.steps);
+        let totals = rt.service().totals();
+        assert!((totals.gpu_energy_kj - 100.65).abs() < 0.8, "{}", totals.gpu_energy_kj);
+    }
+
+    #[test]
+    fn cycling_agent_switches_every_step() {
+        let mut rt = mk_runtime("tealeaf", 2);
+        let mut agent = CyclingAgent;
+        rt.run(&mut agent, 500).unwrap();
+        let totals = rt.service().totals();
+        // Every decision changes frequency (9-cycle).
+        assert!(totals.switches >= 499, "{}", totals.switches);
+    }
+
+    #[test]
+    fn recording_captures_observations() {
+        let mut rt = mk_runtime("clvleaf", 3).recording(true);
+        let mut agent = FixedAgent(4);
+        let report = rt.run(&mut agent, 100).unwrap();
+        assert_eq!(report.observations.len(), 100);
+        let o = &report.observations[50];
+        assert_eq!(o.arm, 4);
+        assert!(o.energy_j > 0.0);
+        assert!(o.core_util > 0.0 && o.core_util <= 1.0);
+        assert!(o.progress > 0.0);
+    }
+
+    #[test]
+    fn max_steps_bounds_run() {
+        let mut rt = mk_runtime("sph_exa", 4);
+        let mut agent = FixedAgent(8);
+        let report = rt.run(&mut agent, 10).unwrap();
+        assert_eq!(report.steps, 10);
+        assert!(!rt.service().done());
+    }
+}

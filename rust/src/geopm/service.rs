@@ -1,0 +1,191 @@
+//! The (simulated) GEOPM service: secure, user-level access to hardware
+//! telemetry and control.
+//!
+//! The service owns the [`Node`] and mediates every interaction: agents
+//! read cumulative signals, write the frequency control, and ask the
+//! service to advance one sampling interval. This is the same
+//! service/runtime split as real GEOPM — the agent below never sees the
+//! device model, only counters.
+
+use super::signals::{Control, Signal};
+use crate::sim::node::{Node, NodeObservation, NodeTotals};
+use crate::sim::counters::EngineGroup;
+
+/// Error type for signal/control access.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ServiceError {
+    #[error("unknown signal: {0}")]
+    UnknownSignal(String),
+    #[error("control out of range: arm {arm} >= K {k}")]
+    ControlOutOfRange { arm: usize, k: usize },
+    #[error("application already completed")]
+    Completed,
+}
+
+/// One sampling interval's service-side record (what a `geopmread` batch
+/// would return, already diffed for convenience).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceSample {
+    pub obs: NodeObservation,
+    /// Arm in effect during the interval.
+    pub arm: usize,
+    /// Whether the interval performed a frequency transition.
+    pub switched: bool,
+}
+
+/// The simulated GEOPM service for one node.
+#[derive(Debug)]
+pub struct Service {
+    node: Node,
+    pending_arm: usize,
+    cum_progress: f64,
+}
+
+impl Service {
+    pub fn new(node: Node) -> Service {
+        let pending_arm = node.frequency();
+        Service { node, pending_arm, cum_progress: 0.0 }
+    }
+
+    /// Number of frequency arms.
+    pub fn k(&self) -> usize {
+        self.node.freqs().k()
+    }
+
+    /// Sampling period, seconds.
+    pub fn period_s(&self) -> f64 {
+        self.node.dt_s()
+    }
+
+    /// Cumulative signal read (PlatformIO style).
+    pub fn read(&self, signal: Signal) -> f64 {
+        match signal {
+            // Sum of the per-GPU monotonic counters — the measured path.
+            Signal::GpuEnergy => self.node.counter_energy_j(),
+            Signal::GpuCoreActiveTime => self.node.engine_active_s(EngineGroup::Compute),
+            Signal::GpuUncoreActiveTime => self.node.engine_active_s(EngineGroup::Copy),
+            Signal::Time => self.node.elapsed_s(),
+            Signal::AppProgress => self.cum_progress,
+            Signal::CpuEnergy => self.node.totals().cpu_energy_kj * 1_000.0,
+        }
+    }
+
+    /// Read by GEOPM signal name (CLI surface).
+    pub fn read_by_name(&self, name: &str) -> Result<f64, ServiceError> {
+        let s = Signal::from_name(name).ok_or_else(|| ServiceError::UnknownSignal(name.into()))?;
+        Ok(self.read(s))
+    }
+
+    /// Write a control to take effect at the next sample.
+    pub fn write(&mut self, control: Control) -> Result<(), ServiceError> {
+        match control {
+            Control::GpuFrequency(arm) => {
+                if arm >= self.k() {
+                    return Err(ServiceError::ControlOutOfRange { arm, k: self.k() });
+                }
+                self.pending_arm = arm;
+                Ok(())
+            }
+        }
+    }
+
+    /// Advance one sampling interval under the pending control.
+    pub fn sample(&mut self) -> Result<ServiceSample, ServiceError> {
+        if self.node.done() {
+            return Err(ServiceError::Completed);
+        }
+        let arm = self.pending_arm;
+        let switched = arm != self.node.frequency();
+        let obs = self.node.step(arm);
+        self.cum_progress += obs.progress;
+        Ok(ServiceSample { obs, arm, switched })
+    }
+
+    pub fn done(&self) -> bool {
+        self.node.done()
+    }
+
+    pub fn totals(&self) -> NodeTotals {
+        self.node.totals()
+    }
+
+    pub fn node(&self) -> &Node {
+        &self.node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::freq::FreqDomain;
+    use crate::workload::calibration;
+
+    fn mk() -> Service {
+        let node = Node::new(
+            calibration::app("tealeaf").unwrap(),
+            FreqDomain::aurora(),
+            0.01,
+            1,
+        );
+        Service::new(node)
+    }
+
+    #[test]
+    fn control_validation() {
+        let mut s = mk();
+        assert!(s.write(Control::GpuFrequency(0)).is_ok());
+        assert_eq!(
+            s.write(Control::GpuFrequency(99)),
+            Err(ServiceError::ControlOutOfRange { arm: 99, k: 9 })
+        );
+    }
+
+    #[test]
+    fn sample_applies_pending_control() {
+        let mut s = mk();
+        s.write(Control::GpuFrequency(2)).unwrap();
+        let smp = s.sample().unwrap();
+        assert_eq!(smp.arm, 2);
+        assert!(smp.switched);
+        // Second sample at the same arm: no switch.
+        let smp = s.sample().unwrap();
+        assert_eq!(smp.arm, 2);
+        assert!(!smp.switched);
+    }
+
+    #[test]
+    fn signals_progress_monotonically() {
+        let mut s = mk();
+        let mut last_t = -1.0;
+        let mut last_p = -1.0;
+        for _ in 0..100 {
+            s.sample().unwrap();
+            let t = s.read(Signal::Time);
+            let p = s.read(Signal::AppProgress);
+            assert!(t > last_t);
+            assert!(p > last_p);
+            last_t = t;
+            last_p = p;
+        }
+        assert!((last_t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn read_by_name() {
+        let s = mk();
+        assert!(s.read_by_name("TIME").is_ok());
+        assert!(matches!(
+            s.read_by_name("BOGUS"),
+            Err(ServiceError::UnknownSignal(_))
+        ));
+    }
+
+    #[test]
+    fn sample_after_completion_errors() {
+        let mut s = mk();
+        while !s.done() {
+            s.sample().unwrap();
+        }
+        assert_eq!(s.sample().unwrap_err(), ServiceError::Completed);
+    }
+}

@@ -1,0 +1,92 @@
+//! Signal and control names exposed by the (simulated) GEOPM service.
+//!
+//! Mirrors the real GEOPM PlatformIO naming style: flat string-addressable
+//! signals with board/GPU domains. The controller reads signals and writes
+//! controls; it never touches the device model directly.
+
+use std::fmt;
+
+/// Telemetry signals the service exposes (cumulative counters unless noted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Signal {
+    /// Total GPU energy across the node, Joules ("GPU::ENERGY").
+    GpuEnergy,
+    /// Aggregate compute-engine active time, seconds ("GPU::CORE_ACTIVE_TIME").
+    GpuCoreActiveTime,
+    /// Aggregate copy-engine active time, seconds ("GPU::UNCORE_ACTIVE_TIME").
+    GpuUncoreActiveTime,
+    /// Node uptime, seconds ("TIME").
+    Time,
+    /// Application progress in [0,1] ("EPOCH::PROGRESS", via geopm_prof).
+    AppProgress,
+    /// CPU package energy, Joules ("CPU::ENERGY").
+    CpuEnergy,
+}
+
+impl Signal {
+    pub const ALL: [Signal; 6] = [
+        Signal::GpuEnergy,
+        Signal::GpuCoreActiveTime,
+        Signal::GpuUncoreActiveTime,
+        Signal::Time,
+        Signal::AppProgress,
+        Signal::CpuEnergy,
+    ];
+
+    /// GEOPM-style signal name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Signal::GpuEnergy => "GPU::ENERGY",
+            Signal::GpuCoreActiveTime => "GPU::CORE_ACTIVE_TIME",
+            Signal::GpuUncoreActiveTime => "GPU::UNCORE_ACTIVE_TIME",
+            Signal::Time => "TIME",
+            Signal::AppProgress => "EPOCH::PROGRESS",
+            Signal::CpuEnergy => "CPU::ENERGY",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Signal> {
+        Signal::ALL.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+impl fmt::Display for Signal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Controls the service accepts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Control {
+    /// GPU core frequency for all devices, by arm index
+    /// ("GPU::FREQUENCY_CONTROL").
+    GpuFrequency(usize),
+}
+
+impl Control {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Control::GpuFrequency(_) => "GPU::FREQUENCY_CONTROL",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for s in Signal::ALL {
+            assert_eq!(Signal::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Signal::from_name("NOPE"), None);
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(Signal::GpuEnergy.to_string(), "GPU::ENERGY");
+        assert_eq!(Control::GpuFrequency(3).name(), "GPU::FREQUENCY_CONTROL");
+    }
+}

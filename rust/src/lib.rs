@@ -1,0 +1,51 @@
+//! # EnergyUCB — online GPU energy optimization with switching-aware bandits
+//!
+//! A full-system reproduction of *"Online GPU Energy Optimization with
+//! Switching-Aware Bandits"* (WWW '26): the EnergyUCB controller
+//! (switching-aware UCB + optimistic initialization + QoS-constrained
+//! variant), every baseline the paper compares against, and the complete
+//! substrate it runs on — a trace-calibrated Aurora-node simulator with
+//! PVC GPU counter models driven through a GEOPM-like service/runtime
+//! split.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the rust coordinator: policies ([`bandit`],
+//!   [`rl`]), hardware substrate ([`sim`], [`workload`], [`geopm`]),
+//!   control sessions ([`control`]), the experiment harness regenerating
+//!   every table/figure of the paper, and the PJRT-backed fleet engine.
+//! * **L2/L1 (python, build-time only)** — a vectorized bandit+environment
+//!   step (JAX) whose SA-UCB hot loop is a Pallas kernel, AOT-lowered to
+//!   `artifacts/*.hlo.txt` and executed from rust via PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use energyucb::bandit::{EnergyUcb, EnergyUcbConfig, Policy};
+//! use energyucb::control::{run_session, SessionCfg};
+//! use energyucb::workload;
+//!
+//! let app = workload::app("tealeaf").unwrap();
+//! let mut policy = EnergyUcb::new(9, EnergyUcbConfig::default());
+//! let result = run_session(&app, &mut policy, &SessionCfg::default());
+//! println!("energy: {:.2} kJ", result.metrics.gpu_energy_kj);
+//! ```
+
+pub mod bandit;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod control;
+pub mod experiments;
+pub mod geopm;
+pub mod fleet;
+pub mod rl;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+/// Library version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,13 @@
+//! `energyucb` — the leader binary: experiment harness, single-node runs,
+//! and the fleet engine, all behind subcommands (see `energyucb help`).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match energyucb::cli::dispatch(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(err) => {
+            eprintln!("error: {err:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! DRLCap baseline (paper §4.1): deep-RL GPU frequency capping, plus the
+//! paper's two variants.
+//!
+//! The Q-network is a tiny MLP over counter-derived features; training uses
+//! an experience-replay buffer. The paper's evaluation protocol:
+//!
+//! * **DRLCap** — trains during the first 20 % of each execution, then
+//!   deploys the learned policy greedily (the harness scales the remaining
+//!   80 %'s energy by 1.25× for fairness vs fully-online methods);
+//! * **DRLCap-Online** — learns online for the whole run;
+//! * **DRLCap-Cross** — pre-trained on *other* benchmarks, deployed (with
+//!   frozen weights) on the target.
+
+use super::nn::Mlp;
+use super::replay::{ReplayBuffer, Transition};
+use crate::bandit::Policy;
+use crate::util::stats::Ema;
+use crate::util::Rng;
+
+/// Operating mode (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrlCapMode {
+    /// Train for the first `train progress <= 0.2`, deploy greedily after.
+    PretrainDeploy,
+    /// Learn online for the whole execution.
+    Online,
+    /// Frozen pre-trained network (use [`DrlCap::pretrain_on`] first).
+    CrossDeploy,
+}
+
+const HIDDEN: usize = 24;
+const BATCH: usize = 8;
+const REPLAY_CAP: usize = 512;
+/// Train every Nth transition (amortizes the replay sweep; DQN-style
+/// update-to-data ratio < 1).
+const TRAIN_EVERY: u64 = 4;
+
+#[derive(Clone, Debug)]
+pub struct DrlCap {
+    k: usize,
+    mode: DrlCapMode,
+    net: Mlp,
+    replay: ReplayBuffer,
+    gamma: f64,
+    lr: f64,
+    eps0: f64,
+    /// Cumulative application progress (defines the 20 % boundary).
+    progress_done: f64,
+    train_frac: f64,
+    reward_ema: Ema,
+    last_state: Option<Vec<f64>>,
+    last_action: Option<usize>,
+    frozen: bool,
+    t: u64,
+    rng: Rng,
+}
+
+impl DrlCap {
+    pub fn new(k: usize, mode: DrlCapMode, seed: u64) -> DrlCap {
+        DrlCap {
+            k,
+            mode,
+            net: Mlp::new(Self::n_features(k), HIDDEN, k, seed ^ 0xD8_1C4B),
+            replay: ReplayBuffer::new(REPLAY_CAP),
+            gamma: 0.9,
+            lr: 0.01,
+            eps0: 0.25,
+            progress_done: 0.0,
+            train_frac: 0.2,
+            reward_ema: Ema::new(0.05),
+            last_state: None,
+            last_action: None,
+            frozen: mode == DrlCapMode::CrossDeploy,
+            t: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn n_features(k: usize) -> usize {
+        // one-hot arm + [reward, reward_ema, progress_rate, t_frac]
+        k + 4
+    }
+
+    /// Whether the policy is currently learning.
+    pub fn training(&self) -> bool {
+        match self.mode {
+            DrlCapMode::Online => true,
+            DrlCapMode::PretrainDeploy => self.progress_done < self.train_frac,
+            DrlCapMode::CrossDeploy => !self.frozen,
+        }
+    }
+
+    pub fn mode(&self) -> DrlCapMode {
+        self.mode
+    }
+
+    /// The fraction of progress used for training (the 20 % boundary).
+    pub fn train_frac(&self) -> f64 {
+        self.train_frac
+    }
+
+    fn features(&self, arm: usize, reward: f64, progress: f64) -> Vec<f64> {
+        let mut f = vec![0.0; Self::n_features(self.k)];
+        f[arm] = 1.0;
+        f[self.k] = reward;
+        f[self.k + 1] = self.reward_ema.value().unwrap_or(reward);
+        f[self.k + 2] = progress * 1e3; // per-10ms progress, rescaled O(1)
+        f[self.k + 3] = (self.t as f64 / 10_000.0).min(1.0);
+        f
+    }
+
+    fn epsilon(&self) -> f64 {
+        if !self.training() {
+            return 0.0;
+        }
+        // Fully-online DQN needs sustained exploration to keep the value
+        // estimates honest without any pre-training (the paper's
+        // DRLCap-Online converges slowest); the pretrain window can anneal
+        // harder because deployment is greedy afterwards.
+        let floor = match self.mode {
+            DrlCapMode::Online => 0.2,
+            _ => 0.05,
+        };
+        self.eps0.min(300.0 / self.t.max(1) as f64).max(floor)
+    }
+
+    fn greedy(&mut self, state: &[f64]) -> usize {
+        let q = self.net.forward(state);
+        crate::util::stats::argmax(&q.to_vec())
+    }
+
+    fn train_batch(&mut self) {
+        if self.replay.len() < BATCH {
+            return;
+        }
+        // Sample indices first (borrow discipline), then train.
+        let samples: Vec<Transition> = self
+            .replay
+            .sample(BATCH, &mut self.rng)
+            .into_iter()
+            .cloned()
+            .collect();
+        for tr in samples {
+            let max_next = {
+                let q = self.net.forward(&tr.next_state);
+                q.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            };
+            let target = tr.reward + self.gamma * max_next;
+            self.net.sgd_step(&tr.state, tr.action, target, self.lr);
+        }
+    }
+
+    /// Pre-train on transitions from other benchmarks (DRLCap-Cross).
+    /// `episodes` is a list of (state, action, reward, next_state) streams.
+    pub fn pretrain_on(&mut self, transitions: &[Transition], passes: usize) {
+        self.frozen = false;
+        for _ in 0..passes {
+            for tr in transitions {
+                self.replay.push(tr.clone());
+                self.train_batch();
+            }
+        }
+        self.frozen = true;
+    }
+
+    /// Export the replay contents (used to feed Cross pre-training).
+    pub fn replay_snapshot(&self) -> Vec<Transition> {
+        let mut out = Vec::new();
+        let mut rng = Rng::new(0xC0FFEE);
+        if self.replay.is_empty() {
+            return out;
+        }
+        for tr in self.replay.sample(self.replay.len(), &mut rng) {
+            out.push(tr.clone());
+        }
+        out
+    }
+}
+
+impl Policy for DrlCap {
+    fn name(&self) -> String {
+        match self.mode {
+            DrlCapMode::PretrainDeploy => "DRLCap".into(),
+            DrlCapMode::Online => "DRLCap-Online".into(),
+            DrlCapMode::CrossDeploy => "DRLCap-Cross".into(),
+        }
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        self.t = t;
+        let state = match &self.last_state {
+            Some(s) => s.clone(),
+            // Cold start: begin from the default max frequency's context.
+            None => self.features(self.k - 1, -1.0, 0.0),
+        };
+        if self.rng.chance(self.epsilon()) {
+            self.rng.index(self.k)
+        } else {
+            self.greedy(&state)
+        }
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, progress: f64) {
+        self.reward_ema.push(reward);
+        self.progress_done += progress;
+        let next_state = self.features(arm, reward, progress);
+        if let (Some(state), Some(_)) = (&self.last_state, &self.last_action) {
+            if self.training() {
+                self.replay.push(Transition {
+                    state: state.clone(),
+                    action: arm,
+                    reward,
+                    next_state: next_state.clone(),
+                });
+                if self.t % TRAIN_EVERY == 0 {
+                    self.train_batch();
+                }
+            }
+        }
+        self.last_state = Some(next_state);
+        self.last_action = Some(arm);
+    }
+
+    fn reset(&mut self) {
+        // Keep the network for CrossDeploy (that's the whole point);
+        // otherwise re-init.
+        if self.mode != DrlCapMode::CrossDeploy {
+            self.net = Mlp::new(Self::n_features(self.k), HIDDEN, self.k, 0xD8_1C4B);
+            self.replay.clear();
+        }
+        self.progress_done = 0.0;
+        self.reward_ema = Ema::new(0.05);
+        self.last_state = None;
+        self.last_action = None;
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mode_controls_training_window() {
+        let mut p = DrlCap::new(9, DrlCapMode::PretrainDeploy, 1);
+        assert!(p.training());
+        p.progress_done = 0.25;
+        assert!(!p.training());
+        let p = DrlCap::new(9, DrlCapMode::Online, 1);
+        assert!(p.training());
+    }
+
+    #[test]
+    fn greedy_after_training_window() {
+        let mut p = DrlCap::new(9, DrlCapMode::PretrainDeploy, 2);
+        p.progress_done = 0.5;
+        p.t = 10_000;
+        assert_eq!(p.epsilon(), 0.0);
+    }
+
+    #[test]
+    fn learns_to_prefer_good_arm_online() {
+        let means = [-1.4, -1.0, -1.3];
+        let mut p = DrlCap::new(3, DrlCapMode::Online, 3);
+        let mut rng = Rng::new(8);
+        let mut late = [0u64; 3];
+        for t in 1..=8000u64 {
+            let arm = p.select(t);
+            let r = rng.normal(means[arm], 0.05);
+            p.update(arm, r, 1e-4);
+            if t > 6000 {
+                late[arm] += 1;
+            }
+        }
+        assert!(late[1] > late[0] && late[1] > late[2], "{late:?}");
+    }
+
+    #[test]
+    fn cross_deploy_keeps_frozen_weights() {
+        let mut donor = DrlCap::new(3, DrlCapMode::Online, 4);
+        let mut rng = Rng::new(9);
+        for t in 1..=1000u64 {
+            let arm = donor.select(t);
+            donor.update(arm, rng.normal(-1.0, 0.05), 1e-4);
+        }
+        let transitions = donor.replay_snapshot();
+        assert!(!transitions.is_empty());
+        let mut cross = DrlCap::new(3, DrlCapMode::CrossDeploy, 5);
+        cross.pretrain_on(&transitions, 2);
+        assert!(!cross.training());
+        // Updates must not change the network while frozen.
+        let state = cross.features(0, -1.0, 1e-4);
+        let q_before = {
+            let mut c = cross.clone();
+            c.net.forward(&state).to_vec()
+        };
+        for t in 1..=50u64 {
+            let arm = cross.select(t);
+            cross.update(arm, -1.0, 1e-4);
+        }
+        let q_after = {
+            let mut c = cross.clone();
+            c.net.forward(&state).to_vec()
+        };
+        assert_eq!(q_before, q_after);
+    }
+
+    #[test]
+    fn reset_restores_cold_start() {
+        let mut p = DrlCap::new(3, DrlCapMode::Online, 6);
+        p.update(1, -1.0, 0.1);
+        p.reset();
+        assert_eq!(p.progress_done, 0.0);
+        assert!(p.last_state.is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Reinforcement-learning baselines (paper §4.1): RL-Power (tabular
+//! Q-learning, adapted from CPU power capping) and DRLCap (deep RL with the
+//! pretrain/online/cross evaluation protocol), plus the from-scratch
+//! neural-net and replay-buffer substrates they need.
+
+pub mod drlcap;
+pub mod nn;
+pub mod qlearning;
+pub mod replay;
+
+pub use drlcap::{DrlCap, DrlCapMode};
+pub use nn::Mlp;
+pub use qlearning::RlPower;
+pub use replay::{ReplayBuffer, Transition};

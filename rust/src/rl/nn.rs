@@ -1,0 +1,188 @@
+//! From-scratch tiny neural network substrate for the DRL baselines.
+//!
+//! A two-layer MLP (tanh hidden) with plain SGD, just enough to reimplement
+//! DRLCap's Q-network. No external linear-algebra crates are available
+//! offline, so weights are flat `Vec<f64>`s and the backward pass is
+//! hand-derived.
+
+use crate::util::Rng;
+
+/// Fully-connected layer y = W x + b.
+#[derive(Clone, Debug)]
+struct Dense {
+    w: Vec<f64>, // out × in, row-major
+    b: Vec<f64>,
+    n_in: usize,
+    n_out: usize,
+}
+
+impl Dense {
+    fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Dense {
+        // Xavier-ish init.
+        let scale = (2.0 / (n_in + n_out) as f64).sqrt();
+        let w = (0..n_in * n_out).map(|_| rng.normal(0.0, scale)).collect();
+        Dense { w, b: vec![0.0; n_out], n_in, n_out }
+    }
+
+    fn forward(&self, x: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(x.len(), self.n_in);
+        out.clear();
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            let mut acc = self.b[o];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            out.push(acc);
+        }
+    }
+}
+
+/// Two-layer MLP: in → hidden (tanh) → out (linear).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    l1: Dense,
+    l2: Dense,
+    /// Scratch buffers reused across calls (no allocation on the hot path).
+    h_pre: Vec<f64>,
+    h: Vec<f64>,
+    out: Vec<f64>,
+}
+
+impl Mlp {
+    pub fn new(n_in: usize, n_hidden: usize, n_out: usize, seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        Mlp {
+            l1: Dense::new(n_in, n_hidden, &mut rng),
+            l2: Dense::new(n_hidden, n_out, &mut rng),
+            h_pre: Vec::with_capacity(n_hidden),
+            h: Vec::with_capacity(n_hidden),
+            out: Vec::with_capacity(n_out),
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.l1.n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.l2.n_out
+    }
+
+    /// Forward pass; the returned slice is valid until the next call.
+    pub fn forward(&mut self, x: &[f64]) -> &[f64] {
+        self.l1.forward(x, &mut self.h_pre);
+        self.h.clear();
+        self.h.extend(self.h_pre.iter().map(|v| v.tanh()));
+        let (l2, h, out) = (&self.l2, &self.h, &mut self.out);
+        l2.forward(h, out);
+        &self.out
+    }
+
+    /// One SGD step on the squared error of output unit `target_idx`
+    /// against `target`, for input `x`. Returns the pre-update prediction.
+    ///
+    /// This is the Q-learning update: only the selected action's head
+    /// receives gradient.
+    pub fn sgd_step(&mut self, x: &[f64], target_idx: usize, target: f64, lr: f64) -> f64 {
+        let pred = {
+            let out = self.forward(x);
+            out[target_idx]
+        };
+        let err = pred - target; // dL/dpred for L = (pred-target)^2 / 2
+        // Grad through l2 (only row target_idx active).
+        let n_h = self.h.len();
+        let row_start = target_idx * n_h;
+        // dL/dh before l2 weights update.
+        let mut dh: Vec<f64> = (0..n_h)
+            .map(|j| err * self.l2.w[row_start + j])
+            .collect();
+        // Update l2.
+        for j in 0..n_h {
+            self.l2.w[row_start + j] -= lr * err * self.h[j];
+        }
+        self.l2.b[target_idx] -= lr * err;
+        // Through tanh.
+        for j in 0..n_h {
+            dh[j] *= 1.0 - self.h[j] * self.h[j];
+        }
+        // Update l1.
+        let n_in = self.l1.n_in;
+        for j in 0..n_h {
+            let row = &mut self.l1.w[j * n_in..(j + 1) * n_in];
+            for (wi, xi) in row.iter_mut().zip(x) {
+                *wi -= lr * dh[j] * xi;
+            }
+            self.l1.b[j] -= lr * dh[j];
+        }
+        pred
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_shapes() {
+        let mut m = Mlp::new(4, 8, 3, 1);
+        let y = m.forward(&[0.1, -0.2, 0.3, 0.0]);
+        assert_eq!(y.len(), 3);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let mut a = Mlp::new(4, 8, 3, 7);
+        let mut b = Mlp::new(4, 8, 3, 7);
+        let x = [0.5, 0.5, -0.5, 1.0];
+        assert_eq!(a.forward(&x).to_vec(), b.forward(&x).to_vec());
+    }
+
+    #[test]
+    fn learns_a_linear_target() {
+        // Fit y0 = 2*x0 - x1 on one output head.
+        let mut m = Mlp::new(2, 16, 2, 3);
+        let mut rng = Rng::new(11);
+        for _ in 0..4000 {
+            let x = [rng.uniform_range(-1.0, 1.0), rng.uniform_range(-1.0, 1.0)];
+            let y = 2.0 * x[0] - x[1];
+            m.sgd_step(&x, 0, y, 0.02);
+        }
+        let mut mse = 0.0;
+        let n = 200;
+        for _ in 0..n {
+            let x = [rng.uniform_range(-1.0, 1.0), rng.uniform_range(-1.0, 1.0)];
+            let y = 2.0 * x[0] - x[1];
+            let pred = m.forward(&x)[0];
+            mse += (pred - y) * (pred - y);
+        }
+        mse /= n as f64;
+        assert!(mse < 0.02, "mse={mse}");
+    }
+
+    #[test]
+    fn only_selected_head_learns() {
+        let mut m = Mlp::new(2, 8, 2, 5);
+        let x = [0.3, -0.7];
+        let before1 = m.forward(&x)[1];
+        for _ in 0..50 {
+            m.sgd_step(&x, 0, 5.0, 0.05);
+        }
+        let after = m.forward(&x);
+        // Head 0 moved toward 5, head 1 moved much less (only via shared
+        // hidden layer).
+        assert!((after[0] - 5.0).abs() < 1.0, "{}", after[0]);
+        assert!((after[1] - before1).abs() < 2.0);
+    }
+
+    #[test]
+    fn sgd_returns_pre_update_prediction() {
+        let mut m = Mlp::new(2, 4, 1, 9);
+        let x = [0.1, 0.2];
+        let direct = m.forward(&x)[0];
+        let reported = m.sgd_step(&x, 0, 1.0, 0.01);
+        assert!((direct - reported).abs() < 1e-12);
+    }
+}

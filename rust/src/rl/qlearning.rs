@@ -1,0 +1,172 @@
+//! RL-Power baseline (paper §4.1): online tabular Q-learning, adapted from
+//! CPU power capping to GPU frequency control.
+//!
+//! We retain the original's learning and decision mechanism — a tabular
+//! Q(s, a) over a discretized counter-derived state with ε-greedy
+//! exploration — and restrict the action space to the GPU frequency arms.
+//! The state is (current arm, reward-level bucket), both derived from the
+//! same counter stream the bandits see.
+
+use crate::bandit::Policy;
+use crate::util::Rng;
+
+/// Number of reward buckets in the state discretization.
+const REWARD_BUCKETS: usize = 6;
+/// Normalized-reward range mapped onto the buckets.
+const R_LO: f64 = -1.5;
+const R_HI: f64 = -0.5;
+
+#[derive(Clone, Debug)]
+pub struct RlPower {
+    k: usize,
+    /// Q-table: state-major, `q[state * k + action]`.
+    q: Vec<f64>,
+    lr: f64,
+    gamma: f64,
+    eps0: f64,
+    eps_decay: f64,
+    state: usize,
+    last_action: Option<usize>,
+    t: u64,
+    rng: Rng,
+}
+
+impl RlPower {
+    pub fn new(k: usize, seed: u64) -> RlPower {
+        RlPower {
+            k,
+            q: vec![0.0; k * REWARD_BUCKETS * k],
+            lr: 0.15,
+            gamma: 0.9,
+            eps0: 0.3,
+            eps_decay: 400.0,
+            state: 0,
+            last_action: None,
+            t: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn n_states(&self) -> usize {
+        self.k * REWARD_BUCKETS
+    }
+
+    fn bucket(reward: f64) -> usize {
+        let x = ((reward - R_LO) / (R_HI - R_LO)).clamp(0.0, 1.0 - 1e-9);
+        (x * REWARD_BUCKETS as f64) as usize
+    }
+
+    fn encode(&self, arm: usize, reward: f64) -> usize {
+        arm * REWARD_BUCKETS + Self::bucket(reward)
+    }
+
+    fn epsilon(&self) -> f64 {
+        self.eps0.min(self.eps_decay / self.t.max(1) as f64).max(0.02)
+    }
+
+    fn greedy(&self, state: usize) -> usize {
+        let row = &self.q[state * self.k..(state + 1) * self.k];
+        crate::util::stats::argmax(&row.to_vec())
+    }
+
+    /// Max Q over actions in `state`.
+    fn max_q(&self, state: usize) -> f64 {
+        let row = &self.q[state * self.k..(state + 1) * self.k];
+        row.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+impl Policy for RlPower {
+    fn name(&self) -> String {
+        "RL-Power".into()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        self.t = t;
+        if self.rng.chance(self.epsilon()) {
+            self.rng.index(self.k)
+        } else {
+            self.greedy(self.state)
+        }
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, _progress: f64) {
+        let next_state = self.encode(arm, reward);
+        debug_assert!(next_state < self.n_states());
+        // Q(s, a) += lr * (r + γ max_a' Q(s', a') − Q(s, a)).
+        let idx = self.state * self.k + arm;
+        let target = reward + self.gamma * self.max_q(next_state);
+        self.q[idx] += self.lr * (target - self.q[idx]);
+        self.state = next_state;
+        self.last_action = Some(arm);
+    }
+
+    fn reset(&mut self) {
+        self.q.iter_mut().for_each(|x| *x = 0.0);
+        self.state = 0;
+        self.last_action = None;
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(RlPower::bucket(-2.0), 0);
+        assert_eq!(RlPower::bucket(-1.5), 0);
+        assert_eq!(RlPower::bucket(-0.5), REWARD_BUCKETS - 1);
+        assert_eq!(RlPower::bucket(0.0), REWARD_BUCKETS - 1);
+        assert!(RlPower::bucket(-1.0) < REWARD_BUCKETS);
+    }
+
+    #[test]
+    fn epsilon_decays_but_floors() {
+        let mut p = RlPower::new(9, 1);
+        p.t = 1;
+        let e1 = p.epsilon();
+        p.t = 100_000;
+        let e2 = p.epsilon();
+        assert!(e1 > e2);
+        assert!(e2 >= 0.02);
+    }
+
+    #[test]
+    fn learns_stationary_optimum_eventually() {
+        // Stationary bandit-like environment (state barely matters).
+        let means = [-1.3, -1.0, -1.2];
+        let mut p = RlPower::new(3, 2);
+        let mut rng = Rng::new(7);
+        let mut late_pulls = [0u64; 3];
+        for t in 1..=20_000u64 {
+            let arm = p.select(t);
+            let r = rng.normal(means[arm], 0.05);
+            p.update(arm, r, 0.0);
+            if t > 15_000 {
+                late_pulls[arm] += 1;
+            }
+        }
+        // Converges more slowly than the bandits, but the best arm should
+        // dominate late decisions.
+        assert!(
+            late_pulls[1] > late_pulls[0] && late_pulls[1] > late_pulls[2],
+            "{late_pulls:?}"
+        );
+    }
+
+    #[test]
+    fn reset_zeroes_q() {
+        let mut p = RlPower::new(3, 3);
+        p.update(1, -1.0, 0.0);
+        assert!(p.q.iter().any(|&v| v != 0.0));
+        p.reset();
+        assert!(p.q.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Fixed-capacity experience replay buffer for the DRL baselines.
+
+use crate::util::Rng;
+
+/// One transition (s, a, r, s').
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    pub action: usize,
+    pub reward: f64,
+    pub next_state: Vec<f64>,
+}
+
+/// Ring-buffer replay memory with uniform sampling.
+#[derive(Clone, Debug)]
+pub struct ReplayBuffer {
+    cap: usize,
+    buf: Vec<Transition>,
+    head: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> ReplayBuffer {
+        assert!(cap > 0);
+        ReplayBuffer { cap, buf: Vec::with_capacity(cap), head: 0 }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.cap {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Sample `n` transitions uniformly with replacement.
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        assert!(!self.buf.is_empty());
+        (0..n).map(|_| &self.buf[rng.index(self.buf.len())]).collect()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f64) -> Transition {
+        Transition { state: vec![v], action: 0, reward: v, next_state: vec![v] }
+    }
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let mut rb = ReplayBuffer::new(3);
+        for i in 0..5 {
+            rb.push(t(i as f64));
+        }
+        assert_eq!(rb.len(), 3);
+        // 0 and 1 evicted; contents are {2, 3, 4} in some order.
+        let rewards: Vec<f64> = rb.buf.iter().map(|x| x.reward).collect();
+        for v in [2.0, 3.0, 4.0] {
+            assert!(rewards.contains(&v), "{rewards:?}");
+        }
+    }
+
+    #[test]
+    fn sampling_covers_buffer() {
+        let mut rb = ReplayBuffer::new(10);
+        for i in 0..10 {
+            rb.push(t(i as f64));
+        }
+        let mut rng = Rng::new(1);
+        let samples = rb.sample(1000, &mut rng);
+        let distinct: std::collections::HashSet<u64> =
+            samples.iter().map(|s| s.reward as u64).collect();
+        assert!(distinct.len() >= 9, "{distinct:?}");
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut rb = ReplayBuffer::new(3);
+        rb.push(t(1.0));
+        rb.clear();
+        assert!(rb.is_empty());
+    }
+}

@@ -1,0 +1,185 @@
+//! Hardware counter models.
+//!
+//! The controller only ever observes the GPU through counters, exactly as
+//! on the real system: a monotonic energy counter (µJ), a timestamp counter
+//! (µs), and per-engine-group active-time counters (µs) in the style of
+//! Level-Zero's `zes_engine_stats_t`. All counters are monotonic u64 and
+//! wrap-free over any realistic run; consumers diff successive readings.
+
+/// Engine groups exposed by the PVC sysman interface that we model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineGroup {
+    /// Compute (vector + matrix) engines — "core".
+    Compute,
+    /// Copy engines (data movement) — "uncore".
+    Copy,
+}
+
+/// One monotonic counter with µ-unit integer resolution.
+#[derive(Clone, Debug, Default)]
+pub struct MonotonicCounter {
+    raw: u64,
+}
+
+impl MonotonicCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `amount` in micro-units; saturates instead of wrapping.
+    pub fn add_micro(&mut self, amount: u64) {
+        self.raw = self.raw.saturating_add(amount);
+    }
+
+    /// Add a floating amount expressed in base units (J or s), converted to
+    /// micro-units with rounding.
+    pub fn add(&mut self, base_units: f64) {
+        debug_assert!(base_units >= 0.0, "monotonic counter cannot decrease");
+        self.add_micro((base_units * 1e6).round() as u64)
+    }
+
+    /// Raw micro-unit reading.
+    pub fn read_micro(&self) -> u64 {
+        self.raw
+    }
+
+    /// Reading in base units (J or s).
+    pub fn read(&self) -> f64 {
+        self.raw as f64 / 1e6
+    }
+}
+
+/// A timestamped snapshot of one engine group's activity, mirroring
+/// `zes_engine_stats_t { activeTime, timestamp }`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineStats {
+    pub active_time_us: u64,
+    pub timestamp_us: u64,
+}
+
+impl EngineStats {
+    /// Utilization between two snapshots: Δactive / Δtimestamp.
+    /// Returns `None` when no time elapsed.
+    pub fn utilization_since(&self, earlier: &EngineStats) -> Option<f64> {
+        let dt = self.timestamp_us.checked_sub(earlier.timestamp_us)?;
+        if dt == 0 {
+            return None;
+        }
+        let da = self.active_time_us.saturating_sub(earlier.active_time_us);
+        Some(da as f64 / dt as f64)
+    }
+}
+
+/// The full counter block of one GPU.
+#[derive(Clone, Debug)]
+pub struct GpuCounters {
+    /// Monotonic energy, µJ.
+    pub energy: MonotonicCounter,
+    /// Device timestamp, µs.
+    pub timestamp: MonotonicCounter,
+    /// Compute-engine active time, µs.
+    pub core_active: MonotonicCounter,
+    /// Copy-engine active time, µs.
+    pub uncore_active: MonotonicCounter,
+}
+
+impl GpuCounters {
+    pub fn new() -> GpuCounters {
+        GpuCounters {
+            energy: MonotonicCounter::new(),
+            timestamp: MonotonicCounter::new(),
+            core_active: MonotonicCounter::new(),
+            uncore_active: MonotonicCounter::new(),
+        }
+    }
+
+    /// Advance all counters by one interval.
+    ///
+    /// * `dt_s` — wall time elapsed;
+    /// * `energy_j` — energy consumed in the interval (including switch
+    ///   overhead, as the real counter would see it);
+    /// * `core_util` / `uncore_util` — active fractions in [0, 1].
+    pub fn advance(&mut self, dt_s: f64, energy_j: f64, core_util: f64, uncore_util: f64) {
+        debug_assert!((0.0..=1.0 + 1e-9).contains(&core_util));
+        debug_assert!((0.0..=1.0 + 1e-9).contains(&uncore_util));
+        self.timestamp.add(dt_s);
+        self.energy.add(energy_j.max(0.0));
+        self.core_active.add(dt_s * core_util.clamp(0.0, 1.0));
+        self.uncore_active.add(dt_s * uncore_util.clamp(0.0, 1.0));
+    }
+
+    pub fn engine_stats(&self, group: EngineGroup) -> EngineStats {
+        let active = match group {
+            EngineGroup::Compute => &self.core_active,
+            EngineGroup::Copy => &self.uncore_active,
+        };
+        EngineStats {
+            active_time_us: active.read_micro(),
+            timestamp_us: self.timestamp.read_micro(),
+        }
+    }
+}
+
+impl Default for GpuCounters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_monotonic() {
+        let mut c = GpuCounters::new();
+        let mut last_e = 0;
+        let mut last_t = 0;
+        for i in 0..100 {
+            c.advance(0.01, 20.0 + (i % 7) as f64, 0.9, 0.5);
+            assert!(c.energy.read_micro() >= last_e);
+            assert!(c.timestamp.read_micro() > last_t);
+            last_e = c.energy.read_micro();
+            last_t = c.timestamp.read_micro();
+        }
+    }
+
+    #[test]
+    fn energy_diff_reconstructs_interval() {
+        let mut c = GpuCounters::new();
+        let before = c.energy.read();
+        c.advance(0.01, 23.25, 0.9, 0.5);
+        let after = c.energy.read();
+        assert!((after - before - 23.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn utilization_from_engine_stats() {
+        let mut c = GpuCounters::new();
+        let s0 = c.engine_stats(EngineGroup::Compute);
+        let u0 = c.engine_stats(EngineGroup::Copy);
+        for _ in 0..10 {
+            c.advance(0.01, 20.0, 0.9, 0.45);
+        }
+        let s1 = c.engine_stats(EngineGroup::Compute);
+        let u1 = c.engine_stats(EngineGroup::Copy);
+        let core = s1.utilization_since(&s0).unwrap();
+        let copy = u1.utilization_since(&u0).unwrap();
+        assert!((core - 0.9).abs() < 1e-3, "{core}");
+        assert!((copy - 0.45).abs() < 1e-3, "{copy}");
+    }
+
+    #[test]
+    fn zero_elapsed_yields_none() {
+        let c = GpuCounters::new();
+        let s = c.engine_stats(EngineGroup::Compute);
+        assert_eq!(s.utilization_since(&s), None);
+    }
+
+    #[test]
+    fn negative_energy_clamped() {
+        let mut c = GpuCounters::new();
+        c.advance(0.01, -5.0, 0.5, 0.5); // noisy reading below zero
+        assert_eq!(c.energy.read_micro(), 0);
+    }
+}

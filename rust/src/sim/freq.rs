@@ -1,0 +1,183 @@
+//! GPU core-frequency domain and the DVFS state machine.
+//!
+//! Frequencies are the bandit arms: Aurora's PVC exposes software-settable
+//! core frequencies 0.8–1.6 GHz in 0.1 GHz steps (K = 9). Arms are indexed
+//! ascending (arm 0 = 0.8 GHz, arm K-1 = 1.6 GHz = the system default).
+
+/// The set of selectable GPU core frequencies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FreqDomain {
+    ghz: Vec<f64>,
+}
+
+impl FreqDomain {
+    /// Aurora PVC: {0.8, 0.9, ..., 1.6} GHz.
+    pub fn aurora() -> FreqDomain {
+        FreqDomain::new((8..=16).map(|i| i as f64 / 10.0).collect())
+    }
+
+    /// Custom ascending frequency set.
+    pub fn new(ghz: Vec<f64>) -> FreqDomain {
+        assert!(!ghz.is_empty(), "empty frequency domain");
+        assert!(
+            ghz.windows(2).all(|w| w[0] < w[1]),
+            "frequencies must be strictly ascending"
+        );
+        assert!(ghz.iter().all(|f| *f > 0.0));
+        FreqDomain { ghz }
+    }
+
+    /// Number of arms K.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.ghz.len()
+    }
+
+    /// Frequency of arm `i`, GHz.
+    #[inline]
+    pub fn ghz(&self, i: usize) -> f64 {
+        self.ghz[i]
+    }
+
+    /// The maximum (default) frequency, GHz.
+    #[inline]
+    pub fn max_ghz(&self) -> f64 {
+        *self.ghz.last().unwrap()
+    }
+
+    /// Arm index of the maximum frequency.
+    #[inline]
+    pub fn max_arm(&self) -> usize {
+        self.k() - 1
+    }
+
+    /// Find the arm with the given frequency (within 1e-9 GHz).
+    pub fn index_of_ghz(&self, f: f64) -> Option<usize> {
+        self.ghz.iter().position(|g| (g - f).abs() < 1e-9)
+    }
+
+    /// All arm indices.
+    pub fn arms(&self) -> std::ops::Range<usize> {
+        0..self.k()
+    }
+
+    /// Human label for an arm ("1.6 GHz").
+    pub fn label(&self, i: usize) -> String {
+        format!("{:.1} GHz", self.ghz(i))
+    }
+}
+
+/// Cost of one frequency transition, as measured on Aurora through the
+/// GEOPM runtime interface (paper §4.4): ~150 µs of stall and ~0.3 J.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchCost {
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+impl Default for SwitchCost {
+    fn default() -> Self {
+        SwitchCost { latency_s: 150e-6, energy_j: 0.3 }
+    }
+}
+
+/// DVFS state machine for one device: tracks the applied frequency and
+/// accounts transition overheads.
+#[derive(Clone, Debug)]
+pub struct DvfsState {
+    current: usize,
+    cost: SwitchCost,
+    switches: u64,
+    switch_energy_j: f64,
+    switch_time_s: f64,
+}
+
+impl DvfsState {
+    /// Start at the domain's default (maximum) frequency.
+    pub fn new(freqs: &FreqDomain, cost: SwitchCost) -> DvfsState {
+        DvfsState {
+            current: freqs.max_arm(),
+            cost,
+            switches: 0,
+            switch_energy_j: 0.0,
+            switch_time_s: 0.0,
+        }
+    }
+
+    /// Request arm `target`. Returns the overhead charged for this decision
+    /// interval (zero when the frequency is unchanged).
+    pub fn request(&mut self, target: usize) -> SwitchCost {
+        if target == self.current {
+            return SwitchCost { latency_s: 0.0, energy_j: 0.0 };
+        }
+        self.current = target;
+        self.switches += 1;
+        self.switch_energy_j += self.cost.energy_j;
+        self.switch_time_s += self.cost.latency_s;
+        self.cost
+    }
+
+    #[inline]
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    /// Number of transitions performed so far.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Total energy charged to transitions, Joules.
+    pub fn switch_energy_j(&self) -> f64 {
+        self.switch_energy_j
+    }
+
+    /// Total stall time charged to transitions, seconds.
+    pub fn switch_time_s(&self) -> f64 {
+        self.switch_time_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aurora_domain() {
+        let f = FreqDomain::aurora();
+        assert_eq!(f.k(), 9);
+        assert!((f.ghz(0) - 0.8).abs() < 1e-12);
+        assert!((f.max_ghz() - 1.6).abs() < 1e-12);
+        assert_eq!(f.index_of_ghz(1.1), Some(3));
+        assert_eq!(f.index_of_ghz(0.75), None);
+        assert_eq!(f.label(8), "1.6 GHz");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsorted() {
+        FreqDomain::new(vec![1.0, 0.9]);
+    }
+
+    #[test]
+    fn dvfs_accounts_switch_costs() {
+        let f = FreqDomain::aurora();
+        let mut d = DvfsState::new(&f, SwitchCost::default());
+        assert_eq!(d.current(), f.max_arm());
+        // No-op request: free.
+        let c = d.request(f.max_arm());
+        assert_eq!(c.energy_j, 0.0);
+        assert_eq!(d.switches(), 0);
+        // Real switch: charged.
+        let c = d.request(0);
+        assert!((c.energy_j - 0.3).abs() < 1e-12);
+        assert!((c.latency_s - 150e-6).abs() < 1e-15);
+        assert_eq!(d.switches(), 1);
+        // Toggle back and forth.
+        d.request(1);
+        d.request(0);
+        assert_eq!(d.switches(), 3);
+        assert!((d.switch_energy_j() - 0.9).abs() < 1e-12);
+        assert!((d.switch_time_s() - 450e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,179 @@
+//! Single-GPU device model (Intel Data Center GPU Max / "Ponte Vecchio").
+//!
+//! Each [`Gpu`] owns its DVFS state, its hardware-counter block, and a
+//! counter-noise stream. The device does not know about workloads; the
+//! [`crate::sim::node::Node`] drives it with per-interval true quantities
+//! and the GPU turns them into (noisy) counter increments, exactly the view
+//! the controller gets on the real machine.
+
+use super::counters::{EngineGroup, EngineStats, GpuCounters};
+use super::freq::{DvfsState, FreqDomain, SwitchCost};
+use super::noise::CounterNoise;
+use crate::util::Rng;
+use crate::workload::model::NoiseSpec;
+
+/// True (noise-free) per-interval quantities for one GPU, produced by the
+/// node/workload layer.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuInterval {
+    pub dt_s: f64,
+    /// True energy drawn by this GPU in the interval, Joules (excluding
+    /// switch overhead, which the GPU adds itself).
+    pub energy_j: f64,
+    pub core_util: f64,
+    pub uncore_util: f64,
+}
+
+/// What actually happened in the interval, after DVFS accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuIntervalOutcome {
+    /// Energy recorded by the counter (noisy, includes switch energy).
+    pub measured_energy_j: f64,
+    /// True energy including switch overhead.
+    pub true_energy_j: f64,
+    /// Stall time charged by a frequency transition this interval.
+    pub stall_s: f64,
+}
+
+/// One simulated PVC device.
+#[derive(Clone, Debug)]
+pub struct Gpu {
+    pub id: usize,
+    dvfs: DvfsState,
+    counters: GpuCounters,
+    noise: CounterNoise,
+}
+
+impl Gpu {
+    pub fn new(
+        id: usize,
+        freqs: &FreqDomain,
+        cost: SwitchCost,
+        noise_spec: NoiseSpec,
+        rng: Rng,
+    ) -> Gpu {
+        Gpu {
+            id,
+            dvfs: DvfsState::new(freqs, cost),
+            counters: GpuCounters::new(),
+            noise: CounterNoise::new(noise_spec, rng),
+        }
+    }
+
+    /// Apply a frequency request for the coming interval. Returns the stall
+    /// time incurred (0 when unchanged).
+    pub fn set_frequency(&mut self, arm: usize) -> f64 {
+        self.dvfs.request(arm).latency_s
+    }
+
+    /// Current frequency arm.
+    pub fn frequency(&self) -> usize {
+        self.dvfs.current()
+    }
+
+    /// Advance the device by one decision interval.
+    pub fn advance(&mut self, iv: GpuInterval, switch_energy_j: f64, stall_s: f64) -> GpuIntervalOutcome {
+        let true_energy = iv.energy_j + switch_energy_j;
+        let measured = self.noise.energy(true_energy);
+        let core = self.noise.util(iv.core_util);
+        let uncore = self.noise.util(iv.uncore_util);
+        self.counters.advance(iv.dt_s, measured, core, uncore);
+        self.noise.tick(iv.dt_s);
+        GpuIntervalOutcome {
+            measured_energy_j: measured,
+            true_energy_j: true_energy,
+            stall_s,
+        }
+    }
+
+    /// Counter reads (what GEOPM exposes).
+    pub fn energy_j(&self) -> f64 {
+        self.counters.energy.read()
+    }
+
+    pub fn timestamp_s(&self) -> f64 {
+        self.counters.timestamp.read()
+    }
+
+    pub fn engine_stats(&self, group: EngineGroup) -> EngineStats {
+        self.counters.engine_stats(group)
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.dvfs.switches()
+    }
+
+    pub fn switch_energy_j(&self) -> f64 {
+        self.dvfs.switch_energy_j()
+    }
+
+    pub fn switch_time_s(&self) -> f64 {
+        self.dvfs.switch_time_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_gpu() -> (Gpu, FreqDomain) {
+        let f = FreqDomain::aurora();
+        let g = Gpu::new(0, &f, SwitchCost::default(), NoiseSpec::default(), Rng::new(1));
+        (g, f)
+    }
+
+    #[test]
+    fn starts_at_max_frequency() {
+        let (g, f) = mk_gpu();
+        assert_eq!(g.frequency(), f.max_arm());
+    }
+
+    #[test]
+    fn switch_charges_stall_and_energy() {
+        let (mut g, _) = mk_gpu();
+        let stall = g.set_frequency(0);
+        assert!((stall - 150e-6).abs() < 1e-12);
+        assert_eq!(g.switches(), 1);
+        // Same arm again: free.
+        let stall = g.set_frequency(0);
+        assert_eq!(stall, 0.0);
+        assert_eq!(g.switches(), 1);
+    }
+
+    #[test]
+    fn advance_accumulates_counters() {
+        let (mut g, _) = mk_gpu();
+        let iv = GpuInterval { dt_s: 0.01, energy_j: 4.0, core_util: 0.9, uncore_util: 0.5 };
+        let mut total_measured = 0.0;
+        for _ in 0..200 {
+            total_measured += g.advance(iv, 0.0, 0.0).measured_energy_j;
+        }
+        // Counter equals the sum of measured increments.
+        assert!((g.energy_j() - total_measured).abs() < 1e-2, "{}", g.energy_j());
+        assert!((g.timestamp_s() - 2.0).abs() < 1e-6);
+        // Measured total close to the true total (noise is unbiased).
+        assert!((total_measured - 800.0).abs() < 40.0, "{total_measured}");
+    }
+
+    #[test]
+    fn switch_energy_shows_in_outcome() {
+        let (mut g, _) = mk_gpu();
+        let iv = GpuInterval { dt_s: 0.01, energy_j: 4.0, core_util: 0.9, uncore_util: 0.5 };
+        let out = g.advance(iv, 0.3, 150e-6);
+        assert!((out.true_energy_j - 4.3).abs() < 1e-12);
+        assert!((out.stall_s - 150e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let f = FreqDomain::aurora();
+        let mut a = Gpu::new(0, &f, SwitchCost::default(), NoiseSpec::default(), Rng::new(9));
+        let mut b = Gpu::new(0, &f, SwitchCost::default(), NoiseSpec::default(), Rng::new(9));
+        let iv = GpuInterval { dt_s: 0.01, energy_j: 4.0, core_util: 0.9, uncore_util: 0.5 };
+        for _ in 0..50 {
+            let oa = a.advance(iv, 0.0, 0.0);
+            let ob = b.advance(iv, 0.0, 0.0);
+            assert_eq!(oa.measured_energy_j, ob.measured_energy_j);
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! Hardware substrate simulators.
+//!
+//! The paper evaluates on an Aurora node (6× Intel PVC GPUs) driven through
+//! GEOPM; neither is available here, so this module provides the
+//! trace-calibrated equivalents (see DESIGN.md §3): frequency domain + DVFS
+//! state machine, hardware counters, measurement noise, single-GPU device
+//! model, and the six-GPU node.
+
+pub mod counters;
+pub mod freq;
+pub mod gpu;
+pub mod node;
+pub mod noise;
+pub mod power;
+
+pub use freq::{DvfsState, FreqDomain, SwitchCost};
+pub use node::{Node, NodeObservation, NodeTotals};

@@ -1,0 +1,150 @@
+//! Measurement-noise model for the GPU hardware counters.
+//!
+//! On large HPC systems, clock synchronization, temperature drift, and
+//! network congestion make counter readings unstable — especially right
+//! after job start (the paper's §3.2 motivation for optimistic
+//! initialization). We model this as Gaussian perturbation of per-interval
+//! energy and utilization readings with an inflated-variance early window.
+
+use crate::util::Rng;
+use crate::workload::model::NoiseSpec;
+
+/// Stateful noise source for one device's counters.
+#[derive(Clone, Debug)]
+pub struct CounterNoise {
+    spec: NoiseSpec,
+    rng: Rng,
+    elapsed_s: f64,
+}
+
+impl CounterNoise {
+    pub fn new(spec: NoiseSpec, rng: Rng) -> CounterNoise {
+        CounterNoise { spec, rng, elapsed_s: 0.0 }
+    }
+
+    /// Variance multiplier in effect at the current sim time.
+    fn mult(&self) -> f64 {
+        if self.elapsed_s < self.spec.early_window_s {
+            self.spec.early_mult
+        } else {
+            1.0
+        }
+    }
+
+    /// Whether the early high-variance window is still active.
+    pub fn in_early_window(&self) -> bool {
+        self.elapsed_s < self.spec.early_window_s
+    }
+
+    /// Perturb a per-interval energy reading (Joules). Never negative.
+    /// Gaussian counter noise plus a heavy-tail glitch component (DVFS
+    /// transients / sampling races occasionally inflate a reading).
+    pub fn energy(&mut self, true_j: f64) -> f64 {
+        let sigma = self.spec.energy_frac * self.mult() * true_j;
+        let mut reading = true_j + self.rng.normal(0.0, sigma);
+        if self.spec.spike_prob > 0.0 && self.rng.chance(self.spec.spike_prob) {
+            reading *= self.spec.spike_mult;
+        }
+        reading.max(0.0)
+    }
+
+    /// Perturb a utilization reading, clamped to (0, 1].
+    pub fn util(&mut self, true_u: f64) -> f64 {
+        let sigma = self.spec.util_std * self.mult();
+        (true_u + self.rng.normal(0.0, sigma)).clamp(1e-4, 1.0)
+    }
+
+    /// Advance the noise clock by one interval.
+    pub fn tick(&mut self, dt_s: f64) {
+        self.elapsed_s += dt_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Welford;
+
+    fn spec() -> NoiseSpec {
+        NoiseSpec {
+            energy_frac: 0.03,
+            util_std: 0.02,
+            early_mult: 3.0,
+            early_window_s: 0.5,
+            spike_prob: 0.0, // gaussian-only for the moment tests below
+            spike_mult: 4.0,
+        }
+    }
+
+    #[test]
+    fn spikes_inflate_tail() {
+        let mut n = CounterNoise::new(
+            NoiseSpec { spike_prob: 0.05, ..spec() },
+            Rng::new(11),
+        );
+        for _ in 0..100 {
+            n.tick(0.01);
+        }
+        let readings: Vec<f64> = (0..20_000).map(|_| n.energy(20.0)).collect();
+        let spikes = readings.iter().filter(|&&r| r > 60.0).count();
+        // ~5% of readings land near 4x.
+        let frac = spikes as f64 / readings.len() as f64;
+        assert!((frac - 0.05).abs() < 0.01, "{frac}");
+    }
+
+    #[test]
+    fn energy_noise_is_unbiased() {
+        let mut n = CounterNoise::new(spec(), Rng::new(1));
+        // Move past the early window first.
+        for _ in 0..100 {
+            n.tick(0.01);
+        }
+        let mut w = Welford::new();
+        for _ in 0..20_000 {
+            w.push(n.energy(20.0));
+        }
+        assert!((w.mean() - 20.0).abs() < 0.05, "{}", w.mean());
+        assert!((w.std() - 0.6).abs() < 0.05, "{}", w.std()); // 3% of 20
+    }
+
+    #[test]
+    fn early_window_has_higher_variance() {
+        let mut early = CounterNoise::new(spec(), Rng::new(2));
+        let mut late = CounterNoise::new(spec(), Rng::new(3));
+        for _ in 0..100 {
+            late.tick(0.01);
+        }
+        assert!(early.in_early_window());
+        assert!(!late.in_early_window());
+        let mut we = Welford::new();
+        let mut wl = Welford::new();
+        for _ in 0..20_000 {
+            we.push(early.energy(20.0));
+            wl.push(late.energy(20.0));
+        }
+        assert!(we.std() > 2.0 * wl.std(), "early {} vs late {}", we.std(), wl.std());
+    }
+
+    #[test]
+    fn util_clamped_to_unit_range() {
+        let mut n = CounterNoise::new(
+            NoiseSpec { util_std: 0.5, ..spec() }, // absurdly noisy
+            Rng::new(4),
+        );
+        for _ in 0..1000 {
+            let u = n.util(0.9);
+            assert!(u > 0.0 && u <= 1.0, "{u}");
+        }
+    }
+
+    #[test]
+    fn energy_never_negative() {
+        let mut n = CounterNoise::new(
+            NoiseSpec { energy_frac: 2.0, ..spec() },
+            Rng::new(5),
+        );
+        for _ in 0..1000 {
+            assert!(n.energy(1.0) >= 0.0);
+        }
+    }
+}

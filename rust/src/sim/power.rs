@@ -1,0 +1,78 @@
+//! Node power breakdown helpers (Fig. 1(a) accounting).
+//!
+//! The component split of a node's draw while an application runs:
+//! GPUs (frequency-dependent, from the calibrated app model), CPUs, and
+//! "other" (HBM, NICs, fabric). Used by the motivation experiment and by
+//! telemetry summaries.
+
+use crate::sim::freq::FreqDomain;
+use crate::workload::model::AppModel;
+
+/// Power split of one node at a given GPU frequency arm, kW.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerBreakdown {
+    pub gpu_kw: f64,
+    pub cpu_kw: f64,
+    pub other_kw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn of(app: &AppModel, freqs: &FreqDomain, arm: usize) -> PowerBreakdown {
+        PowerBreakdown {
+            gpu_kw: app.power_kw(freqs, arm),
+            cpu_kw: app.cpu_kw,
+            other_kw: app.other_kw,
+        }
+    }
+
+    pub fn total_kw(&self) -> f64 {
+        self.gpu_kw + self.cpu_kw + self.other_kw
+    }
+
+    /// Fractions (gpu, cpu, other) summing to 1.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total_kw();
+        (self.gpu_kw / t, self.cpu_kw / t, self.other_kw / t)
+    }
+
+    /// Energy split over an execution of `time_s` seconds, kJ.
+    pub fn energy_kj(&self, time_s: f64) -> (f64, f64, f64) {
+        (self.gpu_kw * time_s, self.cpu_kw * time_s, self.other_kw * time_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::calibration;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let f = FreqDomain::aurora();
+        for app in calibration::all_apps() {
+            let b = PowerBreakdown::of(&app, &f, f.max_arm());
+            let (g, c, o) = b.fractions();
+            assert!((g + c + o - 1.0).abs() < 1e-12);
+            assert!(g > c && c > o, "{}: {g} {c} {o}", app.name);
+        }
+    }
+
+    #[test]
+    fn gpu_power_drops_with_frequency() {
+        let f = FreqDomain::aurora();
+        let app = calibration::app("pot3d").unwrap();
+        let hi = PowerBreakdown::of(&app, &f, f.max_arm()).gpu_kw;
+        let lo = PowerBreakdown::of(&app, &f, 0).gpu_kw;
+        assert!(lo < hi, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn energy_split_scales_with_time() {
+        let f = FreqDomain::aurora();
+        let app = calibration::app("pot3d").unwrap();
+        let b = PowerBreakdown::of(&app, &f, f.max_arm());
+        let (g, _, _) = b.energy_kj(app.t_max_s);
+        // Must reproduce the Table-1 energy at 1.6 GHz.
+        assert!((g - 131.13).abs() < 1e-6, "{g}");
+    }
+}

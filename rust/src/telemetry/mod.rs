@@ -1,0 +1,6 @@
+//! Operational telemetry (counters/gauges + CSV export), separate from the
+//! paper-metric accounting in `control::metrics`.
+
+pub mod recorder;
+
+pub use recorder::{Counter, Gauge, Recorder};

@@ -1,0 +1,150 @@
+//! Run-time telemetry recorder: named counters and gauges with
+//! per-interval snapshots, plus CSV export. The coordinator uses this to
+//! expose operational metrics (decision latency, switch counts, energy
+//! rate) without entangling them with the paper-metric accounting in
+//! `control::metrics`.
+
+use std::collections::BTreeMap;
+
+use crate::util::io::Csv;
+use crate::util::stats::Welford;
+
+/// A monotonically-increasing counter.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    value: u64,
+}
+
+impl Counter {
+    pub fn inc(&mut self) {
+        self.value += 1;
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.value += n;
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value
+    }
+}
+
+/// A sampled statistic (latency, energy rate, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Gauge {
+    stats: Welford,
+    last: f64,
+}
+
+impl Gauge {
+    pub fn record(&mut self, x: f64) {
+        self.stats.push(x);
+        self.last = x;
+    }
+
+    pub fn last(&self) -> f64 {
+        self.last
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.stats.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.stats.std()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.stats.count()
+    }
+}
+
+/// Named metric registry.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    counters: BTreeMap<String, Counter>,
+    gauges: BTreeMap<String, Gauge>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn counter(&mut self, name: &str) -> &mut Counter {
+        self.counters.entry(name.to_string()).or_default()
+    }
+
+    pub fn gauge(&mut self, name: &str) -> &mut Gauge {
+        self.gauges.entry(name.to_string()).or_default()
+    }
+
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).map(Counter::get)
+    }
+
+    pub fn gauge_mean(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).map(Gauge::mean)
+    }
+
+    /// Render all metrics as CSV (name, kind, count, mean, std, last).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new();
+        csv.row(&["name", "kind", "count", "mean", "std", "last"]);
+        for (name, c) in &self.counters {
+            csv.row(&[
+                name.clone(),
+                "counter".into(),
+                c.get().to_string(),
+                String::new(),
+                String::new(),
+                String::new(),
+            ]);
+        }
+        for (name, g) in &self.gauges {
+            csv.row(&[
+                name.clone(),
+                "gauge".into(),
+                g.count().to_string(),
+                format!("{:.6}", g.mean()),
+                format!("{:.6}", g.std()),
+                format!("{:.6}", g.last()),
+            ]);
+        }
+        csv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut r = Recorder::new();
+        r.counter("switches").inc();
+        r.counter("switches").add(4);
+        assert_eq!(r.counter_value("switches"), Some(5));
+        assert_eq!(r.counter_value("missing"), None);
+    }
+
+    #[test]
+    fn gauges_track_stats() {
+        let mut r = Recorder::new();
+        for x in [1.0, 2.0, 3.0] {
+            r.gauge("latency_us").record(x);
+        }
+        assert_eq!(r.gauge_mean("latency_us"), Some(2.0));
+        assert_eq!(r.gauges["latency_us"].last(), 3.0);
+    }
+
+    #[test]
+    fn csv_has_all_metrics() {
+        let mut r = Recorder::new();
+        r.counter("a").inc();
+        r.gauge("b").record(1.5);
+        let text = r.to_csv().render();
+        assert!(text.contains("a,counter,1"));
+        assert!(text.contains("b,gauge,1"));
+    }
+}

@@ -1,0 +1,5 @@
+//! Test-support substrates (property-testing mini-framework).
+
+pub mod proptest_lite;
+
+pub use proptest_lite::{forall, forall_seeded, gens, Gen};

@@ -1,0 +1,228 @@
+//! Property-based testing mini-framework (proptest is not in the offline
+//! crate set). Provides seeded generators, a `forall` runner with failure
+//! reporting, and greedy shrinking for a few common shapes.
+//!
+//! Usage:
+//! ```ignore
+//! forall(100, gens::vec_f64(-2.0, 0.0, 1..=9), |xs| {
+//!     let i = argmax(xs);
+//!     xs.iter().all(|x| xs[i] >= *x)
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// A seeded value generator with an optional shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate simpler values (tried in order during shrinking).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of `prop` over `gen`; on failure, greedily
+/// shrink and panic with the minimal counterexample.
+pub fn forall<G: Gen>(cases: usize, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    forall_seeded(0xEC0_57A7E, cases, gen, prop)
+}
+
+/// `forall` with an explicit base seed (deterministic).
+pub fn forall_seeded<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&G::Value) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(&gen, value, &prop);
+            panic!(
+                "property falsified (case {case}/{cases}, seed {seed:#x})\n\
+                 minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> G::Value {
+    // Greedy: keep taking the first shrink candidate that still fails.
+    'outer: for _ in 0..1_000 {
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+/// Stock generators.
+pub mod gens {
+    use super::Gen;
+    use crate::util::Rng;
+
+    /// Uniform f64 in [lo, hi); shrinks toward lo and 0.
+    pub struct F64 {
+        pub lo: f64,
+        pub hi: f64,
+    }
+
+    impl Gen for F64 {
+        type Value = f64;
+        fn generate(&self, rng: &mut Rng) -> f64 {
+            rng.uniform_range(self.lo, self.hi)
+        }
+        fn shrink(&self, v: &f64) -> Vec<f64> {
+            let mut out = Vec::new();
+            if *v != self.lo {
+                out.push(self.lo);
+                out.push(self.lo + (*v - self.lo) / 2.0);
+            }
+            if self.lo <= 0.0 && 0.0 < *v {
+                out.push(0.0);
+            }
+            out
+        }
+    }
+
+    /// Uniform usize in [lo, hi]; shrinks toward lo.
+    pub struct USize {
+        pub lo: usize,
+        pub hi: usize,
+    }
+
+    impl Gen for USize {
+        type Value = usize;
+        fn generate(&self, rng: &mut Rng) -> usize {
+            self.lo + rng.index(self.hi - self.lo + 1)
+        }
+        fn shrink(&self, v: &usize) -> Vec<usize> {
+            let mut out = Vec::new();
+            if *v > self.lo {
+                out.push(self.lo);
+                out.push(self.lo + (*v - self.lo) / 2);
+            }
+            out
+        }
+    }
+
+    /// Vec of f64 with length in a range; shrinks by halving length, then
+    /// element-wise toward lo.
+    pub struct VecF64 {
+        pub lo: f64,
+        pub hi: f64,
+        pub min_len: usize,
+        pub max_len: usize,
+    }
+
+    impl Gen for VecF64 {
+        type Value = Vec<f64>;
+        fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+            let len = self.min_len + rng.index(self.max_len - self.min_len + 1);
+            (0..len).map(|_| rng.uniform_range(self.lo, self.hi)).collect()
+        }
+        fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
+            let mut out = Vec::new();
+            if v.len() > self.min_len {
+                let shorter: Vec<f64> =
+                    v[..self.min_len.max(v.len() / 2)].to_vec();
+                out.push(shorter);
+            }
+            // Zero out one element at a time.
+            for i in 0..v.len() {
+                if v[i] != self.lo {
+                    let mut w = v.clone();
+                    w[i] = self.lo;
+                    out.push(w);
+                }
+            }
+            out
+        }
+    }
+
+    /// Pair of independent generators.
+    pub struct Pair<A, B>(pub A, pub B);
+
+    impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+        type Value = (A::Value, B::Value);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (self.0.generate(rng), self.1.generate(rng))
+        }
+        fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+            let mut out: Vec<Self::Value> =
+                self.0.shrink(a).into_iter().map(|a2| (a2, b.clone())).collect();
+            out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::gens::*;
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(200, F64 { lo: 0.0, hi: 1.0 }, |x| *x >= 0.0 && *x < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_panics_with_counterexample() {
+        forall(200, F64 { lo: 0.0, hi: 1.0 }, |x| *x < 0.5);
+    }
+
+    #[test]
+    fn shrinking_minimizes_vec() {
+        // Capture the panic message and check the counterexample shrank.
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                100,
+                VecF64 { lo: 0.0, hi: 1.0, min_len: 1, max_len: 16 },
+                |xs| xs.iter().sum::<f64>() < 3.0,
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Minimal failing vec should be short (shrunk from up to 16 elems).
+        let len = msg.matches(',').count() + 1;
+        assert!(len <= 8, "weak shrink: {msg}");
+    }
+
+    #[test]
+    fn pair_generator_composes() {
+        forall(
+            100,
+            Pair(USize { lo: 1, hi: 9 }, F64 { lo: -1.0, hi: 0.0 }),
+            |(k, x)| *k >= 1 && *x <= 0.0,
+        );
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let g = F64 { lo: 0.0, hi: 1.0 };
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        for _ in 0..10 {
+            a.push(g.generate(&mut r1));
+            b.push(g.generate(&mut r2));
+        }
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,154 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! `cargo bench` targets use [`Bench`] for warmup + repeated timing with
+//! mean/std/throughput reporting, and a black-box to defeat dead-code
+//! elimination. Output format is one line per case:
+//! `bench <name> ... mean <t> ± <std>  [<throughput>]`.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Welford;
+
+/// Re-export of the std black box (stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark runner with shared settings.
+pub struct Bench {
+    /// Warmup time per case.
+    pub warmup: Duration,
+    /// Measured samples per case.
+    pub samples: usize,
+    /// Minimum time per sample (iterations are batched to reach it).
+    pub sample_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            sample_time: Duration::from_millis(60),
+        }
+    }
+}
+
+/// Result of one case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub iters_total: u64,
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(20),
+            samples: 5,
+            sample_time: Duration::from_millis(10),
+        }
+    }
+
+    /// Time `f` (called repeatedly); returns per-iteration stats and prints
+    /// a line. `items_per_iter` (if > 0) adds a throughput column.
+    pub fn case<F: FnMut()>(&self, name: &str, items_per_iter: f64, mut f: F) -> CaseResult {
+        // Warmup + batch-size estimation.
+        let mut iters_per_sample = 1u64;
+        let warm_start = Instant::now();
+        let mut single = Duration::ZERO;
+        while warm_start.elapsed() < self.warmup {
+            let t = Instant::now();
+            f();
+            single = t.elapsed();
+        }
+        if single > Duration::ZERO {
+            let per = self.sample_time.as_nanos() / single.as_nanos().max(1);
+            iters_per_sample = per.clamp(1, 1_000_000_000) as u64;
+        }
+
+        let mut w = Welford::new();
+        let mut iters_total = 0u64;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / iters_per_sample as f64;
+            w.push(ns);
+            iters_total += iters_per_sample;
+        }
+        let result = CaseResult {
+            name: name.to_string(),
+            mean_ns: w.mean(),
+            std_ns: w.sample_std(),
+            iters_total,
+        };
+        let thr = if items_per_iter > 0.0 {
+            format!("  [{:>12} items/s]", human_rate(items_per_iter * 1e9 / w.mean()))
+        } else {
+            String::new()
+        };
+        println!(
+            "bench {:<44} mean {:>12} ± {:>10}{}",
+            result.name,
+            human_time(w.mean()),
+            human_time(w.sample_std()),
+            thr
+        );
+        result
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn human_time(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Human-readable rate.
+pub fn human_rate(per_s: f64) -> String {
+    if per_s >= 1e9 {
+        format!("{:.2} G", per_s / 1e9)
+    } else if per_s >= 1e6 {
+        format!("{:.2} M", per_s / 1e6)
+    } else if per_s >= 1e3 {
+        format!("{:.2} k", per_s / 1e3)
+    } else {
+        format!("{per_s:.1} ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_measures_something() {
+        let b = Bench::quick();
+        let mut acc = 0u64;
+        let r = b.case("noop-ish", 0.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters_total > 0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_time(12.3), "12.3 ns");
+        assert!(human_time(4_500.0).contains("µs"));
+        assert!(human_time(7.2e6).contains("ms"));
+        assert!(human_rate(2.5e6).contains("M"));
+    }
+}

@@ -1,0 +1,290 @@
+//! Result serialization: CSV and a small JSON writer.
+//!
+//! serde is not in the vendored crate set, so experiments write their
+//! machine-readable outputs through this hand-rolled substrate. Only
+//! *writing* is needed at runtime (configs are read through
+//! [`crate::config::toml`]).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A JSON value tree sufficient for experiment outputs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered object.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Insert (or replace) a key in an object. Panics on non-objects.
+    pub fn set<S: Into<String>, V: Into<Json>>(&mut self, key: S, value: V) -> &mut Self {
+        let key = key.into();
+        match self {
+            Json::Obj(pairs) => {
+                if let Some(p) = pairs.iter_mut().find(|(k, _)| *k == key) {
+                    p.1 = value.into();
+                } else {
+                    pairs.push((key, value.into()));
+                }
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    /// Object-key lookup (None on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric field lookup.
+    pub fn get_num(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(x) => {
+                if x.is_finite() {
+                    if *x == x.trunc() && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null"); // JSON has no NaN/inf
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(xs) => {
+                if xs.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    x.write(out, indent);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                if pairs.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                let pad = "  ".repeat(indent + 1);
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    out.push_str(&pad);
+                    write_escaped(out, k);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                    if i + 1 < pairs.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                out.push_str(&"  ".repeat(indent));
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Json {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Json {
+        Json::Str(x)
+    }
+}
+impl From<Vec<f64>> for Json {
+    fn from(xs: Vec<f64>) -> Json {
+        Json::Arr(xs.into_iter().map(Json::from).collect())
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(xs: Vec<Json>) -> Json {
+        Json::Arr(xs)
+    }
+}
+
+/// CSV writer: quotes fields when needed (comma, quote, newline).
+#[derive(Debug, Default)]
+pub struct Csv {
+    lines: Vec<String>,
+}
+
+impl Csv {
+    pub fn new() -> Csv {
+        Csv::default()
+    }
+
+    pub fn row<S: AsRef<str>>(&mut self, cells: &[S]) -> &mut Self {
+        let line = cells.iter().map(|c| escape_csv(c.as_ref())).collect::<Vec<_>>().join(",");
+        self.lines.push(line);
+        self
+    }
+
+    pub fn row_mixed(&mut self, label: &str, values: &[f64], digits: usize) -> &mut Self {
+        let mut cells = vec![label.to_string()];
+        cells.extend(values.iter().map(|v| format!("{v:.digits$}")));
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = self.lines.join("\n");
+        s.push('\n');
+        s
+    }
+
+    pub fn write_to(&self, path: &Path) -> io::Result<()> {
+        write_file(path, &self.render())
+    }
+}
+
+fn escape_csv(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Create parent dirs and write a file atomically (tmp + rename).
+pub fn write_file(path: &Path, contents: &str) -> io::Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, contents)?;
+    fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_shape() {
+        let mut j = Json::obj();
+        j.set("name", "table1");
+        j.set("kj", 93.94);
+        j.set("ok", true);
+        j.set("series", vec![1.0, 2.5, 3.0]);
+        let s = j.render();
+        assert!(s.contains("\"name\": \"table1\""), "{s}");
+        assert!(s.contains("\"kj\": 93.94"), "{s}");
+        assert!(s.contains("[1, 2.5, 3]"), "{s}");
+    }
+
+    #[test]
+    fn json_escapes() {
+        let j = Json::Str("a\"b\\c\nd".to_string());
+        assert_eq!(j.render(), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn json_set_replaces() {
+        let mut j = Json::obj();
+        j.set("k", 1.0);
+        j.set("k", 2.0);
+        match &j {
+            Json::Obj(pairs) => assert_eq!(pairs.len(), 1),
+            _ => unreachable!(),
+        }
+        assert!(j.render().contains("2"));
+    }
+
+    #[test]
+    fn json_nan_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut c = Csv::new();
+        c.row(&["a,b", "plain", "q\"uote"]);
+        assert_eq!(c.render(), "\"a,b\",plain,\"q\"\"uote\"\n");
+    }
+
+    #[test]
+    fn write_file_creates_dirs() {
+        let dir = std::env::temp_dir().join(format!("energyucb_io_test_{}", std::process::id()));
+        let path = dir.join("nested/out.csv");
+        write_file(&path, "x\n").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "x\n");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

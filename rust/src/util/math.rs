@@ -1,0 +1,119 @@
+//! Small numeric helpers shared across the simulator and policies.
+
+/// Clamp `x` into [lo, hi].
+#[inline]
+pub fn clamp(x: f64, lo: f64, hi: f64) -> f64 {
+    debug_assert!(lo <= hi);
+    x.max(lo).min(hi)
+}
+
+/// Linear interpolation between `a` and `b` by `t` in [0,1].
+#[inline]
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+/// Piecewise-linear interpolation through `(xs, ys)` points sorted by x.
+/// Clamps outside the domain (flat extrapolation).
+pub fn interp(xs: &[f64], ys: &[f64], x: f64) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty());
+    debug_assert!(xs.windows(2).all(|w| w[0] <= w[1]), "interp xs must be sorted");
+    if x <= xs[0] {
+        return ys[0];
+    }
+    if x >= xs[xs.len() - 1] {
+        return ys[ys.len() - 1];
+    }
+    // Binary search for the segment.
+    let mut lo = 0usize;
+    let mut hi = xs.len() - 1;
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if xs[mid] <= x {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let t = (x - xs[lo]) / (xs[hi] - xs[lo]);
+    lerp(ys[lo], ys[hi], t)
+}
+
+/// Approximately-equal with relative + absolute tolerance.
+#[inline]
+pub fn approx_eq(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    let diff = (a - b).abs();
+    diff <= abs || diff <= rel * a.abs().max(b.abs())
+}
+
+/// Softmax over a slice (numerically stable).
+pub fn softmax(xs: &[f64]) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = xs.iter().map(|x| (x - m).exp()).collect();
+    let total: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / total).collect()
+}
+
+/// Round to `digits` decimal places.
+#[inline]
+pub fn round_to(x: f64, digits: u32) -> f64 {
+    let p = 10f64.powi(digits as i32);
+    (x * p).round() / p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_works() {
+        assert_eq!(clamp(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clamp(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clamp(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn interp_segments() {
+        let xs = [0.0, 1.0, 2.0];
+        let ys = [0.0, 10.0, 40.0];
+        assert!((interp(&xs, &ys, 0.5) - 5.0).abs() < 1e-12);
+        assert!((interp(&xs, &ys, 1.5) - 25.0).abs() < 1e-12);
+        // Flat extrapolation.
+        assert!((interp(&xs, &ys, -1.0) - 0.0).abs() < 1e-12);
+        assert!((interp(&xs, &ys, 3.0) - 40.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interp_hits_knots() {
+        let xs = [1.0, 1.4545, 2.0];
+        let ys = [1.0, 1.0596, 1.3297];
+        for i in 0..xs.len() {
+            assert!((interp(&xs, &ys, xs[i]) - ys[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // Stability with large values.
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn approx_eq_tolerances() {
+        assert!(approx_eq(100.0, 100.4, 0.01, 0.0));
+        assert!(!approx_eq(100.0, 102.0, 0.01, 0.0));
+        assert!(approx_eq(1e-9, 0.0, 0.0, 1e-8));
+    }
+
+    #[test]
+    fn round_to_digits() {
+        assert_eq!(round_to(1.23456, 2), 1.23);
+        assert_eq!(round_to(1.235, 2), 1.24);
+    }
+}

@@ -1,0 +1,14 @@
+//! Cross-cutting utility substrates (PRNG, statistics, tables, IO, math).
+//!
+//! The offline vendored crate set only covers the `xla` closure, so the
+//! library carries its own implementations of what would normally come from
+//! `rand`, `serde`/`serde_json`, and friends.
+
+pub mod bench;
+pub mod io;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;

@@ -1,0 +1,194 @@
+//! ASCII table rendering for the experiment reports.
+//!
+//! The experiment harness prints the paper's tables (Table 1, Table 2, the
+//! figure series) as aligned text tables; this module owns the layout.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    /// Row indices after which a horizontal rule is drawn.
+    rules: Vec<usize>,
+}
+
+impl Table {
+    /// Create a table with the given header; first column left-aligned,
+    /// the rest right-aligned (the usual layout for metric tables).
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        let header: Vec<String> = header.into_iter().map(Into::into).collect();
+        let mut aligns = vec![Align::Right; header.len()];
+        if !aligns.is_empty() {
+            aligns[0] = Align::Left;
+        }
+        Table { header, aligns, rows: Vec::new(), rules: Vec::new() }
+    }
+
+    pub fn align(mut self, col: usize, align: Align) -> Table {
+        self.aligns[col] = align;
+        self
+    }
+
+    /// Append a row; panics if the arity does not match the header.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Draw a horizontal rule after the most recent row.
+    pub fn rule(&mut self) -> &mut Self {
+        self.rules.push(self.rows.len());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for i in 0..ncols {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                match self.aligns[i] {
+                    Align::Left => {
+                        out.push(' ');
+                        out.push_str(cell);
+                        out.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        out.push_str(&" ".repeat(pad + 1));
+                        out.push_str(cell);
+                        out.push(' ');
+                    }
+                }
+                out.push('|');
+            }
+            out.push('\n');
+        };
+        out.push_str(&sep);
+        fmt_row(&self.header, &mut out);
+        out.push_str(&sep);
+        for (i, row) in self.rows.iter().enumerate() {
+            fmt_row(row, &mut out);
+            if self.rules.contains(&(i + 1)) {
+                out.push_str(&sep);
+            }
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format a float with `digits` decimal places.
+pub fn fnum(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+/// Format a float with thousands separators, paper-style ("1,353.41").
+pub fn fnum_sep(x: f64, digits: usize) -> String {
+    let s = format!("{:.*}", digits, x.abs());
+    let (int_part, frac_part) = match s.split_once('.') {
+        Some((a, b)) => (a.to_string(), Some(b.to_string())),
+        None => (s, None),
+    };
+    let mut grouped = String::new();
+    let bytes = int_part.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            grouped.push(',');
+        }
+        grouped.push(*b as char);
+    }
+    let mut out = String::new();
+    if x < 0.0 {
+        out.push('-');
+    }
+    out.push_str(&grouped);
+    if let Some(f) = frac_part {
+        out.push('.');
+        out.push_str(&f);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["name", "kJ"]);
+        t.row(vec!["lbm", "93.94"]);
+        t.row(vec!["sph_exa", "1,353.41"]);
+        let s = t.render();
+        assert!(s.contains("| name    |"), "{s}");
+        assert!(s.contains("| sph_exa | 1,353.41 |"), "{s}");
+        // All lines equal width.
+        let lens: Vec<usize> = s.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn thousands_separator() {
+        assert_eq!(fnum_sep(1353.41, 2), "1,353.41");
+        assert_eq!(fnum_sep(93.94, 2), "93.94");
+        assert_eq!(fnum_sep(-1234567.5, 1), "-1,234,567.5");
+        assert_eq!(fnum_sep(0.0, 2), "0.00");
+        assert_eq!(fnum_sep(999.99, 2), "999.99");
+        assert_eq!(fnum_sep(1000.0, 0), "1,000");
+    }
+
+    #[test]
+    fn rules_inserted() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["1"]);
+        t.rule();
+        t.row(vec!["2"]);
+        let s = t.render();
+        let seps = s.lines().filter(|l| l.starts_with('+')).count();
+        assert_eq!(seps, 4); // top, after header, mid rule, bottom
+    }
+}

@@ -1,0 +1,282 @@
+//! Trace-calibrated application models.
+//!
+//! Per-frequency node-level GPU energies are the paper's **Table 1** static
+//! rows, verbatim (kJ, one Aurora node = 6× PVC). Timing anchors come from
+//! the paper where given:
+//!
+//! * pot3d — measured execution times 56.42 s @1.6 GHz, 59.78 s @1.1 GHz,
+//!   75.02 s @0.8 GHz (Fig. 1(b));
+//! * clvleaf / miniswp — §4.6 slowdowns of 14.46 % / 6.26 % at the
+//!   1.2–1.3 GHz operating point fix their Amdahl memory-bound fractions;
+//! * tealeaf — Fig. 3's "t = 4,000 ≈ 40 s" fixes the run length scale.
+//!
+//! The remaining T(f_max) values are chosen to give realistic node power
+//! (≈ 1.7–3 kW of GPU draw) and the paper's step-count regime; powers are
+//! then *derived* as P = E / T so the static-energy table reproduces
+//! Table 1 exactly.
+
+use super::model::{AppModel, Boundedness, NoiseSpec, TimeCurve};
+
+/// Benchmark names in the paper's column order.
+pub const APP_NAMES: [&str; 9] = [
+    "lbm", "tealeaf", "clvleaf", "miniswp", "pot3d", "sph_exa", "weather", "llama", "diffusion",
+];
+
+/// Frequencies are indexed ascending: arm 0 = 0.8 GHz ... arm 8 = 1.6 GHz.
+/// (The paper's Table 1 lists rows descending; transposed here.)
+const E_LBM: [f64; 9] = [131.61, 124.28, 116.04, 109.59, 104.42, 99.88, 97.42, 93.71, 93.94];
+const E_TEALEAF: [f64; 9] = [100.59, 99.10, 98.61, 99.81, 101.65, 105.37, 105.52, 107.09, 109.79];
+const E_CLVLEAF: [f64; 9] = [91.23, 89.00, 88.41, 90.35, 90.99, 91.61, 94.72, 98.72, 100.65];
+const E_MINISWP: [f64; 9] = [158.74, 160.15, 160.17, 161.72, 164.45, 167.25, 171.60, 177.10, 187.13];
+const E_POT3D: [f64; 9] = [128.79, 125.45, 125.19, 123.38, 126.66, 125.75, 127.24, 129.11, 131.13];
+const E_SPH_EXA: [f64; 9] =
+    [1090.24, 1107.28, 1116.52, 1146.37, 1163.51, 1191.01, 1216.60, 1259.65, 1353.41];
+const E_WEATHER: [f64; 9] = [122.97, 123.38, 122.52, 120.47, 121.75, 122.80, 125.52, 128.43, 134.61];
+const E_LLAMA: [f64; 9] =
+    [1210.13, 1360.93, 1114.29, 1202.81, 1177.68, 1294.05, 1211.42, 1257.58, 1277.71];
+const E_DIFFUSION: [f64; 9] =
+    [747.20, 805.50, 766.73, 751.82, 771.07, 766.59, 770.91, 771.50, 772.21];
+
+fn amdahl(theta: f64) -> TimeCurve {
+    TimeCurve::Amdahl { theta, gamma: 1.0 }
+}
+
+/// Build every calibrated app model.
+pub fn all_apps() -> Vec<AppModel> {
+    let noise = NoiseSpec::default();
+    vec![
+        AppModel {
+            name: "lbm",
+            class: Boundedness::ComputeBound,
+            t_max_s: 35.0,
+            time_curve: amdahl(0.12),
+            energy_kj: E_LBM.to_vec(),
+            r_base: 8.0,
+            core_util: 0.96,
+            cpu_kw: 0.45,
+            other_kw: 0.24,
+            noise,
+        },
+        AppModel {
+            name: "tealeaf",
+            class: Boundedness::Mixed,
+            t_max_s: 45.0,
+            time_curve: amdahl(0.55),
+            energy_kj: E_TEALEAF.to_vec(),
+            r_base: 3.0,
+            core_util: 0.90,
+            cpu_kw: 0.48,
+            other_kw: 0.26,
+            noise,
+        },
+        AppModel {
+            name: "clvleaf",
+            // theta = 0.50 reproduces the paper's 14.46 % slowdown at the
+            // 1.2-1.3 GHz operating point (S4.6).
+            class: Boundedness::Mixed,
+            t_max_s: 40.0,
+            time_curve: amdahl(0.50),
+            energy_kj: E_CLVLEAF.to_vec(),
+            r_base: 3.2,
+            core_util: 0.91,
+            cpu_kw: 0.46,
+            other_kw: 0.25,
+            noise,
+        },
+        AppModel {
+            // theta = 0.78 reproduces the paper's 6.26 % slowdown at the
+            // 1.2-1.3 GHz operating point (S4.6).
+            name: "miniswp",
+            class: Boundedness::MemoryBound,
+            t_max_s: 65.0,
+            time_curve: amdahl(0.78),
+            energy_kj: E_MINISWP.to_vec(),
+            r_base: 1.5,
+            core_util: 0.85,
+            cpu_kw: 0.52,
+            other_kw: 0.28,
+            noise,
+        },
+        AppModel {
+            name: "pot3d",
+            class: Boundedness::Mixed,
+            t_max_s: 56.42,
+            // Measured anchors from Fig. 1(b): x = f_max/f, y = T/T_max.
+            time_curve: TimeCurve::Anchors {
+                xs: vec![1.0, 1.6 / 1.1, 2.0],
+                ys: vec![1.0, 59.78 / 56.42, 75.02 / 56.42],
+            },
+            energy_kj: E_POT3D.to_vec(),
+            r_base: 2.8,
+            core_util: 0.90,
+            // Fig. 1(a): pot3d GPU share 75.10 %, CPU 16.55 %, other 8.35 %.
+            // GPU P(1.6) = 131.13/56.42 = 2.3242 kW => CPU 0.512, other 0.258.
+            cpu_kw: 0.512,
+            other_kw: 0.258,
+            noise,
+        },
+        AppModel {
+            name: "sph_exa",
+            class: Boundedness::MemoryBound,
+            t_max_s: 480.0,
+            time_curve: amdahl(0.80),
+            energy_kj: E_SPH_EXA.to_vec(),
+            r_base: 1.4,
+            core_util: 0.85,
+            cpu_kw: 0.55,
+            other_kw: 0.30,
+            noise,
+        },
+        AppModel {
+            name: "weather",
+            class: Boundedness::Mixed,
+            t_max_s: 50.0,
+            time_curve: amdahl(0.60),
+            energy_kj: E_WEATHER.to_vec(),
+            r_base: 2.6,
+            core_util: 0.89,
+            cpu_kw: 0.47,
+            other_kw: 0.25,
+            noise,
+        },
+        AppModel {
+            name: "llama",
+            class: Boundedness::ComputeBound,
+            t_max_s: 420.0,
+            time_curve: amdahl(0.35),
+            energy_kj: E_LLAMA.to_vec(),
+            r_base: 5.0,
+            core_util: 0.94,
+            // LLM inference keeps host busier (tokenization, KV paging).
+            cpu_kw: 0.60,
+            other_kw: 0.32,
+            // The LLM rows in Table 1 are visibly noisier; widen the
+            // counter noise accordingly.
+            noise: NoiseSpec { energy_frac: 0.05, ..NoiseSpec::default() },
+        },
+        AppModel {
+            name: "diffusion",
+            class: Boundedness::MemoryBound,
+            t_max_s: 280.0,
+            time_curve: amdahl(0.70),
+            energy_kj: E_DIFFUSION.to_vec(),
+            r_base: 1.8,
+            core_util: 0.87,
+            cpu_kw: 0.50,
+            other_kw: 0.28,
+            noise: NoiseSpec { energy_frac: 0.04, ..NoiseSpec::default() },
+        },
+    ]
+}
+
+/// Look up one app model by name.
+pub fn app(name: &str) -> Option<AppModel> {
+    all_apps().into_iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::freq::FreqDomain;
+
+    #[test]
+    fn nine_apps_in_paper_order() {
+        let apps = all_apps();
+        assert_eq!(apps.len(), 9);
+        for (a, n) in apps.iter().zip(APP_NAMES) {
+            assert_eq!(a.name, n);
+        }
+    }
+
+    #[test]
+    fn table1_best_static_arms() {
+        // Best static frequency per app, read off the paper's Table 1.
+        let expect = [
+            ("lbm", 1.5),
+            ("tealeaf", 1.0),
+            ("clvleaf", 1.0),
+            ("miniswp", 0.8),
+            ("pot3d", 1.1),
+            ("sph_exa", 0.8),
+            ("weather", 1.1),
+            ("llama", 1.0),
+            ("diffusion", 0.8),
+        ];
+        let f = FreqDomain::aurora();
+        for (name, ghz) in expect {
+            let a = app(name).unwrap();
+            assert!(
+                (f.ghz(a.optimal_arm()) - ghz).abs() < 1e-9,
+                "{name}: optimal {} GHz, expected {ghz}",
+                f.ghz(a.optimal_arm())
+            );
+        }
+    }
+
+    #[test]
+    fn pot3d_matches_fig1b_anchors() {
+        let f = FreqDomain::aurora();
+        let a = app("pot3d").unwrap();
+        let t16 = a.time_s(&f, f.index_of_ghz(1.6).unwrap());
+        let t11 = a.time_s(&f, f.index_of_ghz(1.1).unwrap());
+        let t08 = a.time_s(&f, f.index_of_ghz(0.8).unwrap());
+        assert!((t16 - 56.42).abs() < 1e-6, "{t16}");
+        assert!((t11 - 59.78).abs() < 1e-2, "{t11}");
+        assert!((t08 - 75.02).abs() < 1e-2, "{t08}");
+        // Power at 1.6 close to the paper's 2.277 kW measurement (the small
+        // Table-1/Fig-1b discrepancy is the paper's own).
+        let p16 = a.power_kw(&f, f.index_of_ghz(1.6).unwrap());
+        assert!((p16 - 2.324).abs() < 0.01, "{p16}");
+    }
+
+    #[test]
+    fn qos_slowdowns_match_paper() {
+        // clvleaf 14.46 % and miniswp 6.26 % at the 1.2-1.3 GHz operating
+        // point (paper S4.6). Check at f = 1.25 equivalent: mean of arms.
+        let f = FreqDomain::aurora();
+        let clv = app("clvleaf").unwrap();
+        let msw = app("miniswp").unwrap();
+        let i12 = f.index_of_ghz(1.2).unwrap();
+        let i13 = f.index_of_ghz(1.3).unwrap();
+        let s_clv = 0.5 * (clv.slowdown(&f, i12) + clv.slowdown(&f, i13));
+        let s_msw = 0.5 * (msw.slowdown(&f, i12) + msw.slowdown(&f, i13));
+        assert!((s_clv - 0.1446).abs() < 0.02, "clvleaf slowdown {s_clv}");
+        assert!((s_msw - 0.0626).abs() < 0.01, "miniswp slowdown {s_msw}");
+    }
+
+    #[test]
+    fn powers_plausible_and_energy_exact() {
+        let f = FreqDomain::aurora();
+        for a in all_apps() {
+            for i in 0..f.k() {
+                let p = a.power_kw(&f, i);
+                assert!(p > 1.0 && p < 4.0, "{} arm {i}: power {p} kW", a.name);
+            }
+            // Spot-check calibration round-trip at the extremes.
+            assert!((a.power_kw(&f, 0) * a.time_s(&f, 0) - a.energy_kj[0]).abs() < 1e-9);
+            assert!((a.power_kw(&f, 8) * a.time_s(&f, 8) - a.energy_kj[8]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gpu_dominates_node_power() {
+        // Fig. 1(a): GPUs are the dominant consumer for every app.
+        let f = FreqDomain::aurora();
+        for a in all_apps() {
+            let gpu = a.power_kw(&f, f.k() - 1);
+            let total = gpu + a.cpu_kw + a.other_kw;
+            let share = gpu / total;
+            assert!(share > 0.60, "{}: GPU share {share}", a.name);
+        }
+    }
+
+    #[test]
+    fn pot3d_fig1a_shares() {
+        let f = FreqDomain::aurora();
+        let a = app("pot3d").unwrap();
+        let gpu = a.power_kw(&f, f.k() - 1);
+        let total = gpu + a.cpu_kw + a.other_kw;
+        assert!((gpu / total - 0.7510).abs() < 0.01, "{}", gpu / total);
+        assert!((a.cpu_kw / total - 0.1655).abs() < 0.01);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload substrate: calibrated application models (SPEChpc 2021 tiny,
+//! Llama-2, Stable Diffusion XL), phased-workload composition, and run
+//! traces. See DESIGN.md §3 for the calibration methodology.
+
+pub mod calibration;
+pub mod model;
+pub mod phase;
+pub mod trace;
+pub mod trace_calibration;
+
+pub use calibration::{all_apps, app, APP_NAMES};
+pub use model::{AppModel, Boundedness, NoiseSpec, TimeCurve};

@@ -1,0 +1,267 @@
+//! Application workload models.
+//!
+//! An [`AppModel`] describes how one benchmark behaves on the (simulated)
+//! six-GPU Aurora node as a function of GPU core frequency: execution time,
+//! node-level GPU power, and core/uncore engine utilization. The models are
+//! *trace-calibrated*: per-frequency energies are taken directly from the
+//! paper's Table 1 and timing anchors (pot3d's measured times, the QoS
+//! slowdowns of clvleaf/miniswp), so every static-frequency experiment
+//! reproduces the paper's numbers by construction, while dynamic controllers
+//! interact with the same trade-off surface mechanistically.
+
+use crate::sim::freq::FreqDomain;
+use crate::util::math::interp;
+
+/// Workload classification used for reporting and for choosing utilization
+/// parameters (the paper's compute-bound vs memory-bound discussion, §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Boundedness {
+    ComputeBound,
+    Mixed,
+    MemoryBound,
+}
+
+/// Execution-time model: ratio T(f) / T(f_max) as a function of the
+/// frequency ratio x = f_max / f >= 1.
+#[derive(Clone, Debug)]
+pub enum TimeCurve {
+    /// Amdahl-style split: `ratio(x) = theta + (1 - theta) * x^gamma`.
+    /// `theta` is the frequency-insensitive (memory-bound) time fraction.
+    Amdahl { theta: f64, gamma: f64 },
+    /// Piecewise-linear through measured anchors `(x_i, ratio_i)`,
+    /// ascending in x and starting at (1.0, 1.0). Used for pot3d where the
+    /// paper gives three measured execution times.
+    Anchors { xs: Vec<f64>, ys: Vec<f64> },
+}
+
+impl TimeCurve {
+    /// Slowdown ratio at frequency-ratio `x = f_max / f` (>= 1).
+    pub fn ratio(&self, x: f64) -> f64 {
+        debug_assert!(x >= 1.0 - 1e-9, "frequency ratio must be >= 1, got {x}");
+        match self {
+            TimeCurve::Amdahl { theta, gamma } => theta + (1.0 - theta) * x.powf(*gamma),
+            TimeCurve::Anchors { xs, ys } => {
+                // Linear extrapolation beyond the last anchor, flat below 1.
+                let n = xs.len();
+                if x > xs[n - 1] {
+                    let slope = (ys[n - 1] - ys[n - 2]) / (xs[n - 1] - xs[n - 2]);
+                    ys[n - 1] + slope * (x - xs[n - 1])
+                } else {
+                    interp(xs, ys, x)
+                }
+            }
+        }
+    }
+}
+
+/// Measurement-noise parameters for the hardware counters of this app's
+/// runs (the paper's §3.2 motivation for optimistic initialization: early
+/// readings are high-variance).
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseSpec {
+    /// Relative std-dev of the per-interval energy reading.
+    pub energy_frac: f64,
+    /// Absolute std-dev of the utilization readings.
+    pub util_std: f64,
+    /// Multiplier applied to both during the early window.
+    pub early_mult: f64,
+    /// Length of the early high-variance window, in seconds.
+    pub early_window_s: f64,
+    /// Probability of a heavy-tail counter glitch (DVFS transients,
+    /// sampling races) inflating one energy reading ...
+    pub spike_prob: f64,
+    /// ... by this factor. Heavy tails are what make squared reward forms
+    /// degrade (paper §4.5): outliers are amplified quadratically.
+    pub spike_mult: f64,
+}
+
+impl Default for NoiseSpec {
+    fn default() -> Self {
+        NoiseSpec {
+            energy_frac: 0.03,
+            util_std: 0.02,
+            early_mult: 3.0,
+            early_window_s: 0.5,
+            spike_prob: 0.01,
+            spike_mult: 4.0,
+        }
+    }
+}
+
+/// A calibrated application model (node-level: the 6-GPU aggregate).
+#[derive(Clone, Debug)]
+pub struct AppModel {
+    pub name: &'static str,
+    pub class: Boundedness,
+    /// Execution time at the maximum frequency, seconds.
+    pub t_max_s: f64,
+    /// Slowdown curve.
+    pub time_curve: TimeCurve,
+    /// Node-level GPU energy per frequency (kJ), ascending frequency order,
+    /// calibrated to the paper's Table 1.
+    pub energy_kj: Vec<f64>,
+    /// Core-to-uncore utilization ratio at f_max (compute-bound => high).
+    pub r_base: f64,
+    /// Core-engine active fraction (roughly frequency-independent).
+    pub core_util: f64,
+    /// Node CPU power draw while the app runs (kW), for Fig. 1(a).
+    pub cpu_kw: f64,
+    /// Other node components (memory, NICs, ...), kW, for Fig. 1(a).
+    pub other_kw: f64,
+    pub noise: NoiseSpec,
+}
+
+impl AppModel {
+    /// Execution time (s) if run statically at frequency index `i`.
+    pub fn time_s(&self, freqs: &FreqDomain, i: usize) -> f64 {
+        let x = freqs.max_ghz() / freqs.ghz(i);
+        self.t_max_s * self.time_curve.ratio(x)
+    }
+
+    /// Node-level GPU power (kW) at frequency index `i`, derived from the
+    /// calibrated energy table: P = E / T.
+    pub fn power_kw(&self, freqs: &FreqDomain, i: usize) -> f64 {
+        self.energy_kj[i] / self.time_s(freqs, i)
+    }
+
+    /// Fraction of total work completed per decision interval `dt_s` at
+    /// frequency index `i` (the paper's progress p_i).
+    pub fn progress_per_step(&self, freqs: &FreqDomain, i: usize, dt_s: f64) -> f64 {
+        dt_s / self.time_s(freqs, i)
+    }
+
+    /// True (noise-free) GPU energy per decision interval, Joules.
+    pub fn energy_per_step_j(&self, freqs: &FreqDomain, i: usize, dt_s: f64) -> f64 {
+        self.power_kw(freqs, i) * 1_000.0 * dt_s
+    }
+
+    /// Core-engine utilization at frequency index `i` (≈ constant: compute
+    /// engines stay busy at any clock while the app runs).
+    pub fn uc(&self, _freqs: &FreqDomain, _i: usize) -> f64 {
+        self.core_util
+    }
+
+    /// Uncore (copy-engine) utilization at frequency index `i`: data moved
+    /// per wall-second scales with the progress rate, so
+    /// `UU(f) = v * T(f_max)/T(f)` with `v = core_util / r_base`.
+    pub fn uu(&self, freqs: &FreqDomain, i: usize) -> f64 {
+        let v = self.core_util / self.r_base;
+        v * self.t_max_s / self.time_s(freqs, i)
+    }
+
+    /// Core-to-uncore ratio R = UC / UU at frequency index `i`.
+    pub fn ratio(&self, freqs: &FreqDomain, i: usize) -> f64 {
+        self.uc(freqs, i) / self.uu(freqs, i)
+    }
+
+    /// True expected per-step reward r = -E_step * R at frequency `i`
+    /// (Joules × ratio). Proportional to -E_total(i): the arm ordering under
+    /// the paper's reward is the total-energy ordering.
+    pub fn true_reward(&self, freqs: &FreqDomain, i: usize, dt_s: f64) -> f64 {
+        -self.energy_per_step_j(freqs, i, dt_s) * self.ratio(freqs, i)
+    }
+
+    /// Index of the energy-optimal static frequency (the Oracle arm).
+    pub fn optimal_arm(&self) -> usize {
+        crate::util::stats::argmin(&self.energy_kj)
+    }
+
+    /// Energy of the best static frequency, kJ.
+    pub fn optimal_energy_kj(&self) -> f64 {
+        self.energy_kj[self.optimal_arm()]
+    }
+
+    /// Relative slowdown of arm `i` vs the maximum frequency.
+    pub fn slowdown(&self, freqs: &FreqDomain, i: usize) -> f64 {
+        self.time_s(freqs, i) / self.t_max_s - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::calibration;
+
+    fn freqs() -> FreqDomain {
+        FreqDomain::aurora()
+    }
+
+    #[test]
+    fn amdahl_ratio_monotone() {
+        let c = TimeCurve::Amdahl { theta: 0.5, gamma: 1.0 };
+        assert!((c.ratio(1.0) - 1.0).abs() < 1e-12);
+        assert!(c.ratio(1.5) < c.ratio(2.0));
+        assert!((c.ratio(2.0) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn anchors_hit_measured_points() {
+        let c = TimeCurve::Anchors {
+            xs: vec![1.0, 1.4545, 2.0],
+            ys: vec![1.0, 1.0596, 1.3297],
+        };
+        assert!((c.ratio(1.0) - 1.0).abs() < 1e-9);
+        assert!((c.ratio(1.4545) - 1.0596).abs() < 1e-9);
+        assert!((c.ratio(2.0) - 1.3297).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reward_ordering_equals_energy_ordering() {
+        // The designed property: argmax of the true reward is the
+        // energy-optimal arm, for every calibrated app.
+        let f = freqs();
+        for app in calibration::all_apps() {
+            let rewards: Vec<f64> =
+                (0..f.k()).map(|i| app.true_reward(&f, i, 0.01)).collect();
+            let best = crate::util::stats::argmax(&rewards);
+            assert_eq!(
+                best,
+                app.optimal_arm(),
+                "app {}: reward argmax {} != energy argmin {}",
+                app.name,
+                best,
+                app.optimal_arm()
+            );
+        }
+    }
+
+    #[test]
+    fn progress_sums_to_one_over_exec_time() {
+        let f = freqs();
+        let app = calibration::app("pot3d").unwrap();
+        let i = f.k() - 1; // 1.6 GHz
+        let steps = (app.time_s(&f, i) / 0.01).round() as usize;
+        let total: f64 = (0..steps).map(|_| app.progress_per_step(&f, i, 0.01)).sum();
+        assert!((total - 1.0).abs() < 0.01, "total={total}");
+    }
+
+    #[test]
+    fn static_energy_matches_table1() {
+        // E = P * T must round-trip the calibrated table exactly.
+        let f = freqs();
+        for app in calibration::all_apps() {
+            for i in 0..f.k() {
+                let e = app.power_kw(&f, i) * app.time_s(&f, i);
+                assert!(
+                    (e - app.energy_kj[i]).abs() < 1e-9,
+                    "{} arm {i}: {e} != {}",
+                    app.name,
+                    app.energy_kj[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn utilizations_in_unit_range() {
+        let f = freqs();
+        for app in calibration::all_apps() {
+            for i in 0..f.k() {
+                let uc = app.uc(&f, i);
+                let uu = app.uu(&f, i);
+                assert!(uc > 0.0 && uc <= 1.0, "{} uc={uc}", app.name);
+                assert!(uu > 0.0 && uu <= 1.0, "{} uu={uu}", app.name);
+            }
+        }
+    }
+}

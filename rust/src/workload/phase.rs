@@ -1,0 +1,114 @@
+//! Phased (non-stationary) workloads — an extension beyond the paper.
+//!
+//! Real HPC jobs interleave compute-heavy and data-movement-heavy phases.
+//! The paper treats each benchmark as stationary; this module composes
+//! calibrated [`AppModel`]s into a phase sequence so we can study how the
+//! controller tracks a drifting optimum (see the `phased` ablation bench
+//! and `examples/phased_workload.rs`). Discounted EnergyUCB
+//! ([`crate::bandit::energyucb`] with `discount < 1`) is the matching
+//! algorithmic extension.
+
+use super::model::AppModel;
+
+/// One phase: an app model and its share of the total work.
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub model: AppModel,
+    /// Fraction of total work done in this phase (phases must sum to 1).
+    pub weight: f64,
+}
+
+/// A workload made of sequential phases.
+#[derive(Clone, Debug)]
+pub struct PhasedWorkload {
+    pub name: String,
+    phases: Vec<Phase>,
+}
+
+impl PhasedWorkload {
+    pub fn new(name: impl Into<String>, phases: Vec<Phase>) -> PhasedWorkload {
+        assert!(!phases.is_empty());
+        let total: f64 = phases.iter().map(|p| p.weight).sum();
+        assert!(
+            (total - 1.0).abs() < 1e-9,
+            "phase weights must sum to 1, got {total}"
+        );
+        assert!(phases.iter().all(|p| p.weight > 0.0));
+        PhasedWorkload { name: name.into(), phases }
+    }
+
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    /// The phase active when `completed` fraction of total work is done,
+    /// together with the index of that phase.
+    pub fn phase_at(&self, completed: f64) -> (usize, &Phase) {
+        let c = completed.clamp(0.0, 1.0);
+        let mut acc = 0.0;
+        for (i, p) in self.phases.iter().enumerate() {
+            acc += p.weight;
+            if c < acc - 1e-12 {
+                return (i, p);
+            }
+        }
+        (self.phases.len() - 1, self.phases.last().unwrap())
+    }
+
+    /// Remaining-work-weighted expected static energy at arm `i` (kJ):
+    /// the oracle target for a phased run.
+    pub fn static_energy_kj(&self, arm: usize) -> f64 {
+        self.phases.iter().map(|p| p.model.energy_kj[arm] * p.weight).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::calibration;
+
+    fn two_phase() -> PhasedWorkload {
+        PhasedWorkload::new(
+            "lbm+miniswp",
+            vec![
+                Phase { model: calibration::app("lbm").unwrap(), weight: 0.5 },
+                Phase { model: calibration::app("miniswp").unwrap(), weight: 0.5 },
+            ],
+        )
+    }
+
+    #[test]
+    fn phase_lookup_by_completion() {
+        let w = two_phase();
+        assert_eq!(w.phase_at(0.0).0, 0);
+        assert_eq!(w.phase_at(0.49).0, 0);
+        assert_eq!(w.phase_at(0.51).0, 1);
+        assert_eq!(w.phase_at(1.0).0, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_weights() {
+        PhasedWorkload::new(
+            "bad",
+            vec![Phase { model: calibration::app("lbm").unwrap(), weight: 0.7 }],
+        );
+    }
+
+    #[test]
+    fn static_energy_blends_phases() {
+        let w = two_phase();
+        // Arm 8 = 1.6 GHz: (93.94 + 187.13)/2.
+        assert!((w.static_energy_kj(8) - (93.94 + 187.13) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phased_optimum_can_differ_from_either_phase() {
+        let w = two_phase();
+        let energies: Vec<f64> = (0..9).map(|i| w.static_energy_kj(i)).collect();
+        let best = crate::util::stats::argmin(&energies);
+        // lbm's optimum is arm 7 (1.5 GHz), miniswp's arm 0 (0.8 GHz); the
+        // blend lands strictly between.
+        assert!(best > 0 && best < 7, "best={best}");
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-step run traces: record, summarize, and export what happened during
+//! a controlled run (frequency choices, energy, progress). Used by the
+//! figure experiments (regret curves, switching analysis) and by
+//! `examples/trace_explorer`-style tooling.
+
+use crate::util::io::{Csv, Json};
+use std::path::Path;
+
+/// One decision interval's record.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceStep {
+    /// Decision index t (1-based, like the paper's Algorithm 1).
+    pub t: u64,
+    /// Arm chosen this interval.
+    pub arm: usize,
+    /// Observed (noisy) reward fed to the policy.
+    pub reward: f64,
+    /// True GPU energy spent this interval, Joules.
+    pub energy_j: f64,
+    /// Instantaneous regret vs the oracle arm (reward units).
+    pub regret: f64,
+    /// Whether this interval performed a frequency switch.
+    pub switched: bool,
+}
+
+/// A full run trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    /// Recording can be disabled for bulk sweeps; push is then a no-op via
+    /// the caller's choice not to construct a Trace.
+    pub fn push(&mut self, step: TraceStep) {
+        debug_assert!(
+            self.steps.last().map_or(true, |s| step.t == s.t + 1),
+            "trace steps must be consecutive"
+        );
+        self.steps.push(step);
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn steps(&self) -> &[TraceStep] {
+        &self.steps
+    }
+
+    /// Cumulative-regret series (paper Fig. 3's y-axis).
+    pub fn cumulative_regret(&self) -> Vec<f64> {
+        let mut acc = 0.0;
+        self.steps
+            .iter()
+            .map(|s| {
+                acc += s.regret;
+                acc
+            })
+            .collect()
+    }
+
+    /// Total number of frequency switches.
+    pub fn switch_count(&self) -> u64 {
+        self.steps.iter().filter(|s| s.switched).count() as u64
+    }
+
+    /// Arm-selection histogram.
+    pub fn arm_histogram(&self, k: usize) -> Vec<u64> {
+        let mut h = vec![0u64; k];
+        for s in &self.steps {
+            h[s.arm] += 1;
+        }
+        h
+    }
+
+    /// Downsample the cumulative regret to at most `n` evenly-spaced points
+    /// (for figure export).
+    pub fn regret_series(&self, n: usize) -> Vec<(u64, f64)> {
+        let cum = self.cumulative_regret();
+        if cum.is_empty() {
+            return Vec::new();
+        }
+        let stride = (cum.len() / n.max(1)).max(1);
+        let mut out: Vec<(u64, f64)> = cum
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % stride == 0)
+            .map(|(i, r)| ((i + 1) as u64, *r))
+            .collect();
+        // Always include the final point.
+        let last = (cum.len() as u64, *cum.last().unwrap());
+        if out.last() != Some(&last) {
+            out.push(last);
+        }
+        out
+    }
+
+    /// Export as CSV: t, arm, reward, energy_j, regret, switched.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut csv = Csv::new();
+        csv.row(&["t", "arm", "reward", "energy_j", "regret", "switched"]);
+        for s in &self.steps {
+            csv.row(&[
+                s.t.to_string(),
+                s.arm.to_string(),
+                format!("{:.6}", s.reward),
+                format!("{:.6}", s.energy_j),
+                format!("{:.6}", s.regret),
+                (s.switched as u8).to_string(),
+            ]);
+        }
+        csv.write_to(path)
+    }
+
+    /// Compact JSON summary.
+    pub fn summary_json(&self, k: usize) -> Json {
+        let mut j = Json::obj();
+        j.set("steps", self.len());
+        j.set("switches", self.switch_count() as i64);
+        j.set(
+            "final_regret",
+            self.cumulative_regret().last().copied().unwrap_or(0.0),
+        );
+        j.set(
+            "arm_histogram",
+            Json::Arr(self.arm_histogram(k).iter().map(|c| Json::Num(*c as f64)).collect()),
+        );
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_trace() -> Trace {
+        let mut tr = Trace::new();
+        for t in 1..=10u64 {
+            tr.push(TraceStep {
+                t,
+                arm: (t % 3) as usize,
+                reward: -1.0,
+                energy_j: 20.0,
+                regret: 0.5,
+                switched: t % 2 == 0,
+            });
+        }
+        tr
+    }
+
+    #[test]
+    fn cumulative_regret_monotone() {
+        let tr = mk_trace();
+        let cum = tr.cumulative_regret();
+        assert_eq!(cum.len(), 10);
+        assert!((cum[9] - 5.0).abs() < 1e-12);
+        assert!(cum.windows(2).all(|w| w[1] >= w[0]));
+    }
+
+    #[test]
+    fn histogram_counts_all_steps() {
+        let tr = mk_trace();
+        let h = tr.arm_histogram(3);
+        assert_eq!(h.iter().sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn switch_count() {
+        assert_eq!(mk_trace().switch_count(), 5);
+    }
+
+    #[test]
+    fn regret_series_includes_endpoint() {
+        let tr = mk_trace();
+        let s = tr.regret_series(4);
+        assert_eq!(s.last().unwrap().0, 10);
+        assert!((s.last().unwrap().1 - 5.0).abs() < 1e-12);
+        assert!(s.len() <= 6);
+    }
+
+    #[test]
+    fn csv_export_shape() {
+        let tr = mk_trace();
+        let dir = std::env::temp_dir().join(format!("energyucb_trace_{}", std::process::id()));
+        let path = dir.join("trace.csv");
+        tr.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 11);
+        assert!(text.starts_with("t,arm,reward"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn summary_json_fields() {
+        let j = mk_trace().summary_json(3);
+        let s = j.render();
+        assert!(s.contains("\"steps\": 10"), "{s}");
+        assert!(s.contains("\"switches\": 5"), "{s}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Property-based integration tests over coordinator invariants, using the
+//! in-tree `proptest_lite` substrate (routing/selection, accounting, state
+//! management — the L3 invariants the brief calls out).
+
+use energyucb::bandit::{
+    ConstrainedEnergyUcb, EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, Policy,
+    RoundRobin, Ucb1,
+};
+use energyucb::sim::freq::{DvfsState, FreqDomain, SwitchCost};
+use energyucb::testutil::proptest_lite::{forall_seeded, Gen};
+use energyucb::util::Rng;
+
+/// Every policy must only ever select arms in range, for any reward stream.
+#[test]
+fn prop_policies_select_in_range() {
+    struct Case;
+    impl Gen for Case {
+        type Value = (u64, usize, Vec<f64>);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            let seed = rng.next_u64();
+            let k = 2 + rng.index(14);
+            let rewards = (0..200).map(|_| rng.uniform_range(-3.0, 0.0)).collect();
+            (seed, k, rewards)
+        }
+    }
+    forall_seeded(1, 40, Case, |(seed, k, rewards)| {
+        let k = *k;
+        let mut policies: Vec<Box<dyn Policy>> = vec![
+            Box::new(EnergyUcb::new(k, EnergyUcbConfig::default())),
+            Box::new(ConstrainedEnergyUcb::new(k, EnergyUcbConfig::default(), 0.1)),
+            Box::new(Ucb1::new(k, 0.05)),
+            Box::new(EpsilonGreedy::new(k, 0.1, 10.0, *seed)),
+            Box::new(EnergyTs::default_for(k, *seed)),
+            Box::new(RoundRobin::new(k)),
+        ];
+        for policy in policies.iter_mut() {
+            for (i, r) in rewards.iter().enumerate() {
+                let t = (i + 1) as u64;
+                let arm = policy.select(t);
+                if arm >= k {
+                    return false;
+                }
+                policy.update(arm, *r, 1e-4);
+            }
+        }
+        true
+    });
+}
+
+/// Pull counts always sum to the number of updates; reset really resets.
+#[test]
+fn prop_energyucb_count_conservation() {
+    struct Case;
+    impl Gen for Case {
+        type Value = (u64, usize);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (rng.next_u64(), 10 + rng.index(500))
+        }
+    }
+    forall_seeded(2, 50, Case, |(seed, steps)| {
+        let mut rng = Rng::new(*seed);
+        let mut p = EnergyUcb::new(9, EnergyUcbConfig::default());
+        for t in 1..=*steps as u64 {
+            let arm = p.select(t);
+            p.update(arm, rng.normal(-1.0, 0.1), 1e-4);
+        }
+        let total: f64 = (0..9).map(|i| p.count(i)).sum();
+        if (total - *steps as f64).abs() > 1e-9 {
+            return false;
+        }
+        p.reset();
+        (0..9).all(|i| p.count(i) == 0.0)
+    });
+}
+
+/// The SA-UCB index is monotone in the mean and anti-monotone in the
+/// switching penalty.
+#[test]
+fn prop_saucb_monotonicity() {
+    struct Case;
+    impl Gen for Case {
+        type Value = (f64, f64, u64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (
+                rng.uniform_range(-2.0, 0.0),
+                rng.uniform_range(0.0, 0.3),
+                2 + rng.below(100_000),
+            )
+        }
+    }
+    forall_seeded(3, 100, Case, |(mean, lambda, t)| {
+        let mk = |lam: f64, reward: f64| {
+            let mut p = EnergyUcb::new(
+                3,
+                EnergyUcbConfig { lambda: lam, ..EnergyUcbConfig::default() },
+            );
+            p.update(1, reward, 0.0); // prev = 1
+            p
+        };
+        // Higher mean -> higher index for that arm.
+        let lo = mk(*lambda, *mean);
+        let hi = mk(*lambda, *mean + 0.5);
+        if hi.sa_ucb(1, *t) <= lo.sa_ucb(1, *t) {
+            return false;
+        }
+        // Larger lambda -> lower index for non-prev arms, unchanged for prev.
+        let small = mk(0.0, *mean);
+        let big = mk(*lambda, *mean);
+        big.sa_ucb(0, *t) <= small.sa_ucb(0, *t) + 1e-12
+            && (big.sa_ucb(1, *t) - small.sa_ucb(1, *t)).abs() < 1e-12
+    });
+}
+
+/// DVFS accounting: switch count equals the number of actual transitions,
+/// and overheads are exactly count × unit cost.
+#[test]
+fn prop_dvfs_accounting() {
+    struct Case;
+    impl Gen for Case {
+        type Value = Vec<usize>;
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (0..rng.index(300)).map(|_| rng.index(9)).collect()
+        }
+        fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+            if v.len() > 1 {
+                vec![v[..v.len() / 2].to_vec()]
+            } else {
+                Vec::new()
+            }
+        }
+    }
+    forall_seeded(4, 60, Case, |requests| {
+        let freqs = FreqDomain::aurora();
+        let cost = SwitchCost::default();
+        let mut dvfs = DvfsState::new(&freqs, cost);
+        let mut expected = 0u64;
+        let mut current = freqs.max_arm();
+        for &arm in requests {
+            if arm != current {
+                expected += 1;
+                current = arm;
+            }
+            dvfs.request(arm);
+        }
+        dvfs.switches() == expected
+            && (dvfs.switch_energy_j() - expected as f64 * cost.energy_j).abs() < 1e-9
+            && (dvfs.switch_time_s() - expected as f64 * cost.latency_s).abs() < 1e-12
+    });
+}
+
+/// Constrained EnergyUCB never leaves an empty feasible set and never
+/// selects an arm it has measured as over-budget (after estimates settle).
+#[test]
+fn prop_constrained_feasibility() {
+    struct Case;
+    impl Gen for Case {
+        type Value = (u64, f64);
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (rng.next_u64(), rng.uniform_range(0.01, 0.5))
+        }
+    }
+    forall_seeded(5, 30, Case, |(seed, delta)| {
+        let mut rng = Rng::new(*seed);
+        let mut p = ConstrainedEnergyUcb::new(9, EnergyUcbConfig::default(), *delta);
+        // True progress follows an Amdahl curve.
+        let progress = |arm: usize| {
+            let f = 0.8 + 0.1 * arm as f64;
+            1e-3 / (0.4 + 0.6 * (1.6 / f))
+        };
+        for t in 1..=2000u64 {
+            let arm = p.select(t);
+            if arm >= 9 {
+                return false;
+            }
+            p.update(arm, rng.normal(-1.0, 0.05), progress(arm));
+        }
+        // Feasible set must contain the max arm.
+        p.feasible_set()[8]
+    });
+}
