@@ -10,6 +10,15 @@ import jax.numpy as jnp
 
 NEG_LARGE = -3.0e38  # effectively -inf for f32 masking without NaN risk
 
+# Shared switch-cost contract — the python-side single source for the DVFS
+# transition constants baked into exported artifacts. Mirrors the rust
+# definition `sim::freq::SwitchCost::default()` (150 µs stall of a 10 ms
+# decision interval, 0.3 J per node-level transition); the rust native
+# engine derives the same values via `FleetParams::from_apps`, and the
+# cross-engine tests keep the two in lockstep.
+SWITCH_STALL_FRAC = 0.015
+SWITCH_ENERGY_J = 0.3
+
 
 def saucb_index_ref(mu_hat, counts, prev, feasible, alpha, lam, t):
     """Switching-aware UCB index (paper Eq. 5) + masked argmax.
@@ -86,11 +95,12 @@ def fleet_step_ref(state, params, noise, hyper):
     new_mean = mean.at[rows, sel].add(delta)
 
     switched = (sel != prev).astype(n.dtype) * active
-    # Switch stall eats 150 us of the 10 ms interval; energy +0.3 J.
-    useful = 1.0 - 0.015 * switched
+    useful = 1.0 - SWITCH_STALL_FRAC * switched
     prog = params["progress"][rows, sel] * useful * active
     new_remaining = jnp.maximum(remaining - prog, 0.0)
-    step_energy = (params["energy_step"][rows, sel] + 0.3 * switched) * active
+    step_energy = (
+        params["energy_step"][rows, sel] + SWITCH_ENERGY_J * switched
+    ) * active
     best = jnp.max(
         jnp.where(params["feasible"] > 0, params["reward_mean"], NEG_LARGE), axis=1
     )

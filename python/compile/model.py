@@ -73,10 +73,12 @@ def fleet_step(
     new_mean = mean.at[rows, sel].add(delta)
 
     switched = (sel != prev).astype(n.dtype) * active
-    useful = 1.0 - 0.015 * switched  # 150 us stall of a 10 ms interval
+    # Switch constants come from the shared contract in kernels/ref.py
+    # (mirroring rust sim::freq::SwitchCost) — never restate them here.
+    useful = 1.0 - ref.SWITCH_STALL_FRAC * switched
     prog = progress[rows, sel] * useful * active
     new_remaining = jnp.maximum(remaining - prog, 0.0)
-    step_energy = (energy_step[rows, sel] + 0.3 * switched) * active
+    step_energy = (energy_step[rows, sel] + ref.SWITCH_ENERGY_J * switched) * active
     best = jnp.max(jnp.where(feasible > 0, reward_mean, ref.NEG_LARGE), axis=1)
     regret = (best - reward_mean[rows, sel]) * active
 

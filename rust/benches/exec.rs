@@ -1,0 +1,76 @@
+//! Executor scaling bench: wall-clock of a fixed session grid at
+//! increasing `--jobs`, plus the table1-quick end-to-end wall-clock at
+//! jobs = 1 vs jobs = all-cores. This regenerates the before/after numbers
+//! recorded in EXPERIMENTS.md §Perf (the acceptance target: table1 ≥ 3×
+//! faster at 8 jobs on an 8-core box).
+
+use std::time::Instant;
+
+use energyucb::bandit::{EnergyUcb, EnergyUcbConfig};
+use energyucb::control::{run_session, SessionCfg};
+use energyucb::exec::{available_jobs, run_indexed};
+use energyucb::experiments::{ExpContext, Experiment};
+use energyucb::workload::calibration;
+
+fn main() {
+    let cores = available_jobs();
+    println!("# executor scaling ({cores} cores available)");
+
+    // Fixed-size grid: 32 bounded EnergyUCB sessions on clvleaf.
+    let app = calibration::app("clvleaf").unwrap();
+    let cells = 32usize;
+    let run_grid = |jobs: usize| -> (std::time::Duration, f64) {
+        let t0 = Instant::now();
+        let energies = run_indexed(jobs, cells, |i| {
+            let mut policy = EnergyUcb::new(9, EnergyUcbConfig::default());
+            let cfg = SessionCfg { seed: 100 + i as u64, max_steps: 2_000, ..SessionCfg::default() };
+            run_session(&app, &mut policy, &cfg).metrics.gpu_energy_kj
+        });
+        (t0.elapsed(), energies.iter().sum())
+    };
+
+    let (base_wall, base_sum) = run_grid(1);
+    println!(
+        "bench exec/grid32/jobs=1   {:>8.3} s  (reference)",
+        base_wall.as_secs_f64()
+    );
+    let mut jobs = 2;
+    while jobs <= cores.max(2) {
+        let (wall, sum) = run_grid(jobs);
+        assert_eq!(sum, base_sum, "executor output changed with jobs={jobs}");
+        println!(
+            "bench exec/grid32/jobs={jobs:<3} {:>8.3} s  ({:.2}x, byte-identical ✓)",
+            wall.as_secs_f64(),
+            base_wall.as_secs_f64() / wall.as_secs_f64().max(1e-9)
+        );
+        jobs *= 2;
+    }
+
+    // End-to-end: table1 in quick mode, 1 job vs all cores.
+    println!("\n# table1 (quick, reps=2) end-to-end");
+    let table1 = energyucb::experiments::table1::Table1;
+    let out = std::env::temp_dir().join("energyucb_exec_bench");
+    let mut walls = Vec::new();
+    for jobs in [1usize, cores] {
+        let ctx = ExpContext {
+            quick: true,
+            reps: 2,
+            jobs,
+            out_dir: out.clone(),
+            ..ExpContext::default()
+        };
+        let t0 = Instant::now();
+        let report = table1.run(&ctx).expect("table1 runs");
+        let wall = t0.elapsed();
+        walls.push((jobs, wall, report.text));
+        println!("bench exec/table1-quick/jobs={jobs:<3} {:>8.3} s", wall.as_secs_f64());
+    }
+    if let [(_, w1, t1), (j, wn, tn)] = &walls[..] {
+        assert_eq!(t1, tn, "table1 report changed between jobs=1 and jobs={j}");
+        println!(
+            "table1-quick speedup at jobs={j}: {:.2}x (report byte-identical ✓)",
+            w1.as_secs_f64() / wn.as_secs_f64().max(1e-9)
+        );
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}

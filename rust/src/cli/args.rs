@@ -11,15 +11,26 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum ArgError {
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     BadValue(String, String),
-    #[error("unknown option --{0}")]
     Unknown(String),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::MissingValue(name) => write!(f, "option --{name} expects a value"),
+            ArgError::BadValue(name, value) => {
+                write!(f, "invalid value for --{name}: {value}")
+            }
+            ArgError::Unknown(name) => write!(f, "unknown option --{name}"),
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 impl Args {
     /// Parse raw arguments. `known_flags` take no value; any other `--x`

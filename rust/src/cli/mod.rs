@@ -28,13 +28,15 @@ pub const USAGE: &str = "\
 energyucb — online GPU energy optimization with switching-aware bandits
 
 USAGE:
-  energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--quick]
+  energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--jobs J] [--quick]
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
   energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
   energyucb list
   energyucb help
 
-Experiments regenerate the paper's tables/figures (see `energyucb list`).";
+Experiments regenerate the paper's tables/figures (see `energyucb list`).
+--jobs shards the experiment grid across J worker threads (default: all
+cores); output is byte-identical at any J (see EXPERIMENTS.md).";
 
 /// Entry point used by main(); returns the process exit code.
 pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
@@ -59,7 +61,7 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
 
 fn cmd_exp(rest: &[String]) -> Result<i32> {
     let args = Args::parse(rest, &["quick"])?;
-    args.ensure_known(&["reps", "seed", "out"])?;
+    args.ensure_known(&["reps", "seed", "out", "jobs"])?;
     let Some(id) = args.positional().first() else {
         bail!("exp: missing experiment id (try `energyucb list`)");
     };
@@ -72,6 +74,12 @@ fn cmd_exp(rest: &[String]) -> Result<i32> {
     }
     if let Some(o) = args.get("out") {
         ctx.out_dir = PathBuf::from(o);
+    }
+    if let Some(j) = args.get_usize("jobs")? {
+        if j == 0 {
+            bail!("exp: --jobs must be >= 1");
+        }
+        ctx.jobs = j;
     }
     ctx.quick = args.flag("quick");
 
@@ -125,7 +133,7 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
         cfg.seed = s;
     }
 
-    let freqs = FreqDomain::aurora();
+    let freqs = FreqDomain::aurora().with_switch_cost(cfg.switch_cost);
     let mut table = Table::new(vec![
         "app", "policy", "energy (kJ)", "saved (kJ)", "regret (kJ)", "time (s)", "switches",
     ]);
@@ -136,6 +144,7 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
             seed: cfg.seed,
             reward_form: cfg.reward_form,
             record_trace: args.flag("trace"),
+            switch_cost: cfg.switch_cost,
             ..SessionCfg::default()
         };
         let results = run_repeated(&app, policy.as_mut(), &scfg, cfg.reps, cfg.seed);
@@ -276,6 +285,11 @@ mod tests {
     fn exp_requires_id() {
         assert!(dispatch(&["exp"]).is_err());
         assert!(dispatch(&["exp", "not-an-exp"]).is_err());
+    }
+
+    #[test]
+    fn exp_rejects_zero_jobs() {
+        assert!(dispatch(&["exp", "fig1b", "--jobs", "0"]).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use super::toml::{self, Value};
 use crate::bandit::energyucb::{EnergyUcbConfig, InitStrategy};
 use crate::bandit::RewardForm;
+use crate::sim::freq::SwitchCost;
 
 /// Which policy to construct.
 #[derive(Clone, Debug, PartialEq)]
@@ -33,6 +34,9 @@ pub struct ExperimentConfig {
     pub record_trace: bool,
     /// Output directory for CSV/JSON results.
     pub out_dir: String,
+    /// Per-transition DVFS cost (`[switch] latency_s / energy_j`; defaults
+    /// to the paper's measured 150 µs / 0.3 J).
+    pub switch_cost: SwitchCost,
 }
 
 impl Default for ExperimentConfig {
@@ -46,17 +50,40 @@ impl Default for ExperimentConfig {
             reward_form: RewardForm::EnergyRatio,
             record_trace: false,
             out_dir: "results".into(),
+            switch_cost: SwitchCost::default(),
         }
     }
 }
 
 /// Schema errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error(transparent)]
-    Parse(#[from] toml::ParseError),
-    #[error("invalid config: {0}")]
+    Parse(toml::ParseError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse(e) => write!(f, "{e}"),
+            ConfigError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        // Parse is "transparent": Display already shows the inner parse
+        // error, so exposing it as source() too would print it twice in
+        // chained (`{err:#}`) output.
+        None
+    }
+}
+
+impl From<toml::ParseError> for ConfigError {
+    fn from(e: toml::ParseError) -> ConfigError {
+        ConfigError::Parse(e)
+    }
 }
 
 fn invalid<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
@@ -115,6 +142,23 @@ impl ExperimentConfig {
                 "E*R^2" => RewardForm::EnergyRatioSquared,
                 other => return invalid(format!("unknown reward_form: {other}")),
             };
+        }
+        if let Some(v) = root.get_float("switch.latency_s") {
+            // Must fit inside one decision interval: a stall >= dt_s would
+            // make the switching step's useful time non-positive.
+            if v < 0.0 || v >= cfg.dt_s {
+                return invalid(format!(
+                    "switch.latency_s must be in [0, dt_s = {})",
+                    cfg.dt_s
+                ));
+            }
+            cfg.switch_cost.latency_s = v;
+        }
+        if let Some(v) = root.get_float("switch.energy_j") {
+            if v < 0.0 {
+                return invalid("switch.energy_j must be >= 0");
+            }
+            cfg.switch_cost.energy_j = v;
         }
         if let Some(name) = root.get_str("policy.name") {
             cfg.policy = Self::parse_policy(name, root)?;
@@ -284,6 +328,23 @@ alpha = -1.0
             let p = c.build_policy(9, 1);
             assert_eq!(p.k(), 9, "{name}");
         }
+    }
+
+    #[test]
+    fn switch_cost_parses_and_validates() {
+        let text = "[switch]\nlatency_s = 0.0003\nenergy_j = 1.2\n";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert!((c.switch_cost.latency_s - 300e-6).abs() < 1e-12);
+        assert!((c.switch_cost.energy_j - 1.2).abs() < 1e-12);
+        // Defaults when absent.
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(c.switch_cost, SwitchCost::default());
+        assert!(ExperimentConfig::from_toml("[switch]\nenergy_j = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[switch]\nlatency_s = 2.0").is_err());
+        // A stall >= the decision interval would run progress backwards.
+        assert!(ExperimentConfig::from_toml("[switch]\nlatency_s = 0.01").is_err());
+        // ... unless dt_s is raised accordingly.
+        assert!(ExperimentConfig::from_toml("dt_s = 0.1\n[switch]\nlatency_s = 0.01").is_ok());
     }
 
     #[test]

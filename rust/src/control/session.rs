@@ -9,7 +9,7 @@
 
 use crate::bandit::{Policy, RewardForm, RewardNormalizer};
 use crate::geopm::{Control, Service};
-use crate::sim::freq::FreqDomain;
+use crate::sim::freq::{FreqDomain, SwitchCost};
 use crate::sim::node::Node;
 use crate::workload::model::AppModel;
 use crate::workload::trace::{Trace, TraceStep};
@@ -31,6 +31,8 @@ pub struct SessionCfg {
     pub reward_form: RewardForm,
     /// Number of progress checkpoints for phase-energy accounting.
     pub checkpoints: usize,
+    /// Per-transition DVFS cost (paper default: 150 µs, 0.3 J).
+    pub switch_cost: SwitchCost,
 }
 
 impl Default for SessionCfg {
@@ -42,6 +44,7 @@ impl Default for SessionCfg {
             max_steps: 2_000_000,
             reward_form: RewardForm::EnergyRatio,
             checkpoints: 100,
+            switch_cost: SwitchCost::default(),
         }
     }
 }
@@ -78,7 +81,7 @@ impl RunResult {
 
 /// Run one session to completion.
 pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) -> RunResult {
-    let freqs = FreqDomain::aurora();
+    let freqs = FreqDomain::aurora().with_switch_cost(cfg.switch_cost);
     assert_eq!(policy.k(), freqs.k(), "policy arity must match frequency domain");
     let node = Node::new(app.clone(), freqs.clone(), cfg.dt_s, cfg.seed);
     let mut service = Service::new(node);
@@ -255,6 +258,25 @@ mod tests {
         for v in &e {
             assert!(*v > 85.0 && *v < 105.0, "{v}");
         }
+    }
+
+    #[test]
+    fn session_honors_custom_switch_cost() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = RoundRobin::new(9);
+        let cfg = SessionCfg {
+            switch_cost: SwitchCost { latency_s: 150e-6, energy_j: 0.9 },
+            ..SessionCfg::default()
+        };
+        let res = run_session(&app, &mut policy, &cfg);
+        assert!(res.metrics.switches > 0);
+        // 0.9 J per node-level transition, end to end through the service.
+        assert!(
+            (res.metrics.switch_energy_j - res.metrics.switches as f64 * 0.9).abs() < 1e-6,
+            "{} switches, {} J",
+            res.metrics.switches,
+            res.metrics.switch_energy_j
+        );
     }
 
     #[test]

@@ -1,0 +1,76 @@
+//! Deterministic parallel experiment executor.
+//!
+//! Every paper experiment is a grid of independent *cells* — one
+//! (app × method × seed) simulation whose result depends only on the cell's
+//! coordinates. This module runs such grids across a bounded worker pool
+//! and reduces the results in stable cell order, so experiment output
+//! (tables, CSVs, JSON) is **byte-identical at `--jobs 1` and `--jobs N`**.
+//!
+//! The determinism contract (documented in EXPERIMENTS.md §Executor):
+//!
+//! 1. A cell is a pure function of its index: it derives its RNG/seed from
+//!    the cell coordinates (never from shared mutable state) and performs
+//!    no I/O. All file writes happen in the caller after the reduce.
+//! 2. Scheduling only decides *when* a cell runs, never *what* it
+//!    computes; results are re-ordered by cell index before any reduction.
+//! 3. Reductions run sequentially in cell order on the caller's thread,
+//!    so floating-point accumulation order is fixed — the reduce is the
+//!    same arithmetic at every `--jobs` value. Variance aggregates use
+//!    [`Welford::merge`] (parallel Welford / Chan et al.) in stable rep
+//!    order.
+
+pub mod grid;
+pub mod pool;
+
+pub use grid::{cell_rng, CellGrid};
+pub use pool::{available_jobs, run_indexed};
+
+use crate::util::stats::Welford;
+
+/// Reduce a rep-major cell vector (`reps` consecutive values per group)
+/// into one [`Welford`] accumulator per group, accumulating in stable rep
+/// order. `values.len()` must be a multiple of `reps`. (Sharded partial
+/// accumulators would combine with [`Welford::merge`]; with per-cell
+/// scalars a sequential push in rep order is the same fixed-order
+/// arithmetic, stated more directly.)
+pub fn reduce_reps(values: &[f64], reps: usize) -> Vec<Welford> {
+    assert!(reps > 0, "reduce_reps: reps must be > 0");
+    assert_eq!(values.len() % reps, 0, "reduce_reps: ragged grid");
+    values
+        .chunks(reps)
+        .map(|chunk| {
+            let mut acc = Welford::new();
+            for &x in chunk {
+                acc.push(x);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_reps_matches_sequential_welford() {
+        let values: Vec<f64> = (0..12).map(|i| (i as f64).cos() * 5.0).collect();
+        let reduced = reduce_reps(&values, 4);
+        assert_eq!(reduced.len(), 3);
+        for (g, w) in reduced.iter().enumerate() {
+            let mut seq = Welford::new();
+            for &x in &values[g * 4..(g + 1) * 4] {
+                seq.push(x);
+            }
+            assert_eq!(w.count(), 4);
+            assert_eq!(w.mean(), seq.mean());
+            assert_eq!(w.sample_std(), seq.sample_std());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn reduce_reps_rejects_ragged() {
+        reduce_reps(&[1.0, 2.0, 3.0], 2);
+    }
+}

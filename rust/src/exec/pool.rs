@@ -1,0 +1,109 @@
+//! Bounded std::thread worker pool over an indexed cell space.
+//!
+//! Same no-new-deps pattern as `cluster::leader` (scoped std threads, no
+//! rayon/tokio), but work-stealing by atomic index instead of fixed waves:
+//! experiment cells vary in cost by orders of magnitude (a static lbm run
+//! vs a DRLCap-Cross pretrain), so waves would leave cores idle behind the
+//! slowest cell of each wave.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default (the machine's available
+/// parallelism; 1 if it cannot be queried).
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Evaluate `f(0..n)` across at most `jobs` worker threads and return the
+/// results **in index order** regardless of completion order.
+///
+/// `f` must be a pure function of the index (the executor's determinism
+/// contract): with that, the output is identical for every `jobs` value.
+/// `jobs <= 1` runs inline on the caller's thread with no pool at all —
+/// the reference execution the parallel path must (and does) reproduce.
+/// A panicking cell propagates the panic to the caller after the pool
+/// drains, like the sequential loop would.
+pub fn run_indexed<T, F>(jobs: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = jobs.max(1).min(n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                // One lock per worker lifetime, not per cell.
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+
+    let mut results = collected.into_inner().unwrap();
+    results.sort_unstable_by_key(|(i, _)| *i);
+    assert_eq!(results.len(), n, "worker pool lost cells");
+    results.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        // Uneven cell costs force out-of-order completion.
+        let out = run_indexed(4, 64, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i * 3
+        });
+        assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn identical_across_job_counts() {
+        // A seeded-RNG cell function: pure in the index.
+        let cell = |i: usize| {
+            let mut rng = crate::util::Rng::new(1000 + i as u64);
+            (0..100).map(|_| rng.uniform()).sum::<f64>()
+        };
+        let sequential = run_indexed(1, 40, cell);
+        for jobs in [2, 3, 8, 64] {
+            assert_eq!(run_indexed(jobs, 40, cell), sequential, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn handles_edge_sizes() {
+        assert_eq!(run_indexed(8, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(8, 1, |i| i + 1), vec![1]);
+        assert_eq!(run_indexed(1, 3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn actually_runs_on_multiple_threads() {
+        use std::collections::BTreeSet;
+        use std::sync::Mutex;
+        let ids: Mutex<BTreeSet<std::thread::ThreadId>> = Mutex::new(BTreeSet::new());
+        run_indexed(4, 64, |_| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(ids.lock().unwrap().len() > 1, "pool never left the caller thread");
+    }
+}

@@ -8,6 +8,7 @@ use super::report::{vs_paper, ExpContext, Report};
 use super::Experiment;
 use crate::bandit::StaticPolicy;
 use crate::control::{run_session, SessionCfg};
+use crate::exec::run_indexed;
 use crate::sim::freq::FreqDomain;
 use crate::util::io::Json;
 use crate::util::table::{fnum, Table};
@@ -29,17 +30,20 @@ impl Experiment for Fig1a {
         let freqs = FreqDomain::aurora();
         let mut table = Table::new(vec!["app", "GPU %", "CPU %", "other %", "total kJ"]);
         let mut json_rows = Vec::new();
-        for app in calibration::all_apps() {
-            // Run the node at the default frequency to completion (the
-            // motivation figure's setting).
+        // One cell per app (run at the default frequency to completion —
+        // the motivation figure's setting), reduced in suite order.
+        let all = calibration::all_apps();
+        let results = run_indexed(ctx.jobs, all.len(), |a| {
             let mut policy = StaticPolicy::labeled(freqs.k(), freqs.max_arm(), "1.6 GHz");
             let cfg = SessionCfg { seed: ctx.seed, ..SessionCfg::default() };
-            let app_run = if ctx.quick { scale_app(&app, 8.0) } else { app.clone() };
+            let app_run = if ctx.quick { scale_app(&all[a], 8.0) } else { all[a].clone() };
             let res = run_session(&app_run, &mut policy, &cfg);
-            let gpu = res.metrics.gpu_energy_kj;
+            (res.metrics.gpu_energy_kj, res.metrics.exec_time_s)
+        });
+        for (app, (gpu, exec_time_s)) in all.iter().zip(results) {
             // CPU/other accounted by the node model.
-            let cpu = app_run.cpu_kw * res.metrics.exec_time_s;
-            let other = app_run.other_kw * res.metrics.exec_time_s;
+            let cpu = app.cpu_kw * exec_time_s;
+            let other = app.other_kw * exec_time_s;
             let total = gpu + cpu + other;
             table.row(vec![
                 app.name.to_string(),
@@ -92,13 +96,20 @@ impl Experiment for Fig1b {
         let mut table =
             Table::new(vec!["GHz", "power kW", "time s", "energy kJ", "paper kJ (Fig.1b)"]);
         let mut json_rows = Vec::new();
-        for (ghz, p_kw, t_s, e_kj) in paper::FIG1B {
+        // One cell per plotted frequency.
+        let cells = run_indexed(ctx.jobs, paper::FIG1B.len(), |i| {
+            let (ghz, _, _, _) = paper::FIG1B[i];
             let arm = freqs.index_of_ghz(ghz).unwrap();
             let mut policy = StaticPolicy::new(freqs.k(), arm);
             let cfg = SessionCfg { seed: ctx.seed, ..SessionCfg::default() };
             let res = run_session(&app_run, &mut policy, &cfg);
-            let time = res.metrics.exec_time_s * scale;
-            let energy = res.metrics.gpu_energy_kj * scale;
+            (res.metrics.exec_time_s, res.metrics.gpu_energy_kj)
+        });
+        for ((ghz, p_kw, t_s, e_kj), (exec_time_s, gpu_kj)) in
+            paper::FIG1B.into_iter().zip(cells)
+        {
+            let time = exec_time_s * scale;
+            let energy = gpu_kj * scale;
             let power = energy / time;
             table.row(vec![
                 format!("{ghz:.1}"),

@@ -13,6 +13,7 @@ use super::report::{ExpContext, Report};
 use super::Experiment;
 use crate::bandit::{EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, Policy, RoundRobin};
 use crate::control::{run_session, SessionCfg};
+use crate::exec::{run_indexed, CellGrid};
 use crate::rl::RlPower;
 use crate::util::io::{Csv, Json};
 use crate::util::table::{fnum, Table};
@@ -55,46 +56,64 @@ impl Experiment for Fig3 {
     fn run(&self, ctx: &ExpContext) -> Result<Report> {
         let mut report = Report::new(self.id());
         let mut json_apps = Vec::new();
-        for name in APPS {
-            let app0 = calibration::app(name).unwrap();
-            // Quick mode shrinks the horizon moderately (4x): regret-curve
-            // separation needs a few thousand steps to show.
-            let app = if ctx.quick { scale_app(&app0, 4.0) } else { app0.clone() };
+        let reps = ctx.effective_reps();
+
+        // Quick mode shrinks the horizon moderately (4x): regret-curve
+        // separation needs a few thousand steps to show.
+        let apps: Vec<_> = APPS
+            .iter()
+            .map(|name| {
+                let app0 = calibration::app(name).unwrap();
+                if ctx.quick {
+                    scale_app(&app0, 4.0)
+                } else {
+                    app0
+                }
+            })
+            .collect();
+        type Factory = Box<dyn Fn(u64) -> Box<dyn Policy> + Send + Sync>;
+        let factories: Vec<Factory> = vec![
+            Box::new(|_s| Box::new(EnergyUcb::new(9, EnergyUcbConfig::default()))),
+            Box::new(|s| Box::new(EpsilonGreedy::new(9, 0.05, 0.0, s))),
+            Box::new(|s| Box::new(EnergyTs::default_for(9, s))),
+            Box::new(|s| Box::new(RlPower::new(9, s))),
+            Box::new(|_s| Box::new(RoundRobin::new(9))),
+        ];
+
+        // One cell per (app × method × rep) traced session; curves are
+        // averaged over the rep axis afterwards, in rep order.
+        let grid = CellGrid::new(apps.len(), factories.len(), reps);
+        eprintln!("fig3: {} traced cells across {} jobs", grid.len(), ctx.jobs);
+        let cells = run_indexed(ctx.jobs, grid.len(), |cell| {
+            let (a, m, r) = grid.unpack(cell);
+            let mut policy = factories[m](ctx.seed + r as u64);
+            let cfg = SessionCfg {
+                seed: ctx.seed + r as u64,
+                record_trace: true,
+                ..SessionCfg::default()
+            };
+            let res = run_session(&apps[a], policy.as_mut(), &cfg);
+            let trace = res.trace.expect("trace recorded");
+            (policy.name(), trace.cumulative_regret())
+        });
+
+        for (a, name) in APPS.iter().enumerate() {
             let mut table = Table::new(vec![
                 "method", "t=1000", "t=2000", "t=4000", "final", "final/steps",
             ]);
             let mut csv = Csv::new();
             csv.row(&["method", "t", "cumulative_regret"]);
             let mut json_methods = Vec::new();
-
-            let reps = ctx.effective_reps();
-            type Factory = Box<dyn Fn(u64) -> Box<dyn Policy>>;
-            let factories: Vec<Factory> = vec![
-                Box::new(|_s| Box::new(EnergyUcb::new(9, EnergyUcbConfig::default()))),
-                Box::new(|s| Box::new(EpsilonGreedy::new(9, 0.05, 0.0, s))),
-                Box::new(|s| Box::new(EnergyTs::default_for(9, s))),
-                Box::new(|s| Box::new(RlPower::new(9, s))),
-                Box::new(|_s| Box::new(RoundRobin::new(9))),
-            ];
             let mut anchor: Vec<(String, f64)> = Vec::new();
-            for factory in factories {
+            for m in 0..factories.len() {
                 // Average the cumulative-regret curve over repetitions
                 // (the paper averages 10 runs).
                 let mut cum_avg: Vec<f64> = Vec::new();
                 let mut min_len = usize::MAX;
                 let mut name_p = String::new();
-                let mut last_trace = None;
                 for r in 0..reps {
-                    let mut policy = factory(ctx.seed + r as u64);
-                    let cfg = SessionCfg {
-                        seed: ctx.seed + r as u64,
-                        record_trace: true,
-                        ..SessionCfg::default()
-                    };
-                    let res = run_session(&app, policy.as_mut(), &cfg);
-                    name_p = policy.name();
-                    let trace = res.trace.expect("trace recorded");
-                    let cum = trace.cumulative_regret();
+                    let (cell_name, cum) = &cells[grid.pack(a, m, r)];
+                    name_p = cell_name.clone();
                     min_len = min_len.min(cum.len());
                     if cum_avg.len() < cum.len() {
                         cum_avg.resize(cum.len(), 0.0);
@@ -102,11 +121,9 @@ impl Experiment for Fig3 {
                     for (i, v) in cum.iter().enumerate() {
                         cum_avg[i] += v / reps as f64;
                     }
-                    last_trace = Some(trace);
                 }
                 cum_avg.truncate(min_len.max(1));
                 let cum = cum_avg;
-                let trace = last_trace.expect("at least one rep");
                 let at = |t: usize| cum.get(t.min(cum.len()) - 1).copied().unwrap_or(0.0);
                 table.row(vec![
                     name_p.clone(),
@@ -116,7 +133,6 @@ impl Experiment for Fig3 {
                     fnum(*cum.last().unwrap(), 1),
                     fnum(cum.last().unwrap() / cum.len() as f64, 3),
                 ]);
-                let _ = trace;
                 for (t, r) in downsample(&cum, 100) {
                     csv.row(&[name_p.clone(), t.to_string(), format!("{r:.3}")]);
                 }
@@ -140,6 +156,7 @@ impl Experiment for Fig3 {
                 );
                 json_methods.push(j);
             }
+            let name = *name;
             report.push_text(format!("--- {name} ---"));
             report.push_text(table.render());
             if name == "tealeaf" && !ctx.quick {

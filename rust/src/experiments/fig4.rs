@@ -9,7 +9,8 @@ use super::paper;
 use super::report::{ExpContext, Report};
 use super::Experiment;
 use crate::bandit::{EnergyUcb, EnergyUcbConfig};
-use crate::control::{run_repeated, SessionCfg};
+use crate::control::{run_session, SessionCfg};
+use crate::exec::{run_indexed, CellGrid};
 use crate::util::io::Json;
 use crate::util::stats::mean;
 use crate::util::table::{fnum, fnum_sep, Table};
@@ -51,13 +52,26 @@ impl Experiment for Fig4 {
 
         let regimes: [(&str, &crate::workload::model::AppModel); 2] =
             [("calibrated", &app), ("noisy telemetry", &noisy)];
+        let configs = [
+            ("w/o Penalty", EnergyUcbConfig { lambda: 0.0, ..EnergyUcbConfig::default() }),
+            ("with Penalty", EnergyUcbConfig::default()),
+        ];
+
+        // (regime × variant × rep) cells; EnergyUCB is RNG-free, so fresh
+        // per-cell policies at seed base+rep match the old reset-loop runs.
+        let grid = CellGrid::new(regimes.len(), configs.len(), reps);
+        eprintln!("fig4: {} cells across {} jobs", grid.len(), ctx.jobs);
+        let cells = run_indexed(ctx.jobs, grid.len(), |cell| {
+            let (g, v, r) = grid.unpack(cell);
+            let mut policy = EnergyUcb::new(9, configs[v].1);
+            let cfg = SessionCfg { seed: ctx.seed + r as u64, ..SessionCfg::default() };
+            let m = run_session(regimes[g].1, &mut policy, &cfg).metrics;
+            (m.switches as f64, m.switch_energy_j / 1_000.0, m.switch_time_s, m.gpu_energy_kj)
+        });
+
         let mut all_json = Vec::new();
         let mut reductions = Vec::new();
-        for (regime, app_r) in regimes {
-            let configs = [
-                ("w/o Penalty", EnergyUcbConfig { lambda: 0.0, ..EnergyUcbConfig::default() }),
-                ("with Penalty", EnergyUcbConfig::default()),
-            ];
+        for (g, (regime, _)) in regimes.iter().enumerate() {
             let mut table = Table::new(vec![
                 "variant",
                 "switches",
@@ -66,25 +80,14 @@ impl Experiment for Fig4 {
                 "total energy (kJ)",
             ]);
             let mut measured = Vec::new();
-            for (label, cfg) in configs {
-                let mut policy = EnergyUcb::new(9, cfg);
-                let results =
-                    run_repeated(app_r, &mut policy, &SessionCfg::default(), reps, ctx.seed);
-                let switches = mean(
-                    &results.iter().map(|r| r.metrics.switches as f64).collect::<Vec<_>>(),
-                );
-                let sw_kj = mean(
-                    &results
-                        .iter()
-                        .map(|r| r.metrics.switch_energy_j / 1_000.0)
-                        .collect::<Vec<_>>(),
-                );
-                let sw_s = mean(
-                    &results.iter().map(|r| r.metrics.switch_time_s).collect::<Vec<_>>(),
-                );
-                let kj = mean(
-                    &results.iter().map(|r| r.metrics.gpu_energy_kj).collect::<Vec<_>>(),
-                );
+            for (v, (label, _)) in configs.iter().enumerate() {
+                let reps_of = |f: &dyn Fn(&(f64, f64, f64, f64)) -> f64| -> Vec<f64> {
+                    (0..reps).map(|r| f(&cells[grid.pack(g, v, r)])).collect()
+                };
+                let switches = mean(&reps_of(&|c| c.0));
+                let sw_kj = mean(&reps_of(&|c| c.1));
+                let sw_s = mean(&reps_of(&|c| c.2));
+                let kj = mean(&reps_of(&|c| c.3));
                 table.row(vec![
                     label.to_string(),
                     fnum(switches, 0),
@@ -93,8 +96,8 @@ impl Experiment for Fig4 {
                     fnum_sep(kj, 2),
                 ]);
                 let mut j = Json::obj();
-                j.set("regime", regime);
-                j.set("variant", label);
+                j.set("regime", *regime);
+                j.set("variant", *label);
                 j.set("switches", switches);
                 j.set("switch_energy_kj", sw_kj);
                 j.set("switch_time_s", sw_s);

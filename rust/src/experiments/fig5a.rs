@@ -9,8 +9,8 @@ use super::report::{ExpContext, Report};
 use super::Experiment;
 use crate::bandit::{EnergyUcb, EnergyUcbConfig, RewardForm};
 use crate::control::{run_session, SessionCfg};
+use crate::exec::{reduce_reps, run_indexed, CellGrid};
 use crate::util::io::Json;
-use crate::util::stats::mean;
 use crate::util::table::{fnum_sep, Table};
 use crate::workload::calibration;
 
@@ -36,36 +36,46 @@ impl Experiment for Fig5a {
         let mut table = Table::new(vec!["app", "E*R (kJ)", "E^2*R (kJ)", "E*R^2 (kJ)"]);
         let mut json_rows = Vec::new();
         let mut er_best = 0usize;
-        let mut napps = 0usize;
-        for app0 in calibration::all_apps() {
-            let app = if ctx.quick {
-                // Quick mode: skip the three longest runs.
-                if matches!(app0.name, "sph_exa" | "llama" | "diffusion") {
-                    scale_app(&app0, 32.0)
+
+        let apps: Vec<_> = calibration::all_apps()
+            .iter()
+            .map(|app0| {
+                if ctx.quick {
+                    // Quick mode: shrink the three longest runs harder.
+                    if matches!(app0.name, "sph_exa" | "llama" | "diffusion") {
+                        scale_app(app0, 32.0)
+                    } else {
+                        scale_app(app0, 8.0)
+                    }
                 } else {
-                    scale_app(&app0, 8.0)
+                    app0.clone()
                 }
-            } else {
-                app0.clone()
+            })
+            .collect();
+        let napps = apps.len();
+
+        // (app × form × rep) cells, mean over the rep axis.
+        let grid = CellGrid::new(apps.len(), forms.len(), reps);
+        eprintln!("fig5a: {} cells across {} jobs", grid.len(), ctx.jobs);
+        let cell_energies = run_indexed(ctx.jobs, grid.len(), |cell| {
+            let (a, fm, r) = grid.unpack(cell);
+            let mut policy = EnergyUcb::new(9, EnergyUcbConfig::default());
+            let cfg = SessionCfg {
+                seed: ctx.seed + r as u64,
+                reward_form: forms[fm],
+                ..SessionCfg::default()
             };
-            napps += 1;
-            let mut cells = vec![app0.name.to_string()];
+            run_session(&apps[a], &mut policy, &cfg).metrics.gpu_energy_kj
+        });
+        let aggregates = reduce_reps(&cell_energies, reps);
+
+        for (a, app) in apps.iter().enumerate() {
+            let mut cells = vec![app.name.to_string()];
             let mut means = Vec::new();
             let mut j = Json::obj();
-            j.set("app", app0.name);
-            for form in forms {
-                let energies: Vec<f64> = (0..reps)
-                    .map(|r| {
-                        let mut policy = EnergyUcb::new(9, EnergyUcbConfig::default());
-                        let cfg = SessionCfg {
-                            seed: ctx.seed + r as u64,
-                            reward_form: form,
-                            ..SessionCfg::default()
-                        };
-                        run_session(&app, &mut policy, &cfg).metrics.gpu_energy_kj
-                    })
-                    .collect();
-                let m = mean(&energies);
+            j.set("app", app.name);
+            for (fm, form) in forms.iter().enumerate() {
+                let m = aggregates[grid.group(a, fm)].mean();
                 cells.push(fnum_sep(m, 2));
                 means.push(m);
                 j.set(form.name(), m);

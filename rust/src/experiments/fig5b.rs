@@ -9,7 +9,8 @@ use super::paper;
 use super::report::{ExpContext, Report};
 use super::Experiment;
 use crate::bandit::{ConstrainedEnergyUcb, EnergyUcb, EnergyUcbConfig, Policy, StaticPolicy};
-use crate::control::{run_repeated, SessionCfg};
+use crate::control::{run_session, SessionCfg};
+use crate::exec::{run_indexed, CellGrid};
 use crate::sim::freq::FreqDomain;
 use crate::util::io::Json;
 use crate::util::stats::mean;
@@ -35,52 +36,76 @@ impl Experiment for Fig5b {
         let freqs = FreqDomain::aurora();
         let reps = ctx.effective_reps();
         let mut json_apps = Vec::new();
-        for name in APPS {
-            let app0 = calibration::app(name).unwrap();
-            let app = if ctx.quick { scale_app(&app0, 8.0) } else { app0.clone() };
-            let scale = if ctx.quick { 8.0 } else { 1.0 };
-            let mut table = Table::new(vec!["config", "exec time (s)", "slowdown %", "energy (kJ)"]);
-
-            // Static curve.
-            let mut t_max = 0.0;
-            for arm in (0..freqs.k()).rev() {
-                let mut policy = StaticPolicy::new(freqs.k(), arm);
-                let res = &run_repeated(&app, &mut policy, &SessionCfg::default(), 1, ctx.seed)[0];
-                let t = res.metrics.exec_time_s * scale;
-                if arm == freqs.max_arm() {
-                    t_max = t;
+        let scale = if ctx.quick { 8.0 } else { 1.0 };
+        let apps: Vec<_> = APPS
+            .iter()
+            .map(|name| {
+                let app0 = calibration::app(name).unwrap();
+                if ctx.quick {
+                    scale_app(&app0, 8.0)
+                } else {
+                    app0
                 }
+            })
+            .collect();
+
+        // Static curve: one cell per (app × arm).
+        let static_grid = CellGrid::new(apps.len(), freqs.k(), 1);
+        // Controller runs: (app × {unconstrained, constrained} × rep) cells.
+        let var_grid = CellGrid::new(apps.len(), 2, reps);
+        eprintln!(
+            "fig5b: {} static + {} controller cells across {} jobs",
+            static_grid.len(),
+            var_grid.len(),
+            ctx.jobs
+        );
+        let statics = run_indexed(ctx.jobs, static_grid.len(), |cell| {
+            let (a, arm, _) = static_grid.unpack(cell);
+            let mut policy = StaticPolicy::new(freqs.k(), arm);
+            let cfg = SessionCfg { seed: ctx.seed, ..SessionCfg::default() };
+            let m = run_session(&apps[a], &mut policy, &cfg).metrics;
+            (m.exec_time_s, m.gpu_energy_kj)
+        });
+        let labels = ["EnergyUCB (unconstrained)", "Constrained (δ=0.05)"];
+        let controller = run_indexed(ctx.jobs, var_grid.len(), |cell| {
+            let (a, v, r) = var_grid.unpack(cell);
+            let mut policy: Box<dyn Policy> = if v == 0 {
+                Box::new(EnergyUcb::new(9, EnergyUcbConfig::default()))
+            } else {
+                Box::new(ConstrainedEnergyUcb::new(9, EnergyUcbConfig::default(), DELTA))
+            };
+            let cfg = SessionCfg { seed: ctx.seed + r as u64, ..SessionCfg::default() };
+            let m = run_session(&apps[a], policy.as_mut(), &cfg).metrics;
+            (m.exec_time_s, m.gpu_energy_kj)
+        });
+
+        for (a, name) in APPS.iter().enumerate() {
+            let mut table =
+                Table::new(vec!["config", "exec time (s)", "slowdown %", "energy (kJ)"]);
+            let t_max = statics[static_grid.pack(a, freqs.max_arm(), 0)].0 * scale;
+            for arm in (0..freqs.k()).rev() {
+                let (exec_s, kj) = statics[static_grid.pack(a, arm, 0)];
+                let t = exec_s * scale;
                 table.row(vec![
                     freqs.label(arm),
                     fnum(t, 2),
                     fnum((t / t_max - 1.0) * 100.0, 2),
-                    fnum(res.metrics.gpu_energy_kj * scale, 2),
+                    fnum(kj * scale, 2),
                 ]);
             }
             table.rule();
 
-            // Unconstrained and constrained EnergyUCB.
             let mut json_app = Json::obj();
-            json_app.set("app", name);
-            let variants: Vec<(&str, Box<dyn Policy>)> = vec![
-                (
-                    "EnergyUCB (unconstrained)",
-                    Box::new(EnergyUcb::new(9, EnergyUcbConfig::default())),
-                ),
-                (
-                    "Constrained (δ=0.05)",
-                    Box::new(ConstrainedEnergyUcb::new(9, EnergyUcbConfig::default(), DELTA)),
-                ),
-            ];
-            for (label, mut policy) in variants {
-                let results =
-                    run_repeated(&app, policy.as_mut(), &SessionCfg::default(), reps, ctx.seed);
-                let t =
-                    mean(&results.iter().map(|r| r.metrics.exec_time_s * scale).collect::<Vec<_>>());
+            json_app.set("app", *name);
+            for (v, label) in labels.iter().enumerate() {
+                let t = mean(
+                    &(0..reps)
+                        .map(|r| controller[var_grid.pack(a, v, r)].0 * scale)
+                        .collect::<Vec<_>>(),
+                );
                 let kj = mean(
-                    &results
-                        .iter()
-                        .map(|r| r.metrics.gpu_energy_kj * scale)
+                    &(0..reps)
+                        .map(|r| controller[var_grid.pack(a, v, r)].1 * scale)
                         .collect::<Vec<_>>(),
                 );
                 let slowdown = t / t_max - 1.0;

@@ -9,6 +9,7 @@ use anyhow::Result;
 
 use super::report::{ExpContext, Report};
 use super::Experiment;
+use crate::exec::{cell_rng, run_indexed};
 use crate::fleet::{native, FleetHyper, FleetParams, FleetState};
 use crate::runtime::XlaRuntime;
 use crate::sim::freq::FreqDomain;
@@ -57,22 +58,61 @@ impl Experiment for Impact {
         let apps = vec![&app; b];
         let params = FleetParams::from_apps(&apps, &freqs, 0.01);
         let hyper = FleetHyper::default();
-        let mut state = FleetState::fresh(b, freqs.k());
-        let mut rng = Rng::new(ctx.seed);
         let max_steps = if ctx.quick { 4_000 } else { 80_000 };
 
         // Prefer the HLO engine when artifacts exist (exercises the AOT
-        // path at fleet scale); otherwise the native engine.
+        // path at fleet scale); otherwise the sharded native engine.
         let art_dir = std::path::Path::new("artifacts");
         let engine_used;
-        if art_dir.join(format!("fleet_step_b{b}.hlo.txt")).exists() {
-            let runtime = XlaRuntime::cpu()?;
+        let (energy_kj, remaining): (Vec<f64>, Vec<f64>);
+        // The HLO path needs both the exported artifact AND a live PJRT
+        // runtime (absent in stub builds without the `xla` feature) — fall
+        // back to the native engine in either case rather than erroring.
+        let runtime = if art_dir.join(format!("fleet_step_b{b}.hlo.txt")).exists() {
+            XlaRuntime::cpu()
+                .map_err(|e| eprintln!("impact: PJRT unavailable, using native engine ({e})"))
+                .ok()
+        } else {
+            None
+        };
+        if let Some(runtime) = runtime {
+            // The artifact's batch size is fixed at export, so the HLO path
+            // runs unsharded (its lockstep batch IS the parallelism).
+            let mut state = FleetState::fresh(b, freqs.k());
+            let mut rng = Rng::new(ctx.seed);
             let engine =
                 crate::fleet::FleetEngine::load(&runtime, art_dir, params.clone(), hyper)?;
             engine.run(&mut state, &mut rng, max_steps)?;
+            energy_kj = (0..b).map(|e| state.energy_kj(e)).collect();
+            remaining = state.remaining.iter().map(|r| *r as f64).collect();
             engine_used = "hlo";
         } else {
-            native::native_run(&mut state, &params, &hyper, &mut rng, max_steps);
+            // Native fallback: shard the fleet into fixed-size chunks, one
+            // cell per chunk with an order-independent RNG keyed by chunk
+            // index — results are identical at any --jobs value (the chunk
+            // layout never depends on the worker count).
+            const CHUNK: usize = 32;
+            let n_chunks = (b + CHUNK - 1) / CHUNK;
+            let chunk_results = run_indexed(ctx.jobs, n_chunks, |c| {
+                let lo = c * CHUNK;
+                let hi = (lo + CHUNK).min(b);
+                let chunk_params = FleetParams::from_apps(&apps[lo..hi], &freqs, 0.01);
+                let mut state = FleetState::fresh(hi - lo, freqs.k());
+                let mut rng = cell_rng(ctx.seed, c as u64);
+                native::native_run(&mut state, &chunk_params, &hyper, &mut rng, max_steps);
+                let kj: Vec<f64> = (0..hi - lo).map(|e| state.energy_kj(e)).collect();
+                let rem: Vec<f64> =
+                    state.remaining.iter().map(|r| *r as f64).collect();
+                (kj, rem)
+            });
+            let mut kj = Vec::with_capacity(b);
+            let mut rem = Vec::with_capacity(b);
+            for (ck, cr) in chunk_results {
+                kj.extend(ck);
+                rem.extend(cr);
+            }
+            energy_kj = kj;
+            remaining = rem;
             engine_used = "native";
         }
 
@@ -80,8 +120,8 @@ impl Experiment for Impact {
         // full completion by remaining fraction.
         let mut total_kj = 0.0;
         for e in 0..b {
-            let done_frac = (1.0 - state.remaining[e] as f64).max(1e-3);
-            total_kj += state.energy_kj(e) / done_frac;
+            let done_frac = (1.0 - remaining[e]).max(1e-3);
+            total_kj += energy_kj[e] / done_frac;
         }
         let mean_kj = total_kj / b as f64;
         let default_kj = app.energy_kj[freqs.max_arm()];

@@ -15,11 +15,21 @@ pub struct ExpContext {
     pub out_dir: PathBuf,
     /// Quick mode: fewer reps / shorter horizons (CI-friendly).
     pub quick: bool,
+    /// Worker threads for the experiment executor (`--jobs`; default: the
+    /// machine's available parallelism). Output is byte-identical at any
+    /// value — see EXPERIMENTS.md §Executor.
+    pub jobs: usize,
 }
 
 impl Default for ExpContext {
     fn default() -> Self {
-        ExpContext { reps: 10, seed: 2026, out_dir: PathBuf::from("results"), quick: false }
+        ExpContext {
+            reps: 10,
+            seed: 2026,
+            out_dir: PathBuf::from("results"),
+            quick: false,
+            jobs: crate::exec::available_jobs(),
+        }
     }
 }
 

@@ -9,9 +9,9 @@ use super::fig1::scale_app;
 use super::report::{ExpContext, Report};
 use super::Experiment;
 use crate::bandit::{EnergyUcb, EnergyUcbConfig};
-use crate::control::{run_repeated, SessionCfg};
+use crate::control::{run_session, SessionCfg};
+use crate::exec::{reduce_reps, run_indexed, CellGrid};
 use crate::util::io::Json;
-use crate::util::stats::mean;
 use crate::util::table::{fnum, Table};
 use crate::workload::calibration;
 
@@ -50,6 +50,18 @@ impl Experiment for Sweeps {
             }),
         ];
 
+        let apps: Vec<_> = APPS
+            .iter()
+            .map(|name| {
+                let app0 = calibration::app(name).unwrap();
+                if ctx.quick {
+                    scale_app(&app0, 16.0)
+                } else {
+                    app0
+                }
+            })
+            .collect();
+
         for (knob, values, apply) in knobs {
             let mut table = Table::new({
                 let mut h = vec![knob.to_string()];
@@ -59,26 +71,32 @@ impl Experiment for Sweeps {
                 }
                 h
             });
-            for v in values {
+            // (value × app × rep) cells for this knob; EnergyUCB is
+            // RNG-free, so fresh per-cell policies at seed base+rep match
+            // the old reset-loop runs.
+            let grid = CellGrid::new(values.len(), apps.len(), reps);
+            eprintln!("sweeps/{knob}: {} cells across {} jobs", grid.len(), ctx.jobs);
+            let cell_results = run_indexed(ctx.jobs, grid.len(), |cell| {
+                let (vi, a, r) = grid.unpack(cell);
+                let mut policy = EnergyUcb::new(9, apply(base, values[vi]));
+                let cfg = SessionCfg { seed: ctx.seed + r as u64, ..SessionCfg::default() };
+                let m = run_session(&apps[a], &mut policy, &cfg).metrics;
+                (m.gpu_energy_kj, m.switches as f64)
+            });
+            let energy_agg =
+                reduce_reps(&cell_results.iter().map(|c| c.0).collect::<Vec<_>>(), reps);
+            let switch_agg =
+                reduce_reps(&cell_results.iter().map(|c| c.1).collect::<Vec<_>>(), reps);
+
+            for (vi, v) in values.iter().enumerate() {
                 let mut cells = vec![format!("{v}")];
                 let mut j = Json::obj();
                 j.set("knob", knob);
-                j.set("value", v);
-                for name in APPS {
-                    let app0 = calibration::app(name).unwrap();
-                    let app = if ctx.quick { scale_app(&app0, 16.0) } else { app0.clone() };
-                    let mut policy = EnergyUcb::new(9, apply(base, v));
-                    let results =
-                        run_repeated(&app, &mut policy, &SessionCfg::default(), reps, ctx.seed);
-                    let regret = mean(
-                        &results
-                            .iter()
-                            .map(|r| r.metrics.gpu_energy_kj - app.optimal_energy_kj())
-                            .collect::<Vec<_>>(),
-                    );
-                    let switches = mean(
-                        &results.iter().map(|r| r.metrics.switches as f64).collect::<Vec<_>>(),
-                    );
+                j.set("value", *v);
+                for (a, name) in APPS.iter().enumerate() {
+                    let regret =
+                        energy_agg[grid.group(vi, a)].mean() - apps[a].optimal_energy_kj();
+                    let switches = switch_agg[grid.group(vi, a)].mean();
                     cells.push(fnum(regret, 2));
                     cells.push(fnum(switches, 0));
                     j.set(format!("{name}_regret_kj"), regret);

@@ -18,6 +18,7 @@ use crate::bandit::{
     EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, Policy, RoundRobin, StaticPolicy,
 };
 use crate::control::{run_session, RunResult, SessionCfg};
+use crate::exec::{reduce_reps, run_indexed, CellGrid};
 use crate::rl::{DrlCap, DrlCapMode, RlPower};
 use crate::sim::freq::FreqDomain;
 use crate::util::io::{Csv, Json};
@@ -26,10 +27,11 @@ use crate::util::table::{fnum_sep, Table};
 use crate::workload::calibration;
 use crate::workload::model::AppModel;
 
-/// A method under evaluation: name + per-seed policy factory.
+/// A method under evaluation: name + per-seed policy factory. `Send + Sync`
+/// so the executor can build fresh per-cell policies on worker threads.
 pub struct Method {
     pub name: &'static str,
-    factory: Box<dyn Fn(u64) -> Box<dyn Policy>>,
+    factory: Box<dyn Fn(u64) -> Box<dyn Policy> + Send + Sync>,
     /// Apply the paper's 20 %/80 % + 1.25× energy protocol.
     pub pretrain_scaled: bool,
     /// Needs cross-benchmark pretraining (DRLCap-Cross).
@@ -39,7 +41,7 @@ pub struct Method {
 impl Method {
     fn new(
         name: &'static str,
-        factory: impl Fn(u64) -> Box<dyn Policy> + 'static,
+        factory: impl Fn(u64) -> Box<dyn Policy> + Send + Sync + 'static,
     ) -> Method {
         Method { name, factory: Box::new(factory), pretrain_scaled: false, cross: false }
     }
@@ -77,8 +79,27 @@ pub fn dynamic_methods(k: usize) -> Vec<Method> {
     ]
 }
 
-/// Table-1 energy of a method on an app (mean over reps), applying the
-/// DRLCap protocol where flagged.
+/// One Table-1 cell: a single seeded run of `method` on `app`, applying the
+/// DRLCap protocol where flagged. Pure in `(method, app, seed)` — the unit
+/// the executor shards across cores.
+pub fn method_energy_cell(
+    method: &Method,
+    app: &AppModel,
+    seed: u64,
+    cfg: &SessionCfg,
+) -> f64 {
+    let mut policy = if method.cross {
+        build_cross_policy(app, seed)
+    } else {
+        method.build(seed)
+    };
+    let cfg = SessionCfg { seed, ..cfg.clone() };
+    let res = run_session(app, policy.as_mut(), &cfg);
+    scored_energy_kj(method, &res)
+}
+
+/// Table-1 energy of a method on an app: mean over `reps` seeded cells,
+/// seeds `seed0..seed0+reps`.
 pub fn method_energy_kj(
     method: &Method,
     app: &AppModel,
@@ -87,17 +108,7 @@ pub fn method_energy_kj(
     cfg: &SessionCfg,
 ) -> f64 {
     let energies: Vec<f64> = (0..reps)
-        .map(|r| {
-            let seed = seed0 + r as u64;
-            let mut policy = if method.cross {
-                build_cross_policy(app, seed)
-            } else {
-                method.build(seed)
-            };
-            let cfg = SessionCfg { seed, ..cfg.clone() };
-            let res = run_session(app, policy.as_mut(), &cfg);
-            scored_energy_kj(method, &res)
-        })
+        .map(|r| method_energy_cell(method, app, seed0 + r as u64, cfg))
         .collect();
     mean(&energies)
 }
@@ -184,34 +195,58 @@ impl Experiment for Table1 {
             json_rows.push(j);
         };
 
-        // Static rows (descending frequency, like the paper).
+        // Static rows: one cell per (arm, app), sharded across the pool and
+        // reduced in stable order before rendering (descending frequency,
+        // like the paper).
+        let methods = dynamic_methods(freqs.k());
+        let static_grid = CellGrid::new(freqs.k(), apps.len(), 1);
+        eprintln!(
+            "table1: {} static cells + {} dynamic cells across {} jobs",
+            static_grid.len(),
+            methods.len() * apps.len() * reps,
+            ctx.jobs
+        );
+        let static_cells = run_indexed(ctx.jobs, static_grid.len(), |cell| {
+            let (arm, a, _) = static_grid.unpack(cell);
+            let mut policy = StaticPolicy::new(freqs.k(), arm);
+            let res = run_session(
+                &apps[a],
+                &mut policy,
+                &SessionCfg { seed: ctx.seed, ..cfg.clone() },
+            );
+            res.metrics.gpu_energy_kj
+        });
         let mut static_energy = vec![vec![0.0; apps.len()]; freqs.k()];
-        for arm in (0..freqs.k()).rev() {
-            let mut row = Vec::new();
-            for (a, app) in apps.iter().enumerate() {
-                let mut policy = StaticPolicy::new(freqs.k(), arm);
-                let res = run_session(
-                    app,
-                    &mut policy,
-                    &SessionCfg { seed: ctx.seed, ..cfg.clone() },
-                );
-                static_energy[arm][a] = res.metrics.gpu_energy_kj;
-                row.push(res.metrics.gpu_energy_kj);
+        for arm in 0..freqs.k() {
+            for a in 0..apps.len() {
+                static_energy[arm][a] = static_cells[static_grid.pack(arm, a, 0)];
             }
-            push_row(&freqs.label(arm), &row, &mut table, &mut csv, &mut json_rows);
+        }
+        for arm in (0..freqs.k()).rev() {
+            push_row(
+                &freqs.label(arm),
+                &static_energy[arm],
+                &mut table,
+                &mut csv,
+                &mut json_rows,
+            );
         }
         table.rule();
 
-        // Dynamic + RL methods.
-        let methods = dynamic_methods(freqs.k());
+        // Dynamic + RL methods: (method × app × rep) cells, seed = base + rep
+        // (the mapping the sequential harness used), mean over the rep axis
+        // via the stable Welford reduce.
+        let dyn_grid = CellGrid::new(methods.len(), apps.len(), reps);
+        let dyn_cells = run_indexed(ctx.jobs, dyn_grid.len(), |cell| {
+            let (m, a, r) = dyn_grid.unpack(cell);
+            method_energy_cell(&methods[m], &apps[a], ctx.seed + r as u64, &cfg)
+        });
+        let dyn_means = reduce_reps(&dyn_cells, reps);
         let mut ucb_row = vec![0.0; apps.len()];
-        for method in &methods {
-            eprintln!("table1: running {} ({} reps x {} apps)", method.name, reps, apps.len());
-            let mut row = Vec::new();
-            for app in apps.iter() {
-                let e = method_energy_kj(method, app, reps, ctx.seed, &cfg);
-                row.push(e);
-            }
+        for (m, method) in methods.iter().enumerate() {
+            let row: Vec<f64> = (0..apps.len())
+                .map(|a| dyn_means[dyn_grid.group(m, a)].mean())
+                .collect();
             if method.name == "EnergyUCB" {
                 ucb_row = row.clone();
             }
@@ -284,6 +319,21 @@ mod tests {
         let paper_names: Vec<&str> =
             paper::TABLE1_DYNAMIC.iter().map(|r| r.method).collect();
         assert_eq!(names, paper_names);
+    }
+
+    #[test]
+    fn sequential_mean_matches_cell_decomposition() {
+        // method_energy_kj (the sequential seed-mapping reference) must
+        // agree with mean-of-cells — the equivalence the executor's grid
+        // path relies on.
+        let app = scale_app(&calibration::app("tealeaf").unwrap(), 32.0);
+        let method = &dynamic_methods(9)[0]; // RRFreq: deterministic policy
+        let cfg = SessionCfg::default();
+        let reps = 2;
+        let seq = method_energy_kj(method, &app, reps, 5, &cfg);
+        let cells: Vec<f64> =
+            (0..reps).map(|r| method_energy_cell(method, &app, 5 + r as u64, &cfg)).collect();
+        assert_eq!(seq, mean(&cells));
     }
 
     #[test]

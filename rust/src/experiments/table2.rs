@@ -10,9 +10,9 @@ use super::paper;
 use super::report::{ExpContext, Report};
 use super::Experiment;
 use crate::bandit::{EnergyUcb, EnergyUcbConfig, InitStrategy};
-use crate::control::{run_repeated, SessionCfg};
+use crate::control::{run_session, SessionCfg};
+use crate::exec::{reduce_reps, run_indexed, CellGrid};
 use crate::util::io::Json;
-use crate::util::stats::{mean, sample_std};
 use crate::util::table::{fnum_sep, Table};
 use crate::workload::calibration;
 
@@ -54,33 +54,48 @@ impl Experiment for Table2 {
         let mut json_rows = Vec::new();
         let mut ordered_ok = 0;
         let mut opt_ini_worse = 0;
-        for name in APPS {
-            let app0 = calibration::app(name).unwrap();
-            let app = if ctx.quick { scale_app(&app0, 16.0) } else { app0.clone() };
+
+        // (app × variant × rep) cells; EnergyUCB holds no internal RNG, so a
+        // fresh per-cell policy at seed `base + rep` reproduces the previous
+        // reset-and-rerun loop exactly.
+        let apps: Vec<_> = APPS
+            .iter()
+            .map(|name| {
+                let app0 = calibration::app(name).unwrap();
+                if ctx.quick {
+                    scale_app(&app0, 16.0)
+                } else {
+                    app0
+                }
+            })
+            .collect();
+        let variant_list = variants();
+        let grid = CellGrid::new(apps.len(), variant_list.len(), reps);
+        eprintln!("table2: {} cells across {} jobs", grid.len(), ctx.jobs);
+        let cell_energies = run_indexed(ctx.jobs, grid.len(), |cell| {
+            let (a, v, r) = grid.unpack(cell);
+            let mut policy = EnergyUcb::new(9, variant_list[v].1);
+            let cfg = SessionCfg { seed: ctx.seed + r as u64, ..SessionCfg::default() };
+            run_session(&apps[a], &mut policy, &cfg).metrics.gpu_energy_kj
+        });
+        let aggregates = reduce_reps(&cell_energies, reps);
+
+        for (a, name) in APPS.iter().enumerate() {
             let mut cells = vec![name.to_string()];
             let mut means = Vec::new();
             let mut stds = Vec::new();
             let mut j = Json::obj();
-            j.set("app", name);
-            for (label, cfg) in variants() {
-                let mut policy = EnergyUcb::new(9, cfg);
-                let results = run_repeated(
-                    &app,
-                    &mut policy,
-                    &SessionCfg::default(),
-                    reps,
-                    ctx.seed,
-                );
-                let energies: Vec<f64> =
-                    results.iter().map(|r| r.metrics.gpu_energy_kj).collect();
-                let (m, s) = (mean(&energies), sample_std(&energies));
+            j.set("app", *name);
+            for (v, (label, _)) in variant_list.iter().enumerate() {
+                let w = &aggregates[grid.group(a, v)];
+                let (m, s) = (w.mean(), w.sample_std());
                 cells.push(format!("{} ± {:.2}", fnum_sep(m, 2), s));
                 means.push(m);
                 stds.push(s);
-                let mut v = Json::obj();
-                v.set("mean_kj", m);
-                v.set("std_kj", s);
-                j.set(label, v);
+                let mut vj = Json::obj();
+                vj.set("mean_kj", m);
+                vj.set("std_kj", s);
+                j.set(*label, vj);
             }
             // Shape: full best-or-tied (within one pooled std) vs both
             // ablations; and the w/o Opt. Ini. degradation specifically.

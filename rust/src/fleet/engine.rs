@@ -10,7 +10,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::state::{FleetHyper, FleetParams, FleetState};
-use crate::runtime::{literal, LoadedModule, XlaRuntime};
+use crate::runtime::{literal, Literal, LoadedModule, XlaRuntime};
 use crate::util::Rng;
 
 /// Scan chunk size the AOT export uses (aot.py --scan-steps).
@@ -25,7 +25,7 @@ pub struct FleetEngine {
     params: FleetParams,
     hyper: FleetHyper,
     /// Pre-built constant literals (params + hyper), reused every step.
-    const_inputs: Vec<xla::Literal>,
+    const_inputs: Vec<Literal>,
 }
 
 impl FleetEngine {
@@ -62,7 +62,7 @@ impl FleetEngine {
         self.scan_module.is_some()
     }
 
-    fn build_const_inputs(params: &FleetParams, hyper: &FleetHyper) -> Result<Vec<xla::Literal>> {
+    fn build_const_inputs(params: &FleetParams, hyper: &FleetHyper) -> Result<Vec<Literal>> {
         let (b, k) = (params.b, params.k);
         Ok(vec![
             literal::mat_f32(&params.reward_mean, b, k)?,
@@ -96,7 +96,7 @@ impl FleetEngine {
     pub fn step(&self, state: &mut FleetState, noise: &[f32]) -> Result<Vec<i32>> {
         let (b, k) = (state.b, state.k);
         assert_eq!(b, self.params.b, "state batch != engine batch");
-        let state_lits: [xla::Literal; 9] = [
+        let state_lits: [Literal; 9] = [
             literal::mat_f32(&state.n, b, k)?,
             literal::mat_f32(&state.mean, b, k)?,
             literal::vec_i32(&state.prev),
@@ -107,7 +107,7 @@ impl FleetEngine {
             literal::vec_f32(&state.switches),
             literal::vec_f32(noise),
         ];
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(18);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(18);
         inputs.extend(&state_lits[0..8]);
         inputs.extend(&self.const_inputs[0..5]); // params, borrowed
         inputs.push(&state_lits[8]); // noise
@@ -137,7 +137,7 @@ impl FleetEngine {
         };
         let (b, k) = (state.b, state.k);
         assert_eq!(noise_seq.len(), SCAN_STEPS * b, "noise must be (S, B)");
-        let state_lits: [xla::Literal; 9] = [
+        let state_lits: [Literal; 9] = [
             literal::mat_f32(&state.n, b, k)?,
             literal::mat_f32(&state.mean, b, k)?,
             literal::vec_i32(&state.prev),
@@ -148,7 +148,7 @@ impl FleetEngine {
             literal::vec_f32(&state.switches),
             literal::mat_f32(noise_seq, SCAN_STEPS, b)?,
         ];
-        let mut inputs: Vec<&xla::Literal> = Vec::with_capacity(18);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(18);
         inputs.extend(&state_lits[0..8]);
         inputs.extend(&self.const_inputs[0..5]);
         inputs.push(&state_lits[8]);

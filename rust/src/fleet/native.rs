@@ -65,10 +65,11 @@ pub fn native_step(
         state.mean[row + s] += delta;
 
         let switched = if s as i32 != state.prev[e] { a } else { 0.0 };
-        let useful = 1.0 - 0.015 * switched;
+        let useful = 1.0 - params.switch_stall_frac * switched;
         let prog = params.progress[row + s] * useful * a;
         state.remaining[e] = (state.remaining[e] - prog).max(0.0);
-        state.cum_energy[e] += (params.energy_step[row + s] + 0.3 * switched) * a;
+        state.cum_energy[e] +=
+            (params.energy_step[row + s] + params.switch_energy_j * switched) * a;
         state.cum_regret[e] += (params.best_reward(e) - params.reward_mean[row + s]) * a;
         state.switches[e] += switched;
         if active {

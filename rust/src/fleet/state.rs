@@ -45,6 +45,14 @@ pub struct FleetParams {
     /// Early-window noise inflation per env (multiplier, steps).
     pub early_mult: Vec<f32>,
     pub early_steps: Vec<u32>,
+    /// Fraction of a decision interval lost to one DVFS transition,
+    /// derived from the domain's [`crate::sim::freq::SwitchCost`] (paper
+    /// default: 150 µs of a 10 ms interval = 0.015). Shared with the
+    /// python export (`python/compile/kernels/ref.py::SWITCH_STALL_FRAC`).
+    pub switch_stall_frac: f32,
+    /// Joules charged per node-level DVFS transition (paper default:
+    /// 0.3 J; `ref.py::SWITCH_ENERGY_J`).
+    pub switch_energy_j: f32,
 }
 
 impl FleetParams {
@@ -54,6 +62,7 @@ impl FleetParams {
     pub fn from_apps(apps: &[&AppModel], freqs: &FreqDomain, dt_s: f64) -> FleetParams {
         let b = apps.len();
         let k = freqs.k();
+        let cost = freqs.switch_cost();
         let mut p = FleetParams {
             b,
             k,
@@ -64,6 +73,9 @@ impl FleetParams {
             feasible: vec![1.0; b * k],
             early_mult: vec![1.0; b],
             early_steps: vec![0; b],
+            // Clamped to one interval: a stall >= dt would run work backwards.
+            switch_stall_frac: (cost.latency_s / dt_s).min(1.0) as f32,
+            switch_energy_j: cost.energy_j as f32,
         };
         for (e, app) in apps.iter().enumerate() {
             let scale = app.true_reward(freqs, freqs.max_arm(), dt_s).abs();
@@ -176,6 +188,26 @@ mod tests {
         // Normalization: reward at max arm = -1.
         assert!((p.reward_mean[8] - (-1.0)).abs() < 1e-6);
         assert!((p.reward_mean[9 + 8] - (-1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn switch_constants_derive_from_domain_cost() {
+        // Regression: the native step used to hard-code 0.015 / 0.3, which
+        // could silently drift from SwitchCost.
+        let freqs = FreqDomain::aurora();
+        let a = calibration::app("tealeaf").unwrap();
+        let p = FleetParams::from_apps(&[&a], &freqs, 0.01);
+        let cost = freqs.switch_cost();
+        assert!((p.switch_stall_frac as f64 - cost.latency_s / 0.01).abs() < 1e-9);
+        assert!((p.switch_stall_frac - 0.015).abs() < 1e-9);
+        assert!((p.switch_energy_j as f64 - cost.energy_j).abs() < 1e-9);
+        // A custom cost flows through.
+        let custom = freqs
+            .clone()
+            .with_switch_cost(crate::sim::freq::SwitchCost { latency_s: 200e-6, energy_j: 0.6 });
+        let p = FleetParams::from_apps(&[&a], &custom, 0.01);
+        assert!((p.switch_stall_frac - 0.02).abs() < 1e-7);
+        assert!((p.switch_energy_j - 0.6).abs() < 1e-7);
     }
 
     #[test]

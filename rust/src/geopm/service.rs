@@ -12,15 +12,26 @@ use crate::sim::node::{Node, NodeObservation, NodeTotals};
 use crate::sim::counters::EngineGroup;
 
 /// Error type for signal/control access.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ServiceError {
-    #[error("unknown signal: {0}")]
     UnknownSignal(String),
-    #[error("control out of range: arm {arm} >= K {k}")]
     ControlOutOfRange { arm: usize, k: usize },
-    #[error("application already completed")]
     Completed,
 }
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::UnknownSignal(name) => write!(f, "unknown signal: {name}"),
+            ServiceError::ControlOutOfRange { arm, k } => {
+                write!(f, "control out of range: arm {arm} >= K {k}")
+            }
+            ServiceError::Completed => write!(f, "application already completed"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// One sampling interval's service-side record (what a `geopmread` batch
 /// would return, already diffed for convenience).

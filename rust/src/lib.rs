@@ -36,6 +36,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod control;
+pub mod exec;
 pub mod experiments;
 pub mod geopm;
 pub mod fleet;

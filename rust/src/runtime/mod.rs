@@ -1,131 +1,38 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
 //! the rust hot path.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`). HLO **text**
-//! is the interchange format (see `python/compile/aot.py`): jax ≥ 0.5 emits
-//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
-//! text parser reassigns ids.
+//! Two interchangeable backends behind one API:
+//!
+//! * **`pjrt`** (feature `xla`) — wraps the vendored `xla` crate
+//!   (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//!   `execute`). HLO **text** is the interchange format (see
+//!   `python/compile/aot.py`): jax ≥ 0.5 emits protos with 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids.
+//! * **`stub`** (default) — a dependency-free stand-in with the same
+//!   surface. Literal packing round-trips on the host; constructing a
+//!   client or executing a module returns a descriptive error, so every
+//!   caller (fleet engine, `impact`, the cross-validation tests) falls back
+//!   to the native engine or skips exactly as it does when artifacts are
+//!   missing.
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla")]
+mod pjrt;
+#[cfg(feature = "xla")]
+pub use pjrt::{literal, Literal, LoadedModule, XlaRuntime};
 
-use anyhow::{Context, Result};
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::{literal, Literal, LoadedModule, XlaRuntime};
 
 /// Default artifact directory relative to the repo root.
 pub const ARTIFACT_DIR: &str = "artifacts";
 
-/// A PJRT client (CPU).
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-}
-
-impl XlaRuntime {
-    /// Construct the CPU PJRT client.
-    pub fn cpu() -> Result<XlaRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(XlaRuntime { client })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
-    }
-
-    /// Load and compile an HLO-text artifact.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(LoadedModule { exe, path: path.to_path_buf() })
-    }
-
-    /// Resolve an artifact by name under `dir` (or [`ARTIFACT_DIR`]).
-    pub fn artifact_path(dir: Option<&Path>, name: &str) -> PathBuf {
-        dir.unwrap_or_else(|| Path::new(ARTIFACT_DIR)).join(name)
-    }
-}
-
-/// A compiled executable ready to run.
-pub struct LoadedModule {
-    exe: xla::PjRtLoadedExecutable,
-    path: PathBuf,
-}
-
-impl LoadedModule {
-    pub fn path(&self) -> &Path {
-        &self.path
-    }
-
-    /// Execute with host literals; returns the decomposed output tuple
-    /// (artifacts are lowered with `return_tuple=True`, so the raw result
-    /// is always a 1-buffer tuple).
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<xla::Literal>(inputs).context("execute")?;
-        let literal = result[0][0].to_literal_sync().context("to_literal_sync")?;
-        literal.to_tuple().context("decomposing output tuple")
-    }
-
-    /// Like [`Self::run`] but over borrowed literals — callers can mix
-    /// per-step state literals with long-lived constants without copying
-    /// the constants each step (the fleet engine's hot path).
-    pub fn run_borrowed(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<&xla::Literal>(inputs).context("execute")?;
-        let literal = result[0][0].to_literal_sync().context("to_literal_sync")?;
-        literal.to_tuple().context("decomposing output tuple")
-    }
-}
-
-/// Host-side literal helpers for the fleet engine's input packing.
-pub mod literal {
-    use anyhow::Result;
-
-    /// f32 matrix (row-major) -> rank-2 literal.
-    pub fn mat_f32(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-        assert_eq!(data.len(), rows * cols);
-        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-    }
-
-    /// f32 vector -> rank-1 literal.
-    pub fn vec_f32(data: &[f32]) -> xla::Literal {
-        xla::Literal::vec1(data)
-    }
-
-    /// i32 vector -> rank-1 literal.
-    pub fn vec_i32(data: &[i32]) -> xla::Literal {
-        xla::Literal::vec1(data)
-    }
-
-    /// f32 scalar (rank 0).
-    pub fn scalar_f32(x: f32) -> xla::Literal {
-        xla::Literal::scalar(x)
-    }
-
-    /// Extract a literal into Vec<f32>.
-    pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
-        Ok(lit.to_vec::<f32>()?)
-    }
-
-    /// Extract a literal into Vec<i32>.
-    pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
-        Ok(lit.to_vec::<i32>()?)
-    }
-
-    /// Extract a rank-0 f32.
-    pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
-        Ok(lit.get_first_element::<f32>()?)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::{Path, PathBuf};
 
     // Client construction is exercised in the integration tests (it needs
     // the xla_extension shared library); here only pure helpers.

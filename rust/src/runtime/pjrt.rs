@@ -1,0 +1,120 @@
+//! The real PJRT backend (feature `xla`): thin wrapper over the vendored
+//! `xla` crate. See the module docs in [`super`] for the artifact contract.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use xla::Literal;
+
+/// A PJRT client (CPU).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Construct the CPU PJRT client.
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule { exe, path: path.to_path_buf() })
+    }
+
+    /// Resolve an artifact by name under `dir` (or
+    /// [`super::ARTIFACT_DIR`]).
+    pub fn artifact_path(dir: Option<&Path>, name: &str) -> PathBuf {
+        dir.unwrap_or_else(|| Path::new(super::ARTIFACT_DIR)).join(name)
+    }
+}
+
+/// A compiled executable ready to run.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl LoadedModule {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Execute with host literals; returns the decomposed output tuple
+    /// (artifacts are lowered with `return_tuple=True`, so the raw result
+    /// is always a 1-buffer tuple).
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self.exe.execute::<Literal>(inputs).context("execute")?;
+        let literal = result[0][0].to_literal_sync().context("to_literal_sync")?;
+        literal.to_tuple().context("decomposing output tuple")
+    }
+
+    /// Like [`Self::run`] but over borrowed literals — callers can mix
+    /// per-step state literals with long-lived constants without copying
+    /// the constants each step (the fleet engine's hot path).
+    pub fn run_borrowed(&self, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        let result = self.exe.execute::<&Literal>(inputs).context("execute")?;
+        let literal = result[0][0].to_literal_sync().context("to_literal_sync")?;
+        literal.to_tuple().context("decomposing output tuple")
+    }
+}
+
+/// Host-side literal helpers for the fleet engine's input packing.
+pub mod literal {
+    use anyhow::Result;
+
+    use super::Literal;
+
+    /// f32 matrix (row-major) -> rank-2 literal.
+    pub fn mat_f32(data: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+        assert_eq!(data.len(), rows * cols);
+        Ok(Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+    }
+
+    /// f32 vector -> rank-1 literal.
+    pub fn vec_f32(data: &[f32]) -> Literal {
+        Literal::vec1(data)
+    }
+
+    /// i32 vector -> rank-1 literal.
+    pub fn vec_i32(data: &[i32]) -> Literal {
+        Literal::vec1(data)
+    }
+
+    /// f32 scalar (rank 0).
+    pub fn scalar_f32(x: f32) -> Literal {
+        Literal::scalar(x)
+    }
+
+    /// Extract a literal into Vec<f32>.
+    pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Extract a literal into Vec<i32>.
+    pub fn to_vec_i32(lit: &Literal) -> Result<Vec<i32>> {
+        Ok(lit.to_vec::<i32>()?)
+    }
+
+    /// Extract a rank-0 f32.
+    pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+        Ok(lit.get_first_element::<f32>()?)
+    }
+}

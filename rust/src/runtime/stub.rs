@@ -1,0 +1,126 @@
+//! Dependency-free runtime stand-in (default build, feature `xla` off).
+//!
+//! Keeps the whole PJRT call surface compiling without the vendored `xla`
+//! closure: literals are plain host buffers (packing round-trips exactly),
+//! while client construction and module execution return descriptive
+//! errors. Call sites already handle the artifacts-missing case by falling
+//! back to the native fleet engine or skipping, so the stub degrades to
+//! precisely that behavior.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+const UNAVAILABLE: &str = "PJRT runtime unavailable: built without the `xla` feature \
+     (vendored xla closure not present); use the native engine";
+
+/// Host-side stand-in for an XLA literal: typed buffer + dims.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+/// Stand-in PJRT client. [`XlaRuntime::cpu`] always errors — constructing a
+/// real client needs the xla_extension shared library.
+pub struct XlaRuntime {
+    _private: (),
+}
+
+impl XlaRuntime {
+    /// Always fails in the stub build (no PJRT client available).
+    pub fn cpu() -> Result<XlaRuntime> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Unreachable in practice (no client can be constructed); kept for API
+    /// parity.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModule> {
+        bail!("cannot load {}: {UNAVAILABLE}", path.display());
+    }
+
+    /// Resolve an artifact by name under `dir` (or
+    /// [`super::ARTIFACT_DIR`]).
+    pub fn artifact_path(dir: Option<&Path>, name: &str) -> PathBuf {
+        dir.unwrap_or_else(|| Path::new(super::ARTIFACT_DIR)).join(name)
+    }
+}
+
+/// Stand-in compiled module; execution always errors.
+pub struct LoadedModule {
+    path: PathBuf,
+}
+
+impl LoadedModule {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        bail!("cannot execute {}: {UNAVAILABLE}", self.path.display());
+    }
+
+    pub fn run_borrowed(&self, _inputs: &[&Literal]) -> Result<Vec<Literal>> {
+        bail!("cannot execute {}: {UNAVAILABLE}", self.path.display());
+    }
+}
+
+/// Host-side literal helpers (same signatures as the PJRT backend).
+pub mod literal {
+    use anyhow::{bail, Result};
+
+    use super::Literal;
+
+    /// f32 matrix (row-major) -> rank-2 literal.
+    pub fn mat_f32(data: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+        assert_eq!(data.len(), rows * cols);
+        Ok(Literal::F32 { data: data.to_vec(), dims: vec![rows, cols] })
+    }
+
+    /// f32 vector -> rank-1 literal.
+    pub fn vec_f32(data: &[f32]) -> Literal {
+        Literal::F32 { data: data.to_vec(), dims: vec![data.len()] }
+    }
+
+    /// i32 vector -> rank-1 literal.
+    pub fn vec_i32(data: &[i32]) -> Literal {
+        Literal::I32 { data: data.to_vec(), dims: vec![data.len()] }
+    }
+
+    /// f32 scalar (rank 0).
+    pub fn scalar_f32(x: f32) -> Literal {
+        Literal::F32 { data: vec![x], dims: vec![] }
+    }
+
+    /// Extract a literal into Vec<f32>.
+    pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            Literal::I32 { .. } => bail!("literal is i32, expected f32"),
+        }
+    }
+
+    /// Extract a literal into Vec<i32>.
+    pub fn to_vec_i32(lit: &Literal) -> Result<Vec<i32>> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            Literal::F32 { .. } => bail!("literal is f32, expected i32"),
+        }
+    }
+
+    /// Extract a rank-0 f32.
+    pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+        match lit {
+            Literal::F32 { data, .. } if !data.is_empty() => Ok(data[0]),
+            _ => bail!("literal is not a non-empty f32 buffer"),
+        }
+    }
+}

@@ -4,10 +4,15 @@
 //! core frequencies 0.8–1.6 GHz in 0.1 GHz steps (K = 9). Arms are indexed
 //! ascending (arm 0 = 0.8 GHz, arm K-1 = 1.6 GHz = the system default).
 
-/// The set of selectable GPU core frequencies.
+/// The set of selectable GPU core frequencies, plus the cost charged per
+/// node-level DVFS transition between them. Carrying the cost here makes it
+/// a single source of truth: the node simulator, the fleet parameter
+/// export, and the config surface all read it from the domain instead of
+/// re-stating the paper's constants.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FreqDomain {
     ghz: Vec<f64>,
+    switch_cost: SwitchCost,
 }
 
 impl FreqDomain {
@@ -16,7 +21,8 @@ impl FreqDomain {
         FreqDomain::new((8..=16).map(|i| i as f64 / 10.0).collect())
     }
 
-    /// Custom ascending frequency set.
+    /// Custom ascending frequency set (with the paper's measured default
+    /// switch cost; see [`Self::with_switch_cost`]).
     pub fn new(ghz: Vec<f64>) -> FreqDomain {
         assert!(!ghz.is_empty(), "empty frequency domain");
         assert!(
@@ -24,7 +30,20 @@ impl FreqDomain {
             "frequencies must be strictly ascending"
         );
         assert!(ghz.iter().all(|f| *f > 0.0));
-        FreqDomain { ghz }
+        FreqDomain { ghz, switch_cost: SwitchCost::default() }
+    }
+
+    /// Override the per-transition cost (custom hardware calibration).
+    pub fn with_switch_cost(mut self, cost: SwitchCost) -> FreqDomain {
+        assert!(cost.latency_s >= 0.0 && cost.energy_j >= 0.0);
+        self.switch_cost = cost;
+        self
+    }
+
+    /// Cost of one node-level frequency transition in this domain.
+    #[inline]
+    pub fn switch_cost(&self) -> SwitchCost {
+        self.switch_cost
     }
 
     /// Number of arms K.
@@ -157,6 +176,17 @@ mod tests {
     #[should_panic]
     fn rejects_unsorted() {
         FreqDomain::new(vec![1.0, 0.9]);
+    }
+
+    #[test]
+    fn switch_cost_carried_by_domain() {
+        let f = FreqDomain::aurora();
+        assert_eq!(f.switch_cost(), SwitchCost::default());
+        let custom = SwitchCost { latency_s: 300e-6, energy_j: 1.2 };
+        let f = FreqDomain::aurora().with_switch_cost(custom);
+        assert_eq!(f.switch_cost(), custom);
+        // The cost override leaves the arm set untouched.
+        assert_eq!(f.k(), 9);
     }
 
     #[test]

@@ -73,9 +73,9 @@ pub struct Node {
 impl Node {
     pub fn new(app: AppModel, freqs: FreqDomain, dt_s: f64, seed: u64) -> Node {
         let mut rng = Rng::new(seed);
-        // The paper's measured switch cost (150 µs, 0.3 J) is per node-level
+        // The switch cost (paper default: 150 µs, 0.3 J) is per node-level
         // transition event; split the energy across the six devices.
-        let node_cost = SwitchCost::default();
+        let node_cost = freqs.switch_cost();
         let per_gpu_cost = SwitchCost {
             latency_s: node_cost.latency_s,
             energy_j: node_cost.energy_j / GPUS_PER_NODE as f64,
@@ -146,9 +146,9 @@ impl Node {
         assert!(!self.done(), "step() after completion");
         assert!(arm < self.freqs.k(), "arm {arm} out of range");
         let switched = arm != self.frequency();
-        let cost = SwitchCost::default();
+        let cost = self.freqs.switch_cost();
         let stall_s = if switched { cost.latency_s } else { 0.0 };
-        // Node-level 0.3 J split across the six devices.
+        // Node-level switch energy split across the six devices.
         let switch_energy_per_gpu =
             if switched { cost.energy_j / GPUS_PER_NODE as f64 } else { 0.0 };
 
@@ -158,8 +158,9 @@ impl Node {
         let core_util = self.app.uc(&self.freqs, arm);
         let uncore_util = self.app.uu(&self.freqs, arm);
 
-        // Progress: the switch stall eats into the useful interval.
-        let useful_frac = (self.dt_s - stall_s) / self.dt_s;
+        // Progress: the switch stall eats into the useful interval (clamped
+        // at 0 — a stall longer than dt must not run progress backwards).
+        let useful_frac = ((self.dt_s - stall_s) / self.dt_s).max(0.0);
         let progress =
             (self.app.progress_per_step(&self.freqs, arm, self.dt_s) * useful_frac)
                 .min(self.remaining);
@@ -337,6 +338,24 @@ mod tests {
         let gpu_share = t.gpu_energy_kj / total;
         // Fig. 1(a): pot3d GPU share about 75 %.
         assert!((gpu_share - 0.751).abs() < 0.02, "{gpu_share}");
+    }
+
+    #[test]
+    fn custom_switch_cost_takes_effect() {
+        // Regression: Node used to hard-code SwitchCost::default() in both
+        // new() and step(), silently ignoring any configured cost.
+        let custom = SwitchCost { latency_s: 300e-6, energy_j: 1.2 };
+        let freqs = FreqDomain::aurora().with_switch_cost(custom);
+        let mut n =
+            Node::new(calibration::app("tealeaf").unwrap(), freqs, 0.01, 5);
+        for i in 0..100 {
+            n.step(i % 2);
+        }
+        let t = n.totals();
+        assert_eq!(t.switches, 100);
+        // 1.2 J and 300 µs per node-level switch event.
+        assert!((t.switch_energy_j - 100.0 * 1.2).abs() < 1e-6, "{}", t.switch_energy_j);
+        assert!((t.switch_time_s - 100.0 * 300e-6).abs() < 1e-9, "{}", t.switch_time_s);
     }
 
     #[test]

@@ -25,13 +25,24 @@ pub struct TraceRecord {
 }
 
 /// Parse error with line number.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TraceError {
-    #[error("trace line {0}: {1}")]
     Line(usize, String),
-    #[error("trace covers no complete frequency: {0}")]
     Incomplete(String),
 }
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Line(line, msg) => write!(f, "trace line {line}: {msg}"),
+            TraceError::Incomplete(what) => {
+                write!(f, "trace covers no complete frequency: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
 
 /// Parse a telemetry CSV (header optional).
 pub fn parse_trace_csv(text: &str) -> Result<Vec<TraceRecord>, TraceError> {

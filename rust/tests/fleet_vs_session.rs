@@ -1,0 +1,113 @@
+//! Cross-validation: `fleet::native` (the batched, normalized-reward
+//! Monte Carlo path) against `control::session` (the full per-node
+//! simulator) on the same app/hyper/seed — the guard that keeps the
+//! batched path's accounting from drifting away from the simulator it
+//! abstracts.
+//!
+//! Two layers:
+//!
+//! 1. **Exact accounting** — pin both paths to a single frequency arm
+//!    (StaticPolicy on the session side, a one-arm QoS mask on the fleet
+//!    side). Selection is then deterministic in both, so switch counts
+//!    must be *identical* and energy/steps must agree to f32 tolerance:
+//!    both charge `E_step(arm) × steps + switch_energy × switches` with
+//!    the same shared `SwitchCost` constants.
+//! 2. **Dynamic tolerance** — run the SA-UCB controller freely in both
+//!    paths; the trajectories differ (counter-noise model vs calibrated
+//!    reward noise) but converged energy must land in the same band.
+
+use energyucb::bandit::{EnergyUcb, EnergyUcbConfig, StaticPolicy};
+use energyucb::control::{run_session, SessionCfg};
+use energyucb::fleet::{native, FleetHyper, FleetParams, FleetState};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::util::Rng;
+use energyucb::workload::calibration;
+
+/// Run one fleet env restricted to `arm` (all other arms QoS-masked).
+fn fleet_pinned(app_name: &str, arm: usize, seed: u64) -> (f64, f64, u64) {
+    let freqs = FreqDomain::aurora();
+    let app = calibration::app(app_name).unwrap();
+    let mut params = FleetParams::from_apps(&[&app], &freqs, 0.01);
+    for i in 0..params.k {
+        params.feasible[i] = if i == arm { 1.0 } else { 0.0 };
+    }
+    let mut state = FleetState::fresh(1, freqs.k());
+    let mut rng = Rng::new(seed);
+    let steps = native::native_run(&mut state, &params, &FleetHyper::default(), &mut rng, 500_000);
+    assert!(state.all_done(), "fleet env did not finish");
+    (state.energy_kj(0), state.switches[0] as f64, steps)
+}
+
+#[test]
+fn pinned_arm_accounting_matches_session() {
+    let freqs = FreqDomain::aurora();
+    for (app_name, arm) in
+        [("tealeaf", 8), ("tealeaf", 0), ("clvleaf", 4), ("miniswp", 2), ("lbm", 8)]
+    {
+        let app = calibration::app(app_name).unwrap();
+        let mut policy = StaticPolicy::new(freqs.k(), arm);
+        let cfg = SessionCfg { seed: 42, ..SessionCfg::default() };
+        let sess = run_session(&app, &mut policy, &cfg).metrics;
+
+        let (fleet_kj, fleet_switches, fleet_steps) = fleet_pinned(app_name, arm, 42);
+
+        // Identical switch counts: exactly one down-switch from the 1.6 GHz
+        // default (zero when the pinned arm IS the default).
+        let expected_switches = if arm == freqs.max_arm() { 0 } else { 1 };
+        assert_eq!(sess.switches, expected_switches, "{app_name}/{arm}: session switches");
+        assert_eq!(
+            fleet_switches as u64, expected_switches,
+            "{app_name}/{arm}: fleet switches"
+        );
+
+        // Energy within f32/step-quantization tolerance (< 1 %).
+        let rel = (fleet_kj - sess.gpu_energy_kj).abs() / sess.gpu_energy_kj;
+        assert!(
+            rel < 0.01,
+            "{app_name}/{arm}: fleet {fleet_kj} vs session {} ({:.3}%)",
+            sess.gpu_energy_kj,
+            rel * 100.0
+        );
+
+        // Step counts agree up to f32 remaining-fraction rounding, whose
+        // worst-case drift grows with the step count (~n²·ε steps).
+        let dstep = (fleet_steps as i64 - sess.steps as i64).abs();
+        let bound = 2 + (sess.steps / 1_500) as i64;
+        assert!(
+            dstep <= bound,
+            "{app_name}/{arm}: fleet {fleet_steps} vs session {} steps (bound {bound})",
+            sess.steps
+        );
+    }
+}
+
+#[test]
+fn dynamic_saucb_energy_within_tolerance() {
+    let freqs = FreqDomain::aurora();
+    for app_name in ["tealeaf", "clvleaf"] {
+        let app = calibration::app(app_name).unwrap();
+
+        let mut policy = EnergyUcb::new(freqs.k(), EnergyUcbConfig::default());
+        let cfg = SessionCfg { seed: 7, ..SessionCfg::default() };
+        let sess_kj = run_session(&app, &mut policy, &cfg).metrics.gpu_energy_kj;
+
+        let params = FleetParams::from_apps(&[&app], &freqs, 0.01);
+        let mut state = FleetState::fresh(1, freqs.k());
+        let mut rng = Rng::new(7);
+        native::native_run(&mut state, &params, &FleetHyper::default(), &mut rng, 500_000);
+        assert!(state.all_done(), "{app_name}: fleet env did not finish");
+        let fleet_kj = state.energy_kj(0);
+
+        // Both controllers must beat the 1.6 GHz default and sit within a
+        // 12 % band of each other (different noise models, same dynamics).
+        let default_kj = app.energy_kj[freqs.max_arm()];
+        assert!(sess_kj < default_kj + 0.5, "{app_name}: session {sess_kj}");
+        assert!(fleet_kj < default_kj + 0.5, "{app_name}: fleet {fleet_kj}");
+        let rel = (fleet_kj - sess_kj).abs() / sess_kj;
+        assert!(
+            rel < 0.12,
+            "{app_name}: fleet {fleet_kj} vs session {sess_kj} ({:.1}%)",
+            rel * 100.0
+        );
+    }
+}
