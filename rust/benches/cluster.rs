@@ -1,0 +1,56 @@
+//! Cluster scheduler bench: fixed-wave vs work-stealing wall-clock on a
+//! staggered-duration scenario (the straggler workload waves are worst
+//! at), plus report-equality assertions across schedulers and job counts.
+//! Regenerates the numbers recorded in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use energyucb::cluster::{ClusterConfig, Leader, ScenarioSchedule};
+use energyucb::exec::available_jobs;
+
+fn main() {
+    let cores = available_jobs();
+    let jobs = cores.min(8);
+    let nodes = 4 * jobs;
+    println!("# cluster scheduling ({cores} cores; {jobs} jobs, {nodes} nodes)");
+
+    // Staggered arrivals: step budgets 25–100 % of 6,000 decisions, so
+    // every wave of `jobs` nodes contains one straggler at 4x the budget
+    // of its shortest member.
+    let schedule = ScenarioSchedule::preset("staggered", 2026).unwrap();
+    let assignments = schedule.assignments(nodes).unwrap();
+    let leader = Leader::new(ClusterConfig { jobs, ..ClusterConfig::default() });
+
+    let t0 = Instant::now();
+    let waves = leader.run_waves(&assignments).unwrap();
+    let wave_wall = t0.elapsed();
+    println!("bench cluster/staggered/waves     {:>8.3} s  (reference)", wave_wall.as_secs_f64());
+
+    let t0 = Instant::now();
+    let stealing = leader.run(&assignments).unwrap();
+    let steal_wall = t0.elapsed();
+    let speedup = wave_wall.as_secs_f64() / steal_wall.as_secs_f64().max(1e-9);
+    println!(
+        "bench cluster/staggered/stealing  {:>8.3} s  ({speedup:.2}x vs waves)",
+        steal_wall.as_secs_f64()
+    );
+    assert_eq!(
+        stealing.render(),
+        waves.render(),
+        "schedulers must produce identical reports"
+    );
+    if jobs > 1 {
+        // With one worker both schedulers degenerate to a serial loop.
+        assert!(
+            speedup > 1.0,
+            "work stealing should beat fixed waves on staggered durations ({speedup:.2}x)"
+        );
+    }
+
+    // Determinism across job counts (the §Cluster contract).
+    let serial = Leader::new(ClusterConfig { jobs: 1, ..ClusterConfig::default() })
+        .run(&assignments)
+        .unwrap();
+    assert_eq!(serial.render(), stealing.render(), "report changed with jobs");
+    println!("report byte-identical at jobs = 1 / {jobs} ✓");
+}

@@ -1,63 +1,51 @@
-//! Multi-node orchestration demo: the cluster leader runs EnergyUCB on a
-//! rack of simulated Aurora nodes in parallel worker threads, streams
-//! telemetry, and merges per-node results — the production-deployment
-//! shape behind the paper's fleet-scale impact claim.
+//! Multi-node orchestration demo: the cluster leader runs a scenario
+//! schedule over a rack of simulated Aurora nodes on the work-stealing
+//! executor, streams telemetry, and merges per-node results — the
+//! production-deployment shape behind the paper's fleet-scale impact
+//! claim. (The CLI equivalent is `energyucb cluster`.)
 //!
 //! ```sh
-//! cargo run --release --example cluster_demo [nodes] [parallelism]
+//! cargo run --release --example cluster_demo [nodes] [jobs] [scenario]
 //! ```
 
-use energyucb::cluster::{ClusterConfig, Leader};
-use energyucb::util::table::{fnum, fnum_sep, Table};
-use energyucb::workload::calibration::APP_NAMES;
+use energyucb::cluster::{ClusterConfig, Leader, ScenarioSchedule};
+use energyucb::exec::available_jobs;
 
 fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
     let nodes: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(18);
-    let parallelism: usize = args
-        .next()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let jobs: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or_else(available_jobs);
+    let scenario = args.next().unwrap_or_else(|| "mixed".to_string());
 
-    // Short/medium apps for a snappy demo (the long LLM runs are covered
-    // by `energyucb exp impact`).
-    let apps = ["lbm", "tealeaf", "clvleaf", "miniswp", "pot3d", "weather"];
-    println!(
-        "cluster demo: {nodes} nodes x EnergyUCB over {:?} ({parallelism} workers)\n",
-        apps
-    );
+    let schedule = ScenarioSchedule::preset(&scenario, 2026)
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario: {scenario}"))?;
+    println!("cluster demo: {nodes} nodes, scenario {scenario} ({jobs} jobs)\n");
 
-    let leader = Leader::new(ClusterConfig { parallelism, ..ClusterConfig::default() });
-    let assignments = Leader::assign_round_robin(&apps, nodes, 2026);
+    let leader = Leader::new(ClusterConfig { jobs, ..ClusterConfig::default() });
+    let assignments = schedule.assignments(nodes).map_err(|e| anyhow::anyhow!(e))?;
     let t0 = std::time::Instant::now();
     let report = leader.run(&assignments)?;
     let wall = t0.elapsed();
 
-    let mut table = Table::new(vec!["app", "nodes", "mean kJ", "std kJ"]);
-    for (app, (count, mean, std)) in &report.per_app {
-        table.row(vec![
-            app.clone(),
-            count.to_string(),
-            fnum_sep(*mean, 2),
-            fnum(*std, 2),
-        ]);
-    }
-    println!("{}", table.render());
-    println!(
-        "total GPU energy {} kJ, saved vs 1.6 GHz defaults {} kJ \
-         ({} telemetry heartbeats, {:.1}s wall)",
-        fnum_sep(report.total_energy_kj, 1),
-        fnum_sep(report.total_saved_kj, 1),
-        report.heartbeats,
-        wall.as_secs_f64()
-    );
+    print!("{}", report.render());
     let sim_seconds: f64 = report.nodes.iter().map(|n| n.metrics.exec_time_s).sum();
     println!(
-        "simulated {:.0} node-seconds of the rack in {:.1}s ({:.0}x real time)",
-        sim_seconds,
+        "wall {:.1}s — simulated {:.0} node-seconds of the rack ({:.0}x real time)",
         wall.as_secs_f64(),
-        sim_seconds / wall.as_secs_f64()
+        sim_seconds,
+        sim_seconds / wall.as_secs_f64().max(1e-9)
     );
-    let _ = APP_NAMES; // full suite available via --nodes over all 9 apps
+
+    // The same scenario under the legacy fixed-wave scheduler: identical
+    // report, slower wall-clock on mixed-duration scenarios.
+    let t0 = std::time::Instant::now();
+    let wave_report = leader.run_waves(&assignments)?;
+    let wave_wall = t0.elapsed();
+    assert_eq!(wave_report.render(), report.render(), "schedulers must agree");
+    println!(
+        "wave-scheduler reference: {:.1}s wall ({:.2}x the stealing pool)",
+        wave_wall.as_secs_f64(),
+        wave_wall.as_secs_f64() / wall.as_secs_f64().max(1e-9)
+    );
     Ok(())
 }

@@ -4,6 +4,7 @@
 //! energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--quick]
 //! energyucb run [--config cfg.toml] [--app NAME] [--policy NAME] [--reps N]
 //! energyucb fleet [--apps a,b,..] [--batch B] [--steps N] [--native] [--delta D]
+//! energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config cfg.toml]
 //! energyucb list
 //! ```
 
@@ -31,12 +32,20 @@ USAGE:
   energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--jobs J] [--quick]
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
   energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
+  energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config FILE]
+                    [--seed S] [--heartbeat H] [--csv PATH] [--waves]
   energyucb list
   energyucb help
 
 Experiments regenerate the paper's tables/figures (see `energyucb list`).
 --jobs shards the experiment grid across J worker threads (default: all
-cores); output is byte-identical at any J (see EXPERIMENTS.md).";
+cores); output is byte-identical at any J (see EXPERIMENTS.md).
+
+Cluster runs a simulated multi-node fleet on the work-stealing executor.
+Scenarios: uniform | mixed | staggered | hetero, or a [cluster] config
+file with [[cluster.scenario]] app-mix entries (see configs/
+cluster_mixed.toml). Reports are byte-identical at any --jobs; --waves
+uses the legacy fixed-wave scheduler (perf baseline).";
 
 /// Entry point used by main(); returns the process exit code.
 pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
@@ -50,6 +59,7 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
         "exp" => cmd_exp(rest),
         "run" => cmd_run(rest),
         "fleet" => cmd_fleet(rest),
+        "cluster" => cmd_cluster(rest),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -245,6 +255,91 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
     Ok(0)
 }
 
+fn cmd_cluster(rest: &[String]) -> Result<i32> {
+    use crate::cluster::{ClusterConfig, Leader, ScenarioSchedule};
+    use crate::config::ClusterFileConfig;
+
+    let args = Args::parse(rest, &["waves"])?;
+    args.ensure_known(&["nodes", "jobs", "scenario", "config", "seed", "heartbeat", "csv"])?;
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            ClusterFileConfig::from_toml(&text)?
+        }
+        None => ClusterFileConfig::default(),
+    };
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.schedule.seed = s;
+    }
+    if let Some(name) = args.get("scenario") {
+        // A preset replaces the whole schedule; combining it with a config
+        // file would silently drop the file's mix/arrivals/hetero setup.
+        if args.get("config").is_some() {
+            bail!("cluster: --scenario and --config are mutually exclusive");
+        }
+        cfg.schedule = ScenarioSchedule::preset(name, cfg.schedule.seed)
+            .with_context(|| format!("unknown scenario: {name} (uniform|mixed|staggered|hetero)"))?;
+    }
+    if let Some(n) = args.get_usize("nodes")? {
+        if n == 0 {
+            bail!("cluster: --nodes must be >= 1");
+        }
+        cfg.nodes = n;
+    }
+    if let Some(j) = args.get_usize("jobs")? {
+        if j == 0 {
+            bail!("cluster: --jobs must be >= 1");
+        }
+        cfg.jobs = Some(j);
+    }
+    if let Some(h) = args.get_u64("heartbeat")? {
+        if h == 0 {
+            bail!("cluster: --heartbeat must be >= 1");
+        }
+        cfg.heartbeat_steps = h;
+    }
+
+    let jobs = cfg.jobs.unwrap_or_else(crate::exec::available_jobs);
+    let leader = Leader::new(ClusterConfig {
+        jobs,
+        policy: cfg.policy.clone(),
+        session: SessionCfg::default(),
+        heartbeat_steps: cfg.heartbeat_steps,
+    });
+    let assignments =
+        cfg.schedule.assignments(cfg.nodes).map_err(|e| anyhow::anyhow!("cluster: {e}"))?;
+    eprintln!(
+        "cluster: {} nodes, scenario {}, {jobs} jobs ({})",
+        cfg.nodes,
+        cfg.schedule.name,
+        if args.flag("waves") { "fixed waves" } else { "work-stealing" }
+    );
+    let t0 = std::time::Instant::now();
+    let report = if args.flag("waves") {
+        leader.run_waves(&assignments)?
+    } else {
+        leader.run(&assignments)?
+    };
+    let wall = t0.elapsed();
+    // Deterministic report on stdout; timing on stderr so stdout stays
+    // byte-identical across --jobs.
+    print!("{}", report.render());
+    let sim_seconds: f64 = report.nodes.iter().map(|n| n.metrics.exec_time_s).sum();
+    eprintln!(
+        "wall {:.2}s, simulated {:.0} node-seconds ({:.0}x real time)",
+        wall.as_secs_f64(),
+        sim_seconds,
+        sim_seconds / wall.as_secs_f64().max(1e-9)
+    );
+    if let Some(path) = args.get("csv") {
+        let path = PathBuf::from(path);
+        report.to_csv().write_to(&path)?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(0)
+}
+
 fn cmd_list() -> Result<i32> {
     println!("experiments:");
     for e in all_experiments() {
@@ -300,6 +395,27 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn cluster_small_run() {
+        let code = dispatch(&[
+            "cluster", "--nodes", "3", "--jobs", "2", "--scenario", "staggered", "--seed", "5",
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn cluster_rejects_bad_args() {
+        assert!(dispatch(&["cluster", "--nodes", "0"]).is_err());
+        assert!(dispatch(&["cluster", "--jobs", "0"]).is_err());
+        assert!(dispatch(&["cluster", "--scenario", "bogus"]).is_err());
+        assert!(dispatch(&["cluster", "--bogus", "1"]).is_err());
+        // A preset replaces the schedule wholesale; combining conflicts.
+        assert!(
+            dispatch(&["cluster", "--scenario", "mixed", "--config", "configs/x.toml"]).is_err()
+        );
     }
 
     #[test]

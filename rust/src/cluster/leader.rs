@@ -1,34 +1,73 @@
-//! Cluster leader: fan out node assignments to a bounded worker pool,
-//! drain the telemetry stream, and merge results deterministically.
+//! Cluster leader: fan out node assignments to the deterministic
+//! work-stealing executor, drain the telemetry stream, and merge results
+//! deterministically.
+//!
+//! Scheduling follows the executor contract (EXPERIMENTS.md §Executor):
+//! each node plan is a pure function of its assignment, `exec::run_indexed`
+//! decides only *when* a node runs, and the merge happens in stable node-id
+//! order on the leader thread — so the [`ClusterReport`] is byte-identical
+//! at any `--jobs` value. A legacy fixed-wave scheduler is kept as
+//! [`Leader::run_waves`]: it produces the identical report (same plans,
+//! same merge) and serves as the cross-check reference and the wall-clock
+//! baseline the work-stealing path must beat on mixed-duration scenarios
+//! (see EXPERIMENTS.md §Perf).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
-use crate::bandit::Policy;
 use crate::config::PolicyConfig;
 use crate::control::SessionCfg;
-use crate::sim::freq::FreqDomain;
+use crate::exec::{available_jobs, run_indexed};
+use crate::sim::freq::{FreqDomain, SwitchCost};
+use crate::telemetry::Recorder;
+use crate::util::io::Csv;
 use crate::util::stats::Welford;
+use crate::util::table::{fnum, fnum_sep, Table};
 use crate::workload::calibration;
+use crate::workload::model::AppModel;
 
 use super::worker::{self, NodeResult, WorkerEvent};
 
-/// One node's job: which app it runs and its seed.
+/// One node's job: which app it runs, its seed, and optional per-node
+/// overrides (scenario layer: step budget, policy, switch cost).
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodeAssignment {
     pub node: usize,
     pub app: String,
     pub seed: u64,
+    /// Step budget override (staggered arrivals); `None` = run to
+    /// completion under the session default cap.
+    pub max_steps: Option<u64>,
+    /// Policy override for this node; `None` = the cluster default.
+    pub policy: Option<PolicyConfig>,
+    /// Per-node DVFS transition cost (heterogeneous fleets); `None` = the
+    /// cluster session default.
+    pub switch_cost: Option<SwitchCost>,
+}
+
+impl NodeAssignment {
+    /// A plain assignment with no per-node overrides.
+    pub fn new(node: usize, app: &str, seed: u64) -> NodeAssignment {
+        NodeAssignment {
+            node,
+            app: app.to_string(),
+            seed,
+            max_steps: None,
+            policy: None,
+            switch_cost: None,
+        }
+    }
 }
 
 /// Cluster run configuration.
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
-    /// Maximum worker threads (bounded pool).
-    pub parallelism: usize,
-    /// Policy to instantiate per node.
+    /// Worker threads for the node pool (work-stealing; also the wave
+    /// width of the legacy scheduler).
+    pub jobs: usize,
+    /// Default policy, overridable per assignment.
     pub policy: PolicyConfig,
-    /// Base session settings (seed overridden per assignment).
+    /// Base session settings (seed and per-node overrides applied on top).
     pub session: SessionCfg,
     /// Decisions between progress heartbeats.
     pub heartbeat_steps: u64,
@@ -37,7 +76,7 @@ pub struct ClusterConfig {
 impl Default for ClusterConfig {
     fn default() -> Self {
         ClusterConfig {
-            parallelism: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            jobs: available_jobs(),
             policy: PolicyConfig::EnergyUcb(crate::bandit::energyucb::EnergyUcbConfig::default()),
             session: SessionCfg::default(),
             heartbeat_steps: 1_000,
@@ -52,12 +91,59 @@ pub struct ClusterReport {
     pub nodes: Vec<NodeResult>,
     /// Total GPU energy across nodes, kJ.
     pub total_energy_kj: f64,
-    /// Total saved vs per-app 1.6 GHz defaults, kJ.
+    /// Total saved vs per-app 1.6 GHz defaults, kJ (budget-capped nodes
+    /// compare against the same fraction of the default-frequency run).
     pub total_saved_kj: f64,
     /// Progress heartbeats observed (telemetry-stream health).
     pub heartbeats: u64,
     /// Per-app energy statistics across nodes.
     pub per_app: BTreeMap<String, (u64, f64, f64)>, // (count, mean kJ, std kJ)
+}
+
+impl ClusterReport {
+    /// Deterministic text report (no wall-clock — timing goes to stderr so
+    /// stdout stays byte-identical across `--jobs`).
+    pub fn render(&self) -> String {
+        let mut table = Table::new(vec!["app", "nodes", "mean kJ", "std kJ"]);
+        for (app, (count, mean, std)) in &self.per_app {
+            table.row(vec![app.clone(), count.to_string(), fnum_sep(*mean, 2), fnum(*std, 2)]);
+        }
+        format!(
+            "{}total GPU energy {} kJ, saved vs 1.6 GHz defaults {} kJ \
+             ({} nodes, {} telemetry heartbeats)\n",
+            table.render(),
+            fnum_sep(self.total_energy_kj, 1),
+            fnum_sep(self.total_saved_kj, 1),
+            self.nodes.len(),
+            self.heartbeats
+        )
+    }
+
+    /// Per-node CSV (node-id order, deterministic).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new();
+        csv.row(&["node", "app", "energy_kj", "time_s", "switches", "steps"]);
+        for r in &self.nodes {
+            csv.row(&[
+                r.node.to_string(),
+                r.app.clone(),
+                format!("{:.6}", r.metrics.gpu_energy_kj),
+                format!("{:.6}", r.metrics.exec_time_s),
+                r.metrics.switches.to_string(),
+                r.metrics.steps.to_string(),
+            ]);
+        }
+        csv
+    }
+}
+
+/// A fully resolved, validated per-node execution plan. Built once, up
+/// front, so the schedulers never clone configs or resolve apps mid-run.
+struct NodePlan {
+    node: usize,
+    app: AppModel,
+    policy: PolicyConfig,
+    session: SessionCfg,
 }
 
 /// The cluster leader.
@@ -67,94 +153,190 @@ pub struct Leader {
 
 impl Leader {
     pub fn new(cfg: ClusterConfig) -> Leader {
-        assert!(cfg.parallelism > 0);
+        assert!(cfg.jobs > 0);
         Leader { cfg }
     }
 
     /// Round-robin assignment of `nodes` over `apps`, seeds derived from
-    /// `seed0 + node`.
+    /// `seed0 + node`. Infallible like the pre-scenario API — app names
+    /// are validated when the leader runs, not here; richer mixes come
+    /// from [`super::ScenarioSchedule`].
     pub fn assign_round_robin(apps: &[&str], nodes: usize, seed0: u64) -> Vec<NodeAssignment> {
+        assert!(!apps.is_empty(), "assign_round_robin: no apps");
         (0..nodes)
-            .map(|n| NodeAssignment {
-                node: n,
-                app: apps[n % apps.len()].to_string(),
-                seed: seed0 + n as u64,
-            })
+            .map(|n| NodeAssignment::new(n, apps[n % apps.len()], seed0 + n as u64))
             .collect()
     }
 
-    /// Execute all assignments; blocks until completion.
+    /// Execute all assignments on the work-stealing pool; blocks until
+    /// completion. Report is byte-identical at any `jobs` value.
     pub fn run(&self, assignments: &[NodeAssignment]) -> anyhow::Result<ClusterReport> {
-        let freqs = FreqDomain::aurora();
+        let plans = self.resolve(assignments)?;
         let (tx, rx) = mpsc::sync_channel::<WorkerEvent>(256);
-        let mut results: Vec<Option<NodeResult>> = vec![None; assignments.len()];
-        let mut heartbeats = 0u64;
+        let drainer = spawn_drainer(rx);
 
-        // Bounded pool: chunk assignments into waves of `parallelism`.
-        // (A work-stealing queue would be overkill: nodes are ~equal cost.)
-        for wave in assignments.chunks(self.cfg.parallelism) {
-            let mut handles = Vec::new();
-            for a in wave {
-                let app = calibration::app(&a.app)
-                    .ok_or_else(|| anyhow::anyhow!("unknown app {}", a.app))?;
-                let policy: Box<dyn Policy> = self
-                    .build_policy_cfg()
-                    .build_policy(freqs.k(), a.seed);
-                let cfg = SessionCfg { seed: a.seed, ..self.cfg.session.clone() };
-                let tx = tx.clone();
-                let node = a.node;
-                let hb = self.cfg.heartbeat_steps;
-                handles.push(std::thread::spawn(move || {
-                    worker::run_node(node, &app, policy, &cfg, hb, &tx);
-                }));
-            }
-            // Drain while this wave runs: collect exactly wave-many Done
-            // events (plus any progress chatter).
-            let mut done_in_wave = 0;
-            while done_in_wave < wave.len() {
-                match rx.recv() {
-                    Ok(WorkerEvent::Progress { .. }) => heartbeats += 1,
-                    Ok(WorkerEvent::Done { node, result }) => {
-                        let idx = assignments
-                            .iter()
-                            .position(|a| a.node == node)
-                            .expect("known node");
-                        results[idx] = Some(result);
-                        done_in_wave += 1;
-                    }
-                    Err(_) => anyhow::bail!("worker channel closed early"),
+        let hb = self.cfg.heartbeat_steps;
+        let freqs = FreqDomain::aurora();
+        let results = {
+            let tx = &tx;
+            run_indexed(self.cfg.jobs, plans.len(), |i| {
+                let p = &plans[i];
+                let policy = p.policy.build(freqs.k(), p.session.seed);
+                worker::run_node(p.node, &p.app, policy, &p.session, hb, tx)
+            })
+        };
+        drop(tx);
+        let telemetry = drainer.join().map_err(|_| anyhow::anyhow!("drainer panicked"))?;
+        merge(results, &telemetry)
+    }
+
+    /// Legacy fixed-wave scheduler: chunk the plans into waves of `jobs`
+    /// threads and join each wave before starting the next. Produces the
+    /// identical report (same plans, same merge) but idles behind each
+    /// wave's straggler — kept as the cross-check reference and perf
+    /// baseline for the work-stealing path.
+    pub fn run_waves(&self, assignments: &[NodeAssignment]) -> anyhow::Result<ClusterReport> {
+        let plans = self.resolve(assignments)?;
+        // Node-id -> result-slot map, precomputed once (the drain loop
+        // previously searched the assignment list per Done event: O(n^2)).
+        let slot_of: BTreeMap<usize, usize> =
+            plans.iter().enumerate().map(|(i, p)| (p.node, i)).collect();
+        let (tx, rx) = mpsc::sync_channel::<WorkerEvent>(256);
+        let mut results: Vec<Option<NodeResult>> = (0..plans.len()).map(|_| None).collect();
+        let mut telemetry = Recorder::new();
+
+        let freqs = FreqDomain::aurora();
+        for wave in plans.chunks(self.cfg.jobs) {
+            std::thread::scope(|scope| -> anyhow::Result<()> {
+                let mut handles = Vec::new();
+                for p in wave {
+                    let tx = tx.clone();
+                    let hb = self.cfg.heartbeat_steps;
+                    let freqs = &freqs;
+                    handles.push(scope.spawn(move || {
+                        let policy = p.policy.build(freqs.k(), p.session.seed);
+                        worker::run_node(p.node, &p.app, policy, &p.session, hb, &tx)
+                    }));
                 }
-            }
-            for h in handles {
-                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
-            }
+                // Drain while this wave runs: collect exactly wave-many
+                // Done events (plus any progress chatter).
+                let mut done_in_wave = 0;
+                while done_in_wave < wave.len() {
+                    match rx.recv() {
+                        Ok(ev) => {
+                            record_event(&mut telemetry, &ev);
+                            if let WorkerEvent::Done { node, result } = ev {
+                                results[slot_of[&node]] = Some(result);
+                                done_in_wave += 1;
+                            }
+                        }
+                        Err(_) => anyhow::bail!("worker channel closed early"),
+                    }
+                }
+                for h in handles {
+                    h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+                }
+                Ok(())
+            })?;
         }
         drop(tx);
 
-        let nodes: Vec<NodeResult> =
+        let results: Vec<NodeResult> =
             results.into_iter().map(|r| r.expect("all nodes done")).collect();
-        let mut total = 0.0;
-        let mut saved = 0.0;
-        let mut per_app_acc: BTreeMap<String, Welford> = BTreeMap::new();
-        for r in &nodes {
-            total += r.metrics.gpu_energy_kj;
-            let app = calibration::app(&r.app).unwrap();
-            saved += app.energy_kj[freqs.max_arm()] - r.metrics.gpu_energy_kj;
-            per_app_acc.entry(r.app.clone()).or_default().push(r.metrics.gpu_energy_kj);
-        }
-        let per_app = per_app_acc
-            .into_iter()
-            .map(|(k, w)| (k, (w.count(), w.mean(), w.sample_std())))
-            .collect();
-        Ok(ClusterReport { nodes, total_energy_kj: total, total_saved_kj: saved, heartbeats, per_app })
+        merge(results, &telemetry)
     }
 
-    fn build_policy_cfg(&self) -> crate::config::ExperimentConfig {
-        crate::config::ExperimentConfig {
-            policy: self.cfg.policy.clone(),
-            ..crate::config::ExperimentConfig::default()
-        }
+    /// Validate and resolve every assignment into an executable plan.
+    /// All fallible work (unknown apps, duplicate node ids) happens here,
+    /// before any thread spawns; each `SessionCfg` is built exactly once.
+    fn resolve(&self, assignments: &[NodeAssignment]) -> anyhow::Result<Vec<NodePlan>> {
+        let mut seen = std::collections::BTreeSet::new();
+        assignments
+            .iter()
+            .map(|a| {
+                if !seen.insert(a.node) {
+                    anyhow::bail!("duplicate node id {}", a.node);
+                }
+                let app = calibration::app(&a.app)
+                    .ok_or_else(|| anyhow::anyhow!("unknown app {}", a.app))?;
+                let base = &self.cfg.session;
+                let session = SessionCfg {
+                    seed: a.seed,
+                    max_steps: a.max_steps.unwrap_or(base.max_steps),
+                    switch_cost: a.switch_cost.unwrap_or(base.switch_cost),
+                    ..base.clone()
+                };
+                if session.switch_cost.latency_s >= session.dt_s {
+                    anyhow::bail!(
+                        "node {}: switch latency {}s >= decision interval {}s",
+                        a.node,
+                        session.switch_cost.latency_s,
+                        session.dt_s
+                    );
+                }
+                Ok(NodePlan {
+                    node: a.node,
+                    app,
+                    policy: a.policy.clone().unwrap_or_else(|| self.cfg.policy.clone()),
+                    session,
+                })
+            })
+            .collect()
     }
+}
+
+/// Fold a worker event into the telemetry recorder (heartbeat stream).
+fn record_event(telemetry: &mut Recorder, ev: &WorkerEvent) {
+    match ev {
+        WorkerEvent::Progress { energy_j, .. } => {
+            telemetry.counter("cluster.heartbeats").inc();
+            telemetry.gauge("cluster.progress_energy_j").record(*energy_j);
+        }
+        WorkerEvent::Done { .. } => telemetry.counter("cluster.nodes_done").inc(),
+    }
+}
+
+/// Drain the telemetry stream on a dedicated thread until every sender is
+/// dropped, so worker heartbeats never block on a busy leader.
+fn spawn_drainer(rx: mpsc::Receiver<WorkerEvent>) -> std::thread::JoinHandle<Recorder> {
+    std::thread::spawn(move || {
+        let mut telemetry = Recorder::new();
+        for ev in rx {
+            record_event(&mut telemetry, &ev);
+        }
+        telemetry
+    })
+}
+
+/// Stable merge: order by node id, then aggregate in that fixed order so
+/// floating-point totals are independent of completion order.
+fn merge(mut nodes: Vec<NodeResult>, telemetry: &Recorder) -> anyhow::Result<ClusterReport> {
+    nodes.sort_by_key(|r| r.node);
+    let freqs = FreqDomain::aurora();
+    let mut total = 0.0;
+    let mut saved = 0.0;
+    let mut per_app_acc: BTreeMap<String, Welford> = BTreeMap::new();
+    for r in &nodes {
+        total += r.metrics.gpu_energy_kj;
+        let app = calibration::app(&r.app).expect("resolved app");
+        // Budget-capped nodes (staggered arrivals) ran only part of the
+        // job; scale the default-frequency baseline by the true completed
+        // work fraction so "saved" compares like with like.
+        let frac = r.metrics.completed.clamp(0.0, 1.0);
+        saved += app.energy_kj[freqs.max_arm()] * frac - r.metrics.gpu_energy_kj;
+        per_app_acc.entry(r.app.clone()).or_default().push(r.metrics.gpu_energy_kj);
+    }
+    let per_app = per_app_acc
+        .into_iter()
+        .map(|(k, w)| (k, (w.count(), w.mean(), w.sample_std())))
+        .collect();
+    Ok(ClusterReport {
+        nodes,
+        total_energy_kj: total,
+        total_saved_kj: saved,
+        heartbeats: telemetry.counter_value("cluster.heartbeats").unwrap_or(0),
+        per_app,
+    })
 }
 
 #[cfg(test)]
@@ -173,11 +355,7 @@ mod tests {
 
     #[test]
     fn cluster_runs_nodes_in_parallel_and_merges() {
-        let cfg = ClusterConfig {
-            parallelism: 4,
-            heartbeat_steps: 2_000,
-            ..ClusterConfig::default()
-        };
+        let cfg = ClusterConfig { jobs: 4, heartbeat_steps: 2_000, ..ClusterConfig::default() };
         let leader = Leader::new(cfg);
         let assignments = Leader::assign_round_robin(&["tealeaf", "clvleaf"], 6, 42);
         let report = leader.run(&assignments).unwrap();
@@ -197,21 +375,53 @@ mod tests {
 
     #[test]
     fn cluster_is_deterministic_given_seeds() {
-        let mk = || {
-            let leader = Leader::new(ClusterConfig {
-                parallelism: 2,
-                ..ClusterConfig::default()
-            });
+        let mk = |jobs| {
+            let leader = Leader::new(ClusterConfig { jobs, ..ClusterConfig::default() });
             let assignments = Leader::assign_round_robin(&["clvleaf"], 4, 7);
             leader.run(&assignments).unwrap().total_energy_kj
         };
-        assert_eq!(mk(), mk());
+        assert_eq!(mk(2), mk(2));
+        assert_eq!(mk(1), mk(4));
+    }
+
+    #[test]
+    fn per_node_overrides_apply() {
+        let leader = Leader::new(ClusterConfig { jobs: 2, ..ClusterConfig::default() });
+        let mut a = Leader::assign_round_robin(&["clvleaf"], 2, 7);
+        a[1].max_steps = Some(500);
+        a[1].policy = Some(PolicyConfig::Static { arm: 8 });
+        let report = leader.run(&a).unwrap();
+        assert_eq!(report.nodes[1].metrics.steps, 500);
+        assert_eq!(report.nodes[1].metrics.policy, "Static[arm 8]");
+        assert_eq!(report.nodes[1].metrics.switches, 0);
+        assert!(report.nodes[0].metrics.steps > 500);
     }
 
     #[test]
     fn unknown_app_is_an_error() {
         let leader = Leader::new(ClusterConfig::default());
-        let bad = vec![NodeAssignment { node: 0, app: "nope".into(), seed: 1 }];
+        let bad = vec![NodeAssignment::new(0, "nope", 1)];
         assert!(leader.run(&bad).is_err());
+    }
+
+    #[test]
+    fn duplicate_node_ids_are_an_error() {
+        let leader = Leader::new(ClusterConfig::default());
+        let bad = vec![NodeAssignment::new(3, "tealeaf", 1), NodeAssignment::new(3, "tealeaf", 2)];
+        assert!(leader.run(&bad).is_err());
+    }
+
+    #[test]
+    fn waves_and_stealing_agree() {
+        let leader = Leader::new(ClusterConfig {
+            jobs: 3,
+            heartbeat_steps: 1_500,
+            ..ClusterConfig::default()
+        });
+        let assignments = Leader::assign_round_robin(&["tealeaf", "clvleaf"], 5, 42);
+        let a = leader.run(&assignments).unwrap();
+        let b = leader.run_waves(&assignments).unwrap();
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.to_csv().render(), b.to_csv().render());
     }
 }

@@ -8,9 +8,18 @@
 //! std::thread workers (tokio is not in the offline crate set), a bounded
 //! mpsc telemetry channel with backpressure, and a leader that merges
 //! per-node results deterministically.
+//!
+//! Scheduling runs on the deterministic work-stealing executor
+//! (`exec::run_indexed`), so a straggler node never idles the rest of the
+//! pool and the merged report is byte-identical at any `--jobs` value.
+//! The [`ScenarioSchedule`] layer generates assignment mixes beyond
+//! round-robin: weighted app mixes, staggered arrivals, per-app policy
+//! overrides, and heterogeneous per-node switch costs.
 
 pub mod leader;
+pub mod schedule;
 pub mod worker;
 
 pub use leader::{ClusterConfig, ClusterReport, Leader, NodeAssignment};
+pub use schedule::{AppSlot, Arrivals, Pick, ScenarioSchedule};
 pub use worker::{NodeResult, WorkerEvent};

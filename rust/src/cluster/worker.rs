@@ -23,8 +23,17 @@ pub struct NodeResult {
     pub metrics: RunMetrics,
 }
 
+/// Number of heartbeats a node emits for a run of `steps` decisions.
+/// A pure function of the run (never of scheduling), so the cluster-wide
+/// heartbeat total is identical at any worker count.
+pub fn heartbeat_count(steps: u64, heartbeat_steps: u64) -> u64 {
+    (steps.max(1) / heartbeat_steps.max(1)).min(50)
+}
+
 /// Run one node to completion, streaming progress events every
-/// `heartbeat_steps` decisions. Blocking — call from a worker thread.
+/// `heartbeat_steps` decisions and returning the final result (which is
+/// also mirrored onto the stream as a terminal [`WorkerEvent::Done`]).
+/// Blocking — call from a worker thread.
 pub fn run_node(
     node: usize,
     app: &AppModel,
@@ -32,13 +41,13 @@ pub fn run_node(
     cfg: &SessionCfg,
     heartbeat_steps: u64,
     tx: &SyncSender<WorkerEvent>,
-) {
+) -> NodeResult {
     // Stream coarse progress by running in heartbeat-sized chunks via the
     // checkpointed session result (fine-grained streaming would need the
     // session to callback; checkpoints are enough for leader-side UX).
     let result = run_session(app, policy.as_mut(), cfg);
-    let total_steps = result.metrics.steps.max(1);
-    let beats = (total_steps / heartbeat_steps.max(1)).min(50);
+    let out = NodeResult { node, app: app.name.to_string(), metrics: result.metrics };
+    let beats = heartbeat_count(out.metrics.steps, heartbeat_steps);
     for b in 1..=beats {
         let completed = b as f64 / beats as f64;
         let energy = result.energy_at_progress_j(completed);
@@ -47,13 +56,11 @@ pub fn run_node(
             .send(WorkerEvent::Progress { node, completed, energy_j: energy })
             .is_err()
         {
-            return; // leader gone
+            return out; // leader gone; the result still reaches the pool
         }
     }
-    let _ = tx.send(WorkerEvent::Done {
-        node,
-        result: NodeResult { node, app: app.name.to_string(), metrics: result.metrics },
-    });
+    let _ = tx.send(WorkerEvent::Done { node, result: out.clone() });
+    out
 }
 
 #[cfg(test)]
@@ -69,7 +76,7 @@ mod tests {
         let (tx, rx) = mpsc::sync_channel(64);
         let cfg = SessionCfg::default();
         let handle = std::thread::spawn(move || {
-            run_node(3, &app, Box::new(StaticPolicy::new(9, 8)), &cfg, 500, &tx);
+            run_node(3, &app, Box::new(StaticPolicy::new(9, 8)), &cfg, 500, &tx)
         });
         let mut progress_events = 0;
         let mut done = None;
@@ -87,10 +94,22 @@ mod tests {
                 }
             }
         }
-        handle.join().unwrap();
+        let returned = handle.join().unwrap();
         assert!(progress_events > 0);
+        assert_eq!(progress_events, heartbeat_count(returned.metrics.steps, 500));
         let result = done.expect("Done event");
         assert_eq!(result.app, "clvleaf");
         assert!((result.metrics.gpu_energy_kj - 100.65).abs() < 1.0);
+        // The returned result and the streamed Done event agree.
+        assert_eq!(returned.metrics.gpu_energy_kj, result.metrics.gpu_energy_kj);
+        assert_eq!(returned.metrics.steps, result.metrics.steps);
+    }
+
+    #[test]
+    fn heartbeat_count_is_pure_and_capped() {
+        assert_eq!(heartbeat_count(10_000, 1_000), 10);
+        assert_eq!(heartbeat_count(999, 1_000), 0);
+        assert_eq!(heartbeat_count(1_000_000, 1_000), 50);
+        assert_eq!(heartbeat_count(0, 0), 1); // degenerate inputs clamp to 1/1
     }
 }

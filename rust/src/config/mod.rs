@@ -3,5 +3,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{ExperimentConfig, PolicyConfig};
+pub use schema::{ClusterFileConfig, ExperimentConfig, PolicyConfig};
 pub use toml::{parse, Value};

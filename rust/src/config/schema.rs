@@ -160,40 +160,53 @@ impl ExperimentConfig {
             }
             cfg.switch_cost.energy_j = v;
         }
-        if let Some(name) = root.get_str("policy.name") {
-            cfg.policy = Self::parse_policy(name, root)?;
+        if root.get_str("policy.name").is_some() {
+            cfg.policy = PolicyConfig::from_value(root.get("policy").unwrap())?;
         }
         Ok(cfg)
     }
 
-    fn parse_policy(name: &str, root: &Value) -> Result<PolicyConfig, ConfigError> {
-        let ucb_cfg = |root: &Value| -> Result<EnergyUcbConfig, ConfigError> {
+    /// Instantiate the configured policy.
+    pub fn build_policy(&self, k: usize, seed: u64) -> Box<dyn crate::bandit::Policy> {
+        self.policy.build(k, seed)
+    }
+}
+
+impl PolicyConfig {
+    /// Parse from a policy table (`name` plus hyperparameter keys) — the
+    /// payload of `[policy]`, a `[cluster.policy]` default, or a per-app
+    /// `[cluster.scenario.policy]` override.
+    pub fn from_value(tbl: &Value) -> Result<PolicyConfig, ConfigError> {
+        let Some(name) = tbl.get_str("name") else {
+            return invalid("policy table missing `name`");
+        };
+        let ucb_cfg = |tbl: &Value| -> Result<EnergyUcbConfig, ConfigError> {
             let mut c = EnergyUcbConfig::default();
-            if let Some(v) = root.get_float("policy.alpha") {
+            if let Some(v) = tbl.get_float("alpha") {
                 if v < 0.0 {
                     return invalid("alpha must be >= 0");
                 }
                 c.alpha = v;
             }
-            if let Some(v) = root.get_float("policy.lambda") {
+            if let Some(v) = tbl.get_float("lambda") {
                 if v < 0.0 {
                     return invalid("lambda must be >= 0");
                 }
                 c.lambda = v;
             }
-            if let Some(v) = root.get_float("policy.mu_init") {
+            if let Some(v) = tbl.get_float("mu_init") {
                 c.mu_init = v;
             }
-            if let Some(v) = root.get_float("policy.prior_n") {
+            if let Some(v) = tbl.get_float("prior_n") {
                 c.prior_n = v;
             }
-            if let Some(v) = root.get_float("policy.discount") {
+            if let Some(v) = tbl.get_float("discount") {
                 if v <= 0.0 || v > 1.0 {
                     return invalid("discount must be in (0, 1]");
                 }
                 c.discount = v;
             }
-            if let Some(v) = root.get_str("policy.init") {
+            if let Some(v) = tbl.get_str("init") {
                 c.init = match v {
                     "optimistic" => InitStrategy::Optimistic,
                     "warmup" => InitStrategy::WarmupRoundRobin,
@@ -203,23 +216,23 @@ impl ExperimentConfig {
             Ok(c)
         };
         Ok(match name {
-            "energyucb" => PolicyConfig::EnergyUcb(ucb_cfg(root)?),
+            "energyucb" => PolicyConfig::EnergyUcb(ucb_cfg(tbl)?),
             "constrained" => {
-                let delta = root.get_float("policy.delta").unwrap_or(0.05);
+                let delta = tbl.get_float("delta").unwrap_or(0.05);
                 if !(0.0..1.0).contains(&delta) {
                     return invalid("delta must be in [0, 1)");
                 }
-                PolicyConfig::ConstrainedEnergyUcb { ucb: ucb_cfg(root)?, delta }
+                PolicyConfig::ConstrainedEnergyUcb { ucb: ucb_cfg(tbl)?, delta }
             }
-            "ucb1" => PolicyConfig::Ucb1 { alpha: root.get_float("policy.alpha").unwrap_or(0.05) },
+            "ucb1" => PolicyConfig::Ucb1 { alpha: tbl.get_float("alpha").unwrap_or(0.05) },
             "egreedy" => PolicyConfig::EpsilonGreedy {
-                eps0: root.get_float("policy.eps0").unwrap_or(0.1),
-                decay_c: root.get_float("policy.decay_c").unwrap_or(20.0),
+                eps0: tbl.get_float("eps0").unwrap_or(0.1),
+                decay_c: tbl.get_float("decay_c").unwrap_or(20.0),
             },
             "energyts" => PolicyConfig::EnergyTs,
             "rrfreq" => PolicyConfig::RoundRobin,
             "static" => {
-                let arm = root.get_int("policy.arm").unwrap_or(8);
+                let arm = tbl.get_int("arm").unwrap_or(8);
                 if !(0..9).contains(&arm) {
                     return invalid("static arm must be in 0..9");
                 }
@@ -227,17 +240,17 @@ impl ExperimentConfig {
             }
             "rlpower" => PolicyConfig::RlPower,
             "drlcap" => PolicyConfig::DrlCap {
-                mode: root.get_str("policy.mode").unwrap_or("pretrain").to_string(),
+                mode: tbl.get_str("mode").unwrap_or("pretrain").to_string(),
             },
             other => return invalid(format!("unknown policy: {other}")),
         })
     }
 
-    /// Instantiate the configured policy.
-    pub fn build_policy(&self, k: usize, seed: u64) -> Box<dyn crate::bandit::Policy> {
+    /// Instantiate this policy.
+    pub fn build(&self, k: usize, seed: u64) -> Box<dyn crate::bandit::Policy> {
         use crate::bandit::*;
         use crate::rl::{DrlCap, DrlCapMode, RlPower};
-        match &self.policy {
+        match self {
             PolicyConfig::EnergyUcb(c) => Box::new(EnergyUcb::new(k, *c)),
             PolicyConfig::ConstrainedEnergyUcb { ucb, delta } => {
                 Box::new(ConstrainedEnergyUcb::new(k, *ucb, *delta))
@@ -259,6 +272,189 @@ impl ExperimentConfig {
                 Box::new(DrlCap::new(k, m, seed))
             }
         }
+    }
+}
+
+/// `energyucb cluster` file configuration: the `[cluster]` table plus the
+/// `[[cluster.scenario]]` app-mix entries.
+///
+/// ```toml
+/// [cluster]
+/// nodes = 64
+/// seed = 2026
+/// heartbeat_steps = 1000
+/// preset = "mixed"            # optional base: uniform|mixed|staggered|hetero
+/// pick = "weighted"           # or "round_robin"
+///
+/// [cluster.policy]            # fleet-wide default policy
+/// name = "energyucb"
+///
+/// [cluster.arrivals]          # staggered arrivals (step budgets)
+/// phases = 4
+/// min_frac = 0.25
+/// base_steps = 6000
+///
+/// [cluster.hetero]            # per-node switch-cost choices (paired)
+/// latency_s = [0.00015, 0.0006]
+/// energy_j = [0.3, 1.8]
+///
+/// [[cluster.scenario]]        # app mix (replaces the preset's slots)
+/// app = "tealeaf"
+/// weight = 3.0
+///
+/// [[cluster.scenario]]
+/// app = "lbm"
+/// [cluster.scenario.policy]   # per-app policy override
+/// name = "static"
+/// arm = 7
+/// ```
+#[derive(Clone, Debug)]
+pub struct ClusterFileConfig {
+    pub nodes: usize,
+    /// Worker threads; `None` = CLI/default decides.
+    pub jobs: Option<usize>,
+    pub heartbeat_steps: u64,
+    /// Fleet-wide default policy (per-app overrides ride on the slots).
+    pub policy: PolicyConfig,
+    pub schedule: crate::cluster::ScenarioSchedule,
+}
+
+impl Default for ClusterFileConfig {
+    fn default() -> Self {
+        ClusterFileConfig {
+            nodes: 16,
+            jobs: None,
+            heartbeat_steps: 1_000,
+            policy: PolicyConfig::EnergyUcb(EnergyUcbConfig::default()),
+            schedule: crate::cluster::ScenarioSchedule::preset("uniform", 2026)
+                .expect("uniform preset exists"),
+        }
+    }
+}
+
+impl ClusterFileConfig {
+    pub fn from_toml(text: &str) -> Result<ClusterFileConfig, ConfigError> {
+        let root = toml::parse(text)?;
+        Self::from_value(&root)
+    }
+
+    pub fn from_value(root: &Value) -> Result<ClusterFileConfig, ConfigError> {
+        use crate::cluster::{AppSlot, Arrivals, Pick, ScenarioSchedule};
+        let mut cfg = ClusterFileConfig::default();
+        let Some(c) = root.get("cluster") else {
+            return Ok(cfg);
+        };
+        if c.as_table().is_none() {
+            return invalid("[cluster] must be a table");
+        }
+        let seed = match c.get_int("seed") {
+            Some(v) if v < 0 => return invalid("cluster.seed must be >= 0"),
+            Some(v) => v as u64,
+            None => cfg.schedule.seed,
+        };
+        if let Some(name) = c.get_str("preset") {
+            cfg.schedule = ScenarioSchedule::preset(name, seed)
+                .ok_or_else(|| ConfigError::Invalid(format!("unknown preset: {name}")))?;
+        }
+        cfg.schedule.seed = seed;
+        if let Some(v) = c.get_int("nodes") {
+            if v < 1 {
+                return invalid("cluster.nodes must be >= 1");
+            }
+            cfg.nodes = v as usize;
+        }
+        if let Some(v) = c.get_int("jobs") {
+            if v < 1 {
+                return invalid("cluster.jobs must be >= 1");
+            }
+            cfg.jobs = Some(v as usize);
+        }
+        if let Some(v) = c.get_int("heartbeat_steps") {
+            if v < 1 {
+                return invalid("cluster.heartbeat_steps must be >= 1");
+            }
+            cfg.heartbeat_steps = v as u64;
+        }
+        if c.get_str("policy.name").is_some() {
+            cfg.policy = PolicyConfig::from_value(c.get("policy").unwrap())?;
+        }
+        if let Some(v) = c.get_str("pick") {
+            cfg.schedule.pick = match v {
+                "round_robin" => Pick::RoundRobin,
+                "weighted" => Pick::Weighted,
+                other => return invalid(format!("unknown pick: {other}")),
+            };
+        }
+        if let Some(arr) = c.get("arrivals") {
+            let phases = arr.get_int("phases").unwrap_or(4);
+            let min_frac = arr.get_float("min_frac").unwrap_or(0.25);
+            let base_steps = arr.get_int("base_steps").unwrap_or(6_000);
+            if phases < 1 || base_steps < 1 {
+                return invalid("cluster.arrivals: phases and base_steps must be >= 1");
+            }
+            if !(min_frac > 0.0 && min_frac <= 1.0) {
+                return invalid("cluster.arrivals.min_frac must be in (0, 1]");
+            }
+            cfg.schedule.arrivals = Arrivals::Staggered {
+                phases: phases as usize,
+                min_frac,
+                base_steps: base_steps as u64,
+            };
+        }
+        if let Some(h) = c.get("hetero") {
+            let floats = |key: &str| -> Result<Vec<f64>, ConfigError> {
+                h.get(key)
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| {
+                        ConfigError::Invalid(format!("cluster.hetero.{key} must be an array"))
+                    })?
+                    .iter()
+                    .map(|v| {
+                        v.as_float().ok_or_else(|| {
+                            ConfigError::Invalid(format!("cluster.hetero.{key}: numbers only"))
+                        })
+                    })
+                    .collect()
+            };
+            let latency = floats("latency_s")?;
+            let energy = floats("energy_j")?;
+            if latency.len() != energy.len() || latency.is_empty() {
+                return invalid("cluster.hetero: latency_s and energy_j must pair up");
+            }
+            cfg.schedule.switch_costs = latency
+                .into_iter()
+                .zip(energy)
+                .map(|(latency_s, energy_j)| {
+                    if latency_s < 0.0 || energy_j < 0.0 {
+                        return invalid("cluster.hetero: costs must be >= 0");
+                    }
+                    Ok(SwitchCost { latency_s, energy_j })
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(scen) = c.get("scenario") {
+            let Some(entries) = scen.as_array() else {
+                return invalid("cluster.scenario must be an array of tables ([[cluster.scenario]])");
+            };
+            let mut slots = Vec::new();
+            for entry in entries {
+                let Some(app) = entry.get_str("app") else {
+                    return invalid("[[cluster.scenario]] entry missing `app`");
+                };
+                let mut slot = AppSlot::new(app);
+                if let Some(w) = entry.get_float("weight") {
+                    slot.weight = w;
+                }
+                if entry.get_str("policy.name").is_some() {
+                    slot.policy = Some(PolicyConfig::from_value(entry.get("policy").unwrap())?);
+                }
+                slots.push(slot);
+            }
+            cfg.schedule.slots = slots;
+            cfg.schedule.name = "custom".into();
+        }
+        cfg.schedule.validate().map_err(ConfigError::Invalid)?;
+        Ok(cfg)
     }
 }
 
@@ -348,6 +544,97 @@ alpha = -1.0
     }
 
     #[test]
+    fn cluster_config_defaults_when_absent() {
+        let c = ClusterFileConfig::from_toml("").unwrap();
+        assert_eq!(c.nodes, 16);
+        assert_eq!(c.jobs, None);
+        assert_eq!(c.schedule.name, "uniform");
+    }
+
+    #[test]
+    fn cluster_config_full_parse() {
+        use crate::cluster::{Arrivals, Pick};
+        let text = r#"
+[cluster]
+nodes = 24
+seed = 99
+jobs = 4
+heartbeat_steps = 500
+pick = "weighted"
+
+[cluster.policy]
+name = "constrained"
+delta = 0.1
+
+[cluster.arrivals]
+phases = 3
+min_frac = 0.5
+base_steps = 2000
+
+[cluster.hetero]
+latency_s = [0.00015, 0.0006]
+energy_j = [0.3, 1.8]
+
+[[cluster.scenario]]
+app = "tealeaf"
+weight = 2.0
+
+[[cluster.scenario]]
+app = "lbm"
+
+[cluster.scenario.policy]
+name = "static"
+arm = 7
+"#;
+        let c = ClusterFileConfig::from_toml(text).unwrap();
+        assert_eq!(c.nodes, 24);
+        assert_eq!(c.jobs, Some(4));
+        assert_eq!(c.heartbeat_steps, 500);
+        assert_eq!(c.schedule.seed, 99);
+        assert_eq!(c.schedule.pick, Pick::Weighted);
+        assert!(matches!(c.policy, PolicyConfig::ConstrainedEnergyUcb { .. }));
+        assert_eq!(
+            c.schedule.arrivals,
+            Arrivals::Staggered { phases: 3, min_frac: 0.5, base_steps: 2000 }
+        );
+        assert_eq!(c.schedule.switch_costs.len(), 2);
+        assert_eq!(c.schedule.switch_costs[1], SwitchCost { latency_s: 0.0006, energy_j: 1.8 });
+        assert_eq!(c.schedule.slots.len(), 2);
+        assert_eq!(c.schedule.slots[0].app, "tealeaf");
+        assert!((c.schedule.slots[0].weight - 2.0).abs() < 1e-12);
+        assert_eq!(c.schedule.slots[1].policy, Some(PolicyConfig::Static { arm: 7 }));
+        // Assignments draw from the parsed scenario.
+        let a = c.schedule.assignments(c.nodes).unwrap();
+        assert_eq!(a.len(), 24);
+        assert!(a.iter().all(|x| x.max_steps.is_some() && x.switch_cost.is_some()));
+    }
+
+    #[test]
+    fn cluster_config_preset_base() {
+        let c = ClusterFileConfig::from_toml("[cluster]\npreset = \"mixed\"\nseed = 5").unwrap();
+        assert_eq!(c.schedule.name, "mixed");
+        assert_eq!(c.schedule.seed, 5);
+        assert!(ClusterFileConfig::from_toml("[cluster]\npreset = \"nope\"").is_err());
+    }
+
+    #[test]
+    fn cluster_config_rejects_bad_input() {
+        assert!(ClusterFileConfig::from_toml("[cluster]\nnodes = 0").is_err());
+        assert!(ClusterFileConfig::from_toml("[cluster]\nseed = -1").is_err());
+        assert!(ClusterFileConfig::from_toml("[[cluster.scenario]]\nweight = 1.0").is_err());
+        assert!(
+            ClusterFileConfig::from_toml("[[cluster.scenario]]\napp = \"not-an-app\"").is_err()
+        );
+        // Unpaired hetero arrays.
+        assert!(ClusterFileConfig::from_toml(
+            "[cluster.hetero]\nlatency_s = [0.1]\nenergy_j = [0.1, 0.2]"
+        )
+        .is_err());
+        // Staggered fractions out of range.
+        assert!(ClusterFileConfig::from_toml("[cluster.arrivals]\nmin_frac = 1.5").is_err());
+    }
+
+    #[test]
     fn warmup_init_parses() {
         let text = "[policy]\nname = \"energyucb\"\ninit = \"warmup\"";
         let c = ExperimentConfig::from_toml(text).unwrap();
@@ -377,8 +664,26 @@ mod shipped_config_tests {
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
             let policy = cfg.build_policy(9, 1);
             assert_eq!(policy.k(), 9, "{}", path.display());
+            // Cluster configs must also satisfy the cluster schema (a
+            // no-op [cluster]-less file yields the defaults).
+            ClusterFileConfig::from_toml(&text)
+                .unwrap_or_else(|e| panic!("{} (cluster): {e}", path.display()));
             seen += 1;
         }
         assert!(seen >= 2, "expected shipped configs, found {seen}");
+    }
+
+    /// The shipped mixed-fleet scenario exercises every scenario feature.
+    #[test]
+    fn shipped_cluster_mixed_generates_assignments() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/configs/cluster_mixed.toml");
+        let text = std::fs::read_to_string(path).unwrap();
+        let cfg = ClusterFileConfig::from_toml(&text).unwrap();
+        assert_eq!(cfg.nodes, 64);
+        assert_eq!(cfg.schedule.slots.len(), 5);
+        let a = cfg.schedule.assignments(cfg.nodes).unwrap();
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|x| x.max_steps.is_some() && x.switch_cost.is_some()));
+        assert!(a.iter().any(|x| x.policy.is_some()), "lbm static override missing");
     }
 }

@@ -1,11 +1,13 @@
 //! Minimal TOML-subset parser for run/experiment configuration files.
 //!
-//! Supported: `[table]` and `[dotted.table]` headers, `key = value` with
+//! Supported: `[table]` and `[dotted.table]` headers, `[[array.of.tables]]`
+//! headers (each appends a table; later `[parent.child]` headers and dotted
+//! keys descend into the *last* element, per TOML), `key = value` with
 //! string / integer / float / boolean / homogeneous-array values, dotted
 //! keys, `#` comments, and basic-string escapes. This covers everything the
 //! launcher's config files use; exotic TOML (multi-line strings, dates,
-//! inline tables, arrays-of-tables) is intentionally rejected with a clear
-//! error rather than mis-parsed.
+//! inline tables) is intentionally rejected with a clear error rather than
+//! mis-parsed.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -116,8 +118,19 @@ pub fn parse(input: &str) -> Result<Value, ParseError> {
             continue;
         }
         if let Some(rest) = text.strip_prefix('[') {
-            if rest.starts_with('[') {
-                return err(line, "arrays of tables ([[...]]) are not supported");
+            if let Some(inner) = rest.strip_prefix('[') {
+                // [[array.of.tables]] — append a fresh table to the array
+                // at `path` and open it for subsequent keys.
+                let Some(inner) = inner.strip_suffix("]]") else {
+                    return err(line, "unterminated array-of-tables header");
+                };
+                let path = parse_key_path(inner, line)?;
+                if path.is_empty() {
+                    return err(line, "empty array-of-tables header");
+                }
+                push_array_table(&mut root, &path, line)?;
+                current = path;
+                continue;
             }
             let Some(inner) = rest.strip_suffix(']') else {
                 return err(line, "unterminated table header");
@@ -125,6 +138,15 @@ pub fn parse(input: &str) -> Result<Value, ParseError> {
             let path = parse_key_path(inner, line)?;
             if path.is_empty() {
                 return err(line, "empty table header");
+            }
+            // A plain [header] must not name an existing array of tables:
+            // accepting it would silently reopen the last [[...]] element
+            // (reject-don't-misparse, per the module contract).
+            if terminal_is_array(&root, &path) {
+                return err(
+                    line,
+                    format!("[{}] names an array of tables (use [[...]] to append)", inner.trim()),
+                );
             }
             ensure_table(&mut root, &path, line)?;
             current = path;
@@ -200,10 +222,55 @@ fn ensure_table<'a>(
         let entry = cur.entry(part.clone()).or_insert_with(|| Value::Table(BTreeMap::new()));
         cur = match entry {
             Value::Table(t) => t,
+            // Descending through an array-of-tables targets its most
+            // recently appended element (TOML's [[...]] semantics).
+            Value::Array(a) => match a.last_mut() {
+                Some(Value::Table(t)) => t,
+                _ => return err(line, format!("key {part:?} is not a table")),
+            },
             _ => return err(line, format!("key {part:?} is not a table")),
         };
     }
     Ok(cur)
+}
+
+/// Whether the entry at `path` (descending through array-of-tables last
+/// elements along the prefix) is itself an array.
+fn terminal_is_array(root: &BTreeMap<String, Value>, path: &[String]) -> bool {
+    let (last, prefix) = path.split_last().expect("non-empty path");
+    let mut cur = root;
+    for part in prefix {
+        cur = match cur.get(part) {
+            Some(Value::Table(t)) => t,
+            Some(Value::Array(a)) => match a.last() {
+                Some(Value::Table(t)) => t,
+                _ => return false,
+            },
+            _ => return false,
+        };
+    }
+    matches!(cur.get(last), Some(Value::Array(_)))
+}
+
+/// Append an empty table to the array at `path` (creating the array if
+/// absent), for a `[[path]]` header.
+fn push_array_table(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    line: usize,
+) -> Result<(), ParseError> {
+    let (last, prefix) = path.split_last().expect("non-empty path");
+    let parent = ensure_table(root, prefix, line)?;
+    match parent.entry(last.clone()).or_insert_with(|| Value::Array(Vec::new())) {
+        Value::Array(a) => {
+            if a.iter().any(|v| !matches!(v, Value::Table(_))) {
+                return err(line, format!("key {last:?} is not an array of tables"));
+            }
+            a.push(Value::Table(BTreeMap::new()));
+            Ok(())
+        }
+        _ => err(line, format!("key {last:?} is not an array of tables")),
+    }
 }
 
 fn insert(
@@ -395,8 +462,55 @@ mu = 0.0
     }
 
     #[test]
-    fn array_of_tables_rejected() {
-        assert!(parse("[[servers]]").is_err());
+    fn array_of_tables_appends_elements() {
+        let doc = r#"
+[cluster]
+nodes = 8
+
+[[cluster.scenario]]
+app = "tealeaf"
+weight = 2.0
+
+[cluster.scenario.policy]
+name = "static"
+arm = 4
+
+[[cluster.scenario]]
+app = "clvleaf"
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get_int("cluster.nodes"), Some(8));
+        let scenarios = v.get("cluster.scenario").unwrap().as_array().unwrap();
+        assert_eq!(scenarios.len(), 2);
+        assert_eq!(scenarios[0].get_str("app"), Some("tealeaf"));
+        assert_eq!(scenarios[0].get_float("weight"), Some(2.0));
+        // A [parent.child] header after [[parent]] binds to the last element.
+        assert_eq!(scenarios[0].get_str("policy.name"), Some("static"));
+        assert_eq!(scenarios[0].get_int("policy.arm"), Some(4));
+        assert_eq!(scenarios[1].get_str("app"), Some("clvleaf"));
+        assert!(scenarios[1].get("policy").is_none());
+    }
+
+    #[test]
+    fn array_of_tables_rejects_conflicts() {
+        // Scalar key cannot become an array of tables.
+        assert!(parse("servers = 1\n[[servers]]").is_err());
+        // Inline (non-table) array cannot grow table elements.
+        assert!(parse("servers = [1, 2]\n[[servers]]").is_err());
+        assert!(parse("[[servers]").is_err());
+        assert!(parse("[[]]").is_err());
+    }
+
+    #[test]
+    fn plain_header_cannot_reopen_array_of_tables() {
+        // [servers] after [[servers]] is a typo that would silently edit
+        // the last element; reject it instead of mis-parsing.
+        let doc = "[[servers]]\nname = \"a\"\n[servers]\nname = \"b\"";
+        let e = parse(doc).unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.message.contains("[["), "{}", e.message);
+        // Child headers of the last element remain fine.
+        assert!(parse("[[servers]]\nname = \"a\"\n[servers.opts]\nx = 1").is_ok());
     }
 
     #[test]

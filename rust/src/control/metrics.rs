@@ -23,6 +23,9 @@ pub struct RunMetrics {
     pub cumulative_regret: f64,
     /// Decision steps taken.
     pub steps: u64,
+    /// Work fraction completed (1.0 = ran to job completion; < 1.0 when
+    /// the run was cut off by a step budget).
+    pub completed: f64,
 }
 
 impl RunMetrics {
@@ -102,6 +105,7 @@ mod tests {
             switch_time_s: 0.0015,
             cumulative_regret: 100.0,
             steps: 4500,
+            completed: 1.0,
         }
     }
 

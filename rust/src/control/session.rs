@@ -98,6 +98,7 @@ pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) ->
     let mut checkpoints = vec![0.0f64; cfg.checkpoints];
     let mut next_cp = 0usize;
     let mut cum_true_energy_j = 0.0;
+    let mut final_completed = 0.0;
 
     while !service.done() && t < cfg.max_steps {
         t += 1;
@@ -120,6 +121,7 @@ pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) ->
 
         // Progress checkpoints.
         let completed = 1.0 - obs.remaining;
+        final_completed = completed;
         while next_cp < cfg.checkpoints
             && completed >= (next_cp + 1) as f64 / cfg.checkpoints as f64 - 1e-12
         {
@@ -154,6 +156,7 @@ pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) ->
         switch_time_s: totals.switch_time_s,
         cumulative_regret,
         steps: t,
+        completed: final_completed.clamp(0.0, 1.0),
     };
     RunResult { metrics, trace, energy_checkpoints_j: checkpoints }
 }
@@ -243,6 +246,23 @@ mod tests {
         // 20 % checkpoint is ~20 % of total (static run, constant power).
         let e20 = res.energy_at_progress_j(0.2);
         assert!((e20 / cps[99] - 0.2).abs() < 0.02, "{}", e20 / cps[99]);
+    }
+
+    #[test]
+    fn capped_run_reports_partial_completion() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = StaticPolicy::new(9, 8);
+        let cfg = SessionCfg { max_steps: 500, ..SessionCfg::default() };
+        let res = run_session(&app, &mut policy, &cfg);
+        assert_eq!(res.metrics.steps, 500);
+        assert!(
+            res.metrics.completed > 0.0 && res.metrics.completed < 1.0,
+            "{}",
+            res.metrics.completed
+        );
+        // Uncapped runs report full completion.
+        let full = run_session(&app, &mut StaticPolicy::new(9, 8), &SessionCfg::default());
+        assert!((full.metrics.completed - 1.0).abs() < 1e-9, "{}", full.metrics.completed);
     }
 
     #[test]

@@ -353,6 +353,7 @@ mod tests {
                 switch_time_s: 0.0,
                 cumulative_regret: 0.0,
                 steps: 100,
+                completed: 1.0,
             },
             trace: None,
             energy_checkpoints_j: (1..=100).map(|i| i as f64 * 10.0).collect(),

@@ -25,24 +25,40 @@ pub trait Gen {
 
 /// Run `cases` random cases of `prop` over `gen`; on failure, greedily
 /// shrink and panic with the minimal counterexample.
+///
+/// The case count can be overridden globally through the `PROPTEST_CASES`
+/// environment variable (the CI deep-run leg sets `PROPTEST_CASES=500`).
 pub fn forall<G: Gen>(cases: usize, gen: G, prop: impl Fn(&G::Value) -> bool) {
     forall_seeded(0xEC0_57A7E, cases, gen, prop)
 }
 
-/// `forall` with an explicit base seed (deterministic).
+/// Case count after applying the `PROPTEST_CASES` environment override.
+pub fn case_count(default_cases: usize) -> usize {
+    case_count_from(std::env::var("PROPTEST_CASES").ok().as_deref(), default_cases)
+}
+
+fn case_count_from(var: Option<&str>, default_cases: usize) -> usize {
+    var.and_then(|s| s.parse::<usize>().ok()).filter(|n| *n > 0).unwrap_or(default_cases)
+}
+
+/// `forall` with an explicit base seed (deterministic). On failure the
+/// panic message carries the replay seed: re-run the same property locally
+/// with `forall_seeded(<seed>, ...)` to reproduce a CI counterexample.
 pub fn forall_seeded<G: Gen>(
     seed: u64,
     cases: usize,
     gen: G,
     prop: impl Fn(&G::Value) -> bool,
 ) {
+    let cases = case_count(cases);
     let mut rng = Rng::new(seed);
     for case in 0..cases {
         let value = gen.generate(&mut rng);
         if !prop(&value) {
             let minimal = shrink_loop(&gen, value, &prop);
             panic!(
-                "property falsified (case {case}/{cases}, seed {seed:#x})\n\
+                "property falsified (case {case}/{cases})\n\
+                 replay seed: {seed:#x} — rerun with forall_seeded({seed:#x}, ...)\n\
                  minimal counterexample: {minimal:?}"
             );
         }
@@ -151,6 +167,90 @@ pub mod gens {
         }
     }
 
+    /// Vec of usize with length in a range; shrinks by halving length,
+    /// then per-element toward `lo` (first jump-to-lo, then halving the
+    /// distance, so single-element minima are found).
+    pub struct VecUSize {
+        pub lo: usize,
+        pub hi: usize,
+        pub min_len: usize,
+        pub max_len: usize,
+    }
+
+    impl Gen for VecUSize {
+        type Value = Vec<usize>;
+        fn generate(&self, rng: &mut Rng) -> Vec<usize> {
+            let len = self.min_len + rng.index(self.max_len - self.min_len + 1);
+            (0..len).map(|_| self.lo + rng.index(self.hi - self.lo + 1)).collect()
+        }
+        fn shrink(&self, v: &Vec<usize>) -> Vec<Vec<usize>> {
+            let mut out = Vec::new();
+            if v.len() > self.min_len {
+                out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+                // Drop one element at a time (catches order-dependent bugs
+                // that length-halving jumps over).
+                for i in 0..v.len() {
+                    let mut w = v.clone();
+                    w.remove(i);
+                    out.push(w);
+                }
+            }
+            // Per-element shrinking toward lo.
+            for i in 0..v.len() {
+                if v[i] > self.lo {
+                    let mut w = v.clone();
+                    w[i] = self.lo;
+                    out.push(w);
+                    let mut w = v.clone();
+                    w[i] = self.lo + (v[i] - self.lo) / 2;
+                    out.push(w);
+                }
+            }
+            out
+        }
+    }
+
+    /// Optional value: `None` about a quarter of the time; shrinks toward
+    /// `None` first, then through the inner generator's shrinks.
+    pub struct OptionOf<G>(pub G);
+
+    impl<G: Gen> Gen for OptionOf<G> {
+        type Value = Option<G::Value>;
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            if rng.index(4) == 0 {
+                None
+            } else {
+                Some(self.0.generate(rng))
+            }
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            match v {
+                None => Vec::new(),
+                Some(inner) => std::iter::once(None)
+                    .chain(self.0.shrink(inner).into_iter().map(Some))
+                    .collect(),
+            }
+        }
+    }
+
+    /// Uniform choice from a fixed list of values; shrinks toward earlier
+    /// list positions (order the list simplest-first).
+    pub struct OneOf<T: Clone + std::fmt::Debug + PartialEq>(pub Vec<T>);
+
+    impl<T: Clone + std::fmt::Debug + PartialEq> Gen for OneOf<T> {
+        type Value = T;
+        fn generate(&self, rng: &mut Rng) -> T {
+            assert!(!self.0.is_empty(), "OneOf: empty choice list");
+            self.0[rng.index(self.0.len())].clone()
+        }
+        fn shrink(&self, v: &T) -> Vec<T> {
+            match self.0.iter().position(|x| x == v) {
+                Some(pos) => self.0[..pos].to_vec(),
+                None => Vec::new(),
+            }
+        }
+    }
+
     /// Pair of independent generators.
     pub struct Pair<A, B>(pub A, pub B);
 
@@ -210,6 +310,92 @@ mod tests {
             Pair(USize { lo: 1, hi: 9 }, F64 { lo: -1.0, hi: 0.0 }),
             |(k, x)| *k >= 1 && *x <= 0.0,
         );
+    }
+
+    #[test]
+    fn vec_usize_respects_bounds() {
+        forall(200, VecUSize { lo: 2, hi: 9, min_len: 1, max_len: 6 }, |xs| {
+            (1..=6).contains(&xs.len()) && xs.iter().all(|x| (2..=9).contains(x))
+        });
+    }
+
+    #[test]
+    fn vec_usize_shrinks_per_element() {
+        // Falsify "no element equals 7" by greedy shrinking from a fixed
+        // failing input; the minimum is exactly [7] — every other element
+        // removed, and the offending element itself not shrunk past the
+        // boundary (per-element shrinking must preserve failure).
+        let g = VecUSize { lo: 0, hi: 9, min_len: 1, max_len: 8 };
+        let prop = |xs: &Vec<usize>| !xs.contains(&7);
+        let mut failing = vec![3, 7, 2, 9];
+        'outer: loop {
+            for cand in g.shrink(&failing) {
+                if !prop(&cand) {
+                    failing = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        assert_eq!(failing, vec![7]);
+    }
+
+    #[test]
+    fn failure_message_prints_replay_seed() {
+        let result = std::panic::catch_unwind(|| {
+            // Fails on the very first case at any PROPTEST_CASES value.
+            forall_seeded(0xBAD_5EED, 50, VecUSize { lo: 0, hi: 9, min_len: 1, max_len: 8 }, |_| {
+                false
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed: 0xbad5eed"), "missing replay seed: {msg}");
+        // Always-false property shrinks to the simplest value: [lo].
+        assert!(msg.contains("[0]"), "weak shrink: {msg}");
+    }
+
+    #[test]
+    fn option_of_generates_both_variants_and_shrinks_to_none() {
+        let g = OptionOf(USize { lo: 1, hi: 5 });
+        let mut rng = Rng::new(11);
+        let mut nones = 0;
+        let mut somes = 0;
+        for _ in 0..200 {
+            match g.generate(&mut rng) {
+                None => nones += 1,
+                Some(v) => {
+                    assert!((1..=5).contains(&v));
+                    somes += 1;
+                }
+            }
+        }
+        assert!(nones > 10 && somes > 100, "nones={nones} somes={somes}");
+        assert_eq!(g.shrink(&Some(4))[0], None);
+        assert!(g.shrink(&Some(4)).contains(&Some(1)));
+        assert!(g.shrink(&None).is_empty());
+    }
+
+    #[test]
+    fn one_of_picks_from_list_and_shrinks_to_earlier() {
+        let g = OneOf(vec![1usize, 2, 7, 64]);
+        forall(100, OneOf(vec![1usize, 2, 7, 64]), |v| [1, 2, 7, 64].contains(v));
+        assert_eq!(g.shrink(&7), vec![1, 2]);
+        assert!(g.shrink(&1).is_empty());
+    }
+
+    #[test]
+    fn proptest_cases_override_parses() {
+        // The pure half of the env override (mutating the real process env
+        // here would race parallel tests; the CI deep leg exercises the
+        // env-var path end to end with PROPTEST_CASES=500).
+        assert_eq!(super::case_count_from(Some("500"), 100), 500);
+        assert_eq!(super::case_count_from(Some("3"), 100), 3);
+        assert_eq!(super::case_count_from(Some("0"), 100), 100);
+        assert_eq!(super::case_count_from(Some("junk"), 100), 100);
+        assert_eq!(super::case_count_from(None, 100), 100);
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! End-to-end properties of the cluster engine: scenario reports are
+//! byte-identical at any worker count, per-app stats equal a serial
+//! reference merge, the heartbeat stream is scheduling-independent, and
+//! the work-stealing leader reproduces the pre-refactor wave numbers.
+
+use std::collections::BTreeMap;
+
+use energyucb::cluster::{ClusterConfig, Leader, NodeAssignment, ScenarioSchedule};
+use energyucb::config::PolicyConfig;
+use energyucb::control::{run_session, SessionCfg};
+use energyucb::exec::available_jobs;
+use energyucb::testutil::forall_seeded;
+use energyucb::testutil::gens::{OneOf, Pair, USize};
+use energyucb::util::stats::Welford;
+use energyucb::workload::calibration;
+
+/// Short sessions keep the property cases cheap (the cap is itself part of
+/// the scenario surface: staggered budgets below the cap still apply).
+fn test_cluster_config(jobs: usize) -> ClusterConfig {
+    ClusterConfig {
+        jobs,
+        heartbeat_steps: 100,
+        session: SessionCfg { max_steps: 400, ..SessionCfg::default() },
+        ..ClusterConfig::default()
+    }
+}
+
+/// Serial reference: run every assignment's session directly (no pool, no
+/// channel) and merge per-app energies in node order.
+fn reference_per_app(
+    assignments: &[NodeAssignment],
+    cfg: &ClusterConfig,
+) -> BTreeMap<String, (u64, f64, f64)> {
+    let mut acc: BTreeMap<String, Welford> = BTreeMap::new();
+    let mut ordered = assignments.to_vec();
+    ordered.sort_by_key(|a| a.node);
+    for a in &ordered {
+        let app = calibration::app(&a.app).unwrap();
+        let scfg = SessionCfg {
+            seed: a.seed,
+            max_steps: a.max_steps.unwrap_or(cfg.session.max_steps),
+            switch_cost: a.switch_cost.unwrap_or(cfg.session.switch_cost),
+            ..cfg.session.clone()
+        };
+        let mut policy = a.policy.clone().unwrap_or_else(|| cfg.policy.clone()).build(9, a.seed);
+        let result = run_session(&app, policy.as_mut(), &scfg);
+        acc.entry(a.app.clone()).or_default().push(result.metrics.gpu_energy_kj);
+    }
+    acc.into_iter().map(|(k, w)| (k, (w.count(), w.mean(), w.sample_std()))).collect()
+}
+
+#[test]
+fn any_scenario_report_is_byte_identical_across_jobs() {
+    let scenarios = OneOf(vec!["uniform", "mixed", "staggered", "hetero"]);
+    let sizes = USize { lo: 3, hi: 6 };
+    forall_seeded(0xC1057E4, 5, Pair(scenarios, sizes), |(name, nodes)| {
+        let schedule = ScenarioSchedule::preset(name, 40 + *nodes as u64).unwrap();
+        let mut assignments = schedule.assignments(*nodes).unwrap();
+        // Scale staggered budgets down 10x (150–600 steps): keeps the
+        // mixed-duration structure while bounding deep PROPTEST_CASES runs.
+        for a in &mut assignments {
+            a.max_steps = a.max_steps.map(|m| (m / 10).max(1));
+        }
+
+        let serial = Leader::new(test_cluster_config(1)).run(&assignments).unwrap();
+        let serial_text = serial.render();
+        let serial_csv = serial.to_csv().render();
+
+        // Byte-identical text and CSV at every worker count.
+        for jobs in [2, available_jobs()] {
+            let report = Leader::new(test_cluster_config(jobs)).run(&assignments).unwrap();
+            if report.render() != serial_text || report.to_csv().render() != serial_csv {
+                return false;
+            }
+        }
+
+        // Per-app Welford stats equal the serial reference merge exactly.
+        let reference = reference_per_app(&assignments, &test_cluster_config(1));
+        serial.per_app == reference
+    });
+}
+
+#[test]
+fn heartbeat_stream_is_intact_under_work_stealing() {
+    // With the session cap at 400 steps and heartbeats every 100, every
+    // node emits exactly 4 beats regardless of which worker runs it.
+    let schedule = ScenarioSchedule::preset("uniform", 77).unwrap();
+    let assignments = schedule.assignments(6).unwrap();
+    let report = Leader::new(test_cluster_config(available_jobs())).run(&assignments).unwrap();
+    assert!(report.nodes.iter().all(|r| r.metrics.steps == 400));
+    assert_eq!(report.heartbeats, 6 * 4, "heartbeat stream lost events under stealing");
+
+    // Mixed-duration fleet: the total is the per-node sum, still exact.
+    let schedule = ScenarioSchedule::preset("staggered", 78).unwrap();
+    let assignments = schedule.assignments(5).unwrap();
+    let report = Leader::new(test_cluster_config(available_jobs())).run(&assignments).unwrap();
+    let expected: u64 =
+        report.nodes.iter().map(|r| (r.metrics.steps / 100).min(50)).sum();
+    assert_eq!(report.heartbeats, expected);
+}
+
+#[test]
+fn round_robin_matches_pre_refactor_wave_numbers() {
+    // Same seeds, same totals: the work-stealing leader, the legacy wave
+    // scheduler, and a direct serial loop (the pre-refactor semantics:
+    // one session per node, seed = seed0 + node, summed in node order)
+    // must agree to the bit.
+    let cfg = test_cluster_config(3);
+    let leader = Leader::new(cfg.clone());
+    let assignments = Leader::assign_round_robin(&["tealeaf", "clvleaf"], 6, 42);
+
+    let stealing = leader.run(&assignments).unwrap();
+    let waves = leader.run_waves(&assignments).unwrap();
+    assert_eq!(stealing.render(), waves.render());
+    assert_eq!(stealing.to_csv().render(), waves.to_csv().render());
+    assert_eq!(stealing.heartbeats, waves.heartbeats);
+
+    let mut serial_total = 0.0;
+    for a in &assignments {
+        let app = calibration::app(&a.app).unwrap();
+        let mut policy = cfg.policy.build(9, a.seed);
+        let scfg = SessionCfg { seed: a.seed, ..cfg.session.clone() };
+        serial_total += run_session(&app, policy.as_mut(), &scfg).metrics.gpu_energy_kj;
+    }
+    assert_eq!(stealing.total_energy_kj, serial_total);
+}
+
+#[test]
+fn per_app_policy_overrides_reach_the_nodes() {
+    let mut schedule = ScenarioSchedule::round_robin(&["lbm", "tealeaf"], 9);
+    schedule.slots[0].policy = Some(PolicyConfig::Static { arm: 7 });
+    let assignments = schedule.assignments(4).unwrap();
+    let report = Leader::new(test_cluster_config(2)).run(&assignments).unwrap();
+    assert_eq!(report.nodes[0].metrics.policy, "Static[arm 7]");
+    assert_eq!(report.nodes[2].metrics.policy, "Static[arm 7]");
+    assert_ne!(report.nodes[1].metrics.policy, "Static[arm 7]");
+}

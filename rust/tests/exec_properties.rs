@@ -1,0 +1,84 @@
+//! Property tests for the deterministic executor (`exec`): grid indexing
+//! roundtrips for arbitrary shapes, and `run_indexed` scheduling
+//! invariants on a side-effect-counting workload.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use energyucb::exec::{available_jobs, cell_rng, run_indexed, CellGrid};
+use energyucb::testutil::forall;
+use energyucb::testutil::gens::{OneOf, Pair, USize, VecUSize};
+
+#[test]
+fn grid_pack_unpack_roundtrips_for_arbitrary_shapes() {
+    // Shapes come in as [rows, cols, reps] vectors (per-element shrinking
+    // finds the minimal failing axis if the indexing math regresses).
+    forall(150, VecUSize { lo: 1, hi: 7, min_len: 3, max_len: 3 }, |shape| {
+        let g = CellGrid::new(shape[0], shape[1], shape[2]);
+        (0..g.len()).all(|cell| {
+            let (row, col, rep) = g.unpack(cell);
+            row < g.rows
+                && col < g.cols
+                && rep < g.reps
+                && g.pack(row, col, rep) == cell
+                && g.group(row, col) == cell / g.reps
+        })
+    });
+}
+
+#[test]
+fn grid_pack_is_a_bijection() {
+    forall(100, VecUSize { lo: 1, hi: 6, min_len: 3, max_len: 3 }, |shape| {
+        let g = CellGrid::new(shape[0], shape[1], shape[2]);
+        let mut seen = vec![false; g.len()];
+        for row in 0..g.rows {
+            for col in 0..g.cols {
+                for rep in 0..g.reps {
+                    let cell = g.pack(row, col, rep);
+                    if cell >= g.len() || seen[cell] {
+                        return false;
+                    }
+                    seen[cell] = true;
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    });
+}
+
+#[test]
+fn run_indexed_is_index_ordered_and_identical_across_jobs() {
+    // A cell function with observable side effects: counts invocations and
+    // derives its value from the order-independent cell RNG.
+    let calls = AtomicUsize::new(0);
+    let cell = |i: usize| {
+        calls.fetch_add(1, Ordering::Relaxed);
+        let mut rng = cell_rng(0xC1u64, i as u64);
+        (i, rng.next_u64())
+    };
+
+    let n = 53;
+    let reference: Vec<(usize, u64)> = run_indexed(1, n, cell);
+    assert_eq!(calls.swap(0, Ordering::Relaxed), n, "sequential path skipped cells");
+    assert!(reference.iter().enumerate().all(|(i, (j, _))| i == *j), "not index-ordered");
+
+    for jobs in [2, 7, available_jobs()] {
+        let out = run_indexed(jobs, n, cell);
+        // Exactly one evaluation per cell — work stealing must neither
+        // drop nor double-run cells.
+        assert_eq!(calls.swap(0, Ordering::Relaxed), n, "jobs={jobs}: wrong call count");
+        assert_eq!(out, reference, "jobs={jobs}: output differs from sequential");
+    }
+}
+
+#[test]
+fn run_indexed_property_all_job_counts_agree() {
+    // Property over (n, jobs): result equals the inline map at any size
+    // and worker count, including n = 0 and jobs > n.
+    let sizes = USize { lo: 0, hi: 40 };
+    let jobs = OneOf(vec![1usize, 2, 7, available_jobs()]);
+    forall(60, Pair(sizes, jobs), |(n, jobs)| {
+        let expect: Vec<u64> = (0..*n).map(|i| cell_rng(7, i as u64).next_u64()).collect();
+        let got = run_indexed(*jobs, *n, |i| cell_rng(7, i as u64).next_u64());
+        got == expect
+    });
+}
