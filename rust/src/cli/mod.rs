@@ -33,7 +33,7 @@ USAGE:
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
   energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
   energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config FILE]
-                    [--seed S] [--heartbeat H] [--csv PATH] [--waves]
+                    [--seed S] [--heartbeat H] [--csv PATH] [--shards K] [--waves]
   energyucb list
   energyucb help
 
@@ -44,8 +44,10 @@ cores); output is byte-identical at any J (see EXPERIMENTS.md).
 Cluster runs a simulated multi-node fleet on the work-stealing executor.
 Scenarios: uniform | mixed | staggered | hetero, or a [cluster] config
 file with [[cluster.scenario]] app-mix entries (see configs/
-cluster_mixed.toml). Reports are byte-identical at any --jobs; --waves
-uses the legacy fixed-wave scheduler (perf baseline).";
+cluster_mixed.toml). --shards K partitions the fleet across K worker
+subprocesses fed over a JSONL pipe (omit for the in-process pool).
+Reports are byte-identical at any --jobs and --shards; --waves uses the
+legacy fixed-wave scheduler (perf baseline).";
 
 /// Entry point used by main(); returns the process exit code.
 pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
@@ -60,6 +62,9 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
         "run" => cmd_run(rest),
         "fleet" => cmd_fleet(rest),
         "cluster" => cmd_cluster(rest),
+        // Hidden: the shard-worker half of `cluster --shards` (frames on
+        // stdin, events on stdout — see EXPERIMENTS.md §Cluster).
+        "cluster-worker" => cmd_cluster_worker(rest),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -260,7 +265,7 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
     use crate::config::ClusterFileConfig;
 
     let args = Args::parse(rest, &["waves"])?;
-    args.ensure_known(&["nodes", "jobs", "scenario", "config", "seed", "heartbeat", "csv"])?;
+    args.ensure_known(&["nodes", "jobs", "scenario", "config", "seed", "heartbeat", "csv", "shards"])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
             let text =
@@ -299,6 +304,15 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
         }
         cfg.heartbeat_steps = h;
     }
+    if let Some(s) = args.get_usize("shards")? {
+        if s == 0 {
+            bail!("cluster: --shards must be >= 1");
+        }
+        cfg.shards = Some(s);
+    }
+    if args.flag("waves") && cfg.shards.is_some() {
+        bail!("cluster: --waves and --shards are mutually exclusive");
+    }
 
     let jobs = cfg.jobs.unwrap_or_else(crate::exec::available_jobs);
     let leader = Leader::new(ClusterConfig {
@@ -309,15 +323,22 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
     });
     let assignments =
         cfg.schedule.assignments(cfg.nodes).map_err(|e| anyhow::anyhow!("cluster: {e}"))?;
-    eprintln!(
-        "cluster: {} nodes, scenario {}, {jobs} jobs ({})",
-        cfg.nodes,
-        cfg.schedule.name,
-        if args.flag("waves") { "fixed waves" } else { "work-stealing" }
-    );
+    let mode = if args.flag("waves") {
+        "fixed waves".to_string()
+    } else if let Some(s) = cfg.shards {
+        format!("{s} subprocess shards")
+    } else {
+        "work-stealing".to_string()
+    };
+    eprintln!("cluster: {} nodes, scenario {}, {jobs} jobs ({mode})", cfg.nodes, cfg.schedule.name);
     let t0 = std::time::Instant::now();
     let report = if args.flag("waves") {
         leader.run_waves(&assignments)?
+    } else if let Some(shards) = cfg.shards {
+        // Workers are this same binary re-entered as `cluster-worker`;
+        // assignments reach them only via the JSONL wire protocol.
+        let transport = crate::cluster::Subprocess::current_exe()?;
+        leader.run_sharded(&assignments, shards, &transport)?
     } else {
         leader.run(&assignments)?
     };
@@ -338,6 +359,83 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
         eprintln!("wrote {}", path.display());
     }
     Ok(0)
+}
+
+/// The shard-worker half of `cluster --shards` (hidden subcommand).
+///
+/// Protocol (framed JSONL, one `cluster::wire::Frame` per line):
+/// stdin carries `config`, then one `assign` per node, then `run`;
+/// stdout streams one `event` per `WorkerEvent` as the shard executes,
+/// then a terminal `end` (or `error`) frame. Assignments reach this
+/// process only through the wire — there is no shared state with the
+/// leader, which is what makes the subprocess path a faithful rehearsal
+/// for multi-host transports.
+fn cmd_cluster_worker(rest: &[String]) -> Result<i32> {
+    use crate::cluster::{transport, ClusterConfig, Frame, NodeAssignment};
+    use std::io::{BufRead, Write};
+
+    if !rest.is_empty() {
+        bail!("cluster-worker: takes no arguments (frames arrive on stdin)");
+    }
+
+    // Protocol failures are reported as an `error` frame on stdout (and
+    // exit code 1) so the leader can surface the reason verbatim. Writes
+    // go through `writeln!` with the error ignored — `println!` would
+    // panic if the leader is already gone and the pipe is closed.
+    let fail = |message: String| -> Result<i32> {
+        let mut out = std::io::stdout().lock();
+        let _ = writeln!(out, "{}", Frame::Error { message }.encode_line());
+        Ok(1)
+    };
+
+    let mut cfg: Option<ClusterConfig> = None;
+    let mut shard: Vec<NodeAssignment> = Vec::new();
+    let mut launched = false;
+    for line in std::io::stdin().lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Frame::decode_line(&line) {
+            Ok(Frame::Config { jobs, heartbeat_steps, policy, session }) => {
+                cfg = Some(ClusterConfig { jobs, policy, session, heartbeat_steps });
+            }
+            Ok(Frame::Assign(a)) => shard.push(a),
+            Ok(Frame::Run) => {
+                launched = true;
+                break;
+            }
+            Ok(other) => return fail(format!("unexpected frame: {other:?}")),
+            Err(e) => return fail(e.to_string()),
+        }
+    }
+    if !launched {
+        return fail("input ended before a run frame".to_string());
+    }
+    let Some(cfg) = cfg else {
+        return fail("no config frame before run".to_string());
+    };
+    if cfg.jobs == 0 {
+        return fail("config jobs must be >= 1".to_string());
+    }
+
+    let stdout = std::io::stdout();
+    let streamed = transport::run_shard_with(&cfg, &shard, |ev| {
+        let mut out = stdout.lock();
+        writeln!(out, "{}", Frame::Event(ev).encode_line())?;
+        // Per-line flush so no frame is stranded in the block buffer if
+        // this process dies mid-shard (cheap: <= 50 heartbeats/node).
+        out.flush()?;
+        Ok(())
+    });
+    match streamed {
+        Ok(()) => {
+            let mut out = stdout.lock();
+            writeln!(out, "{}", Frame::End { nodes: shard.len() }.encode_line())?;
+            Ok(0)
+        }
+        Err(e) => fail(format!("{e:#}")),
+    }
 }
 
 fn cmd_list() -> Result<i32> {
@@ -410,12 +508,23 @@ mod tests {
     fn cluster_rejects_bad_args() {
         assert!(dispatch(&["cluster", "--nodes", "0"]).is_err());
         assert!(dispatch(&["cluster", "--jobs", "0"]).is_err());
+        assert!(dispatch(&["cluster", "--shards", "0"]).is_err());
         assert!(dispatch(&["cluster", "--scenario", "bogus"]).is_err());
         assert!(dispatch(&["cluster", "--bogus", "1"]).is_err());
         // A preset replaces the schedule wholesale; combining conflicts.
         assert!(
             dispatch(&["cluster", "--scenario", "mixed", "--config", "configs/x.toml"]).is_err()
         );
+        // The wave baseline predates sharding; the combination is refused
+        // (both rejections above and here happen before any spawn).
+        assert!(dispatch(&["cluster", "--waves", "--shards", "2"]).is_err());
+    }
+
+    #[test]
+    fn cluster_worker_rejects_cli_arguments() {
+        // The worker takes frames on stdin, never argv (and erroring here
+        // means the test harness never reads from the real stdin).
+        assert!(dispatch(&["cluster-worker", "--jobs", "2"]).is_err());
     }
 
     #[test]

@@ -1,23 +1,25 @@
-//! Cluster leader: fan out node assignments to the deterministic
-//! work-stealing executor, drain the telemetry stream, and merge results
+//! Cluster leader: partition node assignments into shards, fan the shards
+//! out through a [`Transport`] (in-process pool or `cluster-worker`
+//! subprocesses over framed JSONL), and merge the event streams
 //! deterministically.
 //!
 //! Scheduling follows the executor contract (EXPERIMENTS.md §Executor):
-//! each node plan is a pure function of its assignment, `exec::run_indexed`
-//! decides only *when* a node runs, and the merge happens in stable node-id
-//! order on the leader thread — so the [`ClusterReport`] is byte-identical
-//! at any `--jobs` value. A legacy fixed-wave scheduler is kept as
-//! [`Leader::run_waves`]: it produces the identical report (same plans,
-//! same merge) and serves as the cross-check reference and the wall-clock
-//! baseline the work-stealing path must beat on mixed-duration scenarios
-//! (see EXPERIMENTS.md §Perf).
+//! each node plan is a pure function of its assignment, the transport and
+//! `exec::run_indexed` decide only *when and where* a node runs, and the
+//! merge happens in stable node-id order on the leader thread — so the
+//! [`ClusterReport`] is byte-identical at any `--jobs` value, at any
+//! `--shards` value, and across transports. A legacy fixed-wave scheduler
+//! is kept as [`Leader::run_waves`]: it produces the identical report
+//! (same plans, same merge) and serves as the cross-check reference and
+//! the wall-clock baseline the work-stealing path must beat on
+//! mixed-duration scenarios (see EXPERIMENTS.md §Perf).
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
 use crate::config::PolicyConfig;
 use crate::control::SessionCfg;
-use crate::exec::{available_jobs, run_indexed};
+use crate::exec::available_jobs;
 use crate::sim::freq::{FreqDomain, SwitchCost};
 use crate::telemetry::Recorder;
 use crate::util::io::Csv;
@@ -26,6 +28,7 @@ use crate::util::table::{fnum, fnum_sep, Table};
 use crate::workload::calibration;
 use crate::workload::model::AppModel;
 
+use super::transport::{partition, InProcess, Transport};
 use super::worker::{self, NodeResult, WorkerEvent};
 
 /// One node's job: which app it runs, its seed, and optional per-node
@@ -139,11 +142,55 @@ impl ClusterReport {
 
 /// A fully resolved, validated per-node execution plan. Built once, up
 /// front, so the schedulers never clone configs or resolve apps mid-run.
-struct NodePlan {
-    node: usize,
-    app: AppModel,
-    policy: PolicyConfig,
-    session: SessionCfg,
+pub(crate) struct NodePlan {
+    pub(crate) node: usize,
+    pub(crate) app: AppModel,
+    pub(crate) policy: PolicyConfig,
+    pub(crate) session: SessionCfg,
+}
+
+/// Validate and resolve every assignment into an executable plan. All
+/// fallible work (unknown apps, duplicate node ids, switch-latency
+/// guards) happens here, before any thread or subprocess spawns. A free
+/// function because every execution surface resolves through it: the
+/// leader (whole-batch validation), the shard transports, and the
+/// `cluster-worker` binary (per-shard plans).
+pub(crate) fn resolve_plans(
+    cfg: &ClusterConfig,
+    assignments: &[NodeAssignment],
+) -> anyhow::Result<Vec<NodePlan>> {
+    let mut seen = std::collections::BTreeSet::new();
+    assignments
+        .iter()
+        .map(|a| {
+            if !seen.insert(a.node) {
+                anyhow::bail!("duplicate node id {}", a.node);
+            }
+            let app = calibration::app(&a.app)
+                .ok_or_else(|| anyhow::anyhow!("unknown app {}", a.app))?;
+            let base = &cfg.session;
+            let session = SessionCfg {
+                seed: a.seed,
+                max_steps: a.max_steps.unwrap_or(base.max_steps),
+                switch_cost: a.switch_cost.unwrap_or(base.switch_cost),
+                ..base.clone()
+            };
+            if session.switch_cost.latency_s >= session.dt_s {
+                anyhow::bail!(
+                    "node {}: switch latency {}s >= decision interval {}s",
+                    a.node,
+                    session.switch_cost.latency_s,
+                    session.dt_s
+                );
+            }
+            Ok(NodePlan {
+                node: a.node,
+                app,
+                policy: a.policy.clone().unwrap_or_else(|| cfg.policy.clone()),
+                session,
+            })
+        })
+        .collect()
 }
 
 /// The cluster leader.
@@ -168,25 +215,80 @@ impl Leader {
             .collect()
     }
 
-    /// Execute all assignments on the work-stealing pool; blocks until
-    /// completion. Report is byte-identical at any `jobs` value.
+    /// Execute all assignments on the in-process work-stealing pool;
+    /// blocks until completion. Report is byte-identical at any `jobs`
+    /// value. Shorthand for `run_sharded(assignments, 1, &InProcess)` —
+    /// the single code path all transports share.
     pub fn run(&self, assignments: &[NodeAssignment]) -> anyhow::Result<ClusterReport> {
-        let plans = self.resolve(assignments)?;
-        let (tx, rx) = mpsc::sync_channel::<WorkerEvent>(256);
-        let drainer = spawn_drainer(rx);
+        self.run_sharded(assignments, 1, &InProcess)
+    }
 
-        let hb = self.cfg.heartbeat_steps;
-        let freqs = FreqDomain::aurora();
-        let results = {
-            let tx = &tx;
-            run_indexed(self.cfg.jobs, plans.len(), |i| {
-                let p = &plans[i];
-                let policy = p.policy.build(freqs.k(), p.session.seed);
-                worker::run_node(p.node, &p.app, policy, &p.session, hb, tx)
-            })
+    /// Partition the assignments into `shards` deterministic contiguous
+    /// shards, execute every shard through `transport` (all shards in
+    /// flight at once, one leader thread each), and merge the
+    /// `WorkerEvent` streams in stable node-id order. The report is
+    /// byte-identical for any `(shards, transport, jobs)` combination —
+    /// the extended determinism contract (EXPERIMENTS.md §Cluster):
+    /// heartbeats are an order-independent sum, and the merge fixes the
+    /// floating-point accumulation order by sorting on node id.
+    pub fn run_sharded(
+        &self,
+        assignments: &[NodeAssignment],
+        shards: usize,
+        transport: &dyn Transport,
+    ) -> anyhow::Result<ClusterReport> {
+        if shards == 0 {
+            anyhow::bail!("shards must be >= 1");
+        }
+        // Validate the whole batch leader-side before anything spawns.
+        // Not just a nicety: duplicate node ids landing in *different*
+        // shards are invisible to the per-shard resolve, and a bad app
+        // name should fail here, not as a subprocess error frame. The
+        // per-node resolve work is repeated inside each shard, but it is
+        // string lookups and config clones — noise next to the sessions.
+        resolve_plans(&self.cfg, assignments)?;
+        let parts = partition(assignments, shards);
+        // Divide the worker-thread budget across the concurrent shards
+        // (ceiling, so every shard keeps >= 1 thread): K shards each
+        // running the full `jobs`-wide pool would oversubscribe the
+        // machine K-fold. Harmless to the report — it is byte-identical
+        // at any thread count.
+        let per_shard = parts.len().max(1);
+        let shard_cfg = ClusterConfig {
+            jobs: (self.cfg.jobs + per_shard - 1) / per_shard,
+            ..self.cfg.clone()
         };
-        drop(tx);
-        let telemetry = drainer.join().map_err(|_| anyhow::anyhow!("drainer panicked"))?;
+        let outcomes: Vec<anyhow::Result<Vec<WorkerEvent>>> = std::thread::scope(|scope| {
+            let shard_cfg = &shard_cfg;
+            let handles: Vec<_> = parts
+                .iter()
+                .map(|part| scope.spawn(move || transport.run_shard(shard_cfg, part)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow::anyhow!("shard thread panicked")))
+                })
+                .collect()
+        });
+        let mut telemetry = Recorder::new();
+        let mut results = Vec::with_capacity(assignments.len());
+        for outcome in outcomes {
+            for ev in outcome? {
+                record_event(&mut telemetry, &ev);
+                if let WorkerEvent::Done { result, .. } = ev {
+                    results.push(result);
+                }
+            }
+        }
+        if results.len() != assignments.len() {
+            anyhow::bail!(
+                "sharded run returned {} node results, expected {}",
+                results.len(),
+                assignments.len()
+            );
+        }
         merge(results, &telemetry)
     }
 
@@ -196,7 +298,7 @@ impl Leader {
     /// wave's straggler — kept as the cross-check reference and perf
     /// baseline for the work-stealing path.
     pub fn run_waves(&self, assignments: &[NodeAssignment]) -> anyhow::Result<ClusterReport> {
-        let plans = self.resolve(assignments)?;
+        let plans = resolve_plans(&self.cfg, assignments)?;
         // Node-id -> result-slot map, precomputed once (the drain loop
         // previously searched the assignment list per Done event: O(n^2)).
         let slot_of: BTreeMap<usize, usize> =
@@ -245,44 +347,6 @@ impl Leader {
             results.into_iter().map(|r| r.expect("all nodes done")).collect();
         merge(results, &telemetry)
     }
-
-    /// Validate and resolve every assignment into an executable plan.
-    /// All fallible work (unknown apps, duplicate node ids) happens here,
-    /// before any thread spawns; each `SessionCfg` is built exactly once.
-    fn resolve(&self, assignments: &[NodeAssignment]) -> anyhow::Result<Vec<NodePlan>> {
-        let mut seen = std::collections::BTreeSet::new();
-        assignments
-            .iter()
-            .map(|a| {
-                if !seen.insert(a.node) {
-                    anyhow::bail!("duplicate node id {}", a.node);
-                }
-                let app = calibration::app(&a.app)
-                    .ok_or_else(|| anyhow::anyhow!("unknown app {}", a.app))?;
-                let base = &self.cfg.session;
-                let session = SessionCfg {
-                    seed: a.seed,
-                    max_steps: a.max_steps.unwrap_or(base.max_steps),
-                    switch_cost: a.switch_cost.unwrap_or(base.switch_cost),
-                    ..base.clone()
-                };
-                if session.switch_cost.latency_s >= session.dt_s {
-                    anyhow::bail!(
-                        "node {}: switch latency {}s >= decision interval {}s",
-                        a.node,
-                        session.switch_cost.latency_s,
-                        session.dt_s
-                    );
-                }
-                Ok(NodePlan {
-                    node: a.node,
-                    app,
-                    policy: a.policy.clone().unwrap_or_else(|| self.cfg.policy.clone()),
-                    session,
-                })
-            })
-            .collect()
-    }
 }
 
 /// Fold a worker event into the telemetry recorder (heartbeat stream).
@@ -294,18 +358,6 @@ fn record_event(telemetry: &mut Recorder, ev: &WorkerEvent) {
         }
         WorkerEvent::Done { .. } => telemetry.counter("cluster.nodes_done").inc(),
     }
-}
-
-/// Drain the telemetry stream on a dedicated thread until every sender is
-/// dropped, so worker heartbeats never block on a busy leader.
-fn spawn_drainer(rx: mpsc::Receiver<WorkerEvent>) -> std::thread::JoinHandle<Recorder> {
-    std::thread::spawn(move || {
-        let mut telemetry = Recorder::new();
-        for ev in rx {
-            record_event(&mut telemetry, &ev);
-        }
-        telemetry
-    })
 }
 
 /// Stable merge: order by node id, then aggregate in that fixed order so
@@ -409,6 +461,23 @@ mod tests {
         let leader = Leader::new(ClusterConfig::default());
         let bad = vec![NodeAssignment::new(3, "tealeaf", 1), NodeAssignment::new(3, "tealeaf", 2)];
         assert!(leader.run(&bad).is_err());
+    }
+
+    #[test]
+    fn in_process_sharding_matches_the_unsharded_pool() {
+        let leader = Leader::new(ClusterConfig {
+            jobs: 2,
+            heartbeat_steps: 1_500,
+            ..ClusterConfig::default()
+        });
+        let assignments = Leader::assign_round_robin(&["tealeaf", "clvleaf"], 5, 42);
+        let pool = leader.run(&assignments).unwrap();
+        for shards in [2, 3, 5, 9] {
+            let sharded = leader.run_sharded(&assignments, shards, &InProcess).unwrap();
+            assert_eq!(sharded.render(), pool.render(), "shards={shards}");
+            assert_eq!(sharded.to_csv().render(), pool.to_csv().render(), "shards={shards}");
+        }
+        assert!(leader.run_sharded(&assignments, 0, &InProcess).is_err());
     }
 
     #[test]

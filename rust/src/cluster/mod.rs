@@ -15,11 +15,22 @@
 //! The [`ScenarioSchedule`] layer generates assignment mixes beyond
 //! round-robin: weighted app mixes, staggered arrivals, per-app policy
 //! overrides, and heterogeneous per-node switch costs.
+//!
+//! Beyond one process, the leader shards the fleet across
+//! `energyucb cluster-worker` subprocesses: [`transport`] abstracts *how*
+//! a contiguous shard executes (in-process pool vs framed-JSONL pipe to a
+//! worker process), [`wire`] is the serde-free codec those frames ride
+//! on, and the merged report stays byte-identical across `--shards` ×
+//! `--jobs` × transport (EXPERIMENTS.md §Cluster).
 
 pub mod leader;
 pub mod schedule;
+pub mod transport;
+pub mod wire;
 pub mod worker;
 
 pub use leader::{ClusterConfig, ClusterReport, Leader, NodeAssignment};
 pub use schedule::{AppSlot, Arrivals, Pick, ScenarioSchedule};
+pub use transport::{InProcess, Subprocess, Transport};
+pub use wire::{Frame, WireCodec, WireError};
 pub use worker::{NodeResult, WorkerEvent};

@@ -1,0 +1,310 @@
+//! Shard transports: how the leader executes one contiguous shard of the
+//! assignment list.
+//!
+//! [`super::Leader::run_sharded`] is transport-agnostic — it partitions,
+//! fans the shards out on leader threads, and merges whatever
+//! [`WorkerEvent`] streams come back. Two backends:
+//!
+//! * [`InProcess`] — the shard runs on this process's work-stealing pool
+//!   (`exec::run_indexed`); the default path, and the reference the
+//!   subprocess path must match byte-for-byte.
+//! * [`Subprocess`] — the shard is serialized over a framed-JSONL pipe to
+//!   an `energyucb cluster-worker` child process (see [`super::wire`]),
+//!   which runs it with the *same* in-process engine
+//!   ([`run_shard_with`]) and streams events back on stdout. One
+//!   subprocess per shard ≙ one controller host per node group — the
+//!   process-isolation step toward multi-host fleets (a TCP backend
+//!   slots in as a third `Transport` impl; see ROADMAP.md).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::mpsc;
+
+use anyhow::Context;
+
+use crate::exec::run_indexed;
+use crate::sim::freq::FreqDomain;
+
+use super::leader::{resolve_plans, ClusterConfig, NodeAssignment};
+use super::wire::Frame;
+use super::worker::{self, WorkerEvent};
+
+/// A shard execution backend. `Sync` because the leader drives all
+/// shards concurrently through a shared reference.
+pub trait Transport: Sync {
+    /// Backend name for status lines.
+    fn name(&self) -> &'static str;
+
+    /// Execute one contiguous shard and return every event it emitted:
+    /// Progress beats interleaved, exactly one `Done` per assignment.
+    fn run_shard(
+        &self,
+        cfg: &ClusterConfig,
+        shard: &[NodeAssignment],
+    ) -> anyhow::Result<Vec<WorkerEvent>>;
+}
+
+/// Deterministic contiguous partition: `shards` chunks whose sizes differ
+/// by at most one, earlier chunks taking the remainder. Chunks that would
+/// be empty (`shards > len`) are dropped, so every returned shard has
+/// work.
+pub fn partition(assignments: &[NodeAssignment], shards: usize) -> Vec<&[NodeAssignment]> {
+    assert!(shards >= 1, "partition: shards must be >= 1");
+    let len = assignments.len();
+    let base = len / shards;
+    let extra = len % shards;
+    let mut parts = Vec::new();
+    let mut start = 0;
+    for s in 0..shards {
+        let size = base + usize::from(s < extra);
+        if size == 0 {
+            continue;
+        }
+        parts.push(&assignments[start..start + size]);
+        start += size;
+    }
+    parts
+}
+
+/// Run a shard on this process's work-stealing pool, handing every
+/// drained event to `on_event` on a dedicated drainer thread (events
+/// arrive one at a time, in channel order). `Leader::run`, the
+/// [`InProcess`] backend, and the `cluster-worker` binary all execute
+/// through this one path, so a subprocess shard is the same computation
+/// as an in-process one.
+pub(crate) fn run_shard_with<F>(
+    cfg: &ClusterConfig,
+    shard: &[NodeAssignment],
+    mut on_event: F,
+) -> anyhow::Result<()>
+where
+    F: FnMut(WorkerEvent) -> anyhow::Result<()> + Send,
+{
+    let plans = resolve_plans(cfg, shard)?;
+    let (tx, rx) = mpsc::sync_channel::<WorkerEvent>(256);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        // If the sink fails (e.g. the leader end of a pipe is gone), the
+        // drainer drops `rx`; worker sends then error and the nodes
+        // finish without streaming — the pool always drains.
+        let drainer = scope.spawn(move || -> anyhow::Result<()> {
+            for ev in rx {
+                on_event(ev)?;
+            }
+            Ok(())
+        });
+        let freqs = FreqDomain::aurora();
+        {
+            let tx = &tx;
+            run_indexed(cfg.jobs, plans.len(), |i| {
+                let p = &plans[i];
+                let policy = p.policy.build(freqs.k(), p.session.seed);
+                worker::run_node(p.node, &p.app, policy, &p.session, cfg.heartbeat_steps, tx);
+            });
+        }
+        drop(tx);
+        drainer.join().map_err(|_| anyhow::anyhow!("event drainer panicked"))?
+    })
+}
+
+/// Run shards on this process's pool (no serialization involved).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InProcess;
+
+impl Transport for InProcess {
+    fn name(&self) -> &'static str {
+        "in-process"
+    }
+
+    fn run_shard(
+        &self,
+        cfg: &ClusterConfig,
+        shard: &[NodeAssignment],
+    ) -> anyhow::Result<Vec<WorkerEvent>> {
+        let mut events = Vec::new();
+        run_shard_with(cfg, shard, |ev| {
+            events.push(ev);
+            Ok(())
+        })?;
+        Ok(events)
+    }
+}
+
+/// Serialize each shard to an `energyucb cluster-worker` child process
+/// over framed JSONL: `config` + `assign`* + `run` down its stdin,
+/// `event`* + `end` back from its stdout (stderr passes through for
+/// timing chatter). The worker receives assignments *only* through this
+/// wire — there is no shared memory with the leader.
+#[derive(Clone, Debug)]
+pub struct Subprocess {
+    program: PathBuf,
+}
+
+impl Subprocess {
+    /// Workers spawn from the currently running executable — the normal
+    /// CLI path, where leader and worker are the same binary.
+    pub fn current_exe() -> anyhow::Result<Subprocess> {
+        let program = std::env::current_exe().context("resolving current executable")?;
+        Ok(Subprocess { program })
+    }
+
+    /// Workers spawn from an explicit binary (tests pass the cargo-built
+    /// CLI via `env!("CARGO_BIN_EXE_energyucb")` — `current_exe()` inside
+    /// a test harness would re-enter the *test* binary).
+    pub fn with_program(program: impl Into<PathBuf>) -> Subprocess {
+        Subprocess { program: program.into() }
+    }
+}
+
+impl Transport for Subprocess {
+    fn name(&self) -> &'static str {
+        "subprocess"
+    }
+
+    fn run_shard(
+        &self,
+        cfg: &ClusterConfig,
+        shard: &[NodeAssignment],
+    ) -> anyhow::Result<Vec<WorkerEvent>> {
+        let mut child = Command::new(&self.program)
+            .arg("cluster-worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning cluster-worker from {}", self.program.display()))?;
+        let outcome = drive_worker(&mut child, cfg, shard);
+        if outcome.is_err() {
+            // Reap on every failure path: a bailed-on worker would
+            // otherwise keep simulating its whole shard in the
+            // background, then linger as a zombie until leader exit.
+            let _ = child.kill();
+            let _ = child.wait();
+            return outcome;
+        }
+        let status = child.wait().context("waiting for cluster-worker")?;
+        if !status.success() {
+            anyhow::bail!("cluster-worker exited with {status}");
+        }
+        outcome
+    }
+}
+
+/// The leader half of one worker conversation: feed the batch, then
+/// collect the event stream and check its terminal frame. On any error
+/// the caller kills and reaps the child.
+fn drive_worker(
+    child: &mut std::process::Child,
+    cfg: &ClusterConfig,
+    shard: &[NodeAssignment],
+) -> anyhow::Result<Vec<WorkerEvent>> {
+    // Feed the whole batch, then close stdin. No deadlock window: the
+    // worker writes nothing before it has consumed up to `run`.
+    {
+        let stdin = child.stdin.take().expect("piped stdin");
+        let mut w = BufWriter::new(stdin);
+        let config = Frame::Config {
+            jobs: cfg.jobs,
+            heartbeat_steps: cfg.heartbeat_steps,
+            policy: cfg.policy.clone(),
+            session: cfg.session.clone(),
+        };
+        writeln!(w, "{}", config.encode_line()).context("writing config frame")?;
+        for a in shard {
+            writeln!(w, "{}", Frame::Assign(a.clone()).encode_line())
+                .context("writing assignment frame")?;
+        }
+        writeln!(w, "{}", Frame::Run.encode_line()).context("writing run frame")?;
+        w.flush().context("flushing worker stdin")?;
+    }
+
+    let reader = BufReader::new(child.stdout.take().expect("piped stdout"));
+    let mut events = Vec::new();
+    let mut end_nodes: Option<usize> = None;
+    for line in reader.lines() {
+        let line = line.context("reading cluster-worker stdout")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Frame::decode_line(&line)
+            .with_context(|| format!("bad frame from cluster-worker: {line}"))?
+        {
+            Frame::Event(ev) => events.push(ev),
+            Frame::End { nodes } => end_nodes = Some(nodes),
+            Frame::Error { message } => {
+                anyhow::bail!("cluster-worker shard failed: {message}");
+            }
+            other => anyhow::bail!("unexpected frame from cluster-worker: {other:?}"),
+        }
+    }
+    match end_nodes {
+        Some(n) if n == shard.len() => Ok(events),
+        Some(n) => {
+            anyhow::bail!("shard integrity: worker reported {n} nodes, expected {}", shard.len())
+        }
+        None => anyhow::bail!("cluster-worker stream ended without a terminal frame"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Leader;
+
+    #[test]
+    fn partition_is_contiguous_and_balanced() {
+        let a: Vec<NodeAssignment> =
+            (0..10).map(|n| NodeAssignment::new(n, "tealeaf", n as u64)).collect();
+        for shards in 1..=12 {
+            let parts = partition(&a, shards);
+            assert_eq!(parts.len(), shards.min(10), "shards={shards}");
+            // Re-concatenation reproduces the input order exactly.
+            let glued: Vec<usize> = parts.iter().flat_map(|p| p.iter().map(|x| x.node)).collect();
+            assert_eq!(glued, (0..10).collect::<Vec<_>>(), "shards={shards}");
+            // Balanced: sizes differ by at most one.
+            let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "shards={shards}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn in_process_shard_emits_one_done_per_assignment() {
+        let cfg = ClusterConfig {
+            jobs: 2,
+            heartbeat_steps: 100,
+            session: crate::control::SessionCfg {
+                max_steps: 300,
+                ..crate::control::SessionCfg::default()
+            },
+            ..ClusterConfig::default()
+        };
+        let assignments = Leader::assign_round_robin(&["tealeaf", "clvleaf"], 4, 11);
+        let events = InProcess.run_shard(&cfg, &assignments).unwrap();
+        let done: Vec<usize> = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::Done { node, .. } => Some(*node),
+                _ => None,
+            })
+            .collect();
+        let mut sorted = done.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+        // 300 steps / 100-step beats = 3 Progress events per node.
+        let beats = events
+            .iter()
+            .filter(|e| matches!(e, WorkerEvent::Progress { .. }))
+            .count();
+        assert_eq!(beats, 4 * 3);
+    }
+
+    #[test]
+    fn missing_worker_binary_is_a_clean_error() {
+        let cfg = ClusterConfig { jobs: 1, ..ClusterConfig::default() };
+        let assignments = Leader::assign_round_robin(&["tealeaf"], 1, 0);
+        let t = Subprocess::with_program("/nonexistent/energyucb-cluster-worker");
+        let e = t.run_shard(&cfg, &assignments).unwrap_err();
+        assert!(format!("{e:#}").contains("spawning cluster-worker"), "{e:#}");
+    }
+}

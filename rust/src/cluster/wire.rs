@@ -1,0 +1,640 @@
+//! JSONL wire codec for the sharded cluster runtime.
+//!
+//! Shard workers are separate OS processes (`energyucb cluster-worker`),
+//! so every [`NodeAssignment`] — including its [`PolicyConfig`] and
+//! [`SwitchCost`] overrides — and every [`WorkerEvent`] crosses a pipe as
+//! one line of JSON. serde is not in the offline crate set, so the codec
+//! is hand-rolled on [`crate::util::io::Json`].
+//!
+//! Round-trips are exact: floats ride Rust's shortest round-trip
+//! formatting (`Json::render*` / `Json::parse`), with string sentinels
+//! for the values JSON numbers cannot carry (NaN/±inf/-0.0, see
+//! [`f64_to_json`]), and integers above 2^53 fall back to decimal
+//! strings (see [`u64_to_json`]) — so a decoded shard re-runs its
+//! sessions bit-identically and the merged [`ClusterReport`] stays
+//! byte-identical across `--shards` (EXPERIMENTS.md §Cluster).
+//!
+//! Frame grammar (one [`Frame`] per line, leader ⇄ worker):
+//!
+//! ```text
+//! leader → worker stdin:   config  assign*  run
+//! worker → leader stdout:  event*  (end | error)
+//! ```
+//!
+//! [`ClusterReport`]: super::ClusterReport
+
+use crate::bandit::energyucb::{EnergyUcbConfig, InitStrategy};
+use crate::bandit::RewardForm;
+use crate::config::PolicyConfig;
+use crate::control::{RunMetrics, SessionCfg};
+use crate::sim::freq::SwitchCost;
+use crate::util::io::Json;
+
+use super::leader::NodeAssignment;
+use super::worker::{NodeResult, WorkerEvent};
+
+/// Decode failure: the line was not valid JSON, or was valid JSON that is
+/// not a well-formed message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, WireError> {
+    Err(WireError(msg.into()))
+}
+
+/// Symmetric JSON codec for one wire type: `from_wire(&to_wire(x)) == x`.
+pub trait WireCodec: Sized {
+    fn to_wire(&self) -> Json;
+    fn from_wire(v: &Json) -> Result<Self, WireError>;
+}
+
+/// Largest integer magnitude `Json::Num` (an f64) represents exactly.
+const MAX_EXACT_INT: u64 = 1 << 53;
+
+/// Encode an f64 losslessly. Ordinary values ride `Json::Num` (shortest
+/// round-trip formatting); the values the JSON number grammar cannot
+/// carry — NaN, ±inf (the writer renders them as `null`) and -0.0 (the
+/// writer's integer path renders it as `0`) — ride string sentinels.
+pub fn f64_to_json(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Str("nan".to_string())
+    } else if x == f64::INFINITY {
+        Json::Str("inf".to_string())
+    } else if x == f64::NEG_INFINITY {
+        Json::Str("-inf".to_string())
+    } else if x == 0.0 && x.is_sign_negative() {
+        Json::Str("-0".to_string())
+    } else {
+        Json::Num(x)
+    }
+}
+
+/// Decode the [`f64_to_json`] encoding (number or sentinel string).
+pub fn f64_from_json(v: &Json) -> Result<f64, WireError> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "-0" => Ok(-0.0),
+            other => err(format!("bad float sentinel: {other:?}")),
+        },
+        _ => err("expected a number"),
+    }
+}
+
+/// Encode a u64 losslessly: values up to 2^53 ride as JSON numbers, the
+/// rest (hash-derived seeds, sentinel step caps) as decimal strings.
+pub fn u64_to_json(x: u64) -> Json {
+    if x <= MAX_EXACT_INT {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// Decode the [`u64_to_json`] encoding (number or decimal string).
+pub fn u64_from_json(v: &Json) -> Result<u64, WireError> {
+    match v {
+        Json::Num(x) => {
+            if x.is_finite() && *x >= 0.0 && x.trunc() == *x && *x <= MAX_EXACT_INT as f64 {
+                Ok(*x as u64)
+            } else {
+                err(format!("not a non-negative integer: {x}"))
+            }
+        }
+        Json::Str(s) => {
+            s.parse::<u64>().map_err(|_| WireError(format!("bad integer string: {s:?}")))
+        }
+        _ => err("expected an integer"),
+    }
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, WireError> {
+    v.get(key).ok_or_else(|| WireError(format!("missing field `{key}`")))
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String, WireError> {
+    field(v, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| WireError(format!("field `{key}` must be a string")))
+}
+
+fn f64_field(v: &Json, key: &str) -> Result<f64, WireError> {
+    f64_from_json(field(v, key)?).map_err(|e| WireError(format!("field `{key}`: {}", e.0)))
+}
+
+fn bool_field(v: &Json, key: &str) -> Result<bool, WireError> {
+    field(v, key)?
+        .as_bool()
+        .ok_or_else(|| WireError(format!("field `{key}` must be a bool")))
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64, WireError> {
+    u64_from_json(field(v, key)?).map_err(|e| WireError(format!("field `{key}`: {}", e.0)))
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize, WireError> {
+    Ok(u64_field(v, key)? as usize)
+}
+
+impl WireCodec for SwitchCost {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("latency_s", f64_to_json(self.latency_s));
+        j.set("energy_j", f64_to_json(self.energy_j));
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(SwitchCost {
+            latency_s: f64_field(v, "latency_s")?,
+            energy_j: f64_field(v, "energy_j")?,
+        })
+    }
+}
+
+impl WireCodec for EnergyUcbConfig {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("alpha", f64_to_json(self.alpha));
+        j.set("lambda", f64_to_json(self.lambda));
+        j.set("mu_init", f64_to_json(self.mu_init));
+        j.set("prior_n", f64_to_json(self.prior_n));
+        j.set(
+            "init",
+            match self.init {
+                InitStrategy::Optimistic => "optimistic",
+                InitStrategy::WarmupRoundRobin => "warmup",
+            },
+        );
+        j.set("discount", f64_to_json(self.discount));
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        let init = match str_field(v, "init")?.as_str() {
+            "optimistic" => InitStrategy::Optimistic,
+            "warmup" => InitStrategy::WarmupRoundRobin,
+            other => return err(format!("unknown init strategy: {other}")),
+        };
+        Ok(EnergyUcbConfig {
+            alpha: f64_field(v, "alpha")?,
+            lambda: f64_field(v, "lambda")?,
+            mu_init: f64_field(v, "mu_init")?,
+            prior_n: f64_field(v, "prior_n")?,
+            init,
+            discount: f64_field(v, "discount")?,
+        })
+    }
+}
+
+impl WireCodec for PolicyConfig {
+    /// Tagged by the same `name` strings the `[policy]` config surface
+    /// uses, so wire dumps read like config files.
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            PolicyConfig::EnergyUcb(c) => {
+                j.set("name", "energyucb");
+                j.set("ucb", c.to_wire());
+            }
+            PolicyConfig::ConstrainedEnergyUcb { ucb, delta } => {
+                j.set("name", "constrained");
+                j.set("ucb", ucb.to_wire());
+                j.set("delta", f64_to_json(*delta));
+            }
+            PolicyConfig::Ucb1 { alpha } => {
+                j.set("name", "ucb1");
+                j.set("alpha", f64_to_json(*alpha));
+            }
+            PolicyConfig::EpsilonGreedy { eps0, decay_c } => {
+                j.set("name", "egreedy");
+                j.set("eps0", f64_to_json(*eps0));
+                j.set("decay_c", f64_to_json(*decay_c));
+            }
+            PolicyConfig::EnergyTs => {
+                j.set("name", "energyts");
+            }
+            PolicyConfig::RoundRobin => {
+                j.set("name", "rrfreq");
+            }
+            PolicyConfig::Static { arm } => {
+                j.set("name", "static");
+                j.set("arm", *arm);
+            }
+            PolicyConfig::RlPower => {
+                j.set("name", "rlpower");
+            }
+            PolicyConfig::DrlCap { mode } => {
+                j.set("name", "drlcap");
+                j.set("mode", mode.as_str());
+            }
+        }
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(match str_field(v, "name")?.as_str() {
+            "energyucb" => PolicyConfig::EnergyUcb(EnergyUcbConfig::from_wire(field(v, "ucb")?)?),
+            "constrained" => PolicyConfig::ConstrainedEnergyUcb {
+                ucb: EnergyUcbConfig::from_wire(field(v, "ucb")?)?,
+                delta: f64_field(v, "delta")?,
+            },
+            "ucb1" => PolicyConfig::Ucb1 { alpha: f64_field(v, "alpha")? },
+            "egreedy" => PolicyConfig::EpsilonGreedy {
+                eps0: f64_field(v, "eps0")?,
+                decay_c: f64_field(v, "decay_c")?,
+            },
+            "energyts" => PolicyConfig::EnergyTs,
+            "rrfreq" => PolicyConfig::RoundRobin,
+            "static" => PolicyConfig::Static { arm: usize_field(v, "arm")? },
+            "rlpower" => PolicyConfig::RlPower,
+            "drlcap" => PolicyConfig::DrlCap { mode: str_field(v, "mode")? },
+            other => return err(format!("unknown policy: {other}")),
+        })
+    }
+}
+
+impl WireCodec for RewardForm {
+    fn to_wire(&self) -> Json {
+        Json::Str(self.name().to_string())
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        match v.as_str() {
+            Some("E*R") => Ok(RewardForm::EnergyRatio),
+            Some("E^2*R") => Ok(RewardForm::EnergySquaredRatio),
+            Some("E*R^2") => Ok(RewardForm::EnergyRatioSquared),
+            Some(other) => err(format!("unknown reward form: {other}")),
+            None => err("reward form must be a string"),
+        }
+    }
+}
+
+impl WireCodec for SessionCfg {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("dt_s", f64_to_json(self.dt_s));
+        j.set("seed", u64_to_json(self.seed));
+        j.set("record_trace", self.record_trace);
+        j.set("max_steps", u64_to_json(self.max_steps));
+        j.set("reward_form", self.reward_form.to_wire());
+        j.set("checkpoints", self.checkpoints);
+        j.set("switch_cost", self.switch_cost.to_wire());
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(SessionCfg {
+            dt_s: f64_field(v, "dt_s")?,
+            seed: u64_field(v, "seed")?,
+            record_trace: bool_field(v, "record_trace")?,
+            max_steps: u64_field(v, "max_steps")?,
+            reward_form: RewardForm::from_wire(field(v, "reward_form")?)?,
+            checkpoints: usize_field(v, "checkpoints")?,
+            switch_cost: SwitchCost::from_wire(field(v, "switch_cost")?)?,
+        })
+    }
+}
+
+impl WireCodec for NodeAssignment {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("node", self.node);
+        j.set("app", self.app.as_str());
+        j.set("seed", u64_to_json(self.seed));
+        j.set(
+            "max_steps",
+            match self.max_steps {
+                Some(m) => u64_to_json(m),
+                None => Json::Null,
+            },
+        );
+        j.set(
+            "policy",
+            match &self.policy {
+                Some(p) => p.to_wire(),
+                None => Json::Null,
+            },
+        );
+        j.set(
+            "switch_cost",
+            match &self.switch_cost {
+                Some(c) => c.to_wire(),
+                None => Json::Null,
+            },
+        );
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        let max_steps = match field(v, "max_steps")? {
+            Json::Null => None,
+            x => Some(u64_from_json(x).map_err(|e| WireError(format!("max_steps: {}", e.0)))?),
+        };
+        let policy = match field(v, "policy")? {
+            Json::Null => None,
+            x => Some(PolicyConfig::from_wire(x)?),
+        };
+        let switch_cost = match field(v, "switch_cost")? {
+            Json::Null => None,
+            x => Some(SwitchCost::from_wire(x)?),
+        };
+        Ok(NodeAssignment {
+            node: usize_field(v, "node")?,
+            app: str_field(v, "app")?,
+            seed: u64_field(v, "seed")?,
+            max_steps,
+            policy,
+            switch_cost,
+        })
+    }
+}
+
+impl WireCodec for RunMetrics {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("app", self.app.as_str());
+        j.set("policy", self.policy.as_str());
+        j.set("gpu_energy_kj", f64_to_json(self.gpu_energy_kj));
+        j.set("exec_time_s", f64_to_json(self.exec_time_s));
+        j.set("switches", u64_to_json(self.switches));
+        j.set("switch_energy_j", f64_to_json(self.switch_energy_j));
+        j.set("switch_time_s", f64_to_json(self.switch_time_s));
+        j.set("cumulative_regret", f64_to_json(self.cumulative_regret));
+        j.set("steps", u64_to_json(self.steps));
+        j.set("completed", f64_to_json(self.completed));
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(RunMetrics {
+            app: str_field(v, "app")?,
+            policy: str_field(v, "policy")?,
+            gpu_energy_kj: f64_field(v, "gpu_energy_kj")?,
+            exec_time_s: f64_field(v, "exec_time_s")?,
+            switches: u64_field(v, "switches")?,
+            switch_energy_j: f64_field(v, "switch_energy_j")?,
+            switch_time_s: f64_field(v, "switch_time_s")?,
+            cumulative_regret: f64_field(v, "cumulative_regret")?,
+            steps: u64_field(v, "steps")?,
+            completed: f64_field(v, "completed")?,
+        })
+    }
+}
+
+impl WireCodec for NodeResult {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("node", self.node);
+        j.set("app", self.app.as_str());
+        j.set("metrics", self.metrics.to_wire());
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(NodeResult {
+            node: usize_field(v, "node")?,
+            app: str_field(v, "app")?,
+            metrics: RunMetrics::from_wire(field(v, "metrics")?)?,
+        })
+    }
+}
+
+impl WireCodec for WorkerEvent {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            WorkerEvent::Progress { node, completed, energy_j } => {
+                j.set("event", "progress");
+                j.set("node", *node);
+                j.set("completed", f64_to_json(*completed));
+                j.set("energy_j", f64_to_json(*energy_j));
+            }
+            WorkerEvent::Done { node, result } => {
+                j.set("event", "done");
+                j.set("node", *node);
+                j.set("result", result.to_wire());
+            }
+        }
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(match str_field(v, "event")?.as_str() {
+            "progress" => WorkerEvent::Progress {
+                node: usize_field(v, "node")?,
+                completed: f64_field(v, "completed")?,
+                energy_j: f64_field(v, "energy_j")?,
+            },
+            "done" => WorkerEvent::Done {
+                node: usize_field(v, "node")?,
+                result: NodeResult::from_wire(field(v, "result")?)?,
+            },
+            other => return err(format!("unknown event kind: {other}")),
+        })
+    }
+}
+
+/// One line of the leader ⇄ worker protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Shard runtime configuration; must precede `run`.
+    Config {
+        jobs: usize,
+        heartbeat_steps: u64,
+        policy: PolicyConfig,
+        session: SessionCfg,
+    },
+    /// One node assignment of the shard's batch.
+    Assign(NodeAssignment),
+    /// End of batch: execute the shard.
+    Run,
+    /// One worker telemetry/result event.
+    Event(WorkerEvent),
+    /// Terminal success: the worker emitted `nodes` Done events
+    /// (stream-integrity check on the leader).
+    End { nodes: usize },
+    /// Terminal failure with a human-readable reason.
+    Error { message: String },
+}
+
+impl Frame {
+    /// Encode as one JSONL line (no trailing newline).
+    pub fn encode_line(&self) -> String {
+        self.to_wire().render_compact()
+    }
+
+    /// Decode one JSONL line.
+    pub fn decode_line(line: &str) -> Result<Frame, WireError> {
+        let v = Json::parse(line).map_err(|e| WireError(e.to_string()))?;
+        Frame::from_wire(&v)
+    }
+}
+
+impl WireCodec for Frame {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            Frame::Config { jobs, heartbeat_steps, policy, session } => {
+                j.set("frame", "config");
+                j.set("jobs", *jobs);
+                j.set("heartbeat_steps", u64_to_json(*heartbeat_steps));
+                j.set("policy", policy.to_wire());
+                j.set("session", session.to_wire());
+            }
+            Frame::Assign(a) => {
+                j.set("frame", "assign");
+                j.set("assignment", a.to_wire());
+            }
+            Frame::Run => {
+                j.set("frame", "run");
+            }
+            Frame::Event(ev) => {
+                j.set("frame", "event");
+                j.set("payload", ev.to_wire());
+            }
+            Frame::End { nodes } => {
+                j.set("frame", "end");
+                j.set("nodes", *nodes);
+            }
+            Frame::Error { message } => {
+                j.set("frame", "error");
+                j.set("message", message.as_str());
+            }
+        }
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(match str_field(v, "frame")?.as_str() {
+            "config" => Frame::Config {
+                jobs: usize_field(v, "jobs")?,
+                heartbeat_steps: u64_field(v, "heartbeat_steps")?,
+                policy: PolicyConfig::from_wire(field(v, "policy")?)?,
+                session: SessionCfg::from_wire(field(v, "session")?)?,
+            },
+            "assign" => Frame::Assign(NodeAssignment::from_wire(field(v, "assignment")?)?),
+            "run" => Frame::Run,
+            "event" => Frame::Event(WorkerEvent::from_wire(field(v, "payload")?)?),
+            "end" => Frame::End { nodes: usize_field(v, "nodes")? },
+            "error" => Frame::Error { message: str_field(v, "message")? },
+            other => return err(format!("unknown frame type: {other}")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_with_overrides_round_trips() {
+        let a = NodeAssignment {
+            node: 17,
+            app: "tealeaf".into(),
+            seed: u64::MAX - 3, // exercises the >2^53 string path
+            max_steps: Some(1_500),
+            policy: Some(PolicyConfig::ConstrainedEnergyUcb {
+                ucb: EnergyUcbConfig::default(),
+                delta: 0.05,
+            }),
+            switch_cost: Some(SwitchCost { latency_s: 450e-6, energy_j: 0.9 }),
+        };
+        let line = Frame::Assign(a.clone()).encode_line();
+        assert!(!line.contains('\n'), "{line}");
+        assert_eq!(Frame::decode_line(&line).unwrap(), Frame::Assign(a));
+    }
+
+    #[test]
+    fn bare_assignment_keeps_nulls() {
+        let a = NodeAssignment::new(0, "clvleaf", 7);
+        let j = a.to_wire();
+        assert!(j.get("max_steps").unwrap().is_null());
+        assert!(j.get("policy").unwrap().is_null());
+        assert_eq!(NodeAssignment::from_wire(&j).unwrap(), a);
+    }
+
+    #[test]
+    fn every_policy_kind_round_trips() {
+        let policies = [
+            PolicyConfig::EnergyUcb(EnergyUcbConfig::default()),
+            PolicyConfig::ConstrainedEnergyUcb { ucb: EnergyUcbConfig::default(), delta: 0.1 },
+            PolicyConfig::Ucb1 { alpha: 0.05 },
+            PolicyConfig::EpsilonGreedy { eps0: 0.1, decay_c: 20.0 },
+            PolicyConfig::EnergyTs,
+            PolicyConfig::RoundRobin,
+            PolicyConfig::Static { arm: 7 },
+            PolicyConfig::RlPower,
+            PolicyConfig::DrlCap { mode: "cross".into() },
+        ];
+        for p in policies {
+            let j = p.to_wire();
+            assert_eq!(PolicyConfig::from_wire(&j).unwrap(), p, "{j:?}");
+        }
+    }
+
+    #[test]
+    fn config_frame_round_trips() {
+        let f = Frame::Config {
+            jobs: 4,
+            heartbeat_steps: 500,
+            policy: PolicyConfig::Static { arm: 8 },
+            session: SessionCfg { seed: 99, max_steps: 400, ..SessionCfg::default() },
+        };
+        assert_eq!(Frame::decode_line(&f.encode_line()).unwrap(), f);
+    }
+
+    #[test]
+    fn f64_codec_carries_what_json_numbers_cannot() {
+        // The raw writer would fold these to `null` / `0`; the sentinel
+        // path keeps them bit-faithful (NaN up to payload canonization).
+        assert!(f64_from_json(&f64_to_json(f64::NAN)).unwrap().is_nan());
+        assert_eq!(f64_from_json(&f64_to_json(f64::INFINITY)).unwrap(), f64::INFINITY);
+        assert_eq!(f64_from_json(&f64_to_json(f64::NEG_INFINITY)).unwrap(), f64::NEG_INFINITY);
+        let neg_zero = f64_from_json(&f64_to_json(-0.0)).unwrap();
+        assert!(neg_zero == 0.0 && neg_zero.is_sign_negative());
+        // Ordinary values stay plain numbers.
+        assert_eq!(f64_to_json(0.035), Json::Num(0.035));
+        assert_eq!(f64_from_json(&Json::Num(-2.5)).unwrap(), -2.5);
+        assert!(f64_from_json(&Json::Str("fast".into())).is_err());
+        assert!(f64_from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn u64_codec_is_lossless_at_both_ends() {
+        for x in [0, 1, 1 << 53, (1 << 53) + 1, u64::MAX] {
+            assert_eq!(u64_from_json(&u64_to_json(x)).unwrap(), x);
+        }
+        assert!(u64_from_json(&Json::Num(-1.0)).is_err());
+        assert!(u64_from_json(&Json::Num(1.5)).is_err());
+        assert!(u64_from_json(&Json::Str("12x".into())).is_err());
+        assert!(u64_from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_malformed_frames() {
+        for bad in [
+            "",
+            "{\"frame\":\"assign\"}",
+            "{\"frame\":\"bogus\"}",
+            "{\"frame\":\"end\",\"nodes\":-1}",
+            "{\"frame\":\"end\",\"nodes\":1.5}",
+            "[\"frame\",\"run\"]",
+            "{\"frame\":\"run\"} trailing",
+        ] {
+            assert!(Frame::decode_line(bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -7,7 +7,7 @@ use crate::control::{run_session, RunMetrics, SessionCfg};
 use crate::workload::model::AppModel;
 
 /// Telemetry events a worker streams to the leader.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum WorkerEvent {
     /// Periodic heartbeat: (node_id, progress fraction, cum energy J).
     Progress { node: usize, completed: f64, energy_j: f64 },
@@ -16,7 +16,7 @@ pub enum WorkerEvent {
 }
 
 /// Final per-node outcome.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct NodeResult {
     pub node: usize,
     pub app: String,
@@ -25,9 +25,12 @@ pub struct NodeResult {
 
 /// Number of heartbeats a node emits for a run of `steps` decisions.
 /// A pure function of the run (never of scheduling), so the cluster-wide
-/// heartbeat total is identical at any worker count.
+/// heartbeat total is identical at any worker count. Clamped to [1, 50]:
+/// every node emits at least a terminal beat — short budget-capped runs
+/// (staggered arrivals) used to floor at 0 and were invisible to leader
+/// telemetry.
 pub fn heartbeat_count(steps: u64, heartbeat_steps: u64) -> u64 {
-    (steps.max(1) / heartbeat_steps.max(1)).min(50)
+    (steps.max(1) / heartbeat_steps.max(1)).clamp(1, 50)
 }
 
 /// Run one node to completion, streaming progress events every
@@ -108,8 +111,34 @@ mod tests {
     #[test]
     fn heartbeat_count_is_pure_and_capped() {
         assert_eq!(heartbeat_count(10_000, 1_000), 10);
-        assert_eq!(heartbeat_count(999, 1_000), 0);
+        // Runs shorter than one heartbeat interval still emit the
+        // terminal beat (regression: budget-capped nodes were invisible).
+        assert_eq!(heartbeat_count(999, 1_000), 1);
+        assert_eq!(heartbeat_count(150, 1_000), 1);
         assert_eq!(heartbeat_count(1_000_000, 1_000), 50);
         assert_eq!(heartbeat_count(0, 0), 1); // degenerate inputs clamp to 1/1
+    }
+
+    #[test]
+    fn short_runs_emit_exactly_one_terminal_progress_beat() {
+        let app = calibration::app("tealeaf").unwrap();
+        let (tx, rx) = mpsc::sync_channel(8);
+        // 50-step budget with 1,000-step heartbeats: pre-fix, zero
+        // Progress events reached the leader.
+        let cfg = SessionCfg { max_steps: 50, ..SessionCfg::default() };
+        let handle = std::thread::spawn(move || {
+            run_node(1, &app, Box::new(StaticPolicy::new(9, 8)), &cfg, 1_000, &tx)
+        });
+        let events: Vec<WorkerEvent> = rx.iter().collect();
+        handle.join().unwrap();
+        let beats: Vec<f64> = events
+            .iter()
+            .filter_map(|e| match e {
+                WorkerEvent::Progress { completed, .. } => Some(*completed),
+                WorkerEvent::Done { .. } => None,
+            })
+            .collect();
+        assert_eq!(beats, vec![1.0], "exactly one terminal beat");
+        assert!(matches!(events.last(), Some(WorkerEvent::Done { .. })));
     }
 }

@@ -283,6 +283,7 @@ impl PolicyConfig {
 /// nodes = 64
 /// seed = 2026
 /// heartbeat_steps = 1000
+/// shards = 2                  # optional: K worker subprocesses (JSONL wire)
 /// preset = "mixed"            # optional base: uniform|mixed|staggered|hetero
 /// pick = "weighted"           # or "round_robin"
 ///
@@ -313,6 +314,10 @@ pub struct ClusterFileConfig {
     pub nodes: usize,
     /// Worker threads; `None` = CLI/default decides.
     pub jobs: Option<usize>,
+    /// Subprocess shard count (`shards = K` / `--shards K`); `None` = the
+    /// in-process pool. Reports are byte-identical either way
+    /// (EXPERIMENTS.md §Cluster).
+    pub shards: Option<usize>,
     pub heartbeat_steps: u64,
     /// Fleet-wide default policy (per-app overrides ride on the slots).
     pub policy: PolicyConfig,
@@ -324,6 +329,7 @@ impl Default for ClusterFileConfig {
         ClusterFileConfig {
             nodes: 16,
             jobs: None,
+            shards: None,
             heartbeat_steps: 1_000,
             policy: PolicyConfig::EnergyUcb(EnergyUcbConfig::default()),
             schedule: crate::cluster::ScenarioSchedule::preset("uniform", 2026)
@@ -368,6 +374,12 @@ impl ClusterFileConfig {
                 return invalid("cluster.jobs must be >= 1");
             }
             cfg.jobs = Some(v as usize);
+        }
+        if let Some(v) = c.get_int("shards") {
+            if v < 1 {
+                return invalid("cluster.shards must be >= 1");
+            }
+            cfg.shards = Some(v as usize);
         }
         if let Some(v) = c.get_int("heartbeat_steps") {
             if v < 1 {
@@ -548,6 +560,7 @@ alpha = -1.0
         let c = ClusterFileConfig::from_toml("").unwrap();
         assert_eq!(c.nodes, 16);
         assert_eq!(c.jobs, None);
+        assert_eq!(c.shards, None);
         assert_eq!(c.schedule.name, "uniform");
     }
 
@@ -559,6 +572,7 @@ alpha = -1.0
 nodes = 24
 seed = 99
 jobs = 4
+shards = 3
 heartbeat_steps = 500
 pick = "weighted"
 
@@ -589,6 +603,7 @@ arm = 7
         let c = ClusterFileConfig::from_toml(text).unwrap();
         assert_eq!(c.nodes, 24);
         assert_eq!(c.jobs, Some(4));
+        assert_eq!(c.shards, Some(3));
         assert_eq!(c.heartbeat_steps, 500);
         assert_eq!(c.schedule.seed, 99);
         assert_eq!(c.schedule.pick, Pick::Weighted);
@@ -620,6 +635,7 @@ arm = 7
     #[test]
     fn cluster_config_rejects_bad_input() {
         assert!(ClusterFileConfig::from_toml("[cluster]\nnodes = 0").is_err());
+        assert!(ClusterFileConfig::from_toml("[cluster]\nshards = 0").is_err());
         assert!(ClusterFileConfig::from_toml("[cluster]\nseed = -1").is_err());
         assert!(ClusterFileConfig::from_toml("[[cluster.scenario]]\nweight = 1.0").is_err());
         assert!(

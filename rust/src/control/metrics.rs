@@ -5,7 +5,7 @@ use crate::sim::freq::FreqDomain;
 use crate::workload::model::AppModel;
 
 /// Final metrics of one controlled run of one app.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunMetrics {
     pub app: String,
     pub policy: String,

@@ -17,7 +17,7 @@ use crate::workload::trace::{Trace, TraceStep};
 use super::metrics::RunMetrics;
 
 /// Session configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SessionCfg {
     /// Decision/sampling interval, seconds (paper: 10 ms).
     pub dt_s: f64,

@@ -16,6 +16,21 @@
 //!   to the native engine or skips exactly as it does when artifacts are
 //!   missing.
 
+// The `xla` feature is declared ahead of its dependency: the vendored
+// `xla` crate that backs `runtime::pjrt` is not in the offline closure
+// yet (ROADMAP.md: "re-add `xla = { path = ... }` when the offline
+// closure is restored"). Without this guard `cargo build --features xla`
+// died on an unresolved `extern crate xla` deep inside `pjrt.rs` — fail
+// up front with the actual story instead. Delete this block when the
+// vendored crate is wired back in.
+#[cfg(feature = "xla")]
+compile_error!(
+    "the `xla` feature needs the vendored `xla` crate, which is not checked in: \
+     restore the offline xla closure and re-add `xla = { path = \"vendor/xla\" }` \
+     to rust/Cargo.toml (see ROADMAP.md), or build without `--features xla` \
+     to use the same-API stub runtime"
+);
+
 #[cfg(feature = "xla")]
 mod pjrt;
 #[cfg(feature = "xla")]

@@ -1,14 +1,17 @@
-//! Result serialization: CSV and a small JSON writer.
+//! Result serialization: CSV plus a small JSON writer *and reader*.
 //!
 //! serde is not in the vendored crate set, so experiments write their
-//! machine-readable outputs through this hand-rolled substrate. Only
-//! *writing* is needed at runtime (configs are read through
-//! [`crate::config::toml`]).
+//! machine-readable outputs through this hand-rolled substrate. Configs
+//! are read through [`crate::config::toml`]; the JSON reader
+//! ([`Json::parse`]) exists for the cluster wire protocol
+//! ([`crate::cluster::wire`]), where shard workers receive their
+//! assignment batches as framed JSONL over a pipe.
 
 use std::fmt::Write as _;
 use std::fs;
 use std::io;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A JSON value tree sufficient for experiment outputs.
 #[derive(Clone, Debug, PartialEq)]
@@ -59,10 +62,98 @@ impl Json {
         }
     }
 
+    /// String payload (None on non-strings).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Numeric payload (None on non-numbers).
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Boolean payload (None on non-booleans).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array payload (None on non-arrays).
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+
     pub fn render(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0);
         s
+    }
+
+    /// Single-line render for JSONL framing: one value per line, no
+    /// whitespace. Escaped strings never contain raw newlines, so the
+    /// output is guaranteed newline-free; [`Json::parse`] reads it back.
+    pub fn render_compact(&self) -> String {
+        let mut s = String::new();
+        self.write_compact(&mut s);
+        s
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            scalar => scalar.write(out, 0),
+        }
+    }
+
+    /// Parse a JSON document — the counterpart of [`Json::render`] and
+    /// [`Json::render_compact`]. Rejects trailing garbage, truncated
+    /// input, bad escapes, non-finite numbers, and nesting deeper than a
+    /// fixed cap; returns an error (never panics) on malformed input.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -116,6 +207,254 @@ impl Json {
                 }
                 out.push_str(&"  ".repeat(indent));
                 out.push('}');
+            }
+        }
+    }
+}
+
+/// Parse failure from [`Json::parse`]: what went wrong and where.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JsonError {
+    /// Byte offset into the input at the failure point.
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Nesting cap: adversarial frames (`[[[[…`) must fail with an error,
+/// not exhaust the recursion stack.
+const MAX_DEPTH: usize = 64;
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { offset: self.pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("expected `{word}`")))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, JsonError> {
+        if depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        match self.peek() {
+            None => Err(self.err("unexpected end of input")),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => self.array(depth),
+            Some(b'{') => self.object(depth),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(self.err(format!("unexpected character '{}'", c as char))),
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(self.err("expected ',' or ']' in array")),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            pairs.push((key, self.value(depth + 1)?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(self.err("expected ',' or '}' in object")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err(self.err("unterminated string"));
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        return Err(self.err("unterminated escape"));
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                _ if b < 0x20 => return Err(self.err("unescaped control character")),
+                _ if b < 0x80 => out.push(b as char),
+                _ => {
+                    // Multi-byte UTF-8: the input is a &str, so a leading
+                    // byte at a char boundary carries its sequence length;
+                    // copy the whole char. Guards keep this panic-free
+                    // even though valid UTF-8 can't violate them.
+                    let start = self.pos - 1;
+                    let len = match b {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return Err(self.err("invalid utf-8 leading byte")),
+                    };
+                    let end = start + len;
+                    if end > self.bytes.len() {
+                        return Err(self.err("truncated utf-8 sequence"));
+                    }
+                    match std::str::from_utf8(&self.bytes[start..end]) {
+                        Ok(s) => {
+                            out.push_str(s);
+                            self.pos = end;
+                        }
+                        Err(_) => return Err(self.err("invalid utf-8 in string")),
+                    }
+                }
+            }
+        }
+    }
+
+    /// `\uXXXX`, including surrogate pairs (`😀`).
+    fn unicode_escape(&mut self) -> Result<char, JsonError> {
+        let hi = self.hex4()?;
+        if (0xDC00..0xE000).contains(&hi) {
+            return Err(self.err("lone low surrogate"));
+        }
+        if (0xD800..0xDC00).contains(&hi) {
+            if self.peek() != Some(b'\\') {
+                return Err(self.err("lone high surrogate"));
+            }
+            self.pos += 1;
+            if self.peek() != Some(b'u') {
+                return Err(self.err("lone high surrogate"));
+            }
+            self.pos += 1;
+            let lo = self.hex4()?;
+            if !(0xDC00..0xE000).contains(&lo) {
+                return Err(self.err("invalid low surrogate"));
+            }
+            let cp = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+            return char::from_u32(cp).ok_or_else(|| self.err("invalid surrogate pair"));
+        }
+        char::from_u32(hi).ok_or_else(|| self.err("invalid \\u escape"))
+    }
+
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let Some(b) = self.peek() else {
+                return Err(self.err("truncated \\u escape"));
+            };
+            let d = match b {
+                b'0'..=b'9' => u32::from(b - b'0'),
+                b'a'..=b'f' => u32::from(b - b'a') + 10,
+                b'A'..=b'F' => u32::from(b - b'A') + 10,
+                _ => return Err(self.err("bad hex digit in \\u escape")),
+            };
+            v = v * 16 + d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let parsed = std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok());
+        match parsed {
+            // 1e999 overflows to inf: reject (JSON has no non-finite repr).
+            Some(x) if x.is_finite() => Ok(Json::Num(x)),
+            _ => {
+                self.pos = start;
+                Err(self.err("invalid number"))
             }
         }
     }
@@ -215,21 +554,52 @@ impl Csv {
 }
 
 fn escape_csv(s: &str) -> String {
-    if s.contains(',') || s.contains('"') || s.contains('\n') {
+    // RFC 4180: carriage returns need quoting just like bare newlines —
+    // an unquoted `\r` splits the record on CRLF-aware readers.
+    if s.contains(',') || s.contains('"') || s.contains('\n') || s.contains('\r') {
         format!("\"{}\"", s.replace('"', "\"\""))
     } else {
         s.to_string()
     }
 }
 
-/// Create parent dirs and write a file atomically (tmp + rename).
+/// Process-wide counter making every tmp path of [`write_file`] unique.
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Create parent dirs and write a file atomically (unique tmp + rename).
+///
+/// The tmp name appends a `.{pid}.{n}.tmp` suffix to the full file name
+/// rather than replacing the extension: `with_extension("tmp")` mapped
+/// sibling outputs like `out.csv` and `out.json` onto the same `out.tmp`,
+/// so concurrent writers (an experiment emitting both under `--jobs`)
+/// could rename a half-written or wrong-format file into place.
 pub fn write_file(path: &Path, contents: &str) -> io::Result<()> {
     if let Some(parent) = path.parent() {
         fs::create_dir_all(parent)?;
     }
-    let tmp = path.with_extension("tmp");
-    fs::write(&tmp, contents)?;
-    fs::rename(&tmp, path)
+    let Some(file_name) = path.file_name() else {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("write_file: no file name in {}", path.display()),
+        ));
+    };
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(format!(
+        ".{}.{}.tmp",
+        std::process::id(),
+        TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = path.with_file_name(tmp_name);
+    // Remove the tmp on either failure: names are unique per call, so a
+    // stray partial file would never be overwritten by a retry.
+    fs::write(&tmp, contents).map_err(|e| {
+        let _ = fs::remove_file(&tmp);
+        e
+    })?;
+    fs::rename(&tmp, path).map_err(|e| {
+        let _ = fs::remove_file(&tmp);
+        e
+    })
 }
 
 #[cfg(test)]
@@ -277,6 +647,10 @@ mod tests {
         let mut c = Csv::new();
         c.row(&["a,b", "plain", "q\"uote"]);
         assert_eq!(c.render(), "\"a,b\",plain,\"q\"\"uote\"\n");
+        // RFC 4180: \r-bearing fields must be quoted like \n-bearing ones.
+        let mut c = Csv::new();
+        c.row(&["cr\rhere", "crlf\r\n", "nl\nonly"]);
+        assert_eq!(c.render(), "\"cr\rhere\",\"crlf\r\n\",\"nl\nonly\"\n");
     }
 
     #[test]
@@ -286,5 +660,114 @@ mod tests {
         write_file(&path, "x\n").unwrap();
         assert_eq!(fs::read_to_string(&path).unwrap(), "x\n");
         fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn concurrent_sibling_writes_do_not_collide() {
+        // Regression: `with_extension("tmp")` gave `a.csv` and `a.json`
+        // the same `a.tmp`, so one writer could rename the other's
+        // half-written payload into place (or fail the rename outright).
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_io_race_{}", std::process::id()));
+        let csv = dir.join("a.csv");
+        let json = dir.join("a.json");
+        std::thread::scope(|s| {
+            let csv = &csv;
+            let json = &json;
+            s.spawn(move || {
+                for _ in 0..200 {
+                    write_file(csv, "kind=csv\n").unwrap();
+                }
+            });
+            s.spawn(move || {
+                for _ in 0..200 {
+                    write_file(json, "kind=json\n").unwrap();
+                }
+            });
+        });
+        assert_eq!(fs::read_to_string(&csv).unwrap(), "kind=csv\n");
+        assert_eq!(fs::read_to_string(&json).unwrap(), "kind=json\n");
+        // No stray tmp files left behind.
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn parse_scalars_and_containers() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("-2.5e2").unwrap(), Json::Num(-250.0));
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::parse("\"hi\"").unwrap(), Json::Str("hi".into()));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::obj());
+        let v = Json::parse("[1, [2, {\"k\": null}]]").unwrap();
+        assert_eq!(v.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parse_string_escapes() {
+        assert_eq!(
+            Json::parse(r#""a\"b\\c\nd\r\t\/\u0041""#).unwrap(),
+            Json::Str("a\"b\\c\nd\r\t/A".into())
+        );
+        // Surrogate pair → one astral char; raw multi-byte UTF-8 passes through.
+        assert_eq!(Json::parse(r#""\ud83d\ude00""#).unwrap(), Json::Str("😀".into()));
+        assert_eq!(Json::parse("\"héllo ☃\"").unwrap(), Json::Str("héllo ☃".into()));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "",
+            "   ",
+            "nul",
+            "truely",
+            "\"unterminated",
+            "\"bad \\q escape\"",
+            "\"lone \\ud83d surrogate\"",
+            "\"low \\ude00 first\"",
+            "\"\\u12g4\"",
+            "[1, 2",
+            "[1 2]",
+            "{\"k\" 1}",
+            "{\"k\": }",
+            "{k: 1}",
+            "1e999",
+            "--1",
+            "1 trailing",
+            "[1],",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?}");
+        }
+        // Control characters must be escaped inside strings.
+        assert!(Json::parse("\"a\u{0001}b\"").is_err());
+        // Deep nesting errors out instead of blowing the stack.
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+    }
+
+    #[test]
+    fn render_parse_round_trip() {
+        let mut j = Json::obj();
+        j.set("name", "tbl \"x\",\n1");
+        j.set("kj", 93.94);
+        j.set("count", 7.0);
+        j.set("ok", true);
+        j.set("none", Json::Null);
+        j.set("series", vec![1.0, 2.5, 3.0]);
+        let mut inner = Json::obj();
+        inner.set("nested", "véry ☃");
+        j.set("inner", inner);
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+        let compact = j.render_compact();
+        assert!(!compact.contains('\n'), "{compact}");
+        assert_eq!(Json::parse(&compact).unwrap(), j);
     }
 }

@@ -1,0 +1,142 @@
+//! Sharded-cluster integration: worker subprocesses receive their
+//! assignment batches *only* via the framed-JSONL wire protocol, and the
+//! merged report is byte-identical across `--shards` ∈ {1, N} and vs the
+//! in-process pool — the extended determinism contract of
+//! EXPERIMENTS.md §Cluster.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use energyucb::cluster::{ClusterConfig, InProcess, Leader, ScenarioSchedule, Subprocess};
+use energyucb::control::SessionCfg;
+
+/// The cargo-built CLI (leader and worker are the same binary). Tests
+/// must pass it explicitly: `current_exe()` inside a test harness would
+/// re-enter the *test* binary, not `energyucb`.
+const BIN: &str = env!("CARGO_BIN_EXE_energyucb");
+
+/// Short sessions keep the library-level cases cheap; the CLI-level
+/// acceptance test below runs full-length sessions.
+fn test_cfg(jobs: usize) -> ClusterConfig {
+    ClusterConfig {
+        jobs,
+        heartbeat_steps: 100,
+        session: SessionCfg { max_steps: 400, ..SessionCfg::default() },
+        ..ClusterConfig::default()
+    }
+}
+
+/// Every scenario preset, through real worker subprocesses, at several
+/// shard counts — all byte-identical to the unsharded in-process run.
+#[test]
+fn subprocess_shards_match_the_in_process_pool_byte_for_byte() {
+    for scenario in ["uniform", "mixed", "staggered", "hetero"] {
+        let schedule = ScenarioSchedule::preset(scenario, 21).unwrap();
+        let mut assignments = schedule.assignments(9).unwrap();
+        // Scale staggered budgets down 10x (150-600 steps), as the
+        // property suite does, to bound test wall-clock.
+        for a in &mut assignments {
+            a.max_steps = a.max_steps.map(|m| (m / 10).max(1));
+        }
+        let leader = Leader::new(test_cfg(2));
+        let baseline = leader.run(&assignments).unwrap();
+        let subprocess = Subprocess::with_program(BIN);
+        for shards in [1, 3, 9] {
+            let report = leader.run_sharded(&assignments, shards, &subprocess).unwrap();
+            assert_eq!(report.render(), baseline.render(), "{scenario} --shards {shards}");
+            assert_eq!(
+                report.to_csv().render(),
+                baseline.to_csv().render(),
+                "{scenario} --shards {shards}"
+            );
+        }
+        // The in-process transport honors the same contract at any
+        // shard count (shards > nodes collapses to one node per shard).
+        for shards in [2, 16] {
+            let report = leader.run_sharded(&assignments, shards, &InProcess).unwrap();
+            assert_eq!(report.render(), baseline.render(), "{scenario} in-process {shards}");
+        }
+    }
+}
+
+/// Worker-side validation surfaces as a leader error, not a hang or a
+/// panic: the worker answers with an `error` frame and exit code 1.
+#[test]
+fn worker_failures_become_leader_errors() {
+    let leader = Leader::new(test_cfg(1));
+    // Leader-side validation catches bad batches before any spawn.
+    let bad = vec![energyucb::cluster::NodeAssignment::new(0, "not-an-app", 1)];
+    assert!(leader.run_sharded(&bad, 1, &Subprocess::with_program(BIN)).is_err());
+    // A missing worker binary is a clean spawn error.
+    let gone = Subprocess::with_program("/nonexistent/energyucb");
+    let ok = ScenarioSchedule::preset("uniform", 3).unwrap().assignments(2).unwrap();
+    assert!(leader.run_sharded(&ok, 2, &gone).is_err());
+}
+
+/// Malformed stdin produces an `error` frame and a non-zero exit — the
+/// worker never panics on wire noise.
+#[test]
+fn cluster_worker_rejects_malformed_stdin_with_an_error_frame() {
+    use std::io::Write;
+    use std::process::Stdio;
+
+    for bad_input in [
+        "{\"frame\":\"assign\"\n",           // truncated JSON
+        "{\"frame\":\"event\",\"payload\":{}}\n", // leader-only frame
+        "{\"frame\":\"run\"}\n",             // run before config
+        "",                                       // empty stream
+    ] {
+        let mut child = Command::new(BIN)
+            .arg("cluster-worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap();
+        child.stdin.take().unwrap().write_all(bad_input.as_bytes()).unwrap();
+        let out = child.wait_with_output().unwrap();
+        assert!(!out.status.success(), "input {bad_input:?} should fail");
+        let text = String::from_utf8(out.stdout).unwrap();
+        assert!(text.contains("\"frame\":\"error\""), "input {bad_input:?} → {text}");
+    }
+}
+
+/// The acceptance bar: `energyucb cluster --scenario mixed --nodes 24`
+/// produces a byte-identical report and CSV for `--shards 1`, `--shards
+/// 3`, and the in-process pool, end to end through the real CLI.
+#[test]
+fn cli_mixed_24_nodes_is_byte_identical_across_shard_counts() {
+    let dir = std::env::temp_dir().join(format!("energyucb_shard_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |shards: Option<usize>| -> (String, String) {
+        let csv: PathBuf = dir.join(match shards {
+            Some(s) => format!("shards{s}.csv"),
+            None => "pool.csv".to_string(),
+        });
+        let mut cmd = Command::new(BIN);
+        cmd.args(["cluster", "--scenario", "mixed", "--nodes", "24", "--seed", "7", "--jobs", "2", "--csv"])
+            .arg(&csv);
+        if let Some(s) = shards {
+            cmd.args(["--shards", &s.to_string()]);
+        }
+        let out = cmd.output().expect("spawn energyucb");
+        assert!(
+            out.status.success(),
+            "exit {:?}\nstderr: {}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr)
+        );
+        (
+            String::from_utf8(out.stdout).unwrap(),
+            std::fs::read_to_string(&csv).unwrap(),
+        )
+    };
+    let (pool_text, pool_csv) = run(None);
+    assert!(!pool_text.is_empty() && !pool_csv.is_empty());
+    for shards in [1, 3] {
+        let (text, csv) = run(Some(shards));
+        assert_eq!(text, pool_text, "--shards {shards} stdout differs from the pool");
+        assert_eq!(csv, pool_csv, "--shards {shards} csv differs from the pool");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,292 @@
+//! Wire-codec properties: every cluster message round-trips through the
+//! JSONL frame grammar *exactly* (the sharded determinism contract rests
+//! on this), and the hand-rolled JSON reader rejects truncated and
+//! malformed frames with errors — never panics, never stack-overflows.
+
+use energyucb::bandit::energyucb::{EnergyUcbConfig, InitStrategy};
+use energyucb::cluster::{Frame, NodeAssignment, NodeResult, WireCodec, WorkerEvent};
+use energyucb::config::PolicyConfig;
+use energyucb::control::{RunMetrics, SessionCfg};
+use energyucb::sim::freq::SwitchCost;
+use energyucb::testutil::{forall_seeded, Gen};
+use energyucb::util::io::Json;
+use energyucb::util::Rng;
+
+/// Strings that stress JSON escaping: quotes, backslashes, control
+/// characters, CSV-hostile separators, and multi-byte UTF-8.
+fn gen_name(rng: &mut Rng) -> String {
+    const NAMES: [&str; 7] = [
+        "EnergyUCB[a 0.035]",
+        "quote\"inside",
+        "back\\slash",
+        "multi\nline\r\twhitespace",
+        "comma,separated",
+        "unicodé ☃ 中文 😀",
+        "",
+    ];
+    NAMES[rng.index(NAMES.len())].to_string()
+}
+
+fn gen_ucb(rng: &mut Rng) -> EnergyUcbConfig {
+    EnergyUcbConfig {
+        alpha: rng.uniform_range(0.0, 1.0),
+        lambda: rng.uniform_range(0.0, 0.1),
+        mu_init: rng.uniform_range(-1.0, 1.0),
+        prior_n: rng.uniform_range(0.0, 5.0),
+        init: if rng.chance(0.5) {
+            InitStrategy::Optimistic
+        } else {
+            InitStrategy::WarmupRoundRobin
+        },
+        discount: rng.uniform_range(0.5, 1.0),
+    }
+}
+
+struct PolicyGen;
+
+impl Gen for PolicyGen {
+    type Value = PolicyConfig;
+
+    fn generate(&self, rng: &mut Rng) -> PolicyConfig {
+        match rng.index(9) {
+            0 => PolicyConfig::EnergyUcb(gen_ucb(rng)),
+            1 => PolicyConfig::ConstrainedEnergyUcb { ucb: gen_ucb(rng), delta: rng.uniform() },
+            2 => PolicyConfig::Ucb1 { alpha: rng.uniform() },
+            3 => PolicyConfig::EpsilonGreedy {
+                eps0: rng.uniform(),
+                decay_c: rng.uniform_range(1.0, 50.0),
+            },
+            4 => PolicyConfig::EnergyTs,
+            5 => PolicyConfig::RoundRobin,
+            6 => PolicyConfig::Static { arm: rng.index(9) },
+            7 => PolicyConfig::RlPower,
+            _ => PolicyConfig::DrlCap {
+                mode: ["pretrain", "online", "cross"][rng.index(3)].to_string(),
+            },
+        }
+    }
+}
+
+struct MetricsGen;
+
+impl Gen for MetricsGen {
+    type Value = RunMetrics;
+
+    fn generate(&self, rng: &mut Rng) -> RunMetrics {
+        RunMetrics {
+            app: ["tealeaf", "clvleaf", "lbm", "weather"][rng.index(4)].to_string(),
+            policy: gen_name(rng),
+            gpu_energy_kj: rng.uniform_range(0.0, 200.0),
+            exec_time_s: rng.uniform_range(0.0, 500.0),
+            switches: rng.below(1 << 20),
+            switch_energy_j: rng.uniform_range(0.0, 10.0),
+            switch_time_s: rng.uniform_range(0.0, 1.0),
+            cumulative_regret: rng.uniform_range(-50.0, 50.0),
+            // Full-width u64 stresses the >2^53 string-integer path.
+            steps: rng.next_u64(),
+            completed: rng.uniform(),
+        }
+    }
+}
+
+struct AssignmentGen;
+
+impl Gen for AssignmentGen {
+    type Value = NodeAssignment;
+
+    fn generate(&self, rng: &mut Rng) -> NodeAssignment {
+        NodeAssignment {
+            node: rng.index(10_624),
+            app: ["tealeaf", "clvleaf", "lbm", "miniswp"][rng.index(4)].to_string(),
+            seed: rng.next_u64(),
+            max_steps: if rng.chance(0.5) { Some(rng.next_u64()) } else { None },
+            policy: if rng.chance(0.5) { Some(PolicyGen.generate(rng)) } else { None },
+            switch_cost: if rng.chance(0.5) {
+                Some(SwitchCost {
+                    latency_s: rng.uniform_range(0.0, 0.001),
+                    energy_j: rng.uniform_range(0.0, 2.0),
+                })
+            } else {
+                None
+            },
+        }
+    }
+}
+
+struct EventGen;
+
+impl Gen for EventGen {
+    type Value = WorkerEvent;
+
+    fn generate(&self, rng: &mut Rng) -> WorkerEvent {
+        if rng.chance(0.5) {
+            WorkerEvent::Progress {
+                node: rng.index(512),
+                completed: rng.uniform(),
+                energy_j: rng.uniform_range(0.0, 1e6),
+            }
+        } else {
+            let node = rng.index(512);
+            WorkerEvent::Done {
+                node,
+                result: NodeResult {
+                    node,
+                    app: "tealeaf".to_string(),
+                    metrics: MetricsGen.generate(rng),
+                },
+            }
+        }
+    }
+}
+
+#[test]
+fn node_assignments_round_trip_through_jsonl() {
+    forall_seeded(0xA551_617E, 300, AssignmentGen, |a| {
+        let line = Frame::Assign(a.clone()).encode_line();
+        if line.contains('\n') {
+            return false; // JSONL framing demands one line per frame
+        }
+        matches!(Frame::decode_line(&line), Ok(Frame::Assign(b)) if b == *a)
+    });
+}
+
+#[test]
+fn worker_events_round_trip_through_jsonl() {
+    forall_seeded(0xE7E27, 300, EventGen, |ev| {
+        let line = Frame::Event(ev.clone()).encode_line();
+        matches!(Frame::decode_line(&line), Ok(Frame::Event(e)) if e == *ev)
+    });
+}
+
+#[test]
+fn run_metrics_round_trip_exactly_in_both_render_forms() {
+    forall_seeded(0x3E721C5, 300, MetricsGen, |m| {
+        let j = m.to_wire();
+        let Ok(compact) = Json::parse(&j.render_compact()) else { return false };
+        let Ok(pretty) = Json::parse(&j.render()) else { return false };
+        RunMetrics::from_wire(&compact) == Ok(m.clone())
+            && RunMetrics::from_wire(&pretty) == Ok(m.clone())
+    });
+}
+
+#[test]
+fn config_frames_round_trip_with_every_policy() {
+    forall_seeded(0xC0F16, 200, PolicyGen, |p| {
+        let session = SessionCfg {
+            seed: 0xDEAD_BEEF_DEAD_BEEF, // > 2^53: string-integer path
+            max_steps: (1 << 60) + 7,
+            ..SessionCfg::default()
+        };
+        let f = Frame::Config {
+            jobs: 7,
+            heartbeat_steps: 1_234,
+            policy: p.clone(),
+            session,
+        };
+        matches!(Frame::decode_line(&f.encode_line()), Ok(g) if g == f)
+    });
+}
+
+#[test]
+fn every_truncated_frame_prefix_is_rejected() {
+    let mut rng = Rng::new(0x7A0);
+    for _ in 0..25 {
+        let a = AssignmentGen.generate(&mut rng);
+        let line = Frame::Assign(a).encode_line();
+        // A frame is a single top-level object, so no proper prefix can
+        // be a complete document: every one must error (not panic).
+        for cut in 0..line.len() {
+            if !line.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(
+                Frame::decode_line(&line[..cut]).is_err(),
+                "prefix of len {cut} decoded: {:?}",
+                &line[..cut]
+            );
+        }
+    }
+}
+
+#[test]
+fn malformed_frames_are_rejected_without_panicking() {
+    for bad in [
+        "",
+        "   ",
+        "null",
+        "42",
+        "\"frame\"",
+        "[{\"frame\":\"run\"}]",
+        "{\"frame\":\"run\"}{\"frame\":\"run\"}",
+        "{\"frame\":\"assign\"}",
+        "{\"frame\":\"assign\",\"assignment\":{\"node\":\"zero\"}}",
+        "{\"frame\":\"event\",\"payload\":{\"event\":\"explode\"}}",
+        "{\"frame\":\"config\",\"jobs\":2}",
+        "{\"frame\":\"end\",\"nodes\":-3}",
+        "{\"frame\":\"end\",\"nodes\":2.5}",
+        "{\"frame\":\"end\",\"nodes\":1e99}",
+    ] {
+        assert!(Frame::decode_line(bad).is_err(), "{bad:?}");
+    }
+}
+
+#[test]
+fn json_reader_survives_random_noise_and_deep_nesting() {
+    let alphabet: Vec<char> =
+        "{}[]\",:0123456789.eE+-nulltruefalse\\ é☃".chars().collect();
+    let mut rng = Rng::new(0xF422);
+    for _ in 0..2_000 {
+        let len = rng.index(80);
+        let s: String = (0..len).map(|_| alphabet[rng.index(alphabet.len())]).collect();
+        let _ = Json::parse(&s); // must return (Ok or Err), never panic
+        let _ = Frame::decode_line(&s);
+    }
+    // Pathological nesting errors out instead of blowing the stack.
+    for deep in ["[", "{\"k\":[", "[{\"k\":"] {
+        let bomb = deep.repeat(50_000);
+        assert!(Json::parse(&bomb).is_err());
+    }
+}
+
+/// Random JSON trees round-trip through both renderers — the substrate
+/// guarantee every codec above builds on.
+struct JsonGen {
+    depth: usize,
+}
+
+fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+    let variants = if depth == 0 { 4 } else { 6 };
+    match rng.index(variants) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => {
+            let x = rng.uniform_range(-1e9, 1e9);
+            Json::Num(if rng.chance(0.5) { x.trunc() } else { x })
+        }
+        3 => Json::Str(gen_name(rng)),
+        4 => Json::Arr((0..rng.index(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+        _ => {
+            let mut obj = Json::obj();
+            for i in 0..rng.index(4) {
+                obj.set(format!("k{i}"), gen_json(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+impl Gen for JsonGen {
+    type Value = Json;
+
+    fn generate(&self, rng: &mut Rng) -> Json {
+        gen_json(rng, self.depth)
+    }
+}
+
+#[test]
+fn json_trees_round_trip_through_both_renderers() {
+    forall_seeded(0x150E57, 400, JsonGen { depth: 3 }, |j| {
+        Json::parse(&j.render()).as_ref() == Ok(j)
+            && Json::parse(&j.render_compact()).as_ref() == Ok(j)
+    });
+}
