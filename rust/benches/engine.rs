@@ -1,0 +1,103 @@
+//! Batch-policy stepping throughput: SoA-batched vs scalar-loop across
+//! B ∈ {1, 32, 256, 4096} — the hot-loop comparison behind the
+//! batch-native policy core (EXPERIMENTS.md §Engine / §Perf).
+//!
+//! Three shapes per batch size:
+//!   * `native`  — the bit-pinned EnergyUCB fleet step (`FleetState`
+//!     grids, reused `StepScratch` buffers),
+//!   * `batched` — the generic runner driving the SoA `BatchEnergyUcb`
+//!     (same arithmetic, policy-owned grids),
+//!   * `scalar-loop` — the generic runner driving B scalar `EnergyUcb`
+//!     instances through the `Scalar` bridge (the f64 per-env baseline
+//!     the SoA path is measured against).
+
+use energyucb::bandit::batch::{BatchEnergyUcb, BatchPolicy, Scalar};
+use energyucb::bandit::{EnergyUcb, EnergyUcbConfig};
+use energyucb::fleet::{native, policy_step, FleetHyper, FleetParams, FleetState, StepScratch};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::util::bench::{black_box, Bench};
+use energyucb::util::Rng;
+use energyucb::workload::calibration;
+
+fn params_for(batch: usize) -> FleetParams {
+    let freqs = FreqDomain::aurora();
+    let apps: Vec<_> = calibration::all_apps();
+    let assigned: Vec<&_> = apps.iter().cycle().take(batch).collect();
+    FleetParams::from_apps(&assigned, &freqs, 0.01)
+}
+
+fn main() {
+    let b = Bench::default();
+    let hyper = FleetHyper::default();
+    let k = 9usize;
+
+    for batch in [1usize, 32, 256, 4096] {
+        let params = params_for(batch);
+
+        // Bit-pinned native EnergyUCB step (state-grid path).
+        {
+            let mut state = FleetState::fresh(batch, k);
+            let mut scratch = StepScratch::new(batch);
+            let mut noise = vec![0.0f32; batch];
+            let mut rng = Rng::new(1);
+            let mut step_idx = 0u64;
+            b.case(&format!("native/B={batch}"), batch as f64, || {
+                native::step_noise_into(&params, step_idx, &mut rng, &mut noise);
+                native::native_step_into(&mut state, &params, &hyper, &noise, &mut scratch);
+                black_box(&scratch.sel);
+                step_idx += 1;
+                if state.all_done() {
+                    state = FleetState::fresh(batch, k);
+                    step_idx = 0;
+                }
+            });
+        }
+
+        // Generic runner + SoA batch policy (identical trajectories).
+        {
+            let mut state = FleetState::fresh(batch, k);
+            let mut policy = BatchEnergyUcb::with_initial_arm(batch, k, hyper, k - 1);
+            let mut scratch = StepScratch::new(batch);
+            let mut noise = vec![0.0f32; batch];
+            let mut rng = Rng::new(1);
+            let mut step_idx = 0u64;
+            b.case(&format!("batched/B={batch}"), batch as f64, || {
+                native::step_noise_into(&params, step_idx, &mut rng, &mut noise);
+                policy_step(&mut state, &params, &mut policy, &noise, &mut scratch);
+                black_box(&scratch.sel);
+                step_idx += 1;
+                if state.all_done() {
+                    state = FleetState::fresh(batch, k);
+                    policy.reset();
+                    step_idx = 0;
+                }
+            });
+        }
+
+        // Generic runner + scalar loop over the bridge (the baseline the
+        // SoA iteration is measured against).
+        {
+            let mut state = FleetState::fresh(batch, k);
+            let mut policy = Scalar::new(
+                (0..batch)
+                    .map(|_| EnergyUcb::new(k, EnergyUcbConfig::default()))
+                    .collect::<Vec<_>>(),
+            );
+            let mut scratch = StepScratch::new(batch);
+            let mut noise = vec![0.0f32; batch];
+            let mut rng = Rng::new(1);
+            let mut step_idx = 0u64;
+            b.case(&format!("scalar-loop/B={batch}"), batch as f64, || {
+                native::step_noise_into(&params, step_idx, &mut rng, &mut noise);
+                policy_step(&mut state, &params, &mut policy, &noise, &mut scratch);
+                black_box(&scratch.sel);
+                step_idx += 1;
+                if state.all_done() {
+                    state = FleetState::fresh(batch, k);
+                    policy.reset();
+                    step_idx = 0;
+                }
+            });
+        }
+    }
+}

@@ -21,15 +21,18 @@ fn main() {
     let b = Bench::default();
     let hyper = FleetHyper::default();
 
-    println!("# native fleet step (env-steps/s)");
+    println!("# native fleet step (env-steps/s; reused noise/step buffers)");
     for batch in [64usize, 256, 1024] {
         let params = params_for(batch);
         let mut state = FleetState::fresh(batch, 9);
+        let mut scratch = energyucb::fleet::StepScratch::new(batch);
+        let mut noise = vec![0.0f32; batch];
         let mut rng = Rng::new(1);
         let mut step_idx = 0u64;
         b.case(&format!("native/B={batch}"), batch as f64, || {
-            let noise = native::step_noise(&params, step_idx, &mut rng);
-            black_box(native::native_step(&mut state, &params, &hyper, &noise));
+            native::step_noise_into(&params, step_idx, &mut rng, &mut noise);
+            native::native_step_into(&mut state, &params, &hyper, &noise, &mut scratch);
+            black_box(&scratch.sel);
             step_idx += 1;
             if state.all_done() {
                 state = FleetState::fresh(batch, 9);

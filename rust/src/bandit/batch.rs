@@ -1,0 +1,943 @@
+//! Batch-native policy core: B independent bandit environments stepped
+//! through one SoA (structure-of-arrays) decision surface.
+//!
+//! This module is the **single source of decision arithmetic** for all
+//! three execution tiers:
+//!
+//! * the scalar session path (`control::session`) drives a B = 1
+//!   [`Scalar`] bridge,
+//! * the native fleet (`fleet::native`) calls [`saucb_select_into`] /
+//!   [`grid_update_batch`] directly on the `FleetState` grids (the AOT
+//!   artifact state contract), and
+//! * the generic fleet runner (`fleet::policy`) drives any
+//!   [`BatchPolicy`] — native SoA implementations where they exist, the
+//!   [`Scalar`] bridge everywhere else.
+//!
+//! ## Determinism contract (EXPERIMENTS.md §Engine)
+//!
+//! Grids are row-major `(B, K)` slices. Argmax ties break to the first
+//! index (strict `>` scan from arm 0). The SA-UCB family
+//! ([`BatchEnergyUcb`], [`BatchConstrainedEnergyUcb`]) computes in f32
+//! with exactly the operation order of the python reference
+//! (`python/compile/kernels/ref.py`), so fleet trajectories stay
+//! bit-identical to the exported HLO artifacts. The remaining native
+//! batch policies ([`BatchUcb1`], [`BatchSwUcb`], [`BatchEpsilonGreedy`])
+//! compute in f64 with exactly their scalar counterpart's operation
+//! order, so a B = 1 batch reproduces the scalar trajectory bit-for-bit.
+//! Rewards and progress cross the trait boundary as f64 (an f32-core
+//! policy casts back — exact, because the fleet synthesizes rewards in
+//! f32 and f32→f64→f32 round-trips losslessly); feasibility and
+//! active masks are f32 `{0, 1}`, matching the artifact layout.
+
+use std::collections::VecDeque;
+
+use super::energyucb::EnergyUcbConfig;
+use super::Policy;
+use crate::util::Rng;
+
+/// Effectively -inf for f32 masking without NaN risk (matches the python
+/// reference's `NEG_LARGE`).
+pub const NEG_LARGE: f32 = -3.0e38;
+
+/// SA-UCB hyper-parameters in the f32 artifact layout (the same values as
+/// [`EnergyUcbConfig`], narrowed). Re-exported as `fleet::FleetHyper`.
+#[derive(Clone, Copy, Debug)]
+pub struct SaUcbHyper {
+    pub alpha: f32,
+    pub lambda: f32,
+    pub mu_init: f32,
+    pub prior_n: f32,
+}
+
+impl From<&EnergyUcbConfig> for SaUcbHyper {
+    fn from(c: &EnergyUcbConfig) -> SaUcbHyper {
+        SaUcbHyper {
+            alpha: c.alpha as f32,
+            lambda: c.lambda as f32,
+            mu_init: c.mu_init as f32,
+            prior_n: c.prior_n as f32,
+        }
+    }
+}
+
+impl Default for SaUcbHyper {
+    fn default() -> Self {
+        (&EnergyUcbConfig::default()).into()
+    }
+}
+
+/// A batch of frequency-selection policies advanced in lockstep: one
+/// decision per environment per step, over caller-provided buffers — the
+/// hot loop performs no allocations.
+///
+/// `feasible` is the row-major `(B, K)` QoS mask (`1.0` = allowed). The
+/// SA-UCB family honors it exactly (masked arms get [`NEG_LARGE`]); the
+/// other native batch policies restrict their scans to feasible arms
+/// (identical to their scalar behavior when the mask is all-ones); the
+/// [`Scalar`] bridge ignores it — wrapped scalar policies own their
+/// feasibility (e.g. `ConstrainedEnergyUcb`).
+pub trait BatchPolicy: Send {
+    /// Display name ("EnergyUCB", "UCB1", "Mixed[...]", ...).
+    fn name(&self) -> String;
+
+    /// Number of environments.
+    fn b(&self) -> usize;
+
+    /// Number of arms.
+    fn k(&self) -> usize;
+
+    /// Choose one arm per environment for decision step `t` (1-based),
+    /// writing into `sel` (length B).
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]);
+
+    /// Feed back the observed rewards: `reward[e]` / `progress[e]` were
+    /// observed under arm `sel[e]`. `active[e]` ∈ {0, 1} freezes finished
+    /// environments (their stats must not move).
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]);
+
+    /// Reset all learned state (fresh run, byte-for-byte).
+    fn reset(&mut self);
+}
+
+/// SA-UCB index + masked argmax over SoA grids — the paper's Eq. 5 in f32
+/// with exactly the operation order of `kernels/ref.py::saucb_index_ref`
+/// (the bit-level contract with the exported HLO artifacts).
+///
+/// `prev[e] = -1` means "no previous arm": every arm then carries the
+/// penalty λ, a uniform shift that cannot change the argmax — the scalar
+/// `prev = None` semantics.
+#[allow(clippy::too_many_arguments)]
+pub fn saucb_select_into(
+    n: &[f32],
+    mean: &[f32],
+    prev: &[i32],
+    t: f32,
+    feasible: &[f32],
+    hyper: &SaUcbHyper,
+    k: usize,
+    sel: &mut [i32],
+) {
+    let b = prev.len();
+    debug_assert_eq!(n.len(), b * k);
+    debug_assert_eq!(mean.len(), b * k);
+    debug_assert_eq!(feasible.len(), b * k);
+    debug_assert_eq!(sel.len(), b);
+    let ln_t = t.max(2.0).ln();
+    for e in 0..b {
+        let row = e * k;
+        let mut best_arm = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for i in 0..k {
+            let ni = n[row + i];
+            let denom = hyper.prior_n + ni;
+            let mu_hat = if denom > 0.0 {
+                (hyper.prior_n * hyper.mu_init + ni * mean[row + i]) / denom.max(1e-12)
+            } else {
+                hyper.mu_init
+            };
+            let bonus = hyper.alpha * (ln_t / ni.max(1.0)).sqrt();
+            let penalty = if i as i32 != prev[e] { hyper.lambda } else { 0.0 };
+            let mut v = mu_hat + bonus - penalty;
+            if feasible[row + i] <= 0.0 {
+                v = NEG_LARGE;
+            }
+            if v > best_v {
+                best_v = v;
+                best_arm = i;
+            }
+        }
+        sel[e] = best_arm as i32;
+    }
+}
+
+/// Incremental-mean grid update (Algorithm 1 line 12, vectorized): for each
+/// environment, fold `reward[e]` into the selected arm's `(n, mean)` cell
+/// and advance `prev` — all masked by `active`. f32, exactly the operation
+/// order of `kernels/ref.py::fleet_step_ref`'s update block. Rewards arrive
+/// as f64 and are narrowed; callers on the f32 fleet path synthesized them
+/// in f32, so the narrowing is exact.
+pub fn grid_update_batch(
+    n: &mut [f32],
+    mean: &mut [f32],
+    prev: &mut [i32],
+    sel: &[i32],
+    reward: &[f64],
+    active: &[f32],
+    k: usize,
+) {
+    debug_assert_eq!(sel.len(), prev.len());
+    debug_assert_eq!(reward.len(), prev.len());
+    debug_assert_eq!(active.len(), prev.len());
+    for e in 0..sel.len() {
+        let a = active[e];
+        let s = sel[e] as usize;
+        let idx = e * k + s;
+        let r = reward[e] as f32;
+        let n_sel = n[idx] + a;
+        n[idx] = n_sel;
+        let delta = (r - mean[idx]) / n_sel.max(1.0) * a;
+        mean[idx] += delta;
+        if a > 0.0 {
+            prev[e] = sel[e];
+        }
+    }
+}
+
+/// Batched EnergyUCB (SA-UCB + optimistic prior) over owned SoA grids —
+/// the fleet's native controller. f32, bit-identical to
+/// `fleet::native::native_step`'s decision path (both call the same core
+/// functions). Supports the fleet contract: optimistic initialization, no
+/// discounting (the scalar `EnergyUcb` covers the warmup/discount
+/// ablations; `PolicyConfig::build_batch` bridges those configurations).
+#[derive(Clone, Debug)]
+pub struct BatchEnergyUcb {
+    hyper: SaUcbHyper,
+    b: usize,
+    k: usize,
+    n: Vec<f32>,
+    mean: Vec<f32>,
+    prev: Vec<i32>,
+    init_prev: i32,
+}
+
+impl BatchEnergyUcb {
+    /// Scalar semantics: no previous arm at start (`prev = -1`).
+    pub fn new(b: usize, k: usize, hyper: SaUcbHyper) -> BatchEnergyUcb {
+        Self::with_init_prev(b, k, hyper, -1)
+    }
+
+    /// Fleet semantics: every environment starts pinned to `arm` (the
+    /// system default frequency, arm K-1 on Aurora), so the first
+    /// departure from it is penalized — matching `FleetState::fresh`.
+    pub fn with_initial_arm(b: usize, k: usize, hyper: SaUcbHyper, arm: usize) -> BatchEnergyUcb {
+        assert!(arm < k);
+        Self::with_init_prev(b, k, hyper, arm as i32)
+    }
+
+    fn with_init_prev(b: usize, k: usize, hyper: SaUcbHyper, init_prev: i32) -> BatchEnergyUcb {
+        assert!(b > 0 && k > 0);
+        BatchEnergyUcb {
+            hyper,
+            b,
+            k,
+            n: vec![0.0; b * k],
+            mean: vec![0.0; b * k],
+            prev: vec![init_prev; b],
+            init_prev,
+        }
+    }
+
+    /// Pull-count grid, row-major (B, K).
+    pub fn counts(&self) -> &[f32] {
+        &self.n
+    }
+
+    /// Empirical-mean grid, row-major (B, K).
+    pub fn means(&self) -> &[f32] {
+        &self.mean
+    }
+
+    /// Previous arm per environment (-1 = none yet).
+    pub fn prev(&self) -> &[i32] {
+        &self.prev
+    }
+}
+
+impl BatchPolicy for BatchEnergyUcb {
+    fn name(&self) -> String {
+        if self.hyper.lambda == 0.0 {
+            "EnergyUCB w/o Penalty".into()
+        } else {
+            "EnergyUCB".into()
+        }
+    }
+
+    fn b(&self) -> usize {
+        self.b
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        saucb_select_into(
+            &self.n,
+            &self.mean,
+            &self.prev,
+            t as f32,
+            feasible,
+            &self.hyper,
+            self.k,
+            sel,
+        );
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
+        grid_update_batch(&mut self.n, &mut self.mean, &mut self.prev, sel, reward, active, self.k);
+    }
+
+    fn reset(&mut self) {
+        self.n.iter_mut().for_each(|x| *x = 0.0);
+        self.mean.iter_mut().for_each(|x| *x = 0.0);
+        self.prev.iter_mut().for_each(|x| *x = self.init_prev);
+    }
+}
+
+/// Batched QoS-constrained EnergyUCB (§3.3): per-environment progress
+/// estimates restrict the SA-UCB argmax to the estimated-feasible set,
+/// intersected with the caller's mask. Mirrors the scalar
+/// `ConstrainedEnergyUcb` semantics — measurement dwell on unmeasured
+/// previous arms, switch-tainted progress samples discarded — in the f32
+/// core (estimates in f32; the scalar variant remains the f64 reference).
+#[derive(Clone, Debug)]
+pub struct BatchConstrainedEnergyUcb {
+    inner: BatchEnergyUcb,
+    delta: f32,
+    /// Running mean of clean per-interval progress, row-major (B, K).
+    p_hat: Vec<f32>,
+    p_count: Vec<f32>,
+    /// Combined caller × estimated feasibility, rebuilt each select.
+    mask: Vec<f32>,
+}
+
+impl BatchConstrainedEnergyUcb {
+    pub fn new(b: usize, k: usize, hyper: SaUcbHyper, delta: f32) -> BatchConstrainedEnergyUcb {
+        assert!((0.0..1.0).contains(&delta), "delta must be in [0,1)");
+        BatchConstrainedEnergyUcb {
+            inner: BatchEnergyUcb::new(b, k, hyper),
+            delta,
+            p_hat: vec![0.0; b * k],
+            p_count: vec![0.0; b * k],
+            mask: vec![1.0; b * k],
+        }
+    }
+
+    /// Fleet-semantics constructor (see [`BatchEnergyUcb::with_initial_arm`]).
+    pub fn with_initial_arm(
+        b: usize,
+        k: usize,
+        hyper: SaUcbHyper,
+        delta: f32,
+        arm: usize,
+    ) -> BatchConstrainedEnergyUcb {
+        let mut p = Self::new(b, k, hyper, delta);
+        p.inner = BatchEnergyUcb::with_initial_arm(b, k, hyper, arm);
+        p
+    }
+
+    /// Estimated-feasible mask entry for (env, arm): optimistic until both
+    /// the arm and the max-frequency arm have clean progress samples.
+    fn estimated_feasible(&self, e: usize, i: usize) -> bool {
+        let k = self.inner.k;
+        let row = e * k;
+        let max_arm = k - 1;
+        if i == max_arm {
+            return true; // f_max has zero slowdown by definition
+        }
+        if self.p_count[row + i] <= 0.0 || self.p_count[row + max_arm] <= 0.0 {
+            return true; // optimism: unknown arms stay feasible
+        }
+        let p_max = self.p_hat[row + max_arm];
+        if p_max <= 0.0 {
+            return true;
+        }
+        1.0 - self.p_hat[row + i] / p_max <= self.delta
+    }
+}
+
+impl BatchPolicy for BatchConstrainedEnergyUcb {
+    fn name(&self) -> String {
+        format!("Constrained EnergyUCB (δ={})", self.delta)
+    }
+
+    fn b(&self) -> usize {
+        self.inner.b
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        let (b, k) = (self.inner.b, self.inner.k);
+        for e in 0..b {
+            for i in 0..k {
+                let idx = e * k + i;
+                self.mask[idx] =
+                    if self.estimated_feasible(e, i) { feasible[idx] } else { 0.0 };
+            }
+        }
+        saucb_select_into(
+            &self.inner.n,
+            &self.inner.mean,
+            &self.inner.prev,
+            t as f32,
+            &self.mask,
+            &self.inner.hyper,
+            k,
+            sel,
+        );
+        // Measurement dwell: a just-switched-to arm has no clean progress
+        // sample yet — hold it one more interval so its slowdown estimate
+        // comes from a steady-state reading.
+        for e in 0..b {
+            let p = self.inner.prev[e];
+            if p >= 0 && self.p_count[e * k + p as usize] <= 0.0 {
+                sel[e] = p;
+            }
+        }
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]) {
+        let k = self.inner.k;
+        // Progress estimates first (they need the pre-update `prev` to tell
+        // clean steady-state samples from switch-tainted ones).
+        for e in 0..sel.len() {
+            let clean = self.inner.prev[e] == sel[e];
+            let prog = progress[e] as f32;
+            if active[e] > 0.0 && clean && prog > 0.0 {
+                let idx = e * k + sel[e] as usize;
+                self.p_count[idx] += 1.0;
+                self.p_hat[idx] += (prog - self.p_hat[idx]) / self.p_count[idx];
+            }
+        }
+        self.inner.update_batch(sel, reward, progress, active);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.p_hat.iter_mut().for_each(|x| *x = 0.0);
+        self.p_count.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Batched UCB1 — f64, exactly the scalar [`super::Ucb1`] arithmetic per
+/// environment, so a B = 1 batch reproduces the scalar trajectory
+/// bit-for-bit (the conformance suite pins this).
+#[derive(Clone, Debug)]
+pub struct BatchUcb1 {
+    alpha: f64,
+    b: usize,
+    k: usize,
+    n: Vec<u64>,
+    mean: Vec<f64>,
+}
+
+impl BatchUcb1 {
+    pub fn new(b: usize, k: usize, alpha: f64) -> BatchUcb1 {
+        assert!(b > 0 && k > 0 && alpha >= 0.0);
+        BatchUcb1 { alpha, b, k, n: vec![0; b * k], mean: vec![0.0; b * k] }
+    }
+}
+
+impl BatchPolicy for BatchUcb1 {
+    fn name(&self) -> String {
+        "UCB1".into()
+    }
+
+    fn b(&self) -> usize {
+        self.b
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        let k = self.k;
+        for e in 0..self.b {
+            let row = e * k;
+            // Play each (feasible) arm once first, in index order.
+            if let Some(i) = (0..k).find(|&i| feasible[row + i] > 0.0 && self.n[row + i] == 0) {
+                sel[e] = i as i32;
+                continue;
+            }
+            let mut best = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for i in 0..k {
+                if feasible[row + i] <= 0.0 {
+                    continue;
+                }
+                let v = self.mean[row + i]
+                    + self.alpha * ((t.max(2) as f64).ln() / self.n[row + i] as f64).sqrt();
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            sel[e] = best as i32;
+        }
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
+        for e in 0..sel.len() {
+            if active[e] <= 0.0 {
+                continue;
+            }
+            let idx = e * self.k + sel[e] as usize;
+            self.n[idx] += 1;
+            self.mean[idx] += (reward[e] - self.mean[idx]) / self.n[idx] as f64;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.mean.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+/// Batched Sliding-Window UCB — f64, exactly the scalar
+/// [`super::SlidingWindowUcb`] arithmetic per environment (per-env windows,
+/// windowed sums kept in sync).
+#[derive(Clone, Debug)]
+pub struct BatchSwUcb {
+    alpha: f64,
+    lambda: f64,
+    window: usize,
+    b: usize,
+    k: usize,
+    hist: Vec<VecDeque<(usize, f64)>>,
+    sum: Vec<f64>,
+    n: Vec<u64>,
+    prev: Vec<i32>,
+}
+
+impl BatchSwUcb {
+    pub fn new(b: usize, k: usize, alpha: f64, lambda: f64, window: usize) -> BatchSwUcb {
+        assert!(b > 0 && k > 0 && window > 0);
+        BatchSwUcb {
+            alpha,
+            lambda,
+            window,
+            b,
+            k,
+            hist: (0..b).map(|_| VecDeque::with_capacity(window + 1)).collect(),
+            sum: vec![0.0; b * k],
+            n: vec![0; b * k],
+            prev: vec![-1; b],
+        }
+    }
+}
+
+impl BatchPolicy for BatchSwUcb {
+    fn name(&self) -> String {
+        format!("SW-UCB(w={})", self.window)
+    }
+
+    fn b(&self) -> usize {
+        self.b
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        let k = self.k;
+        let horizon = (t as f64).min(self.window as f64).max(2.0);
+        for e in 0..self.b {
+            let row = e * k;
+            let mut best = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for i in 0..k {
+                if feasible[row + i] <= 0.0 {
+                    continue;
+                }
+                let ni = self.n[row + i];
+                let bonus = self.alpha * (horizon.ln() / (ni.max(1) as f64)).sqrt();
+                // Optimistic (mean 0) when unseen inside the window.
+                let mean = if ni > 0 { self.sum[row + i] / ni as f64 } else { 0.0 };
+                let penalty = if self.prev[e] >= 0 && self.prev[e] != i as i32 {
+                    self.lambda
+                } else {
+                    0.0
+                };
+                let v = mean + bonus - penalty;
+                if v > best_v {
+                    best_v = v;
+                    best = i;
+                }
+            }
+            sel[e] = best as i32;
+        }
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
+        let k = self.k;
+        for e in 0..sel.len() {
+            if active[e] <= 0.0 {
+                continue;
+            }
+            let arm = sel[e] as usize;
+            let r = reward[e];
+            self.hist[e].push_back((arm, r));
+            self.sum[e * k + arm] += r;
+            self.n[e * k + arm] += 1;
+            if self.hist[e].len() > self.window {
+                let (old_arm, old_r) = self.hist[e].pop_front().unwrap();
+                self.sum[e * k + old_arm] -= old_r;
+                self.n[e * k + old_arm] -= 1;
+            }
+            self.prev[e] = sel[e];
+        }
+    }
+
+    fn reset(&mut self) {
+        self.hist.iter_mut().for_each(VecDeque::clear);
+        self.sum.iter_mut().for_each(|x| *x = 0.0);
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.prev.iter_mut().for_each(|x| *x = -1);
+    }
+}
+
+/// Batched ε-greedy — f64 + one RNG stream per environment (env `e` is
+/// seeded `seed0 + e`, so env 0 of a B = 1 batch reproduces the scalar
+/// policy seeded `seed0` bit-for-bit, including RNG consumption order).
+#[derive(Clone, Debug)]
+pub struct BatchEpsilonGreedy {
+    eps0: f64,
+    decay_c: f64,
+    b: usize,
+    k: usize,
+    n: Vec<u64>,
+    mean: Vec<f64>,
+    rngs: Vec<Rng>,
+    seed0: u64,
+}
+
+impl BatchEpsilonGreedy {
+    pub fn new(b: usize, k: usize, eps0: f64, decay_c: f64, seed0: u64) -> BatchEpsilonGreedy {
+        assert!(b > 0 && k > 0);
+        assert!((0.0..=1.0).contains(&eps0));
+        BatchEpsilonGreedy {
+            eps0,
+            decay_c,
+            b,
+            k,
+            n: vec![0; b * k],
+            mean: vec![0.0; b * k],
+            rngs: (0..b).map(|e| Rng::new(seed0.wrapping_add(e as u64))).collect(),
+            seed0,
+        }
+    }
+
+    fn epsilon_at(&self, t: u64) -> f64 {
+        if self.decay_c <= 0.0 {
+            self.eps0
+        } else {
+            self.eps0.min(self.decay_c / t.max(1) as f64)
+        }
+    }
+}
+
+impl BatchPolicy for BatchEpsilonGreedy {
+    fn name(&self) -> String {
+        "ε-greedy".into()
+    }
+
+    fn b(&self) -> usize {
+        self.b
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        let k = self.k;
+        let eps = self.epsilon_at(t);
+        for e in 0..self.b {
+            let row = e * k;
+            // One sample per (feasible) arm before going greedy.
+            if let Some(i) = (0..k).find(|&i| feasible[row + i] > 0.0 && self.n[row + i] == 0) {
+                sel[e] = i as i32;
+                continue;
+            }
+            let n_feasible = (0..k).filter(|&i| feasible[row + i] > 0.0).count();
+            if n_feasible == 0 {
+                sel[e] = 0;
+                continue;
+            }
+            if self.rngs[e].chance(eps) {
+                // Uniform over the feasible arms with a single index draw
+                // (identical RNG consumption to the scalar `index(k)` when
+                // the mask is all-ones).
+                let mut j = self.rngs[e].index(n_feasible);
+                let mut pick = 0usize;
+                for i in 0..k {
+                    if feasible[row + i] > 0.0 {
+                        if j == 0 {
+                            pick = i;
+                            break;
+                        }
+                        j -= 1;
+                    }
+                }
+                sel[e] = pick as i32;
+            } else {
+                let mut best = 0usize;
+                let mut best_v = f64::NEG_INFINITY;
+                for i in 0..k {
+                    if feasible[row + i] <= 0.0 {
+                        continue;
+                    }
+                    if self.mean[row + i] > best_v {
+                        best_v = self.mean[row + i];
+                        best = i;
+                    }
+                }
+                sel[e] = best as i32;
+            }
+        }
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
+        for e in 0..sel.len() {
+            if active[e] <= 0.0 {
+                continue;
+            }
+            let idx = e * self.k + sel[e] as usize;
+            self.n[idx] += 1;
+            self.mean[idx] += (reward[e] - self.mean[idx]) / self.n[idx] as f64;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.n.iter_mut().for_each(|x| *x = 0);
+        self.mean.iter_mut().for_each(|x| *x = 0.0);
+        for (e, rng) in self.rngs.iter_mut().enumerate() {
+            *rng = Rng::new(self.seed0.wrapping_add(e as u64));
+        }
+    }
+}
+
+/// Bridge: run any scalar [`Policy`] — or a heterogeneous mix of them —
+/// as a batch, one policy instance per environment. This is what makes
+/// *every* policy (Thompson, static, round-robin, the RL baselines,
+/// ablation configurations) fleet-runnable, and what mixed-policy fleets
+/// are built from.
+///
+/// The caller's feasibility mask is ignored: scalar policies own their
+/// feasibility (e.g. `ConstrainedEnergyUcb`). Frozen environments
+/// (`active = 0`) still select (selection is discarded by the engine) but
+/// never update.
+pub struct Scalar<P: Policy> {
+    envs: Vec<P>,
+    k: usize,
+}
+
+impl<P: Policy> Scalar<P> {
+    /// One scalar policy per environment; all must share the arm count.
+    pub fn new(envs: Vec<P>) -> Scalar<P> {
+        assert!(!envs.is_empty(), "Scalar bridge needs at least one environment");
+        let k = envs[0].k();
+        assert!(envs.iter().all(|p| p.k() == k), "Scalar bridge: mixed arm counts");
+        Scalar { envs, k }
+    }
+
+    pub fn env(&self, e: usize) -> &P {
+        &self.envs[e]
+    }
+
+    pub fn env_mut(&mut self, e: usize) -> &mut P {
+        &mut self.envs[e]
+    }
+
+    pub fn into_inner(self) -> Vec<P> {
+        self.envs
+    }
+}
+
+impl<P: Policy> BatchPolicy for Scalar<P> {
+    fn name(&self) -> String {
+        let first = self.envs[0].name();
+        if self.envs.iter().all(|p| p.name() == first) {
+            return first;
+        }
+        let mut names: Vec<String> = Vec::new();
+        for p in &self.envs {
+            let n = p.name();
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+        format!("Mixed[{}]", names.join(" + "))
+    }
+
+    fn b(&self) -> usize {
+        self.envs.len()
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select_into(&mut self, t: u64, _feasible: &[f32], sel: &mut [i32]) {
+        for (e, p) in self.envs.iter_mut().enumerate() {
+            sel[e] = p.select(t) as i32;
+        }
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]) {
+        for (e, p) in self.envs.iter_mut().enumerate() {
+            if active[e] > 0.0 {
+                p.update(sel[e] as usize, reward[e], progress[e]);
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.envs.iter_mut().for_each(|p| p.reset());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::{RoundRobin, StaticPolicy, Ucb1};
+
+    fn ones(b: usize, k: usize) -> Vec<f32> {
+        vec![1.0; b * k]
+    }
+
+    /// Drive a batch policy for `steps` with rewards r(arm) = means[arm]
+    /// (noise-free); returns the selection history, step-major.
+    fn drive(
+        p: &mut dyn BatchPolicy,
+        means: &[f64],
+        steps: u64,
+        feasible: &[f32],
+    ) -> Vec<Vec<i32>> {
+        let b = p.b();
+        let mut sel = vec![0i32; b];
+        let mut reward = vec![0.0f64; b];
+        let progress = vec![1e-3f64; b];
+        let active = vec![1.0f32; b];
+        let mut hist = Vec::new();
+        for t in 1..=steps {
+            p.select_into(t, feasible, &mut sel);
+            for e in 0..b {
+                reward[e] = means[sel[e] as usize];
+            }
+            p.update_batch(&sel, &reward, &progress, &active);
+            hist.push(sel.clone());
+        }
+        hist
+    }
+
+    #[test]
+    fn environments_are_independent() {
+        // Identical envs fed identical rewards make identical choices.
+        let means = [-1.3, -1.0, -1.2];
+        let mut p = BatchUcb1::new(3, 3, 0.05);
+        let hist = drive(&mut p, &means, 200, &ones(3, 3));
+        for sel in &hist {
+            assert!(sel.iter().all(|&s| s == sel[0]), "{sel:?}");
+        }
+        // And they converge on the best arm.
+        assert!(hist[199].iter().all(|&s| s == 1));
+    }
+
+    #[test]
+    fn feasibility_mask_is_honored() {
+        let means = [-1.3, -1.0, -1.2];
+        let mut feas = ones(2, 3);
+        feas[1] = 0.0; // env 0: best arm masked
+        feas[3] = 0.0; // env 1: arm 0 masked
+        let mut ucb = BatchUcb1::new(2, 3, 0.05);
+        for sel in drive(&mut ucb, &means, 300, &feas) {
+            assert_ne!(sel[0], 1);
+            assert_ne!(sel[1], 0);
+        }
+        let mut eg = BatchEpsilonGreedy::new(2, 3, 0.3, 0.0, 7);
+        for sel in drive(&mut eg, &means, 300, &feas) {
+            assert_ne!(sel[0], 1);
+            assert_ne!(sel[1], 0);
+        }
+        let mut sw = BatchSwUcb::new(2, 3, 0.05, 0.0, 64);
+        for sel in drive(&mut sw, &means, 300, &feas) {
+            assert_ne!(sel[0], 1);
+            assert_ne!(sel[1], 0);
+        }
+        let mut eu = BatchEnergyUcb::new(2, 3, SaUcbHyper::default());
+        for sel in drive(&mut eu, &means, 300, &feas) {
+            assert_ne!(sel[0], 1);
+            assert_ne!(sel[1], 0);
+        }
+    }
+
+    #[test]
+    fn frozen_envs_do_not_learn() {
+        let mut p = BatchEnergyUcb::new(2, 3, SaUcbHyper::default());
+        let sel = [1i32, 1];
+        let reward = [-1.0f64, -1.0];
+        let progress = [1e-3f64; 2];
+        p.update_batch(&sel, &reward, &progress, &[1.0, 0.0]);
+        assert_eq!(p.counts()[1], 1.0);
+        assert_eq!(p.counts()[3 + 1], 0.0);
+        assert_eq!(p.prev()[0], 1);
+        assert_eq!(p.prev()[1], -1);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let means = [-1.1, -1.0];
+        let mut p = BatchSwUcb::new(2, 2, 0.1, 0.01, 16);
+        let first = drive(&mut p, &means, 50, &ones(2, 2));
+        p.reset();
+        let second = drive(&mut p, &means, 50, &ones(2, 2));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn scalar_bridge_reports_mixed_name() {
+        let envs: Vec<Box<dyn Policy>> = vec![
+            Box::new(StaticPolicy::new(3, 2)),
+            Box::new(RoundRobin::new(3)),
+            Box::new(StaticPolicy::new(3, 2)),
+        ];
+        let bridge = Scalar::new(envs);
+        assert_eq!(bridge.b(), 3);
+        assert!(bridge.name().starts_with("Mixed["), "{}", bridge.name());
+        let uniform = Scalar::new(vec![Ucb1::new(3, 0.1), Ucb1::new(3, 0.1)]);
+        assert_eq!(uniform.name(), "UCB1");
+    }
+
+    #[test]
+    fn scalar_bridge_skips_frozen_updates() {
+        let mut bridge = Scalar::new(vec![Ucb1::new(2, 0.1), Ucb1::new(2, 0.1)]);
+        let sel = [0i32, 0];
+        bridge.update_batch(&sel, &[-1.0, -1.0], &[0.0, 0.0], &[1.0, 0.0]);
+        assert!(bridge.env(0).index(0, 5).is_finite());
+        assert!(bridge.env(1).index(0, 5).is_infinite()); // still unplayed
+    }
+
+    #[test]
+    fn constrained_batch_excludes_measured_slow_arms() {
+        // Arm progress follows a speedup curve; delta = 0.05 excludes the
+        // slow low-frequency arms once measured.
+        let k = 9;
+        let progress_of =
+            |arm: usize| 1e-3 / (0.5 + 0.5 * (1.6 / (0.8 + 0.1 * arm as f64)));
+        let mut p = BatchConstrainedEnergyUcb::new(1, k, SaUcbHyper::default(), 0.05);
+        let feas = ones(1, k);
+        let mut sel = vec![0i32; 1];
+        for t in 1..=600u64 {
+            p.select_into(t, &feas, &mut sel);
+            let arm = sel[0] as usize;
+            // Cheap-at-low-frequency rewards: only the constraint keeps
+            // the policy near the top arms.
+            let reward = -1.0 - 0.03 * (k - 1 - arm) as f64;
+            p.update_batch(&sel, &[reward], &[progress_of(arm)], &[1.0]);
+        }
+        // Late selections must be truly feasible arms (7, 8 on this curve).
+        for t in 601..=700u64 {
+            p.select_into(t, &feas, &mut sel);
+            let arm = sel[0] as usize;
+            let true_s = 1.0 - progress_of(arm) / progress_of(k - 1);
+            p.update_batch(&sel, &[-1.0], &[progress_of(arm)], &[1.0]);
+            assert!(true_s <= 0.07, "picked arm {arm} with slowdown {true_s}");
+        }
+    }
+}

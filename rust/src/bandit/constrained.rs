@@ -18,6 +18,9 @@ pub struct ConstrainedEnergyUcb {
     /// Running mean of observed per-interval progress per arm.
     p_hat: Vec<f64>,
     p_count: Vec<u64>,
+    /// Feasibility buffer reused across `select` calls (previously a fresh
+    /// `Vec<bool>` every decision step).
+    feas_buf: Vec<bool>,
 }
 
 impl ConstrainedEnergyUcb {
@@ -28,6 +31,7 @@ impl ConstrainedEnergyUcb {
             delta,
             p_hat: vec![0.0; k],
             p_count: vec![0; k],
+            feas_buf: Vec::with_capacity(k),
         }
     }
 
@@ -51,20 +55,27 @@ impl ConstrainedEnergyUcb {
 
     /// The current feasible set K_δ.
     pub fn feasible_set(&self) -> Vec<bool> {
+        let mut out = Vec::with_capacity(self.inner.k());
+        self.feasible_set_into(&mut out);
+        out
+    }
+
+    /// Fill `out` with the current feasible set (allocation-free after the
+    /// buffer's first growth).
+    fn feasible_set_into(&self, out: &mut Vec<bool>) {
         let k = self.inner.k();
         let max_arm = k - 1;
-        (0..k)
-            .map(|i| {
-                if i == max_arm {
-                    return true; // f_max has zero slowdown by definition
-                }
-                match self.slowdown_estimate(i) {
-                    // Optimism: unknown arms are feasible until measured.
-                    None => true,
-                    Some(s) => s <= self.delta,
-                }
-            })
-            .collect()
+        out.clear();
+        out.extend((0..k).map(|i| {
+            if i == max_arm {
+                return true; // f_max has zero slowdown by definition
+            }
+            match self.slowdown_estimate(i) {
+                // Optimism: unknown arms are feasible until measured.
+                None => true,
+                Some(s) => s <= self.delta,
+            }
+        }));
     }
 }
 
@@ -87,8 +98,11 @@ impl Policy for ConstrainedEnergyUcb {
                 return p;
             }
         }
-        let feasible = self.feasible_set();
-        self.inner.select_within(t, &feasible)
+        let mut feasible = std::mem::take(&mut self.feas_buf);
+        self.feasible_set_into(&mut feasible);
+        let arm = self.inner.select_within(t, &feasible);
+        self.feas_buf = feasible;
+        arm
     }
 
     fn update(&mut self, arm: usize, reward: f64, progress: f64) {

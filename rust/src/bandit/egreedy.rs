@@ -13,13 +13,23 @@ pub struct EpsilonGreedy {
     n: Vec<u64>,
     mean: Vec<f64>,
     rng: Rng,
+    /// Construction seed, so `reset()` restores fresh-run behavior
+    /// byte-for-byte (the policy-contract suite pins this).
+    seed: u64,
 }
 
 impl EpsilonGreedy {
     pub fn new(k: usize, eps0: f64, decay_c: f64, seed: u64) -> EpsilonGreedy {
         assert!(k > 0);
         assert!((0.0..=1.0).contains(&eps0));
-        EpsilonGreedy { eps0, decay_c, n: vec![0; k], mean: vec![0.0; k], rng: Rng::new(seed) }
+        EpsilonGreedy {
+            eps0,
+            decay_c,
+            n: vec![0; k],
+            mean: vec![0.0; k],
+            rng: Rng::new(seed),
+            seed,
+        }
     }
 
     pub fn epsilon_at(&self, t: u64) -> f64 {
@@ -60,6 +70,7 @@ impl Policy for EpsilonGreedy {
     fn reset(&mut self) {
         self.n.iter_mut().for_each(|x| *x = 0);
         self.mean.iter_mut().for_each(|x| *x = 0.0);
+        self.rng = Rng::new(self.seed);
     }
 }
 

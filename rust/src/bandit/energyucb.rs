@@ -77,6 +77,10 @@ pub struct EnergyUcb {
     mean: Vec<f64>,
     prev: Option<usize>,
     t_seen: u64,
+    /// All-true feasibility buffer reused by unconstrained `select` calls
+    /// (this used to be a fresh `vec![true; k]` every decision step — the
+    /// one allocation on the session hot loop).
+    all_arms: Vec<bool>,
 }
 
 impl EnergyUcb {
@@ -85,7 +89,15 @@ impl EnergyUcb {
         assert!(cfg.alpha >= 0.0 && cfg.lambda >= 0.0);
         assert!(cfg.discount > 0.0 && cfg.discount <= 1.0);
         assert!(cfg.prior_n >= 0.0);
-        EnergyUcb { cfg, k, n: vec![0.0; k], mean: vec![0.0; k], prev: None, t_seen: 0 }
+        EnergyUcb {
+            cfg,
+            k,
+            n: vec![0.0; k],
+            mean: vec![0.0; k],
+            prev: None,
+            t_seen: 0,
+            all_arms: vec![true; k],
+        }
     }
 
     pub fn config(&self) -> &EnergyUcbConfig {
@@ -176,8 +188,12 @@ impl Policy for EnergyUcb {
     }
 
     fn select(&mut self, t: u64) -> usize {
-        let all = vec![true; self.k];
-        self.select_within(t, &all)
+        // Reuse the all-true buffer (select_within needs `&mut self`, so
+        // it is temporarily moved out rather than borrowed).
+        let all = std::mem::take(&mut self.all_arms);
+        let arm = self.select_within(t, &all);
+        self.all_arms = all;
+        arm
     }
 
     fn update(&mut self, arm: usize, reward: f64, _progress: f64) {

@@ -6,6 +6,7 @@
 //! (≈ -1 at the starting frequency; see [`RewardNormalizer`]) so that the
 //! hyper-parameters α, λ, μ_init are scale-free across applications.
 
+pub mod batch;
 pub mod constrained;
 pub mod egreedy;
 pub mod energyucb;
@@ -16,6 +17,10 @@ pub mod swucb;
 pub mod thompson;
 pub mod ucb1;
 
+pub use batch::{
+    BatchConstrainedEnergyUcb, BatchEnergyUcb, BatchEpsilonGreedy, BatchPolicy, BatchSwUcb,
+    BatchUcb1, SaUcbHyper, Scalar,
+};
 pub use constrained::ConstrainedEnergyUcb;
 pub use egreedy::EpsilonGreedy;
 pub use energyucb::{EnergyUcb, EnergyUcbConfig, InitStrategy};
@@ -44,6 +49,54 @@ pub trait Policy: Send {
 
     /// Reset all learned state (fresh run).
     fn reset(&mut self);
+}
+
+/// Forwarding impl so a borrowed policy can ride the [`batch::Scalar`]
+/// bridge (the session wraps its `&mut dyn Policy` at B = 1).
+impl<'a, P: Policy + ?Sized> Policy for &'a mut P {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn k(&self) -> usize {
+        (**self).k()
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        (**self).select(t)
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, progress: f64) {
+        (**self).update(arm, reward, progress)
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+}
+
+/// Forwarding impl so config-built `Box<dyn Policy>` environments can ride
+/// the [`batch::Scalar`] bridge (mixed-policy fleets).
+impl<P: Policy + ?Sized> Policy for Box<P> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn k(&self) -> usize {
+        (**self).k()
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        (**self).select(t)
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, progress: f64) {
+        (**self).update(arm, reward, progress)
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
 }
 
 /// The paper's reward formulations (§4.5): the product of per-interval

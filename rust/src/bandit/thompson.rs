@@ -18,6 +18,9 @@ pub struct EnergyTs {
     n: Vec<u64>,
     mean: Vec<f64>,
     rng: Rng,
+    /// Construction seed, so `reset()` restores fresh-run behavior
+    /// byte-for-byte (the policy-contract suite pins this).
+    seed: u64,
 }
 
 impl EnergyTs {
@@ -30,6 +33,7 @@ impl EnergyTs {
             n: vec![0; k],
             mean: vec![0.0; k],
             rng: Rng::new(seed),
+            seed,
         }
     }
 
@@ -83,6 +87,7 @@ impl Policy for EnergyTs {
     fn reset(&mut self) {
         self.n.iter_mut().for_each(|x| *x = 0);
         self.mean.iter_mut().for_each(|x| *x = 0.0);
+        self.rng = Rng::new(self.seed);
     }
 }
 

@@ -1,9 +1,10 @@
 //! The `energyucb` launcher: subcommand dispatch.
 //!
 //! ```text
-//! energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--quick]
+//! energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--policy NAME] [--quick]
 //! energyucb run [--config cfg.toml] [--app NAME] [--policy NAME] [--reps N]
 //! energyucb fleet [--apps a,b,..] [--batch B] [--steps N] [--native] [--delta D]
+//!                 [--policy NAME[,NAME,...]]
 //! energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config cfg.toml]
 //! energyucb list
 //! ```
@@ -14,7 +15,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use crate::bandit::Policy;
+use crate::bandit::{BatchPolicy, Policy};
 use crate::config::ExperimentConfig;
 use crate::control::{run_repeated, RepeatedMetrics, SessionCfg};
 use crate::experiments::{all_experiments, experiment_by_id, ExpContext};
@@ -29,9 +30,11 @@ pub const USAGE: &str = "\
 energyucb — online GPU energy optimization with switching-aware bandits
 
 USAGE:
-  energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--jobs J] [--quick]
+  energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--jobs J]
+                [--policy NAME] [--quick]
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
   energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
+                  [--policy NAME[,NAME,...]]
   energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config FILE]
                     [--seed S] [--heartbeat H] [--csv PATH] [--shards K] [--waves]
   energyucb list
@@ -40,6 +43,12 @@ USAGE:
 Experiments regenerate the paper's tables/figures (see `energyucb list`).
 --jobs shards the experiment grid across J worker threads (default: all
 cores); output is byte-identical at any J (see EXPERIMENTS.md).
+
+Fleet runs B lockstep environments through the batch policy core
+(EXPERIMENTS.md §Engine). --policy selects any policy from `energyucb
+list`; a comma-separated list builds a mixed-policy fleet (env e runs
+policy e mod len). Non-default policies run on the native engine (the
+HLO artifacts encode EnergyUCB).
 
 Cluster runs a simulated multi-node fleet on the work-stealing executor.
 Scenarios: uniform | mixed | staggered | hetero, or a [cluster] config
@@ -76,7 +85,7 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
 
 fn cmd_exp(rest: &[String]) -> Result<i32> {
     let args = Args::parse(rest, &["quick"])?;
-    args.ensure_known(&["reps", "seed", "out", "jobs"])?;
+    args.ensure_known(&["reps", "seed", "out", "jobs", "policy"])?;
     let Some(id) = args.positional().first() else {
         bail!("exp: missing experiment id (try `energyucb list`)");
     };
@@ -95,6 +104,11 @@ fn cmd_exp(rest: &[String]) -> Result<i32> {
             bail!("exp: --jobs must be >= 1");
         }
         ctx.jobs = j;
+    }
+    if let Some(name) = args.get("policy") {
+        // Policy selector for experiments that take one (currently the
+        // fleet-backed `impact`); fixed-comparison experiments ignore it.
+        ctx.policy = Some(parse_policy_name(name)?);
     }
     ctx.quick = args.flag("quick");
 
@@ -187,9 +201,19 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
     Ok(0)
 }
 
+/// Parse a single policy name (plus optional CLI hyper knobs rendered
+/// elsewhere) through the `[policy]` schema, so CLI names and config names
+/// can never drift.
+fn parse_policy_name(name: &str) -> Result<crate::config::PolicyConfig> {
+    let toml = format!("[policy]\nname = \"{name}\"\n");
+    Ok(ExperimentConfig::from_toml(&toml)
+        .with_context(|| format!("unknown policy: {name}"))?
+        .policy)
+}
+
 fn cmd_fleet(rest: &[String]) -> Result<i32> {
     let args = Args::parse(rest, &["native"])?;
-    args.ensure_known(&["apps", "batch", "steps", "seed", "delta", "artifacts"])?;
+    args.ensure_known(&["apps", "batch", "steps", "seed", "delta", "artifacts", "policy"])?;
     let freqs = FreqDomain::aurora();
     let batch = args.get_usize("batch")?.unwrap_or(64);
     let steps = args.get_u64("steps")?.unwrap_or(10_000);
@@ -207,21 +231,48 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
     if let Some(delta) = args.get_f64("delta")? {
         params.constrain(&assigned, &freqs, delta);
     }
+    if let Some(spec) = args.get("policy") {
+        params.policies = spec
+            .split(',')
+            .map(parse_policy_name)
+            .collect::<Result<Vec<_>>>()?;
+    }
+    // A QoS mask only reaches policies whose batched form honors it; the
+    // scalar bridge delegates feasibility to the wrapped policy, so
+    // combining --delta with a bridge-backed policy would silently run
+    // unconstrained (and make the feasible-best regret baseline lie).
+    if args.get_f64("delta")?.is_some() {
+        if let Some(bad) = params.policies.iter().find(|p| !p.batch_honors_mask()) {
+            bail!(
+                "fleet: --delta needs a mask-honoring batched policy, but {bad:?} \
+                 runs via the scalar bridge (which ignores the QoS mask)"
+            );
+        }
+    }
     let hyper = FleetHyper::default();
     let mut state = FleetState::fresh(batch, freqs.k());
     let mut rng = Rng::new(seed);
 
     let t0 = std::time::Instant::now();
-    let engine_name;
-    if args.flag("native") {
+    let engine_name: String;
+    if !params.policies.is_empty() {
+        // Policy-selected fleets run the generic batch-policy engine (the
+        // HLO artifacts encode EnergyUCB only).
+        if !args.flag("native") {
+            eprintln!("fleet: --policy implies the native engine");
+        }
+        let mut policy = crate::fleet::build_fleet_policy(&params, &hyper, seed);
+        crate::fleet::policy_run(&mut state, &params, policy.as_mut(), &mut rng, steps);
+        engine_name = format!("native:{}", policy.name());
+    } else if args.flag("native") {
         native::native_run(&mut state, &params, &hyper, &mut rng, steps);
-        engine_name = "native";
+        engine_name = "native".into();
     } else {
         let dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
         let runtime = crate::runtime::XlaRuntime::cpu()?;
         let engine = crate::fleet::FleetEngine::load(&runtime, &dir, params.clone(), hyper)?;
         engine.run(&mut state, &mut rng, steps)?;
-        engine_name = "hlo";
+        engine_name = "hlo".into();
     }
     let dt = t0.elapsed();
     let done = batch - state.active_count();
@@ -455,7 +506,9 @@ fn cmd_list() -> Result<i32> {
             app.optimal_energy_kj()
         );
     }
-    println!("\npolicies: energyucb constrained ucb1 egreedy energyts rrfreq static rlpower drlcap");
+    println!(
+        "\npolicies: energyucb constrained ucb1 swucb egreedy energyts rrfreq static rlpower drlcap"
+    );
     Ok(0)
 }
 
@@ -534,5 +587,57 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_runs_batched_non_energyucb_policies() {
+        // The acceptance surface: non-EnergyUCB policies batched through
+        // `energyucb fleet` (native SoA impls and the scalar bridge).
+        for policy in ["ucb1", "swucb", "egreedy", "energyts", "static", "constrained"] {
+            let code = dispatch(&[
+                "fleet", "--apps", "tealeaf", "--batch", "3", "--steps", "150", "--policy",
+                policy,
+            ])
+            .unwrap();
+            assert_eq!(code, 0, "{policy}");
+        }
+    }
+
+    #[test]
+    fn fleet_runs_mixed_policy_fleets() {
+        let code = dispatch(&[
+            "fleet", "--apps", "tealeaf,clvleaf", "--batch", "6", "--steps", "150", "--policy",
+            "energyucb,ucb1,rrfreq",
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_rejects_unknown_policy() {
+        assert!(dispatch(&[
+            "fleet", "--apps", "tealeaf", "--batch", "2", "--steps", "50", "--policy", "bogus",
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn fleet_rejects_delta_with_mask_ignoring_policies() {
+        // The scalar bridge ignores the QoS mask; silently running an
+        // unconstrained fleet when --delta was asked for would lie.
+        assert!(dispatch(&[
+            "fleet", "--apps", "tealeaf", "--batch", "2", "--steps", "50", "--delta", "0.05",
+            "--policy", "energyts",
+        ])
+        .is_err());
+        // Mask-honoring batched policies accept the combination.
+        assert_eq!(
+            dispatch(&[
+                "fleet", "--apps", "tealeaf", "--batch", "2", "--steps", "50", "--delta",
+                "0.05", "--policy", "ucb1",
+            ])
+            .unwrap(),
+            0
+        );
     }
 }

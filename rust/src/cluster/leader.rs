@@ -372,10 +372,10 @@ fn merge(mut nodes: Vec<NodeResult>, telemetry: &Recorder) -> anyhow::Result<Clu
         total += r.metrics.gpu_energy_kj;
         let app = calibration::app(&r.app).expect("resolved app");
         // Budget-capped nodes (staggered arrivals) ran only part of the
-        // job; scale the default-frequency baseline by the true completed
-        // work fraction so "saved" compares like with like.
-        let frac = r.metrics.completed.clamp(0.0, 1.0);
-        saved += app.energy_kj[freqs.max_arm()] * frac - r.metrics.gpu_energy_kj;
+        // job; `saved_energy_kj` scales the default-frequency baseline by
+        // the true completed work fraction so "saved" compares like with
+        // like (the metric owns the scaling since the RunMetrics fix).
+        saved += r.metrics.saved_energy_kj(&app, &freqs);
         per_app_acc.entry(r.app.clone()).or_default().push(r.metrics.gpu_energy_kj);
     }
     let per_app = per_app_acc

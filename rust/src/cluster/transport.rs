@@ -198,24 +198,22 @@ fn drive_worker(
     cfg: &ClusterConfig,
     shard: &[NodeAssignment],
 ) -> anyhow::Result<Vec<WorkerEvent>> {
-    // Feed the whole batch, then close stdin. No deadlock window: the
-    // worker writes nothing before it has consumed up to `run`.
-    {
-        let stdin = child.stdin.take().expect("piped stdin");
-        let mut w = BufWriter::new(stdin);
-        let config = Frame::Config {
-            jobs: cfg.jobs,
-            heartbeat_steps: cfg.heartbeat_steps,
-            policy: cfg.policy.clone(),
-            session: cfg.session.clone(),
-        };
-        writeln!(w, "{}", config.encode_line()).context("writing config frame")?;
-        for a in shard {
-            writeln!(w, "{}", Frame::Assign(a.clone()).encode_line())
-                .context("writing assignment frame")?;
+    if let Err(feed_err) = feed_worker(child, cfg, shard) {
+        // A worker that rejects an early frame writes an `error` frame and
+        // exits while the leader may still be mid-batch — the resulting
+        // broken-pipe write error would mask the real reason. Drain stdout
+        // (the worker is gone or about to be: closing stdin above ends its
+        // read loop) and surface the worker's own message when present.
+        if let Some(out) = child.stdout.take() {
+            for line in BufReader::new(out).lines().map_while(Result::ok) {
+                if let Ok(Frame::Error { message }) = Frame::decode_line(&line) {
+                    return Err(feed_err.context(format!(
+                        "cluster-worker rejected the shard batch: {message}"
+                    )));
+                }
+            }
         }
-        writeln!(w, "{}", Frame::Run.encode_line()).context("writing run frame")?;
-        w.flush().context("flushing worker stdin")?;
+        return Err(feed_err);
     }
 
     let reader = BufReader::new(child.stdout.take().expect("piped stdout"));
@@ -244,6 +242,33 @@ fn drive_worker(
         }
         None => anyhow::bail!("cluster-worker stream ended without a terminal frame"),
     }
+}
+
+/// Feed the whole batch, then close stdin (the `BufWriter` and pipe drop
+/// on return — including the error path, which is what lets the caller
+/// then read the worker's stream to EOF). No deadlock window: the worker
+/// writes nothing before it has consumed up to `run`.
+fn feed_worker(
+    child: &mut std::process::Child,
+    cfg: &ClusterConfig,
+    shard: &[NodeAssignment],
+) -> anyhow::Result<()> {
+    let stdin = child.stdin.take().expect("piped stdin");
+    let mut w = BufWriter::new(stdin);
+    let config = Frame::Config {
+        jobs: cfg.jobs,
+        heartbeat_steps: cfg.heartbeat_steps,
+        policy: cfg.policy.clone(),
+        session: cfg.session.clone(),
+    };
+    writeln!(w, "{}", config.encode_line()).context("writing config frame")?;
+    for a in shard {
+        writeln!(w, "{}", Frame::Assign(a.clone()).encode_line())
+            .context("writing assignment frame")?;
+    }
+    writeln!(w, "{}", Frame::Run.encode_line()).context("writing run frame")?;
+    w.flush().context("flushing worker stdin")?;
+    Ok(())
 }
 
 #[cfg(test)]

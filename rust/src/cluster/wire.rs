@@ -218,6 +218,12 @@ impl WireCodec for PolicyConfig {
                 j.set("name", "ucb1");
                 j.set("alpha", f64_to_json(*alpha));
             }
+            PolicyConfig::SwUcb { alpha, lambda, window } => {
+                j.set("name", "swucb");
+                j.set("alpha", f64_to_json(*alpha));
+                j.set("lambda", f64_to_json(*lambda));
+                j.set("window", *window);
+            }
             PolicyConfig::EpsilonGreedy { eps0, decay_c } => {
                 j.set("name", "egreedy");
                 j.set("eps0", f64_to_json(*eps0));
@@ -252,6 +258,11 @@ impl WireCodec for PolicyConfig {
                 delta: f64_field(v, "delta")?,
             },
             "ucb1" => PolicyConfig::Ucb1 { alpha: f64_field(v, "alpha")? },
+            "swucb" => PolicyConfig::SwUcb {
+                alpha: f64_field(v, "alpha")?,
+                lambda: f64_field(v, "lambda")?,
+                window: usize_field(v, "window")?,
+            },
             "egreedy" => PolicyConfig::EpsilonGreedy {
                 eps0: f64_field(v, "eps0")?,
                 decay_c: f64_field(v, "decay_c")?,

@@ -1,4 +1,10 @@
 //! Cluster worker: one thread = one simulated node under one controller.
+//!
+//! Policy driving happens inside [`run_session`], which steps the node's
+//! controller through the shared batch policy core at B = 1
+//! (EXPERIMENTS.md §Engine) — the same `select_into`/`update_batch`
+//! surface the fleet engines use, with no per-step allocations on the
+//! trace-off path.
 
 use std::sync::mpsc::SyncSender;
 

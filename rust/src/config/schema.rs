@@ -13,6 +13,7 @@ pub enum PolicyConfig {
     EnergyUcb(EnergyUcbConfig),
     ConstrainedEnergyUcb { ucb: EnergyUcbConfig, delta: f64 },
     Ucb1 { alpha: f64 },
+    SwUcb { alpha: f64, lambda: f64, window: usize },
     EpsilonGreedy { eps0: f64, decay_c: f64 },
     EnergyTs,
     RoundRobin,
@@ -225,6 +226,17 @@ impl PolicyConfig {
                 PolicyConfig::ConstrainedEnergyUcb { ucb: ucb_cfg(tbl)?, delta }
             }
             "ucb1" => PolicyConfig::Ucb1 { alpha: tbl.get_float("alpha").unwrap_or(0.05) },
+            "swucb" => {
+                let window = tbl.get_int("window").unwrap_or(500);
+                if window < 1 {
+                    return invalid("swucb window must be >= 1");
+                }
+                PolicyConfig::SwUcb {
+                    alpha: tbl.get_float("alpha").unwrap_or(0.05),
+                    lambda: tbl.get_float("lambda").unwrap_or(0.01),
+                    window: window as usize,
+                }
+            }
             "egreedy" => PolicyConfig::EpsilonGreedy {
                 eps0: tbl.get_float("eps0").unwrap_or(0.1),
                 decay_c: tbl.get_float("decay_c").unwrap_or(20.0),
@@ -256,6 +268,9 @@ impl PolicyConfig {
                 Box::new(ConstrainedEnergyUcb::new(k, *ucb, *delta))
             }
             PolicyConfig::Ucb1 { alpha } => Box::new(Ucb1::new(k, *alpha)),
+            PolicyConfig::SwUcb { alpha, lambda, window } => {
+                Box::new(SlidingWindowUcb::new(k, *alpha, *lambda, *window))
+            }
             PolicyConfig::EpsilonGreedy { eps0, decay_c } => {
                 Box::new(EpsilonGreedy::new(k, *eps0, *decay_c, seed))
             }
@@ -271,6 +286,70 @@ impl PolicyConfig {
                 };
                 Box::new(DrlCap::new(k, m, seed))
             }
+        }
+    }
+
+    /// Instantiate this policy batched over `b` environments: a native SoA
+    /// implementation where one exists (EnergyUCB/SA-UCB and its
+    /// constrained variant on their fleet contract — optimistic init, no
+    /// discounting —, UCB1, SW-UCB, ε-greedy), the
+    /// [`Scalar`][crate::bandit::Scalar] bridge of `b` scalar instances
+    /// (seeded `seed + e`) everywhere else. SA-UCB environments start
+    /// pinned to the default-frequency arm K-1, matching
+    /// `FleetState::fresh`.
+    pub fn build_batch(&self, b: usize, k: usize, seed: u64) -> Box<dyn crate::bandit::BatchPolicy> {
+        use crate::bandit::batch::{
+            BatchConstrainedEnergyUcb, BatchEnergyUcb, BatchEpsilonGreedy, BatchSwUcb, BatchUcb1,
+            SaUcbHyper, Scalar,
+        };
+        match self {
+            PolicyConfig::EnergyUcb(c)
+                if c.discount == 1.0 && c.init == InitStrategy::Optimistic =>
+            {
+                Box::new(BatchEnergyUcb::with_initial_arm(b, k, SaUcbHyper::from(c), k - 1))
+            }
+            PolicyConfig::ConstrainedEnergyUcb { ucb, delta }
+                if ucb.discount == 1.0 && ucb.init == InitStrategy::Optimistic =>
+            {
+                Box::new(BatchConstrainedEnergyUcb::with_initial_arm(
+                    b,
+                    k,
+                    SaUcbHyper::from(ucb),
+                    *delta as f32,
+                    k - 1,
+                ))
+            }
+            PolicyConfig::Ucb1 { alpha } => Box::new(BatchUcb1::new(b, k, *alpha)),
+            PolicyConfig::SwUcb { alpha, lambda, window } => {
+                Box::new(BatchSwUcb::new(b, k, *alpha, *lambda, *window))
+            }
+            PolicyConfig::EpsilonGreedy { eps0, decay_c } => {
+                Box::new(BatchEpsilonGreedy::new(b, k, *eps0, *decay_c, seed))
+            }
+            // Everything else (Thompson, static, round-robin, RL baselines,
+            // warmup/discount ablation configurations) rides the bridge.
+            other => Box::new(Scalar::new(
+                (0..b)
+                    .map(|e| other.build(k, seed.wrapping_add(e as u64)))
+                    .collect::<Vec<_>>(),
+            )),
+        }
+    }
+
+    /// Whether [`build_batch`](Self::build_batch) yields a native SoA
+    /// implementation that honors the (B, K) feasibility mask.
+    /// Bridge-backed policies ignore the mask (scalar policies own their
+    /// feasibility), so callers constraining a fleet through
+    /// `FleetParams::feasible` (e.g. `fleet --delta`) must check this.
+    pub fn batch_honors_mask(&self) -> bool {
+        match self {
+            PolicyConfig::EnergyUcb(c) | PolicyConfig::ConstrainedEnergyUcb { ucb: c, .. } => {
+                c.discount == 1.0 && c.init == InitStrategy::Optimistic
+            }
+            PolicyConfig::Ucb1 { .. }
+            | PolicyConfig::SwUcb { .. }
+            | PolicyConfig::EpsilonGreedy { .. } => true,
+            _ => false,
         }
     }
 }
@@ -528,14 +607,42 @@ alpha = -1.0
 
     #[test]
     fn builds_each_policy_kind() {
-        for name in
-            ["energyucb", "constrained", "ucb1", "egreedy", "energyts", "rrfreq", "static", "rlpower", "drlcap"]
-        {
+        for name in [
+            "energyucb",
+            "constrained",
+            "ucb1",
+            "swucb",
+            "egreedy",
+            "energyts",
+            "rrfreq",
+            "static",
+            "rlpower",
+            "drlcap",
+        ] {
             let text = format!("[policy]\nname = \"{name}\"");
             let c = ExperimentConfig::from_toml(&text).unwrap();
             let p = c.build_policy(9, 1);
             assert_eq!(p.k(), 9, "{name}");
+            // And every configuration is batch-constructible too.
+            let bp = c.policy.build_batch(4, 9, 1);
+            assert_eq!(bp.k(), 9, "{name} batched");
+            assert_eq!(bp.b(), 4, "{name} batched");
         }
+    }
+
+    #[test]
+    fn swucb_config_parses_and_validates() {
+        let text = "[policy]\nname = \"swucb\"\nalpha = 0.1\nwindow = 300";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        match c.policy {
+            PolicyConfig::SwUcb { alpha, lambda, window } => {
+                assert!((alpha - 0.1).abs() < 1e-12);
+                assert!((lambda - 0.01).abs() < 1e-12);
+                assert_eq!(window, 300);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(ExperimentConfig::from_toml("[policy]\nname = \"swucb\"\nwindow = 0").is_err());
     }
 
     #[test]

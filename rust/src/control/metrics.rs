@@ -29,9 +29,19 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
-    /// Saved Energy vs the default maximum frequency (kJ; positive = saved).
+    /// Work fraction clamped to [0, 1] (guards degenerate zero-step runs).
+    fn completed_frac(&self) -> f64 {
+        self.completed.clamp(0.0, 1.0)
+    }
+
+    /// Saved Energy vs the default maximum frequency (kJ; positive =
+    /// saved). Budget-capped runs (`completed < 1`) completed only part of
+    /// the job, so they compare against the same fraction of the
+    /// default-frequency run — the full-job baseline used to overstate
+    /// savings for cut-off nodes (the cluster merge fixed this in PR 2;
+    /// the metric itself now owns the scaling).
     pub fn saved_energy_kj(&self, app: &AppModel, freqs: &FreqDomain) -> f64 {
-        app.energy_kj[freqs.max_arm()] - self.gpu_energy_kj
+        app.energy_kj[freqs.max_arm()] * self.completed_frac() - self.gpu_energy_kj
     }
 
     /// Energy Regret vs the best static configuration (kJ; >= 0 for any
@@ -40,9 +50,13 @@ impl RunMetrics {
         self.gpu_energy_kj - app.optimal_energy_kj()
     }
 
-    /// Relative slowdown vs the max-frequency execution time.
+    /// Relative slowdown vs the max-frequency execution time. Budget-capped
+    /// runs compare against the max-frequency time for the *same completed
+    /// work fraction* — dividing partial-work time by the full-job
+    /// `t_max_s` used to understate slowdown for cut-off nodes.
     pub fn slowdown(&self, app: &AppModel) -> f64 {
-        self.exec_time_s / app.t_max_s - 1.0
+        let frac = self.completed_frac().max(1e-12);
+        self.exec_time_s / (app.t_max_s * frac) - 1.0
     }
 }
 
@@ -131,6 +145,31 @@ mod tests {
         let app = calibration::app("tealeaf").unwrap();
         let m = run(99.06, 49.5);
         assert!((m.slowdown(&app) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_capped_runs_scale_baselines_by_completed_work() {
+        // Regression: a run cut off at half the job used to be compared
+        // against the FULL-job max-frequency baselines, overstating saved
+        // energy and understating slowdown.
+        let app = calibration::app("tealeaf").unwrap();
+        let f = FreqDomain::aurora();
+        let default_kj = app.energy_kj[f.max_arm()]; // 109.79
+        // Half the job, at 10 % real slowdown, using half of 99.06 kJ.
+        let m = RunMetrics { completed: 0.5, ..run(99.06 / 2.0, app.t_max_s * 0.5 * 1.1) };
+        assert!((m.saved_energy_kj(&app, &f) - (default_kj * 0.5 - 99.06 / 2.0)).abs() < 1e-9);
+        assert!((m.slowdown(&app) - 0.1).abs() < 1e-9);
+        // Pre-fix values for contrast: saved would read ~65 kJ (vs the
+        // honest ~5.4), slowdown would read -45 % (vs the honest +10 %).
+        assert!(default_kj - 99.06 / 2.0 > 55.0);
+        assert!(app.t_max_s * 0.55 / app.t_max_s - 1.0 < 0.0);
+        // Full completion is untouched (exact same arithmetic).
+        let full = run(99.06, 49.5);
+        assert!((full.saved_energy_kj(&app, &f) - (default_kj - 99.06)).abs() < 1e-12);
+        // Degenerate zero-completion runs stay finite.
+        let zero = RunMetrics { completed: 0.0, exec_time_s: 0.0, ..run(0.0, 0.0) };
+        assert!(zero.slowdown(&app).is_finite());
+        assert_eq!(zero.saved_energy_kj(&app, &f), 0.0);
     }
 
     #[test]

@@ -6,7 +6,14 @@
 //! variant), normalizes it, lets the policy pick the next arm, and applies
 //! it through the service. Ground-truth regret accounting happens here
 //! (simulation-only knowledge, never shown to the policy).
+//!
+//! Policy driving goes through the batch policy core: the scalar policy is
+//! wrapped in a B = 1 [`Scalar`] bridge and stepped through the same
+//! `select_into`/`update_batch` surface the fleet and cluster tiers use
+//! (stack buffers — the trace-off hot loop performs no per-step
+//! allocations).
 
+use crate::bandit::batch::{BatchPolicy, Scalar};
 use crate::bandit::{Policy, RewardForm, RewardNormalizer};
 use crate::geopm::{Control, Service};
 use crate::sim::freq::{FreqDomain, SwitchCost};
@@ -83,10 +90,18 @@ impl RunResult {
 pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) -> RunResult {
     let freqs = FreqDomain::aurora().with_switch_cost(cfg.switch_cost);
     assert_eq!(policy.k(), freqs.k(), "policy arity must match frequency domain");
+    let k = freqs.k();
     let node = Node::new(app.clone(), freqs.clone(), cfg.dt_s, cfg.seed);
     let mut service = Service::new(node);
     let mut normalizer = RewardNormalizer::new();
     let mut trace = cfg.record_trace.then(Trace::new);
+
+    // B = 1 bridge onto the shared batch stepping core. The feasibility
+    // buffer is all-ones (the bridge delegates feasibility to the wrapped
+    // policy); selection/reward buffers live on the stack.
+    let mut driver = Scalar::new(vec![policy]);
+    let all_feasible = vec![1.0f32; k];
+    let mut sel = [0i32; 1];
 
     // Ground truth for regret accounting (raw reward units).
     let true_rewards: Vec<f64> =
@@ -102,7 +117,8 @@ pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) ->
 
     while !service.done() && t < cfg.max_steps {
         t += 1;
-        let arm = policy.select(t);
+        driver.select_into(t, &all_feasible, &mut sel);
+        let arm = sel[0] as usize;
         service.write(Control::GpuFrequency(arm)).expect("valid arm");
         let sample = service.sample().expect("not done");
         let obs = sample.obs;
@@ -114,7 +130,7 @@ pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) ->
         // the typical magnitude before any policy sees them — a controller
         // robustness choice every method benefits from equally.
         let reward = normalizer.normalize(raw).max(-3.0);
-        policy.update(arm, reward, obs.progress);
+        driver.update_batch(&sel, &[reward], &[obs.progress], &[1.0]);
 
         cumulative_regret += mu_star - true_rewards[arm];
         cum_true_energy_j += obs.true_gpu_energy_j;
@@ -148,7 +164,7 @@ pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) ->
     let totals = service.totals();
     let metrics = RunMetrics {
         app: app.name.to_string(),
-        policy: policy.name(),
+        policy: driver.name(),
         gpu_energy_kj: totals.gpu_energy_kj,
         exec_time_s: totals.exec_time_s,
         switches: totals.switches,

@@ -10,7 +10,7 @@ use anyhow::Result;
 use super::report::{ExpContext, Report};
 use super::Experiment;
 use crate::exec::{cell_rng, run_indexed};
-use crate::fleet::{native, FleetHyper, FleetParams, FleetState};
+use crate::fleet::{build_fleet_policy, policy_run, FleetHyper, FleetParams, FleetState};
 use crate::runtime::XlaRuntime;
 use crate::sim::freq::FreqDomain;
 
@@ -56,7 +56,10 @@ impl Experiment for Impact {
         let b = if ctx.quick { 64 } else { 256 };
         let app = calibration::app("sph_exa").unwrap();
         let apps = vec![&app; b];
-        let params = FleetParams::from_apps(&apps, &freqs, 0.01);
+        let mut params = FleetParams::from_apps(&apps, &freqs, 0.01);
+        // `--policy` threads through to the fleet (default: the paper's
+        // EnergyUCB, the bit-pinned artifact path).
+        params.policies = ctx.policy.clone().into_iter().collect();
         let hyper = FleetHyper::default();
         let max_steps = if ctx.quick { 4_000 } else { 80_000 };
 
@@ -65,10 +68,13 @@ impl Experiment for Impact {
         let art_dir = std::path::Path::new("artifacts");
         let engine_used;
         let (energy_kj, remaining): (Vec<f64>, Vec<f64>);
-        // The HLO path needs both the exported artifact AND a live PJRT
-        // runtime (absent in stub builds without the `xla` feature) — fall
-        // back to the native engine in either case rather than erroring.
-        let runtime = if art_dir.join(format!("fleet_step_b{b}.hlo.txt")).exists() {
+        // The HLO path needs the exported artifact, a live PJRT runtime
+        // (absent in stub builds without the `xla` feature), AND the
+        // default EnergyUCB policy (artifacts encode it) — fall back to
+        // the native batch-policy engine in any other case.
+        let runtime = if params.policies.is_empty()
+            && art_dir.join(format!("fleet_step_b{b}.hlo.txt")).exists()
+        {
             XlaRuntime::cpu()
                 .map_err(|e| eprintln!("impact: PJRT unavailable, using native engine ({e})"))
                 .ok()
@@ -96,10 +102,19 @@ impl Experiment for Impact {
             let chunk_results = run_indexed(ctx.jobs, n_chunks, |c| {
                 let lo = c * CHUNK;
                 let hi = (lo + CHUNK).min(b);
-                let chunk_params = FleetParams::from_apps(&apps[lo..hi], &freqs, 0.01);
+                let mut chunk_params = FleetParams::from_apps(&apps[lo..hi], &freqs, 0.01);
+                chunk_params.policies = params.policies.clone();
                 let mut state = FleetState::fresh(hi - lo, freqs.k());
                 let mut rng = cell_rng(ctx.seed, c as u64);
-                native::native_run(&mut state, &chunk_params, &hyper, &mut rng, max_steps);
+                // One stepping core for every selector: the default
+                // (empty) selection is the batched EnergyUCB, bit-identical
+                // to the pre-selector native_run path.
+                let mut policy = build_fleet_policy(
+                    &chunk_params,
+                    &hyper,
+                    ctx.seed.wrapping_add(lo as u64),
+                );
+                policy_run(&mut state, &chunk_params, policy.as_mut(), &mut rng, max_steps);
                 let kj: Vec<f64> = (0..hi - lo).map(|e| state.energy_kj(e)).collect();
                 let rem: Vec<f64> =
                     state.remaining.iter().map(|r| *r as f64).collect();
@@ -180,5 +195,19 @@ mod tests {
         let saved = report.json.get_num("saved_kj").unwrap();
         assert!(saved > 0.0, "saved {saved}");
         let _ = std::fs::remove_dir_all(std::env::temp_dir().join("energyucb_imp_test"));
+    }
+
+    #[test]
+    fn impact_accepts_policy_selector() {
+        // `--policy` threads into the fleet the extrapolation runs on.
+        let ctx = ExpContext {
+            quick: true,
+            policy: Some(crate::config::PolicyConfig::Ucb1 { alpha: 0.05 }),
+            out_dir: std::env::temp_dir().join("energyucb_imp_pol_test"),
+            ..ExpContext::quick()
+        };
+        let report = Impact.run(&ctx).unwrap();
+        assert!(report.json.get_num("saved_kj").unwrap().is_finite());
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("energyucb_imp_pol_test"));
     }
 }

@@ -19,6 +19,10 @@ pub struct ExpContext {
     /// machine's available parallelism). Output is byte-identical at any
     /// value — see EXPERIMENTS.md §Executor.
     pub jobs: usize,
+    /// Policy selector (`--policy`) for experiments parameterized by one
+    /// (the fleet-backed `impact`); `None` = each experiment's default.
+    /// Fixed-comparison experiments (tables/figures) ignore it.
+    pub policy: Option<crate::config::PolicyConfig>,
 }
 
 impl Default for ExpContext {
@@ -29,6 +33,7 @@ impl Default for ExpContext {
             out_dir: PathBuf::from("results"),
             quick: false,
             jobs: crate::exec::available_jobs(),
+            policy: None,
         }
     }
 }

@@ -170,25 +170,29 @@ impl FleetEngine {
 
     /// Run until every environment completes (or `max_steps`). Prefers the
     /// scanned artifact (S steps per execute) when available, finishing
-    /// the tail with single steps. Returns the steps taken.
+    /// the tail with single steps. Returns the steps taken. Noise buffers
+    /// are allocated once and reused across the whole run.
     pub fn run(&self, state: &mut FleetState, rng: &mut Rng, max_steps: u64) -> Result<u64> {
+        let b = state.b;
         let mut steps = 0;
         if self.has_scan() {
+            let mut noise_seq = vec![0.0f32; SCAN_STEPS * b];
             while !state.all_done() && steps + SCAN_STEPS as u64 <= max_steps {
-                let mut noise_seq = Vec::with_capacity(SCAN_STEPS * state.b);
                 for s in 0..SCAN_STEPS {
-                    noise_seq.extend(super::native::step_noise(
+                    super::native::step_noise_into(
                         &self.params,
                         steps + s as u64,
                         rng,
-                    ));
+                        &mut noise_seq[s * b..(s + 1) * b],
+                    );
                 }
                 self.step_scan(state, &noise_seq)?;
                 steps += SCAN_STEPS as u64;
             }
         }
+        let mut noise = vec![0.0f32; b];
         while !state.all_done() && steps < max_steps {
-            let noise = super::native::step_noise(&self.params, steps, rng);
+            super::native::step_noise_into(&self.params, steps, rng, &mut noise);
             self.step(state, &noise)?;
             steps += 1;
         }

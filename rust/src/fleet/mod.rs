@@ -1,12 +1,18 @@
 //! Vectorized fleet Monte Carlo: B independent bandit environments
 //! advanced in lockstep, either through the AOT-compiled HLO artifact
-//! ([`engine::FleetEngine`], PJRT) or the bit-compatible pure-Rust
-//! reference ([`native`]). Used for seed-variance studies, regret-curve
-//! averaging, and the paper's fleet-scale energy extrapolation.
+//! ([`engine::FleetEngine`], PJRT), the bit-compatible pure-Rust
+//! EnergyUCB reference ([`native`]), or the generic batch-policy runner
+//! ([`policy`] — any [`crate::bandit::BatchPolicy`], including mixed
+//! fleets). Used for seed-variance studies, regret-curve averaging, and
+//! the paper's fleet-scale energy extrapolation. All decision arithmetic
+//! lives in the shared batch policy core (`bandit::batch`).
 
 pub mod engine;
 pub mod native;
+pub mod policy;
 pub mod state;
 
 pub use engine::FleetEngine;
+pub use native::StepScratch;
+pub use policy::{build_fleet_policy, policy_run, policy_step};
 pub use state::{FleetHyper, FleetParams, FleetState};

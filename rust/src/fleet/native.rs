@@ -4,100 +4,168 @@
 //! Implements exactly the arithmetic of `python/compile/model.py::fleet_step`
 //! in f32, same operation order, same tie-breaking (first index on argmax
 //! ties), so the two engines can be cross-validated trajectory-by-
-//! trajectory.
+//! trajectory. The decision arithmetic itself lives in the batch policy
+//! core ([`crate::bandit::batch`]): this module contributes only the
+//! environment dynamics (reward synthesis, progress/energy/regret
+//! accounting) and calls [`saucb_select_into`] / [`grid_update_batch`] on
+//! the `FleetState` grids — there is no inline UCB arithmetic here.
+//!
+//! The `*_into` variants write into caller-provided [`StepScratch`] /
+//! noise buffers so the hot loop performs no per-step allocations; the
+//! original allocating signatures survive as thin wrappers.
 
 use super::state::{FleetHyper, FleetParams, FleetState};
+use crate::bandit::batch::{grid_update_batch, saucb_select_into};
 use crate::util::Rng;
 
-/// Effectively -inf for f32 masking (matches python NEG_LARGE).
-pub const NEG_LARGE: f32 = -3.0e38;
+/// Effectively -inf for f32 masking (matches python NEG_LARGE). Re-export
+/// of the batch-core constant for source compatibility.
+pub use crate::bandit::batch::NEG_LARGE;
 
-/// Advance the fleet by one decision interval. `noise[e]` are standard
-/// normal draws (already early-window-scaled by the caller). Returns the
-/// selected arm per environment.
+/// Reusable per-step buffers for fleet stepping: selections, synthesized
+/// rewards/progress (f64 at the policy boundary — exact for f32-sourced
+/// values), and the active mask.
+#[derive(Clone, Debug, Default)]
+pub struct StepScratch {
+    pub sel: Vec<i32>,
+    pub reward: Vec<f64>,
+    pub progress: Vec<f64>,
+    pub active: Vec<f32>,
+}
+
+impl StepScratch {
+    pub fn new(b: usize) -> StepScratch {
+        let mut s = StepScratch::default();
+        s.ensure(b);
+        s
+    }
+
+    /// Resize every buffer to batch size `b` (no-op when already sized).
+    pub fn ensure(&mut self, b: usize) {
+        self.sel.resize(b, 0);
+        self.reward.resize(b, 0.0);
+        self.progress.resize(b, 0.0);
+        self.active.resize(b, 0.0);
+    }
+}
+
+/// Environment dynamics for one decision interval: synthesize rewards from
+/// the calibrated parameters and the noise draw, account progress, energy,
+/// regret, and switches against the *pre-update* previous arm, and fill
+/// `scratch.{reward, progress, active}` for the policy update. Shared by
+/// the bit-pinned EnergyUCB path ([`native_step_into`]) and the generic
+/// batch-policy runner (`fleet::policy::policy_step`). `scratch.sel` must
+/// already hold this step's selections.
+pub(crate) fn apply_env_dynamics(
+    state: &mut FleetState,
+    params: &FleetParams,
+    noise: &[f32],
+    scratch: &mut StepScratch,
+) {
+    let (b, k) = (state.b, state.k);
+    for e in 0..b {
+        let row = e * k;
+        let s = scratch.sel[e] as usize;
+        debug_assert!(s < k, "selection {s} out of range (k={k})");
+        let active = state.remaining[e] > 0.0;
+        let a = if active { 1.0f32 } else { 0.0 };
+        scratch.active[e] = a;
+
+        let r = params.reward_mean[row + s] + params.reward_sigma[row + s] * noise[e];
+        scratch.reward[e] = r as f64;
+
+        let switched = if s as i32 != state.prev[e] { a } else { 0.0 };
+        let useful = 1.0 - params.switch_stall_frac * switched;
+        let prog = params.progress[row + s] * useful * a;
+        scratch.progress[e] = prog as f64;
+        state.remaining[e] = (state.remaining[e] - prog).max(0.0);
+        state.cum_energy[e] +=
+            (params.energy_step[row + s] + params.switch_energy_j * switched) * a;
+        state.cum_regret[e] += (params.best_reward(e) - params.reward_mean[row + s]) * a;
+        state.switches[e] += switched;
+    }
+}
+
+/// Advance the fleet by one decision interval, writing into `scratch`
+/// (allocation-free). `noise[e]` are standard normal draws (already
+/// early-window-scaled by the caller). `scratch.sel` holds the selected
+/// arm per environment on return.
+pub fn native_step_into(
+    state: &mut FleetState,
+    params: &FleetParams,
+    hyper: &FleetHyper,
+    noise: &[f32],
+    scratch: &mut StepScratch,
+) {
+    let (b, k) = (state.b, state.k);
+    assert_eq!(noise.len(), b);
+    scratch.ensure(b);
+    // Selection: SA-UCB over the FleetState grids, through the shared
+    // batch core (the single source of the index arithmetic).
+    saucb_select_into(
+        &state.n,
+        &state.mean,
+        &state.prev,
+        state.t,
+        &params.feasible,
+        hyper,
+        k,
+        &mut scratch.sel,
+    );
+    // Environment dynamics read the pre-update `prev` (switch accounting),
+    // then the learned state advances through the shared grid update.
+    apply_env_dynamics(state, params, noise, scratch);
+    grid_update_batch(
+        &mut state.n,
+        &mut state.mean,
+        &mut state.prev,
+        &scratch.sel,
+        &scratch.reward,
+        &scratch.active,
+        k,
+    );
+    state.t += 1.0;
+}
+
+/// Advance the fleet by one decision interval. Returns the selected arm
+/// per environment. Allocating wrapper around [`native_step_into`], kept
+/// for the cross-validation tests and one-shot callers.
 pub fn native_step(
     state: &mut FleetState,
     params: &FleetParams,
     hyper: &FleetHyper,
     noise: &[f32],
 ) -> Vec<i32> {
-    let (b, k) = (state.b, state.k);
-    assert_eq!(noise.len(), b);
-    let ln_t = (state.t.max(2.0)).ln();
-    let mut sel = vec![0i32; b];
-
-    for e in 0..b {
-        let row = e * k;
-        let active = state.remaining[e] > 0.0;
-
-        // SA-UCB index + argmax (first on ties via strict >).
-        let mut best_arm = 0usize;
-        let mut best_v = f32::NEG_INFINITY;
-        for i in 0..k {
-            let n = state.n[row + i];
-            let mean = state.mean[row + i];
-            let denom = hyper.prior_n + n;
-            let mu_hat = if denom > 0.0 {
-                (hyper.prior_n * hyper.mu_init + n * mean) / denom.max(1e-12)
-            } else {
-                hyper.mu_init
-            };
-            let bonus = hyper.alpha * (ln_t / n.max(1.0)).sqrt();
-            let penalty =
-                if i as i32 != state.prev[e] { hyper.lambda } else { 0.0 };
-            let mut v = mu_hat + bonus - penalty;
-            if params.feasible[row + i] <= 0.0 {
-                v = NEG_LARGE;
-            }
-            if v > best_v {
-                best_v = v;
-                best_arm = i;
-            }
-        }
-        let s = best_arm;
-        sel[e] = s as i32;
-
-        let a = if active { 1.0f32 } else { 0.0 };
-        let r = params.reward_mean[row + s] + params.reward_sigma[row + s] * noise[e];
-        let n_sel = state.n[row + s] + a;
-        state.n[row + s] = n_sel;
-        let delta = (r - state.mean[row + s]) / n_sel.max(1.0) * a;
-        state.mean[row + s] += delta;
-
-        let switched = if s as i32 != state.prev[e] { a } else { 0.0 };
-        let useful = 1.0 - params.switch_stall_frac * switched;
-        let prog = params.progress[row + s] * useful * a;
-        state.remaining[e] = (state.remaining[e] - prog).max(0.0);
-        state.cum_energy[e] +=
-            (params.energy_step[row + s] + params.switch_energy_j * switched) * a;
-        state.cum_regret[e] += (params.best_reward(e) - params.reward_mean[row + s]) * a;
-        state.switches[e] += switched;
-        if active {
-            state.prev[e] = s as i32;
-        }
-    }
-    state.t += 1.0;
-    sel
+    let mut scratch = StepScratch::new(state.b);
+    native_step_into(state, params, hyper, noise, &mut scratch);
+    scratch.sel
 }
 
-/// Generate one step's noise vector: standard normals, inflated by each
-/// env's early-window multiplier while `step_index` (0-based) is inside the
-/// window.
+/// Fill `out` with one step's noise vector: standard normals, inflated by
+/// each env's early-window multiplier while `step_index` (0-based) is
+/// inside the window.
+pub fn step_noise_into(params: &FleetParams, step_index: u64, rng: &mut Rng, out: &mut [f32]) {
+    assert_eq!(out.len(), params.b);
+    for (e, slot) in out.iter_mut().enumerate() {
+        let z = rng.gaussian() as f32;
+        *slot = if (step_index as u32) < params.early_steps[e] {
+            z * params.early_mult[e]
+        } else {
+            z
+        };
+    }
+}
+
+/// Allocating wrapper around [`step_noise_into`].
 pub fn step_noise(params: &FleetParams, step_index: u64, rng: &mut Rng) -> Vec<f32> {
-    (0..params.b)
-        .map(|e| {
-            let z = rng.gaussian() as f32;
-            if (step_index as u32) < params.early_steps[e] {
-                z * params.early_mult[e]
-            } else {
-                z
-            }
-        })
-        .collect()
+    let mut out = vec![0.0f32; params.b];
+    step_noise_into(params, step_index, rng, &mut out);
+    out
 }
 
 /// Run the native fleet until all environments complete (or `max_steps`).
-/// Returns the number of steps taken.
+/// Returns the number of steps taken. Noise and step buffers are allocated
+/// once and reused across the whole run.
 pub fn native_run(
     state: &mut FleetState,
     params: &FleetParams,
@@ -105,10 +173,12 @@ pub fn native_run(
     rng: &mut Rng,
     max_steps: u64,
 ) -> u64 {
+    let mut scratch = StepScratch::new(state.b);
+    let mut noise = vec![0.0f32; state.b];
     let mut steps = 0;
     while !state.all_done() && steps < max_steps {
-        let noise = step_noise(params, steps, rng);
-        native_step(state, params, hyper, &noise);
+        step_noise_into(params, steps, rng, &mut noise);
+        native_step_into(state, params, hyper, &noise, &mut scratch);
         steps += 1;
     }
     steps
@@ -217,6 +287,26 @@ mod tests {
         let mut r2 = Rng::new(6);
         native_run(&mut s1, &params, &hyper, &mut r1, 1000);
         native_run(&mut s2, &params, &hyper, &mut r2, 1000);
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn step_into_matches_allocating_wrapper() {
+        // Buffer-reuse regression: the `_into` path and the allocating
+        // wrappers must produce identical trajectories and selections.
+        let (mut s1, params) = setup(&["tealeaf", "clvleaf"]);
+        let mut s2 = s1.clone();
+        let hyper = FleetHyper::default();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let mut scratch = StepScratch::new(2);
+        let mut noise = vec![0.0f32; 2];
+        for step in 0..300u64 {
+            step_noise_into(&params, step, &mut r1, &mut noise);
+            native_step_into(&mut s1, &params, &hyper, &noise, &mut scratch);
+            let wrapped = native_step(&mut s2, &params, &hyper, &step_noise(&params, step, &mut r2));
+            assert_eq!(scratch.sel, wrapped, "step {step}");
+        }
         assert_eq!(s1, s2);
     }
 }

@@ -1,0 +1,181 @@
+//! Generic batch-policy fleet runner: drive B environments under *any*
+//! [`BatchPolicy`] — native SoA implementations (EnergyUCB/SA-UCB, UCB1,
+//! SW-UCB, ε-greedy, the QoS-constrained variant) or the scalar bridge
+//! (Thompson, static, round-robin, the RL baselines, heterogeneous
+//! mixed-policy fleets).
+//!
+//! The environment dynamics are literally the ones the bit-pinned
+//! EnergyUCB path uses (`native::apply_env_dynamics`); only the
+//! select/update calls go through the trait. Driving a
+//! [`BatchEnergyUcb`][crate::bandit::BatchEnergyUcb] built with
+//! `with_initial_arm(k-1)` therefore reproduces `native::native_run`'s
+//! accounting trajectory bit-for-bit (pinned by the policy-contract
+//! suite) — the policy owns its grids, while `native_run` keeps them in
+//! `FleetState` for the HLO artifact contract.
+
+use super::native::{self, StepScratch};
+use super::state::{FleetHyper, FleetParams, FleetState};
+use crate::bandit::batch::{BatchEnergyUcb, BatchPolicy, Scalar};
+use crate::bandit::Policy as ScalarPolicy;
+use crate::util::Rng;
+
+/// Advance the fleet one decision interval under `policy`
+/// (allocation-free; buffers live in `scratch`).
+pub fn policy_step(
+    state: &mut FleetState,
+    params: &FleetParams,
+    policy: &mut dyn BatchPolicy,
+    noise: &[f32],
+    scratch: &mut StepScratch,
+) {
+    let (b, k) = (state.b, state.k);
+    assert_eq!(policy.b(), b, "policy batch != fleet batch");
+    assert_eq!(policy.k(), k, "policy arity != fleet arity");
+    assert_eq!(noise.len(), b);
+    scratch.ensure(b);
+    policy.select_into(state.t as u64, &params.feasible, &mut scratch.sel);
+    native::apply_env_dynamics(state, params, noise, scratch);
+    // Advance the engine-side previous-arm record (switch accounting reads
+    // it pre-update) — the policy keeps its own notion of prev internally.
+    for e in 0..b {
+        if scratch.active[e] > 0.0 {
+            state.prev[e] = scratch.sel[e];
+        }
+    }
+    policy.update_batch(&scratch.sel, &scratch.reward, &scratch.progress, &scratch.active);
+    state.t += 1.0;
+}
+
+/// Run the fleet under `policy` until every environment completes (or
+/// `max_steps`). Buffers are allocated once; returns the steps taken.
+pub fn policy_run(
+    state: &mut FleetState,
+    params: &FleetParams,
+    policy: &mut dyn BatchPolicy,
+    rng: &mut Rng,
+    max_steps: u64,
+) -> u64 {
+    let mut scratch = StepScratch::new(state.b);
+    let mut noise = vec![0.0f32; state.b];
+    let mut steps = 0;
+    while !state.all_done() && steps < max_steps {
+        native::step_noise_into(params, steps, rng, &mut noise);
+        policy_step(state, params, policy, &noise, &mut scratch);
+        steps += 1;
+    }
+    steps
+}
+
+/// Build the batch policy `params.policies` selects (see
+/// [`FleetParams::policies`]): empty = the classic EnergyUCB fleet from
+/// `hyper` (every environment starting pinned to the default-frequency
+/// arm K-1, matching `FleetState::fresh`); one entry = that policy batched
+/// natively where possible; several = a mixed fleet over the scalar
+/// bridge, environment `e` running `policies[e % len]` seeded `seed + e`.
+pub fn build_fleet_policy(
+    params: &FleetParams,
+    hyper: &FleetHyper,
+    seed: u64,
+) -> Box<dyn BatchPolicy> {
+    let (b, k) = (params.b, params.k);
+    match params.policies.len() {
+        0 => Box::new(BatchEnergyUcb::with_initial_arm(b, k, *hyper, k - 1)),
+        1 => params.policies[0].build_batch(b, k, seed),
+        n => {
+            let envs: Vec<Box<dyn ScalarPolicy>> = (0..b)
+                .map(|e| params.policies[e % n].build(k, seed.wrapping_add(e as u64)))
+                .collect();
+            Box::new(Scalar::new(envs))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PolicyConfig;
+    use crate::sim::freq::FreqDomain;
+    use crate::workload::calibration;
+
+    fn setup(names: &[&str]) -> (FleetState, FleetParams) {
+        let freqs = FreqDomain::aurora();
+        let apps: Vec<_> = names.iter().map(|n| calibration::app(n).unwrap()).collect();
+        let refs: Vec<&_> = apps.iter().collect();
+        let params = FleetParams::from_apps(&refs, &freqs, 0.01);
+        (FleetState::fresh(names.len(), 9), params)
+    }
+
+    /// The default selector reproduces the bit-pinned native EnergyUCB
+    /// accounting trajectory exactly (the policy owns the grids, so
+    /// `FleetState.n/mean` stay untouched — everything else must match).
+    #[test]
+    fn default_policy_matches_native_run_bit_for_bit() {
+        let (mut nat, params) = setup(&["tealeaf", "clvleaf", "lbm"]);
+        let mut gen = nat.clone();
+        let hyper = FleetHyper::default();
+
+        let mut r1 = Rng::new(11);
+        native::native_run(&mut nat, &params, &hyper, &mut r1, 3_000);
+
+        let mut policy = build_fleet_policy(&params, &hyper, 11);
+        let mut r2 = Rng::new(11);
+        policy_run(&mut gen, &params, policy.as_mut(), &mut r2, 3_000);
+
+        assert_eq!(nat.t, gen.t);
+        assert_eq!(nat.prev, gen.prev);
+        assert_eq!(nat.remaining, gen.remaining);
+        assert_eq!(nat.cum_energy, gen.cum_energy);
+        assert_eq!(nat.cum_regret, gen.cum_regret);
+        assert_eq!(nat.switches, gen.switches);
+    }
+
+    #[test]
+    fn non_energyucb_policies_run_the_fleet() {
+        for cfg in [
+            PolicyConfig::Ucb1 { alpha: 0.05 },
+            PolicyConfig::SwUcb { alpha: 0.05, lambda: 0.01, window: 500 },
+            PolicyConfig::EpsilonGreedy { eps0: 0.05, decay_c: 20.0 },
+            PolicyConfig::EnergyTs,
+            PolicyConfig::Static { arm: 8 },
+        ] {
+            let (mut state, mut params) = setup(&["tealeaf", "clvleaf"]);
+            params.policies = vec![cfg.clone()];
+            let mut policy = build_fleet_policy(&params, &FleetHyper::default(), 5);
+            let steps =
+                policy_run(&mut state, &params, policy.as_mut(), &mut Rng::new(5), 2_000);
+            assert!(steps > 0, "{cfg:?}");
+            assert!(state.cum_energy.iter().all(|&e| e > 0.0), "{cfg:?}");
+            // Deterministic given seed.
+            let (mut again, _) = setup(&["tealeaf", "clvleaf"]);
+            let mut policy2 = build_fleet_policy(&params, &FleetHyper::default(), 5);
+            policy_run(&mut again, &params, policy2.as_mut(), &mut Rng::new(5), 2_000);
+            assert_eq!(state.cum_energy, again.cum_energy, "{cfg:?}");
+        }
+    }
+
+    #[test]
+    fn mixed_policy_fleet_assigns_round_robin() {
+        let (mut state, mut params) = setup(&["tealeaf", "tealeaf", "tealeaf"]);
+        params.policies =
+            vec![PolicyConfig::Static { arm: 8 }, PolicyConfig::RoundRobin];
+        let mut policy = build_fleet_policy(&params, &FleetHyper::default(), 1);
+        assert!(policy.name().starts_with("Mixed["), "{}", policy.name());
+        policy_run(&mut state, &params, policy.as_mut(), &mut Rng::new(1), 500);
+        // Env 0 and 2 hold the default arm (zero switches); env 1 cycles.
+        assert_eq!(state.switches[0], 0.0);
+        assert_eq!(state.switches[2], 0.0);
+        assert!(state.switches[1] > 100.0);
+    }
+
+    #[test]
+    fn static_fleet_energy_matches_calibration() {
+        // Static arm 8 on tealeaf = the 1.6 GHz default: 109.79 kJ.
+        let (mut state, mut params) = setup(&["tealeaf"]);
+        params.policies = vec![PolicyConfig::Static { arm: 8 }];
+        let mut policy = build_fleet_policy(&params, &FleetHyper::default(), 2);
+        policy_run(&mut state, &params, policy.as_mut(), &mut Rng::new(2), 100_000);
+        assert!(state.all_done());
+        let kj = state.energy_kj(0);
+        assert!((kj - 109.79).abs() < 2.0, "kj={kj}");
+    }
+}

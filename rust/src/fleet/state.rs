@@ -8,29 +8,14 @@
 //! learned state plus accounting. Layouts are row-major (B, K) f32,
 //! matching the AOT artifact contract in `python/compile/model.py`.
 
+use crate::config::PolicyConfig;
 use crate::sim::freq::FreqDomain;
 use crate::workload::model::AppModel;
 
 /// Hyper-parameters fed to the step (matches `EnergyUcbConfig` semantics).
-#[derive(Clone, Copy, Debug)]
-pub struct FleetHyper {
-    pub alpha: f32,
-    pub lambda: f32,
-    pub mu_init: f32,
-    pub prior_n: f32,
-}
-
-impl Default for FleetHyper {
-    fn default() -> Self {
-        let c = crate::bandit::energyucb::EnergyUcbConfig::default();
-        FleetHyper {
-            alpha: c.alpha as f32,
-            lambda: c.lambda as f32,
-            mu_init: c.mu_init as f32,
-            prior_n: c.prior_n as f32,
-        }
-    }
-}
+/// The definition lives in the batch policy core — the single source of
+/// the SA-UCB arithmetic — and is re-exported here under its fleet name.
+pub use crate::bandit::batch::SaUcbHyper as FleetHyper;
 
 /// Per-environment calibrated parameters, row-major (B, K).
 #[derive(Clone, Debug)]
@@ -53,6 +38,13 @@ pub struct FleetParams {
     /// Joules charged per node-level DVFS transition (paper default:
     /// 0.3 J; `ref.py::SWITCH_ENERGY_J`).
     pub switch_energy_j: f32,
+    /// Policy selector: empty = the classic EnergyUCB fleet (driven by
+    /// [`FleetHyper`], the bit-pinned artifact path). One entry = that
+    /// policy batched natively where an SoA implementation exists
+    /// (`PolicyConfig::build_batch`). Multiple entries = a mixed-policy
+    /// fleet, environment `e` running `policies[e % len]` through the
+    /// scalar bridge. Consumed by `fleet::policy::build_fleet_policy`.
+    pub policies: Vec<PolicyConfig>,
 }
 
 impl FleetParams {
@@ -76,6 +68,7 @@ impl FleetParams {
             // Clamped to one interval: a stall >= dt would run work backwards.
             switch_stall_frac: (cost.latency_s / dt_s).min(1.0) as f32,
             switch_energy_j: cost.energy_j as f32,
+            policies: Vec::new(),
         };
         for (e, app) in apps.iter().enumerate() {
             let scale = app.true_reward(freqs, freqs.max_arm(), dt_s).abs();

@@ -29,6 +29,9 @@ pub struct RlPower {
     last_action: Option<usize>,
     t: u64,
     rng: Rng,
+    /// Construction seed, so `reset()` restores fresh-run behavior
+    /// byte-for-byte (the policy-contract suite pins this).
+    seed: u64,
 }
 
 impl RlPower {
@@ -44,6 +47,7 @@ impl RlPower {
             last_action: None,
             t: 0,
             rng: Rng::new(seed),
+            seed,
         }
     }
 
@@ -110,6 +114,7 @@ impl Policy for RlPower {
         self.state = 0;
         self.last_action = None;
         self.t = 0;
+        self.rng = Rng::new(self.seed);
     }
 }
 

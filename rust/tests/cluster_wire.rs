@@ -48,7 +48,7 @@ impl Gen for PolicyGen {
     type Value = PolicyConfig;
 
     fn generate(&self, rng: &mut Rng) -> PolicyConfig {
-        match rng.index(9) {
+        match rng.index(10) {
             0 => PolicyConfig::EnergyUcb(gen_ucb(rng)),
             1 => PolicyConfig::ConstrainedEnergyUcb { ucb: gen_ucb(rng), delta: rng.uniform() },
             2 => PolicyConfig::Ucb1 { alpha: rng.uniform() },
@@ -60,6 +60,11 @@ impl Gen for PolicyGen {
             5 => PolicyConfig::RoundRobin,
             6 => PolicyConfig::Static { arm: rng.index(9) },
             7 => PolicyConfig::RlPower,
+            8 => PolicyConfig::SwUcb {
+                alpha: rng.uniform(),
+                lambda: rng.uniform_range(0.0, 0.1),
+                window: 1 + rng.index(2_000),
+            },
             _ => PolicyConfig::DrlCap {
                 mode: ["pretrain", "online", "cross"][rng.index(3)].to_string(),
             },

@@ -1,0 +1,289 @@
+//! Policy-contract conformance suite, run over every `Policy` and
+//! `BatchPolicy` implementation (proptest_lite-driven):
+//!
+//! 1. `reset()` restores fresh-run behavior byte-for-byte — identical
+//!    selection trajectories before and after a reset on an identical
+//!    reward stream (this pins the RNG-reseeding contract for the
+//!    stochastic policies).
+//! 2. Selection is deterministic given the construction seed — two
+//!    identically-built instances produce identical trajectories.
+//! 3. A B = 1 batch reproduces the scalar policy on identical reward
+//!    streams: bit-for-bit for the f64 SoA implementations (UCB1, SW-UCB,
+//!    ε-greedy) and for the `Scalar` bridge of every scalar policy; the
+//!    f32 SA-UCB core (EnergyUCB) is pinned to within f32 index
+//!    resolution (disagreements are only legal at a near-tie of the
+//!    scalar index, and pull counts must still agree exactly).
+//!
+//! DRLCap is deliberately excluded: its `reset()` is mode-dependent by
+//! design (CrossDeploy keeps the pre-trained network), so the byte-for-byte
+//! contract does not apply; its determinism is covered by its own tests.
+
+use energyucb::bandit::batch::{
+    BatchEnergyUcb, BatchEpsilonGreedy, BatchPolicy, BatchSwUcb, BatchUcb1, SaUcbHyper, Scalar,
+};
+use energyucb::bandit::{
+    ConstrainedEnergyUcb, EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, InitStrategy,
+    Oracle, Policy, RoundRobin, SlidingWindowUcb, StaticPolicy, Ucb1,
+};
+use energyucb::rl::RlPower;
+use energyucb::testutil::proptest_lite::{forall_seeded, Gen};
+use energyucb::util::Rng;
+
+/// Every scalar policy under contract, built for `k` arms from `seed`.
+fn factories() -> Vec<(&'static str, fn(usize, u64) -> Box<dyn Policy>)> {
+    vec![
+        ("energyucb", |k, _s| Box::new(EnergyUcb::new(k, EnergyUcbConfig::default()))),
+        ("energyucb-warmup", |k, _s| {
+            Box::new(EnergyUcb::new(
+                k,
+                EnergyUcbConfig { init: InitStrategy::WarmupRoundRobin, ..Default::default() },
+            ))
+        }),
+        ("energyucb-discounted", |k, _s| {
+            Box::new(EnergyUcb::new(k, EnergyUcbConfig { discount: 0.99, ..Default::default() }))
+        }),
+        ("constrained", |k, _s| {
+            Box::new(ConstrainedEnergyUcb::new(k, EnergyUcbConfig::default(), 0.1))
+        }),
+        ("ucb1", |k, _s| Box::new(Ucb1::new(k, 0.05))),
+        ("swucb", |k, _s| Box::new(SlidingWindowUcb::new(k, 0.05, 0.01, 64))),
+        ("egreedy", |k, s| Box::new(EpsilonGreedy::new(k, 0.1, 10.0, s))),
+        ("energyts", |k, s| Box::new(EnergyTs::default_for(k, s))),
+        ("rrfreq", |k, _s| Box::new(RoundRobin::new(k))),
+        ("static", |k, _s| Box::new(StaticPolicy::new(k, k - 1))),
+        ("oracle", |k, _s| {
+            Box::new(Oracle::from_true_rewards(
+                &(0..k).map(|i| -1.0 - 0.05 * i as f64).collect::<Vec<_>>(),
+            ))
+        }),
+        ("rlpower", |k, s| Box::new(RlPower::new(k, s))),
+    ]
+}
+
+/// Drive a scalar policy for `steps` on the deterministic reward stream
+/// keyed by `stream_seed`; returns the selection trajectory. One RNG draw
+/// per step regardless of the arm chosen, so two passes stay comparable.
+fn drive_scalar(p: &mut dyn Policy, k: usize, steps: u64, stream_seed: u64) -> Vec<usize> {
+    let mut rng = Rng::new(stream_seed);
+    let mut out = Vec::with_capacity(steps as usize);
+    for t in 1..=steps {
+        let arm = p.select(t);
+        assert!(arm < k, "arm {arm} out of range (k={k})");
+        let reward = -(1.0 + 0.05 * arm as f64) + 0.05 * rng.gaussian();
+        let progress = 1e-3 * (1.0 + arm as f64 / k as f64);
+        p.update(arm, reward, progress);
+        out.push(arm);
+    }
+    out
+}
+
+struct SeedK;
+
+impl Gen for SeedK {
+    type Value = (u64, usize);
+    fn generate(&self, rng: &mut Rng) -> (u64, usize) {
+        (rng.next_u64(), 3 + rng.index(7)) // k in 3..=9
+    }
+}
+
+#[test]
+fn reset_restores_fresh_run_byte_for_byte() {
+    forall_seeded(0xC0_0001, 15, SeedK, |(seed, k)| {
+        factories().into_iter().all(|(name, mk)| {
+            let mut p = mk(*k, *seed);
+            let first = drive_scalar(p.as_mut(), *k, 250, seed ^ 0xABCD);
+            p.reset();
+            let second = drive_scalar(p.as_mut(), *k, 250, seed ^ 0xABCD);
+            if first != second {
+                eprintln!("reset not byte-for-byte: {name} (k={k}, seed={seed:#x})");
+                return false;
+            }
+            true
+        })
+    });
+}
+
+#[test]
+fn selection_is_deterministic_given_seed() {
+    forall_seeded(0xC0_0002, 15, SeedK, |(seed, k)| {
+        factories().into_iter().all(|(name, mk)| {
+            let mut a = mk(*k, *seed);
+            let mut b = mk(*k, *seed);
+            let ta = drive_scalar(a.as_mut(), *k, 250, seed ^ 0x1234);
+            let tb = drive_scalar(b.as_mut(), *k, 250, seed ^ 0x1234);
+            if ta != tb {
+                eprintln!("non-deterministic: {name} (k={k}, seed={seed:#x})");
+                return false;
+            }
+            true
+        })
+    });
+}
+
+/// Drive a B = 1 batch policy and a scalar policy side by side on the
+/// identical reward stream; returns false at the first selection mismatch.
+fn pair_runs_identically(
+    batch: &mut dyn BatchPolicy,
+    scalar: &mut dyn Policy,
+    k: usize,
+    steps: u64,
+    stream_seed: u64,
+) -> bool {
+    let ones = vec![1.0f32; k];
+    let mut sel = [0i32; 1];
+    let mut rng = Rng::new(stream_seed);
+    for t in 1..=steps {
+        batch.select_into(t, &ones, &mut sel);
+        let s_b = sel[0] as usize;
+        let s_s = scalar.select(t);
+        if s_b != s_s {
+            return false;
+        }
+        let reward = -(1.0 + 0.05 * s_b as f64) + 0.05 * rng.gaussian();
+        let progress = 1e-3 * (1.0 + s_b as f64 / k as f64);
+        batch.update_batch(&sel, &[reward], &[progress], &[1.0]);
+        scalar.update(s_s, reward, progress);
+    }
+    true
+}
+
+/// The f64 native SoA batch policies reproduce their scalar counterparts
+/// bit-for-bit at B = 1.
+#[test]
+fn batched_b1_equals_scalar_bit_for_bit() {
+    forall_seeded(0xC0_0003, 20, SeedK, |(seed, k)| {
+        let k = *k;
+        let stream = seed ^ 0x5EED;
+
+        let mut ucb_b = BatchUcb1::new(1, k, 0.05);
+        let mut ucb_s = Ucb1::new(k, 0.05);
+        if !pair_runs_identically(&mut ucb_b, &mut ucb_s, k, 300, stream) {
+            eprintln!("ucb1 B=1 != scalar (k={k}, seed={seed:#x})");
+            return false;
+        }
+
+        let mut sw_b = BatchSwUcb::new(1, k, 0.05, 0.01, 64);
+        let mut sw_s = SlidingWindowUcb::new(k, 0.05, 0.01, 64);
+        if !pair_runs_identically(&mut sw_b, &mut sw_s, k, 300, stream) {
+            eprintln!("swucb B=1 != scalar (k={k}, seed={seed:#x})");
+            return false;
+        }
+
+        let mut eg_b = BatchEpsilonGreedy::new(1, k, 0.1, 10.0, *seed);
+        let mut eg_s = EpsilonGreedy::new(k, 0.1, 10.0, *seed);
+        if !pair_runs_identically(&mut eg_b, &mut eg_s, k, 300, stream) {
+            eprintln!("egreedy B=1 != scalar (k={k}, seed={seed:#x})");
+            return false;
+        }
+        true
+    });
+}
+
+/// The `Scalar` bridge is a faithful adapter: bridging a policy at B = 1
+/// must not perturb its trajectory — for EVERY scalar policy under
+/// contract.
+#[test]
+fn scalar_bridge_b1_is_transparent() {
+    forall_seeded(0xC0_0004, 12, SeedK, |(seed, k)| {
+        factories().into_iter().all(|(name, mk)| {
+            let mut bridged = Scalar::new(vec![mk(*k, *seed)]);
+            let mut direct = mk(*k, *seed);
+            if !pair_runs_identically(&mut bridged, direct.as_mut(), *k, 250, seed ^ 0xB11D)
+            {
+                eprintln!("bridge perturbed {name} (k={k}, seed={seed:#x})");
+                return false;
+            }
+            true
+        })
+    });
+}
+
+/// The f32 SA-UCB batch core tracks the f64 scalar EnergyUCB to within
+/// f32 index resolution: selections may differ only at a near-tie of the
+/// scalar's own top-two index gap, and pull counts agree exactly when the
+/// trajectories are re-aligned on the batch's choice.
+#[test]
+fn batched_b1_energyucb_tracks_scalar_within_f32_resolution() {
+    forall_seeded(0xC0_0005, 20, SeedK, |(seed, k)| {
+        let k = *k;
+        let mut scalar = EnergyUcb::new(k, EnergyUcbConfig::default());
+        let mut batch = BatchEnergyUcb::new(1, k, SaUcbHyper::default());
+        let ones = vec![1.0f32; k];
+        let mut sel = [0i32; 1];
+        let mut rng = Rng::new(seed ^ 0xF32);
+        for t in 1..=400u64 {
+            batch.select_into(t, &ones, &mut sel);
+            let s_b = sel[0] as usize;
+            let s_s = scalar.select(t);
+            if s_b != s_s {
+                let mut idx: Vec<f64> = (0..k).map(|i| scalar.sa_ucb(i, t)).collect();
+                idx.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                if idx[0] - idx[1] > 5e-3 {
+                    eprintln!(
+                        "energyucb diverged on a clear gap {} at t={t} (k={k}, seed={seed:#x})",
+                        idx[0] - idx[1]
+                    );
+                    return false;
+                }
+            }
+            // Synthesize the reward in f32 (the fleet contract) so the f64
+            // handoff is exact, and re-align both on the batch's choice.
+            let r = (-(1.0 + 0.03 * s_b as f64) + 0.05 * rng.gaussian()) as f32 as f64;
+            batch.update_batch(&sel, &[r], &[1e-3], &[1.0]);
+            scalar.update(s_b, r, 1e-3);
+        }
+        (0..k).all(|i| batch.counts()[i] as f64 == scalar.count(i))
+    });
+}
+
+/// Batch policies obey the same reset/determinism contract as scalar ones.
+#[test]
+fn batch_policies_reset_and_determinism() {
+    let mk_all = |k: usize, seed: u64| -> Vec<Box<dyn BatchPolicy>> {
+        vec![
+            Box::new(BatchEnergyUcb::with_initial_arm(3, k, SaUcbHyper::default(), k - 1)),
+            Box::new(BatchUcb1::new(3, k, 0.05)),
+            Box::new(BatchSwUcb::new(3, k, 0.05, 0.01, 64)),
+            Box::new(BatchEpsilonGreedy::new(3, k, 0.1, 10.0, seed)),
+            Box::new(Scalar::new(vec![
+                EnergyTs::default_for(k, seed),
+                EnergyTs::default_for(k, seed ^ 1),
+                EnergyTs::default_for(k, seed ^ 2),
+            ])),
+        ]
+    };
+    let drive = |p: &mut dyn BatchPolicy, k: usize, stream_seed: u64| -> Vec<i32> {
+        let ones = vec![1.0f32; 3 * k];
+        let mut sel = vec![0i32; 3];
+        let mut rng = Rng::new(stream_seed);
+        let mut hist = Vec::new();
+        for t in 1..=200u64 {
+            p.select_into(t, &ones, &mut sel);
+            let rewards: Vec<f64> =
+                sel.iter().map(|&s| -(1.0 + 0.05 * s as f64) + 0.05 * rng.gaussian()).collect();
+            p.update_batch(&sel, &rewards, &[1e-3; 3], &[1.0; 3]);
+            hist.extend_from_slice(&sel);
+        }
+        hist
+    };
+    forall_seeded(0xC0_0006, 10, SeedK, |(seed, k)| {
+        for mut p in mk_all(*k, *seed) {
+            let first = drive(p.as_mut(), *k, seed ^ 0x7777);
+            p.reset();
+            let second = drive(p.as_mut(), *k, seed ^ 0x7777);
+            if first != second {
+                eprintln!("batch reset not byte-for-byte: {} (k={k})", p.name());
+                return false;
+            }
+        }
+        for (mut a, mut b) in mk_all(*k, *seed).into_iter().zip(mk_all(*k, *seed)) {
+            let ta = drive(a.as_mut(), *k, seed ^ 0x8888);
+            let tb = drive(b.as_mut(), *k, seed ^ 0x8888);
+            if ta != tb {
+                eprintln!("batch non-deterministic: {} (k={k})", a.name());
+                return false;
+            }
+        }
+        true
+    });
+}
