@@ -47,7 +47,8 @@ fn run_phased(workload: &PhasedWorkload, policy: &mut dyn Policy, seed: u64) -> 
         let arm = policy.select(t);
         let obs = node_ref.step(arm);
         let raw = RewardForm::EnergyRatio.raw(obs.gpu_energy_j, obs.core_util, obs.uncore_util);
-        policy.update(arm, normalizer.normalize(raw).max(-3.0), obs.progress);
+        // The normalizer owns the winsorize clamp (same rule as the session tier).
+        policy.update(arm, normalizer.normalize(raw), obs.progress);
         // Node-internal progress is the fraction of the *phase model's*
         // total work; convert to phase-weighted global progress.
         consumed_in_phase += obs.progress;

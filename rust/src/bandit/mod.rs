@@ -141,18 +141,50 @@ impl RewardForm {
 /// because the early window is noisy and heavy-tailed: a single spiked
 /// reading must not set the scale 4x off. Purely online — no prior
 /// profiling, preserving the paper's fully-online setting.
-#[derive(Clone, Debug, Default)]
+///
+/// Normalized rewards are additionally winsorized at [`clamp_lo`]
+/// (default -3: counter glitches are capped at 3x the typical magnitude
+/// before any policy sees them — a controller robustness choice every
+/// method benefits from equally). The clamp lives here, not in the
+/// session loop, so every tier normalizing rewards applies the identical
+/// rule instead of silently skipping it.
+///
+/// [`clamp_lo`]: RewardNormalizer::with_clamp
+#[derive(Clone, Debug)]
 pub struct RewardNormalizer {
     warmup: Vec<f64>,
     scale: Option<f64>,
+    clamp_lo: f64,
 }
 
 /// Number of samples the scale estimate is based on.
 const NORM_WARMUP: usize = 11;
 
+/// Default winsorization floor in normalized units (3x the typical
+/// reward magnitude; rewards are negative, so this is a lower clamp).
+const NORM_CLAMP_LO: f64 = -3.0;
+
+impl Default for RewardNormalizer {
+    fn default() -> Self {
+        RewardNormalizer { warmup: Vec::new(), scale: None, clamp_lo: NORM_CLAMP_LO }
+    }
+}
+
 impl RewardNormalizer {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Override the winsorization floor (normalized units). Use
+    /// `f64::NEG_INFINITY` to disable clamping entirely.
+    pub fn with_clamp(clamp_lo: f64) -> Self {
+        assert!(!clamp_lo.is_nan(), "clamp_lo must not be NaN");
+        RewardNormalizer { clamp_lo, ..Self::default() }
+    }
+
+    /// The active winsorization floor.
+    pub fn clamp_lo(&self) -> f64 {
+        self.clamp_lo
     }
 
     pub fn normalize(&mut self, raw: f64) -> f64 {
@@ -170,7 +202,7 @@ impl RewardNormalizer {
                 med
             }
         };
-        raw / scale
+        (raw / scale).max(self.clamp_lo)
     }
 
     /// The established scale, if fixed yet (median of the warm-up window).
@@ -234,5 +266,31 @@ mod tests {
         let mut n = RewardNormalizer::new();
         assert!(n.normalize(0.0).is_finite());
         assert!(n.normalize(-3.0).is_finite());
+    }
+
+    #[test]
+    fn normalizer_winsorizes_at_clamp_lo() {
+        // Settle the scale at 50, then feed a 10x glitch: the normalized
+        // value is capped at the default -3 floor.
+        let mut n = RewardNormalizer::new();
+        for _ in 0..NORM_WARMUP {
+            n.normalize(-50.0);
+        }
+        assert_eq!(n.clamp_lo(), -3.0);
+        assert_eq!(n.normalize(-500.0), -3.0);
+        // In-range values pass through untouched.
+        assert!((n.normalize(-25.0) - (-0.5)).abs() < 1e-12);
+        // Custom floor.
+        let mut n = RewardNormalizer::with_clamp(-1.5);
+        for _ in 0..NORM_WARMUP {
+            n.normalize(-50.0);
+        }
+        assert_eq!(n.normalize(-500.0), -1.5);
+        // Disabled floor lets the glitch through.
+        let mut n = RewardNormalizer::with_clamp(f64::NEG_INFINITY);
+        for _ in 0..NORM_WARMUP {
+            n.normalize(-50.0);
+        }
+        assert_eq!(n.normalize(-500.0), -10.0);
     }
 }

@@ -17,13 +17,17 @@ use anyhow::{bail, Context, Result};
 
 use crate::bandit::{BatchPolicy, Policy};
 use crate::config::ExperimentConfig;
-use crate::control::{run_repeated, RepeatedMetrics, SessionCfg};
+use crate::control::{
+    drive, run_repeated, Controller, Recording, RepeatedMetrics, ReplayBackend, ReplayHeader,
+    RunResult, SessionCfg, SimBackend,
+};
 use crate::experiments::{all_experiments, experiment_by_id, ExpContext};
 use crate::fleet::{native, FleetHyper, FleetParams, FleetState};
 use crate::sim::freq::FreqDomain;
 use crate::util::table::{fnum, fnum_sep, Table};
 use crate::util::Rng;
 use crate::workload::calibration;
+use crate::workload::model::AppModel;
 use args::Args;
 
 pub const USAGE: &str = "\
@@ -33,6 +37,8 @@ USAGE:
   energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--jobs J]
                 [--policy NAME] [--quick]
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
+                [--record-telemetry] [--record-out FILE]
+  energyucb replay --in FILE [--policy NAME]
   energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
                   [--policy NAME[,NAME,...]]
   energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config FILE]
@@ -43,6 +49,14 @@ USAGE:
 Experiments regenerate the paper's tables/figures (see `energyucb list`).
 --jobs shards the experiment grid across J worker threads (default: all
 cores); output is byte-identical at any J (see EXPERIMENTS.md).
+
+Run drives the sans-IO controller against the simulated GEOPM backend.
+--record-telemetry tees every sample to a JSONL log (default
+<out_dir>/telemetry_<app>.jsonl; requires --reps 1). `replay` feeds a
+recorded log back through the controller: with the recording's own
+policy the report is byte-identical to the original run; with --policy
+it evaluates a different policy counterfactually on the frozen telemetry
+(EXPERIMENTS.md §Controller).
 
 Fleet runs B lockstep environments through the batch policy core
 (EXPERIMENTS.md §Engine). --policy selects any policy from `energyucb
@@ -69,6 +83,7 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
     match cmd.as_str() {
         "exp" => cmd_exp(rest),
         "run" => cmd_run(rest),
+        "replay" => cmd_replay(rest),
         "fleet" => cmd_fleet(rest),
         "cluster" => cmd_cluster(rest),
         // Hidden: the shard-worker half of `cluster --shards` (frames on
@@ -128,9 +143,47 @@ fn cmd_exp(rest: &[String]) -> Result<i32> {
     Ok(0)
 }
 
+/// The `run`/`replay` report table (shared so record→replay output is
+/// byte-comparable).
+fn session_table() -> Table {
+    Table::new(vec![
+        "app", "policy", "energy (kJ)", "saved (kJ)", "regret (kJ)", "time (s)", "switches",
+    ])
+}
+
+/// One `run`/`replay` report row from per-run metrics. Saved energy goes
+/// through [`RunMetrics::saved_energy_kj`] so budget-capped sessions
+/// compare against the same completed work fraction (full runs are
+/// arithmetically identical to the old max-arm-baseline formula).
+///
+/// [`RunMetrics::saved_energy_kj`]: crate::control::RunMetrics::saved_energy_kj
+fn session_table_row(
+    table: &mut Table,
+    app: &AppModel,
+    freqs: &FreqDomain,
+    policy_name: &str,
+    runs: &[crate::control::RunMetrics],
+) {
+    let agg = RepeatedMetrics::from_runs(runs);
+    let saved_mean = crate::util::stats::mean(
+        &runs.iter().map(|r| r.saved_energy_kj(app, freqs)).collect::<Vec<_>>(),
+    );
+    table.row(vec![
+        app.name.to_string(),
+        policy_name.to_string(),
+        fnum_sep(agg.energy_mean_kj, 2),
+        fnum(saved_mean, 2),
+        fnum(agg.energy_mean_kj - app.optimal_energy_kj(), 2),
+        fnum(agg.time_mean_s, 2),
+        fnum(agg.switches_mean, 0),
+    ]);
+}
+
 fn cmd_run(rest: &[String]) -> Result<i32> {
-    let args = Args::parse(rest, &["trace"])?;
-    args.ensure_known(&["config", "app", "policy", "reps", "seed", "alpha", "lambda", "delta"])?;
+    let args = Args::parse(rest, &["trace", "record-telemetry"])?;
+    args.ensure_known(&[
+        "config", "app", "policy", "reps", "seed", "alpha", "lambda", "delta", "record-out",
+    ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
@@ -161,34 +214,51 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
     if let Some(s) = args.get_u64("seed")? {
         cfg.seed = s;
     }
+    let record = args.flag("record-telemetry");
+    if record && cfg.reps != 1 {
+        bail!("run: --record-telemetry records one session (use --reps 1)");
+    }
+    if !record && args.get("record-out").is_some() {
+        bail!("run: --record-out requires --record-telemetry");
+    }
+    if record && args.get("record-out").is_some() && cfg.apps.len() > 1 {
+        bail!("run: --record-out names one log; multiple apps would overwrite it");
+    }
 
-    let freqs = FreqDomain::aurora().with_switch_cost(cfg.switch_cost);
-    let mut table = Table::new(vec![
-        "app", "policy", "energy (kJ)", "saved (kJ)", "regret (kJ)", "time (s)", "switches",
-    ]);
+    let freqs = cfg.freqs.clone().with_switch_cost(cfg.switch_cost);
+    let mut table = session_table();
     for name in &cfg.apps {
         let app = calibration::app(name).with_context(|| format!("unknown app {name}"))?;
+        if app.energy_kj.len() != freqs.k() {
+            bail!(
+                "run: [freq] domain has {} arms but app {name} is calibrated for {}",
+                freqs.k(),
+                app.energy_kj.len()
+            );
+        }
         let mut policy: Box<dyn Policy> = cfg.build_policy(freqs.k(), cfg.seed);
         let scfg = SessionCfg {
             seed: cfg.seed,
+            dt_s: cfg.dt_s,
             reward_form: cfg.reward_form,
             record_trace: args.flag("trace"),
+            freqs: cfg.freqs.clone(),
             switch_cost: cfg.switch_cost,
             ..SessionCfg::default()
         };
-        let results = run_repeated(&app, policy.as_mut(), &scfg, cfg.reps, cfg.seed);
-        let agg = RepeatedMetrics::from_runs(
-            &results.iter().map(|r| r.metrics.clone()).collect::<Vec<_>>(),
-        );
-        table.row(vec![
-            name.to_string(),
-            policy.name(),
-            fnum_sep(agg.energy_mean_kj, 2),
-            fnum(app.energy_kj[freqs.max_arm()] - agg.energy_mean_kj, 2),
-            fnum(agg.energy_mean_kj - app.optimal_energy_kj(), 2),
-            fnum(agg.time_mean_s, 2),
-            fnum(agg.switches_mean, 0),
-        ]);
+        let results = if record {
+            let path = match args.get("record-out") {
+                Some(p) => PathBuf::from(p),
+                None => PathBuf::from(&cfg.out_dir).join(format!("telemetry_{name}.jsonl")),
+            };
+            let result = record_session(&app, policy.as_mut(), &scfg, &cfg.policy, &path)?;
+            eprintln!("recorded telemetry to {}", path.display());
+            vec![result]
+        } else {
+            run_repeated(&app, policy.as_mut(), &scfg, cfg.reps, cfg.seed)
+        };
+        let runs: Vec<_> = results.iter().map(|r| r.metrics.clone()).collect();
+        session_table_row(&mut table, &app, &freqs, &policy.name(), &runs);
         if args.flag("trace") {
             if let Some(tr) = &results[0].trace {
                 let path = PathBuf::from(&cfg.out_dir).join(format!("trace_{name}.csv"));
@@ -198,6 +268,91 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
         }
     }
     println!("{}", table.render());
+    Ok(0)
+}
+
+/// Run one session with the [`Recording`] tee: same semantics as one
+/// `run_repeated` rep (reset, seed from `cfg`), plus a telemetry log at
+/// `path` replayable by `energyucb replay`.
+fn record_session(
+    app: &AppModel,
+    policy: &mut dyn Policy,
+    scfg: &SessionCfg,
+    policy_cfg: &crate::config::PolicyConfig,
+    path: &std::path::Path,
+) -> Result<RunResult> {
+    policy.reset();
+    let header = ReplayHeader {
+        app: app.name.to_string(),
+        policy: Some(policy_cfg.clone()),
+        session: scfg.clone(),
+    };
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating telemetry log {}", path.display()))?;
+    let sink = std::io::BufWriter::new(file);
+    let mut backend = Recording::new(SimBackend::new(app, scfg), sink, &header)?;
+    let controller = Controller::new(app, policy, scfg);
+    let result = drive(controller, &mut backend)?;
+    backend.finish()?;
+    Ok(result)
+}
+
+/// Feed a recorded telemetry log back through the controller
+/// (`energyucb replay --in run.jsonl [--policy NAME]`). Without
+/// `--policy` the recording's own policy config is rebuilt, reproducing
+/// the original report byte-for-byte; with it, the chosen policy is
+/// evaluated counterfactually against the frozen sample stream (energy
+/// totals remain the recorded run's — only decisions and regret change).
+fn cmd_replay(rest: &[String]) -> Result<i32> {
+    let args = Args::parse(rest, &[])?;
+    args.ensure_known(&["in", "policy"])?;
+    let Some(path) = args.get("in") else {
+        bail!("replay: --in FILE is required");
+    };
+    let mut backend = ReplayBackend::open(std::path::Path::new(path))?;
+    let header = backend.header().clone();
+    let app = calibration::app(&header.app)
+        .with_context(|| format!("recording references unknown app {}", header.app))?;
+    let scfg = header.session.clone();
+    // A recording is untrusted input: re-run the same validations
+    // cmd_run / resolve_plans apply, as errors rather than the
+    // controller's internal asserts.
+    if app.energy_kj.len() != scfg.freqs.k() {
+        bail!(
+            "replay: recording's frequency domain has {} arms but app {} is calibrated for {}",
+            scfg.freqs.k(),
+            header.app,
+            app.energy_kj.len()
+        );
+    }
+    let policy_cfg = match args.get("policy") {
+        Some(name) => parse_policy_name(name)?,
+        None => header
+            .policy
+            .clone()
+            .context("recording carries no policy config; pass --policy NAME")?,
+    };
+    if let crate::config::PolicyConfig::Static { arm } = &policy_cfg {
+        if *arm >= scfg.freqs.k() {
+            bail!("replay: static arm {arm} out of range (K = {})", scfg.freqs.k());
+        }
+    }
+    let mut policy = policy_cfg.build(scfg.freqs.k(), scfg.seed);
+    // Fresh-run contract: reset == freshly built, matching the recorded
+    // session's starting state byte-for-byte.
+    policy.reset();
+    let controller = Controller::new(&app, policy.as_mut(), &scfg);
+    let result = drive(controller, &mut backend)?;
+    let freqs = scfg.freqs.clone().with_switch_cost(scfg.switch_cost);
+    let mut table = session_table();
+    let runs = [result.metrics.clone()];
+    session_table_row(&mut table, &app, &freqs, &result.metrics.policy, &runs);
+    println!("{}", table.render());
+    eprintln!("replayed {} recorded steps from {path}", result.metrics.steps);
     Ok(0)
 }
 
@@ -241,7 +396,15 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
     // scalar bridge delegates feasibility to the wrapped policy, so
     // combining --delta with a bridge-backed policy would silently run
     // unconstrained (and make the feasible-best regret baseline lie).
+    // Mixed lists always route through the bridge (build_fleet_policy),
+    // even when every entry would honor the mask natively on its own.
     if args.get_f64("delta")?.is_some() {
+        if params.policies.len() > 1 {
+            bail!(
+                "fleet: --delta cannot combine with a mixed-policy list — mixed fleets \
+                 run via the scalar bridge, which ignores the QoS mask"
+            );
+        }
         if let Some(bad) = params.policies.iter().find(|p| !p.batch_honors_mask()) {
             bail!(
                 "fleet: --delta needs a mask-honoring batched policy, but {bad:?} \
@@ -549,6 +712,82 @@ mod tests {
     }
 
     #[test]
+    fn record_and_replay_round_trip() {
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_cli_replay_{}", std::process::id()));
+        let log = dir.join("rec.jsonl");
+        let log_s = log.to_str().unwrap().to_string();
+        let code = dispatch(&[
+            "run", "--app", "tealeaf", "--policy", "static", "--reps", "1", "--seed", "9",
+            "--record-telemetry", "--record-out", &log_s,
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        // Replay with the recorded policy config.
+        assert_eq!(dispatch(&["replay", "--in", &log_s]).unwrap(), 0);
+        // Counterfactual replay with a different policy.
+        assert_eq!(dispatch(&["replay", "--in", &log_s, "--policy", "rrfreq"]).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn record_and_replay_reject_bad_invocations() {
+        // Recording is one session by definition.
+        assert!(dispatch(&[
+            "run", "--app", "tealeaf", "--policy", "static", "--reps", "2",
+            "--record-telemetry",
+        ])
+        .is_err());
+        // --record-out without --record-telemetry is a flag-soup error.
+        assert!(
+            dispatch(&["run", "--app", "tealeaf", "--record-out", "x.jsonl"]).is_err()
+        );
+        assert!(dispatch(&["replay"]).is_err());
+        assert!(dispatch(&["replay", "--in", "/nonexistent/rec.jsonl"]).is_err());
+        assert!(dispatch(&["replay", "--bogus", "1"]).is_err());
+    }
+
+    #[test]
+    fn replay_rejects_tampered_recordings_without_panicking() {
+        use crate::control::{BackendTotals, ReplayHeader, TelemetryFrame};
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_cli_tamper_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let end = TelemetryFrame::End { totals: BackendTotals::default() }.encode_line();
+
+        // Domain/calibration mismatch: a 1-arm domain against tealeaf's
+        // 9-entry table must be a CLI error, not the controller assert.
+        let bad_domain = dir.join("bad_domain.jsonl");
+        let header = ReplayHeader {
+            app: "tealeaf".into(),
+            policy: None,
+            session: SessionCfg {
+                freqs: crate::sim::freq::FreqDomain::new(vec![1.0]),
+                ..SessionCfg::default()
+            },
+        };
+        let text = format!("{}\n{end}\n", TelemetryFrame::Header(header).encode_line());
+        std::fs::write(&bad_domain, text).unwrap();
+        let path = bad_domain.to_str().unwrap().to_string();
+        assert!(dispatch(&["replay", "--in", &path, "--policy", "rrfreq"]).is_err());
+
+        // Out-of-range static arm in the recorded policy config (the
+        // config parser can't produce this; a hand-edited wire can).
+        let bad_arm = dir.join("bad_arm.jsonl");
+        let header = ReplayHeader {
+            app: "tealeaf".into(),
+            policy: Some(crate::config::PolicyConfig::Static { arm: 12 }),
+            session: SessionCfg::default(),
+        };
+        let text = format!("{}\n{end}\n", TelemetryFrame::Header(header).encode_line());
+        std::fs::write(&bad_arm, text).unwrap();
+        let path = bad_arm.to_str().unwrap().to_string();
+        assert!(dispatch(&["replay", "--in", &path]).is_err());
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn cluster_small_run() {
         let code = dispatch(&[
             "cluster", "--nodes", "3", "--jobs", "2", "--scenario", "staggered", "--seed", "5",
@@ -628,6 +867,13 @@ mod tests {
         assert!(dispatch(&[
             "fleet", "--apps", "tealeaf", "--batch", "2", "--steps", "50", "--delta", "0.05",
             "--policy", "energyts",
+        ])
+        .is_err());
+        // Mixed lists always run bridged, even if each entry would honor
+        // the mask natively on its own — the combination is refused too.
+        assert!(dispatch(&[
+            "fleet", "--apps", "tealeaf", "--batch", "2", "--steps", "50", "--delta", "0.05",
+            "--policy", "ucb1,swucb",
         ])
         .is_err());
         // Mask-honoring batched policies accept the combination.

@@ -46,6 +46,12 @@ pub struct NodeAssignment {
     /// Per-node DVFS transition cost (heterogeneous fleets); `None` = the
     /// cluster session default.
     pub switch_cost: Option<SwitchCost>,
+    /// Per-node frequency-domain override (ascending GHz arm set);
+    /// `None` = the cluster session default. Makes heterogeneous
+    /// frequency domains per node expressible on the wire; the domain
+    /// length must match the app's calibration table (9 for the shipped
+    /// suite).
+    pub freqs_ghz: Option<Vec<f64>>,
 }
 
 impl NodeAssignment {
@@ -58,6 +64,7 @@ impl NodeAssignment {
             max_steps: None,
             policy: None,
             switch_cost: None,
+            freqs_ghz: None,
         }
     }
 }
@@ -169,10 +176,25 @@ pub(crate) fn resolve_plans(
             let app = calibration::app(&a.app)
                 .ok_or_else(|| anyhow::anyhow!("unknown app {}", a.app))?;
             let base = &cfg.session;
+            let freqs = match &a.freqs_ghz {
+                Some(ghz) => FreqDomain::try_new(ghz.clone())
+                    .map_err(|e| anyhow::anyhow!("node {}: {e}", a.node))?,
+                None => base.freqs.clone(),
+            };
+            if freqs.k() != app.energy_kj.len() {
+                anyhow::bail!(
+                    "node {}: frequency domain has {} arms but app {} is calibrated for {}",
+                    a.node,
+                    freqs.k(),
+                    a.app,
+                    app.energy_kj.len()
+                );
+            }
             let session = SessionCfg {
                 seed: a.seed,
                 max_steps: a.max_steps.unwrap_or(base.max_steps),
                 switch_cost: a.switch_cost.unwrap_or(base.switch_cost),
+                freqs,
                 ..base.clone()
             };
             if session.switch_cost.latency_s >= session.dt_s {
@@ -183,12 +205,17 @@ pub(crate) fn resolve_plans(
                     session.dt_s
                 );
             }
-            Ok(NodePlan {
-                node: a.node,
-                app,
-                policy: a.policy.clone().unwrap_or_else(|| cfg.policy.clone()),
-                session,
-            })
+            let policy = a.policy.clone().unwrap_or_else(|| cfg.policy.clone());
+            if let PolicyConfig::Static { arm } = &policy {
+                if *arm >= session.freqs.k() {
+                    anyhow::bail!(
+                        "node {}: static arm {arm} out of range (K = {})",
+                        a.node,
+                        session.freqs.k()
+                    );
+                }
+            }
+            Ok(NodePlan { node: a.node, app, policy, session })
         })
         .collect()
 }
@@ -246,7 +273,9 @@ impl Leader {
         // name should fail here, not as a subprocess error frame. The
         // per-node resolve work is repeated inside each shard, but it is
         // string lookups and config clones — noise next to the sessions.
-        resolve_plans(&self.cfg, assignments)?;
+        // The resolved per-node frequency domains also feed the merge's
+        // saved-energy baseline (heterogeneous domains are expressible).
+        let domains = node_domains(&resolve_plans(&self.cfg, assignments)?);
         let parts = partition(assignments, shards);
         // Divide the worker-thread budget across the concurrent shards
         // (ceiling, so every shard keeps >= 1 thread): K shards each
@@ -289,7 +318,7 @@ impl Leader {
                 assignments.len()
             );
         }
-        merge(results, &telemetry)
+        merge(results, &telemetry, &domains)
     }
 
     /// Legacy fixed-wave scheduler: chunk the plans into waves of `jobs`
@@ -299,6 +328,7 @@ impl Leader {
     /// baseline for the work-stealing path.
     pub fn run_waves(&self, assignments: &[NodeAssignment]) -> anyhow::Result<ClusterReport> {
         let plans = resolve_plans(&self.cfg, assignments)?;
+        let domains = node_domains(&plans);
         // Node-id -> result-slot map, precomputed once (the drain loop
         // previously searched the assignment list per Done event: O(n^2)).
         let slot_of: BTreeMap<usize, usize> =
@@ -307,16 +337,16 @@ impl Leader {
         let mut results: Vec<Option<NodeResult>> = (0..plans.len()).map(|_| None).collect();
         let mut telemetry = Recorder::new();
 
-        let freqs = FreqDomain::aurora();
         for wave in plans.chunks(self.cfg.jobs) {
             std::thread::scope(|scope| -> anyhow::Result<()> {
                 let mut handles = Vec::new();
                 for p in wave {
                     let tx = tx.clone();
                     let hb = self.cfg.heartbeat_steps;
-                    let freqs = &freqs;
                     handles.push(scope.spawn(move || {
-                        let policy = p.policy.build(freqs.k(), p.session.seed);
+                        // Policy arity follows the plan's own frequency
+                        // domain (per-node domains are expressible).
+                        let policy = p.policy.build(p.session.freqs.k(), p.session.seed);
                         worker::run_node(p.node, &p.app, policy, &p.session, hb, &tx)
                     }));
                 }
@@ -345,8 +375,14 @@ impl Leader {
 
         let results: Vec<NodeResult> =
             results.into_iter().map(|r| r.expect("all nodes done")).collect();
-        merge(results, &telemetry)
+        merge(results, &telemetry, &domains)
     }
+}
+
+/// Node-id → resolved frequency domain map (for the merge's per-node
+/// saved-energy baseline).
+fn node_domains(plans: &[NodePlan]) -> BTreeMap<usize, FreqDomain> {
+    plans.iter().map(|p| (p.node, p.session.freqs.clone())).collect()
 }
 
 /// Fold a worker event into the telemetry recorder (heartbeat stream).
@@ -362,9 +398,12 @@ fn record_event(telemetry: &mut Recorder, ev: &WorkerEvent) {
 
 /// Stable merge: order by node id, then aggregate in that fixed order so
 /// floating-point totals are independent of completion order.
-fn merge(mut nodes: Vec<NodeResult>, telemetry: &Recorder) -> anyhow::Result<ClusterReport> {
+fn merge(
+    mut nodes: Vec<NodeResult>,
+    telemetry: &Recorder,
+    domains: &BTreeMap<usize, FreqDomain>,
+) -> anyhow::Result<ClusterReport> {
     nodes.sort_by_key(|r| r.node);
-    let freqs = FreqDomain::aurora();
     let mut total = 0.0;
     let mut saved = 0.0;
     let mut per_app_acc: BTreeMap<String, Welford> = BTreeMap::new();
@@ -375,7 +414,10 @@ fn merge(mut nodes: Vec<NodeResult>, telemetry: &Recorder) -> anyhow::Result<Clu
         // job; `saved_energy_kj` scales the default-frequency baseline by
         // the true completed work fraction so "saved" compares like with
         // like (the metric owns the scaling since the RunMetrics fix).
-        saved += r.metrics.saved_energy_kj(&app, &freqs);
+        // The baseline's max arm comes from the node's own resolved
+        // domain, not a hard-coded Aurora (heterogeneous fleets).
+        let freqs = domains.get(&r.node).expect("resolved plan for every result");
+        saved += r.metrics.saved_energy_kj(&app, freqs);
         per_app_acc.entry(r.app.clone()).or_default().push(r.metrics.gpu_energy_kj);
     }
     let per_app = per_app_acc

@@ -201,6 +201,9 @@ impl ScenarioSchedule {
                     max_steps,
                     policy: slot.policy.clone(),
                     switch_cost,
+                    // Scenario presets share the session-default domain;
+                    // per-node domains arrive via explicit assignments.
+                    freqs_ghz: None,
                 }
             })
             .collect())

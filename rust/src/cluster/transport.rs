@@ -24,7 +24,6 @@ use std::sync::mpsc;
 use anyhow::Context;
 
 use crate::exec::run_indexed;
-use crate::sim::freq::FreqDomain;
 
 use super::leader::{resolve_plans, ClusterConfig, NodeAssignment};
 use super::wire::Frame;
@@ -93,12 +92,13 @@ where
             }
             Ok(())
         });
-        let freqs = FreqDomain::aurora();
         {
             let tx = &tx;
             run_indexed(cfg.jobs, plans.len(), |i| {
                 let p = &plans[i];
-                let policy = p.policy.build(freqs.k(), p.session.seed);
+                // Policy arity follows the plan's own frequency domain
+                // (per-node domains are expressible).
+                let policy = p.policy.build(p.session.freqs.k(), p.session.seed);
                 worker::run_node(p.node, &p.app, policy, &p.session, cfg.heartbeat_steps, tx);
             });
         }

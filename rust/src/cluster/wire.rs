@@ -27,126 +27,23 @@ use crate::bandit::energyucb::{EnergyUcbConfig, InitStrategy};
 use crate::bandit::RewardForm;
 use crate::config::PolicyConfig;
 use crate::control::{RunMetrics, SessionCfg};
-use crate::sim::freq::SwitchCost;
+use crate::sim::freq::{FreqDomain, SwitchCost};
 use crate::util::io::Json;
+use crate::util::wire::{
+    bool_field, err, f64_field, f64s_from_json, f64s_to_json, field, str_field, u64_field,
+    usize_field,
+};
 
 use super::leader::NodeAssignment;
 use super::worker::{NodeResult, WorkerEvent};
 
-/// Decode failure: the line was not valid JSON, or was valid JSON that is
-/// not a well-formed message.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct WireError(pub String);
-
-impl std::fmt::Display for WireError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "wire decode error: {}", self.0)
-    }
-}
-
-impl std::error::Error for WireError {}
-
-fn err<T>(msg: impl Into<String>) -> Result<T, WireError> {
-    Err(WireError(msg.into()))
-}
-
-/// Symmetric JSON codec for one wire type: `from_wire(&to_wire(x)) == x`.
-pub trait WireCodec: Sized {
-    fn to_wire(&self) -> Json;
-    fn from_wire(v: &Json) -> Result<Self, WireError>;
-}
-
-/// Largest integer magnitude `Json::Num` (an f64) represents exactly.
-const MAX_EXACT_INT: u64 = 1 << 53;
-
-/// Encode an f64 losslessly. Ordinary values ride `Json::Num` (shortest
-/// round-trip formatting); the values the JSON number grammar cannot
-/// carry — NaN, ±inf (the writer renders them as `null`) and -0.0 (the
-/// writer's integer path renders it as `0`) — ride string sentinels.
-pub fn f64_to_json(x: f64) -> Json {
-    if x.is_nan() {
-        Json::Str("nan".to_string())
-    } else if x == f64::INFINITY {
-        Json::Str("inf".to_string())
-    } else if x == f64::NEG_INFINITY {
-        Json::Str("-inf".to_string())
-    } else if x == 0.0 && x.is_sign_negative() {
-        Json::Str("-0".to_string())
-    } else {
-        Json::Num(x)
-    }
-}
-
-/// Decode the [`f64_to_json`] encoding (number or sentinel string).
-pub fn f64_from_json(v: &Json) -> Result<f64, WireError> {
-    match v {
-        Json::Num(x) => Ok(*x),
-        Json::Str(s) => match s.as_str() {
-            "nan" => Ok(f64::NAN),
-            "inf" => Ok(f64::INFINITY),
-            "-inf" => Ok(f64::NEG_INFINITY),
-            "-0" => Ok(-0.0),
-            other => err(format!("bad float sentinel: {other:?}")),
-        },
-        _ => err("expected a number"),
-    }
-}
-
-/// Encode a u64 losslessly: values up to 2^53 ride as JSON numbers, the
-/// rest (hash-derived seeds, sentinel step caps) as decimal strings.
-pub fn u64_to_json(x: u64) -> Json {
-    if x <= MAX_EXACT_INT {
-        Json::Num(x as f64)
-    } else {
-        Json::Str(x.to_string())
-    }
-}
-
-/// Decode the [`u64_to_json`] encoding (number or decimal string).
-pub fn u64_from_json(v: &Json) -> Result<u64, WireError> {
-    match v {
-        Json::Num(x) => {
-            if x.is_finite() && *x >= 0.0 && x.trunc() == *x && *x <= MAX_EXACT_INT as f64 {
-                Ok(*x as u64)
-            } else {
-                err(format!("not a non-negative integer: {x}"))
-            }
-        }
-        Json::Str(s) => {
-            s.parse::<u64>().map_err(|_| WireError(format!("bad integer string: {s:?}")))
-        }
-        _ => err("expected an integer"),
-    }
-}
-
-fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, WireError> {
-    v.get(key).ok_or_else(|| WireError(format!("missing field `{key}`")))
-}
-
-fn str_field(v: &Json, key: &str) -> Result<String, WireError> {
-    field(v, key)?
-        .as_str()
-        .map(str::to_string)
-        .ok_or_else(|| WireError(format!("field `{key}` must be a string")))
-}
-
-fn f64_field(v: &Json, key: &str) -> Result<f64, WireError> {
-    f64_from_json(field(v, key)?).map_err(|e| WireError(format!("field `{key}`: {}", e.0)))
-}
-
-fn bool_field(v: &Json, key: &str) -> Result<bool, WireError> {
-    field(v, key)?
-        .as_bool()
-        .ok_or_else(|| WireError(format!("field `{key}` must be a bool")))
-}
-
-fn u64_field(v: &Json, key: &str) -> Result<u64, WireError> {
-    u64_from_json(field(v, key)?).map_err(|e| WireError(format!("field `{key}`: {}", e.0)))
-}
-
-fn usize_field(v: &Json, key: &str) -> Result<usize, WireError> {
-    Ok(u64_field(v, key)? as usize)
-}
+// The lossless primitives (float/integer codecs, the `WireCodec` trait
+// and `WireError`) live in `util::wire` — shared with the controller's
+// telemetry record/replay log — and are re-exported here so existing
+// `cluster::wire::*` callers keep working.
+pub use crate::util::wire::{
+    f64_from_json, f64_to_json, u64_from_json, u64_to_json, WireCodec, WireError,
+};
 
 impl WireCodec for SwitchCost {
     fn to_wire(&self) -> Json {
@@ -157,11 +54,27 @@ impl WireCodec for SwitchCost {
     }
 
     fn from_wire(v: &Json) -> Result<Self, WireError> {
-        Ok(SwitchCost {
+        let cost = SwitchCost {
             latency_s: f64_field(v, "latency_s")?,
             energy_j: f64_field(v, "energy_j")?,
-        })
+        };
+        // `!(x >= 0)` also rejects NaN: a tampered frame must not smuggle
+        // negative per-transition time/energy into the simulator.
+        if !(cost.latency_s >= 0.0 && cost.energy_j >= 0.0) {
+            return err("switch cost must be non-negative and finite");
+        }
+        Ok(cost)
     }
+}
+
+/// Decode a `freqs_ghz` arm-set array into a validated domain. The
+/// domain crosses the wire as the bare GHz list only — its embedded
+/// switch cost is deliberately NOT carried, because `SessionCfg::domain`
+/// always overrides it with the top-level `switch_cost` field; one
+/// on-wire source of truth per value.
+fn freq_domain_from_json(v: &Json) -> Result<FreqDomain, WireError> {
+    let ghz = f64s_from_json(v).map_err(|e| WireError(format!("freqs_ghz: {}", e.0)))?;
+    FreqDomain::try_new(ghz).map_err(|e| WireError(format!("invalid frequency domain: {e}")))
 }
 
 impl WireCodec for EnergyUcbConfig {
@@ -302,6 +215,7 @@ impl WireCodec for SessionCfg {
         j.set("max_steps", u64_to_json(self.max_steps));
         j.set("reward_form", self.reward_form.to_wire());
         j.set("checkpoints", self.checkpoints);
+        j.set("freqs_ghz", f64s_to_json(self.freqs.ghz_all()));
         j.set("switch_cost", self.switch_cost.to_wire());
         j
     }
@@ -314,6 +228,7 @@ impl WireCodec for SessionCfg {
             max_steps: u64_field(v, "max_steps")?,
             reward_form: RewardForm::from_wire(field(v, "reward_form")?)?,
             checkpoints: usize_field(v, "checkpoints")?,
+            freqs: freq_domain_from_json(field(v, "freqs_ghz")?)?,
             switch_cost: SwitchCost::from_wire(field(v, "switch_cost")?)?,
         })
     }
@@ -346,6 +261,13 @@ impl WireCodec for NodeAssignment {
                 None => Json::Null,
             },
         );
+        j.set(
+            "freqs_ghz",
+            match &self.freqs_ghz {
+                Some(ghz) => f64s_to_json(ghz),
+                None => Json::Null,
+            },
+        );
         j
     }
 
@@ -362,6 +284,12 @@ impl WireCodec for NodeAssignment {
             Json::Null => None,
             x => Some(SwitchCost::from_wire(x)?),
         };
+        let freqs_ghz = match field(v, "freqs_ghz")? {
+            Json::Null => None,
+            x => Some(
+                f64s_from_json(x).map_err(|e| WireError(format!("freqs_ghz: {}", e.0)))?,
+            ),
+        };
         Ok(NodeAssignment {
             node: usize_field(v, "node")?,
             app: str_field(v, "app")?,
@@ -369,6 +297,7 @@ impl WireCodec for NodeAssignment {
             max_steps,
             policy,
             switch_cost,
+            freqs_ghz,
         })
     }
 }
@@ -562,6 +491,7 @@ mod tests {
                 delta: 0.05,
             }),
             switch_cost: Some(SwitchCost { latency_s: 450e-6, energy_j: 0.9 }),
+            freqs_ghz: Some((8..=16).map(|i| i as f64 / 10.0).collect()),
         };
         let line = Frame::Assign(a.clone()).encode_line();
         assert!(!line.contains('\n'), "{line}");
@@ -574,7 +504,39 @@ mod tests {
         let j = a.to_wire();
         assert!(j.get("max_steps").unwrap().is_null());
         assert!(j.get("policy").unwrap().is_null());
+        assert!(j.get("freqs_ghz").unwrap().is_null());
         assert_eq!(NodeAssignment::from_wire(&j).unwrap(), a);
+    }
+
+    #[test]
+    fn freq_domain_and_switch_cost_decode_paths_validate() {
+        // Malformed domains are wire errors, not panics.
+        for bad in ["[]", "[1.0,0.9]", "[-1.0]", "[\"a\"]", "1.0"] {
+            let v = Json::parse(bad).unwrap();
+            assert!(freq_domain_from_json(&v).is_err(), "{bad}");
+        }
+        let ok = freq_domain_from_json(&Json::parse("[0.9,1.2,1.5]").unwrap()).unwrap();
+        assert_eq!(ok, FreqDomain::new(vec![0.9, 1.2, 1.5]));
+        // The cost validation lives on SwitchCost's own codec — the path
+        // SessionCfg / NodeAssignment overrides decode through.
+        for bad in [
+            "{\"latency_s\":-1,\"energy_j\":0}",
+            "{\"latency_s\":0,\"energy_j\":-5}",
+            "{\"latency_s\":\"nan\",\"energy_j\":0}",
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(SwitchCost::from_wire(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn session_cfg_carries_the_frequency_domain() {
+        let cfg = SessionCfg {
+            freqs: FreqDomain::new(vec![0.5, 0.7, 0.9]),
+            ..SessionCfg::default()
+        };
+        let j = cfg.to_wire();
+        assert_eq!(SessionCfg::from_wire(&j).unwrap(), cfg);
     }
 
     #[test]
@@ -607,32 +569,8 @@ mod tests {
         assert_eq!(Frame::decode_line(&f.encode_line()).unwrap(), f);
     }
 
-    #[test]
-    fn f64_codec_carries_what_json_numbers_cannot() {
-        // The raw writer would fold these to `null` / `0`; the sentinel
-        // path keeps them bit-faithful (NaN up to payload canonization).
-        assert!(f64_from_json(&f64_to_json(f64::NAN)).unwrap().is_nan());
-        assert_eq!(f64_from_json(&f64_to_json(f64::INFINITY)).unwrap(), f64::INFINITY);
-        assert_eq!(f64_from_json(&f64_to_json(f64::NEG_INFINITY)).unwrap(), f64::NEG_INFINITY);
-        let neg_zero = f64_from_json(&f64_to_json(-0.0)).unwrap();
-        assert!(neg_zero == 0.0 && neg_zero.is_sign_negative());
-        // Ordinary values stay plain numbers.
-        assert_eq!(f64_to_json(0.035), Json::Num(0.035));
-        assert_eq!(f64_from_json(&Json::Num(-2.5)).unwrap(), -2.5);
-        assert!(f64_from_json(&Json::Str("fast".into())).is_err());
-        assert!(f64_from_json(&Json::Null).is_err());
-    }
-
-    #[test]
-    fn u64_codec_is_lossless_at_both_ends() {
-        for x in [0, 1, 1 << 53, (1 << 53) + 1, u64::MAX] {
-            assert_eq!(u64_from_json(&u64_to_json(x)).unwrap(), x);
-        }
-        assert!(u64_from_json(&Json::Num(-1.0)).is_err());
-        assert!(u64_from_json(&Json::Num(1.5)).is_err());
-        assert!(u64_from_json(&Json::Str("12x".into())).is_err());
-        assert!(u64_from_json(&Json::Null).is_err());
-    }
+    // The f64/u64 primitive codec tests live with the primitives in
+    // `util::wire`.
 
     #[test]
     fn decode_rejects_malformed_frames() {

@@ -1,10 +1,14 @@
 //! Cluster worker: one thread = one simulated node under one controller.
 //!
-//! Policy driving happens inside [`run_session`], which steps the node's
+//! Policy driving happens inside [`run_session`] — the sans-IO
+//! [`Controller`](crate::control::Controller) driven against a
+//! [`SimBackend`](crate::control::SimBackend) — which steps the node's
 //! controller through the shared batch policy core at B = 1
-//! (EXPERIMENTS.md §Engine) — the same `select_into`/`update_batch`
-//! surface the fleet engines use, with no per-step allocations on the
-//! trace-off path.
+//! (EXPERIMENTS.md §Engine, §Controller) — the same
+//! `select_into`/`update_batch` surface the fleet engines use, with no
+//! per-step allocations on the trace-off path. Because the decision core
+//! is backend-agnostic, a cluster node could equally replay recorded
+//! telemetry; the session API keeps that choice out of this file.
 
 use std::sync::mpsc::SyncSender;
 

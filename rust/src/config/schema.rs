@@ -5,7 +5,7 @@
 use super::toml::{self, Value};
 use crate::bandit::energyucb::{EnergyUcbConfig, InitStrategy};
 use crate::bandit::RewardForm;
-use crate::sim::freq::SwitchCost;
+use crate::sim::freq::{FreqDomain, SwitchCost};
 
 /// Which policy to construct.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,6 +35,10 @@ pub struct ExperimentConfig {
     pub record_trace: bool,
     /// Output directory for CSV/JSON results.
     pub out_dir: String,
+    /// Selectable frequency arms (`[freq] ghz = [...]`; defaults to the
+    /// Aurora PVC domain). Must match the calibrated app tables' length
+    /// (9 for the shipped suite) — validated where the app is known.
+    pub freqs: FreqDomain,
     /// Per-transition DVFS cost (`[switch] latency_s / energy_j`; defaults
     /// to the paper's measured 150 µs / 0.3 J).
     pub switch_cost: SwitchCost,
@@ -51,6 +55,7 @@ impl Default for ExperimentConfig {
             reward_form: RewardForm::EnergyRatio,
             record_trace: false,
             out_dir: "results".into(),
+            freqs: FreqDomain::aurora(),
             switch_cost: SwitchCost::default(),
         }
     }
@@ -143,6 +148,18 @@ impl ExperimentConfig {
                 "E*R^2" => RewardForm::EnergyRatioSquared,
                 other => return invalid(format!("unknown reward_form: {other}")),
             };
+        }
+        if let Some(freq) = root.get("freq") {
+            let Some(arr) = freq.get("ghz").and_then(Value::as_array) else {
+                return invalid("[freq] requires a ghz array");
+            };
+            let ghz = arr
+                .iter()
+                .map(|v| v.as_float())
+                .collect::<Option<Vec<f64>>>()
+                .ok_or_else(|| ConfigError::Invalid("freq.ghz: numbers only".into()))?;
+            cfg.freqs = FreqDomain::try_new(ghz)
+                .map_err(|e| ConfigError::Invalid(format!("freq.ghz: {e}")))?;
         }
         if let Some(v) = root.get_float("switch.latency_s") {
             // Must fit inside one decision interval: a stall >= dt_s would
@@ -643,6 +660,24 @@ alpha = -1.0
             other => panic!("{other:?}"),
         }
         assert!(ExperimentConfig::from_toml("[policy]\nname = \"swucb\"\nwindow = 0").is_err());
+    }
+
+    #[test]
+    fn freq_domain_parses_and_validates() {
+        let text = "[freq]\nghz = [0.9, 1.1, 1.3]\n";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.freqs.k(), 3);
+        assert!((c.freqs.ghz(0) - 0.9).abs() < 1e-12);
+        assert!((c.freqs.max_ghz() - 1.3).abs() < 1e-12);
+        // Defaults to Aurora when absent.
+        let c = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(c.freqs, FreqDomain::aurora());
+        // Invalid domains are config errors, not panics.
+        assert!(ExperimentConfig::from_toml("[freq]\nghz = []").is_err());
+        assert!(ExperimentConfig::from_toml("[freq]\nghz = [1.0, 0.9]").is_err());
+        assert!(ExperimentConfig::from_toml("[freq]\nghz = [-1.0]").is_err());
+        assert!(ExperimentConfig::from_toml("[freq]\nghz = [\"a\"]").is_err());
+        assert!(ExperimentConfig::from_toml("[freq]\nother = 1").is_err());
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Pluggable telemetry backends: where a controller's samples come from
+//! and where its arms go.
+//!
+//! [`TelemetryBackend`] is the session tier's I/O boundary. The
+//! [`Controller`][super::Controller] never touches it directly — the
+//! [`drive`][super::drive] loop mediates — so swapping the backend swaps
+//! the *world* without touching a line of decision logic:
+//!
+//! * [`SimBackend`] — the simulated GEOPM [`Service`] owning a
+//!   calibrated [`Node`] (the paper's experimental setup; what
+//!   `run_session` wires up).
+//! * [`ReplayBackend`][super::replay::ReplayBackend] — recorded per-step
+//!   telemetry from JSONL, for deterministic replay and counterfactual
+//!   policy evaluation (`energyucb replay`).
+//! * [`Recording`] — a tee: wraps any backend and mirrors every sample
+//!   to a JSONL sink in the replay grammar
+//!   (EXPERIMENTS.md §Controller).
+//!
+//! A live NVML/GEOPM binding slots in as a fourth implementation without
+//! touching the controller.
+
+use std::io::Write;
+
+use crate::geopm::{Control, Service};
+use crate::sim::node::Node;
+use crate::workload::model::AppModel;
+
+use super::controller::{BackendTotals, StepSample};
+use super::replay::{ReplayHeader, TelemetryFrame};
+use super::session::SessionCfg;
+
+/// A source of per-step telemetry and a sink for frequency decisions.
+///
+/// Contract (checked by the drive loop's usage pattern): `apply(arm)`
+/// then `sample()` advances exactly one decision interval; `done()` is
+/// stable between samples; `totals()` reflects every interval sampled so
+/// far. Implementations must be deterministic for a fixed construction
+/// (seed / recording) — the backend determinism guarantee that makes
+/// record→replay exact (EXPERIMENTS.md §Controller).
+pub trait TelemetryBackend {
+    /// Number of frequency arms the backend accepts.
+    fn k(&self) -> usize;
+
+    /// Request arm `arm` for the next interval.
+    fn apply(&mut self, arm: usize) -> anyhow::Result<()>;
+
+    /// Advance one interval under the last applied arm and return its
+    /// telemetry.
+    fn sample(&mut self) -> anyhow::Result<StepSample>;
+
+    /// Whether the underlying job has completed (no further samples).
+    fn done(&self) -> bool;
+
+    /// End-of-run accounting over every interval sampled so far.
+    fn totals(&self) -> BackendTotals;
+}
+
+/// The simulated-GEOPM backend: today's `run_session` world, wrapped.
+#[derive(Debug)]
+pub struct SimBackend {
+    service: Service,
+}
+
+impl SimBackend {
+    /// Build the node + service stack for `app` under `cfg` (frequency
+    /// domain and switch cost from [`SessionCfg::domain`]).
+    pub fn new(app: &AppModel, cfg: &SessionCfg) -> SimBackend {
+        let freqs = cfg.domain();
+        assert_eq!(
+            app.energy_kj.len(),
+            freqs.k(),
+            "app calibration table must match frequency domain"
+        );
+        let node = Node::new(app.clone(), freqs, cfg.dt_s, cfg.seed);
+        SimBackend { service: Service::new(node) }
+    }
+
+    /// The underlying service (signal reads, diagnostics).
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+}
+
+impl TelemetryBackend for SimBackend {
+    fn k(&self) -> usize {
+        self.service.k()
+    }
+
+    fn apply(&mut self, arm: usize) -> anyhow::Result<()> {
+        self.service.write(Control::GpuFrequency(arm))?;
+        Ok(())
+    }
+
+    fn sample(&mut self) -> anyhow::Result<StepSample> {
+        let s = self.service.sample()?;
+        Ok(StepSample {
+            gpu_energy_j: s.obs.gpu_energy_j,
+            core_util: s.obs.core_util,
+            uncore_util: s.obs.uncore_util,
+            progress: s.obs.progress,
+            remaining: s.obs.remaining,
+            true_gpu_energy_j: s.obs.true_gpu_energy_j,
+            switched: s.switched,
+        })
+    }
+
+    fn done(&self) -> bool {
+        self.service.done()
+    }
+
+    fn totals(&self) -> BackendTotals {
+        let t = self.service.totals();
+        BackendTotals {
+            gpu_energy_kj: t.gpu_energy_kj,
+            exec_time_s: t.exec_time_s,
+            switches: t.switches,
+            switch_energy_j: t.switch_energy_j,
+            switch_time_s: t.switch_time_s,
+        }
+    }
+}
+
+/// Tee wrapper: forwards to any inner backend while mirroring the run to
+/// a JSONL sink in the replay grammar (header written at construction,
+/// one `step` line per sample, terminal `end` line from
+/// [`finish`](Self::finish)).
+pub struct Recording<B, W: Write> {
+    inner: B,
+    sink: W,
+    last_arm: usize,
+}
+
+impl<B: TelemetryBackend, W: Write> Recording<B, W> {
+    /// Wrap `inner`, writing the header line immediately.
+    pub fn new(inner: B, mut sink: W, header: &ReplayHeader) -> anyhow::Result<Recording<B, W>> {
+        writeln!(sink, "{}", TelemetryFrame::Header(header.clone()).encode_line())?;
+        Ok(Recording { inner, sink, last_arm: 0 })
+    }
+
+    /// Write the terminal totals frame, flush, and return the inner
+    /// backend. Must be called after the drive loop — a recording without
+    /// its `end` frame is rejected by the replay reader as truncated.
+    pub fn finish(mut self) -> anyhow::Result<B> {
+        let totals = self.inner.totals();
+        writeln!(self.sink, "{}", TelemetryFrame::End { totals }.encode_line())?;
+        self.sink.flush()?;
+        Ok(self.inner)
+    }
+}
+
+impl<B: TelemetryBackend, W: Write> TelemetryBackend for Recording<B, W> {
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn apply(&mut self, arm: usize) -> anyhow::Result<()> {
+        self.last_arm = arm;
+        self.inner.apply(arm)
+    }
+
+    fn sample(&mut self) -> anyhow::Result<StepSample> {
+        let sample = self.inner.sample()?;
+        let frame = TelemetryFrame::Step { arm: self.last_arm, sample };
+        writeln!(self.sink, "{}", frame.encode_line())?;
+        Ok(sample)
+    }
+
+    fn done(&self) -> bool {
+        self.inner.done()
+    }
+
+    fn totals(&self) -> BackendTotals {
+        self.inner.totals()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::StaticPolicy;
+    use crate::control::{drive, Controller};
+
+    #[test]
+    fn sim_backend_mirrors_service_semantics() {
+        let app = crate::workload::calibration::app("tealeaf").unwrap();
+        let cfg = SessionCfg::default();
+        let mut b = SimBackend::new(&app, &cfg);
+        assert_eq!(b.k(), 9);
+        assert!(!b.done());
+        // Out-of-range arms are backend errors, not panics.
+        assert!(b.apply(99).is_err());
+        b.apply(2).unwrap();
+        let s = b.sample().unwrap();
+        assert!(s.switched);
+        assert!(s.gpu_energy_j > 0.0);
+        assert!(s.remaining < 1.0);
+        let t = b.totals();
+        assert_eq!(t.switches, 1);
+        assert!(t.exec_time_s > 0.0);
+    }
+
+    #[test]
+    fn recording_tees_a_parseable_log() {
+        let app = crate::workload::calibration::app("clvleaf").unwrap();
+        let cfg = SessionCfg { max_steps: 25, ..SessionCfg::default() };
+        let mut policy = StaticPolicy::new(9, 8);
+        let header = ReplayHeader { app: app.name.to_string(), policy: None, session: cfg.clone() };
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut backend =
+                Recording::new(SimBackend::new(&app, &cfg), &mut buf, &header).unwrap();
+            let controller = Controller::new(&app, &mut policy, &cfg);
+            let res = drive(controller, &mut backend).unwrap();
+            assert_eq!(res.metrics.steps, 25);
+            backend.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // header + 25 steps + end.
+        assert_eq!(lines.len(), 27, "{text}");
+        assert!(matches!(
+            TelemetryFrame::decode_line(lines[0]).unwrap(),
+            TelemetryFrame::Header(_)
+        ));
+        assert!(matches!(
+            TelemetryFrame::decode_line(lines[1]).unwrap(),
+            TelemetryFrame::Step { arm: 8, .. }
+        ));
+        assert!(matches!(
+            TelemetryFrame::decode_line(lines[26]).unwrap(),
+            TelemetryFrame::End { .. }
+        ));
+    }
+}

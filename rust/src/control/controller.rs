@@ -1,0 +1,364 @@
+//! The sans-IO control core: a pure decision/observation step machine.
+//!
+//! [`Controller`] is everything that used to live inline in
+//! `run_session`'s loop between `service.sample()` and the policy update —
+//! the B = 1 [`Scalar`] policy bridge, reward formation and
+//! winsorized normalization, ground-truth regret accounting, progress
+//! checkpoints, and trace bookkeeping — with no clock, no I/O, and no
+//! knowledge of where telemetry comes from. Drivers own the loop:
+//! [`drive`] pairs a controller with any
+//! [`TelemetryBackend`][super::backend::TelemetryBackend] (live
+//! simulation, recorded trace replay, a future NVML/GEOPM binding) and is
+//! the only place wall-clock time is read (the decision-latency gauge).
+//!
+//! The protocol per decision interval is strict alternation:
+//! `decide() -> arm`, apply the arm through the backend, sample the
+//! backend, `observe(sample)`. `finish(totals)` consumes the controller
+//! and yields the [`RunResult`]. Determinism contract: for a fixed
+//! policy state and sample stream, every controller output —
+//! selections, metrics, checkpoints, trace — is a pure function of the
+//! inputs (EXPERIMENTS.md §Controller).
+
+use crate::bandit::batch::{BatchPolicy, Scalar};
+use crate::bandit::{Policy, RewardForm, RewardNormalizer};
+use crate::telemetry::{Counter, Gauge, Recorder};
+use crate::workload::model::AppModel;
+use crate::workload::trace::{Trace, TraceStep};
+
+use super::backend::TelemetryBackend;
+use super::metrics::RunMetrics;
+use super::session::{RunResult, SessionCfg};
+
+/// One decision interval's telemetry, backend-agnostic: the
+/// counter-visible quantities the controller consumes (plus the
+/// ground-truth energy used only for metrics, never shown to the policy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepSample {
+    /// Measured (noisy) GPU energy over the interval, Joules.
+    pub gpu_energy_j: f64,
+    /// Aggregate core-engine utilization in [0, 1].
+    pub core_util: f64,
+    /// Aggregate uncore (copy-engine) utilization in [0, 1].
+    pub uncore_util: f64,
+    /// Progress made this interval (fraction of the whole job).
+    pub progress: f64,
+    /// Remaining work (1 → 0).
+    pub remaining: f64,
+    /// True GPU energy this interval (ground truth, metrics only).
+    pub true_gpu_energy_j: f64,
+    /// Whether the interval performed a frequency transition.
+    pub switched: bool,
+}
+
+/// End-of-run accounting a backend must provide (the `RunMetrics` fields
+/// the controller cannot derive from per-step samples alone without
+/// re-accumulating rounding differences).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BackendTotals {
+    pub gpu_energy_kj: f64,
+    pub exec_time_s: f64,
+    pub switches: u64,
+    pub switch_energy_j: f64,
+    pub switch_time_s: f64,
+}
+
+/// The sans-IO controller for one session (see module docs).
+pub struct Controller<'p> {
+    driver: Scalar<&'p mut dyn Policy>,
+    all_feasible: Vec<f32>,
+    sel: [i32; 1],
+    normalizer: RewardNormalizer,
+    reward_form: RewardForm,
+    max_steps: u64,
+    trace: Option<Trace>,
+    app_name: String,
+    /// Ground truth for regret accounting (raw reward units;
+    /// simulation-only knowledge, never shown to the policy).
+    true_rewards: Vec<f64>,
+    mu_star: f64,
+    t: u64,
+    cumulative_regret: f64,
+    cum_true_energy_j: f64,
+    final_completed: f64,
+    checkpoints: Vec<f64>,
+    next_cp: usize,
+    // Operational telemetry accumulates in plain fields (a `Recorder`
+    // name lookup allocates per call — the hot loop stays
+    // allocation-free) and is merged into the `RunResult` Recorder once
+    // in `finish`.
+    switch_rate: Gauge,
+    switch_counter: Counter,
+    decide_latency_us: Gauge,
+}
+
+impl<'p> Controller<'p> {
+    /// Bind a policy to an app's session configuration. The frequency
+    /// domain comes from `cfg` ([`SessionCfg::domain`]); the policy's
+    /// arity and the app's calibration table must both match it.
+    pub fn new(app: &AppModel, policy: &'p mut dyn Policy, cfg: &SessionCfg) -> Controller<'p> {
+        let freqs = cfg.domain();
+        assert_eq!(policy.k(), freqs.k(), "policy arity must match frequency domain");
+        assert_eq!(
+            app.energy_kj.len(),
+            freqs.k(),
+            "app calibration table must match frequency domain"
+        );
+        let k = freqs.k();
+        let true_rewards: Vec<f64> =
+            (0..k).map(|i| app.true_reward(&freqs, i, cfg.dt_s)).collect();
+        let mu_star = true_rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Controller {
+            // B = 1 bridge onto the shared batch stepping core. The
+            // feasibility buffer is all-ones (the bridge delegates
+            // feasibility to the wrapped policy); selection/reward
+            // buffers live inline — no per-step allocations.
+            driver: Scalar::new(vec![policy]),
+            all_feasible: vec![1.0f32; k],
+            sel: [0i32; 1],
+            normalizer: RewardNormalizer::new(),
+            reward_form: cfg.reward_form,
+            max_steps: cfg.max_steps,
+            trace: cfg.record_trace.then(Trace::new),
+            app_name: app.name.to_string(),
+            true_rewards,
+            mu_star,
+            t: 0,
+            cumulative_regret: 0.0,
+            cum_true_energy_j: 0.0,
+            final_completed: 0.0,
+            checkpoints: vec![0.0f64; cfg.checkpoints],
+            next_cp: 0,
+            switch_rate: Gauge::default(),
+            switch_counter: Counter::default(),
+            decide_latency_us: Gauge::default(),
+        }
+    }
+
+    /// Decision steps taken so far.
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Whether the step budget allows another decision.
+    pub fn wants_step(&self) -> bool {
+        self.t < self.max_steps
+    }
+
+    /// Cumulative ground-truth regret so far (raw reward units).
+    pub fn cumulative_regret(&self) -> f64 {
+        self.cumulative_regret
+    }
+
+    /// Record one decision's wall-clock latency (µs). Called by drivers
+    /// ([`drive`]) — the controller itself never reads a clock.
+    pub fn record_decide_latency_us(&mut self, us: f64) {
+        self.decide_latency_us.record(us);
+    }
+
+    /// Choose the arm for the next decision interval.
+    pub fn decide(&mut self) -> usize {
+        self.t += 1;
+        self.driver.select_into(self.t, &self.all_feasible, &mut self.sel);
+        self.sel[0] as usize
+    }
+
+    /// Feed back the interval's telemetry for the arm chosen by the last
+    /// [`decide`](Self::decide).
+    pub fn observe(&mut self, s: &StepSample) {
+        let arm = self.sel[0] as usize;
+        // Reward from counter-visible quantities only (Eq. 4); the
+        // normalizer winsorizes heavy-tail spikes (its `clamp_lo`).
+        let raw = self.reward_form.raw(s.gpu_energy_j, s.core_util, s.uncore_util);
+        let reward = self.normalizer.normalize(raw);
+        self.driver.update_batch(&self.sel, &[reward], &[s.progress], &[1.0]);
+
+        self.cumulative_regret += self.mu_star - self.true_rewards[arm];
+        self.cum_true_energy_j += s.true_gpu_energy_j;
+
+        // Progress checkpoints.
+        let completed = 1.0 - s.remaining;
+        self.final_completed = completed;
+        let n_cp = self.checkpoints.len();
+        while self.next_cp < n_cp
+            && completed >= (self.next_cp + 1) as f64 / n_cp as f64 - 1e-12
+        {
+            self.checkpoints[self.next_cp] = self.cum_true_energy_j;
+            self.next_cp += 1;
+        }
+
+        self.switch_rate.record(if s.switched { 1.0 } else { 0.0 });
+        if s.switched {
+            self.switch_counter.inc();
+        }
+
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(TraceStep {
+                t: self.t,
+                arm,
+                reward,
+                energy_j: s.true_gpu_energy_j,
+                regret: self.mu_star - self.true_rewards[arm],
+                switched: s.switched,
+            });
+        }
+    }
+
+    /// Close the session: fill any remaining checkpoints (e.g. the run
+    /// hit `max_steps`) and assemble the [`RunResult`] from the backend's
+    /// final accounting.
+    pub fn finish(mut self, totals: BackendTotals) -> RunResult {
+        for cp in self.checkpoints.iter_mut().skip(self.next_cp) {
+            *cp = self.cum_true_energy_j;
+        }
+        let mut telemetry = Recorder::new();
+        telemetry.counter("controller.steps").add(self.t);
+        telemetry.insert_counter("controller.switches", self.switch_counter);
+        telemetry.insert_gauge("controller.switch_rate", self.switch_rate);
+        if self.decide_latency_us.count() > 0 {
+            telemetry.insert_gauge("controller.decide_latency_us", self.decide_latency_us);
+        }
+        let metrics = RunMetrics {
+            app: self.app_name,
+            policy: self.driver.name(),
+            gpu_energy_kj: totals.gpu_energy_kj,
+            exec_time_s: totals.exec_time_s,
+            switches: totals.switches,
+            switch_energy_j: totals.switch_energy_j,
+            switch_time_s: totals.switch_time_s,
+            cumulative_regret: self.cumulative_regret,
+            steps: self.t,
+            completed: self.final_completed.clamp(0.0, 1.0),
+        };
+        RunResult { metrics, trace: self.trace, energy_checkpoints_j: self.checkpoints, telemetry }
+    }
+}
+
+/// Drive a controller against a telemetry backend to completion: the one
+/// loop every session surface shares (`run_session`, the cluster worker,
+/// `energyucb replay`). This is the only place the session tier reads a
+/// clock — the per-decision latency gauge
+/// (`controller.decide_latency_us`) lives here so the controller core
+/// stays sans-IO.
+pub fn drive(
+    mut controller: Controller<'_>,
+    backend: &mut dyn TelemetryBackend,
+) -> anyhow::Result<RunResult> {
+    while !backend.done() && controller.wants_step() {
+        // The latency gauge samples every 64th decision: statistically
+        // meaningful without paying two clock reads on every iteration
+        // of a loop that is otherwise allocation- and syscall-free.
+        let timed = controller.steps() & 63 == 0;
+        let t0 = timed.then(std::time::Instant::now);
+        let arm = controller.decide();
+        if let Some(t0) = t0 {
+            controller.record_decide_latency_us(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        backend.apply(arm)?;
+        let sample = backend.sample()?;
+        controller.observe(&sample);
+    }
+    Ok(controller.finish(backend.totals()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::{RoundRobin, StaticPolicy};
+    use crate::workload::calibration;
+
+    fn sample(progress: f64, remaining: f64, switched: bool) -> StepSample {
+        StepSample {
+            gpu_energy_j: 25.0,
+            core_util: 0.9,
+            uncore_util: 0.45,
+            progress,
+            remaining,
+            true_gpu_energy_j: 24.0,
+            switched,
+        }
+    }
+
+    /// Hand-feed a synthetic sample stream: the controller is fully
+    /// exercisable without any backend (the sans-IO acceptance check).
+    #[test]
+    fn controller_steps_without_any_backend() {
+        let app = calibration::app("tealeaf").unwrap();
+        let cfg = SessionCfg { checkpoints: 4, record_trace: true, ..SessionCfg::default() };
+        let mut policy = RoundRobin::new(9);
+        let mut c = Controller::new(&app, &mut policy, &cfg);
+        let n = 10u64;
+        for i in 0..n {
+            assert!(c.wants_step());
+            let arm = c.decide();
+            assert!(arm < 9);
+            let remaining = 1.0 - (i + 1) as f64 / n as f64;
+            c.observe(&sample(1.0 / n as f64, remaining, i > 0));
+        }
+        assert_eq!(c.steps(), n);
+        let res = c.finish(BackendTotals {
+            gpu_energy_kj: 0.24,
+            exec_time_s: 0.1,
+            switches: n - 1,
+            switch_energy_j: 0.3 * (n - 1) as f64,
+            switch_time_s: 150e-6 * (n - 1) as f64,
+        });
+        assert_eq!(res.metrics.steps, n);
+        assert_eq!(res.metrics.switches, n - 1);
+        assert!((res.metrics.completed - 1.0).abs() < 1e-12);
+        // Checkpoints: 24 J per step, 4 checkpoints over 10 steps.
+        assert_eq!(res.energy_checkpoints_j.len(), 4);
+        assert!((res.energy_checkpoints_j[3] - 240.0).abs() < 1e-9);
+        assert!(res.energy_checkpoints_j.windows(2).all(|w| w[1] >= w[0]));
+        // Trace recorded every step.
+        assert_eq!(res.trace.unwrap().len(), n as usize);
+        // Switch-rate gauge: 9 of 10 intervals switched.
+        let rate = res.telemetry.gauge_mean("controller.switch_rate").unwrap();
+        assert!((rate - 0.9).abs() < 1e-12, "{rate}");
+        assert_eq!(res.telemetry.counter_value("controller.switches"), Some(n - 1));
+        assert_eq!(res.telemetry.counter_value("controller.steps"), Some(n));
+    }
+
+    #[test]
+    fn step_budget_is_enforced_by_wants_step() {
+        let app = calibration::app("clvleaf").unwrap();
+        let cfg = SessionCfg { max_steps: 3, ..SessionCfg::default() };
+        let mut policy = StaticPolicy::new(9, 8);
+        let mut c = Controller::new(&app, &mut policy, &cfg);
+        let mut steps = 0;
+        while c.wants_step() {
+            c.decide();
+            c.observe(&sample(1e-4, 1.0 - 1e-4 * (steps + 1) as f64, false));
+            steps += 1;
+        }
+        assert_eq!(steps, 3);
+        let res = c.finish(BackendTotals::default());
+        assert_eq!(res.metrics.steps, 3);
+        assert!(res.metrics.completed < 1.0);
+    }
+
+    #[test]
+    fn regret_accounting_matches_ground_truth() {
+        let app = calibration::app("clvleaf").unwrap();
+        let cfg = SessionCfg::default();
+        let freqs = cfg.domain();
+        let true_rewards: Vec<f64> =
+            (0..9).map(|i| app.true_reward(&freqs, i, cfg.dt_s)).collect();
+        let mu_star = true_rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut policy = StaticPolicy::new(9, 0);
+        let mut c = Controller::new(&app, &mut policy, &cfg);
+        for i in 0..5 {
+            assert_eq!(c.decide(), 0);
+            c.observe(&sample(1e-4, 1.0 - 1e-4 * (i + 1) as f64, i == 0));
+        }
+        let expected = 5.0 * (mu_star - true_rewards[0]);
+        assert!((c.cumulative_regret() - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "policy arity")]
+    fn mismatched_arity_is_rejected() {
+        let app = calibration::app("tealeaf").unwrap();
+        let mut policy = StaticPolicy::new(4, 0);
+        let _ = Controller::new(&app, &mut policy, &SessionCfg::default());
+    }
+}

@@ -1,7 +1,23 @@
-//! Control plane: binds policies to the GEOPM stack and accounts metrics.
+//! Control plane: the sans-IO decision core, the pluggable telemetry
+//! backends it runs against, and the paper-metric accounting.
+//!
+//! * [`controller`] — [`Controller`], the pure `decide`/`observe` step
+//!   machine, and [`drive`], the one loop pairing it with a backend.
+//! * [`backend`] — the [`TelemetryBackend`] trait plus [`SimBackend`]
+//!   (simulated GEOPM) and the [`Recording`] tee.
+//! * [`replay`] — the JSONL telemetry grammar and [`ReplayBackend`]
+//!   (record/replay + counterfactual policy evaluation).
+//! * [`session`] — [`run_session`]/[`run_repeated`], the thin composition
+//!   every experiment and the cluster worker call.
 
+pub mod backend;
+pub mod controller;
 pub mod metrics;
+pub mod replay;
 pub mod session;
 
+pub use backend::{Recording, SimBackend, TelemetryBackend};
+pub use controller::{drive, BackendTotals, Controller, StepSample};
 pub use metrics::{RepeatedMetrics, RunMetrics};
+pub use replay::{ReplayBackend, ReplayHeader, TelemetryFrame};
 pub use session::{run_repeated, run_session, RunResult, SessionCfg};

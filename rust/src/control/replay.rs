@@ -1,0 +1,419 @@
+//! Recorded-telemetry log: the JSONL grammar the [`Recording`] tee
+//! writes and the [`ReplayBackend`] that feeds it back to a controller.
+//!
+//! One [`TelemetryFrame`] per line (`util::wire` lossless float/integer
+//! codecs, `util::io::Json` framing — the same substrate as the cluster
+//! shard wire):
+//!
+//! ```text
+//! header   exactly once, first      {"kind":"header","header":{"app":..,"policy":..,"session":..}}
+//! step     once per interval        {"kind":"step","arm":..,"sample":{..}}
+//! end      exactly once, last       {"kind":"end","totals":{..}}
+//! ```
+//!
+//! Round-trips are exact (floats ride shortest round-trip formatting),
+//! so replaying a recording under the policy that produced it reproduces
+//! the original `RunMetrics` bit-for-bit; replaying under a *different*
+//! policy is open-loop counterfactual evaluation — decisions no longer
+//! influence the samples, which stay whatever the recorded run saw
+//! (EXPERIMENTS.md §Controller).
+//!
+//! [`Recording`]: super::backend::Recording
+
+use std::io::BufRead;
+use std::path::Path;
+
+use anyhow::Context as _;
+
+use crate::config::PolicyConfig;
+use crate::util::io::Json;
+use crate::util::wire::{
+    err, f64_to_json, field, str_field, u64_to_json, usize_field, WireCodec, WireError,
+};
+
+use super::backend::TelemetryBackend;
+use super::controller::{BackendTotals, StepSample};
+use super::session::SessionCfg;
+
+/// Run provenance carried at the head of a telemetry log: enough to
+/// rebuild the controller (app, session config including the frequency
+/// domain) and — when the recorder knew it — the policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplayHeader {
+    /// Calibrated app name (resolved through `workload::calibration`).
+    pub app: String,
+    /// Policy configuration that produced the recording, when known (the
+    /// CLI records it so `energyucb replay` can rebuild the same policy
+    /// without a `--policy` flag).
+    pub policy: Option<PolicyConfig>,
+    /// Session configuration of the recorded run (seed, dt, frequency
+    /// domain, reward form, step budget).
+    pub session: SessionCfg,
+}
+
+impl WireCodec for ReplayHeader {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("app", self.app.as_str());
+        j.set(
+            "policy",
+            match &self.policy {
+                Some(p) => p.to_wire(),
+                None => Json::Null,
+            },
+        );
+        j.set("session", self.session.to_wire());
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        let policy = match field(v, "policy")? {
+            Json::Null => None,
+            x => Some(PolicyConfig::from_wire(x)?),
+        };
+        Ok(ReplayHeader {
+            app: str_field(v, "app")?,
+            policy,
+            session: SessionCfg::from_wire(field(v, "session")?)?,
+        })
+    }
+}
+
+impl WireCodec for StepSample {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("gpu_energy_j", f64_to_json(self.gpu_energy_j));
+        j.set("core_util", f64_to_json(self.core_util));
+        j.set("uncore_util", f64_to_json(self.uncore_util));
+        j.set("progress", f64_to_json(self.progress));
+        j.set("remaining", f64_to_json(self.remaining));
+        j.set("true_gpu_energy_j", f64_to_json(self.true_gpu_energy_j));
+        j.set("switched", self.switched);
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        use crate::util::wire::{bool_field, f64_field};
+        Ok(StepSample {
+            gpu_energy_j: f64_field(v, "gpu_energy_j")?,
+            core_util: f64_field(v, "core_util")?,
+            uncore_util: f64_field(v, "uncore_util")?,
+            progress: f64_field(v, "progress")?,
+            remaining: f64_field(v, "remaining")?,
+            true_gpu_energy_j: f64_field(v, "true_gpu_energy_j")?,
+            switched: bool_field(v, "switched")?,
+        })
+    }
+}
+
+impl WireCodec for BackendTotals {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("gpu_energy_kj", f64_to_json(self.gpu_energy_kj));
+        j.set("exec_time_s", f64_to_json(self.exec_time_s));
+        j.set("switches", u64_to_json(self.switches));
+        j.set("switch_energy_j", f64_to_json(self.switch_energy_j));
+        j.set("switch_time_s", f64_to_json(self.switch_time_s));
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        use crate::util::wire::{f64_field, u64_field};
+        Ok(BackendTotals {
+            gpu_energy_kj: f64_field(v, "gpu_energy_kj")?,
+            exec_time_s: f64_field(v, "exec_time_s")?,
+            switches: u64_field(v, "switches")?,
+            switch_energy_j: f64_field(v, "switch_energy_j")?,
+            switch_time_s: f64_field(v, "switch_time_s")?,
+        })
+    }
+}
+
+/// One line of a telemetry log (see module docs for the grammar).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TelemetryFrame {
+    /// Run provenance; must be the first frame.
+    Header(ReplayHeader),
+    /// One decision interval: the arm that was applied and what the
+    /// backend sampled under it.
+    Step { arm: usize, sample: StepSample },
+    /// Terminal accounting; must be the last frame.
+    End { totals: BackendTotals },
+}
+
+impl TelemetryFrame {
+    /// Encode as one JSONL line (no trailing newline).
+    pub fn encode_line(&self) -> String {
+        self.to_wire().render_compact()
+    }
+
+    /// Decode one JSONL line.
+    pub fn decode_line(line: &str) -> Result<TelemetryFrame, WireError> {
+        let v = Json::parse(line).map_err(|e| WireError(e.to_string()))?;
+        TelemetryFrame::from_wire(&v)
+    }
+}
+
+impl WireCodec for TelemetryFrame {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            TelemetryFrame::Header(h) => {
+                // The payload nests under its own key like step/end, so
+                // encode and decode are symmetric ReplayHeader-codec
+                // one-liners that can never drift.
+                j.set("kind", "header");
+                j.set("header", h.to_wire());
+            }
+            TelemetryFrame::Step { arm, sample } => {
+                j.set("kind", "step");
+                j.set("arm", *arm);
+                j.set("sample", sample.to_wire());
+            }
+            TelemetryFrame::End { totals } => {
+                j.set("kind", "end");
+                j.set("totals", totals.to_wire());
+            }
+        }
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        Ok(match str_field(v, "kind")?.as_str() {
+            "header" => TelemetryFrame::Header(ReplayHeader::from_wire(field(v, "header")?)?),
+            "step" => TelemetryFrame::Step {
+                arm: usize_field(v, "arm")?,
+                sample: StepSample::from_wire(field(v, "sample")?)?,
+            },
+            "end" => TelemetryFrame::End { totals: BackendTotals::from_wire(field(v, "totals")?)? },
+            other => return err(format!("unknown telemetry frame kind: {other}")),
+        })
+    }
+}
+
+/// A telemetry backend that feeds a recorded run back to a controller.
+///
+/// Open-loop by construction: [`apply`](TelemetryBackend::apply) only
+/// range-checks and records the requested arm; samples come verbatim
+/// from the log in recorded order. Replaying with the recording's own
+/// policy (same config, same seed) therefore reproduces the original
+/// decisions and metrics exactly; replaying with a different policy is
+/// counterfactual evaluation over a frozen telemetry stream.
+#[derive(Clone, Debug)]
+pub struct ReplayBackend {
+    header: ReplayHeader,
+    steps: Vec<(usize, StepSample)>,
+    totals: BackendTotals,
+    pos: usize,
+}
+
+impl ReplayBackend {
+    /// Parse a complete telemetry log. Rejects logs with a missing or
+    /// duplicated header, frames after `end`, or no terminal `end` frame
+    /// (a truncated recording must not silently replay short).
+    pub fn from_reader(reader: impl BufRead) -> anyhow::Result<ReplayBackend> {
+        let mut header: Option<ReplayHeader> = None;
+        let mut steps: Vec<(usize, StepSample)> = Vec::new();
+        let mut totals: Option<BackendTotals> = None;
+        for (i, line) in reader.lines().enumerate() {
+            let line = line.context("reading telemetry log")?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let frame = TelemetryFrame::decode_line(&line)
+                .with_context(|| format!("telemetry log line {}", i + 1))?;
+            if totals.is_some() {
+                anyhow::bail!("telemetry log line {}: frame after the end frame", i + 1);
+            }
+            match frame {
+                TelemetryFrame::Header(h) => {
+                    if header.is_some() {
+                        anyhow::bail!("telemetry log line {}: duplicate header", i + 1);
+                    }
+                    if !steps.is_empty() {
+                        anyhow::bail!("telemetry log line {}: header after steps", i + 1);
+                    }
+                    header = Some(h);
+                }
+                TelemetryFrame::Step { arm, sample } => {
+                    if header.is_none() {
+                        anyhow::bail!("telemetry log line {}: step before header", i + 1);
+                    }
+                    steps.push((arm, sample));
+                }
+                TelemetryFrame::End { totals: t } => {
+                    if header.is_none() {
+                        anyhow::bail!("telemetry log line {}: end before header", i + 1);
+                    }
+                    totals = Some(t);
+                }
+            }
+        }
+        let header = header.context("telemetry log has no header frame")?;
+        let totals = totals.context("truncated telemetry log: no end frame")?;
+        Ok(ReplayBackend { header, steps, totals, pos: 0 })
+    }
+
+    /// Parse from an in-memory log.
+    pub fn from_text(text: &str) -> anyhow::Result<ReplayBackend> {
+        ReplayBackend::from_reader(text.as_bytes())
+    }
+
+    /// Open and parse a telemetry log file.
+    pub fn open(path: &Path) -> anyhow::Result<ReplayBackend> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening telemetry log {}", path.display()))?;
+        ReplayBackend::from_reader(std::io::BufReader::new(file))
+    }
+
+    /// The recording's provenance header.
+    pub fn header(&self) -> &ReplayHeader {
+        &self.header
+    }
+
+    /// Number of recorded decision intervals.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// The arm the *recorded* run applied at interval `i` (0-based) —
+    /// for auditing counterfactual replays against the original.
+    pub fn recorded_arm(&self, i: usize) -> Option<usize> {
+        self.steps.get(i).map(|(arm, _)| *arm)
+    }
+}
+
+impl TelemetryBackend for ReplayBackend {
+    fn k(&self) -> usize {
+        self.header.session.freqs.k()
+    }
+
+    fn apply(&mut self, arm: usize) -> anyhow::Result<()> {
+        if arm >= self.k() {
+            anyhow::bail!("replay: arm {arm} out of range (K = {})", self.k());
+        }
+        Ok(())
+    }
+
+    fn sample(&mut self) -> anyhow::Result<StepSample> {
+        let Some((_, sample)) = self.steps.get(self.pos) else {
+            anyhow::bail!("replay: sample past the end of the recording");
+        };
+        self.pos += 1;
+        Ok(*sample)
+    }
+
+    fn done(&self) -> bool {
+        self.pos >= self.steps.len()
+    }
+
+    fn totals(&self) -> BackendTotals {
+        self.totals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(x: f64) -> StepSample {
+        StepSample {
+            gpu_energy_j: x,
+            core_util: 0.9,
+            uncore_util: 1.0 / 3.0,
+            progress: 1e-4,
+            remaining: 1.0 - x * 1e-4,
+            true_gpu_energy_j: x * 0.99,
+            switched: x as u64 % 2 == 0,
+        }
+    }
+
+    fn log_text(steps: usize) -> String {
+        let header = ReplayHeader {
+            app: "tealeaf".into(),
+            policy: Some(PolicyConfig::Static { arm: 8 }),
+            session: SessionCfg { seed: 42, ..SessionCfg::default() },
+        };
+        let mut text = format!("{}\n", TelemetryFrame::Header(header).encode_line());
+        for i in 0..steps {
+            let f = TelemetryFrame::Step { arm: 8, sample: sample(i as f64 + 1.0) };
+            text.push_str(&f.encode_line());
+            text.push('\n');
+        }
+        let end = TelemetryFrame::End {
+            totals: BackendTotals {
+                gpu_energy_kj: 1.25,
+                exec_time_s: steps as f64 * 0.01,
+                switches: 1,
+                switch_energy_j: 0.3,
+                switch_time_s: 150e-6,
+            },
+        };
+        text.push_str(&end.encode_line());
+        text.push('\n');
+        text
+    }
+
+    #[test]
+    fn frames_round_trip_exactly() {
+        let frames = [
+            TelemetryFrame::Header(ReplayHeader {
+                app: "clvleaf".into(),
+                policy: None,
+                session: SessionCfg { seed: u64::MAX - 1, ..SessionCfg::default() },
+            }),
+            TelemetryFrame::Step { arm: 3, sample: sample(25.0) },
+            TelemetryFrame::End { totals: BackendTotals::default() },
+        ];
+        for f in frames {
+            let line = f.encode_line();
+            assert!(!line.contains('\n'), "{line}");
+            assert_eq!(TelemetryFrame::decode_line(&line).unwrap(), f, "{line}");
+        }
+    }
+
+    #[test]
+    fn replay_backend_feeds_samples_in_order() {
+        let mut b = ReplayBackend::from_text(&log_text(3)).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.k(), 9);
+        assert_eq!(b.recorded_arm(0), Some(8));
+        assert!(!b.done());
+        b.apply(0).unwrap();
+        assert!(b.apply(9).is_err());
+        for i in 0..3 {
+            let s = b.sample().unwrap();
+            assert_eq!(s.gpu_energy_j, i as f64 + 1.0);
+        }
+        assert!(b.done());
+        assert!(b.sample().is_err());
+        assert_eq!(b.totals().gpu_energy_kj, 1.25);
+        assert_eq!(b.header().app, "tealeaf");
+    }
+
+    #[test]
+    fn malformed_logs_are_rejected() {
+        // No header.
+        let no_header = log_text(2).lines().skip(1).collect::<Vec<_>>().join("\n");
+        assert!(ReplayBackend::from_text(&no_header).is_err());
+        // No end frame (truncated recording).
+        let text = log_text(2);
+        let truncated: Vec<&str> = text.lines().collect();
+        let truncated = truncated[..truncated.len() - 1].join("\n");
+        assert!(ReplayBackend::from_text(&truncated).is_err());
+        // Frames after end.
+        let mut after_end = log_text(1);
+        after_end.push_str(&log_text(1));
+        assert!(ReplayBackend::from_text(&after_end).is_err());
+        // Junk line.
+        assert!(ReplayBackend::from_text("not json\n").is_err());
+        // Empty input.
+        assert!(ReplayBackend::from_text("").is_err());
+        // Unknown kind.
+        assert!(TelemetryFrame::decode_line("{\"kind\":\"bogus\"}").is_err());
+    }
+}

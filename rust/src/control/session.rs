@@ -1,26 +1,26 @@
 //! A control session: one policy driving one application on one node,
 //! from job start to completion — the paper's experimental unit.
 //!
-//! The session wires policy ↔ GEOPM: each interval it reads the previous
-//! observation, forms the reward from counters (Eq. 4 or a Fig.-5a
-//! variant), normalizes it, lets the policy pick the next arm, and applies
-//! it through the service. Ground-truth regret accounting happens here
-//! (simulation-only knowledge, never shown to the policy).
-//!
-//! Policy driving goes through the batch policy core: the scalar policy is
-//! wrapped in a B = 1 [`Scalar`] bridge and stepped through the same
-//! `select_into`/`update_batch` surface the fleet and cluster tiers use
-//! (stack buffers — the trace-off hot loop performs no per-step
-//! allocations).
+//! Since the sans-IO redesign the session is a thin composition:
+//! [`run_session`] builds a [`SimBackend`] (the simulated GEOPM stack)
+//! and a [`Controller`] (the pure decision core owning the B = 1
+//! [`Scalar`][crate::bandit::Scalar] policy bridge, reward normalization,
+//! regret accounting, and checkpoint bookkeeping), then hands both to
+//! [`drive`]. Pointing the same controller at a
+//! [`ReplayBackend`](super::replay::ReplayBackend) instead replays
+//! recorded telemetry; wrapping the backend in
+//! [`Recording`](super::backend::Recording) tees the run to disk. See
+//! EXPERIMENTS.md §Controller.
 
-use crate::bandit::batch::{BatchPolicy, Scalar};
-use crate::bandit::{Policy, RewardForm, RewardNormalizer};
-use crate::geopm::{Control, Service};
+use crate::bandit::Policy;
+use crate::bandit::RewardForm;
 use crate::sim::freq::{FreqDomain, SwitchCost};
-use crate::sim::node::Node;
+use crate::telemetry::Recorder;
 use crate::workload::model::AppModel;
-use crate::workload::trace::{Trace, TraceStep};
+use crate::workload::trace::Trace;
 
+use super::backend::SimBackend;
+use super::controller::{drive, Controller};
 use super::metrics::RunMetrics;
 
 /// Session configuration.
@@ -38,6 +38,10 @@ pub struct SessionCfg {
     pub reward_form: RewardForm,
     /// Number of progress checkpoints for phase-energy accounting.
     pub checkpoints: usize,
+    /// Selectable frequency arms (default: Aurora PVC, K = 9). The
+    /// calibrated app tables are indexed per arm, so the domain length
+    /// must match the app's calibration (9 for the shipped suite).
+    pub freqs: FreqDomain,
     /// Per-transition DVFS cost (paper default: 150 µs, 0.3 J).
     pub switch_cost: SwitchCost,
 }
@@ -51,8 +55,18 @@ impl Default for SessionCfg {
             max_steps: 2_000_000,
             reward_form: RewardForm::EnergyRatio,
             checkpoints: 100,
+            freqs: FreqDomain::aurora(),
             switch_cost: SwitchCost::default(),
         }
+    }
+}
+
+impl SessionCfg {
+    /// The resolved frequency domain: the configured arm set carrying the
+    /// configured switch cost (single source of truth for the node
+    /// simulator and the regret ground truth).
+    pub fn domain(&self) -> FreqDomain {
+        self.freqs.clone().with_switch_cost(self.switch_cost)
     }
 }
 
@@ -65,6 +79,11 @@ pub struct RunResult {
     /// i/checkpoints, i = 1..=checkpoints (for the DRLCap 20 %/80 %
     /// protocol).
     pub energy_checkpoints_j: Vec<f64>,
+    /// Operational telemetry: `controller.switch_rate` gauge,
+    /// `controller.steps`/`controller.switches` counters (deterministic),
+    /// and the driver's `controller.decide_latency_us` gauge (wall
+    /// clock, sampled every 64th decision).
+    pub telemetry: Recorder,
 }
 
 impl RunResult {
@@ -86,95 +105,13 @@ impl RunResult {
     }
 }
 
-/// Run one session to completion.
+/// Run one session to completion: the pure [`Controller`] driven against
+/// the simulated GEOPM [`SimBackend`]. Byte-identical to the historical
+/// monolithic loop (pinned by `tests/controller_parity.rs`).
 pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) -> RunResult {
-    let freqs = FreqDomain::aurora().with_switch_cost(cfg.switch_cost);
-    assert_eq!(policy.k(), freqs.k(), "policy arity must match frequency domain");
-    let k = freqs.k();
-    let node = Node::new(app.clone(), freqs.clone(), cfg.dt_s, cfg.seed);
-    let mut service = Service::new(node);
-    let mut normalizer = RewardNormalizer::new();
-    let mut trace = cfg.record_trace.then(Trace::new);
-
-    // B = 1 bridge onto the shared batch stepping core. The feasibility
-    // buffer is all-ones (the bridge delegates feasibility to the wrapped
-    // policy); selection/reward buffers live on the stack.
-    let mut driver = Scalar::new(vec![policy]);
-    let all_feasible = vec![1.0f32; k];
-    let mut sel = [0i32; 1];
-
-    // Ground truth for regret accounting (raw reward units).
-    let true_rewards: Vec<f64> =
-        (0..freqs.k()).map(|i| app.true_reward(&freqs, i, cfg.dt_s)).collect();
-    let mu_star = true_rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-
-    let mut cumulative_regret = 0.0;
-    let mut t: u64 = 0;
-    let mut checkpoints = vec![0.0f64; cfg.checkpoints];
-    let mut next_cp = 0usize;
-    let mut cum_true_energy_j = 0.0;
-    let mut final_completed = 0.0;
-
-    while !service.done() && t < cfg.max_steps {
-        t += 1;
-        driver.select_into(t, &all_feasible, &mut sel);
-        let arm = sel[0] as usize;
-        service.write(Control::GpuFrequency(arm)).expect("valid arm");
-        let sample = service.sample().expect("not done");
-        let obs = sample.obs;
-
-        // Reward from counter-visible quantities only (Eq. 4).
-        let raw =
-            cfg.reward_form.raw(obs.gpu_energy_j, obs.core_util, obs.uncore_util);
-        // Winsorize: counter glitches (heavy-tail spikes) are capped at 3x
-        // the typical magnitude before any policy sees them — a controller
-        // robustness choice every method benefits from equally.
-        let reward = normalizer.normalize(raw).max(-3.0);
-        driver.update_batch(&sel, &[reward], &[obs.progress], &[1.0]);
-
-        cumulative_regret += mu_star - true_rewards[arm];
-        cum_true_energy_j += obs.true_gpu_energy_j;
-
-        // Progress checkpoints.
-        let completed = 1.0 - obs.remaining;
-        final_completed = completed;
-        while next_cp < cfg.checkpoints
-            && completed >= (next_cp + 1) as f64 / cfg.checkpoints as f64 - 1e-12
-        {
-            checkpoints[next_cp] = cum_true_energy_j;
-            next_cp += 1;
-        }
-
-        if let Some(tr) = trace.as_mut() {
-            tr.push(TraceStep {
-                t,
-                arm,
-                reward,
-                energy_j: obs.true_gpu_energy_j,
-                regret: mu_star - true_rewards[arm],
-                switched: sample.switched,
-            });
-        }
-    }
-    // Fill any remaining checkpoints (e.g. run hit max_steps).
-    for cp in checkpoints.iter_mut().skip(next_cp) {
-        *cp = cum_true_energy_j;
-    }
-
-    let totals = service.totals();
-    let metrics = RunMetrics {
-        app: app.name.to_string(),
-        policy: driver.name(),
-        gpu_energy_kj: totals.gpu_energy_kj,
-        exec_time_s: totals.exec_time_s,
-        switches: totals.switches,
-        switch_energy_j: totals.switch_energy_j,
-        switch_time_s: totals.switch_time_s,
-        cumulative_regret,
-        steps: t,
-        completed: final_completed.clamp(0.0, 1.0),
-    };
-    RunResult { metrics, trace, energy_checkpoints_j: checkpoints }
+    let mut backend = SimBackend::new(app, cfg);
+    let controller = Controller::new(app, policy, cfg);
+    drive(controller, &mut backend).expect("simulated backend is infallible")
 }
 
 /// Run `reps` sessions with seeds `seed0..seed0+reps`, resetting the policy
@@ -322,5 +259,61 @@ mod tests {
         let cfg = SessionCfg { record_trace: true, ..SessionCfg::default() };
         let res = run_session(&app, &mut policy, &cfg);
         assert_eq!(res.trace.unwrap().switch_count(), res.metrics.switches);
+    }
+
+    #[test]
+    fn session_honors_custom_frequency_domain() {
+        // A like-for-like 9-arm domain at shifted clocks: the domain is
+        // plumbed end to end (policy arity, node model, regret ground
+        // truth) with no Aurora hard-coding left in the path.
+        let app = calibration::app("clvleaf").unwrap();
+        let shifted = FreqDomain::new((9..=17).map(|i| i as f64 / 10.0).collect());
+        let cfg = SessionCfg {
+            freqs: shifted.clone(),
+            max_steps: 400,
+            ..SessionCfg::default()
+        };
+        assert_eq!(cfg.domain().k(), 9);
+        let mut policy = StaticPolicy::new(9, 8);
+        let res = run_session(&app, &mut policy, &cfg);
+        assert_eq!(res.metrics.steps, 400);
+        assert!(res.metrics.gpu_energy_kj > 0.0);
+        // Same seed, same arm set length, different clocks: the default
+        // domain's run differs (time curve is a function of f_max / f).
+        let default_run = run_session(
+            &app,
+            &mut StaticPolicy::new(9, 4),
+            &SessionCfg { max_steps: 400, ..SessionCfg::default() },
+        );
+        let shifted_run = run_session(
+            &app,
+            &mut StaticPolicy::new(9, 4),
+            &SessionCfg { freqs: shifted, max_steps: 400, ..SessionCfg::default() },
+        );
+        assert_ne!(default_run.metrics.gpu_energy_kj, shifted_run.metrics.gpu_energy_kj);
+    }
+
+    #[test]
+    fn run_result_exposes_session_telemetry() {
+        let app = calibration::app("clvleaf").unwrap();
+        let mut policy = RoundRobin::new(9);
+        let cfg = SessionCfg { max_steps: 300, ..SessionCfg::default() };
+        let res = run_session(&app, &mut policy, &cfg);
+        // Deterministic gauges/counters from the controller...
+        assert_eq!(res.telemetry.counter_value("controller.steps"), Some(300));
+        assert_eq!(
+            res.telemetry.counter_value("controller.switches"),
+            Some(res.metrics.switches)
+        );
+        let rate = res.telemetry.gauge_mean("controller.switch_rate").unwrap();
+        assert!(
+            (rate - res.metrics.switches as f64 / 300.0).abs() < 1e-9,
+            "{rate}"
+        );
+        // ...plus the driver's wall-clock decision-latency gauge,
+        // sampled every 64th decision (t = 0, 64, 128, 192, 256).
+        let lat = res.telemetry.gauge_get("controller.decide_latency_us").unwrap();
+        assert_eq!(lat.count(), 5);
+        assert!(lat.mean() >= 0.0);
     }
 }

@@ -357,6 +357,7 @@ mod tests {
             },
             trace: None,
             energy_checkpoints_j: (1..=100).map(|i| i as f64 * 10.0).collect(),
+            telemetry: crate::telemetry::Recorder::new(),
         };
         let scored = scored_energy_kj(m, &res);
         // E20 = 200 J, scaled = 1.25*200 + 800 = 1050 J.

@@ -24,13 +24,28 @@ impl FreqDomain {
     /// Custom ascending frequency set (with the paper's measured default
     /// switch cost; see [`Self::with_switch_cost`]).
     pub fn new(ghz: Vec<f64>) -> FreqDomain {
-        assert!(!ghz.is_empty(), "empty frequency domain");
-        assert!(
-            ghz.windows(2).all(|w| w[0] < w[1]),
-            "frequencies must be strictly ascending"
-        );
-        assert!(ghz.iter().all(|f| *f > 0.0));
-        FreqDomain { ghz, switch_cost: SwitchCost::default() }
+        FreqDomain::try_new(ghz).expect("valid frequency domain")
+    }
+
+    /// Fallible counterpart of [`Self::new`] for untrusted inputs (config
+    /// files, wire frames): returns the validation failure instead of
+    /// panicking.
+    pub fn try_new(ghz: Vec<f64>) -> Result<FreqDomain, String> {
+        if ghz.is_empty() {
+            return Err("empty frequency domain".into());
+        }
+        if !ghz.windows(2).all(|w| w[0] < w[1]) {
+            return Err("frequencies must be strictly ascending".into());
+        }
+        if !ghz.iter().all(|f| f.is_finite() && *f > 0.0) {
+            return Err("frequencies must be positive and finite".into());
+        }
+        Ok(FreqDomain { ghz, switch_cost: SwitchCost::default() })
+    }
+
+    /// The arm frequencies, GHz (ascending).
+    pub fn ghz_all(&self) -> &[f64] {
+        &self.ghz
     }
 
     /// Override the per-transition cost (custom hardware calibration).
@@ -176,6 +191,18 @@ mod tests {
     #[should_panic]
     fn rejects_unsorted() {
         FreqDomain::new(vec![1.0, 0.9]);
+    }
+
+    #[test]
+    fn try_new_reports_instead_of_panicking() {
+        assert!(FreqDomain::try_new(vec![]).is_err());
+        assert!(FreqDomain::try_new(vec![1.0, 0.9]).is_err());
+        assert!(FreqDomain::try_new(vec![1.0, 1.0]).is_err());
+        assert!(FreqDomain::try_new(vec![-1.0, 1.0]).is_err());
+        assert!(FreqDomain::try_new(vec![f64::NAN]).is_err());
+        let f = FreqDomain::try_new(vec![0.9, 1.2, 1.5]).unwrap();
+        assert_eq!(f.k(), 3);
+        assert_eq!(f.ghz_all(), &[0.9, 1.2, 1.5]);
     }
 
     #[test]

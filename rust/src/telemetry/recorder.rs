@@ -87,6 +87,24 @@ impl Recorder {
         self.gauges.get(name).map(Gauge::mean)
     }
 
+    /// Read-only access to a gauge (count/mean/std/last inspection).
+    pub fn gauge_get(&self, name: &str) -> Option<&Gauge> {
+        self.gauges.get(name)
+    }
+
+    /// Install a pre-accumulated counter under `name` (replacing any
+    /// existing one). Hot loops accumulate into a plain [`Counter`] local
+    /// and merge once — `counter()`'s name lookup allocates per call.
+    pub fn insert_counter(&mut self, name: &str, counter: Counter) {
+        self.counters.insert(name.to_string(), counter);
+    }
+
+    /// Install a pre-accumulated gauge under `name` (replacing any
+    /// existing one); see [`Recorder::insert_counter`].
+    pub fn insert_gauge(&mut self, name: &str, gauge: Gauge) {
+        self.gauges.insert(name.to_string(), gauge);
+    }
+
     /// Render all metrics as CSV (name, kind, count, mean, std, last).
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new();

@@ -10,5 +10,6 @@ pub mod math;
 pub mod rng;
 pub mod stats;
 pub mod table;
+pub mod wire;
 
 pub use rng::Rng;

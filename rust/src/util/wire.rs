@@ -1,0 +1,186 @@
+//! Lossless JSON wire primitives shared by every serialization surface:
+//! the cluster's framed-JSONL shard protocol ([`crate::cluster::wire`])
+//! and the controller's telemetry record/replay log
+//! ([`crate::control::replay`]). serde is not in the offline crate set,
+//! so codecs are hand-rolled on [`crate::util::io::Json`].
+//!
+//! Round-trips are exact: floats ride Rust's shortest round-trip
+//! formatting (`Json::render*` / `Json::parse`), with string sentinels
+//! for the values JSON numbers cannot carry (NaN/±inf/-0.0, see
+//! [`f64_to_json`]), and integers above 2^53 fall back to decimal
+//! strings (see [`u64_to_json`]) — so a decoded value re-runs its
+//! computation bit-identically.
+
+use super::io::Json;
+
+/// Decode failure: the input was not valid JSON, or was valid JSON that
+/// is not a well-formed message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire decode error: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+pub(crate) fn err<T>(msg: impl Into<String>) -> Result<T, WireError> {
+    Err(WireError(msg.into()))
+}
+
+/// Symmetric JSON codec for one wire type: `from_wire(&to_wire(x)) == x`.
+pub trait WireCodec: Sized {
+    fn to_wire(&self) -> Json;
+    fn from_wire(v: &Json) -> Result<Self, WireError>;
+}
+
+/// Largest integer magnitude `Json::Num` (an f64) represents exactly.
+const MAX_EXACT_INT: u64 = 1 << 53;
+
+/// Encode an f64 losslessly. Ordinary values ride `Json::Num` (shortest
+/// round-trip formatting); the values the JSON number grammar cannot
+/// carry — NaN, ±inf (the writer renders them as `null`) and -0.0 (the
+/// writer's integer path renders it as `0`) — ride string sentinels.
+pub fn f64_to_json(x: f64) -> Json {
+    if x.is_nan() {
+        Json::Str("nan".to_string())
+    } else if x == f64::INFINITY {
+        Json::Str("inf".to_string())
+    } else if x == f64::NEG_INFINITY {
+        Json::Str("-inf".to_string())
+    } else if x == 0.0 && x.is_sign_negative() {
+        Json::Str("-0".to_string())
+    } else {
+        Json::Num(x)
+    }
+}
+
+/// Decode the [`f64_to_json`] encoding (number or sentinel string).
+pub fn f64_from_json(v: &Json) -> Result<f64, WireError> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "-0" => Ok(-0.0),
+            other => err(format!("bad float sentinel: {other:?}")),
+        },
+        _ => err("expected a number"),
+    }
+}
+
+/// Encode a u64 losslessly: values up to 2^53 ride as JSON numbers, the
+/// rest (hash-derived seeds, sentinel step caps) as decimal strings.
+pub fn u64_to_json(x: u64) -> Json {
+    if x <= MAX_EXACT_INT {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// Decode the [`u64_to_json`] encoding (number or decimal string).
+pub fn u64_from_json(v: &Json) -> Result<u64, WireError> {
+    match v {
+        Json::Num(x) => {
+            if x.is_finite() && *x >= 0.0 && x.trunc() == *x && *x <= MAX_EXACT_INT as f64 {
+                Ok(*x as u64)
+            } else {
+                err(format!("not a non-negative integer: {x}"))
+            }
+        }
+        Json::Str(s) => {
+            s.parse::<u64>().map_err(|_| WireError(format!("bad integer string: {s:?}")))
+        }
+        _ => err("expected an integer"),
+    }
+}
+
+pub(crate) fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json, WireError> {
+    v.get(key).ok_or_else(|| WireError(format!("missing field `{key}`")))
+}
+
+pub(crate) fn str_field(v: &Json, key: &str) -> Result<String, WireError> {
+    field(v, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| WireError(format!("field `{key}` must be a string")))
+}
+
+pub(crate) fn f64_field(v: &Json, key: &str) -> Result<f64, WireError> {
+    f64_from_json(field(v, key)?).map_err(|e| WireError(format!("field `{key}`: {}", e.0)))
+}
+
+pub(crate) fn bool_field(v: &Json, key: &str) -> Result<bool, WireError> {
+    field(v, key)?
+        .as_bool()
+        .ok_or_else(|| WireError(format!("field `{key}` must be a bool")))
+}
+
+pub(crate) fn u64_field(v: &Json, key: &str) -> Result<u64, WireError> {
+    u64_from_json(field(v, key)?).map_err(|e| WireError(format!("field `{key}`: {}", e.0)))
+}
+
+pub(crate) fn usize_field(v: &Json, key: &str) -> Result<usize, WireError> {
+    Ok(u64_field(v, key)? as usize)
+}
+
+/// Encode a float slice losslessly (element-wise [`f64_to_json`]).
+pub fn f64s_to_json(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|x| f64_to_json(*x)).collect())
+}
+
+/// Decode the [`f64s_to_json`] encoding.
+pub fn f64s_from_json(v: &Json) -> Result<Vec<f64>, WireError> {
+    let Some(arr) = v.as_arr() else {
+        return err("expected an array of numbers");
+    };
+    arr.iter().map(f64_from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_codec_carries_what_json_numbers_cannot() {
+        // The raw writer would fold these to `null` / `0`; the sentinel
+        // path keeps them bit-faithful (NaN up to payload canonization).
+        assert!(f64_from_json(&f64_to_json(f64::NAN)).unwrap().is_nan());
+        assert_eq!(f64_from_json(&f64_to_json(f64::INFINITY)).unwrap(), f64::INFINITY);
+        assert_eq!(f64_from_json(&f64_to_json(f64::NEG_INFINITY)).unwrap(), f64::NEG_INFINITY);
+        let neg_zero = f64_from_json(&f64_to_json(-0.0)).unwrap();
+        assert!(neg_zero == 0.0 && neg_zero.is_sign_negative());
+        // Ordinary values stay plain numbers.
+        assert_eq!(f64_to_json(0.035), Json::Num(0.035));
+        assert_eq!(f64_from_json(&Json::Num(-2.5)).unwrap(), -2.5);
+        assert!(f64_from_json(&Json::Str("fast".into())).is_err());
+        assert!(f64_from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn u64_codec_is_lossless_at_both_ends() {
+        for x in [0, 1, 1 << 53, (1 << 53) + 1, u64::MAX] {
+            assert_eq!(u64_from_json(&u64_to_json(x)).unwrap(), x);
+        }
+        assert!(u64_from_json(&Json::Num(-1.0)).is_err());
+        assert!(u64_from_json(&Json::Num(1.5)).is_err());
+        assert!(u64_from_json(&Json::Str("12x".into())).is_err());
+        assert!(u64_from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn f64_slice_round_trips_exactly() {
+        let xs = vec![0.8, 0.9, 1.1, 1.6, -0.0, f64::INFINITY, 1.0 / 3.0];
+        let back = f64s_from_json(&f64s_to_json(&xs)).unwrap();
+        assert_eq!(xs.len(), back.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(f64s_from_json(&Json::Num(1.0)).is_err());
+        assert!(f64s_from_json(&Json::Arr(vec![Json::Null])).is_err());
+    }
+}

@@ -6,6 +6,18 @@
 use crate::util::io::{Csv, Json};
 use std::path::Path;
 
+/// Shortest round-trip float formatting (Rust's `{}` Display): the
+/// decimal the standard parser maps back to the exact same bits. Non-
+/// finite values print as `inf`/`-inf`/`NaN`, which [`parse_f64`]
+/// accepts back.
+fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+fn parse_f64(s: &str) -> Option<f64> {
+    s.parse::<f64>().ok()
+}
+
 /// One decision interval's record.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TraceStep {
@@ -105,20 +117,84 @@ impl Trace {
     }
 
     /// Export as CSV: t, arm, reward, energy_j, regret, switched.
+    ///
+    /// Floats are written in Rust's shortest round-trip formatting (the
+    /// same contract as the cluster wire), so [`Trace::read_csv`] decodes
+    /// the exact bit pattern back — a written trace is a lossless record,
+    /// not a display rendering.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        self.to_csv().write_to(path)
+    }
+
+    /// The CSV rendering [`Trace::write_csv`] persists.
+    pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new();
         csv.row(&["t", "arm", "reward", "energy_j", "regret", "switched"]);
         for s in &self.steps {
             csv.row(&[
                 s.t.to_string(),
                 s.arm.to_string(),
-                format!("{:.6}", s.reward),
-                format!("{:.6}", s.energy_j),
-                format!("{:.6}", s.regret),
+                fmt_f64(s.reward),
+                fmt_f64(s.energy_j),
+                fmt_f64(s.regret),
                 (s.switched as u8).to_string(),
             ]);
         }
-        csv.write_to(path)
+        csv
+    }
+
+    /// Parse the [`Trace::write_csv`] format back (exact float
+    /// round-trip). Rejects a missing/odd header, short rows, and
+    /// malformed fields with `InvalidData` — never panics on bad input.
+    pub fn read_csv(path: &Path) -> std::io::Result<Trace> {
+        Trace::from_csv_text(&std::fs::read_to_string(path)?)
+    }
+
+    /// [`Trace::read_csv`] over in-memory text.
+    pub fn from_csv_text(text: &str) -> std::io::Result<Trace> {
+        let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let mut lines = text.lines();
+        match lines.next() {
+            Some("t,arm,reward,energy_j,regret,switched") => {}
+            other => return Err(bad(format!("bad trace header: {other:?}"))),
+        }
+        let mut trace = Trace::new();
+        for (i, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let cells: Vec<&str> = line.split(',').collect();
+            let [t, arm, reward, energy_j, regret, switched] = cells[..] else {
+                return Err(bad(format!("trace row {}: expected 6 fields", i + 2)));
+            };
+            let bad_field = |what: &str| bad(format!("trace row {}: bad {what}", i + 2));
+            let step = TraceStep {
+                t: t.parse().map_err(|_| bad_field("t"))?,
+                arm: arm.parse().map_err(|_| bad_field("arm"))?,
+                reward: parse_f64(reward).ok_or_else(|| bad_field("reward"))?,
+                energy_j: parse_f64(energy_j).ok_or_else(|| bad_field("energy_j"))?,
+                regret: parse_f64(regret).ok_or_else(|| bad_field("regret"))?,
+                switched: match switched {
+                    "0" => false,
+                    "1" => true,
+                    _ => return Err(bad_field("switched")),
+                },
+            };
+            if let Some(last) = trace.steps.last() {
+                // checked_add: t = u64::MAX in a hostile file must error,
+                // not overflow-panic in debug builds.
+                if last.t.checked_add(1) != Some(step.t) {
+                    return Err(bad(format!(
+                        "trace row {}: non-consecutive t {} after {}",
+                        i + 2,
+                        step.t,
+                        last.t
+                    )));
+                }
+            }
+            trace.steps.push(step);
+        }
+        Ok(trace)
     }
 
     /// Compact JSON summary.
@@ -205,5 +281,74 @@ mod tests {
         let s = j.render();
         assert!(s.contains("\"steps\": 10"), "{s}");
         assert!(s.contains("\"switches\": 5"), "{s}");
+    }
+
+    #[test]
+    fn csv_file_round_trip_is_exact() {
+        let tr = mk_trace();
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_trace_rt_{}", std::process::id()));
+        let path = dir.join("trace.csv");
+        tr.write_csv(&path).unwrap();
+        let back = Trace::read_csv(&path).unwrap();
+        assert_eq!(back.steps(), tr.steps());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Property: write → read reproduces every step bit-for-bit (the
+    /// shortest-round-trip float contract).
+    #[test]
+    fn csv_text_round_trip_property() {
+        use crate::testutil::proptest_lite::{forall_seeded, Gen};
+        use crate::util::Rng;
+
+        struct StepsGen;
+        impl Gen for StepsGen {
+            type Value = Vec<TraceStep>;
+            fn generate(&self, rng: &mut Rng) -> Vec<TraceStep> {
+                let n = rng.index(40);
+                (0..n)
+                    .map(|i| TraceStep {
+                        t: (i + 1) as u64,
+                        arm: rng.index(9),
+                        // Full-precision mantissas; occasionally values a
+                        // fixed-digit formatter would mangle.
+                        reward: -rng.uniform_range(0.0, 3.0) * (1.0 / 3.0),
+                        energy_j: rng.uniform_range(0.0, 1e3),
+                        regret: rng.uniform_range(0.0, 5.0) * 1e-7,
+                        switched: rng.chance(0.5),
+                    })
+                    .collect()
+            }
+        }
+        forall_seeded(0x7_2ACE, 100, StepsGen, |steps| {
+            let mut tr = Trace::new();
+            for s in steps {
+                tr.push(*s);
+            }
+            let text = tr.to_csv().render();
+            match Trace::from_csv_text(&text) {
+                Ok(back) => back.steps() == tr.steps(),
+                Err(_) => false,
+            }
+        });
+    }
+
+    #[test]
+    fn csv_reader_rejects_malformed_input() {
+        for bad in [
+            "",
+            "wrong,header\n1,2,3,4,5,6\n",
+            "t,arm,reward,energy_j,regret,switched\n1,0,0,0,0\n",
+            "t,arm,reward,energy_j,regret,switched\n1,0,x,0,0,0\n",
+            "t,arm,reward,energy_j,regret,switched\n1,0,0,0,0,2\n",
+            // Non-consecutive t.
+            "t,arm,reward,energy_j,regret,switched\n1,0,0,0,0,0\n3,0,0,0,0,0\n",
+        ] {
+            assert!(Trace::from_csv_text(bad).is_err(), "{bad:?}");
+        }
+        // The empty trace (header only) is valid.
+        let empty = Trace::from_csv_text("t,arm,reward,energy_j,regret,switched\n").unwrap();
+        assert!(empty.is_empty());
     }
 }

@@ -114,6 +114,22 @@ impl Gen for AssignmentGen {
             } else {
                 None
             },
+            freqs_ghz: if rng.chance(0.25) {
+                // Ascending positive arm sets (a valid domain is what the
+                // leader would have validated before encoding).
+                let k = 1 + rng.index(12);
+                let mut f = 0.0;
+                Some(
+                    (0..k)
+                        .map(|_| {
+                            f += rng.uniform_range(0.05, 0.4);
+                            f
+                        })
+                        .collect(),
+                )
+            } else {
+                None
+            },
         }
     }
 }

@@ -1,0 +1,202 @@
+//! Pinned regression: the sans-IO `Controller` + `SimBackend` + `drive`
+//! composition must be byte-identical to the historical monolithic
+//! `run_session` loop it replaced.
+//!
+//! `legacy_run_session` below is a verbatim port of the pre-refactor
+//! implementation (the inline `Service` loop). Every policy family, app,
+//! and configuration axis is cross-checked for exact (bit-for-bit)
+//! equality of `RunMetrics`, the recorded trace, and the energy
+//! checkpoints — floating-point `==`, no tolerances.
+
+use energyucb::bandit::batch::{BatchPolicy, Scalar};
+use energyucb::bandit::{
+    ConstrainedEnergyUcb, EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, Policy,
+    RewardNormalizer, RoundRobin, SlidingWindowUcb, StaticPolicy, Ucb1,
+};
+use energyucb::control::{run_session, RunMetrics, SessionCfg};
+use energyucb::geopm::{Control, Service};
+use energyucb::sim::freq::{FreqDomain, SwitchCost};
+use energyucb::sim::node::Node;
+use energyucb::workload::calibration;
+use energyucb::workload::model::AppModel;
+use energyucb::workload::trace::{Trace, TraceStep};
+
+/// The pre-refactor `run_session`, kept verbatim as the parity oracle.
+/// (The winsorize clamp moved into `RewardNormalizer` with the same -3
+/// default, so `normalize` here is the historical `normalize(..).max(-3.0)`.)
+fn legacy_run_session(
+    app: &AppModel,
+    policy: &mut dyn Policy,
+    cfg: &SessionCfg,
+) -> (RunMetrics, Option<Trace>, Vec<f64>) {
+    let freqs = FreqDomain::aurora().with_switch_cost(cfg.switch_cost);
+    assert_eq!(policy.k(), freqs.k(), "policy arity must match frequency domain");
+    let k = freqs.k();
+    let node = Node::new(app.clone(), freqs.clone(), cfg.dt_s, cfg.seed);
+    let mut service = Service::new(node);
+    let mut normalizer = RewardNormalizer::new();
+    let mut trace = cfg.record_trace.then(Trace::new);
+
+    let mut driver = Scalar::new(vec![policy]);
+    let all_feasible = vec![1.0f32; k];
+    let mut sel = [0i32; 1];
+
+    let true_rewards: Vec<f64> =
+        (0..freqs.k()).map(|i| app.true_reward(&freqs, i, cfg.dt_s)).collect();
+    let mu_star = true_rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+    let mut cumulative_regret = 0.0;
+    let mut t: u64 = 0;
+    let mut checkpoints = vec![0.0f64; cfg.checkpoints];
+    let mut next_cp = 0usize;
+    let mut cum_true_energy_j = 0.0;
+    let mut final_completed = 0.0;
+
+    while !service.done() && t < cfg.max_steps {
+        t += 1;
+        driver.select_into(t, &all_feasible, &mut sel);
+        let arm = sel[0] as usize;
+        service.write(Control::GpuFrequency(arm)).expect("valid arm");
+        let sample = service.sample().expect("not done");
+        let obs = sample.obs;
+
+        let raw = cfg.reward_form.raw(obs.gpu_energy_j, obs.core_util, obs.uncore_util);
+        let reward = normalizer.normalize(raw);
+        driver.update_batch(&sel, &[reward], &[obs.progress], &[1.0]);
+
+        cumulative_regret += mu_star - true_rewards[arm];
+        cum_true_energy_j += obs.true_gpu_energy_j;
+
+        let completed = 1.0 - obs.remaining;
+        final_completed = completed;
+        while next_cp < cfg.checkpoints
+            && completed >= (next_cp + 1) as f64 / cfg.checkpoints as f64 - 1e-12
+        {
+            checkpoints[next_cp] = cum_true_energy_j;
+            next_cp += 1;
+        }
+
+        if let Some(tr) = trace.as_mut() {
+            tr.push(TraceStep {
+                t,
+                arm,
+                reward,
+                energy_j: obs.true_gpu_energy_j,
+                regret: mu_star - true_rewards[arm],
+                switched: sample.switched,
+            });
+        }
+    }
+    for cp in checkpoints.iter_mut().skip(next_cp) {
+        *cp = cum_true_energy_j;
+    }
+
+    let totals = service.totals();
+    let metrics = RunMetrics {
+        app: app.name.to_string(),
+        policy: driver.name(),
+        gpu_energy_kj: totals.gpu_energy_kj,
+        exec_time_s: totals.exec_time_s,
+        switches: totals.switches,
+        switch_energy_j: totals.switch_energy_j,
+        switch_time_s: totals.switch_time_s,
+        cumulative_regret,
+        steps: t,
+        completed: final_completed.clamp(0.0, 1.0),
+    };
+    (metrics, trace, checkpoints)
+}
+
+/// Exact cross-check of one (policy-pair, app, cfg) case.
+fn assert_parity(
+    label: &str,
+    app: &AppModel,
+    legacy_policy: &mut dyn Policy,
+    new_policy: &mut dyn Policy,
+    cfg: &SessionCfg,
+) {
+    let (legacy_metrics, legacy_trace, legacy_cps) = legacy_run_session(app, legacy_policy, cfg);
+    let new = run_session(app, new_policy, cfg);
+    assert_eq!(new.metrics, legacy_metrics, "{label}: metrics diverged");
+    assert_eq!(new.energy_checkpoints_j, legacy_cps, "{label}: checkpoints diverged");
+    match (&new.trace, &legacy_trace) {
+        (None, None) => {}
+        (Some(a), Some(b)) => assert_eq!(a.steps(), b.steps(), "{label}: trace diverged"),
+        _ => panic!("{label}: trace presence diverged"),
+    }
+}
+
+/// Two independent instances of each policy configuration (one per
+/// implementation under test).
+fn policy_pairs() -> Vec<(&'static str, Box<dyn Policy>, Box<dyn Policy>)> {
+    fn pair<P: Policy + 'static>(
+        name: &'static str,
+        mk: impl Fn() -> P,
+    ) -> (&'static str, Box<dyn Policy>, Box<dyn Policy>) {
+        (name, Box::new(mk()), Box::new(mk()))
+    }
+    vec![
+        pair("static", || StaticPolicy::new(9, 8)),
+        pair("rrfreq", || RoundRobin::new(9)),
+        pair("energyucb", || EnergyUcb::new(9, EnergyUcbConfig::default())),
+        pair("constrained", || ConstrainedEnergyUcb::new(9, EnergyUcbConfig::default(), 0.05)),
+        pair("ucb1", || Ucb1::new(9, 0.05)),
+        pair("swucb", || SlidingWindowUcb::new(9, 0.05, 0.01, 500)),
+        pair("egreedy", || EpsilonGreedy::new(9, 0.1, 20.0, 7)),
+        pair("energyts", || EnergyTs::default_for(9, 7)),
+    ]
+}
+
+#[test]
+fn rebuilt_session_is_byte_identical_across_policies() {
+    let app = calibration::app("tealeaf").unwrap();
+    let cfg = SessionCfg { seed: 3, max_steps: 1_500, ..SessionCfg::default() };
+    for (name, mut legacy, mut new) in policy_pairs() {
+        assert_parity(name, &app, legacy.as_mut(), new.as_mut(), &cfg);
+    }
+}
+
+#[test]
+fn rebuilt_session_is_byte_identical_on_full_runs() {
+    // Uncapped runs to job completion, across apps.
+    for app_name in ["tealeaf", "clvleaf"] {
+        let app = calibration::app(app_name).unwrap();
+        let cfg = SessionCfg { seed: 11, ..SessionCfg::default() };
+        let mut a = EnergyUcb::new(9, EnergyUcbConfig::default());
+        let mut b = EnergyUcb::new(9, EnergyUcbConfig::default());
+        assert_parity(app_name, &app, &mut a, &mut b, &cfg);
+    }
+}
+
+#[test]
+fn rebuilt_session_is_byte_identical_with_trace_and_custom_cost() {
+    let app = calibration::app("clvleaf").unwrap();
+    let cfg = SessionCfg {
+        seed: 42,
+        record_trace: true,
+        switch_cost: SwitchCost { latency_s: 450e-6, energy_j: 0.9 },
+        ..SessionCfg::default()
+    };
+    let mut a = RoundRobin::new(9);
+    let mut b = RoundRobin::new(9);
+    let (legacy_metrics, legacy_trace, _) = legacy_run_session(&app, &mut a, &cfg);
+    let new = run_session(&app, &mut b, &cfg);
+    assert_eq!(new.metrics, legacy_metrics);
+    // Full per-step trace equality, bit-for-bit.
+    assert_eq!(new.trace.unwrap().steps(), legacy_trace.unwrap().steps());
+}
+
+#[test]
+fn rebuilt_session_is_byte_identical_across_reward_forms() {
+    use energyucb::bandit::RewardForm;
+    let app = calibration::app("tealeaf").unwrap();
+    for form in
+        [RewardForm::EnergyRatio, RewardForm::EnergySquaredRatio, RewardForm::EnergyRatioSquared]
+    {
+        let cfg =
+            SessionCfg { seed: 5, max_steps: 800, reward_form: form, ..SessionCfg::default() };
+        let mut a = EnergyUcb::new(9, EnergyUcbConfig::default());
+        let mut b = EnergyUcb::new(9, EnergyUcbConfig::default());
+        assert_parity(form.name(), &app, &mut a, &mut b, &cfg);
+    }
+}

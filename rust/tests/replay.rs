@@ -1,0 +1,172 @@
+//! End-to-end record→replay: a session recorded through the `Recording`
+//! tee and replayed through `ReplayBackend` under the same policy config
+//! must reproduce the original run's metrics *exactly* (bit-for-bit
+//! floats) — the backend determinism guarantee of EXPERIMENTS.md
+//! §Controller — for every shipped policy. Also covers counterfactual
+//! replay (a different policy over the frozen sample stream) and the
+//! file-based CLI-shaped path.
+
+use energyucb::config::ExperimentConfig;
+use energyucb::control::{
+    drive, Controller, Recording, ReplayBackend, ReplayHeader, RunResult, SessionCfg, SimBackend,
+};
+use energyucb::workload::calibration;
+use energyucb::workload::model::AppModel;
+
+/// Every policy name the config surface ships.
+const POLICIES: [&str; 10] = [
+    "energyucb",
+    "constrained",
+    "ucb1",
+    "swucb",
+    "egreedy",
+    "energyts",
+    "rrfreq",
+    "static",
+    "rlpower",
+    "drlcap",
+];
+
+fn policy_config(name: &str) -> energyucb::config::PolicyConfig {
+    ExperimentConfig::from_toml(&format!("[policy]\nname = \"{name}\"\n"))
+        .unwrap()
+        .policy
+}
+
+/// Record one session into an in-memory JSONL buffer; return the run and
+/// the log text.
+fn record(
+    app: &AppModel,
+    pcfg: &energyucb::config::PolicyConfig,
+    cfg: &SessionCfg,
+) -> (RunResult, String) {
+    let mut policy = pcfg.build(cfg.freqs.k(), cfg.seed);
+    policy.reset();
+    let header = ReplayHeader {
+        app: app.name.to_string(),
+        policy: Some(pcfg.clone()),
+        session: cfg.clone(),
+    };
+    let mut buf: Vec<u8> = Vec::new();
+    let mut backend = Recording::new(SimBackend::new(app, cfg), &mut buf, &header).unwrap();
+    let controller = Controller::new(app, policy.as_mut(), cfg);
+    let result = drive(controller, &mut backend).unwrap();
+    backend.finish().unwrap();
+    (result, String::from_utf8(buf).unwrap())
+}
+
+/// Replay a recorded log under the policy config in its header.
+fn replay(app: &AppModel, log: &str) -> RunResult {
+    let mut backend = ReplayBackend::from_text(log).unwrap();
+    let header = backend.header().clone();
+    let scfg = header.session.clone();
+    let mut policy = header.policy.expect("recorded policy").build(scfg.freqs.k(), scfg.seed);
+    policy.reset();
+    let controller = Controller::new(app, policy.as_mut(), &scfg);
+    drive(controller, &mut backend).unwrap()
+}
+
+#[test]
+fn record_then_replay_is_exact_for_every_shipped_policy() {
+    let app = calibration::app("tealeaf").unwrap();
+    // Capped runs keep the full 10-policy sweep fast; the uncapped case
+    // is covered separately below.
+    let cfg = SessionCfg { seed: 11, max_steps: 1_200, ..SessionCfg::default() };
+    for name in POLICIES {
+        let pcfg = policy_config(name);
+        let (original, log) = record(&app, &pcfg, &cfg);
+        let replayed = replay(&app, &log);
+        // Exact equality: RunMetrics is PartialEq over raw f64s.
+        assert_eq!(replayed.metrics, original.metrics, "{name}");
+        assert_eq!(
+            replayed.energy_checkpoints_j, original.energy_checkpoints_j,
+            "{name}: checkpoints"
+        );
+        match (&original.trace, &replayed.trace) {
+            (None, None) => {}
+            (a, b) => assert_eq!(
+                a.as_ref().map(|t| t.len()),
+                b.as_ref().map(|t| t.len()),
+                "{name}: trace"
+            ),
+        }
+    }
+}
+
+#[test]
+fn record_then_replay_is_exact_on_a_full_run() {
+    let app = calibration::app("clvleaf").unwrap();
+    let cfg = SessionCfg { seed: 3, record_trace: true, ..SessionCfg::default() };
+    let pcfg = policy_config("energyucb");
+    let (original, log) = record(&app, &pcfg, &cfg);
+    assert!((original.metrics.completed - 1.0).abs() < 1e-9, "ran to completion");
+    let replayed = replay(&app, &log);
+    assert_eq!(replayed.metrics, original.metrics);
+    // The replayed trace reproduces every step bit-for-bit (decisions,
+    // rewards, regret — all recomputed from the recorded samples).
+    assert_eq!(
+        replayed.trace.unwrap().steps(),
+        original.trace.unwrap().steps()
+    );
+}
+
+#[test]
+fn counterfactual_replay_runs_a_different_policy_over_frozen_samples() {
+    let app = calibration::app("tealeaf").unwrap();
+    let cfg = SessionCfg { seed: 7, max_steps: 600, ..SessionCfg::default() };
+    let (original, log) = record(&app, &policy_config("static"), &cfg);
+
+    let mut backend = ReplayBackend::from_text(&log).unwrap();
+    let scfg = backend.header().session.clone();
+    let mut policy = policy_config("rrfreq").build(scfg.freqs.k(), scfg.seed);
+    let controller = Controller::new(&app, policy.as_mut(), &scfg);
+    let counterfactual = drive(controller, &mut backend).unwrap();
+
+    // Decisions (and thus regret accounting) are the new policy's...
+    assert_eq!(counterfactual.metrics.policy, "RRFreq");
+    assert_ne!(counterfactual.metrics.cumulative_regret, original.metrics.cumulative_regret);
+    // ...while the energy totals stay the recorded run's (open loop).
+    assert_eq!(counterfactual.metrics.gpu_energy_kj, original.metrics.gpu_energy_kj);
+    assert_eq!(counterfactual.metrics.steps, original.metrics.steps);
+}
+
+#[test]
+fn file_round_trip_matches_in_memory() {
+    let app = calibration::app("tealeaf").unwrap();
+    let cfg = SessionCfg { seed: 5, max_steps: 400, ..SessionCfg::default() };
+    let (original, log) = record(&app, &policy_config("ucb1"), &cfg);
+    let dir = std::env::temp_dir().join(format!("energyucb_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.jsonl");
+    std::fs::write(&path, &log).unwrap();
+    let mut backend = ReplayBackend::open(&path).unwrap();
+    assert_eq!(backend.len(), original.metrics.steps as usize);
+    let scfg = backend.header().session.clone();
+    let mut policy =
+        backend.header().policy.clone().unwrap().build(scfg.freqs.k(), scfg.seed);
+    policy.reset();
+    let controller = Controller::new(&app, policy.as_mut(), &scfg);
+    let replayed = drive(controller, &mut backend).unwrap();
+    assert_eq!(replayed.metrics, original.metrics);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn replaying_under_a_different_seed_policy_diverges() {
+    // Sanity guard on the guarantee's precondition: the *same* policy
+    // config but a different seed is a different controller — seeded
+    // policies must not accidentally ignore their seed.
+    let app = calibration::app("tealeaf").unwrap();
+    let cfg = SessionCfg { seed: 21, max_steps: 900, ..SessionCfg::default() };
+    let (original, log) = record(&app, &policy_config("egreedy"), &cfg);
+    let mut backend = ReplayBackend::from_text(&log).unwrap();
+    let scfg = backend.header().session.clone();
+    let mut policy = policy_config("egreedy").build(scfg.freqs.k(), scfg.seed + 1);
+    policy.reset();
+    let controller = Controller::new(&app, policy.as_mut(), &scfg);
+    let other = drive(controller, &mut backend).unwrap();
+    assert_ne!(
+        other.metrics.cumulative_regret,
+        original.metrics.cumulative_regret
+    );
+}
