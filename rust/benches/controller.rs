@@ -1,0 +1,66 @@
+//! Drive-loop overhead: the batch-native controller path (`policy_run` =
+//! `Controller` + `FleetBackend` + `drive`) against the direct fleet
+//! loop (`native_run`) at B ∈ {1, 32, 1024} — the cost of the sans-IO
+//! decision core's bookkeeping (per-env normalizers, regret, samples)
+//! on top of the identical environment arithmetic. Both shapes run the
+//! pinned EnergyUCB fleet over the same calibrated parameters and are
+//! reported as env-steps/s, so the gap between the `native` and `drive`
+//! rows at matched B is the controller overhead (EXPERIMENTS.md §Perf).
+
+use energyucb::fleet::{native, policy_run, FleetHyper, FleetParams, FleetState};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::util::bench::{black_box, Bench};
+use energyucb::util::Rng;
+use energyucb::workload::calibration;
+
+fn params_for(batch: usize) -> FleetParams {
+    let freqs = FreqDomain::aurora();
+    let apps: Vec<_> = calibration::all_apps();
+    let assigned: Vec<&_> = apps.iter().cycle().take(batch).collect();
+    FleetParams::from_apps(&assigned, &freqs, 0.01)
+}
+
+/// Steps per measured run: long enough to amortize fresh-state setup,
+/// short enough that B = 1024 stays inside a bench sample.
+const RUN_STEPS: u64 = 200;
+
+fn main() {
+    let b = Bench::default();
+    let hyper = FleetHyper::default();
+    let k = 9usize;
+
+    for batch in [1usize, 32, 1024] {
+        let params = params_for(batch);
+
+        // Direct fleet loop (the bit-pinned reference path).
+        b.case(
+            &format!("native/B={batch}"),
+            (batch as u64 * RUN_STEPS) as f64,
+            || {
+                let mut state = FleetState::fresh(batch, k);
+                let mut rng = Rng::new(1);
+                black_box(native::native_run(
+                    &mut state, &params, &hyper, &mut rng, RUN_STEPS,
+                ));
+            },
+        );
+
+        // The same fleet through the batch-native controller (identical
+        // trajectories; adds per-env metrics/regret/normalizer state).
+        b.case(
+            &format!("drive/B={batch}"),
+            (batch as u64 * RUN_STEPS) as f64,
+            || {
+                let mut state = FleetState::fresh(batch, k);
+                let mut policy = energyucb::bandit::batch::BatchEnergyUcb::with_initial_arm(
+                    batch,
+                    k,
+                    hyper,
+                    k - 1,
+                );
+                let mut rng = Rng::new(1);
+                black_box(policy_run(&mut state, &params, &mut policy, &mut rng, RUN_STEPS));
+            },
+        );
+    }
+}

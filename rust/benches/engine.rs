@@ -2,18 +2,22 @@
 //! B ∈ {1, 32, 256, 4096} — the hot-loop comparison behind the
 //! batch-native policy core (EXPERIMENTS.md §Engine / §Perf).
 //!
-//! Three shapes per batch size:
+//! Three shapes per batch size, all reported as env-steps/s:
 //!   * `native`  — the bit-pinned EnergyUCB fleet step (`FleetState`
-//!     grids, reused `StepScratch` buffers),
-//!   * `batched` — the generic runner driving the SoA `BatchEnergyUcb`
-//!     (same arithmetic, policy-owned grids),
-//!   * `scalar-loop` — the generic runner driving B scalar `EnergyUcb`
+//!     grids, reused `StepScratch` buffers), timed per step,
+//!   * `batched` — the batch-native control loop (`policy_run`) driving
+//!     the SoA `BatchEnergyUcb` (same arithmetic, policy-owned grids),
+//!     timed over a fixed-length run,
+//!   * `scalar-loop` — the same loop driving B scalar `EnergyUcb`
 //!     instances through the `Scalar` bridge (the f64 per-env baseline
 //!     the SoA path is measured against).
+//!
+//! The loop-level drive-vs-native overhead comparison at matched
+//! granularity lives in `benches/controller.rs`.
 
-use energyucb::bandit::batch::{BatchEnergyUcb, BatchPolicy, Scalar};
+use energyucb::bandit::batch::{BatchEnergyUcb, Scalar};
 use energyucb::bandit::{EnergyUcb, EnergyUcbConfig};
-use energyucb::fleet::{native, policy_step, FleetHyper, FleetParams, FleetState, StepScratch};
+use energyucb::fleet::{native, policy_run, FleetHyper, FleetParams, FleetState, StepScratch};
 use energyucb::sim::freq::FreqDomain;
 use energyucb::util::bench::{black_box, Bench};
 use energyucb::util::Rng;
@@ -25,6 +29,11 @@ fn params_for(batch: usize) -> FleetParams {
     let assigned: Vec<&_> = apps.iter().cycle().take(batch).collect();
     FleetParams::from_apps(&assigned, &freqs, 0.01)
 }
+
+/// Steps per measured run for the loop-driven shapes: long enough to
+/// amortize the fresh-state setup, short enough that B = 4096 stays
+/// inside a bench sample.
+const RUN_STEPS: u64 = 200;
 
 fn main() {
     let b = Bench::default();
@@ -53,51 +62,50 @@ fn main() {
             });
         }
 
-        // Generic runner + SoA batch policy (identical trajectories).
+        // Batch-native control loop + SoA batch policy (identical
+        // trajectories to `native`, policy-owned grids).
         {
-            let mut state = FleetState::fresh(batch, k);
-            let mut policy = BatchEnergyUcb::with_initial_arm(batch, k, hyper, k - 1);
-            let mut scratch = StepScratch::new(batch);
-            let mut noise = vec![0.0f32; batch];
-            let mut rng = Rng::new(1);
-            let mut step_idx = 0u64;
-            b.case(&format!("batched/B={batch}"), batch as f64, || {
-                native::step_noise_into(&params, step_idx, &mut rng, &mut noise);
-                policy_step(&mut state, &params, &mut policy, &noise, &mut scratch);
-                black_box(&scratch.sel);
-                step_idx += 1;
-                if state.all_done() {
-                    state = FleetState::fresh(batch, k);
-                    policy.reset();
-                    step_idx = 0;
-                }
-            });
+            b.case(
+                &format!("batched/B={batch}"),
+                (batch as u64 * RUN_STEPS) as f64,
+                || {
+                    let mut state = FleetState::fresh(batch, k);
+                    let mut policy = BatchEnergyUcb::with_initial_arm(batch, k, hyper, k - 1);
+                    let mut rng = Rng::new(1);
+                    black_box(policy_run(
+                        &mut state,
+                        &params,
+                        &mut policy,
+                        &mut rng,
+                        RUN_STEPS,
+                    ));
+                },
+            );
         }
 
-        // Generic runner + scalar loop over the bridge (the baseline the
+        // Same loop, B scalar policies over the bridge (the baseline the
         // SoA iteration is measured against).
         {
-            let mut state = FleetState::fresh(batch, k);
-            let mut policy = Scalar::new(
-                (0..batch)
-                    .map(|_| EnergyUcb::new(k, EnergyUcbConfig::default()))
-                    .collect::<Vec<_>>(),
+            b.case(
+                &format!("scalar-loop/B={batch}"),
+                (batch as u64 * RUN_STEPS) as f64,
+                || {
+                    let mut state = FleetState::fresh(batch, k);
+                    let mut policy = Scalar::new(
+                        (0..batch)
+                            .map(|_| EnergyUcb::new(k, EnergyUcbConfig::default()))
+                            .collect::<Vec<_>>(),
+                    );
+                    let mut rng = Rng::new(1);
+                    black_box(policy_run(
+                        &mut state,
+                        &params,
+                        &mut policy,
+                        &mut rng,
+                        RUN_STEPS,
+                    ));
+                },
             );
-            let mut scratch = StepScratch::new(batch);
-            let mut noise = vec![0.0f32; batch];
-            let mut rng = Rng::new(1);
-            let mut step_idx = 0u64;
-            b.case(&format!("scalar-loop/B={batch}"), batch as f64, || {
-                native::step_noise_into(&params, step_idx, &mut rng, &mut noise);
-                policy_step(&mut state, &params, &mut policy, &noise, &mut scratch);
-                black_box(&scratch.sel);
-                step_idx += 1;
-                if state.all_done() {
-                    state = FleetState::fresh(batch, k);
-                    policy.reset();
-                    step_idx = 0;
-                }
-            });
         }
     }
 }

@@ -712,6 +712,62 @@ impl BatchPolicy for BatchEpsilonGreedy {
     }
 }
 
+// Forwarding impls so borrowed/boxed batch policies are themselves batch
+// policies — the batch controller owns a `Box<dyn BatchPolicy + 'p>`, and
+// callers that keep ownership (e.g. `fleet::policy_run`'s `&mut dyn
+// BatchPolicy` argument) box a reborrow instead of moving the policy.
+impl<P: BatchPolicy + ?Sized> BatchPolicy for &mut P {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn b(&self) -> usize {
+        (**self).b()
+    }
+
+    fn k(&self) -> usize {
+        (**self).k()
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        (**self).select_into(t, feasible, sel)
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]) {
+        (**self).update_batch(sel, reward, progress, active)
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+}
+
+impl<P: BatchPolicy + ?Sized> BatchPolicy for Box<P> {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn b(&self) -> usize {
+        (**self).b()
+    }
+
+    fn k(&self) -> usize {
+        (**self).k()
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        (**self).select_into(t, feasible, sel)
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]) {
+        (**self).update_batch(sel, reward, progress, active)
+    }
+
+    fn reset(&mut self) {
+        (**self).reset()
+    }
+}
+
 /// Bridge: run any scalar [`Policy`] — or a heterogeneous mix of them —
 /// as a batch, one policy instance per environment. This is what makes
 /// *every* policy (Thompson, static, round-robin, the RL baselines,

@@ -3,8 +3,10 @@
 //! ```text
 //! energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--policy NAME] [--quick]
 //! energyucb run [--config cfg.toml] [--app NAME] [--policy NAME] [--reps N]
+//! energyucb replay --in FILE [--policy NAME]
+//! energyucb sweep --replay FILE [--policies a,b,..] [--alpha L] [--lambda L] [--jobs J]
 //! energyucb fleet [--apps a,b,..] [--batch B] [--steps N] [--native] [--delta D]
-//!                 [--policy NAME[,NAME,...]]
+//!                 [--policy NAME[,NAME,...]] [--record-telemetry] [--record-out FILE]
 //! energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config cfg.toml]
 //! energyucb list
 //! ```
@@ -18,11 +20,11 @@ use anyhow::{bail, Context, Result};
 use crate::bandit::{BatchPolicy, Policy};
 use crate::config::ExperimentConfig;
 use crate::control::{
-    drive, run_repeated, Controller, Recording, RepeatedMetrics, ReplayBackend, ReplayHeader,
-    RunResult, SessionCfg, SimBackend,
+    drive, run_repeated, sweep_replay, Controller, Recording, RepeatedMetrics, ReplayBackend,
+    ReplayHeader, RunResult, SessionCfg, SimBackend, SweepCandidate,
 };
 use crate::experiments::{all_experiments, experiment_by_id, ExpContext};
-use crate::fleet::{native, FleetHyper, FleetParams, FleetState};
+use crate::fleet::{fleet_controller, native, FleetBackend, FleetHyper, FleetParams, FleetState};
 use crate::sim::freq::FreqDomain;
 use crate::util::table::{fnum, fnum_sep, Table};
 use crate::util::Rng;
@@ -39,8 +41,10 @@ USAGE:
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
                 [--record-telemetry] [--record-out FILE]
   energyucb replay --in FILE [--policy NAME]
+  energyucb sweep --replay FILE [--policies NAME,NAME,...] [--alpha A,A,...]
+                  [--lambda L,L,...] [--jobs J]
   energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
-                  [--policy NAME[,NAME,...]]
+                  [--policy NAME[,NAME,...]] [--record-telemetry] [--record-out FILE]
   energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config FILE]
                     [--seed S] [--heartbeat H] [--csv PATH] [--shards K] [--waves]
   energyucb list
@@ -58,11 +62,19 @@ policy the report is byte-identical to the original run; with --policy
 it evaluates a different policy counterfactually on the frozen telemetry
 (EXPERIMENTS.md §Controller).
 
+Sweep evaluates many policies against one frozen recording (session or
+fleet), fanned out over --jobs threads with byte-identical output at any
+J. --policies lists named policies; --alpha/--lambda build an EnergyUCB
+hyper-parameter grid (cross product). Without either, the recording's
+own policy is swept (EXPERIMENTS.md §Sweeps).
+
 Fleet runs B lockstep environments through the batch policy core
 (EXPERIMENTS.md §Engine). --policy selects any policy from `energyucb
 list`; a comma-separated list builds a mixed-policy fleet (env e runs
 policy e mod len). Non-default policies run on the native engine (the
-HLO artifacts encode EnergyUCB).
+HLO artifacts encode EnergyUCB). --record-telemetry tees the fleet run
+to a batched JSONL log (default <out_dir>/telemetry_fleet.jsonl) that
+`sweep --replay` evaluates counterfactually.
 
 Cluster runs a simulated multi-node fleet on the work-stealing executor.
 Scenarios: uniform | mixed | staggered | hetero, or a [cluster] config
@@ -84,6 +96,7 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
         "exp" => cmd_exp(rest),
         "run" => cmd_run(rest),
         "replay" => cmd_replay(rest),
+        "sweep" => cmd_sweep(rest),
         "fleet" => cmd_fleet(rest),
         "cluster" => cmd_cluster(rest),
         // Hidden: the shard-worker half of `cluster --shards` (frames on
@@ -282,11 +295,8 @@ fn record_session(
     path: &std::path::Path,
 ) -> Result<RunResult> {
     policy.reset();
-    let header = ReplayHeader {
-        app: app.name.to_string(),
-        policy: Some(policy_cfg.clone()),
-        session: scfg.clone(),
-    };
+    let header =
+        ReplayHeader::session(app.name.to_string(), Some(policy_cfg.clone()), scfg.clone());
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)
             .with_context(|| format!("creating {}", parent.display()))?;
@@ -296,7 +306,9 @@ fn record_session(
     let sink = std::io::BufWriter::new(file);
     let mut backend = Recording::new(SimBackend::new(app, scfg), sink, &header)?;
     let controller = Controller::new(app, policy, scfg);
-    let result = drive(controller, &mut backend)?;
+    let result = drive(controller, &mut backend)?
+        .pop()
+        .expect("B = 1 drive yields exactly one result");
     backend.finish()?;
     Ok(result)
 }
@@ -315,6 +327,15 @@ fn cmd_replay(rest: &[String]) -> Result<i32> {
     };
     let mut backend = ReplayBackend::open(std::path::Path::new(path))?;
     let header = backend.header().clone();
+    // `replay` renders exactly one session; a batch recording has B rows
+    // and (for counterfactual policies) needs a batch driver — that is
+    // the sweep tier's job.
+    if !header.envs.is_empty() {
+        bail!(
+            "replay: {path} is a fleet recording (B = {}); use `energyucb sweep --replay {path}`",
+            header.b()
+        );
+    }
     let app = calibration::app(&header.app)
         .with_context(|| format!("recording references unknown app {}", header.app))?;
     let scfg = header.session.clone();
@@ -343,10 +364,14 @@ fn cmd_replay(rest: &[String]) -> Result<i32> {
     }
     let mut policy = policy_cfg.build(scfg.freqs.k(), scfg.seed);
     // Fresh-run contract: reset == freshly built, matching the recorded
-    // session's starting state byte-for-byte.
+    // session's starting state byte-for-byte. The policy is built at the
+    // header's K, so its arity always matches the recorded arm range
+    // (ReplayBackend validated every recorded arm against K on load).
     policy.reset();
     let controller = Controller::new(&app, policy.as_mut(), &scfg);
-    let result = drive(controller, &mut backend)?;
+    let result = drive(controller, &mut backend)?
+        .pop()
+        .expect("B = 1 drive yields exactly one result");
     let freqs = scfg.freqs.clone().with_switch_cost(scfg.switch_cost);
     let mut table = session_table();
     let runs = [result.metrics.clone()];
@@ -366,9 +391,130 @@ fn parse_policy_name(name: &str) -> Result<crate::config::PolicyConfig> {
         .policy)
 }
 
+/// Evaluate many policies against one frozen telemetry recording
+/// (`energyucb sweep --replay rec.jsonl ...`). Record once, evaluate
+/// many: every candidate sees the identical recorded sample stream, so
+/// the report is a pure function of (recording, candidate list) and
+/// byte-identical at any `--jobs` (EXPERIMENTS.md §Sweeps).
+fn cmd_sweep(rest: &[String]) -> Result<i32> {
+    let args = Args::parse(rest, &[])?;
+    args.ensure_known(&["replay", "policies", "alpha", "lambda", "jobs"])?;
+    let Some(path) = args.get("replay") else {
+        bail!("sweep: --replay FILE is required");
+    };
+    let trace = ReplayBackend::open(std::path::Path::new(path))?;
+    let header = trace.header().clone();
+
+    let mut candidates: Vec<SweepCandidate> = Vec::new();
+    if let Some(spec) = args.get("policies") {
+        for name in spec.split(',') {
+            candidates.push(SweepCandidate::new(parse_policy_name(name.trim())?));
+        }
+    }
+    // --alpha/--lambda build an EnergyUCB hyper grid (cross product),
+    // rendered through the [policy] schema so knob names cannot drift
+    // from the config surface. Labels carry the grid point.
+    let grid_axis = |key: &str| -> Result<Vec<Option<f64>>> {
+        match args.get(key) {
+            None => Ok(vec![None]),
+            Some(spec) => spec
+                .split(',')
+                .map(|v| {
+                    v.trim()
+                        .parse::<f64>()
+                        .map(Some)
+                        .map_err(|_| anyhow::anyhow!("sweep: --{key}: bad number {v:?}"))
+                })
+                .collect(),
+        }
+    };
+    if args.get("alpha").is_some() || args.get("lambda").is_some() {
+        for a in &grid_axis("alpha")? {
+            for l in &grid_axis("lambda")? {
+                let mut toml = "[policy]\nname = \"energyucb\"\n".to_string();
+                let mut tags = Vec::new();
+                if let Some(a) = a {
+                    toml.push_str(&format!("alpha = {a}\n"));
+                    tags.push(format!("a={a}"));
+                }
+                if let Some(l) = l {
+                    toml.push_str(&format!("lambda = {l}\n"));
+                    tags.push(format!("l={l}"));
+                }
+                candidates.push(SweepCandidate::labeled(
+                    format!("energyucb[{}]", tags.join(",")),
+                    ExperimentConfig::from_toml(&toml)?.policy,
+                ));
+            }
+        }
+    }
+    if candidates.is_empty() {
+        // No explicit candidates: sweep the recording's own policy (a
+        // determinism self-check — the report equals `energyucb replay`).
+        candidates.push(SweepCandidate::new(header.policy.clone().context(
+            "sweep: recording carries no policy config; pass --policies NAME[,NAME,...]",
+        )?));
+    }
+    let jobs = match args.get_usize("jobs")? {
+        Some(0) => bail!("sweep: --jobs must be >= 1"),
+        Some(j) => j,
+        None => crate::exec::available_jobs(),
+    };
+
+    let outcomes = sweep_replay(&trace, &candidates, jobs)?;
+    let scfg = &header.session;
+    if header.envs.is_empty() {
+        // Session recording: one row per candidate in the same table as
+        // `run`/`replay`, so a single-candidate sweep of the recorded
+        // policy is byte-identical to the replay report (CI `cmp`s this).
+        let app = calibration::app(&header.app)
+            .with_context(|| format!("recording references unknown app {}", header.app))?;
+        let freqs = scfg.domain();
+        let mut table = session_table();
+        for out in &outcomes {
+            let runs = [out.results[0].metrics.clone()];
+            session_table_row(&mut table, &app, &freqs, &out.label, &runs);
+        }
+        println!("{}", table.render());
+    } else {
+        // Fleet recording: aggregate the B rows per candidate.
+        let mut table = Table::new(vec![
+            "policy", "envs", "mean energy (kJ)", "mean regret", "switches (mean)",
+        ]);
+        for out in &outcomes {
+            let kj: Vec<f64> = out.results.iter().map(|r| r.metrics.gpu_energy_kj).collect();
+            let regret: Vec<f64> =
+                out.results.iter().map(|r| r.metrics.cumulative_regret).collect();
+            let sw: Vec<f64> =
+                out.results.iter().map(|r| r.metrics.switches as f64).collect();
+            table.row(vec![
+                out.label.clone(),
+                out.results.len().to_string(),
+                fnum_sep(crate::util::stats::mean(&kj), 2),
+                fnum(crate::util::stats::mean(&regret), 2),
+                fnum(crate::util::stats::mean(&sw), 0),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    // Diagnostics on stderr so stdout stays byte-comparable.
+    eprintln!(
+        "swept {} candidate(s) over {} recorded steps from {path} ({jobs} jobs)",
+        outcomes.len(),
+        trace.len(),
+    );
+    Ok(0)
+}
+
 fn cmd_fleet(rest: &[String]) -> Result<i32> {
-    let args = Args::parse(rest, &["native"])?;
-    args.ensure_known(&["apps", "batch", "steps", "seed", "delta", "artifacts", "policy"])?;
+    let args = Args::parse(rest, &["native", "record-telemetry"])?;
+    args.ensure_known(&[
+        "apps", "batch", "steps", "seed", "delta", "artifacts", "policy", "record-out",
+    ])?;
+    let record = args.flag("record-telemetry");
+    if !record && args.get("record-out").is_some() {
+        bail!("fleet: --record-out requires --record-telemetry");
+    }
     let freqs = FreqDomain::aurora();
     let batch = args.get_usize("batch")?.unwrap_or(64);
     let steps = args.get_u64("steps")?.unwrap_or(10_000);
@@ -418,14 +564,69 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
 
     let t0 = std::time::Instant::now();
     let engine_name: String;
-    if !params.policies.is_empty() {
-        // Policy-selected fleets run the generic batch-policy engine (the
-        // HLO artifacts encode EnergyUCB only).
+    if record || !params.policies.is_empty() {
+        // Policy-selected and recorded fleets run the generic batch-policy
+        // engine (the HLO artifacts encode EnergyUCB only and have no
+        // telemetry tap; the engine is bit-identical to `--native` for the
+        // pinned EnergyUCB fleet).
         if !args.flag("native") {
-            eprintln!("fleet: --policy implies the native engine");
+            if !params.policies.is_empty() {
+                eprintln!("fleet: --policy implies the native engine");
+            } else {
+                eprintln!("fleet: --record-telemetry implies the native engine");
+            }
         }
         let mut policy = crate::fleet::build_fleet_policy(&params, &hyper, seed);
-        crate::fleet::policy_run(&mut state, &params, policy.as_mut(), &mut rng, steps);
+        if record {
+            let path = match args.get("record-out") {
+                Some(p) => PathBuf::from(p),
+                None => PathBuf::from("results").join("telemetry_fleet.jsonl"),
+            };
+            // Provenance for `sweep --replay`: the roster (one name per
+            // row), the policy when a single config can rebuild the run
+            // (mixed fleets can't — sweeps must name candidates), and the
+            // QoS mask when --delta constrained it.
+            let policy_cfg = match params.policies.len() {
+                0 => Some(crate::config::PolicyConfig::EnergyUcb(
+                    crate::bandit::EnergyUcbConfig::default(),
+                )),
+                1 => Some(params.policies[0].clone()),
+                _ => None,
+            };
+            let feasible = args
+                .get_f64("delta")?
+                .map(|_| params.feasible.iter().map(|&x| x as f64).collect());
+            let scfg = SessionCfg {
+                seed,
+                dt_s: params.dt_s,
+                max_steps: steps,
+                freqs: freqs.clone(),
+                ..SessionCfg::default()
+            };
+            let env_names: Vec<String> =
+                names.iter().cycle().take(batch).cloned().collect();
+            let header = ReplayHeader::fleet(env_names, policy_cfg, scfg, feasible);
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+            let file = std::fs::File::create(&path)
+                .with_context(|| format!("creating telemetry log {}", path.display()))?;
+            let sink = std::io::BufWriter::new(file);
+            {
+                let controller = fleet_controller(&params, Box::new(policy.as_mut()), steps);
+                let mut backend = Recording::new(
+                    FleetBackend::new(&mut state, &params, &mut rng),
+                    sink,
+                    &header,
+                )?;
+                drive(controller, &mut backend)?;
+                backend.finish()?;
+            }
+            eprintln!("recorded fleet telemetry to {}", path.display());
+        } else {
+            crate::fleet::policy_run(&mut state, &params, policy.as_mut(), &mut rng, steps);
+        }
         engine_name = format!("native:{}", policy.name());
     } else if args.flag("native") {
         native::native_run(&mut state, &params, &hyper, &mut rng, steps);
@@ -753,19 +954,24 @@ mod tests {
         let dir =
             std::env::temp_dir().join(format!("energyucb_cli_tamper_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        let end = TelemetryFrame::End { totals: BackendTotals::default() }.encode_line();
+        let end = TelemetryFrame::End {
+            totals: vec![BackendTotals::default()],
+            steps: None,
+            truncated: false,
+        }
+        .encode_line();
 
         // Domain/calibration mismatch: a 1-arm domain against tealeaf's
         // 9-entry table must be a CLI error, not the controller assert.
         let bad_domain = dir.join("bad_domain.jsonl");
-        let header = ReplayHeader {
-            app: "tealeaf".into(),
-            policy: None,
-            session: SessionCfg {
+        let header = ReplayHeader::session(
+            "tealeaf".into(),
+            None,
+            SessionCfg {
                 freqs: crate::sim::freq::FreqDomain::new(vec![1.0]),
                 ..SessionCfg::default()
             },
-        };
+        );
         let text = format!("{}\n{end}\n", TelemetryFrame::Header(header).encode_line());
         std::fs::write(&bad_domain, text).unwrap();
         let path = bad_domain.to_str().unwrap().to_string();
@@ -774,17 +980,117 @@ mod tests {
         // Out-of-range static arm in the recorded policy config (the
         // config parser can't produce this; a hand-edited wire can).
         let bad_arm = dir.join("bad_arm.jsonl");
-        let header = ReplayHeader {
-            app: "tealeaf".into(),
-            policy: Some(crate::config::PolicyConfig::Static { arm: 12 }),
-            session: SessionCfg::default(),
-        };
+        let header = ReplayHeader::session(
+            "tealeaf".into(),
+            Some(crate::config::PolicyConfig::Static { arm: 12 }),
+            SessionCfg::default(),
+        );
         let text = format!("{}\n{end}\n", TelemetryFrame::Header(header).encode_line());
         std::fs::write(&bad_arm, text).unwrap();
         let path = bad_arm.to_str().unwrap().to_string();
         assert!(dispatch(&["replay", "--in", &path]).is_err());
 
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sweep_round_trip_over_a_session_recording() {
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_cli_sweep_{}", std::process::id()));
+        let log = dir.join("rec.jsonl");
+        let log_s = log.to_str().unwrap().to_string();
+        assert_eq!(
+            dispatch(&[
+                "run", "--app", "tealeaf", "--policy", "static", "--reps", "1", "--seed",
+                "9", "--record-telemetry", "--record-out", &log_s,
+            ])
+            .unwrap(),
+            0
+        );
+        // Recording's own policy (no explicit candidates).
+        assert_eq!(dispatch(&["sweep", "--replay", &log_s]).unwrap(), 0);
+        // Named candidates, parallel.
+        assert_eq!(
+            dispatch(&[
+                "sweep", "--replay", &log_s, "--policies", "static,rrfreq,energyucb",
+                "--jobs", "2",
+            ])
+            .unwrap(),
+            0
+        );
+        // Hyper-parameter grid (2 alphas x 2 lambdas).
+        assert_eq!(
+            dispatch(&[
+                "sweep", "--replay", &log_s, "--alpha", "0.2,0.4", "--lambda", "0.005,0.02",
+            ])
+            .unwrap(),
+            0
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sweep_rejects_bad_invocations() {
+        assert!(dispatch(&["sweep"]).is_err());
+        assert!(dispatch(&["sweep", "--replay", "/nonexistent/rec.jsonl"]).is_err());
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_cli_sweepbad_{}", std::process::id()));
+        let log = dir.join("rec.jsonl");
+        let log_s = log.to_str().unwrap().to_string();
+        assert_eq!(
+            dispatch(&[
+                "run", "--app", "tealeaf", "--policy", "static", "--reps", "1",
+                "--record-telemetry", "--record-out", &log_s,
+            ])
+            .unwrap(),
+            0
+        );
+        assert!(dispatch(&["sweep", "--replay", &log_s, "--jobs", "0"]).is_err());
+        assert!(dispatch(&["sweep", "--replay", &log_s, "--policies", "bogus"]).is_err());
+        assert!(dispatch(&["sweep", "--replay", &log_s, "--alpha", "fast"]).is_err());
+        assert!(dispatch(&["sweep", "--replay", &log_s, "--bogus", "1"]).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fleet_records_and_sweeps_batched_telemetry() {
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_cli_fleetrec_{}", std::process::id()));
+        let log = dir.join("fleet.jsonl");
+        let log_s = log.to_str().unwrap().to_string();
+        assert_eq!(
+            dispatch(&[
+                "fleet", "--apps", "tealeaf,clvleaf", "--batch", "3", "--steps", "150",
+                "--seed", "12", "--record-telemetry", "--record-out", &log_s,
+            ])
+            .unwrap(),
+            0
+        );
+        // The batched recording sweeps counterfactually...
+        assert_eq!(
+            dispatch(&[
+                "sweep", "--replay", &log_s, "--policies", "energyucb,ucb1,rrfreq",
+                "--jobs", "2",
+            ])
+            .unwrap(),
+            0
+        );
+        // ...and the recorded default policy replays without --policies.
+        assert_eq!(dispatch(&["sweep", "--replay", &log_s]).unwrap(), 0);
+        // The scalar replay tier refuses batch recordings (B = 3 rows
+        // cannot render as one session) and points at sweep.
+        let err = dispatch(&["replay", "--in", &log_s]).unwrap_err().to_string();
+        assert!(err.contains("sweep"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fleet_record_flags_validate() {
+        assert!(dispatch(&[
+            "fleet", "--apps", "tealeaf", "--batch", "2", "--steps", "50", "--record-out",
+            "x.jsonl",
+        ])
+        .is_err());
     }
 
     #[test]

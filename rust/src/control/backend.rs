@@ -1,22 +1,26 @@
 //! Pluggable telemetry backends: where a controller's samples come from
 //! and where its arms go.
 //!
-//! [`TelemetryBackend`] is the session tier's I/O boundary. The
-//! [`Controller`][super::Controller] never touches it directly — the
-//! [`drive`][super::drive] loop mediates — so swapping the backend swaps
-//! the *world* without touching a line of decision logic:
+//! [`TelemetryBackend`] is the control tier's I/O boundary, batch-native:
+//! a backend serves B environments per decision interval (B = 1 for the
+//! scalar session tier). The [`Controller`][super::Controller] never
+//! touches it directly — the [`drive`][super::drive] loop mediates — so
+//! swapping the backend swaps the *world* without touching a line of
+//! decision logic:
 //!
 //! * [`SimBackend`] — the simulated GEOPM [`Service`] owning a
 //!   calibrated [`Node`] (the paper's experimental setup; what
-//!   `run_session` wires up).
+//!   `run_session` wires up; B = 1).
+//! * [`FleetBackend`][crate::fleet::FleetBackend] — the vectorized fleet
+//!   dynamics (`fleet::native::apply_env_dynamics`) at B = N.
 //! * [`ReplayBackend`][super::replay::ReplayBackend] — recorded per-step
 //!   telemetry from JSONL, for deterministic replay and counterfactual
-//!   policy evaluation (`energyucb replay`).
+//!   policy evaluation (`energyucb replay` / `energyucb sweep --replay`).
 //! * [`Recording`] — a tee: wraps any backend and mirrors every sample
-//!   to a JSONL sink in the replay grammar
+//!   batch to a JSONL sink in the replay grammar
 //!   (EXPERIMENTS.md §Controller).
 //!
-//! A live NVML/GEOPM binding slots in as a fourth implementation without
+//! A live NVML/GEOPM binding slots in as a fifth implementation without
 //! touching the controller.
 
 use std::io::Write;
@@ -29,33 +33,44 @@ use super::controller::{BackendTotals, StepSample};
 use super::replay::{ReplayHeader, TelemetryFrame};
 use super::session::SessionCfg;
 
-/// A source of per-step telemetry and a sink for frequency decisions.
+/// A source of per-step telemetry and a sink for frequency decisions
+/// over a batch of B environments.
 ///
-/// Contract (checked by the drive loop's usage pattern): `apply(arm)`
-/// then `sample()` advances exactly one decision interval; `done()` is
-/// stable between samples; `totals()` reflects every interval sampled so
-/// far. Implementations must be deterministic for a fixed construction
-/// (seed / recording) — the backend determinism guarantee that makes
-/// record→replay exact (EXPERIMENTS.md §Controller).
+/// Contract (checked by the drive loop's usage pattern): `apply(&sel)`
+/// then `sample_into(&mut samples)` advances exactly one decision
+/// interval for every environment; `done()` is stable between samples;
+/// `totals()` reflects every interval sampled so far, one record per
+/// environment. Implementations must be deterministic for a fixed
+/// construction (seed / recording) — the backend determinism guarantee
+/// that makes record→replay exact (EXPERIMENTS.md §Controller).
 pub trait TelemetryBackend {
+    /// Number of environments served per interval.
+    fn b(&self) -> usize {
+        1
+    }
+
     /// Number of frequency arms the backend accepts.
     fn k(&self) -> usize;
 
-    /// Request arm `arm` for the next interval.
-    fn apply(&mut self, arm: usize) -> anyhow::Result<()>;
+    /// Request arm `sel[e]` for environment `e` for the next interval
+    /// (`sel.len() == b()`).
+    fn apply(&mut self, sel: &[i32]) -> anyhow::Result<()>;
 
-    /// Advance one interval under the last applied arm and return its
-    /// telemetry.
-    fn sample(&mut self) -> anyhow::Result<StepSample>;
+    /// Advance one interval under the last applied arms and write each
+    /// environment's telemetry into `out` (`out.len() == b()`).
+    fn sample_into(&mut self, out: &mut [StepSample]) -> anyhow::Result<()>;
 
-    /// Whether the underlying job has completed (no further samples).
+    /// Whether the underlying jobs have all completed (no further
+    /// samples).
     fn done(&self) -> bool;
 
-    /// End-of-run accounting over every interval sampled so far.
-    fn totals(&self) -> BackendTotals;
+    /// End-of-run accounting over every interval sampled so far, one
+    /// record per environment.
+    fn totals(&self) -> Vec<BackendTotals>;
 }
 
-/// The simulated-GEOPM backend: today's `run_session` world, wrapped.
+/// The simulated-GEOPM backend: today's `run_session` world, wrapped
+/// (B = 1).
 #[derive(Debug)]
 pub struct SimBackend {
     service: Service,
@@ -86,14 +101,17 @@ impl TelemetryBackend for SimBackend {
         self.service.k()
     }
 
-    fn apply(&mut self, arm: usize) -> anyhow::Result<()> {
-        self.service.write(Control::GpuFrequency(arm))?;
+    fn apply(&mut self, sel: &[i32]) -> anyhow::Result<()> {
+        anyhow::ensure!(sel.len() == 1, "SimBackend serves B = 1, got {} selections", sel.len());
+        anyhow::ensure!(sel[0] >= 0, "negative arm {}", sel[0]);
+        self.service.write(Control::GpuFrequency(sel[0] as usize))?;
         Ok(())
     }
 
-    fn sample(&mut self) -> anyhow::Result<StepSample> {
+    fn sample_into(&mut self, out: &mut [StepSample]) -> anyhow::Result<()> {
+        anyhow::ensure!(out.len() == 1, "SimBackend serves B = 1, got {} slots", out.len());
         let s = self.service.sample()?;
-        Ok(StepSample {
+        out[0] = StepSample {
             gpu_energy_j: s.obs.gpu_energy_j,
             core_util: s.obs.core_util,
             uncore_util: s.obs.uncore_util,
@@ -101,75 +119,115 @@ impl TelemetryBackend for SimBackend {
             remaining: s.obs.remaining,
             true_gpu_energy_j: s.obs.true_gpu_energy_j,
             switched: s.switched,
-        })
+            reward: None,
+            active: true,
+        };
+        Ok(())
     }
 
     fn done(&self) -> bool {
         self.service.done()
     }
 
-    fn totals(&self) -> BackendTotals {
+    fn totals(&self) -> Vec<BackendTotals> {
         let t = self.service.totals();
-        BackendTotals {
+        vec![BackendTotals {
             gpu_energy_kj: t.gpu_energy_kj,
             exec_time_s: t.exec_time_s,
             switches: t.switches,
             switch_energy_j: t.switch_energy_j,
             switch_time_s: t.switch_time_s,
-        }
+        }]
     }
 }
 
 /// Tee wrapper: forwards to any inner backend while mirroring the run to
 /// a JSONL sink in the replay grammar (header written at construction,
-/// one `step` line per sample, terminal `end` line from
-/// [`finish`](Self::finish)).
-pub struct Recording<B, W: Write> {
+/// one `step` line per sampled interval, terminal `end` line).
+///
+/// The terminal frame is never lost: [`finish`](Self::finish) writes a
+/// clean `end` with the achieved step count; if the recording is dropped
+/// without `finish` — the drive loop aborted mid-run — `Drop` writes an
+/// `end` frame carrying the truncation marker instead, so the log stays
+/// diagnosable and [`ReplayBackend`][super::replay::ReplayBackend]
+/// rejects it with an actionable error rather than replaying short.
+pub struct Recording<B: TelemetryBackend, W: Write> {
     inner: B,
-    sink: W,
-    last_arm: usize,
+    sink: Option<W>,
+    last_sel: Vec<i32>,
+    steps_written: u64,
 }
 
 impl<B: TelemetryBackend, W: Write> Recording<B, W> {
     /// Wrap `inner`, writing the header line immediately.
     pub fn new(inner: B, mut sink: W, header: &ReplayHeader) -> anyhow::Result<Recording<B, W>> {
         writeln!(sink, "{}", TelemetryFrame::Header(header.clone()).encode_line())?;
-        Ok(Recording { inner, sink, last_arm: 0 })
+        let b = inner.b();
+        Ok(Recording { inner, sink: Some(sink), last_sel: vec![0i32; b], steps_written: 0 })
     }
 
-    /// Write the terminal totals frame, flush, and return the inner
-    /// backend. Must be called after the drive loop — a recording without
-    /// its `end` frame is rejected by the replay reader as truncated.
-    pub fn finish(mut self) -> anyhow::Result<B> {
-        let totals = self.inner.totals();
-        writeln!(self.sink, "{}", TelemetryFrame::End { totals }.encode_line())?;
-        self.sink.flush()?;
-        Ok(self.inner)
+    fn write_end(&mut self, truncated: bool) -> anyhow::Result<()> {
+        let Some(mut sink) = self.sink.take() else {
+            return Ok(());
+        };
+        let frame = TelemetryFrame::End {
+            totals: self.inner.totals(),
+            steps: Some(self.steps_written),
+            truncated,
+        };
+        writeln!(sink, "{}", frame.encode_line())?;
+        sink.flush()?;
+        Ok(())
+    }
+
+    /// Write the clean terminal totals frame and flush. Must be called
+    /// after a successful drive loop — dropping the recording instead
+    /// marks the log truncated.
+    pub fn finish(mut self) -> anyhow::Result<()> {
+        self.write_end(false)
+    }
+}
+
+impl<B: TelemetryBackend, W: Write> Drop for Recording<B, W> {
+    fn drop(&mut self) {
+        // Abort path (`finish` was never reached): best-effort terminal
+        // frame with the truncation marker and the achieved step count.
+        let _ = self.write_end(true);
     }
 }
 
 impl<B: TelemetryBackend, W: Write> TelemetryBackend for Recording<B, W> {
+    fn b(&self) -> usize {
+        self.inner.b()
+    }
+
     fn k(&self) -> usize {
         self.inner.k()
     }
 
-    fn apply(&mut self, arm: usize) -> anyhow::Result<()> {
-        self.last_arm = arm;
-        self.inner.apply(arm)
+    fn apply(&mut self, sel: &[i32]) -> anyhow::Result<()> {
+        self.last_sel.resize(sel.len(), 0);
+        self.last_sel.copy_from_slice(sel);
+        self.inner.apply(sel)
     }
 
-    fn sample(&mut self) -> anyhow::Result<StepSample> {
-        let sample = self.inner.sample()?;
-        let frame = TelemetryFrame::Step { arm: self.last_arm, sample };
-        writeln!(self.sink, "{}", frame.encode_line())?;
-        Ok(sample)
+    fn sample_into(&mut self, out: &mut [StepSample]) -> anyhow::Result<()> {
+        self.inner.sample_into(out)?;
+        let frame =
+            TelemetryFrame::Step { arms: self.last_sel.clone(), samples: out.to_vec() };
+        let Some(sink) = self.sink.as_mut() else {
+            anyhow::bail!("recording already finished");
+        };
+        writeln!(sink, "{}", frame.encode_line())?;
+        self.steps_written += 1;
+        Ok(())
     }
 
     fn done(&self) -> bool {
         self.inner.done()
     }
 
-    fn totals(&self) -> BackendTotals {
+    fn totals(&self) -> Vec<BackendTotals> {
         self.inner.totals()
     }
 }
@@ -178,25 +236,32 @@ impl<B: TelemetryBackend, W: Write> TelemetryBackend for Recording<B, W> {
 mod tests {
     use super::*;
     use crate::bandit::StaticPolicy;
-    use crate::control::{drive, Controller};
+    use crate::control::{drive, Controller, ReplayBackend};
 
     #[test]
     fn sim_backend_mirrors_service_semantics() {
         let app = crate::workload::calibration::app("tealeaf").unwrap();
         let cfg = SessionCfg::default();
         let mut b = SimBackend::new(&app, &cfg);
+        assert_eq!(b.b(), 1);
         assert_eq!(b.k(), 9);
         assert!(!b.done());
         // Out-of-range arms are backend errors, not panics.
-        assert!(b.apply(99).is_err());
-        b.apply(2).unwrap();
-        let s = b.sample().unwrap();
+        assert!(b.apply(&[99]).is_err());
+        assert!(b.apply(&[-1]).is_err());
+        b.apply(&[2]).unwrap();
+        let mut out = [StepSample::default()];
+        b.sample_into(&mut out).unwrap();
+        let s = out[0];
         assert!(s.switched);
+        assert!(s.active);
+        assert_eq!(s.reward, None);
         assert!(s.gpu_energy_j > 0.0);
         assert!(s.remaining < 1.0);
         let t = b.totals();
-        assert_eq!(t.switches, 1);
-        assert!(t.exec_time_s > 0.0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].switches, 1);
+        assert!(t[0].exec_time_s > 0.0);
     }
 
     #[test]
@@ -204,14 +269,14 @@ mod tests {
         let app = crate::workload::calibration::app("clvleaf").unwrap();
         let cfg = SessionCfg { max_steps: 25, ..SessionCfg::default() };
         let mut policy = StaticPolicy::new(9, 8);
-        let header = ReplayHeader { app: app.name.to_string(), policy: None, session: cfg.clone() };
+        let header = ReplayHeader::session(app.name.to_string(), None, cfg.clone());
         let mut buf: Vec<u8> = Vec::new();
         {
             let mut backend =
                 Recording::new(SimBackend::new(&app, &cfg), &mut buf, &header).unwrap();
             let controller = Controller::new(&app, &mut policy, &cfg);
             let res = drive(controller, &mut backend).unwrap();
-            assert_eq!(res.metrics.steps, 25);
+            assert_eq!(res[0].metrics.steps, 25);
             backend.finish().unwrap();
         }
         let text = String::from_utf8(buf).unwrap();
@@ -222,13 +287,50 @@ mod tests {
             TelemetryFrame::decode_line(lines[0]).unwrap(),
             TelemetryFrame::Header(_)
         ));
-        assert!(matches!(
-            TelemetryFrame::decode_line(lines[1]).unwrap(),
-            TelemetryFrame::Step { arm: 8, .. }
-        ));
-        assert!(matches!(
-            TelemetryFrame::decode_line(lines[26]).unwrap(),
-            TelemetryFrame::End { .. }
-        ));
+        match TelemetryFrame::decode_line(lines[1]).unwrap() {
+            TelemetryFrame::Step { arms, samples } => {
+                assert_eq!(arms, vec![8]);
+                assert_eq!(samples.len(), 1);
+            }
+            other => panic!("expected step frame, got {other:?}"),
+        }
+        match TelemetryFrame::decode_line(lines[26]).unwrap() {
+            TelemetryFrame::End { steps, truncated, .. } => {
+                assert_eq!(steps, Some(25));
+                assert!(!truncated);
+            }
+            other => panic!("expected end frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_recording_marks_the_log_truncated() {
+        let app = crate::workload::calibration::app("tealeaf").unwrap();
+        let cfg = SessionCfg { max_steps: 10, ..SessionCfg::default() };
+        let header = ReplayHeader::session(app.name.to_string(), None, cfg.clone());
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut backend =
+                Recording::new(SimBackend::new(&app, &cfg), &mut buf, &header).unwrap();
+            // Advance a few intervals, then abandon the recording without
+            // finish() — as the drive loop does when it aborts on error.
+            let mut out = [StepSample::default()];
+            for _ in 0..3 {
+                backend.apply(&[4]).unwrap();
+                backend.sample_into(&mut out).unwrap();
+            }
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let last = text.lines().last().unwrap();
+        match TelemetryFrame::decode_line(last).unwrap() {
+            TelemetryFrame::End { steps, truncated, .. } => {
+                assert_eq!(steps, Some(3));
+                assert!(truncated, "drop must mark the log truncated");
+            }
+            other => panic!("expected end frame, got {other:?}"),
+        }
+        // The replay reader refuses it with an actionable message.
+        let err = ReplayBackend::from_text(&text).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
     }
 }

@@ -1,22 +1,27 @@
-//! The sans-IO control core: a pure decision/observation step machine.
+//! The sans-IO control core: a pure decision/observation step machine,
+//! batch-native over B environments.
 //!
 //! [`Controller`] is everything that used to live inline in
 //! `run_session`'s loop between `service.sample()` and the policy update —
-//! the B = 1 [`Scalar`] policy bridge, reward formation and
-//! winsorized normalization, ground-truth regret accounting, progress
-//! checkpoints, and trace bookkeeping — with no clock, no I/O, and no
-//! knowledge of where telemetry comes from. Drivers own the loop:
-//! [`drive`] pairs a controller with any
+//! the [`BatchPolicy`] driver, reward formation and winsorized
+//! normalization, ground-truth regret accounting, progress checkpoints,
+//! and trace bookkeeping — with no clock, no I/O, and no knowledge of
+//! where telemetry comes from. All per-env bookkeeping is row-indexed
+//! over the batch: one [`RewardNormalizer`] per environment, checkpoints
+//! in a row-major (B, n_cp) grid, one optional [`Trace`] per row.
+//! Drivers own the loop: [`drive`] pairs a controller with any
 //! [`TelemetryBackend`][super::backend::TelemetryBackend] (live
-//! simulation, recorded trace replay, a future NVML/GEOPM binding) and is
-//! the only place wall-clock time is read (the decision-latency gauge).
+//! simulation at B = 1, the fleet dynamics at B = N, recorded trace
+//! replay at either) and is the only place wall-clock time is read (the
+//! decision-latency gauge).
 //!
-//! The protocol per decision interval is strict alternation:
-//! `decide() -> arm`, apply the arm through the backend, sample the
-//! backend, `observe(sample)`. `finish(totals)` consumes the controller
-//! and yields the [`RunResult`]. Determinism contract: for a fixed
-//! policy state and sample stream, every controller output —
-//! selections, metrics, checkpoints, trace — is a pure function of the
+//! The protocol per decision interval is strict alternation: `decide()`,
+//! apply [`selections`][Controller::selections] through the backend,
+//! `sample_into` a batch of [`StepSample`]s from the backend,
+//! `observe(&samples)`. `finish(&totals)` consumes the controller and
+//! yields one [`RunResult`] per environment. Determinism contract: for a
+//! fixed policy state and sample stream, every controller output —
+//! selections, metrics, checkpoints, traces — is a pure function of the
 //! inputs (EXPERIMENTS.md §Controller).
 
 use crate::bandit::batch::{BatchPolicy, Scalar};
@@ -29,9 +34,10 @@ use super::backend::TelemetryBackend;
 use super::metrics::RunMetrics;
 use super::session::{RunResult, SessionCfg};
 
-/// One decision interval's telemetry, backend-agnostic: the
-/// counter-visible quantities the controller consumes (plus the
-/// ground-truth energy used only for metrics, never shown to the policy).
+/// One decision interval's telemetry for one environment,
+/// backend-agnostic: the counter-visible quantities the controller
+/// consumes (plus the ground-truth energy used only for metrics, never
+/// shown to the policy).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StepSample {
     /// Measured (noisy) GPU energy over the interval, Joules.
@@ -48,11 +54,37 @@ pub struct StepSample {
     pub true_gpu_energy_j: f64,
     /// Whether the interval performed a frequency transition.
     pub switched: bool,
+    /// Preformed reward for this interval, when the backend synthesizes
+    /// rewards itself (the fleet tier's normalized expected-reward
+    /// model). `None` = derive the reward from the counter-visible
+    /// fields through the controller's [`RewardForm`] and the
+    /// environment's [`RewardNormalizer`] (the session tier).
+    pub reward: Option<f64>,
+    /// Whether the environment was still running this interval.
+    /// Inactive rows' samples must not move policy statistics, regret,
+    /// energy accounting, or traces.
+    pub active: bool,
 }
 
-/// End-of-run accounting a backend must provide (the `RunMetrics` fields
-/// the controller cannot derive from per-step samples alone without
-/// re-accumulating rounding differences).
+impl Default for StepSample {
+    fn default() -> StepSample {
+        StepSample {
+            gpu_energy_j: 0.0,
+            core_util: 0.0,
+            uncore_util: 0.0,
+            progress: 0.0,
+            remaining: 1.0,
+            true_gpu_energy_j: 0.0,
+            switched: false,
+            reward: None,
+            active: true,
+        }
+    }
+}
+
+/// End-of-run accounting a backend must provide per environment (the
+/// `RunMetrics` fields the controller cannot derive from per-step samples
+/// alone without re-accumulating rounding differences).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct BackendTotals {
     pub gpu_energy_kj: f64,
@@ -62,39 +94,99 @@ pub struct BackendTotals {
     pub switch_time_s: f64,
 }
 
-/// The sans-IO controller for one session (see module docs).
+/// Ground truth for one environment's regret accounting: the calibrated
+/// app identity and its per-arm true rewards (simulation-only knowledge,
+/// never shown to the policy).
+#[derive(Clone, Debug)]
+pub struct EnvSpec {
+    /// Calibrated app name (carried into the env's `RunMetrics`).
+    pub app: String,
+    /// True expected reward per arm, raw reward units.
+    pub true_rewards: Vec<f64>,
+}
+
+impl EnvSpec {
+    /// Build the ground truth for one app under a session configuration
+    /// (the same derivation the scalar session tier has always used).
+    pub fn from_app(app: &AppModel, cfg: &SessionCfg) -> EnvSpec {
+        let freqs = cfg.domain();
+        EnvSpec {
+            app: app.name.to_string(),
+            true_rewards: (0..freqs.k()).map(|i| app.true_reward(&freqs, i, cfg.dt_s)).collect(),
+        }
+    }
+}
+
+/// Batch-construction knobs shared by every controller tier.
+#[derive(Clone, Debug)]
+pub struct BatchOpts {
+    /// Reward formulation for samples without a preformed reward.
+    pub reward_form: RewardForm,
+    /// Safety cap on decision steps.
+    pub max_steps: u64,
+    /// Record a full per-step [`Trace`] per environment.
+    pub record_trace: bool,
+    /// Progress checkpoints per environment (0 = none).
+    pub checkpoints: usize,
+    /// Row-major (B, K) feasibility mask handed to the policy on every
+    /// `select_into`; `None` = all arms feasible. Regret's per-env
+    /// optimum is taken over the feasible arms only.
+    pub feasible: Option<Vec<f32>>,
+}
+
+impl BatchOpts {
+    /// The session tier's options (B = 1, all arms feasible).
+    pub fn from_session(cfg: &SessionCfg) -> BatchOpts {
+        BatchOpts {
+            reward_form: cfg.reward_form,
+            max_steps: cfg.max_steps,
+            record_trace: cfg.record_trace,
+            checkpoints: cfg.checkpoints,
+            feasible: None,
+        }
+    }
+}
+
+/// The sans-IO controller for a batch of environments (see module docs).
 pub struct Controller<'p> {
-    driver: Scalar<&'p mut dyn Policy>,
-    all_feasible: Vec<f32>,
-    sel: [i32; 1],
-    normalizer: RewardNormalizer,
+    driver: Box<dyn BatchPolicy + 'p>,
+    b: usize,
+    k: usize,
+    feasible: Vec<f32>,
+    sel: Vec<i32>,
+    // Per-step staging for the batched policy update (allocation-free
+    // hot loop).
+    reward_buf: Vec<f64>,
+    progress_buf: Vec<f64>,
+    active_buf: Vec<f32>,
+    normalizers: Vec<RewardNormalizer>,
     reward_form: RewardForm,
     max_steps: u64,
-    trace: Option<Trace>,
-    app_name: String,
-    /// Ground truth for regret accounting (raw reward units;
-    /// simulation-only knowledge, never shown to the policy).
-    true_rewards: Vec<f64>,
-    mu_star: f64,
+    traces: Vec<Option<Trace>>,
+    envs: Vec<EnvSpec>,
+    mu_star: Vec<f64>,
     t: u64,
-    cumulative_regret: f64,
-    cum_true_energy_j: f64,
-    final_completed: f64,
+    cumulative_regret: Vec<f64>,
+    cum_true_energy_j: Vec<f64>,
+    final_completed: Vec<f64>,
+    /// Row-major (B, n_cp) cumulative-energy checkpoints.
     checkpoints: Vec<f64>,
-    next_cp: usize,
+    n_cp: usize,
+    next_cp: Vec<usize>,
     // Operational telemetry accumulates in plain fields (a `Recorder`
     // name lookup allocates per call — the hot loop stays
-    // allocation-free) and is merged into the `RunResult` Recorder once
+    // allocation-free) and is merged into the `RunResult` Recorders once
     // in `finish`.
-    switch_rate: Gauge,
-    switch_counter: Counter,
+    switch_rate: Vec<Gauge>,
+    switch_counter: Vec<Counter>,
     decide_latency_us: Gauge,
 }
 
 impl<'p> Controller<'p> {
-    /// Bind a policy to an app's session configuration. The frequency
-    /// domain comes from `cfg` ([`SessionCfg::domain`]); the policy's
-    /// arity and the app's calibration table must both match it.
+    /// Bind one scalar policy to one app's session configuration — the
+    /// B = 1 tier, bridged onto the batch core via [`Scalar`]. The
+    /// frequency domain comes from `cfg` ([`SessionCfg::domain`]); the
+    /// policy's arity and the app's calibration table must both match it.
     pub fn new(app: &AppModel, policy: &'p mut dyn Policy, cfg: &SessionCfg) -> Controller<'p> {
         let freqs = cfg.domain();
         assert_eq!(policy.k(), freqs.k(), "policy arity must match frequency domain");
@@ -103,35 +195,87 @@ impl<'p> Controller<'p> {
             freqs.k(),
             "app calibration table must match frequency domain"
         );
-        let k = freqs.k();
-        let true_rewards: Vec<f64> =
-            (0..k).map(|i| app.true_reward(&freqs, i, cfg.dt_s)).collect();
-        let mu_star = true_rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let env = EnvSpec::from_app(app, cfg);
+        Controller::new_batch(
+            vec![env],
+            Box::new(Scalar::new(vec![policy])),
+            &BatchOpts::from_session(cfg),
+        )
+    }
+
+    /// Bind a batch policy to B environments' ground truth. `driver.b()`
+    /// must equal `envs.len()` and every env's true-reward table must
+    /// match the policy arity.
+    pub fn new_batch(
+        envs: Vec<EnvSpec>,
+        driver: Box<dyn BatchPolicy + 'p>,
+        opts: &BatchOpts,
+    ) -> Controller<'p> {
+        let b = envs.len();
+        assert!(b > 0, "controller needs at least one environment");
+        assert_eq!(driver.b(), b, "policy batch must match environment count");
+        let k = driver.k();
+        for env in &envs {
+            assert_eq!(env.true_rewards.len(), k, "env ground truth must match policy arity");
+        }
+        let feasible = match &opts.feasible {
+            Some(f) => {
+                assert_eq!(f.len(), b * k, "feasibility mask must be row-major (B, K)");
+                f.clone()
+            }
+            None => vec![1.0f32; b * k],
+        };
+        // Regret baseline: the best *feasible* arm per env (identical to
+        // the global optimum when the mask is all-ones, i.e. always for
+        // the session tier).
+        let mu_star = envs
+            .iter()
+            .enumerate()
+            .map(|(e, env)| {
+                env.true_rewards
+                    .iter()
+                    .zip(&feasible[e * k..(e + 1) * k])
+                    .filter(|(_, &f)| f > 0.0)
+                    .map(|(r, _)| *r)
+                    .fold(f64::NEG_INFINITY, f64::max)
+            })
+            .collect();
         Controller {
-            // B = 1 bridge onto the shared batch stepping core. The
-            // feasibility buffer is all-ones (the bridge delegates
-            // feasibility to the wrapped policy); selection/reward
-            // buffers live inline — no per-step allocations.
-            driver: Scalar::new(vec![policy]),
-            all_feasible: vec![1.0f32; k],
-            sel: [0i32; 1],
-            normalizer: RewardNormalizer::new(),
-            reward_form: cfg.reward_form,
-            max_steps: cfg.max_steps,
-            trace: cfg.record_trace.then(Trace::new),
-            app_name: app.name.to_string(),
-            true_rewards,
+            driver,
+            b,
+            k,
+            feasible,
+            sel: vec![0i32; b],
+            reward_buf: vec![0.0f64; b],
+            progress_buf: vec![0.0f64; b],
+            active_buf: vec![0.0f32; b],
+            normalizers: (0..b).map(|_| RewardNormalizer::new()).collect(),
+            reward_form: opts.reward_form,
+            max_steps: opts.max_steps,
+            traces: (0..b).map(|_| opts.record_trace.then(Trace::new)).collect(),
+            envs,
             mu_star,
             t: 0,
-            cumulative_regret: 0.0,
-            cum_true_energy_j: 0.0,
-            final_completed: 0.0,
-            checkpoints: vec![0.0f64; cfg.checkpoints],
-            next_cp: 0,
-            switch_rate: Gauge::default(),
-            switch_counter: Counter::default(),
+            cumulative_regret: vec![0.0f64; b],
+            cum_true_energy_j: vec![0.0f64; b],
+            final_completed: vec![0.0f64; b],
+            checkpoints: vec![0.0f64; b * opts.checkpoints],
+            n_cp: opts.checkpoints,
+            next_cp: vec![0usize; b],
+            switch_rate: vec![Gauge::default(); b],
+            switch_counter: vec![Counter::default(); b],
             decide_latency_us: Gauge::default(),
         }
+    }
+
+    /// Batch size (environments).
+    pub fn b(&self) -> usize {
+        self.b
+    }
+
+    /// Arm count.
+    pub fn k(&self) -> usize {
+        self.k
     }
 
     /// Decision steps taken so far.
@@ -144,9 +288,10 @@ impl<'p> Controller<'p> {
         self.t < self.max_steps
     }
 
-    /// Cumulative ground-truth regret so far (raw reward units).
+    /// Cumulative ground-truth regret so far, summed over the batch (raw
+    /// reward units; equals the single env's regret at B = 1).
     pub fn cumulative_regret(&self) -> f64 {
-        self.cumulative_regret
+        self.cumulative_regret.iter().sum()
     }
 
     /// Record one decision's wall-clock latency (µs). Called by drivers
@@ -155,114 +300,170 @@ impl<'p> Controller<'p> {
         self.decide_latency_us.record(us);
     }
 
-    /// Choose the arm for the next decision interval.
-    pub fn decide(&mut self) -> usize {
+    /// Choose each environment's arm for the next decision interval;
+    /// read the result from [`selections`](Self::selections).
+    pub fn decide(&mut self) {
         self.t += 1;
-        self.driver.select_into(self.t, &self.all_feasible, &mut self.sel);
-        self.sel[0] as usize
+        self.driver.select_into(self.t, &self.feasible, &mut self.sel);
     }
 
-    /// Feed back the interval's telemetry for the arm chosen by the last
-    /// [`decide`](Self::decide).
-    pub fn observe(&mut self, s: &StepSample) {
-        let arm = self.sel[0] as usize;
-        // Reward from counter-visible quantities only (Eq. 4); the
-        // normalizer winsorizes heavy-tail spikes (its `clamp_lo`).
-        let raw = self.reward_form.raw(s.gpu_energy_j, s.core_util, s.uncore_util);
-        let reward = self.normalizer.normalize(raw);
-        self.driver.update_batch(&self.sel, &[reward], &[s.progress], &[1.0]);
+    /// The arms chosen by the last [`decide`](Self::decide), one per
+    /// environment.
+    pub fn selections(&self) -> &[i32] {
+        &self.sel
+    }
 
-        self.cumulative_regret += self.mu_star - self.true_rewards[arm];
-        self.cum_true_energy_j += s.true_gpu_energy_j;
-
-        // Progress checkpoints.
-        let completed = 1.0 - s.remaining;
-        self.final_completed = completed;
-        let n_cp = self.checkpoints.len();
-        while self.next_cp < n_cp
-            && completed >= (self.next_cp + 1) as f64 / n_cp as f64 - 1e-12
-        {
-            self.checkpoints[self.next_cp] = self.cum_true_energy_j;
-            self.next_cp += 1;
+    /// Feed back the interval's telemetry (one sample per environment)
+    /// for the arms chosen by the last [`decide`](Self::decide).
+    pub fn observe(&mut self, samples: &[StepSample]) {
+        assert_eq!(samples.len(), self.b, "one sample per environment");
+        for (e, s) in samples.iter().enumerate() {
+            // Reward from counter-visible quantities only (Eq. 4) unless
+            // the backend preformed it; the per-env normalizer winsorizes
+            // heavy-tail spikes (its `clamp_lo`).
+            self.reward_buf[e] = match s.reward {
+                Some(r) => r,
+                None => {
+                    let raw = self.reward_form.raw(s.gpu_energy_j, s.core_util, s.uncore_util);
+                    self.normalizers[e].normalize(raw)
+                }
+            };
+            self.progress_buf[e] = s.progress;
+            self.active_buf[e] = if s.active { 1.0 } else { 0.0 };
         }
+        self.driver.update_batch(&self.sel, &self.reward_buf, &self.progress_buf, &self.active_buf);
 
-        self.switch_rate.record(if s.switched { 1.0 } else { 0.0 });
-        if s.switched {
-            self.switch_counter.inc();
+        for (e, s) in samples.iter().enumerate() {
+            if !s.active {
+                continue;
+            }
+            let arm = self.sel[e] as usize;
+            let regret = self.mu_star[e] - self.envs[e].true_rewards[arm];
+            self.cumulative_regret[e] += regret;
+            self.cum_true_energy_j[e] += s.true_gpu_energy_j;
+
+            // Progress checkpoints (row e of the (B, n_cp) grid).
+            let completed = 1.0 - s.remaining;
+            self.final_completed[e] = completed;
+            let row = e * self.n_cp;
+            while self.next_cp[e] < self.n_cp
+                && completed >= (self.next_cp[e] + 1) as f64 / self.n_cp as f64 - 1e-12
+            {
+                self.checkpoints[row + self.next_cp[e]] = self.cum_true_energy_j[e];
+                self.next_cp[e] += 1;
+            }
+
+            self.switch_rate[e].record(if s.switched { 1.0 } else { 0.0 });
+            if s.switched {
+                self.switch_counter[e].inc();
+            }
+
+            if let Some(tr) = self.traces[e].as_mut() {
+                tr.push(TraceStep {
+                    t: self.t,
+                    arm,
+                    reward: self.reward_buf[e],
+                    energy_j: s.true_gpu_energy_j,
+                    regret,
+                    switched: s.switched,
+                });
+            }
         }
+    }
 
-        if let Some(tr) = self.trace.as_mut() {
-            tr.push(TraceStep {
-                t: self.t,
-                arm,
-                reward,
-                energy_j: s.true_gpu_energy_j,
-                regret: self.mu_star - self.true_rewards[arm],
-                switched: s.switched,
+    /// Close the run: fill any remaining checkpoints (e.g. the run hit
+    /// `max_steps`) and assemble one [`RunResult`] per environment from
+    /// the backend's final accounting. The wall-clock decide-latency
+    /// gauge measures the whole batched decision, so it is attached to
+    /// row 0's telemetry only.
+    pub fn finish(mut self, totals: &[BackendTotals]) -> Vec<RunResult> {
+        assert_eq!(totals.len(), self.b, "one totals record per environment");
+        let name = self.driver.name();
+        let mut out = Vec::with_capacity(self.b);
+        for e in 0..self.b {
+            let row = e * self.n_cp;
+            for i in self.next_cp[e]..self.n_cp {
+                self.checkpoints[row + i] = self.cum_true_energy_j[e];
+            }
+            let mut telemetry = Recorder::new();
+            telemetry.counter("controller.steps").add(self.t);
+            telemetry
+                .insert_counter("controller.switches", std::mem::take(&mut self.switch_counter[e]));
+            telemetry
+                .insert_gauge("controller.switch_rate", std::mem::take(&mut self.switch_rate[e]));
+            if e == 0 && self.decide_latency_us.count() > 0 {
+                telemetry
+                    .insert_gauge("controller.decide_latency_us", self.decide_latency_us.clone());
+            }
+            let metrics = RunMetrics {
+                app: std::mem::take(&mut self.envs[e].app),
+                policy: name.clone(),
+                gpu_energy_kj: totals[e].gpu_energy_kj,
+                exec_time_s: totals[e].exec_time_s,
+                switches: totals[e].switches,
+                switch_energy_j: totals[e].switch_energy_j,
+                switch_time_s: totals[e].switch_time_s,
+                cumulative_regret: self.cumulative_regret[e],
+                steps: self.t,
+                completed: self.final_completed[e].clamp(0.0, 1.0),
+            };
+            out.push(RunResult {
+                metrics,
+                trace: self.traces[e].take(),
+                energy_checkpoints_j: self.checkpoints[row..row + self.n_cp].to_vec(),
+                telemetry,
             });
         }
-    }
-
-    /// Close the session: fill any remaining checkpoints (e.g. the run
-    /// hit `max_steps`) and assemble the [`RunResult`] from the backend's
-    /// final accounting.
-    pub fn finish(mut self, totals: BackendTotals) -> RunResult {
-        for cp in self.checkpoints.iter_mut().skip(self.next_cp) {
-            *cp = self.cum_true_energy_j;
-        }
-        let mut telemetry = Recorder::new();
-        telemetry.counter("controller.steps").add(self.t);
-        telemetry.insert_counter("controller.switches", self.switch_counter);
-        telemetry.insert_gauge("controller.switch_rate", self.switch_rate);
-        if self.decide_latency_us.count() > 0 {
-            telemetry.insert_gauge("controller.decide_latency_us", self.decide_latency_us);
-        }
-        let metrics = RunMetrics {
-            app: self.app_name,
-            policy: self.driver.name(),
-            gpu_energy_kj: totals.gpu_energy_kj,
-            exec_time_s: totals.exec_time_s,
-            switches: totals.switches,
-            switch_energy_j: totals.switch_energy_j,
-            switch_time_s: totals.switch_time_s,
-            cumulative_regret: self.cumulative_regret,
-            steps: self.t,
-            completed: self.final_completed.clamp(0.0, 1.0),
-        };
-        RunResult { metrics, trace: self.trace, energy_checkpoints_j: self.checkpoints, telemetry }
+        out
     }
 }
 
 /// Drive a controller against a telemetry backend to completion: the one
-/// loop every session surface shares (`run_session`, the cluster worker,
-/// `energyucb replay`). This is the only place the session tier reads a
-/// clock — the per-decision latency gauge
+/// loop every tier shares (`run_session` and the cluster worker at
+/// B = 1, `fleet::policy_run` at B = N, `energyucb replay` and the sweep
+/// tier over recordings). This is the only place the control tier reads
+/// a clock — the per-decision latency gauge
 /// (`controller.decide_latency_us`) lives here so the controller core
 /// stays sans-IO.
 pub fn drive(
     mut controller: Controller<'_>,
     backend: &mut dyn TelemetryBackend,
-) -> anyhow::Result<RunResult> {
+) -> anyhow::Result<Vec<RunResult>> {
+    anyhow::ensure!(
+        controller.b() == backend.b(),
+        "controller batch B = {} does not match backend B = {}",
+        controller.b(),
+        backend.b()
+    );
+    anyhow::ensure!(
+        controller.k() == backend.k(),
+        "controller arity K = {} does not match backend K = {}",
+        controller.k(),
+        backend.k()
+    );
+    let mut samples = vec![StepSample::default(); controller.b()];
     while !backend.done() && controller.wants_step() {
         // The latency gauge samples every 64th decision: statistically
         // meaningful without paying two clock reads on every iteration
         // of a loop that is otherwise allocation- and syscall-free.
         let timed = controller.steps() & 63 == 0;
         let t0 = timed.then(std::time::Instant::now);
-        let arm = controller.decide();
+        controller.decide();
         if let Some(t0) = t0 {
             controller.record_decide_latency_us(t0.elapsed().as_secs_f64() * 1e6);
         }
-        backend.apply(arm)?;
-        let sample = backend.sample()?;
-        controller.observe(&sample);
+        backend.apply(controller.selections())?;
+        backend.sample_into(&mut samples)?;
+        controller.observe(&samples);
     }
-    Ok(controller.finish(backend.totals()))
+    let totals = backend.totals();
+    Ok(controller.finish(&totals))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bandit::batch::BatchUcb1;
     use crate::bandit::{RoundRobin, StaticPolicy};
     use crate::workload::calibration;
 
@@ -275,6 +476,7 @@ mod tests {
             remaining,
             true_gpu_energy_j: 24.0,
             switched,
+            ..StepSample::default()
         }
     }
 
@@ -289,19 +491,22 @@ mod tests {
         let n = 10u64;
         for i in 0..n {
             assert!(c.wants_step());
-            let arm = c.decide();
-            assert!(arm < 9);
+            c.decide();
+            assert!((c.selections()[0] as usize) < 9);
             let remaining = 1.0 - (i + 1) as f64 / n as f64;
-            c.observe(&sample(1.0 / n as f64, remaining, i > 0));
+            c.observe(&[sample(1.0 / n as f64, remaining, i > 0)]);
         }
         assert_eq!(c.steps(), n);
-        let res = c.finish(BackendTotals {
-            gpu_energy_kj: 0.24,
-            exec_time_s: 0.1,
-            switches: n - 1,
-            switch_energy_j: 0.3 * (n - 1) as f64,
-            switch_time_s: 150e-6 * (n - 1) as f64,
-        });
+        let res = c
+            .finish(&[BackendTotals {
+                gpu_energy_kj: 0.24,
+                exec_time_s: 0.1,
+                switches: n - 1,
+                switch_energy_j: 0.3 * (n - 1) as f64,
+                switch_time_s: 150e-6 * (n - 1) as f64,
+            }])
+            .pop()
+            .unwrap();
         assert_eq!(res.metrics.steps, n);
         assert_eq!(res.metrics.switches, n - 1);
         assert!((res.metrics.completed - 1.0).abs() < 1e-12);
@@ -327,11 +532,11 @@ mod tests {
         let mut steps = 0;
         while c.wants_step() {
             c.decide();
-            c.observe(&sample(1e-4, 1.0 - 1e-4 * (steps + 1) as f64, false));
+            c.observe(&[sample(1e-4, 1.0 - 1e-4 * (steps + 1) as f64, false)]);
             steps += 1;
         }
         assert_eq!(steps, 3);
-        let res = c.finish(BackendTotals::default());
+        let res = c.finish(&[BackendTotals::default()]).pop().unwrap();
         assert_eq!(res.metrics.steps, 3);
         assert!(res.metrics.completed < 1.0);
     }
@@ -347,10 +552,92 @@ mod tests {
         let mut policy = StaticPolicy::new(9, 0);
         let mut c = Controller::new(&app, &mut policy, &cfg);
         for i in 0..5 {
-            assert_eq!(c.decide(), 0);
-            c.observe(&sample(1e-4, 1.0 - 1e-4 * (i + 1) as f64, i == 0));
+            c.decide();
+            assert_eq!(c.selections(), &[0]);
+            c.observe(&[sample(1e-4, 1.0 - 1e-4 * (i + 1) as f64, i == 0)]);
         }
         let expected = 5.0 * (mu_star - true_rewards[0]);
+        assert!((c.cumulative_regret() - expected).abs() < 1e-12);
+    }
+
+    /// Batch semantics: per-row accounting is independent, and inactive
+    /// rows are frozen (no regret, no energy, no checkpoints, no trace).
+    #[test]
+    fn batch_rows_account_independently_and_inactive_rows_freeze() {
+        let envs = vec![
+            EnvSpec { app: "a".into(), true_rewards: vec![-1.0, -0.5, -2.0] },
+            EnvSpec { app: "b".into(), true_rewards: vec![-0.25, -1.5, -0.75] },
+        ];
+        let driver = Box::new(BatchUcb1::new(2, 3, 0.05));
+        let opts = BatchOpts {
+            reward_form: RewardForm::EnergyRatio,
+            max_steps: 100,
+            record_trace: true,
+            checkpoints: 2,
+            feasible: None,
+        };
+        let mut c = Controller::new_batch(envs, driver, &opts);
+        assert_eq!(c.b(), 2);
+        assert_eq!(c.k(), 3);
+        // Env 1 goes inactive after 2 steps; env 0 runs 4.
+        for i in 0..4u64 {
+            c.decide();
+            let active1 = i < 2;
+            c.observe(&[
+                StepSample {
+                    true_gpu_energy_j: 10.0,
+                    progress: 0.25,
+                    remaining: 1.0 - 0.25 * (i + 1) as f64,
+                    ..StepSample::default()
+                },
+                StepSample {
+                    true_gpu_energy_j: 7.0,
+                    progress: if active1 { 0.5 } else { 0.0 },
+                    remaining: if active1 { 1.0 - 0.5 * (i + 1) as f64 } else { 0.0 },
+                    active: active1,
+                    ..StepSample::default()
+                },
+            ]);
+        }
+        let res = c.finish(&[BackendTotals::default(), BackendTotals::default()]);
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].metrics.app, "a");
+        assert_eq!(res[1].metrics.app, "b");
+        // Both rows report the shared step counter...
+        assert_eq!(res[0].metrics.steps, 4);
+        assert_eq!(res[1].metrics.steps, 4);
+        // ...but row 1's accounting froze after its 2 active intervals.
+        assert_eq!(res[1].trace.as_ref().unwrap().len(), 2);
+        assert_eq!(res[0].trace.as_ref().unwrap().len(), 4);
+        assert!((res[1].metrics.completed - 1.0).abs() < 1e-12);
+        // Checkpoint rows are independent: env 1 banked 7 J per active
+        // step, env 0 banked 10 J per step.
+        assert_eq!(res[1].energy_checkpoints_j, vec![7.0, 14.0]);
+        assert_eq!(res[0].energy_checkpoints_j, vec![20.0, 40.0]);
+    }
+
+    /// The regret baseline respects the feasibility mask: masked-out arms
+    /// cannot define the per-env optimum.
+    #[test]
+    fn regret_baseline_is_the_best_feasible_arm() {
+        let envs =
+            vec![EnvSpec { app: "a".into(), true_rewards: vec![-0.1, -0.5, -1.0] }];
+        let driver = Box::new(BatchUcb1::new(1, 3, 0.05));
+        let opts = BatchOpts {
+            reward_form: RewardForm::EnergyRatio,
+            max_steps: 10,
+            record_trace: false,
+            checkpoints: 0,
+            // Arm 0 (the global optimum) is infeasible.
+            feasible: Some(vec![0.0, 1.0, 1.0]),
+        };
+        let mut c = Controller::new_batch(envs, driver, &opts);
+        c.decide();
+        let arm = c.selections()[0] as usize;
+        assert!(arm == 1 || arm == 2, "mask must exclude arm 0, got {arm}");
+        c.observe(&[StepSample { progress: 0.1, remaining: 0.9, ..StepSample::default() }]);
+        // mu_star = -0.5 (best feasible), so picking arm 1 is zero regret.
+        let expected = if arm == 1 { 0.0 } else { 0.5 };
         assert!((c.cumulative_regret() - expected).abs() < 1e-12);
     }
 
@@ -360,5 +647,20 @@ mod tests {
         let app = calibration::app("tealeaf").unwrap();
         let mut policy = StaticPolicy::new(4, 0);
         let _ = Controller::new(&app, &mut policy, &SessionCfg::default());
+    }
+
+    #[test]
+    #[should_panic(expected = "policy batch")]
+    fn mismatched_batch_is_rejected() {
+        let envs = vec![EnvSpec { app: "a".into(), true_rewards: vec![0.0; 3] }];
+        let driver = Box::new(BatchUcb1::new(2, 3, 0.05));
+        let opts = BatchOpts {
+            reward_form: RewardForm::EnergyRatio,
+            max_steps: 10,
+            record_trace: false,
+            checkpoints: 0,
+            feasible: None,
+        };
+        let _ = Controller::new_batch(envs, driver, &opts);
     }
 }

@@ -1,12 +1,16 @@
-//! Control plane: the sans-IO decision core, the pluggable telemetry
-//! backends it runs against, and the paper-metric accounting.
+//! Control plane: the batch-native sans-IO decision core, the pluggable
+//! telemetry backends it runs against, and the paper-metric accounting.
 //!
 //! * [`controller`] — [`Controller`], the pure `decide`/`observe` step
-//!   machine, and [`drive`], the one loop pairing it with a backend.
+//!   machine over B environments, and [`drive`], the one loop pairing it
+//!   with a backend (the session tier at B = 1, the fleet tier at
+//!   B = N).
 //! * [`backend`] — the [`TelemetryBackend`] trait plus [`SimBackend`]
 //!   (simulated GEOPM) and the [`Recording`] tee.
 //! * [`replay`] — the JSONL telemetry grammar and [`ReplayBackend`]
 //!   (record/replay + counterfactual policy evaluation).
+//! * [`sweep`] — the counterfactual sweep tier: evaluate many policies
+//!   against one frozen recording, fanned out on the `exec` pool.
 //! * [`session`] — [`run_session`]/[`run_repeated`], the thin composition
 //!   every experiment and the cluster worker call.
 
@@ -15,9 +19,11 @@ pub mod controller;
 pub mod metrics;
 pub mod replay;
 pub mod session;
+pub mod sweep;
 
 pub use backend::{Recording, SimBackend, TelemetryBackend};
-pub use controller::{drive, BackendTotals, Controller, StepSample};
+pub use controller::{drive, BackendTotals, BatchOpts, Controller, EnvSpec, StepSample};
 pub use metrics::{RepeatedMetrics, RunMetrics};
 pub use replay::{ReplayBackend, ReplayHeader, TelemetryFrame};
 pub use session::{run_repeated, run_session, RunResult, SessionCfg};
+pub use sweep::{sweep_replay, SweepCandidate, SweepOutcome};

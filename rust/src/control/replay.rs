@@ -3,20 +3,28 @@
 //!
 //! One [`TelemetryFrame`] per line (`util::wire` lossless float/integer
 //! codecs, `util::io::Json` framing — the same substrate as the cluster
-//! shard wire):
+//! shard wire). Scalar (B = 1) runs keep the original shapes; batch runs
+//! carry row arrays:
 //!
 //! ```text
-//! header   exactly once, first      {"kind":"header","header":{"app":..,"policy":..,"session":..}}
-//! step     once per interval        {"kind":"step","arm":..,"sample":{..}}
-//! end      exactly once, last       {"kind":"end","totals":{..}}
+//! header   exactly once, first   {"kind":"header","header":{"app":..,"policy":..,"session":..[,"envs":[..],"feasible":[..]]}}
+//! step     once per interval     {"kind":"step","arm":..,"sample":{..}}            (B = 1)
+//!                                {"kind":"step","arms":[..],"samples":[{..},..]}   (B > 1)
+//! end      exactly once, last    {"kind":"end","totals":{..},"steps":..}           (B = 1)
+//!                                {"kind":"end","totals":[{..},..],"steps":..}      (B > 1)
 //! ```
+//!
+//! The `end` frame carries the achieved step count and, when the
+//! recording was abandoned mid-run, a `"truncated":true` marker (written
+//! by [`Recording`]'s drop path) — [`ReplayBackend`] rejects truncated
+//! logs with an actionable error instead of silently replaying short.
 //!
 //! Round-trips are exact (floats ride shortest round-trip formatting),
 //! so replaying a recording under the policy that produced it reproduces
 //! the original `RunMetrics` bit-for-bit; replaying under a *different*
 //! policy is open-loop counterfactual evaluation — decisions no longer
 //! influence the samples, which stay whatever the recorded run saw
-//! (EXPERIMENTS.md §Controller).
+//! (EXPERIMENTS.md §Controller, §Sweeps).
 //!
 //! [`Recording`]: super::backend::Recording
 
@@ -28,7 +36,8 @@ use anyhow::Context as _;
 use crate::config::PolicyConfig;
 use crate::util::io::Json;
 use crate::util::wire::{
-    err, f64_to_json, field, str_field, u64_to_json, usize_field, WireCodec, WireError,
+    err, f64_from_json, f64_to_json, f64s_from_json, f64s_to_json, field, str_field, u64_from_json,
+    u64_to_json, usize_field, WireCodec, WireError,
 };
 
 use super::backend::TelemetryBackend;
@@ -36,19 +45,48 @@ use super::controller::{BackendTotals, StepSample};
 use super::session::SessionCfg;
 
 /// Run provenance carried at the head of a telemetry log: enough to
-/// rebuild the controller (app, session config including the frequency
-/// domain) and — when the recorder knew it — the policy.
+/// rebuild the controller (app or fleet roster, session config including
+/// the frequency domain) and — when the recorder knew it — the policy.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ReplayHeader {
-    /// Calibrated app name (resolved through `workload::calibration`).
+    /// Calibrated app name (resolved through `workload::calibration`);
+    /// `"fleet"` for batch recordings (see [`envs`](Self::envs)).
     pub app: String,
     /// Policy configuration that produced the recording, when known (the
-    /// CLI records it so `energyucb replay` can rebuild the same policy
-    /// without a `--policy` flag).
+    /// CLI records it so `energyucb replay` / `energyucb sweep` can
+    /// rebuild the same policy without a `--policy` flag).
     pub policy: Option<PolicyConfig>,
     /// Session configuration of the recorded run (seed, dt, frequency
     /// domain, reward form, step budget).
     pub session: SessionCfg,
+    /// Fleet-tier roster: the calibrated app name of each environment
+    /// row, in row order. Empty for scalar (B = 1) session recordings.
+    pub envs: Vec<String>,
+    /// Fleet-tier QoS feasibility mask, row-major (B, K), when the
+    /// recorded run was constrained. `None` = all arms feasible.
+    pub feasible: Option<Vec<f64>>,
+}
+
+impl ReplayHeader {
+    /// Header for a scalar (B = 1) session recording.
+    pub fn session(app: String, policy: Option<PolicyConfig>, session: SessionCfg) -> ReplayHeader {
+        ReplayHeader { app, policy, session, envs: Vec::new(), feasible: None }
+    }
+
+    /// Header for a batch fleet recording: one env name per row.
+    pub fn fleet(
+        envs: Vec<String>,
+        policy: Option<PolicyConfig>,
+        session: SessionCfg,
+        feasible: Option<Vec<f64>>,
+    ) -> ReplayHeader {
+        ReplayHeader { app: "fleet".to_string(), policy, session, envs, feasible }
+    }
+
+    /// Batch size of the recording (1 for scalar session logs).
+    pub fn b(&self) -> usize {
+        self.envs.len().max(1)
+    }
 }
 
 impl WireCodec for ReplayHeader {
@@ -63,6 +101,17 @@ impl WireCodec for ReplayHeader {
             },
         );
         j.set("session", self.session.to_wire());
+        // Batch-only fields are omitted for scalar recordings, keeping
+        // the legacy B = 1 log shape byte-stable.
+        if !self.envs.is_empty() {
+            j.set(
+                "envs",
+                Json::Arr(self.envs.iter().map(|e| Json::Str(e.clone())).collect()),
+            );
+        }
+        if let Some(f) = &self.feasible {
+            j.set("feasible", f64s_to_json(f));
+        }
         j
     }
 
@@ -71,10 +120,31 @@ impl WireCodec for ReplayHeader {
             Json::Null => None,
             x => Some(PolicyConfig::from_wire(x)?),
         };
+        let envs = match v.get("envs") {
+            None => Vec::new(),
+            Some(x) => {
+                let Some(arr) = x.as_arr() else {
+                    return err("field `envs` must be an array of strings");
+                };
+                arr.iter()
+                    .map(|e| {
+                        e.as_str().map(str::to_string).ok_or_else(|| {
+                            WireError("field `envs` must be an array of strings".into())
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?
+            }
+        };
+        let feasible = match v.get("feasible") {
+            None => None,
+            Some(x) => Some(f64s_from_json(x)?),
+        };
         Ok(ReplayHeader {
             app: str_field(v, "app")?,
             policy,
             session: SessionCfg::from_wire(field(v, "session")?)?,
+            envs,
+            feasible,
         })
     }
 }
@@ -89,11 +159,29 @@ impl WireCodec for StepSample {
         j.set("remaining", f64_to_json(self.remaining));
         j.set("true_gpu_energy_j", f64_to_json(self.true_gpu_energy_j));
         j.set("switched", self.switched);
+        // Batch-only fields ride only when non-default, so scalar session
+        // samples keep the legacy shape.
+        if let Some(r) = self.reward {
+            j.set("reward", f64_to_json(r));
+        }
+        if !self.active {
+            j.set("active", false);
+        }
         j
     }
 
     fn from_wire(v: &Json) -> Result<Self, WireError> {
         use crate::util::wire::{bool_field, f64_field};
+        let reward = match v.get("reward") {
+            None => None,
+            Some(x) => Some(f64_from_json(x)?),
+        };
+        let active = match v.get("active") {
+            None => true,
+            Some(x) => x
+                .as_bool()
+                .ok_or_else(|| WireError("field `active` must be a bool".into()))?,
+        };
         Ok(StepSample {
             gpu_energy_j: f64_field(v, "gpu_energy_j")?,
             core_util: f64_field(v, "core_util")?,
@@ -102,6 +190,8 @@ impl WireCodec for StepSample {
             remaining: f64_field(v, "remaining")?,
             true_gpu_energy_j: f64_field(v, "true_gpu_energy_j")?,
             switched: bool_field(v, "switched")?,
+            reward,
+            active,
         })
     }
 }
@@ -134,11 +224,13 @@ impl WireCodec for BackendTotals {
 pub enum TelemetryFrame {
     /// Run provenance; must be the first frame.
     Header(ReplayHeader),
-    /// One decision interval: the arm that was applied and what the
-    /// backend sampled under it.
-    Step { arm: usize, sample: StepSample },
-    /// Terminal accounting; must be the last frame.
-    End { totals: BackendTotals },
+    /// One decision interval: the arm applied per environment and what
+    /// the backend sampled under it (parallel arrays, length B).
+    Step { arms: Vec<i32>, samples: Vec<StepSample> },
+    /// Terminal accounting; must be the last frame. `steps` is the
+    /// achieved interval count when the writer knew it; `truncated`
+    /// marks a recording abandoned before its clean finish.
+    End { totals: Vec<BackendTotals>, steps: Option<u64>, truncated: bool },
 }
 
 impl TelemetryFrame {
@@ -165,14 +257,33 @@ impl WireCodec for TelemetryFrame {
                 j.set("kind", "header");
                 j.set("header", h.to_wire());
             }
-            TelemetryFrame::Step { arm, sample } => {
+            TelemetryFrame::Step { arms, samples } => {
                 j.set("kind", "step");
-                j.set("arm", *arm);
-                j.set("sample", sample.to_wire());
+                if arms.len() == 1 {
+                    // Scalar recordings keep the legacy one-object shape.
+                    j.set("arm", arms[0] as usize);
+                    j.set("sample", samples[0].to_wire());
+                } else {
+                    j.set(
+                        "arms",
+                        Json::Arr(arms.iter().map(|&a| u64_to_json(a as u64)).collect()),
+                    );
+                    j.set("samples", Json::Arr(samples.iter().map(WireCodec::to_wire).collect()));
+                }
             }
-            TelemetryFrame::End { totals } => {
+            TelemetryFrame::End { totals, steps, truncated } => {
                 j.set("kind", "end");
-                j.set("totals", totals.to_wire());
+                if totals.len() == 1 {
+                    j.set("totals", totals[0].to_wire());
+                } else {
+                    j.set("totals", Json::Arr(totals.iter().map(WireCodec::to_wire).collect()));
+                }
+                if let Some(n) = steps {
+                    j.set("steps", u64_to_json(*n));
+                }
+                if *truncated {
+                    j.set("truncated", true);
+                }
             }
         }
         j
@@ -181,11 +292,61 @@ impl WireCodec for TelemetryFrame {
     fn from_wire(v: &Json) -> Result<Self, WireError> {
         Ok(match str_field(v, "kind")?.as_str() {
             "header" => TelemetryFrame::Header(ReplayHeader::from_wire(field(v, "header")?)?),
-            "step" => TelemetryFrame::Step {
-                arm: usize_field(v, "arm")?,
-                sample: StepSample::from_wire(field(v, "sample")?)?,
-            },
-            "end" => TelemetryFrame::End { totals: BackendTotals::from_wire(field(v, "totals")?)? },
+            "step" => {
+                if v.get("arm").is_some() {
+                    TelemetryFrame::Step {
+                        arms: vec![usize_field(v, "arm")? as i32],
+                        samples: vec![StepSample::from_wire(field(v, "sample")?)?],
+                    }
+                } else {
+                    let arms_j = field(v, "arms")?
+                        .as_arr()
+                        .ok_or_else(|| WireError("field `arms` must be an array".into()))?;
+                    let arms = arms_j
+                        .iter()
+                        .map(|a| u64_from_json(a).map(|x| x as i32))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    let samples_j = field(v, "samples")?
+                        .as_arr()
+                        .ok_or_else(|| WireError("field `samples` must be an array".into()))?;
+                    let samples = samples_j
+                        .iter()
+                        .map(StepSample::from_wire)
+                        .collect::<Result<Vec<_>, _>>()?;
+                    if arms.len() != samples.len() {
+                        return err(format!(
+                            "step frame row mismatch: {} arms vs {} samples",
+                            arms.len(),
+                            samples.len()
+                        ));
+                    }
+                    if arms.is_empty() {
+                        return err("step frame has no rows");
+                    }
+                    TelemetryFrame::Step { arms, samples }
+                }
+            }
+            "end" => {
+                let totals_j = field(v, "totals")?;
+                let totals = match totals_j.as_arr() {
+                    Some(arr) => arr
+                        .iter()
+                        .map(BackendTotals::from_wire)
+                        .collect::<Result<Vec<_>, _>>()?,
+                    None => vec![BackendTotals::from_wire(totals_j)?],
+                };
+                let steps = match v.get("steps") {
+                    None => None,
+                    Some(x) => Some(u64_from_json(x)?),
+                };
+                let truncated = match v.get("truncated") {
+                    None => false,
+                    Some(x) => x
+                        .as_bool()
+                        .ok_or_else(|| WireError("field `truncated` must be a bool".into()))?,
+                };
+                TelemetryFrame::End { totals, steps, truncated }
+            }
             other => return err(format!("unknown telemetry frame kind: {other}")),
         })
     }
@@ -194,27 +355,34 @@ impl WireCodec for TelemetryFrame {
 /// A telemetry backend that feeds a recorded run back to a controller.
 ///
 /// Open-loop by construction: [`apply`](TelemetryBackend::apply) only
-/// range-checks and records the requested arm; samples come verbatim
-/// from the log in recorded order. Replaying with the recording's own
-/// policy (same config, same seed) therefore reproduces the original
-/// decisions and metrics exactly; replaying with a different policy is
-/// counterfactual evaluation over a frozen telemetry stream.
+/// range-checks the requested arms; samples come verbatim from the log
+/// in recorded order. Replaying with the recording's own policy (same
+/// config, same seed) therefore reproduces the original decisions and
+/// metrics exactly; replaying with a different policy is counterfactual
+/// evaluation over a frozen telemetry stream — the record-once/
+/// evaluate-many discipline the sweep tier fans out over.
 #[derive(Clone, Debug)]
 pub struct ReplayBackend {
     header: ReplayHeader,
-    steps: Vec<(usize, StepSample)>,
-    totals: BackendTotals,
+    b: usize,
+    steps: Vec<(Vec<i32>, Vec<StepSample>)>,
+    totals: Vec<BackendTotals>,
     pos: usize,
 }
 
 impl ReplayBackend {
     /// Parse a complete telemetry log. Rejects logs with a missing or
-    /// duplicated header, frames after `end`, or no terminal `end` frame
-    /// (a truncated recording must not silently replay short).
+    /// duplicated header, frames after `end`, no terminal `end` frame or
+    /// an `end` carrying the truncation marker (a truncated recording
+    /// must not silently replay short), batch-width drift between
+    /// frames, arms outside the header's frequency domain, and step
+    /// counts that contradict the terminal frame.
     pub fn from_reader(reader: impl BufRead) -> anyhow::Result<ReplayBackend> {
         let mut header: Option<ReplayHeader> = None;
-        let mut steps: Vec<(usize, StepSample)> = Vec::new();
-        let mut totals: Option<BackendTotals> = None;
+        let mut b = 1usize;
+        let mut k = 0usize;
+        let mut steps: Vec<(Vec<i32>, Vec<StepSample>)> = Vec::new();
+        let mut end: Option<(Vec<BackendTotals>, Option<u64>, bool)> = None;
         for (i, line) in reader.lines().enumerate() {
             let line = line.context("reading telemetry log")?;
             if line.trim().is_empty() {
@@ -222,7 +390,7 @@ impl ReplayBackend {
             }
             let frame = TelemetryFrame::decode_line(&line)
                 .with_context(|| format!("telemetry log line {}", i + 1))?;
-            if totals.is_some() {
+            if end.is_some() {
                 anyhow::bail!("telemetry log line {}: frame after the end frame", i + 1);
             }
             match frame {
@@ -233,25 +401,68 @@ impl ReplayBackend {
                     if !steps.is_empty() {
                         anyhow::bail!("telemetry log line {}: header after steps", i + 1);
                     }
+                    b = h.b();
+                    k = h.session.freqs.k();
                     header = Some(h);
                 }
-                TelemetryFrame::Step { arm, sample } => {
+                TelemetryFrame::Step { arms, samples } => {
                     if header.is_none() {
                         anyhow::bail!("telemetry log line {}: step before header", i + 1);
                     }
-                    steps.push((arm, sample));
+                    if arms.len() != b {
+                        anyhow::bail!(
+                            "telemetry log line {}: step frame has {} rows, header declares B = {b}",
+                            i + 1,
+                            arms.len()
+                        );
+                    }
+                    for &a in &arms {
+                        if a < 0 || a as usize >= k {
+                            anyhow::bail!(
+                                "telemetry log line {}: recorded arm {a} outside the header's \
+                                 frequency domain (K = {k})",
+                                i + 1
+                            );
+                        }
+                    }
+                    steps.push((arms, samples));
                 }
-                TelemetryFrame::End { totals: t } => {
+                TelemetryFrame::End { totals, steps: n, truncated } => {
                     if header.is_none() {
                         anyhow::bail!("telemetry log line {}: end before header", i + 1);
                     }
-                    totals = Some(t);
+                    if totals.len() != b {
+                        anyhow::bail!(
+                            "telemetry log line {}: end frame has {} totals, header declares B = {b}",
+                            i + 1,
+                            totals.len()
+                        );
+                    }
+                    end = Some((totals, n, truncated));
                 }
             }
         }
         let header = header.context("telemetry log has no header frame")?;
-        let totals = totals.context("truncated telemetry log: no end frame")?;
-        Ok(ReplayBackend { header, steps, totals, pos: 0 })
+        let (totals, declared_steps, truncated) =
+            end.context("truncated telemetry log: no end frame")?;
+        if truncated {
+            anyhow::bail!(
+                "truncated telemetry log: the recording was abandoned after {} of an unknown \
+                 number of intervals (its end frame carries the truncation marker) — re-record \
+                 the run to completion before replaying",
+                declared_steps.unwrap_or(steps.len() as u64)
+            );
+        }
+        if let Some(n) = declared_steps {
+            if n != steps.len() as u64 {
+                anyhow::bail!(
+                    "telemetry log is inconsistent: end frame declares {n} intervals but {} step \
+                     frames are present",
+                    steps.len()
+                );
+            }
+        }
+        Ok(ReplayBackend { header, b, steps, totals, pos: 0 })
     }
 
     /// Parse from an in-memory log.
@@ -280,39 +491,71 @@ impl ReplayBackend {
         self.steps.is_empty()
     }
 
-    /// The arm the *recorded* run applied at interval `i` (0-based) —
-    /// for auditing counterfactual replays against the original.
+    /// The arm the *recorded* run applied at interval `i` (0-based) for
+    /// environment row 0 — for auditing counterfactual replays against
+    /// the original.
     pub fn recorded_arm(&self, i: usize) -> Option<usize> {
-        self.steps.get(i).map(|(arm, _)| *arm)
+        self.steps.get(i).map(|(arms, _)| arms[0] as usize)
+    }
+
+    /// The full row of arms the recorded run applied at interval `i`.
+    pub fn recorded_arms(&self, i: usize) -> Option<&[i32]> {
+        self.steps.get(i).map(|(arms, _)| arms.as_slice())
+    }
+
+    /// Rewind to the first interval (a cloned backend can be reused for
+    /// several counterfactual candidates; clones start wherever the
+    /// source stood, so sweeps rewind explicitly).
+    pub fn rewind(&mut self) {
+        self.pos = 0;
     }
 }
 
 impl TelemetryBackend for ReplayBackend {
+    fn b(&self) -> usize {
+        self.b
+    }
+
     fn k(&self) -> usize {
         self.header.session.freqs.k()
     }
 
-    fn apply(&mut self, arm: usize) -> anyhow::Result<()> {
-        if arm >= self.k() {
-            anyhow::bail!("replay: arm {arm} out of range (K = {})", self.k());
+    fn apply(&mut self, sel: &[i32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            sel.len() == self.b,
+            "replay: {} selections for a B = {} recording",
+            sel.len(),
+            self.b
+        );
+        for &arm in sel {
+            if arm < 0 || arm as usize >= self.k() {
+                anyhow::bail!("replay: arm {arm} out of range (K = {})", self.k());
+            }
         }
         Ok(())
     }
 
-    fn sample(&mut self) -> anyhow::Result<StepSample> {
-        let Some((_, sample)) = self.steps.get(self.pos) else {
+    fn sample_into(&mut self, out: &mut [StepSample]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            out.len() == self.b,
+            "replay: {} sample slots for a B = {} recording",
+            out.len(),
+            self.b
+        );
+        let Some((_, samples)) = self.steps.get(self.pos) else {
             anyhow::bail!("replay: sample past the end of the recording");
         };
+        out.copy_from_slice(samples);
         self.pos += 1;
-        Ok(*sample)
+        Ok(())
     }
 
     fn done(&self) -> bool {
         self.pos >= self.steps.len()
     }
 
-    fn totals(&self) -> BackendTotals {
-        self.totals
+    fn totals(&self) -> Vec<BackendTotals> {
+        self.totals.clone()
     }
 }
 
@@ -329,29 +572,32 @@ mod tests {
             remaining: 1.0 - x * 1e-4,
             true_gpu_energy_j: x * 0.99,
             switched: x as u64 % 2 == 0,
+            ..StepSample::default()
         }
     }
 
     fn log_text(steps: usize) -> String {
-        let header = ReplayHeader {
-            app: "tealeaf".into(),
-            policy: Some(PolicyConfig::Static { arm: 8 }),
-            session: SessionCfg { seed: 42, ..SessionCfg::default() },
-        };
+        let header = ReplayHeader::session(
+            "tealeaf".into(),
+            Some(PolicyConfig::Static { arm: 8 }),
+            SessionCfg { seed: 42, ..SessionCfg::default() },
+        );
         let mut text = format!("{}\n", TelemetryFrame::Header(header).encode_line());
         for i in 0..steps {
-            let f = TelemetryFrame::Step { arm: 8, sample: sample(i as f64 + 1.0) };
+            let f = TelemetryFrame::Step { arms: vec![8], samples: vec![sample(i as f64 + 1.0)] };
             text.push_str(&f.encode_line());
             text.push('\n');
         }
         let end = TelemetryFrame::End {
-            totals: BackendTotals {
+            totals: vec![BackendTotals {
                 gpu_energy_kj: 1.25,
                 exec_time_s: steps as f64 * 0.01,
                 switches: 1,
                 switch_energy_j: 0.3,
                 switch_time_s: 150e-6,
-            },
+            }],
+            steps: Some(steps as u64),
+            truncated: false,
         };
         text.push_str(&end.encode_line());
         text.push('\n');
@@ -361,13 +607,35 @@ mod tests {
     #[test]
     fn frames_round_trip_exactly() {
         let frames = [
-            TelemetryFrame::Header(ReplayHeader {
-                app: "clvleaf".into(),
-                policy: None,
-                session: SessionCfg { seed: u64::MAX - 1, ..SessionCfg::default() },
-            }),
-            TelemetryFrame::Step { arm: 3, sample: sample(25.0) },
-            TelemetryFrame::End { totals: BackendTotals::default() },
+            TelemetryFrame::Header(ReplayHeader::session(
+                "clvleaf".into(),
+                None,
+                SessionCfg { seed: u64::MAX - 1, ..SessionCfg::default() },
+            )),
+            TelemetryFrame::Header(ReplayHeader::fleet(
+                vec!["tealeaf".into(), "lbm".into()],
+                Some(PolicyConfig::Static { arm: 3 }),
+                SessionCfg::default(),
+                Some(vec![1.0, 0.0, 1.0, 1.0]),
+            )),
+            TelemetryFrame::Step { arms: vec![3], samples: vec![sample(25.0)] },
+            TelemetryFrame::Step {
+                arms: vec![3, 7],
+                samples: vec![
+                    StepSample { reward: Some(-0.75), ..sample(2.0) },
+                    StepSample { active: false, ..sample(3.0) },
+                ],
+            },
+            TelemetryFrame::End {
+                totals: vec![BackendTotals::default()],
+                steps: None,
+                truncated: false,
+            },
+            TelemetryFrame::End {
+                totals: vec![BackendTotals::default(), BackendTotals::default()],
+                steps: Some(77),
+                truncated: true,
+            },
         ];
         for f in frames {
             let line = f.encode_line();
@@ -377,21 +645,59 @@ mod tests {
     }
 
     #[test]
+    fn scalar_frames_keep_the_legacy_shape() {
+        // B = 1 recordings must stay byte-compatible with pre-batch logs:
+        // singular keys, no batch-only fields.
+        let step =
+            TelemetryFrame::Step { arms: vec![5], samples: vec![sample(1.0)] }.encode_line();
+        assert!(step.contains("\"arm\":"), "{step}");
+        assert!(!step.contains("\"arms\""), "{step}");
+        assert!(!step.contains("\"reward\""), "{step}");
+        assert!(!step.contains("\"active\""), "{step}");
+        let end = TelemetryFrame::End {
+            totals: vec![BackendTotals::default()],
+            steps: None,
+            truncated: false,
+        }
+        .encode_line();
+        assert!(!end.contains("\"truncated\""), "{end}");
+        assert!(!end.contains('['), "{end}");
+        // And legacy lines (no steps count) still decode.
+        let legacy = "{\"kind\":\"end\",\"totals\":{\"gpu_energy_kj\":1.0,\"exec_time_s\":2.0,\
+                      \"switches\":3,\"switch_energy_j\":0.9,\"switch_time_s\":0.1}}";
+        match TelemetryFrame::decode_line(legacy).unwrap() {
+            TelemetryFrame::End { totals, steps, truncated } => {
+                assert_eq!(totals.len(), 1);
+                assert_eq!(totals[0].switches, 3);
+                assert_eq!(steps, None);
+                assert!(!truncated);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn replay_backend_feeds_samples_in_order() {
         let mut b = ReplayBackend::from_text(&log_text(3)).unwrap();
         assert_eq!(b.len(), 3);
+        assert_eq!(b.b(), 1);
         assert_eq!(b.k(), 9);
         assert_eq!(b.recorded_arm(0), Some(8));
+        assert_eq!(b.recorded_arms(0), Some(&[8i32][..]));
         assert!(!b.done());
-        b.apply(0).unwrap();
-        assert!(b.apply(9).is_err());
+        b.apply(&[0]).unwrap();
+        assert!(b.apply(&[9]).is_err());
+        assert!(b.apply(&[0, 1]).is_err());
+        let mut out = [StepSample::default()];
         for i in 0..3 {
-            let s = b.sample().unwrap();
-            assert_eq!(s.gpu_energy_j, i as f64 + 1.0);
+            b.sample_into(&mut out).unwrap();
+            assert_eq!(out[0].gpu_energy_j, i as f64 + 1.0);
         }
         assert!(b.done());
-        assert!(b.sample().is_err());
-        assert_eq!(b.totals().gpu_energy_kj, 1.25);
+        assert!(b.sample_into(&mut out).is_err());
+        b.rewind();
+        assert!(!b.done());
+        assert_eq!(b.totals()[0].gpu_energy_kj, 1.25);
         assert_eq!(b.header().app, "tealeaf");
     }
 
@@ -400,11 +706,12 @@ mod tests {
         // No header.
         let no_header = log_text(2).lines().skip(1).collect::<Vec<_>>().join("\n");
         assert!(ReplayBackend::from_text(&no_header).is_err());
-        // No end frame (truncated recording).
+        // No end frame (mid-stream cut).
         let text = log_text(2);
         let truncated: Vec<&str> = text.lines().collect();
         let truncated = truncated[..truncated.len() - 1].join("\n");
-        assert!(ReplayBackend::from_text(&truncated).is_err());
+        let err = ReplayBackend::from_text(&truncated).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
         // Frames after end.
         let mut after_end = log_text(1);
         after_end.push_str(&log_text(1));
@@ -415,5 +722,41 @@ mod tests {
         assert!(ReplayBackend::from_text("").is_err());
         // Unknown kind.
         assert!(TelemetryFrame::decode_line("{\"kind\":\"bogus\"}").is_err());
+    }
+
+    #[test]
+    fn inconsistent_and_truncated_logs_are_rejected() {
+        // Truncation marker in the end frame.
+        let mut marked: Vec<String> = log_text(2).lines().map(str::to_string).collect();
+        let n = marked.len();
+        marked[n - 1] = TelemetryFrame::End {
+            totals: vec![BackendTotals::default()],
+            steps: Some(2),
+            truncated: true,
+        }
+        .encode_line();
+        let err = ReplayBackend::from_text(&marked.join("\n")).unwrap_err().to_string();
+        assert!(err.contains("truncation marker"), "{err}");
+        // Step count contradicting the end frame (a cut with the end
+        // frame still intact).
+        let mut cut: Vec<String> = log_text(3).lines().map(str::to_string).collect();
+        cut.remove(2);
+        let err = ReplayBackend::from_text(&cut.join("\n")).unwrap_err().to_string();
+        assert!(err.contains("declares 3 intervals"), "{err}");
+        // Recorded arm outside the header's domain.
+        let mut bad_arm: Vec<String> = log_text(1).lines().map(str::to_string).collect();
+        bad_arm[1] =
+            TelemetryFrame::Step { arms: vec![12], samples: vec![sample(1.0)] }.encode_line();
+        let err = ReplayBackend::from_text(&bad_arm.join("\n")).unwrap_err().to_string();
+        assert!(err.contains("outside the header's frequency domain"), "{err}");
+        // Batch-width drift: a 2-row step frame in a B = 1 log.
+        let mut wide: Vec<String> = log_text(1).lines().map(str::to_string).collect();
+        wide[1] = TelemetryFrame::Step {
+            arms: vec![1, 2],
+            samples: vec![sample(1.0), sample(2.0)],
+        }
+        .encode_line();
+        let err = ReplayBackend::from_text(&wide.join("\n")).unwrap_err().to_string();
+        assert!(err.contains("header declares B = 1"), "{err}");
     }
 }

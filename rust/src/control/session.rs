@@ -111,7 +111,10 @@ impl RunResult {
 pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) -> RunResult {
     let mut backend = SimBackend::new(app, cfg);
     let controller = Controller::new(app, policy, cfg);
-    drive(controller, &mut backend).expect("simulated backend is infallible")
+    drive(controller, &mut backend)
+        .expect("simulated backend is infallible")
+        .pop()
+        .expect("B = 1 drive yields exactly one result")
 }
 
 /// Run `reps` sessions with seeds `seed0..seed0+reps`, resetting the policy

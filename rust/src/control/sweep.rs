@@ -1,0 +1,295 @@
+//! The counterfactual sweep tier: evaluate many policies against one
+//! frozen telemetry recording (record once, evaluate many).
+//!
+//! [`sweep_replay`] rebuilds a controller per candidate from the
+//! recording's own provenance header — the scalar session tier (B = 1)
+//! through [`Controller::new`], the fleet tier (B = N) through
+//! [`fleet_controller`][crate::fleet::fleet_controller] — and drives each
+//! against its own rewound clone of the [`ReplayBackend`], fanned out on
+//! the deterministic `exec` pool. Every candidate sees the identical
+//! sample stream, so results are a pure function of (recording,
+//! candidate) and byte-identical at any `--jobs` (the same contract as
+//! the experiment executor, EXPERIMENTS.md §Sweeps).
+//!
+//! Replay is open-loop: a counterfactual policy's decisions cannot change
+//! the recorded samples, so energy totals stay the recorded run's and the
+//! comparison signal is the decision trajectory itself (selections,
+//! regret, switch accounting).
+
+use anyhow::{bail, ensure, Context as _, Result};
+
+use crate::config::PolicyConfig;
+use crate::exec::run_indexed;
+use crate::fleet::{fleet_controller, FleetParams};
+use crate::workload::calibration;
+
+use super::controller::{drive, Controller};
+use super::replay::{ReplayBackend, ReplayHeader};
+use super::session::RunResult;
+
+/// One policy to evaluate against the frozen recording.
+#[derive(Clone, Debug)]
+pub struct SweepCandidate {
+    /// Report label; `None` uses the built policy's display name (so a
+    /// single-candidate sweep renders exactly like `energyucb replay`).
+    pub label: Option<String>,
+    pub policy: PolicyConfig,
+}
+
+impl SweepCandidate {
+    pub fn new(policy: PolicyConfig) -> SweepCandidate {
+        SweepCandidate { label: None, policy }
+    }
+
+    pub fn labeled(label: impl Into<String>, policy: PolicyConfig) -> SweepCandidate {
+        SweepCandidate { label: Some(label.into()), policy }
+    }
+
+    fn policy_name(&self) -> String {
+        format!("{:?}", self.policy)
+    }
+}
+
+/// One candidate's evaluation: per-environment results in row order
+/// (length 1 for session recordings).
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub label: String,
+    pub results: Vec<RunResult>,
+}
+
+/// Validate a candidate against the recording's header before any thread
+/// fan-out, so malformed sweeps fail fast with the offending candidate
+/// named instead of surfacing as a mid-pool controller assert.
+fn validate_candidate(header: &ReplayHeader, cand: &SweepCandidate, idx: usize) -> Result<()> {
+    let k = header.session.freqs.k();
+    if let PolicyConfig::Static { arm } = &cand.policy {
+        ensure!(
+            *arm < k,
+            "sweep candidate {idx}: static arm {arm} out of range for the recording's \
+             frequency domain (K = {k})"
+        );
+    }
+    Ok(())
+}
+
+/// Evaluate one candidate against its own rewound clone of the trace.
+fn run_candidate(
+    trace: &ReplayBackend,
+    cand: &SweepCandidate,
+    idx: usize,
+) -> Result<SweepOutcome> {
+    let header = trace.header();
+    let scfg = &header.session;
+    let k = scfg.freqs.k();
+    let mut backend = trace.clone();
+    backend.rewind();
+
+    let results = if header.envs.is_empty() {
+        // Session tier: one app, the scalar policy path (f64 cores —
+        // identical arithmetic to `energyucb run` / `energyucb replay`).
+        let app = calibration::app(&header.app)
+            .with_context(|| format!("recording references unknown app {}", header.app))?;
+        ensure!(
+            app.energy_kj.len() == k,
+            "recording's frequency domain has {k} arms but app {} is calibrated for {}",
+            header.app,
+            app.energy_kj.len()
+        );
+        let mut policy = cand.policy.build(k, scfg.seed);
+        // Fresh-run contract: reset == freshly built, matching the
+        // recorded session's starting state.
+        policy.reset();
+        let controller = Controller::new(&app, policy.as_mut(), scfg);
+        drive(controller, &mut backend)
+            .with_context(|| format!("sweep candidate {idx} ({})", cand.policy_name()))?
+    } else {
+        // Fleet tier: rebuild the calibrated parameter block from the
+        // header roster — the same derivation the recorded run used — and
+        // drive the candidate's batch policy over the frozen samples.
+        let b = header.b();
+        let apps = header
+            .envs
+            .iter()
+            .map(|n| {
+                calibration::app(n)
+                    .with_context(|| format!("recording references unknown app {n}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let refs: Vec<&_> = apps.iter().collect();
+        let freqs = scfg.domain();
+        ensure!(freqs.k() == k, "frequency domain arity drift");
+        let mut params = FleetParams::from_apps(&refs, &freqs, scfg.dt_s);
+        if let Some(f) = &header.feasible {
+            ensure!(
+                f.len() == b * k,
+                "recording's feasibility mask has {} entries, expected B*K = {}",
+                f.len(),
+                b * k
+            );
+            params.feasible = f.iter().map(|&x| x as f32).collect();
+        }
+        let driver = cand.policy.build_batch(b, k, scfg.seed);
+        let controller = fleet_controller(&params, driver, scfg.max_steps);
+        drive(controller, &mut backend)
+            .with_context(|| format!("sweep candidate {idx} ({})", cand.policy_name()))?
+    };
+
+    let label = match &cand.label {
+        Some(l) => l.clone(),
+        None => results[0].metrics.policy.clone(),
+    };
+    Ok(SweepOutcome { label, results })
+}
+
+/// Evaluate every candidate against the frozen recording, fanned out
+/// across at most `jobs` worker threads. Results come back in candidate
+/// order and are byte-identical at any `jobs` value: each cell clones and
+/// rewinds the trace, derives everything else from (header, candidate),
+/// and performs no I/O.
+pub fn sweep_replay(
+    trace: &ReplayBackend,
+    candidates: &[SweepCandidate],
+    jobs: usize,
+) -> Result<Vec<SweepOutcome>> {
+    if candidates.is_empty() {
+        bail!("sweep: no candidates to evaluate");
+    }
+    for (i, cand) in candidates.iter().enumerate() {
+        validate_candidate(trace.header(), cand, i)?;
+    }
+    run_indexed(jobs, candidates.len(), |i| run_candidate(trace, &candidates[i], i))
+        .into_iter()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::EnergyUcbConfig;
+    use crate::control::{Recording, SessionCfg, SimBackend, TelemetryFrame};
+
+    /// Record a real tealeaf session (static arm 8, 400 steps) into an
+    /// in-memory log.
+    fn recorded_session() -> String {
+        let app = calibration::app("tealeaf").unwrap();
+        let scfg = SessionCfg { seed: 11, max_steps: 400, ..SessionCfg::default() };
+        let header = ReplayHeader::session(
+            "tealeaf".into(),
+            Some(PolicyConfig::Static { arm: 8 }),
+            scfg.clone(),
+        );
+        let mut sink = Vec::new();
+        {
+            let mut policy = crate::bandit::StaticPolicy::new(9, 8);
+            let mut backend =
+                Recording::new(SimBackend::new(&app, &scfg), &mut sink, &header).unwrap();
+            let controller = Controller::new(&app, &mut policy, &scfg);
+            drive(controller, &mut backend).unwrap();
+            backend.finish().unwrap();
+        }
+        String::from_utf8(sink).unwrap()
+    }
+
+    fn candidates() -> Vec<SweepCandidate> {
+        vec![
+            SweepCandidate::new(PolicyConfig::Static { arm: 8 }),
+            SweepCandidate::new(PolicyConfig::RoundRobin),
+            SweepCandidate::labeled(
+                "eucb",
+                PolicyConfig::EnergyUcb(EnergyUcbConfig::default()),
+            ),
+        ]
+    }
+
+    #[test]
+    fn sweep_is_deterministic_across_jobs() {
+        let trace = ReplayBackend::from_text(&recorded_session()).unwrap();
+        let seq = sweep_replay(&trace, &candidates(), 1).unwrap();
+        let par = sweep_replay(&trace, &candidates(), 4).unwrap();
+        assert_eq!(seq.len(), 3);
+        assert_eq!(par.len(), 3);
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.results.len(), b.results.len());
+            for (ra, rb) in a.results.iter().zip(&b.results) {
+                assert_eq!(ra.metrics, rb.metrics);
+                assert_eq!(ra.energy_checkpoints_j, rb.energy_checkpoints_j);
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_counterfactual_over_a_frozen_stream() {
+        let trace = ReplayBackend::from_text(&recorded_session()).unwrap();
+        let out = sweep_replay(&trace, &candidates(), 2).unwrap();
+        // Open loop: every candidate reports the recorded run's energy
+        // totals (decisions cannot change the frozen samples)...
+        let kj: Vec<f64> = out.iter().map(|o| o.results[0].metrics.gpu_energy_kj).collect();
+        assert!(kj.iter().all(|&x| x == kj[0]), "{kj:?}");
+        // ...and the recorded step count.
+        assert!(out.iter().all(|o| o.results[0].metrics.steps == 400));
+        // The decision trajectories differ: static-8 never switches and
+        // earns a different regret than round-robin.
+        assert_eq!(out[0].results[0].metrics.switches, 0);
+        assert_ne!(
+            out[0].results[0].metrics.cumulative_regret,
+            out[1].results[0].metrics.cumulative_regret
+        );
+        // Labels: policy display names unless overridden.
+        assert_eq!(out[2].label, "eucb");
+        assert_ne!(out[0].label, out[1].label);
+    }
+
+    #[test]
+    fn sweeping_the_recorded_policy_reproduces_the_replay() {
+        // A single-candidate sweep of the recording's own policy must
+        // equal a plain replay exactly (the CLI byte-compares reports on
+        // top of this).
+        let text = recorded_session();
+        let trace = ReplayBackend::from_text(&text).unwrap();
+        let header = trace.header().clone();
+        let app = calibration::app(&header.app).unwrap();
+        let mut policy = header.policy.clone().unwrap().build(9, header.session.seed);
+        policy.reset();
+        let mut backend = trace.clone();
+        let controller = Controller::new(&app, policy.as_mut(), &header.session);
+        let direct = drive(controller, &mut backend).unwrap().pop().unwrap();
+        let swept = sweep_replay(
+            &trace,
+            &[SweepCandidate::new(header.policy.clone().unwrap())],
+            1,
+        )
+        .unwrap();
+        assert_eq!(swept[0].results[0].metrics, direct.metrics);
+        assert_eq!(swept[0].label, direct.metrics.policy);
+    }
+
+    #[test]
+    fn sweep_rejects_bad_candidates() {
+        let trace = ReplayBackend::from_text(&recorded_session()).unwrap();
+        assert!(sweep_replay(&trace, &[], 1).is_err());
+        let err = sweep_replay(
+            &trace,
+            &[SweepCandidate::new(PolicyConfig::Static { arm: 12 })],
+            1,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // Unknown app in the header surfaces as a clear error.
+        let mut lines: Vec<String> =
+            recorded_session().lines().map(str::to_string).collect();
+        lines[0] = TelemetryFrame::Header(ReplayHeader::session(
+            "not-an-app".into(),
+            None,
+            SessionCfg { seed: 11, max_steps: 400, ..SessionCfg::default() },
+        ))
+        .encode_line();
+        let trace = ReplayBackend::from_text(&lines.join("\n")).unwrap();
+        let err = sweep_replay(&trace, &[SweepCandidate::new(PolicyConfig::RoundRobin)], 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown app"), "{err}");
+    }
+}

@@ -1,0 +1,239 @@
+//! The fleet tier's [`TelemetryBackend`]: the vectorized environment
+//! dynamics behind the batch-native control loop.
+//!
+//! [`FleetBackend`] owns one decision interval's world-side work —
+//! noise draw, [`apply_env_dynamics`][native::apply_env_dynamics]
+//! (verbatim the bit-pinned EnergyUCB arithmetic), sample capture, and
+//! the previous-arm/clock advance — so `fleet::policy_run` is a thin
+//! wrapper over the one [`drive`][crate::control::drive] loop the
+//! session tier uses. Bit-identity with `native_run` is pinned by the
+//! fleet policy tests and the batch-controller conformance suite: the
+//! noise stream position, the operation order inside the dynamics, and
+//! the pre-advance `prev` read for switch accounting are all unchanged;
+//! only the policy's `update_batch` moves after the dynamics (into
+//! `Controller::observe`), which is safe because the policy grids and
+//! [`FleetState`] are disjoint and `state.t` is only read at the next
+//! selection.
+
+use crate::bandit::batch::BatchPolicy;
+use crate::bandit::RewardForm;
+use crate::control::{BackendTotals, BatchOpts, Controller, EnvSpec, StepSample, TelemetryBackend};
+use crate::util::Rng;
+
+use super::native::{self, StepScratch};
+use super::state::{FleetParams, FleetState};
+
+/// Batch telemetry source over B fleet environments (see module docs).
+pub struct FleetBackend<'a> {
+    state: &'a mut FleetState,
+    params: &'a FleetParams,
+    rng: &'a mut Rng,
+    scratch: StepScratch,
+    noise: Vec<f32>,
+    samples: Vec<StepSample>,
+    steps: u64,
+}
+
+impl<'a> FleetBackend<'a> {
+    pub fn new(
+        state: &'a mut FleetState,
+        params: &'a FleetParams,
+        rng: &'a mut Rng,
+    ) -> FleetBackend<'a> {
+        assert_eq!(state.b, params.b, "state/params batch mismatch");
+        assert_eq!(state.k, params.k, "state/params arity mismatch");
+        let b = state.b;
+        FleetBackend {
+            state,
+            params,
+            rng,
+            scratch: StepScratch::new(b),
+            noise: vec![0.0f32; b],
+            samples: vec![StepSample::default(); b],
+            steps: 0,
+        }
+    }
+
+    /// Decision intervals advanced so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+impl TelemetryBackend for FleetBackend<'_> {
+    fn b(&self) -> usize {
+        self.state.b
+    }
+
+    fn k(&self) -> usize {
+        self.state.k
+    }
+
+    fn apply(&mut self, sel: &[i32]) -> anyhow::Result<()> {
+        let (b, k) = (self.state.b, self.state.k);
+        anyhow::ensure!(sel.len() == b, "fleet backend: {} selections for B = {b}", sel.len());
+        for &s in sel {
+            anyhow::ensure!(
+                s >= 0 && (s as usize) < k,
+                "fleet backend: arm {s} out of range (K = {k})"
+            );
+        }
+        self.scratch.sel.copy_from_slice(sel);
+        // Same noise stream position as `native_run`: one draw per
+        // interval, 0-based early-window index.
+        native::step_noise_into(self.params, self.steps, self.rng, &mut self.noise);
+        native::apply_env_dynamics(self.state, self.params, &self.noise, &mut self.scratch);
+        // Capture samples before advancing `prev` — the switch flag reads
+        // the pre-update previous arm, exactly as the dynamics did.
+        for e in 0..b {
+            let row = e * k;
+            let s = sel[e] as usize;
+            let active = self.scratch.active[e] > 0.0;
+            let switched = active && sel[e] != self.state.prev[e];
+            // Per-step energy recomputed from the parameters (not as a
+            // delta of the growing f32 accumulator, which would lose
+            // low bits).
+            let energy = ((self.params.energy_step[row + s]
+                + self.params.switch_energy_j * if switched { 1.0 } else { 0.0 })
+                * self.scratch.active[e]) as f64;
+            self.samples[e] = StepSample {
+                gpu_energy_j: energy,
+                core_util: 0.0,
+                uncore_util: 0.0,
+                progress: self.scratch.progress[e],
+                remaining: self.state.remaining[e] as f64,
+                true_gpu_energy_j: energy,
+                switched,
+                // The fleet model synthesizes normalized rewards directly
+                // (f32 widened exactly to f64) — no RewardForm pass.
+                reward: Some(self.scratch.reward[e]),
+                active,
+            };
+        }
+        for e in 0..b {
+            if self.scratch.active[e] > 0.0 {
+                self.state.prev[e] = sel[e];
+            }
+        }
+        self.state.t += 1.0;
+        self.steps += 1;
+        Ok(())
+    }
+
+    fn sample_into(&mut self, out: &mut [StepSample]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            out.len() == self.samples.len(),
+            "fleet backend: {} sample slots for B = {}",
+            out.len(),
+            self.samples.len()
+        );
+        out.copy_from_slice(&self.samples);
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.state.all_done()
+    }
+
+    fn totals(&self) -> Vec<BackendTotals> {
+        let dt = self.params.dt_s;
+        (0..self.state.b)
+            .map(|e| BackendTotals {
+                gpu_energy_kj: self.state.energy_kj(e),
+                exec_time_s: self.steps as f64 * dt,
+                switches: self.state.switches[e] as u64,
+                switch_energy_j: self.state.switches[e] as f64
+                    * self.params.switch_energy_j as f64,
+                switch_time_s: self.state.switches[e] as f64
+                    * self.params.switch_stall_frac as f64
+                    * dt,
+            })
+            .collect()
+    }
+}
+
+/// Build the batch controller for a fleet drive: per-row ground truth
+/// from the calibrated parameter block (names, f32 reward means widened
+/// exactly to f64, best-feasible regret baseline matching
+/// [`FleetParams::best_reward`]), no traces or checkpoints — the fleet
+/// tier's accounting of record lives in [`FleetState`].
+pub fn fleet_controller<'p>(
+    params: &FleetParams,
+    driver: Box<dyn BatchPolicy + 'p>,
+    max_steps: u64,
+) -> Controller<'p> {
+    let (b, k) = (params.b, params.k);
+    assert_eq!(driver.b(), b, "policy batch != fleet batch");
+    assert_eq!(driver.k(), k, "policy arity != fleet arity");
+    let envs = (0..b)
+        .map(|e| EnvSpec {
+            app: params.names.get(e).cloned().unwrap_or_else(|| format!("env{e}")),
+            true_rewards: params.reward_mean[e * k..(e + 1) * k]
+                .iter()
+                .map(|&x| x as f64)
+                .collect(),
+        })
+        .collect();
+    let opts = BatchOpts {
+        // Unused: fleet samples carry preformed rewards.
+        reward_form: RewardForm::EnergyRatio,
+        max_steps,
+        record_trace: false,
+        checkpoints: 0,
+        feasible: Some(params.feasible.clone()),
+    };
+    Controller::new_batch(envs, driver, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::freq::FreqDomain;
+    use crate::workload::calibration;
+
+    fn setup(names: &[&str]) -> (FleetState, FleetParams) {
+        let freqs = FreqDomain::aurora();
+        let apps: Vec<_> = names.iter().map(|n| calibration::app(n).unwrap()).collect();
+        let refs: Vec<&_> = apps.iter().collect();
+        let params = FleetParams::from_apps(&refs, &freqs, 0.01);
+        (FleetState::fresh(names.len(), 9), params)
+    }
+
+    #[test]
+    fn backend_advances_state_like_the_native_dynamics() {
+        let (mut state, params) = setup(&["tealeaf", "clvleaf"]);
+        let mut rng = Rng::new(7);
+        let mut backend = FleetBackend::new(&mut state, &params, &mut rng);
+        assert_eq!(backend.b(), 2);
+        assert_eq!(backend.k(), 9);
+        assert!(!backend.done());
+        assert!(backend.apply(&[9, 0]).is_err());
+        assert!(backend.apply(&[0]).is_err());
+        backend.apply(&[3, 8]).unwrap();
+        let mut out = vec![StepSample::default(); 2];
+        backend.sample_into(&mut out).unwrap();
+        // Env 0 switched off the initial arm 8; env 1 stayed.
+        assert!(out[0].switched);
+        assert!(!out[1].switched);
+        assert!(out[0].reward.is_some());
+        assert!(out[0].gpu_energy_j > 0.0);
+        assert_eq!(backend.steps(), 1);
+        let totals = backend.totals();
+        assert_eq!(totals.len(), 2);
+        assert!((totals[0].exec_time_s - 0.01).abs() < 1e-12);
+        assert_eq!(totals[0].switches, 1);
+        assert_eq!(totals[1].switches, 0);
+        drop(backend);
+        assert_eq!(state.prev, vec![3, 8]);
+        assert_eq!(state.t, 2.0);
+    }
+
+    #[test]
+    fn fleet_controller_rows_carry_app_names() {
+        let (_, params) = setup(&["tealeaf", "lbm"]);
+        let driver = Box::new(crate::bandit::batch::BatchUcb1::new(2, 9, 0.05));
+        let c = fleet_controller(&params, driver, 100);
+        assert_eq!(c.b(), 2);
+        assert_eq!(c.k(), 9);
+    }
+}

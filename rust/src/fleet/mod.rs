@@ -3,16 +3,20 @@
 //! ([`engine::FleetEngine`], PJRT), the bit-compatible pure-Rust
 //! EnergyUCB reference ([`native`]), or the generic batch-policy runner
 //! ([`policy`] — any [`crate::bandit::BatchPolicy`], including mixed
-//! fleets). Used for seed-variance studies, regret-curve averaging, and
-//! the paper's fleet-scale energy extrapolation. All decision arithmetic
-//! lives in the shared batch policy core (`bandit::batch`).
+//! fleets, routed through the batch-native control loop via
+//! [`backend::FleetBackend`]). Used for seed-variance studies,
+//! regret-curve averaging, and the paper's fleet-scale energy
+//! extrapolation. All decision arithmetic lives in the shared batch
+//! policy core (`bandit::batch`).
 
+pub mod backend;
 pub mod engine;
 pub mod native;
 pub mod policy;
 pub mod state;
 
+pub use backend::{fleet_controller, FleetBackend};
 pub use engine::FleetEngine;
 pub use native::StepScratch;
-pub use policy::{build_fleet_policy, policy_run, policy_step};
+pub use policy::{build_fleet_policy, policy_drive, policy_run};
 pub use state::{FleetHyper, FleetParams, FleetState};

@@ -53,9 +53,10 @@ impl StepScratch {
 /// the calibrated parameters and the noise draw, account progress, energy,
 /// regret, and switches against the *pre-update* previous arm, and fill
 /// `scratch.{reward, progress, active}` for the policy update. Shared by
-/// the bit-pinned EnergyUCB path ([`native_step_into`]) and the generic
-/// batch-policy runner (`fleet::policy::policy_step`). `scratch.sel` must
-/// already hold this step's selections.
+/// the bit-pinned EnergyUCB path ([`native_step_into`]) and the fleet
+/// telemetry backend behind the batch-native control loop
+/// (`fleet::backend::FleetBackend`). `scratch.sel` must already hold this
+/// step's selections.
 pub(crate) fn apply_env_dynamics(
     state: &mut FleetState,
     params: &FleetParams,

@@ -4,50 +4,47 @@
 //! (Thompson, static, round-robin, the RL baselines, heterogeneous
 //! mixed-policy fleets).
 //!
-//! The environment dynamics are literally the ones the bit-pinned
-//! EnergyUCB path uses (`native::apply_env_dynamics`); only the
-//! select/update calls go through the trait. Driving a
+//! Since the batch-native controller refactor this module holds no loop
+//! of its own: [`policy_run`] composes
+//! [`fleet_controller`][super::backend::fleet_controller] with
+//! [`FleetBackend`][super::backend::FleetBackend] and hands both to the
+//! one [`drive`][crate::control::drive] loop the session tier uses. The
+//! environment dynamics are literally the ones the bit-pinned EnergyUCB
+//! path uses (`native::apply_env_dynamics`). Driving a
 //! [`BatchEnergyUcb`][crate::bandit::BatchEnergyUcb] built with
 //! `with_initial_arm(k-1)` therefore reproduces `native::native_run`'s
-//! accounting trajectory bit-for-bit (pinned by the policy-contract
-//! suite) — the policy owns its grids, while `native_run` keeps them in
-//! `FleetState` for the HLO artifact contract.
+//! accounting trajectory bit-for-bit (pinned below and by the
+//! batch-controller conformance suite) — the policy owns its grids,
+//! while `native_run` keeps them in `FleetState` for the HLO artifact
+//! contract.
 
-use super::native::{self, StepScratch};
+use super::backend::{fleet_controller, FleetBackend};
 use super::state::{FleetHyper, FleetParams, FleetState};
 use crate::bandit::batch::{BatchEnergyUcb, BatchPolicy, Scalar};
 use crate::bandit::Policy as ScalarPolicy;
+use crate::control::{drive, RunResult};
 use crate::util::Rng;
 
-/// Advance the fleet one decision interval under `policy`
-/// (allocation-free; buffers live in `scratch`).
-pub fn policy_step(
+/// Run the fleet under `policy` until every environment completes (or
+/// `max_steps`), through the shared batch-native control loop, and
+/// return the per-environment [`RunResult`]s (row order). `state` holds
+/// the fleet-side accounting exactly as before; the results add the
+/// controller tier's view (per-env metrics, regret, telemetry).
+pub fn policy_drive(
     state: &mut FleetState,
     params: &FleetParams,
     policy: &mut dyn BatchPolicy,
-    noise: &[f32],
-    scratch: &mut StepScratch,
-) {
-    let (b, k) = (state.b, state.k);
-    assert_eq!(policy.b(), b, "policy batch != fleet batch");
-    assert_eq!(policy.k(), k, "policy arity != fleet arity");
-    assert_eq!(noise.len(), b);
-    scratch.ensure(b);
-    policy.select_into(state.t as u64, &params.feasible, &mut scratch.sel);
-    native::apply_env_dynamics(state, params, noise, scratch);
-    // Advance the engine-side previous-arm record (switch accounting reads
-    // it pre-update) — the policy keeps its own notion of prev internally.
-    for e in 0..b {
-        if scratch.active[e] > 0.0 {
-            state.prev[e] = scratch.sel[e];
-        }
-    }
-    policy.update_batch(&scratch.sel, &scratch.reward, &scratch.progress, &scratch.active);
-    state.t += 1.0;
+    rng: &mut Rng,
+    max_steps: u64,
+) -> Vec<RunResult> {
+    let controller = fleet_controller(params, Box::new(policy), max_steps);
+    let mut backend = FleetBackend::new(state, params, rng);
+    drive(controller, &mut backend).expect("fleet backend is infallible")
 }
 
 /// Run the fleet under `policy` until every environment completes (or
-/// `max_steps`). Buffers are allocated once; returns the steps taken.
+/// `max_steps`). Returns the steps taken. Thin wrapper over
+/// [`policy_drive`] for callers that only consume [`FleetState`].
 pub fn policy_run(
     state: &mut FleetState,
     params: &FleetParams,
@@ -55,15 +52,10 @@ pub fn policy_run(
     rng: &mut Rng,
     max_steps: u64,
 ) -> u64 {
-    let mut scratch = StepScratch::new(state.b);
-    let mut noise = vec![0.0f32; state.b];
-    let mut steps = 0;
-    while !state.all_done() && steps < max_steps {
-        native::step_noise_into(params, steps, rng, &mut noise);
-        policy_step(state, params, policy, &noise, &mut scratch);
-        steps += 1;
-    }
-    steps
+    policy_drive(state, params, policy, rng, max_steps)
+        .first()
+        .map(|r| r.metrics.steps)
+        .unwrap_or(0)
 }
 
 /// Build the batch policy `params.policies` selects (see
@@ -94,6 +86,7 @@ pub fn build_fleet_policy(
 mod tests {
     use super::*;
     use crate::config::PolicyConfig;
+    use crate::fleet::native;
     use crate::sim::freq::FreqDomain;
     use crate::workload::calibration;
 
@@ -127,6 +120,24 @@ mod tests {
         assert_eq!(nat.cum_energy, gen.cum_energy);
         assert_eq!(nat.cum_regret, gen.cum_regret);
         assert_eq!(nat.switches, gen.switches);
+    }
+
+    /// The drive path's per-env results agree with the fleet-state
+    /// accounting they ride alongside.
+    #[test]
+    fn policy_drive_results_mirror_fleet_state() {
+        let (mut state, params) = setup(&["tealeaf", "clvleaf"]);
+        let mut policy = build_fleet_policy(&params, &FleetHyper::default(), 3);
+        let results =
+            policy_drive(&mut state, &params, policy.as_mut(), &mut Rng::new(3), 2_500);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].metrics.app, "tealeaf");
+        assert_eq!(results[1].metrics.app, "clvleaf");
+        for (e, r) in results.iter().enumerate() {
+            assert_eq!(r.metrics.gpu_energy_kj, state.energy_kj(e), "env {e}");
+            assert_eq!(r.metrics.switches, state.switches[e] as u64, "env {e}");
+            assert_eq!(r.metrics.steps, 2_500);
+        }
     }
 
     #[test]

@@ -38,6 +38,12 @@ pub struct FleetParams {
     /// Joules charged per node-level DVFS transition (paper default:
     /// 0.3 J; `ref.py::SWITCH_ENERGY_J`).
     pub switch_energy_j: f32,
+    /// Decision interval the parameters were derived at, seconds (needed
+    /// to reconstitute wall-clock totals from step counts).
+    pub dt_s: f64,
+    /// Calibrated app name per environment row (provenance for the
+    /// controller tier's per-env metrics and the replay header roster).
+    pub names: Vec<String>,
     /// Policy selector: empty = the classic EnergyUCB fleet (driven by
     /// [`FleetHyper`], the bit-pinned artifact path). One entry = that
     /// policy batched natively where an SoA implementation exists
@@ -68,6 +74,8 @@ impl FleetParams {
             // Clamped to one interval: a stall >= dt would run work backwards.
             switch_stall_frac: (cost.latency_s / dt_s).min(1.0) as f32,
             switch_energy_j: cost.energy_j as f32,
+            dt_s,
+            names: apps.iter().map(|a| a.name.to_string()).collect(),
             policies: Vec::new(),
         };
         for (e, app) in apps.iter().enumerate() {

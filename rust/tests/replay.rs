@@ -42,15 +42,12 @@ fn record(
 ) -> (RunResult, String) {
     let mut policy = pcfg.build(cfg.freqs.k(), cfg.seed);
     policy.reset();
-    let header = ReplayHeader {
-        app: app.name.to_string(),
-        policy: Some(pcfg.clone()),
-        session: cfg.clone(),
-    };
+    let header =
+        ReplayHeader::session(app.name.to_string(), Some(pcfg.clone()), cfg.clone());
     let mut buf: Vec<u8> = Vec::new();
     let mut backend = Recording::new(SimBackend::new(app, cfg), &mut buf, &header).unwrap();
     let controller = Controller::new(app, policy.as_mut(), cfg);
-    let result = drive(controller, &mut backend).unwrap();
+    let result = drive(controller, &mut backend).unwrap().pop().unwrap();
     backend.finish().unwrap();
     (result, String::from_utf8(buf).unwrap())
 }
@@ -63,7 +60,7 @@ fn replay(app: &AppModel, log: &str) -> RunResult {
     let mut policy = header.policy.expect("recorded policy").build(scfg.freqs.k(), scfg.seed);
     policy.reset();
     let controller = Controller::new(app, policy.as_mut(), &scfg);
-    drive(controller, &mut backend).unwrap()
+    drive(controller, &mut backend).unwrap().pop().unwrap()
 }
 
 #[test]
@@ -120,7 +117,7 @@ fn counterfactual_replay_runs_a_different_policy_over_frozen_samples() {
     let scfg = backend.header().session.clone();
     let mut policy = policy_config("rrfreq").build(scfg.freqs.k(), scfg.seed);
     let controller = Controller::new(&app, policy.as_mut(), &scfg);
-    let counterfactual = drive(controller, &mut backend).unwrap();
+    let counterfactual = drive(controller, &mut backend).unwrap().pop().unwrap();
 
     // Decisions (and thus regret accounting) are the new policy's...
     assert_eq!(counterfactual.metrics.policy, "RRFreq");
@@ -146,7 +143,7 @@ fn file_round_trip_matches_in_memory() {
         backend.header().policy.clone().unwrap().build(scfg.freqs.k(), scfg.seed);
     policy.reset();
     let controller = Controller::new(&app, policy.as_mut(), &scfg);
-    let replayed = drive(controller, &mut backend).unwrap();
+    let replayed = drive(controller, &mut backend).unwrap().pop().unwrap();
     assert_eq!(replayed.metrics, original.metrics);
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -164,7 +161,7 @@ fn replaying_under_a_different_seed_policy_diverges() {
     let mut policy = policy_config("egreedy").build(scfg.freqs.k(), scfg.seed + 1);
     policy.reset();
     let controller = Controller::new(&app, policy.as_mut(), &scfg);
-    let other = drive(controller, &mut backend).unwrap();
+    let other = drive(controller, &mut backend).unwrap().pop().unwrap();
     assert_ne!(
         other.metrics.cumulative_regret,
         original.metrics.cumulative_regret
