@@ -1,0 +1,80 @@
+//! Fault-injection policy for liveness testing: panics mid-run.
+//!
+//! [`PanicAfter`] behaves like a static policy (always the top arm) until
+//! a configured decision count, then panics inside `select`. The cluster
+//! tests use it to simulate a node worker dying mid-wave/mid-shard and
+//! assert the leader detects the loss instead of blocking forever. It is
+//! config-buildable (`policy = "panicafter"`, `after = N`) and wire-codable
+//! so subprocess/TCP workers can be crashed deterministically too, but it
+//! is deliberately absent from `energyucb list`: it is a test vehicle, not
+//! a baseline.
+
+use super::Policy;
+
+/// A policy that panics on the first `select` after `after` decisions.
+#[derive(Clone, Debug)]
+pub struct PanicAfter {
+    k: usize,
+    after: u64,
+    t: u64,
+}
+
+impl PanicAfter {
+    pub fn new(k: usize, after: u64) -> Self {
+        PanicAfter { k, after, t: 0 }
+    }
+}
+
+impl Policy for PanicAfter {
+    fn name(&self) -> String {
+        format!("PanicAfter[{}]", self.after)
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select(&mut self, _t: u64) -> usize {
+        self.t += 1;
+        if self.t > self.after {
+            panic!("PanicAfter: injected fault at decision {}", self.t);
+        }
+        self.k - 1
+    }
+
+    fn update(&mut self, _arm: usize, _reward: f64, _progress: f64) {}
+
+    fn reset(&mut self) {
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_top_arm_until_the_injected_fault() {
+        let mut p = PanicAfter::new(9, 3);
+        assert_eq!(p.name(), "PanicAfter[3]");
+        for t in 1..=3 {
+            assert_eq!(p.select(t), 8);
+        }
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.select(4);
+        }))
+        .is_err();
+        assert!(panicked, "decision 4 must panic");
+    }
+
+    #[test]
+    fn reset_rearms_the_fault() {
+        let mut p = PanicAfter::new(9, 2);
+        p.select(1);
+        p.select(2);
+        p.reset();
+        // Post-reset the budget starts over: two more selects are fine.
+        assert_eq!(p.select(1), 8);
+        assert_eq!(p.select(2), 8);
+    }
+}

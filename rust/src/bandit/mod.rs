@@ -10,6 +10,7 @@ pub mod batch;
 pub mod constrained;
 pub mod egreedy;
 pub mod energyucb;
+pub mod fault;
 pub mod oracle;
 pub mod rrfreq;
 pub mod static_;
@@ -24,6 +25,7 @@ pub use batch::{
 pub use constrained::ConstrainedEnergyUcb;
 pub use egreedy::EpsilonGreedy;
 pub use energyucb::{EnergyUcb, EnergyUcbConfig, InitStrategy};
+pub use fault::PanicAfter;
 pub use oracle::Oracle;
 pub use rrfreq::RoundRobin;
 pub use static_::StaticPolicy;

@@ -8,6 +8,9 @@
 //! energyucb fleet [--apps a,b,..] [--batch B] [--steps N] [--native] [--delta D]
 //!                 [--policy NAME[,NAME,...]] [--record-telemetry] [--record-out FILE]
 //! energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config cfg.toml]
+//!                   [--shards K] [--transport in-process|subprocess|tcp]
+//!                   [--listen ADDR] [--shard-timeout SECS] [--workers N]
+//! energyucb cluster-worker [--connect HOST:PORT] [--die-after-events N]
 //! energyucb list
 //! ```
 
@@ -47,6 +50,8 @@ USAGE:
                   [--policy NAME[,NAME,...]] [--record-telemetry] [--record-out FILE]
   energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config FILE]
                     [--seed S] [--heartbeat H] [--csv PATH] [--shards K] [--waves]
+                    [--transport in-process|subprocess|tcp] [--listen ADDR]
+                    [--shard-timeout SECS] [--workers N] [--chaos-kill W[:N]]
   energyucb list
   energyucb help
 
@@ -77,12 +82,20 @@ to a batched JSONL log (default <out_dir>/telemetry_fleet.jsonl) that
 `sweep --replay` evaluates counterfactually.
 
 Cluster runs a simulated multi-node fleet on the work-stealing executor.
-Scenarios: uniform | mixed | staggered | hetero, or a [cluster] config
-file with [[cluster.scenario]] app-mix entries (see configs/
-cluster_mixed.toml). --shards K partitions the fleet across K worker
-subprocesses fed over a JSONL pipe (omit for the in-process pool).
-Reports are byte-identical at any --jobs and --shards; --waves uses the
-legacy fixed-wave scheduler (perf baseline).";
+Scenarios: uniform | mixed | staggered | hetero | chaos, or a [cluster]
+config file with [[cluster.scenario]] app-mix entries (see configs/
+cluster_mixed.toml). --shards K partitions the fleet across K shard
+batches; --transport picks the carrier: in-process (no serialization),
+subprocess (JSONL pipe to cluster-worker children; the --shards default),
+or tcp (the leader listens on --listen, default 127.0.0.1:0, and remote
+`energyucb cluster-worker --connect HOST:PORT` processes dial in —
+--workers N spawns that many local workers for you). A worker that hangs
+or dies is detected within --shard-timeout SECS (default 120) and its
+shard is requeued onto survivors; --chaos-kill W[:N] makes spawned worker
+W die after N event frames to exercise exactly that path. Reports are
+byte-identical at any --jobs, --shards, and transport — including
+requeue runs; --waves uses the legacy fixed-wave scheduler (perf
+baseline).";
 
 /// Entry point used by main(); returns the process exit code.
 pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
@@ -99,8 +112,9 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
         "sweep" => cmd_sweep(rest),
         "fleet" => cmd_fleet(rest),
         "cluster" => cmd_cluster(rest),
-        // Hidden: the shard-worker half of `cluster --shards` (frames on
-        // stdin, events on stdout — see EXPERIMENTS.md §Cluster).
+        // Hidden: the shard-worker half of `cluster --shards` / TCP mode
+        // (frames on stdin or a `--connect` socket — EXPERIMENTS.md
+        // §Cluster).
         "cluster-worker" => cmd_cluster_worker(rest),
         "list" => cmd_list(),
         "help" | "--help" | "-h" => {
@@ -676,11 +690,16 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
 }
 
 fn cmd_cluster(rest: &[String]) -> Result<i32> {
-    use crate::cluster::{ClusterConfig, Leader, ScenarioSchedule};
+    use crate::cluster::{ClusterConfig, Leader, ScenarioSchedule, Tcp, DEFAULT_SHARD_TIMEOUT};
     use crate::config::ClusterFileConfig;
+    use std::process::{Command, Stdio};
+    use std::time::Duration;
 
     let args = Args::parse(rest, &["waves"])?;
-    args.ensure_known(&["nodes", "jobs", "scenario", "config", "seed", "heartbeat", "csv", "shards"])?;
+    args.ensure_known(&[
+        "nodes", "jobs", "scenario", "config", "seed", "heartbeat", "csv", "shards",
+        "transport", "listen", "shard-timeout", "workers", "chaos-kill",
+    ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
             let text =
@@ -699,7 +718,9 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
             bail!("cluster: --scenario and --config are mutually exclusive");
         }
         cfg.schedule = ScenarioSchedule::preset(name, cfg.schedule.seed)
-            .with_context(|| format!("unknown scenario: {name} (uniform|mixed|staggered|hetero)"))?;
+            .with_context(|| {
+                format!("unknown scenario: {name} (uniform|mixed|staggered|hetero|chaos)")
+            })?;
     }
     if let Some(n) = args.get_usize("nodes")? {
         if n == 0 {
@@ -725,9 +746,89 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
         }
         cfg.shards = Some(s);
     }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = Some(t.to_string());
+    }
+    if let Some(l) = args.get("listen") {
+        cfg.listen = Some(l.to_string());
+    }
+    if let Some(s) = args.get_f64("shard-timeout")? {
+        if !(s > 0.0) {
+            bail!("cluster: --shard-timeout must be > 0 seconds");
+        }
+        cfg.shard_timeout_s = Some(s);
+    }
     if args.flag("waves") && cfg.shards.is_some() {
         bail!("cluster: --waves and --shards are mutually exclusive");
     }
+    if args.flag("waves") && cfg.transport.is_some() {
+        bail!("cluster: --waves and --transport are mutually exclusive");
+    }
+
+    // Resolve the shard transport. An explicit name wins (config file or
+    // CLI); otherwise --shards implies the historical subprocess path and
+    // an unsharded run stays on the in-process pool.
+    let transport_name = match cfg.transport.as_deref() {
+        Some(t @ ("in-process" | "subprocess" | "tcp")) => t,
+        Some(other) => {
+            bail!("cluster: unknown transport {other:?} (in-process|subprocess|tcp)")
+        }
+        None => {
+            if cfg.shards.is_some() {
+                "subprocess"
+            } else {
+                "in-process"
+            }
+        }
+    };
+    if matches!(transport_name, "subprocess" | "tcp") && cfg.shards.is_none() {
+        bail!("cluster: --transport {transport_name} requires --shards K");
+    }
+    if transport_name != "tcp" {
+        if cfg.listen.is_some() {
+            bail!("cluster: --listen requires --transport tcp");
+        }
+        if args.get("workers").is_some() {
+            bail!("cluster: --workers requires --transport tcp");
+        }
+        if args.get("chaos-kill").is_some() {
+            bail!("cluster: --chaos-kill requires --transport tcp");
+        }
+    }
+    let workers = match args.get_usize("workers")? {
+        Some(0) => bail!("cluster: --workers must be >= 1"),
+        w => w,
+    };
+    // `--chaos-kill W[:N]`: spawned worker W exits abruptly after writing
+    // its Nth event frame — a scripted mid-stream death for exercising
+    // the leader's requeue path end to end.
+    let chaos_kill: Option<(usize, u64)> = match args.get("chaos-kill") {
+        None => None,
+        Some(spec) => {
+            let (w, n) = spec.split_once(':').unwrap_or((spec, "1"));
+            let w = w
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("cluster: --chaos-kill: bad worker index {w:?}"))?;
+            let n = n
+                .parse::<u64>()
+                .ok()
+                .filter(|&n| n >= 1)
+                .with_context(|| format!("cluster: --chaos-kill: bad event count {n:?}"))?;
+            Some((w, n))
+        }
+    };
+    if let Some((victim, _)) = chaos_kill {
+        match workers {
+            None => bail!("cluster: --chaos-kill needs --workers (it names a spawned worker)"),
+            Some(w) if victim >= w => {
+                bail!("cluster: --chaos-kill worker index {victim} out of range (--workers {w})")
+            }
+            Some(_) => {}
+        }
+    }
+    let shard_timeout = Duration::from_secs_f64(
+        cfg.shard_timeout_s.unwrap_or(DEFAULT_SHARD_TIMEOUT.as_secs_f64()),
+    );
 
     let jobs = cfg.jobs.unwrap_or_else(crate::exec::available_jobs);
     let leader = Leader::new(ClusterConfig {
@@ -735,13 +836,14 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
         policy: cfg.policy.clone(),
         session: SessionCfg::default(),
         heartbeat_steps: cfg.heartbeat_steps,
+        ..ClusterConfig::default()
     });
     let assignments =
         cfg.schedule.assignments(cfg.nodes).map_err(|e| anyhow::anyhow!("cluster: {e}"))?;
     let mode = if args.flag("waves") {
         "fixed waves".to_string()
     } else if let Some(s) = cfg.shards {
-        format!("{s} subprocess shards")
+        format!("{s} {transport_name} shards")
     } else {
         "work-stealing".to_string()
     };
@@ -750,10 +852,60 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
     let report = if args.flag("waves") {
         leader.run_waves(&assignments)?
     } else if let Some(shards) = cfg.shards {
-        // Workers are this same binary re-entered as `cluster-worker`;
-        // assignments reach them only via the JSONL wire protocol.
-        let transport = crate::cluster::Subprocess::current_exe()?;
-        leader.run_sharded(&assignments, shards, &transport)?
+        match transport_name {
+            // Sharded semantics (partition + requeue machinery) on the
+            // in-process pool — the serialization-free reference.
+            "in-process" => {
+                leader.run_sharded(&assignments, shards, &crate::cluster::InProcess)?
+            }
+            // Workers are this same binary re-entered as `cluster-worker`;
+            // assignments reach them only via the JSONL wire protocol.
+            "subprocess" => {
+                let transport =
+                    crate::cluster::Subprocess::current_exe()?.with_timeout(shard_timeout);
+                leader.run_sharded(&assignments, shards, &transport)?
+            }
+            "tcp" => {
+                let transport =
+                    Tcp::listen(cfg.listen.as_deref().unwrap_or("127.0.0.1:0"), shard_timeout)?;
+                let addr = transport.local_addr()?;
+                eprintln!(
+                    "cluster: listening on {addr} \
+                     (join with `energyucb cluster-worker --connect {addr}`)"
+                );
+                // Convenience/chaos harness: spawn local workers that dial
+                // the listener, exactly as remote hosts would.
+                let mut children = Vec::new();
+                if let Some(w) = workers {
+                    let exe =
+                        std::env::current_exe().context("resolving current executable")?;
+                    for i in 0..w {
+                        let mut c = Command::new(&exe);
+                        c.arg("cluster-worker").arg("--connect").arg(addr.to_string());
+                        if let Some((victim, n)) = chaos_kill {
+                            if victim == i {
+                                c.arg("--die-after-events").arg(n.to_string());
+                            }
+                        }
+                        c.stdin(Stdio::null()).stdout(Stdio::null()).stderr(Stdio::inherit());
+                        let child = c
+                            .spawn()
+                            .with_context(|| format!("spawning cluster worker {i}"))?;
+                        children.push(child);
+                    }
+                }
+                let outcome = leader.run_sharded(&assignments, shards, &transport);
+                // Closing the listener and pooled connections EOFs every
+                // worker's socket; they exit cleanly and get reaped before
+                // the run result (success *or* failure) propagates.
+                drop(transport);
+                for mut child in children {
+                    let _ = child.wait();
+                }
+                outcome?
+            }
+            other => unreachable!("validated transport {other}"),
+        }
     } else {
         leader.run(&assignments)?
     };
@@ -776,80 +928,157 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
     Ok(0)
 }
 
-/// The shard-worker half of `cluster --shards` (hidden subcommand).
+/// The shard-worker half of `cluster --shards` / `--transport tcp`
+/// (hidden subcommand).
 ///
-/// Protocol (framed JSONL, one `cluster::wire::Frame` per line):
-/// stdin carries `config`, then one `assign` per node, then `run`;
-/// stdout streams one `event` per `WorkerEvent` as the shard executes,
+/// Protocol (framed JSONL, one `cluster::wire::Frame` per line): the
+/// input carries `config`, then one `assign` per node, then `run`; the
+/// output streams one `event` per `WorkerEvent` as the shard executes,
 /// then a terminal `end` (or `error`) frame. Assignments reach this
 /// process only through the wire — there is no shared state with the
-/// leader, which is what makes the subprocess path a faithful rehearsal
-/// for multi-host transports.
+/// leader.
+///
+/// Two carriers, one grammar: without flags the batch arrives on stdin
+/// and the process serves exactly one shard (the pipe transport);
+/// `--connect HOST:PORT` dials a `cluster --transport tcp` leader and
+/// serves batches over the socket until the leader hangs up.
+/// `--die-after-events N` is a test/chaos hook: the worker exits abruptly
+/// after writing its Nth event frame, simulating a crashed host.
 fn cmd_cluster_worker(rest: &[String]) -> Result<i32> {
+    let args = Args::parse(rest, &[])?;
+    args.ensure_known(&["connect", "die-after-events"])?;
+    if !args.positional().is_empty() {
+        bail!("cluster-worker: unexpected arguments (assignments arrive as frames, not argv)");
+    }
+    let die_after = args.get_u64("die-after-events")?;
+    match args.get("connect") {
+        Some(addr) => {
+            let conn = std::net::TcpStream::connect(addr)
+                .with_context(|| format!("connecting to cluster leader at {addr}"))?;
+            let _ = conn.set_nodelay(true); // frames are small and latency-bound
+            let reader = std::io::BufReader::new(
+                conn.try_clone().context("cloning leader connection")?,
+            );
+            serve_worker_batches(reader, conn, false, die_after)
+        }
+        None => serve_worker_batches(
+            std::io::stdin().lock(),
+            std::io::stdout(),
+            true,
+            die_after,
+        ),
+    }
+}
+
+/// Report a worker-side protocol failure as an `error` frame (and exit
+/// code 1) so the leader can surface the reason verbatim. Write errors
+/// are ignored — if the leader is already gone there is nobody to tell.
+fn worker_fail<W: std::io::Write>(out: &mut W, message: String) -> Result<i32> {
+    use crate::cluster::Frame;
+    let _ = writeln!(out, "{}", Frame::Error { message }.encode_line());
+    let _ = out.flush();
+    Ok(1)
+}
+
+/// The worker's serve loop, generic over the frame carrier: read one
+/// `config`/`assign`*/`run` batch from `input`, run it on the in-process
+/// shard engine, stream `event`* + `end` to `output`, repeat.
+///
+/// `once` encodes the carrier's lifecycle: on stdin (`once = true`) the
+/// process serves exactly one batch, and EOF before `run` is a protocol
+/// error; on a socket (`once = false`) the connection outlives batches,
+/// so EOF at a batch *boundary* is the leader's normal hang-up (clean
+/// exit 0) while EOF inside a partial batch is still an error.
+fn serve_worker_batches<R, W>(
+    mut input: R,
+    mut output: W,
+    once: bool,
+    die_after: Option<u64>,
+) -> Result<i32>
+where
+    R: std::io::BufRead,
+    W: std::io::Write + Send,
+{
     use crate::cluster::{transport, ClusterConfig, Frame, NodeAssignment};
-    use std::io::{BufRead, Write};
 
-    if !rest.is_empty() {
-        bail!("cluster-worker: takes no arguments (frames arrive on stdin)");
-    }
-
-    // Protocol failures are reported as an `error` frame on stdout (and
-    // exit code 1) so the leader can surface the reason verbatim. Writes
-    // go through `writeln!` with the error ignored — `println!` would
-    // panic if the leader is already gone and the pipe is closed.
-    let fail = |message: String| -> Result<i32> {
-        let mut out = std::io::stdout().lock();
-        let _ = writeln!(out, "{}", Frame::Error { message }.encode_line());
-        Ok(1)
-    };
-
-    let mut cfg: Option<ClusterConfig> = None;
-    let mut shard: Vec<NodeAssignment> = Vec::new();
-    let mut launched = false;
-    for line in std::io::stdin().lock().lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        match Frame::decode_line(&line) {
-            Ok(Frame::Config { jobs, heartbeat_steps, policy, session }) => {
-                cfg = Some(ClusterConfig { jobs, policy, session, heartbeat_steps });
+    // Events written across *all* batches, so `--die-after-events N`
+    // counts process lifetime, not per-shard progress.
+    let mut written: u64 = 0;
+    loop {
+        let mut cfg: Option<ClusterConfig> = None;
+        let mut shard: Vec<NodeAssignment> = Vec::new();
+        let mut launched = false;
+        let mut mid_batch = false;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = input.read_line(&mut line).context("reading leader frames")?;
+            if n == 0 {
+                break; // EOF
             }
-            Ok(Frame::Assign(a)) => shard.push(a),
-            Ok(Frame::Run) => {
-                launched = true;
-                break;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
             }
-            Ok(other) => return fail(format!("unexpected frame: {other:?}")),
-            Err(e) => return fail(e.to_string()),
+            match Frame::decode_line(trimmed) {
+                Ok(Frame::Config { jobs, heartbeat_steps, policy, session }) => {
+                    mid_batch = true;
+                    cfg = Some(ClusterConfig {
+                        jobs,
+                        policy,
+                        session,
+                        heartbeat_steps,
+                        ..ClusterConfig::default()
+                    });
+                }
+                Ok(Frame::Assign(a)) => {
+                    mid_batch = true;
+                    shard.push(a);
+                }
+                Ok(Frame::Run) => {
+                    launched = true;
+                    break;
+                }
+                Ok(other) => return worker_fail(&mut output, format!("unexpected frame: {other:?}")),
+                Err(e) => return worker_fail(&mut output, e.to_string()),
+            }
         }
-    }
-    if !launched {
-        return fail("input ended before a run frame".to_string());
-    }
-    let Some(cfg) = cfg else {
-        return fail("no config frame before run".to_string());
-    };
-    if cfg.jobs == 0 {
-        return fail("config jobs must be >= 1".to_string());
-    }
+        if !launched {
+            if once || mid_batch {
+                return worker_fail(&mut output, "input ended before a run frame".to_string());
+            }
+            return Ok(0); // leader hung up between batches: end of service
+        }
+        let Some(cfg) = cfg else {
+            return worker_fail(&mut output, "no config frame before run".to_string());
+        };
+        if cfg.jobs == 0 {
+            return worker_fail(&mut output, "config jobs must be >= 1".to_string());
+        }
 
-    let stdout = std::io::stdout();
-    let streamed = transport::run_shard_with(&cfg, &shard, |ev| {
-        let mut out = stdout.lock();
-        writeln!(out, "{}", Frame::Event(ev).encode_line())?;
-        // Per-line flush so no frame is stranded in the block buffer if
-        // this process dies mid-shard (cheap: <= 50 heartbeats/node).
-        out.flush()?;
-        Ok(())
-    });
-    match streamed {
-        Ok(()) => {
-            let mut out = stdout.lock();
-            writeln!(out, "{}", Frame::End { nodes: shard.len() }.encode_line())?;
-            Ok(0)
+        let streamed = transport::run_shard_with(&cfg, &shard, |ev| {
+            writeln!(output, "{}", Frame::Event(ev).encode_line())?;
+            // Per-line flush so no frame is stranded in a block buffer if
+            // this process dies mid-shard (cheap: <= 50 heartbeats/node).
+            output.flush()?;
+            written += 1;
+            if die_after.is_some_and(|n| written >= n) {
+                // Chaos hook: die like a crashed host — no error frame, no
+                // terminal frame, just a severed stream.
+                std::process::exit(137);
+            }
+            Ok(())
+        });
+        match streamed {
+            Ok(()) => {
+                writeln!(output, "{}", Frame::End { nodes: shard.len() }.encode_line())?;
+                output.flush().context("flushing terminal frame")?;
+                if once {
+                    return Ok(0);
+                }
+            }
+            Err(e) => return worker_fail(&mut output, format!("{e:#}")),
         }
-        Err(e) => fail(format!("{e:#}")),
     }
 }
 
@@ -1119,10 +1348,66 @@ mod tests {
     }
 
     #[test]
+    fn cluster_rejects_inconsistent_transport_flags() {
+        // Remote transports shard by definition.
+        assert!(dispatch(&["cluster", "--transport", "tcp"]).is_err());
+        assert!(dispatch(&["cluster", "--transport", "subprocess"]).is_err());
+        assert!(dispatch(&["cluster", "--transport", "carrier-pigeon", "--shards", "2"]).is_err());
+        // TCP-only knobs without the TCP transport.
+        assert!(dispatch(&["cluster", "--listen", "127.0.0.1:0"]).is_err());
+        assert!(dispatch(&["cluster", "--workers", "2"]).is_err());
+        assert!(dispatch(&["cluster", "--chaos-kill", "0"]).is_err());
+        // Deadlines and worker counts must be positive and well-formed.
+        assert!(dispatch(&["cluster", "--shard-timeout", "0", "--shards", "2"]).is_err());
+        assert!(dispatch(&["cluster", "--shard-timeout", "-3", "--shards", "2"]).is_err());
+        assert!(dispatch(&[
+            "cluster", "--transport", "tcp", "--shards", "2", "--workers", "0",
+        ])
+        .is_err());
+        // chaos-kill: bad specs, missing --workers, out-of-range index.
+        for spec in ["x", "0:0", "0:x"] {
+            assert!(
+                dispatch(&[
+                    "cluster", "--transport", "tcp", "--shards", "2", "--workers", "2",
+                    "--chaos-kill", spec,
+                ])
+                .is_err(),
+                "{spec}"
+            );
+        }
+        assert!(dispatch(&[
+            "cluster", "--transport", "tcp", "--shards", "2", "--chaos-kill", "0",
+        ])
+        .is_err());
+        assert!(dispatch(&[
+            "cluster", "--transport", "tcp", "--shards", "2", "--workers", "2",
+            "--chaos-kill", "2",
+        ])
+        .is_err());
+        // --waves predates transports entirely.
+        assert!(dispatch(&["cluster", "--waves", "--transport", "in-process"]).is_err());
+    }
+
+    #[test]
+    fn cluster_in_process_transport_runs_sharded() {
+        // `--transport in-process --shards K` exercises the shard+requeue
+        // machinery with no serialization — cheap enough for a unit test.
+        let code = dispatch(&[
+            "cluster", "--nodes", "3", "--jobs", "2", "--scenario", "staggered", "--seed", "5",
+            "--transport", "in-process", "--shards", "2",
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
     fn cluster_worker_rejects_cli_arguments() {
-        // The worker takes frames on stdin, never argv (and erroring here
-        // means the test harness never reads from the real stdin).
+        // The worker takes frames on stdin/socket, never argv (and erroring
+        // here means the test harness never reads from the real stdin).
         assert!(dispatch(&["cluster-worker", "--jobs", "2"]).is_err());
+        // Positionals are rejected too, as is dialing a dead leader.
+        assert!(dispatch(&["cluster-worker", "frames.jsonl"]).is_err());
+        assert!(dispatch(&["cluster-worker", "--die-after-events", "zero"]).is_err());
     }
 
     #[test]

@@ -81,6 +81,10 @@ pub struct ClusterConfig {
     pub session: SessionCfg,
     /// Decisions between progress heartbeats.
     pub heartbeat_steps: u64,
+    /// How many requeue rounds [`Leader::run_sharded`] may spend
+    /// re-running failed shards on surviving backends before giving up
+    /// (0 = fail on the first shard loss).
+    pub shard_retries: usize,
 }
 
 impl Default for ClusterConfig {
@@ -90,6 +94,7 @@ impl Default for ClusterConfig {
             policy: PolicyConfig::EnergyUcb(crate::bandit::energyucb::EnergyUcbConfig::default()),
             session: SessionCfg::default(),
             heartbeat_steps: 1_000,
+            shard_retries: 2,
         }
     }
 }
@@ -232,13 +237,16 @@ impl Leader {
     }
 
     /// Round-robin assignment of `nodes` over `apps`, seeds derived from
-    /// `seed0 + node`. Infallible like the pre-scenario API — app names
-    /// are validated when the leader runs, not here; richer mixes come
-    /// from [`super::ScenarioSchedule`].
+    /// `seed0 + node` (wrapping deliberately: seeds near `u64::MAX` wrap
+    /// to the low range instead of panicking in debug builds — every
+    /// seed in a batch stays distinct as long as `nodes <= 2^64`).
+    /// Infallible like the pre-scenario API — app names are validated
+    /// when the leader runs, not here; richer mixes come from
+    /// [`super::ScenarioSchedule`].
     pub fn assign_round_robin(apps: &[&str], nodes: usize, seed0: u64) -> Vec<NodeAssignment> {
         assert!(!apps.is_empty(), "assign_round_robin: no apps");
         (0..nodes)
-            .map(|n| NodeAssignment::new(n, apps[n % apps.len()], seed0 + n as u64))
+            .map(|n| NodeAssignment::new(n, apps[n % apps.len()], seed0.wrapping_add(n as u64)))
             .collect()
     }
 
@@ -258,6 +266,16 @@ impl Leader {
     /// the extended determinism contract (EXPERIMENTS.md §Cluster):
     /// heartbeats are an order-independent sum, and the merge fixes the
     /// floating-point accumulation order by sorting on node id.
+    ///
+    /// Fault tolerance: when a shard's transport fails (worker death,
+    /// socket drop, read deadline), the whole shard's assignments are
+    /// requeued and re-partitioned over whatever capacity the transport
+    /// still reports (surviving TCP workers; unchanged for process-local
+    /// backends), up to [`ClusterConfig::shard_retries`] extra rounds.
+    /// A failed shard contributes *no* events — its partial stream is
+    /// discarded wholesale and every one of its nodes re-runs from its
+    /// seed — so a recovered run merges the exact event multiset of a
+    /// failure-free one and the report stays byte-identical.
     pub fn run_sharded(
         &self,
         assignments: &[NodeAssignment],
@@ -276,40 +294,104 @@ impl Leader {
         // The resolved per-node frequency domains also feed the merge's
         // saved-energy baseline (heterogeneous domains are expressible).
         let domains = node_domains(&resolve_plans(&self.cfg, assignments)?);
-        let parts = partition(assignments, shards);
-        // Divide the worker-thread budget across the concurrent shards
-        // (ceiling, so every shard keeps >= 1 thread): K shards each
-        // running the full `jobs`-wide pool would oversubscribe the
-        // machine K-fold. Harmless to the report — it is byte-identical
-        // at any thread count.
-        let per_shard = parts.len().max(1);
-        let shard_cfg = ClusterConfig {
-            jobs: (self.cfg.jobs + per_shard - 1) / per_shard,
-            ..self.cfg.clone()
-        };
-        let outcomes: Vec<anyhow::Result<Vec<WorkerEvent>>> = std::thread::scope(|scope| {
-            let shard_cfg = &shard_cfg;
-            let handles: Vec<_> = parts
-                .iter()
-                .map(|part| scope.spawn(move || transport.run_shard(shard_cfg, part)))
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join()
-                        .unwrap_or_else(|_| Err(anyhow::anyhow!("shard thread panicked")))
-                })
-                .collect()
-        });
         let mut telemetry = Recorder::new();
         let mut results = Vec::with_capacity(assignments.len());
-        for outcome in outcomes {
-            for ev in outcome? {
-                record_event(&mut telemetry, &ev);
-                if let WorkerEvent::Done { result, .. } = ev {
-                    results.push(result);
+        let mut pending: Vec<NodeAssignment> = assignments.to_vec();
+        let mut failures: Vec<String> = Vec::new();
+        let mut round = 0usize;
+        while !pending.is_empty() {
+            // Round 0 fans out at the requested width regardless of what
+            // `capacity()` says — TCP workers connect asynchronously, so
+            // an early poll would undercount them; the per-shard accept
+            // deadline is the authoritative "did anyone show up" check.
+            // Requeue rounds shrink to the surviving capacity instead of
+            // re-offering work to a width that just lost members.
+            let want = if round == 0 {
+                shards
+            } else {
+                match transport.capacity() {
+                    Some(0) => anyhow::bail!(
+                        "no surviving {} workers to requeue {} node(s) onto (after: {})",
+                        transport.name(),
+                        pending.len(),
+                        failures.join("; ")
+                    ),
+                    Some(cap) => shards.min(cap),
+                    None => shards,
                 }
+            };
+            let requeue = {
+                let parts = partition(&pending, want);
+                // Divide the worker-thread budget across the concurrent
+                // shards (ceiling, so every shard keeps >= 1 thread): K
+                // shards each running the full `jobs`-wide pool would
+                // oversubscribe the machine K-fold. Harmless to the
+                // report — it is byte-identical at any thread count.
+                let per_shard = parts.len().max(1);
+                let shard_cfg = ClusterConfig {
+                    jobs: (self.cfg.jobs + per_shard - 1) / per_shard,
+                    ..self.cfg.clone()
+                };
+                let outcomes: Vec<anyhow::Result<Vec<WorkerEvent>>> =
+                    std::thread::scope(|scope| {
+                        let shard_cfg = &shard_cfg;
+                        let handles: Vec<_> = parts
+                            .iter()
+                            .map(|part| scope.spawn(move || transport.run_shard(shard_cfg, part)))
+                            .collect();
+                        handles
+                            .into_iter()
+                            .map(|h| {
+                                h.join().unwrap_or_else(|_| {
+                                    Err(anyhow::anyhow!("shard thread panicked"))
+                                })
+                            })
+                            .collect()
+                    });
+                let mut requeue: Vec<NodeAssignment> = Vec::new();
+                for (i, outcome) in outcomes.into_iter().enumerate() {
+                    match outcome {
+                        Ok(events) => {
+                            for ev in events {
+                                record_event(&mut telemetry, &ev);
+                                if let WorkerEvent::Done { result, .. } = ev {
+                                    results.push(result);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // Discard the failed shard's stream wholesale
+                            // (run_shard returned no events) and requeue
+                            // every node it owned.
+                            telemetry.counter("cluster.shard_failures").inc();
+                            telemetry
+                                .counter("cluster.requeued_nodes")
+                                .add(parts[i].len() as u64);
+                            failures.push(format!("round {round} shard {i}: {e:#}"));
+                            requeue.extend(parts[i].iter().cloned());
+                        }
+                    }
+                }
+                requeue
+            };
+            if requeue.is_empty() {
+                break;
             }
+            if round >= self.cfg.shard_retries {
+                anyhow::bail!(
+                    "{} node(s) still unplaced after {} requeue round(s): {}",
+                    requeue.len(),
+                    round,
+                    failures.join("; ")
+                );
+            }
+            eprintln!(
+                "cluster: requeueing {} node(s) after shard failure ({})",
+                requeue.len(),
+                failures.last().map(String::as_str).unwrap_or("?")
+            );
+            pending = requeue;
+            round += 1;
         }
         if results.len() != assignments.len() {
             anyhow::bail!(
@@ -333,12 +415,20 @@ impl Leader {
         // previously searched the assignment list per Done event: O(n^2)).
         let slot_of: BTreeMap<usize, usize> =
             plans.iter().enumerate().map(|(i, p)| (p.node, i)).collect();
-        let (tx, rx) = mpsc::sync_channel::<WorkerEvent>(256);
         let mut results: Vec<Option<NodeResult>> = (0..plans.len()).map(|_| None).collect();
         let mut telemetry = Recorder::new();
 
         for wave in plans.chunks(self.cfg.jobs) {
             std::thread::scope(|scope| -> anyhow::Result<()> {
+                // One channel per wave, and the leader's own sender is
+                // dropped before draining: once every worker thread has
+                // finished (or unwound from a panic, dropping its clone),
+                // the channel closes and `recv` returns Err instead of
+                // blocking forever. The previous wave-spanning channel
+                // kept a live leader `tx`, so one panicked worker — gone
+                // without its Done — deadlocked the
+                // `while done_in_wave < wave.len()` drain.
+                let (tx, rx) = mpsc::sync_channel::<WorkerEvent>(256);
                 let mut handles = Vec::new();
                 for p in wave {
                     let tx = tx.clone();
@@ -350,28 +440,33 @@ impl Leader {
                         worker::run_node(p.node, &p.app, policy, &p.session, hb, &tx)
                     }));
                 }
-                // Drain while this wave runs: collect exactly wave-many
-                // Done events (plus any progress chatter).
+                drop(tx);
+                // Drain while this wave runs: the channel closes when the
+                // last worker exits, panicked or not.
                 let mut done_in_wave = 0;
-                while done_in_wave < wave.len() {
-                    match rx.recv() {
-                        Ok(ev) => {
-                            record_event(&mut telemetry, &ev);
-                            if let WorkerEvent::Done { node, result } = ev {
-                                results[slot_of[&node]] = Some(result);
-                                done_in_wave += 1;
-                            }
-                        }
-                        Err(_) => anyhow::bail!("worker channel closed early"),
+                for ev in rx {
+                    record_event(&mut telemetry, &ev);
+                    if let WorkerEvent::Done { node, result } = ev {
+                        results[slot_of[&node]] = Some(result);
+                        done_in_wave += 1;
                     }
                 }
+                let mut panicked = 0;
                 for h in handles {
-                    h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+                    if h.join().is_err() {
+                        panicked += 1;
+                    }
+                }
+                if panicked > 0 || done_in_wave < wave.len() {
+                    anyhow::bail!(
+                        "wave worker panicked before completing its node \
+                         ({done_in_wave}/{} done, {panicked} panicked)",
+                        wave.len()
+                    );
                 }
                 Ok(())
             })?;
         }
-        drop(tx);
 
         let results: Vec<NodeResult> =
             results.into_iter().map(|r| r.expect("all nodes done")).collect();
@@ -445,6 +540,66 @@ mod tests {
         assert_eq!(a[1].app, "clvleaf");
         assert_eq!(a[4].app, "tealeaf");
         assert_eq!(a[3].seed, 103);
+    }
+
+    #[test]
+    fn assignment_seeds_wrap_at_the_u64_boundary() {
+        // seed0 near u64::MAX: `seed0 + n` used to panic in debug builds
+        // and wrap silently in release; now it wraps deliberately and the
+        // seeds stay distinct across the boundary.
+        let a = Leader::assign_round_robin(&["tealeaf"], 3, u64::MAX - 1);
+        let seeds: Vec<u64> = a.iter().map(|x| x.seed).collect();
+        assert_eq!(seeds, vec![u64::MAX - 1, u64::MAX, 0]);
+    }
+
+    #[test]
+    fn wave_worker_panic_is_a_clean_error_not_a_deadlock() {
+        // One node's policy panics mid-run: the wave drain must observe
+        // the closed channel and bail instead of blocking forever on a
+        // Done event that will never come (the leader's own tx used to
+        // keep the channel open).
+        let leader = Leader::new(ClusterConfig {
+            jobs: 3,
+            session: SessionCfg { max_steps: 200, ..SessionCfg::default() },
+            ..ClusterConfig::default()
+        });
+        let mut a = Leader::assign_round_robin(&["tealeaf", "clvleaf"], 3, 5);
+        a[1].policy = Some(PolicyConfig::PanicAfter { after: 5 });
+        let err = leader.run_waves(&a).unwrap_err();
+        assert!(format!("{err:#}").contains("panicked"), "{err:#}");
+    }
+
+    #[test]
+    fn sharded_run_surfaces_in_process_panics_after_retries() {
+        // An in-process shard whose policy panics fails deterministically
+        // every requeue round; the leader must give up with a clean error
+        // (bounded retries), never hang.
+        let leader = Leader::new(ClusterConfig {
+            jobs: 2,
+            shard_retries: 1,
+            session: SessionCfg { max_steps: 200, ..SessionCfg::default() },
+            ..ClusterConfig::default()
+        });
+        let mut a = Leader::assign_round_robin(&["tealeaf"], 4, 5);
+        a[2].policy = Some(PolicyConfig::PanicAfter { after: 5 });
+        let err = leader.run_sharded(&a, 2, &InProcess).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("requeue round"), "{msg}");
+        assert!(msg.contains("panicked"), "{msg}");
+    }
+
+    #[test]
+    fn sharded_run_requeues_nothing_on_success() {
+        // shard_retries = 0 must not affect healthy runs.
+        let leader = Leader::new(ClusterConfig {
+            jobs: 2,
+            shard_retries: 0,
+            session: SessionCfg { max_steps: 300, ..SessionCfg::default() },
+            ..ClusterConfig::default()
+        });
+        let a = Leader::assign_round_robin(&["tealeaf"], 3, 9);
+        let report = leader.run_sharded(&a, 2, &InProcess).unwrap();
+        assert_eq!(report.nodes.len(), 3);
     }
 
     #[test]

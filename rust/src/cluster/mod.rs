@@ -16,12 +16,14 @@
 //! round-robin: weighted app mixes, staggered arrivals, per-app policy
 //! overrides, and heterogeneous per-node switch costs.
 //!
-//! Beyond one process, the leader shards the fleet across
-//! `energyucb cluster-worker` subprocesses: [`transport`] abstracts *how*
-//! a contiguous shard executes (in-process pool vs framed-JSONL pipe to a
-//! worker process), [`wire`] is the serde-free codec those frames ride
-//! on, and the merged report stays byte-identical across `--shards` ×
-//! `--jobs` × transport (EXPERIMENTS.md §Cluster).
+//! Beyond one process, the leader shards the fleet across worker
+//! processes and hosts: [`transport`] abstracts *how* a contiguous shard
+//! executes (in-process pool, framed-JSONL pipe to a subprocess, or TCP
+//! socket to a remote `cluster-worker --connect`), [`wire`] is the
+//! serde-free codec those frames ride on, and the merged report stays
+//! byte-identical across `--shards` × `--jobs` × transport — including
+//! runs where a worker dies mid-shard and the leader requeues its
+//! assignments onto survivors (EXPERIMENTS.md §Cluster).
 
 pub mod leader;
 pub mod schedule;
@@ -31,6 +33,6 @@ pub mod worker;
 
 pub use leader::{ClusterConfig, ClusterReport, Leader, NodeAssignment};
 pub use schedule::{AppSlot, Arrivals, Pick, ScenarioSchedule};
-pub use transport::{InProcess, Subprocess, Transport};
+pub use transport::{InProcess, Subprocess, Tcp, Transport, DEFAULT_SHARD_TIMEOUT};
 pub use wire::{Frame, WireCodec, WireError};
 pub use worker::{NodeResult, WorkerEvent};

@@ -94,7 +94,13 @@ impl ScenarioSchedule {
     ///   (compute-bound lbm pinned at its known-best static frequency);
     /// * `staggered` — 4 arrival phases with 25–100 % step budgets;
     /// * `hetero` — per-node switch cost drawn from 1×/3×/6× the paper's
-    ///   measured transition cost.
+    ///   measured transition cost;
+    /// * `chaos` — the kill-under-load scenario: the mixed weighted app
+    ///   set under 3-phase staggered arrivals (short, bounded runs) on
+    ///   heterogeneous switch costs. The schedule itself is ordinary —
+    ///   the chaos comes from the harness killing workers mid-run
+    ///   (`energyucb cluster --chaos-kill`) while the report must stay
+    ///   byte-identical to a failure-free run.
     pub fn preset(name: &str, seed: u64) -> Option<ScenarioSchedule> {
         let mut s = ScenarioSchedule::round_robin(&PRESET_APPS, seed);
         s.name = name.to_string();
@@ -118,6 +124,31 @@ impl ScenarioSchedule {
                 s.arrivals = Arrivals::Staggered { phases: 4, min_frac: 0.25, base_steps: 6_000 };
             }
             "hetero" => {
+                let base = SwitchCost::default();
+                s.switch_costs = (0..3)
+                    .map(|i| {
+                        let m = (1 << i) as f64 + i as f64; // 1x, 3x, 6x
+                        SwitchCost { latency_s: base.latency_s * m, energy_j: base.energy_j * m }
+                    })
+                    .collect();
+            }
+            "chaos" => {
+                s.pick = Pick::Weighted;
+                s.slots = vec![
+                    AppSlot { weight: 3.0, ..AppSlot::new("tealeaf") },
+                    AppSlot { weight: 2.0, ..AppSlot::new("clvleaf") },
+                    AppSlot {
+                        weight: 1.0,
+                        policy: Some(PolicyConfig::Static { arm: 7 }),
+                        ..AppSlot::new("lbm")
+                    },
+                    AppSlot { weight: 1.0, ..AppSlot::new("miniswp") },
+                    AppSlot { weight: 1.0, ..AppSlot::new("weather") },
+                ];
+                // Short staggered budgets bound the wall-clock of every
+                // requeue round — a killed worker's shard re-runs in
+                // seconds, so chaos tests stay fast.
+                s.arrivals = Arrivals::Staggered { phases: 3, min_frac: 0.3, base_steps: 5_000 };
                 let base = SwitchCost::default();
                 s.switch_costs = (0..3)
                     .map(|i| {
@@ -197,7 +228,9 @@ impl ScenarioSchedule {
                 NodeAssignment {
                     node: n,
                     app: slot.app.clone(),
-                    seed: self.seed + n as u64,
+                    // Wrapping deliberately: boundary seeds must not panic
+                    // in debug builds (mirrors `Leader::assign_round_robin`).
+                    seed: self.seed.wrapping_add(n as u64),
                     max_steps,
                     policy: slot.policy.clone(),
                     switch_cost,
@@ -230,7 +263,7 @@ mod tests {
 
     #[test]
     fn all_presets_generate_valid_assignments() {
-        for name in ["uniform", "mixed", "staggered", "hetero"] {
+        for name in ["uniform", "mixed", "staggered", "hetero", "chaos"] {
             let s = ScenarioSchedule::preset(name, 7).unwrap();
             let a = s.assignments(32).unwrap();
             assert_eq!(a.len(), 32, "{name}");
@@ -281,6 +314,29 @@ mod tests {
             seen.insert((c.latency_s * 1e9) as u64);
         }
         assert_eq!(seen.len(), 3, "all three cost tiers should appear in 64 draws");
+    }
+
+    #[test]
+    fn boundary_seeds_wrap_instead_of_panicking() {
+        let s = ScenarioSchedule::round_robin(&["tealeaf"], u64::MAX);
+        let a = s.assignments(3).unwrap();
+        let seeds: Vec<u64> = a.iter().map(|x| x.seed).collect();
+        assert_eq!(seeds, vec![u64::MAX, 0, 1]);
+    }
+
+    #[test]
+    fn chaos_preset_is_short_mixed_and_hetero() {
+        let s = ScenarioSchedule::preset("chaos", 3).unwrap();
+        assert_eq!(s.pick, Pick::Weighted);
+        assert_eq!(
+            s.arrivals,
+            Arrivals::Staggered { phases: 3, min_frac: 0.3, base_steps: 5_000 }
+        );
+        assert_eq!(s.switch_costs.len(), 3);
+        let a = s.assignments(9).unwrap();
+        // Every node is budget-capped (requeue rounds stay cheap) and
+        // carries a drawn switch cost.
+        assert!(a.iter().all(|x| x.max_steps.unwrap() <= 5_000 && x.switch_cost.is_some()));
     }
 
     #[test]

@@ -13,13 +13,27 @@
 //!   which runs it with the *same* in-process engine
 //!   ([`run_shard_with`]) and streams events back on stdout. One
 //!   subprocess per shard ≙ one controller host per node group — the
-//!   process-isolation step toward multi-host fleets (a TCP backend
-//!   slots in as a third `Transport` impl; see ROADMAP.md).
+//!   process-isolation step toward multi-host fleets.
+//! * [`Tcp`] — the multi-host backend: the leader listens, remote
+//!   `energyucb cluster-worker --connect HOST:PORT` processes dial in,
+//!   and each shard is one `config`/`assign`*/`run` batch down a
+//!   connection with the `event`*/`end` stream coming back — the exact
+//!   frame grammar of the pipe transport, over a socket. Connections are
+//!   pooled and reused across batches; a connection whose worker dies or
+//!   stalls (read deadline) is dropped, and the leader's requeue logic
+//!   re-runs the shard on survivors.
+//!
+//! Every read path carries a deadline: a hung or killed worker surfaces
+//! as an error within `timeout`, never as a leader that blocks forever.
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Command, Stdio};
 use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
@@ -28,6 +42,12 @@ use crate::exec::run_indexed;
 use super::leader::{resolve_plans, ClusterConfig, NodeAssignment};
 use super::wire::Frame;
 use super::worker::{self, WorkerEvent};
+
+/// Default per-shard read deadline: how long the leader waits for the
+/// *next* frame from a worker before declaring it dead. Heartbeats arrive
+/// every `heartbeat_steps` decisions, so any live shard beats far inside
+/// this window.
+pub const DEFAULT_SHARD_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// A shard execution backend. `Sync` because the leader drives all
 /// shards concurrently through a shared reference.
@@ -42,6 +62,15 @@ pub trait Transport: Sync {
         cfg: &ClusterConfig,
         shard: &[NodeAssignment],
     ) -> anyhow::Result<Vec<WorkerEvent>>;
+
+    /// How many shards this backend can still serve concurrently, if the
+    /// backend tracks membership (`None` = effectively unbounded —
+    /// process-local backends mint workers on demand). The leader's
+    /// requeue path consults this so it stops re-offering work once every
+    /// remote worker is gone.
+    fn capacity(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Deterministic contiguous partition: `shards` chunks whose sizes differ
@@ -138,6 +167,11 @@ impl Transport for InProcess {
 #[derive(Clone, Debug)]
 pub struct Subprocess {
     program: PathBuf,
+    /// Per-frame read deadline (see [`DEFAULT_SHARD_TIMEOUT`]).
+    timeout: Duration,
+    /// Extra `cluster-worker` argv (test hook: fault injection flags like
+    /// `--die-after-events N` ride here).
+    worker_args: Vec<String>,
 }
 
 impl Subprocess {
@@ -145,14 +179,35 @@ impl Subprocess {
     /// CLI path, where leader and worker are the same binary.
     pub fn current_exe() -> anyhow::Result<Subprocess> {
         let program = std::env::current_exe().context("resolving current executable")?;
-        Ok(Subprocess { program })
+        Ok(Subprocess { program, timeout: DEFAULT_SHARD_TIMEOUT, worker_args: Vec::new() })
     }
 
     /// Workers spawn from an explicit binary (tests pass the cargo-built
     /// CLI via `env!("CARGO_BIN_EXE_energyucb")` — `current_exe()` inside
     /// a test harness would re-enter the *test* binary).
     pub fn with_program(program: impl Into<PathBuf>) -> Subprocess {
-        Subprocess { program: program.into() }
+        Subprocess {
+            program: program.into(),
+            timeout: DEFAULT_SHARD_TIMEOUT,
+            worker_args: Vec::new(),
+        }
+    }
+
+    /// Override the per-frame read deadline.
+    pub fn with_timeout(mut self, timeout: Duration) -> Subprocess {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Append extra argv to every spawned `cluster-worker` (fault
+    /// injection in tests).
+    pub fn with_worker_args<I, S>(mut self, args: I) -> Subprocess
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.worker_args = args.into_iter().map(Into::into).collect();
+        self
     }
 }
 
@@ -168,12 +223,13 @@ impl Transport for Subprocess {
     ) -> anyhow::Result<Vec<WorkerEvent>> {
         let mut child = Command::new(&self.program)
             .arg("cluster-worker")
+            .args(&self.worker_args)
             .stdin(Stdio::piped())
             .stdout(Stdio::piped())
             .stderr(Stdio::inherit())
             .spawn()
             .with_context(|| format!("spawning cluster-worker from {}", self.program.display()))?;
-        let outcome = drive_worker(&mut child, cfg, shard);
+        let outcome = drive_worker(&mut child, cfg, shard, self.timeout);
         if outcome.is_err() {
             // Reap on every failure path: a bailed-on worker would
             // otherwise keep simulating its whole shard in the
@@ -191,12 +247,15 @@ impl Transport for Subprocess {
 }
 
 /// The leader half of one worker conversation: feed the batch, then
-/// collect the event stream and check its terminal frame. On any error
-/// the caller kills and reaps the child.
+/// collect the event stream and check its terminal frame. Every read
+/// carries the `timeout` deadline — a worker that stops emitting frames
+/// (hung, SIGSTOPped, wedged) is declared dead instead of blocking the
+/// leader forever. On any error the caller kills and reaps the child.
 fn drive_worker(
     child: &mut std::process::Child,
     cfg: &ClusterConfig,
     shard: &[NodeAssignment],
+    timeout: Duration,
 ) -> anyhow::Result<Vec<WorkerEvent>> {
     if let Err(feed_err) = feed_worker(child, cfg, shard) {
         // A worker that rejects an early frame writes an `error` frame and
@@ -216,11 +275,31 @@ fn drive_worker(
         return Err(feed_err);
     }
 
-    let reader = BufReader::new(child.stdout.take().expect("piped stdout"));
+    // Pipe reads cannot time out directly, so a detached reader thread
+    // pumps lines into a channel and the deadline lives on `recv_timeout`.
+    // On timeout the caller kills the child, which EOFs the pipe and lets
+    // the reader thread exit; the dropped receiver unblocks any pending
+    // send the same way.
+    let out = child.stdout.take().expect("piped stdout");
+    let (ltx, lrx) = mpsc::sync_channel::<std::io::Result<String>>(256);
+    std::thread::spawn(move || {
+        for line in BufReader::new(out).lines() {
+            if ltx.send(line).is_err() {
+                return; // leader gave up on this worker
+            }
+        }
+    });
     let mut events = Vec::new();
     let mut end_nodes: Option<usize> = None;
-    for line in reader.lines() {
-        let line = line.context("reading cluster-worker stdout")?;
+    loop {
+        let line = match lrx.recv_timeout(timeout) {
+            Ok(Ok(line)) => line,
+            Ok(Err(e)) => return Err(e).context("reading cluster-worker stdout"),
+            Err(mpsc::RecvTimeoutError::Timeout) => anyhow::bail!(
+                "cluster-worker emitted no frame within {timeout:?} (hung or stalled worker)"
+            ),
+            Err(mpsc::RecvTimeoutError::Disconnected) => break, // EOF
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -244,17 +323,14 @@ fn drive_worker(
     }
 }
 
-/// Feed the whole batch, then close stdin (the `BufWriter` and pipe drop
-/// on return — including the error path, which is what lets the caller
-/// then read the worker's stream to EOF). No deadlock window: the worker
-/// writes nothing before it has consumed up to `run`.
-fn feed_worker(
-    child: &mut std::process::Child,
+/// Write one shard batch — `config`, `assign`*, `run` — and flush. The
+/// single writer both the pipe and the socket transports use, so the
+/// on-wire bytes are identical per shard regardless of carrier.
+fn write_batch<W: Write>(
+    w: &mut W,
     cfg: &ClusterConfig,
     shard: &[NodeAssignment],
 ) -> anyhow::Result<()> {
-    let stdin = child.stdin.take().expect("piped stdin");
-    let mut w = BufWriter::new(stdin);
     let config = Frame::Config {
         jobs: cfg.jobs,
         heartbeat_steps: cfg.heartbeat_steps,
@@ -267,8 +343,183 @@ fn feed_worker(
             .context("writing assignment frame")?;
     }
     writeln!(w, "{}", Frame::Run.encode_line()).context("writing run frame")?;
-    w.flush().context("flushing worker stdin")?;
+    w.flush().context("flushing shard batch")?;
     Ok(())
+}
+
+/// Feed the whole batch, then close stdin (the `BufWriter` and pipe drop
+/// on return — including the error path, which is what lets the caller
+/// then read the worker's stream to EOF). No deadlock window: the worker
+/// writes nothing before it has consumed up to `run`.
+fn feed_worker(
+    child: &mut std::process::Child,
+    cfg: &ClusterConfig,
+    shard: &[NodeAssignment],
+) -> anyhow::Result<()> {
+    let stdin = child.stdin.take().expect("piped stdin");
+    write_batch(&mut BufWriter::new(stdin), cfg, shard)
+}
+
+/// The multi-host transport: the leader listens, remote `energyucb
+/// cluster-worker --connect HOST:PORT` processes dial in, and each shard
+/// rides one connection as a `config`/`assign`*/`run` batch with the
+/// `event`*/`end` stream coming back — the pipe transport's frame grammar
+/// verbatim, over a socket.
+///
+/// Membership is implicit: a connection *is* a ready worker. Connections
+/// are pooled in [`Tcp::run_shard`]'s success path and reused for later
+/// batches (one worker can serve many shards); a connection whose worker
+/// errors, dies (EOF mid-batch), or stalls past the read deadline is
+/// dropped and never reused — the leader's requeue logic re-runs the
+/// shard on survivors, and [`Transport::capacity`] reports how many
+/// remain.
+pub struct Tcp {
+    listener: TcpListener,
+    /// Connected workers with no batch in flight.
+    idle: Mutex<VecDeque<TcpStream>>,
+    timeout: Duration,
+}
+
+impl Tcp {
+    /// Bind the leader-side listener. `addr` is a `HOST:PORT` bind
+    /// address (`127.0.0.1:0` for an ephemeral test port — read it back
+    /// with [`local_addr`](Self::local_addr)). `timeout` bounds every
+    /// wait: accepting a worker for a shard, and each frame read.
+    pub fn listen(addr: &str, timeout: Duration) -> anyhow::Result<Tcp> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding cluster TCP listener on {addr}"))?;
+        // Nonblocking so accept polls can carry a deadline; per-connection
+        // read timeouts are set when a shard is driven.
+        listener.set_nonblocking(true).context("setting listener nonblocking")?;
+        Ok(Tcp { listener, idle: Mutex::new(VecDeque::new()), timeout })
+    }
+
+    /// The bound address (workers dial this).
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        self.listener.local_addr().context("resolving cluster TCP listener address")
+    }
+
+    /// Sweep any workers that connected since the last look into the idle
+    /// pool (accept never blocks — the listener is nonblocking).
+    fn drain_pending_accepts(&self) {
+        let mut idle = self.idle.lock().unwrap();
+        while let Ok((stream, _peer)) = self.listener.accept() {
+            let _ = stream.set_nodelay(true); // frames are small and latency-bound
+            idle.push_back(stream);
+        }
+    }
+
+    /// A connection to run one shard on: a pooled idle worker if any,
+    /// else poll-accept until one dials in or the deadline passes.
+    fn take_conn(&self) -> anyhow::Result<TcpStream> {
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            self.drain_pending_accepts();
+            if let Some(conn) = self.idle.lock().unwrap().pop_front() {
+                return Ok(conn);
+            }
+            if Instant::now() >= deadline {
+                anyhow::bail!(
+                    "no cluster-worker connected within {:?} (start workers with \
+                     `energyucb cluster-worker --connect HOST:PORT`)",
+                    self.timeout
+                );
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+impl Transport for Tcp {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn capacity(&self) -> Option<usize> {
+        self.drain_pending_accepts();
+        Some(self.idle.lock().unwrap().len())
+    }
+
+    fn run_shard(
+        &self,
+        cfg: &ClusterConfig,
+        shard: &[NodeAssignment],
+    ) -> anyhow::Result<Vec<WorkerEvent>> {
+        let conn = self.take_conn()?;
+        match drive_tcp_worker(&conn, cfg, shard, self.timeout) {
+            Ok(events) => {
+                // Healthy conversation: the worker is ready for another
+                // batch — return it to the pool.
+                self.idle.lock().unwrap().push_back(conn);
+                Ok(events)
+            }
+            // Any failure drops `conn` (closing the socket): a worker that
+            // errored, died, or stalled is never trusted with more work.
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// One shard conversation over an established worker connection: write
+/// the batch, then read `event`* up to the in-stream terminal (`end` or
+/// `error`). Unlike the pipe transport, EOF is *not* a clean terminal —
+/// the connection outlives the batch, so a closed socket mid-batch means
+/// the worker died. Every read carries the deadline via
+/// `set_read_timeout`.
+fn drive_tcp_worker(
+    conn: &TcpStream,
+    cfg: &ClusterConfig,
+    shard: &[NodeAssignment],
+    timeout: Duration,
+) -> anyhow::Result<Vec<WorkerEvent>> {
+    conn.set_read_timeout(Some(timeout)).context("setting socket read deadline")?;
+    let mut writer = BufWriter::new(conn.try_clone().context("cloning worker socket")?);
+    write_batch(&mut writer, cfg, shard)?;
+    drop(writer);
+    let mut reader = BufReader::new(conn.try_clone().context("cloning worker socket")?);
+    let mut events = Vec::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                anyhow::bail!(
+                    "cluster-worker stream ended without a terminal frame \
+                     (worker connection closed mid-batch)"
+                );
+            }
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                anyhow::bail!(
+                    "cluster-worker sent no frame within {timeout:?} (hung or stalled worker)"
+                );
+            }
+            Err(e) => return Err(e).context("reading cluster-worker socket"),
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match Frame::decode_line(trimmed)
+            .with_context(|| format!("bad frame from cluster-worker: {trimmed}"))?
+        {
+            Frame::Event(ev) => events.push(ev),
+            Frame::End { nodes } if nodes == shard.len() => return Ok(events),
+            Frame::End { nodes } => anyhow::bail!(
+                "shard integrity: worker reported {nodes} nodes, expected {}",
+                shard.len()
+            ),
+            Frame::Error { message } => {
+                anyhow::bail!("cluster-worker shard failed: {message}");
+            }
+            other => anyhow::bail!("unexpected frame from cluster-worker: {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -331,5 +582,35 @@ mod tests {
         let t = Subprocess::with_program("/nonexistent/energyucb-cluster-worker");
         let e = t.run_shard(&cfg, &assignments).unwrap_err();
         assert!(format!("{e:#}").contains("spawning cluster-worker"), "{e:#}");
+    }
+
+    #[test]
+    fn tcp_with_no_workers_times_out_cleanly() {
+        let t = Tcp::listen("127.0.0.1:0", Duration::from_millis(200)).unwrap();
+        assert_eq!(t.capacity(), Some(0));
+        let cfg = ClusterConfig { jobs: 1, ..ClusterConfig::default() };
+        let assignments = Leader::assign_round_robin(&["tealeaf"], 1, 0);
+        let start = Instant::now();
+        let e = t.run_shard(&cfg, &assignments).unwrap_err();
+        assert!(format!("{e:#}").contains("no cluster-worker connected"), "{e:#}");
+        // Bounded by the accept deadline, not a hang.
+        assert!(start.elapsed() < Duration::from_secs(30));
+    }
+
+    #[test]
+    fn tcp_hung_worker_hits_the_read_deadline() {
+        let t = Tcp::listen("127.0.0.1:0", Duration::from_millis(300)).unwrap();
+        let addr = t.local_addr().unwrap();
+        // A "worker" that connects but never speaks: the shard must fail
+        // on the frame deadline, and the dead connection must not be
+        // returned to the pool.
+        let _fake = TcpStream::connect(addr).unwrap();
+        let cfg = ClusterConfig { jobs: 1, ..ClusterConfig::default() };
+        let assignments = Leader::assign_round_robin(&["tealeaf"], 1, 0);
+        let start = Instant::now();
+        let e = t.run_shard(&cfg, &assignments).unwrap_err();
+        assert!(format!("{e:#}").contains("no frame within"), "{e:#}");
+        assert!(start.elapsed() < Duration::from_secs(30));
+        assert_eq!(t.capacity(), Some(0), "failed connection must be dropped, not pooled");
     }
 }

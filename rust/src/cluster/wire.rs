@@ -159,6 +159,10 @@ impl WireCodec for PolicyConfig {
                 j.set("name", "drlcap");
                 j.set("mode", mode.as_str());
             }
+            PolicyConfig::PanicAfter { after } => {
+                j.set("name", "panicafter");
+                j.set("after", u64_to_json(*after));
+            }
         }
         j
     }
@@ -185,6 +189,7 @@ impl WireCodec for PolicyConfig {
             "static" => PolicyConfig::Static { arm: usize_field(v, "arm")? },
             "rlpower" => PolicyConfig::RlPower,
             "drlcap" => PolicyConfig::DrlCap { mode: str_field(v, "mode")? },
+            "panicafter" => PolicyConfig::PanicAfter { after: u64_field(v, "after")? },
             other => return err(format!("unknown policy: {other}")),
         })
     }
@@ -551,6 +556,7 @@ mod tests {
             PolicyConfig::Static { arm: 7 },
             PolicyConfig::RlPower,
             PolicyConfig::DrlCap { mode: "cross".into() },
+            PolicyConfig::PanicAfter { after: 42 },
         ];
         for p in policies {
             let j = p.to_wire();

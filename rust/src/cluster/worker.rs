@@ -1,29 +1,40 @@
 //! Cluster worker: one thread = one simulated node under one controller.
 //!
-//! Policy driving happens inside [`run_session`] — the sans-IO
+//! Policy driving happens through [`drive_hooked`] — the sans-IO
 //! [`Controller`](crate::control::Controller) driven against a
-//! [`SimBackend`](crate::control::SimBackend) — which steps the node's
+//! [`SimBackend`](crate::control::SimBackend), with a read-only per-step
+//! hook tapping the controller's live accounting — which steps the node's
 //! controller through the shared batch policy core at B = 1
 //! (EXPERIMENTS.md §Engine, §Controller) — the same
 //! `select_into`/`update_batch` surface the fleet engines use, with no
-//! per-step allocations on the trace-off path. Because the decision core
-//! is backend-agnostic, a cluster node could equally replay recorded
-//! telemetry; the session API keeps that choice out of this file.
+//! per-step allocations on the trace-off path. The hook is where
+//! heartbeats come from: beats are emitted *during* the run, so they are
+//! a real liveness signal, while their total stays the pure
+//! [`heartbeat_count`] at any job count. Because the decision core is
+//! backend-agnostic, a cluster node could equally replay recorded
+//! telemetry; the controller API keeps that choice out of this file.
 
 use std::sync::mpsc::SyncSender;
 
 use crate::bandit::Policy;
-use crate::control::{run_session, RunMetrics, SessionCfg};
+use crate::control::{drive_hooked, Controller, RunMetrics, SessionCfg, SimBackend};
 use crate::workload::model::AppModel;
 
 /// Telemetry events a worker streams to the leader.
 #[derive(Clone, Debug, PartialEq)]
 pub enum WorkerEvent {
-    /// Periodic heartbeat: (node_id, progress fraction, cum energy J).
+    /// Live heartbeat: (node_id, progress fraction, cum energy J).
+    /// Emitted *during* the run every `heartbeat_steps` decisions (capped
+    /// at [`MAX_HEARTBEATS`]), so a stalled node stops beating — the
+    /// liveness signal the leader's read deadlines key off.
     Progress { node: usize, completed: f64, energy_j: f64 },
     /// Terminal event with the node's final metrics.
     Done { node: usize, result: NodeResult },
 }
+
+/// Upper bound on heartbeats per node (shared with [`heartbeat_count`]'s
+/// clamp so streamed beats and the pure count never diverge).
+pub const MAX_HEARTBEATS: u64 = 50;
 
 /// Final per-node outcome.
 #[derive(Clone, Debug, PartialEq)]
@@ -40,13 +51,18 @@ pub struct NodeResult {
 /// (staggered arrivals) used to floor at 0 and were invisible to leader
 /// telemetry.
 pub fn heartbeat_count(steps: u64, heartbeat_steps: u64) -> u64 {
-    (steps.max(1) / heartbeat_steps.max(1)).clamp(1, 50)
+    (steps.max(1) / heartbeat_steps.max(1)).clamp(1, MAX_HEARTBEATS)
 }
 
-/// Run one node to completion, streaming progress events every
-/// `heartbeat_steps` decisions and returning the final result (which is
-/// also mirrored onto the stream as a terminal [`WorkerEvent::Done`]).
-/// Blocking — call from a worker thread.
+/// Run one node to completion, streaming progress events *while the
+/// session runs* — one beat every `heartbeat_steps` decisions, tapped off
+/// the controller's live accounting via [`drive_hooked`] — and returning
+/// the final result (also mirrored onto the stream as a terminal
+/// [`WorkerEvent::Done`]). The beat total is exactly
+/// [`heartbeat_count`]`(steps, heartbeat_steps)`: runs shorter than one
+/// interval emit a single terminal beat after the drive, so cluster-wide
+/// heartbeat totals stay a pure function of the schedule. Blocking — call
+/// from a worker thread.
 pub fn run_node(
     node: usize,
     app: &AppModel,
@@ -55,22 +71,43 @@ pub fn run_node(
     heartbeat_steps: u64,
     tx: &SyncSender<WorkerEvent>,
 ) -> NodeResult {
-    // Stream coarse progress by running in heartbeat-sized chunks via the
-    // checkpointed session result (fine-grained streaming would need the
-    // session to callback; checkpoints are enough for leader-side UX).
-    let result = run_session(app, policy.as_mut(), cfg);
-    let out = NodeResult { node, app: app.name.to_string(), metrics: result.metrics };
-    let beats = heartbeat_count(out.metrics.steps, heartbeat_steps);
-    for b in 1..=beats {
-        let completed = b as f64 / beats as f64;
-        let energy = result.energy_at_progress_j(completed);
-        // Backpressure: block until the leader drains.
-        if tx
-            .send(WorkerEvent::Progress { node, completed, energy_j: energy })
-            .is_err()
-        {
-            return out; // leader gone; the result still reaches the pool
+    let hb = heartbeat_steps.max(1);
+    let mut beats = 0u64;
+    // Last observed (completed, energy) — feeds the terminal beat when a
+    // budget-capped run never crosses a heartbeat interval.
+    let mut latest = (0.0f64, 0.0f64);
+    let mut leader_gone = false;
+    let mut backend = SimBackend::new(app, cfg);
+    let controller = Controller::new(app, policy.as_mut(), cfg);
+    let result = drive_hooked(controller, &mut backend, &mut |c| {
+        latest = (c.completed(0), c.true_energy_j(0));
+        if c.steps() % hb == 0 && beats < MAX_HEARTBEATS && !leader_gone {
+            beats += 1;
+            // Backpressure: block until the leader drains.
+            leader_gone = tx
+                .send(WorkerEvent::Progress {
+                    node,
+                    completed: latest.0.clamp(0.0, 1.0),
+                    energy_j: latest.1,
+                })
+                .is_err();
         }
+    })
+    .expect("simulated backend is infallible")
+    .pop()
+    .expect("B = 1 drive yields exactly one result");
+    let out = NodeResult { node, app: app.name.to_string(), metrics: result.metrics };
+    if leader_gone {
+        return out; // leader hung up mid-run; the result still reaches the pool
+    }
+    if beats == 0 {
+        // Short run (fewer steps than one interval): the terminal beat
+        // keeps every node visible to leader telemetry.
+        let _ = tx.send(WorkerEvent::Progress {
+            node,
+            completed: latest.0.clamp(0.0, 1.0),
+            energy_j: latest.1,
+        });
     }
     let _ = tx.send(WorkerEvent::Done { node, result: out.clone() });
     out
@@ -148,7 +185,10 @@ mod tests {
                 WorkerEvent::Done { .. } => None,
             })
             .collect();
-        assert_eq!(beats, vec![1.0], "exactly one terminal beat");
+        assert_eq!(beats.len(), 1, "exactly one terminal beat: {beats:?}");
+        // The terminal beat reports the *actual* completed fraction —
+        // a 50-step capped run is nowhere near done.
+        assert!(beats[0] > 0.0 && beats[0] < 1.0, "{}", beats[0]);
         assert!(matches!(events.last(), Some(WorkerEvent::Done { .. })));
     }
 }

@@ -20,6 +20,11 @@ pub enum PolicyConfig {
     Static { arm: usize },
     RlPower,
     DrlCap { mode: String },
+    /// Fault-injection test policy: panics after `after` decisions
+    /// ([`crate::bandit::PanicAfter`]). Config/wire-buildable so cluster
+    /// chaos tests can crash a worker deterministically; deliberately
+    /// undocumented in `energyucb list`.
+    PanicAfter { after: u64 },
 }
 
 /// A full experiment/run configuration.
@@ -271,6 +276,13 @@ impl PolicyConfig {
             "drlcap" => PolicyConfig::DrlCap {
                 mode: tbl.get_str("mode").unwrap_or("pretrain").to_string(),
             },
+            "panicafter" => {
+                let after = tbl.get_int("after").unwrap_or(100);
+                if after < 0 {
+                    return invalid("panicafter `after` must be >= 0");
+                }
+                PolicyConfig::PanicAfter { after: after as u64 }
+            }
             other => return invalid(format!("unknown policy: {other}")),
         })
     }
@@ -303,6 +315,7 @@ impl PolicyConfig {
                 };
                 Box::new(DrlCap::new(k, m, seed))
             }
+            PolicyConfig::PanicAfter { after } => Box::new(PanicAfter::new(k, *after)),
         }
     }
 
@@ -379,8 +392,11 @@ impl PolicyConfig {
 /// nodes = 64
 /// seed = 2026
 /// heartbeat_steps = 1000
-/// shards = 2                  # optional: K worker subprocesses (JSONL wire)
-/// preset = "mixed"            # optional base: uniform|mixed|staggered|hetero
+/// shards = 2                  # optional: K worker shards (JSONL wire)
+/// transport = "tcp"           # optional: in-process|subprocess|tcp
+/// listen = "127.0.0.1:0"      # optional: TCP listen address
+/// shard_timeout_s = 120.0     # optional: per-shard read deadline
+/// preset = "mixed"            # optional base: uniform|mixed|staggered|hetero|chaos
 /// pick = "weighted"           # or "round_robin"
 ///
 /// [cluster.policy]            # fleet-wide default policy
@@ -414,6 +430,16 @@ pub struct ClusterFileConfig {
     /// in-process pool. Reports are byte-identical either way
     /// (EXPERIMENTS.md §Cluster).
     pub shards: Option<usize>,
+    /// Shard transport (`transport = "in-process" | "subprocess" | "tcp"`);
+    /// `None` = CLI/default decides (subprocess when shards are set).
+    pub transport: Option<String>,
+    /// TCP listen address for `transport = "tcp"` (`listen =
+    /// "HOST:PORT"`); `None` = an ephemeral loopback port.
+    pub listen: Option<String>,
+    /// Per-shard read deadline, seconds: a worker that sends no frame for
+    /// this long is declared dead and its shard requeued. `None` = the
+    /// CLI default (120 s).
+    pub shard_timeout_s: Option<f64>,
     pub heartbeat_steps: u64,
     /// Fleet-wide default policy (per-app overrides ride on the slots).
     pub policy: PolicyConfig,
@@ -426,6 +452,9 @@ impl Default for ClusterFileConfig {
             nodes: 16,
             jobs: None,
             shards: None,
+            transport: None,
+            listen: None,
+            shard_timeout_s: None,
             heartbeat_steps: 1_000,
             policy: PolicyConfig::EnergyUcb(EnergyUcbConfig::default()),
             schedule: crate::cluster::ScenarioSchedule::preset("uniform", 2026)
@@ -476,6 +505,23 @@ impl ClusterFileConfig {
                 return invalid("cluster.shards must be >= 1");
             }
             cfg.shards = Some(v as usize);
+        }
+        if let Some(v) = c.get_str("transport") {
+            if !matches!(v, "in-process" | "subprocess" | "tcp") {
+                return invalid(format!(
+                    "cluster.transport must be in-process|subprocess|tcp, got: {v}"
+                ));
+            }
+            cfg.transport = Some(v.to_string());
+        }
+        if let Some(v) = c.get_str("listen") {
+            cfg.listen = Some(v.to_string());
+        }
+        if let Some(v) = c.get_float("shard_timeout_s") {
+            if !(v > 0.0) {
+                return invalid("cluster.shard_timeout_s must be > 0");
+            }
+            cfg.shard_timeout_s = Some(v);
         }
         if let Some(v) = c.get_int("heartbeat_steps") {
             if v < 1 {
@@ -764,6 +810,41 @@ arm = 7
         let a = c.schedule.assignments(c.nodes).unwrap();
         assert_eq!(a.len(), 24);
         assert!(a.iter().all(|x| x.max_steps.is_some() && x.switch_cost.is_some()));
+    }
+
+    #[test]
+    fn cluster_transport_fields_parse_and_validate() {
+        let text = r#"
+[cluster]
+shards = 3
+transport = "tcp"
+listen = "127.0.0.1:7070"
+shard_timeout_s = 2.5
+"#;
+        let c = ClusterFileConfig::from_toml(text).unwrap();
+        assert_eq!(c.transport.as_deref(), Some("tcp"));
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(c.shard_timeout_s, Some(2.5));
+        // Defaults when absent.
+        let c = ClusterFileConfig::from_toml("").unwrap();
+        assert_eq!(c.transport, None);
+        assert_eq!(c.listen, None);
+        assert_eq!(c.shard_timeout_s, None);
+        // Bad values are config errors.
+        assert!(ClusterFileConfig::from_toml("[cluster]\ntransport = \"carrier-pigeon\"").is_err());
+        assert!(ClusterFileConfig::from_toml("[cluster]\nshard_timeout_s = 0.0").is_err());
+        assert!(ClusterFileConfig::from_toml("[cluster]\nshard_timeout_s = -1.0").is_err());
+    }
+
+    #[test]
+    fn panicafter_policy_parses_and_builds() {
+        let text = "[policy]\nname = \"panicafter\"\nafter = 7";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.policy, PolicyConfig::PanicAfter { after: 7 });
+        let mut p = c.build_policy(9, 0);
+        assert_eq!(p.k(), 9);
+        assert_eq!(p.select(1), 8); // behaves statically until the fault
+        assert!(ExperimentConfig::from_toml("[policy]\nname = \"panicafter\"\nafter = -1").is_err());
     }
 
     #[test]

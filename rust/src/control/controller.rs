@@ -294,6 +294,21 @@ impl<'p> Controller<'p> {
         self.cumulative_regret.iter().sum()
     }
 
+    /// Completed work fraction observed so far for environment `e` (the
+    /// latest active sample's `1 - remaining`). Read by step hooks
+    /// ([`drive_hooked`]) that stream live progress — e.g. the cluster
+    /// worker's in-run heartbeats.
+    pub fn completed(&self, e: usize) -> f64 {
+        self.final_completed[e]
+    }
+
+    /// Cumulative ground-truth GPU energy (J) accumulated so far for
+    /// environment `e`. Read by step hooks ([`drive_hooked`]) alongside
+    /// [`completed`](Self::completed).
+    pub fn true_energy_j(&self, e: usize) -> f64 {
+        self.cum_true_energy_j[e]
+    }
+
     /// Record one decision's wall-clock latency (µs). Called by drivers
     /// ([`drive`]) — the controller itself never reads a clock.
     pub fn record_decide_latency_us(&mut self, us: f64) {
@@ -426,8 +441,23 @@ impl<'p> Controller<'p> {
 /// (`controller.decide_latency_us`) lives here so the controller core
 /// stays sans-IO.
 pub fn drive(
+    controller: Controller<'_>,
+    backend: &mut dyn TelemetryBackend,
+) -> anyhow::Result<Vec<RunResult>> {
+    drive_hooked(controller, backend, &mut |_| {})
+}
+
+/// [`drive`] with a per-step observer: `on_step` runs after every
+/// `observe`, with read access to the controller's live accounting
+/// ([`Controller::steps`], [`Controller::completed`],
+/// [`Controller::true_energy_j`], ...). This is how the cluster worker
+/// emits heartbeats *during* the run instead of synthesizing them after
+/// the fact. The hook cannot mutate the controller, so a hooked drive is
+/// byte-identical to a plain [`drive`] — the hook only taps the stream.
+pub fn drive_hooked(
     mut controller: Controller<'_>,
     backend: &mut dyn TelemetryBackend,
+    on_step: &mut dyn FnMut(&Controller),
 ) -> anyhow::Result<Vec<RunResult>> {
     anyhow::ensure!(
         controller.b() == backend.b(),
@@ -455,6 +485,7 @@ pub fn drive(
         backend.apply(controller.selections())?;
         backend.sample_into(&mut samples)?;
         controller.observe(&samples);
+        on_step(&controller);
     }
     let totals = backend.totals();
     Ok(controller.finish(&totals))

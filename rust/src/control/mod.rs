@@ -22,7 +22,7 @@ pub mod session;
 pub mod sweep;
 
 pub use backend::{Recording, SimBackend, TelemetryBackend};
-pub use controller::{drive, BackendTotals, BatchOpts, Controller, EnvSpec, StepSample};
+pub use controller::{drive, drive_hooked, BackendTotals, BatchOpts, Controller, EnvSpec, StepSample};
 pub use metrics::{RepeatedMetrics, RunMetrics};
 pub use replay::{ReplayBackend, ReplayHeader, TelemetryFrame};
 pub use session::{run_repeated, run_session, RunResult, SessionCfg};

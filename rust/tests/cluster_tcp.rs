@@ -1,0 +1,185 @@
+//! TCP-transport integration: remote-style workers dial the leader's
+//! listener, receive their shard batches over the same framed-JSONL
+//! grammar as the pipe transport, and the merged report is byte-identical
+//! to the in-process reference — including runs where a worker is killed
+//! mid-stream and the leader requeues its shard onto survivors
+//! (EXPERIMENTS.md §Cluster).
+
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use energyucb::cluster::{
+    ClusterConfig, Leader, NodeAssignment, ScenarioSchedule, Subprocess, Tcp, Transport,
+};
+use energyucb::control::SessionCfg;
+
+/// The cargo-built CLI (leader and worker are the same binary). Tests
+/// must pass it explicitly: `current_exe()` inside a test harness would
+/// re-enter the *test* binary, not `energyucb`.
+const BIN: &str = env!("CARGO_BIN_EXE_energyucb");
+
+/// Short sessions keep the library-level cases cheap; the CLI-level
+/// chaos test below runs the full `chaos` scenario.
+fn test_cfg(jobs: usize) -> ClusterConfig {
+    ClusterConfig {
+        jobs,
+        heartbeat_steps: 100,
+        session: SessionCfg { max_steps: 400, ..SessionCfg::default() },
+        ..ClusterConfig::default()
+    }
+}
+
+/// A scaled-down mixed-scenario batch (staggered budgets cut 10x, as the
+/// property suite does, to bound test wall-clock).
+fn test_assignments(nodes: usize) -> Vec<NodeAssignment> {
+    let schedule = ScenarioSchedule::preset("mixed", 21).unwrap();
+    let mut assignments = schedule.assignments(nodes).unwrap();
+    for a in &mut assignments {
+        a.max_steps = a.max_steps.map(|m| (m / 10).max(1));
+    }
+    assignments
+}
+
+/// Spawn a worker process that dials `addr`; `die_after` arms the chaos
+/// hook (`--die-after-events N`: exit abruptly after the Nth event frame).
+fn spawn_worker(addr: &str, die_after: Option<u64>) -> Child {
+    let mut cmd = Command::new(BIN);
+    cmd.args(["cluster-worker", "--connect", addr]);
+    if let Some(n) = die_after {
+        cmd.args(["--die-after-events", &n.to_string()]);
+    }
+    cmd.stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cluster-worker")
+}
+
+/// Block until `want` workers have connected (bounded, so a broken accept
+/// path fails the test instead of hanging it).
+fn wait_for_workers(t: &Tcp, want: usize) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while t.capacity() != Some(want) {
+        assert!(Instant::now() < deadline, "workers never connected (want {want})");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The tentpole contract: TCP shards reproduce the in-process report
+/// byte-for-byte, at several shard/worker widths — including `shards >
+/// workers`, where connections are pooled and reused across batches.
+#[test]
+fn tcp_shards_match_the_in_process_pool_byte_for_byte() {
+    let assignments = test_assignments(6);
+    let leader = Leader::new(test_cfg(2));
+    let baseline = leader.run(&assignments).unwrap();
+    for (shards, workers) in [(1usize, 1usize), (3, 3), (3, 2)] {
+        let t = Tcp::listen("127.0.0.1:0", Duration::from_secs(60)).unwrap();
+        let addr = t.local_addr().unwrap().to_string();
+        let children: Vec<Child> = (0..workers).map(|_| spawn_worker(&addr, None)).collect();
+        let report = leader.run_sharded(&assignments, shards, &t).unwrap();
+        assert_eq!(
+            report.render(),
+            baseline.render(),
+            "tcp --shards {shards} ({workers} workers)"
+        );
+        assert_eq!(
+            report.to_csv().render(),
+            baseline.to_csv().render(),
+            "tcp --shards {shards} ({workers} workers) csv"
+        );
+        // Dropping the listener EOFs every worker socket: they exit clean.
+        drop(t);
+        for mut c in children {
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Kill a worker mid-stream and the leader requeues its shard onto the
+/// survivors — and the recovered report is *still* byte-identical to the
+/// failure-free reference. The dying worker connects first, so its
+/// connection sits at the front of the idle pool and is guaranteed to be
+/// handed a round-0 shard (every shard emits >= 2 frames, so
+/// `--die-after-events 1` always severs it mid-batch).
+#[test]
+fn killed_worker_requeues_onto_survivors_byte_identically() {
+    let assignments = test_assignments(6);
+    let leader = Leader::new(test_cfg(2));
+    let baseline = leader.run(&assignments).unwrap();
+
+    let t = Tcp::listen("127.0.0.1:0", Duration::from_secs(60)).unwrap();
+    let addr = t.local_addr().unwrap().to_string();
+    let victim = spawn_worker(&addr, Some(1));
+    wait_for_workers(&t, 1); // victim is first in the idle queue
+    let survivors: Vec<Child> = (0..2).map(|_| spawn_worker(&addr, None)).collect();
+    wait_for_workers(&t, 3);
+
+    let report = leader.run_sharded(&assignments, 3, &t).unwrap();
+    assert_eq!(report.render(), baseline.render(), "requeued run must match failure-free run");
+    assert_eq!(report.to_csv().render(), baseline.to_csv().render());
+
+    drop(t);
+    for mut c in survivors.into_iter().chain([victim]) {
+        let _ = c.wait();
+    }
+}
+
+/// A connected-but-silent worker (hung host) trips the per-shard read
+/// deadline; with nobody else to requeue onto, the run fails *in bounded
+/// time* — the leader never blocks indefinitely on a dead peer.
+#[test]
+fn hung_worker_fails_the_run_in_bounded_time() {
+    let assignments = test_assignments(2);
+    let leader = Leader::new(test_cfg(1));
+    let t = Tcp::listen("127.0.0.1:0", Duration::from_secs(1)).unwrap();
+    let addr = t.local_addr().unwrap();
+    let _fake = std::net::TcpStream::connect(addr).unwrap(); // never speaks
+    let start = Instant::now();
+    let e = leader.run_sharded(&assignments, 1, &t).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("no surviving tcp workers"), "{msg}");
+    assert!(msg.contains("no frame within"), "{msg}");
+    assert!(start.elapsed() < Duration::from_secs(30), "deadline did not bound the wait");
+}
+
+/// The pipe transport detects mid-stream worker death the same way: a
+/// worker that dies between its first event and the terminal frame
+/// surfaces as a clean "stream ended" error (here with requeueing
+/// disabled, so the death itself is the reported failure).
+#[test]
+fn subprocess_mid_stream_death_is_a_clean_error() {
+    let assignments = test_assignments(2);
+    let leader = Leader::new(ClusterConfig { shard_retries: 0, ..test_cfg(1) });
+    let t = Subprocess::with_program(BIN)
+        .with_worker_args(["--die-after-events", "1"])
+        .with_timeout(Duration::from_secs(60));
+    let e = leader.run_sharded(&assignments, 1, &t).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("stream ended without a terminal frame"), "{msg}");
+}
+
+/// End to end through the real CLI: `--transport tcp` with a scripted
+/// worker kill (`--chaos-kill 0:1`) produces stdout byte-identical to the
+/// plain in-process run of the same chaos scenario.
+#[test]
+fn cli_chaos_kill_run_matches_the_in_process_report() {
+    let run = |extra: &[&str]| -> String {
+        let mut cmd = Command::new(BIN);
+        cmd.args(["cluster", "--scenario", "chaos", "--nodes", "6", "--seed", "3", "--jobs", "2"]);
+        cmd.args(extra);
+        let out = cmd.output().expect("spawn energyucb");
+        assert!(
+            out.status.success(),
+            "exit {:?}\nstderr: {}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8(out.stdout).unwrap()
+    };
+    let reference = run(&[]);
+    let chaos = run(&[
+        "--transport", "tcp", "--shards", "3", "--workers", "3", "--chaos-kill", "0:1",
+    ]);
+    assert_eq!(chaos, reference, "chaos TCP stdout differs from the in-process reference");
+}
