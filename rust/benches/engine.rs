@@ -15,8 +15,8 @@
 //! The loop-level drive-vs-native overhead comparison at matched
 //! granularity lives in `benches/controller.rs`.
 
-use energyucb::bandit::batch::{BatchEnergyUcb, Scalar};
-use energyucb::bandit::{EnergyUcb, EnergyUcbConfig};
+use energyucb::bandit::batch::{BatchEnergyUcb, BatchPolicy, Scalar};
+use energyucb::bandit::{BatchLinUcb, EnergyUcb, EnergyUcbConfig, CONTEXT_DIM};
 use energyucb::fleet::{native, policy_run, FleetHyper, FleetParams, FleetState, StepScratch};
 use energyucb::sim::freq::FreqDomain;
 use energyucb::util::bench::{black_box, Bench};
@@ -106,6 +106,34 @@ fn main() {
                     ));
                 },
             );
+        }
+
+        // Context-carrying select/update (the serving tier's decision
+        // plane) at the same batch widths, over a frozen feature grid —
+        // timed per step like `native` so the per-env cost of the
+        // contextual path reads off directly against the context-free one.
+        {
+            let mut policy = BatchLinUcb::new(batch, k, CONTEXT_DIM, 1.0, 1.0);
+            let feasible = vec![1.0f32; batch * k];
+            let active = vec![1.0f32; batch];
+            let progress = vec![1e-3f64; batch];
+            let mut reward = vec![0.0f64; batch];
+            let mut sel = vec![0i32; batch];
+            let mut rng = Rng::new(1);
+            let mut ctx = vec![0.0f64; batch * CONTEXT_DIM];
+            for c in ctx.iter_mut() {
+                *c = rng.uniform();
+            }
+            let mut t = 0u64;
+            b.case(&format!("ctx-select/B={batch}"), batch as f64, || {
+                t += 1;
+                policy.select_into_ctx(t, &feasible, &ctx, CONTEXT_DIM, &mut sel);
+                for e in 0..batch {
+                    reward[e] = -1.0 - 0.01 * sel[e] as f64;
+                }
+                policy.update_batch(&sel, &reward, &progress, &active);
+                black_box(&sel);
+            });
         }
     }
 }

@@ -1,0 +1,95 @@
+//! Serving-tier throughput: the bursty arrival process and the
+//! contextual decide/observe loop it feeds, across B ∈ {1, 32, 1024}
+//! (EXPERIMENTS.md §Serving / §Perf).
+//!
+//! Three shapes per batch size, all reported as env-steps/s:
+//!   * `arrivals` — `ServingModel::step` alone (Poisson draws + queue
+//!     bookkeeping), the cost of synthesizing the feature stream,
+//!   * `linucb` — `BatchLinUcb` select/update over a frozen (B, D)
+//!     context grid, the pure decision-plane cost (Sherman–Morrison
+//!     rank-1 updates, no inversions),
+//!   * `serve+decide` — the composed loop the serving fleet runs:
+//!     advance every model, pack the context grid, select, observe.
+
+use energyucb::bandit::batch::BatchPolicy;
+use energyucb::bandit::{BatchLinUcb, CONTEXT_DIM};
+use energyucb::util::bench::{black_box, Bench};
+use energyucb::workload::serving::{ServingCfg, ServingModel};
+
+fn models(batch: usize) -> Vec<ServingModel> {
+    (0..batch)
+        .map(|e| ServingModel::new(ServingCfg { seed: e as u64, ..ServingCfg::default() }))
+        .collect()
+}
+
+fn main() {
+    let b = Bench::default();
+    let k = 9usize;
+
+    for batch in [1usize, 32, 1024] {
+        // Arrival process alone: Poisson sampling, burst episodes, queue
+        // and EMA bookkeeping per environment.
+        {
+            let mut fleet = models(batch);
+            let mut i = 0u64;
+            b.case(&format!("arrivals/B={batch}"), batch as f64, || {
+                let scale = 0.5 + 0.5 * ((i % 9) as f64 / 8.0);
+                for m in fleet.iter_mut() {
+                    black_box(m.step(scale));
+                }
+                i += 1;
+            });
+        }
+
+        // Decision plane alone: contextual select + rank-1 update over a
+        // frozen feature grid.
+        {
+            let mut policy = BatchLinUcb::new(batch, k, CONTEXT_DIM, 1.0, 1.0);
+            let feasible = vec![1.0f32; batch * k];
+            let active = vec![1.0f32; batch];
+            let progress = vec![1e-3f64; batch];
+            let mut reward = vec![0.0f64; batch];
+            let mut sel = vec![0i32; batch];
+            let mut ctx = vec![0.0f64; batch * CONTEXT_DIM];
+            for (j, c) in ctx.iter_mut().enumerate() {
+                *c = 0.1 + 0.8 * ((j % 7) as f64 / 6.0);
+            }
+            let mut t = 0u64;
+            b.case(&format!("linucb/B={batch}"), batch as f64, || {
+                t += 1;
+                policy.select_into_ctx(t, &feasible, &ctx, CONTEXT_DIM, &mut sel);
+                for e in 0..batch {
+                    reward[e] = -1.0 - 0.01 * sel[e] as f64;
+                }
+                policy.update_batch(&sel, &reward, &progress, &active);
+                black_box(&sel);
+            });
+        }
+
+        // The composed serving loop: workload advance under the chosen
+        // service scale, (B, D) grid packing, select, observe.
+        {
+            let mut fleet = models(batch);
+            let mut policy = BatchLinUcb::new(batch, k, CONTEXT_DIM, 1.0, 1.0);
+            let feasible = vec![1.0f32; batch * k];
+            let active = vec![1.0f32; batch];
+            let progress = vec![1e-3f64; batch];
+            let mut reward = vec![0.0f64; batch];
+            let mut sel = vec![0i32; batch];
+            let mut ctx = vec![0.0f64; batch * CONTEXT_DIM];
+            let mut t = 0u64;
+            b.case(&format!("serve+decide/B={batch}"), batch as f64, || {
+                t += 1;
+                for (e, m) in fleet.iter_mut().enumerate() {
+                    let scale = (1 + sel[e].max(0) as usize) as f64 / k as f64;
+                    let f = m.step(scale);
+                    ctx[e * CONTEXT_DIM..(e + 1) * CONTEXT_DIM].copy_from_slice(&f);
+                    reward[e] = -(1.0 + f[0]);
+                }
+                policy.select_into_ctx(t, &feasible, &ctx, CONTEXT_DIM, &mut sel);
+                policy.update_batch(&sel, &reward, &progress, &active);
+                black_box(&sel);
+            });
+        }
+    }
+}

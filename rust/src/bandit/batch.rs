@@ -90,6 +90,21 @@ pub trait BatchPolicy: Send {
     /// writing into `sel` (length B).
     fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]);
 
+    /// Context-carrying selection: `ctx` is the row-major `(B, D)`
+    /// workload feature grid (`ctx[e*d..(e+1)*d]` is environment `e`'s
+    /// feature vector — the serving tier's queue depth / arrival rate /
+    /// occupancy / util ratio). Context-free policies ignore the grid
+    /// and fall through to [`select_into`], so every existing policy is
+    /// trivially context-compatible and the context-free fleet HLO
+    /// bit-contract is untouched. Contextual policies
+    /// ([`super::linucb::BatchLinUcb`]) override this.
+    ///
+    /// [`select_into`]: BatchPolicy::select_into
+    fn select_into_ctx(&mut self, t: u64, feasible: &[f32], ctx: &[f64], d: usize, sel: &mut [i32]) {
+        let _ = (ctx, d);
+        self.select_into(t, feasible, sel)
+    }
+
     /// Feed back the observed rewards: `reward[e]` / `progress[e]` were
     /// observed under arm `sel[e]`. `active[e]` ∈ {0, 1} freezes finished
     /// environments (their stats must not move).
@@ -733,6 +748,10 @@ impl<P: BatchPolicy + ?Sized> BatchPolicy for &mut P {
         (**self).select_into(t, feasible, sel)
     }
 
+    fn select_into_ctx(&mut self, t: u64, feasible: &[f32], ctx: &[f64], d: usize, sel: &mut [i32]) {
+        (**self).select_into_ctx(t, feasible, ctx, d, sel)
+    }
+
     fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]) {
         (**self).update_batch(sel, reward, progress, active)
     }
@@ -757,6 +776,10 @@ impl<P: BatchPolicy + ?Sized> BatchPolicy for Box<P> {
 
     fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
         (**self).select_into(t, feasible, sel)
+    }
+
+    fn select_into_ctx(&mut self, t: u64, feasible: &[f32], ctx: &[f64], d: usize, sel: &mut [i32]) {
+        (**self).select_into_ctx(t, feasible, ctx, d, sel)
     }
 
     fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]) {
@@ -832,6 +855,20 @@ impl<P: Policy> BatchPolicy for Scalar<P> {
     fn select_into(&mut self, t: u64, _feasible: &[f32], sel: &mut [i32]) {
         for (e, p) in self.envs.iter_mut().enumerate() {
             sel[e] = p.select(t) as i32;
+        }
+    }
+
+    fn select_into_ctx(
+        &mut self,
+        t: u64,
+        _feasible: &[f32],
+        ctx: &[f64],
+        d: usize,
+        sel: &mut [i32],
+    ) {
+        debug_assert_eq!(ctx.len(), self.envs.len() * d);
+        for (e, p) in self.envs.iter_mut().enumerate() {
+            sel[e] = p.select_ctx(t, &ctx[e * d..(e + 1) * d]) as i32;
         }
     }
 

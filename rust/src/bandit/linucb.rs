@@ -1,0 +1,601 @@
+//! Contextual LinUCB: per-arm ridge regression over a workload feature
+//! vector, batched SoA-style like the rest of the policy core.
+//!
+//! Frequencies are arms; the context is the serving tier's per-step
+//! feature vector (queue depth, arrival rate, batch occupancy, recent
+//! util ratio — see `workload::serving`), following AGFT's vLLM
+//! autoscaler shape. Each (environment, arm) pair keeps a D-dimensional
+//! ridge regression maintained purely by Sherman–Morrison rank-1 updates
+//! — `A⁻¹` is carried directly, no matrix inversion anywhere:
+//!
+//! ```text
+//! score(x) = θ·x + α √(xᵀ A⁻¹ x),   θ = A⁻¹ b
+//! A⁻¹ ← A⁻¹ − (A⁻¹x)(A⁻¹x)ᵀ / (1 + xᵀA⁻¹x),   b ← b + r·x
+//! ```
+//!
+//! Determinism contract (matches `bandit::batch`): all arithmetic is
+//! f64 in a fixed operation order, argmax ties break to the first index
+//! (strict `>` scan from arm 0), and a B = 1 batch *is* the scalar
+//! policy — [`LinUcb`] wraps a B = 1 [`BatchLinUcb`], so the two are
+//! byte-for-byte identical by construction (the conformance suite pins
+//! it anyway). On the context-free select path the policy scores a
+//! constant bias vector `[1, 0, ..., 0]`, reducing to a ridge-mean UCB —
+//! this covers the first decision of a run (no sample observed yet) and
+//! keeps context-free drives well-defined.
+
+use super::batch::BatchPolicy;
+use super::Policy;
+
+/// Dimension of the serving workload feature vector (queue depth,
+/// arrival rate, batch occupancy, util ratio). The config surface
+/// defaults to this; the telemetry grammar records the dimension per
+/// trace.
+pub const CONTEXT_DIM: usize = 4;
+
+/// Batched Contextual LinUCB over row-major SoA grids: `a_inv` is
+/// (B, K, D, D), `b_vec` is (B, K, D). See module docs for the math and
+/// the determinism contract.
+#[derive(Clone, Debug)]
+pub struct BatchLinUcb {
+    alpha: f64,
+    ridge: f64,
+    b: usize,
+    k: usize,
+    d: usize,
+    /// Per-(env, arm) inverse design matrix, row-major (B, K, D, D).
+    a_inv: Vec<f64>,
+    /// Per-(env, arm) reward-weighted context sum, row-major (B, K, D).
+    b_vec: Vec<f64>,
+    /// Context active at the last selection, row-major (B, D) — the
+    /// update pairs rewards with the context they were selected under.
+    last_ctx: Vec<f64>,
+    /// Scratch: A⁻¹x for the arm being scored/updated (length D).
+    v: Vec<f64>,
+}
+
+impl BatchLinUcb {
+    pub fn new(b: usize, k: usize, d: usize, alpha: f64, ridge: f64) -> BatchLinUcb {
+        assert!(b > 0 && k > 0 && d > 0);
+        assert!(alpha >= 0.0, "alpha must be non-negative");
+        assert!(ridge > 0.0, "ridge must be positive");
+        let mut p = BatchLinUcb {
+            alpha,
+            ridge,
+            b,
+            k,
+            d,
+            a_inv: vec![0.0; b * k * d * d],
+            b_vec: vec![0.0; b * k * d],
+            last_ctx: vec![0.0; b * d],
+            v: vec![0.0; d],
+        };
+        p.reset();
+        p
+    }
+
+    /// Context dimension D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Write the context-free bias vector `[1, 0, ..., 0]` into every
+    /// environment's `last_ctx` row.
+    fn stash_bias_ctx(&mut self) {
+        self.last_ctx.iter_mut().for_each(|x| *x = 0.0);
+        for e in 0..self.b {
+            self.last_ctx[e * self.d] = 1.0;
+        }
+    }
+
+    /// Masked argmax of `θ·x + α√(xᵀA⁻¹x)` per environment against the
+    /// stashed contexts.
+    fn score_into(&mut self, feasible: &[f32], sel: &mut [i32]) {
+        let (b, k, d) = (self.b, self.k, self.d);
+        debug_assert_eq!(feasible.len(), b * k);
+        debug_assert_eq!(sel.len(), b);
+        for e in 0..b {
+            let x = &self.last_ctx[e * d..(e + 1) * d];
+            let mut best_arm = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for i in 0..k {
+                if feasible[e * k + i] <= 0.0 {
+                    continue;
+                }
+                let cell = (e * k + i) * d * d;
+                let bv = &self.b_vec[(e * k + i) * d..(e * k + i + 1) * d];
+                // v = A⁻¹x; θ·x = bᵀA⁻¹x = b·v (A⁻¹ stays symmetric
+                // under Sherman–Morrison), so one matvec scores the arm.
+                let mut mean = 0.0;
+                let mut quad = 0.0;
+                for r in 0..d {
+                    let row = &self.a_inv[cell + r * d..cell + (r + 1) * d];
+                    let mut vr = 0.0;
+                    for (c, &xc) in x.iter().enumerate() {
+                        vr += row[c] * xc;
+                    }
+                    mean += bv[r] * vr;
+                    quad += x[r] * vr;
+                }
+                let score = mean + self.alpha * quad.max(0.0).sqrt();
+                if score > best_v {
+                    best_v = score;
+                    best_arm = i;
+                }
+            }
+            sel[e] = best_arm as i32;
+        }
+    }
+}
+
+impl BatchPolicy for BatchLinUcb {
+    fn name(&self) -> String {
+        "LinUCB".into()
+    }
+
+    fn b(&self) -> usize {
+        self.b
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn select_into(&mut self, _t: u64, feasible: &[f32], sel: &mut [i32]) {
+        self.stash_bias_ctx();
+        self.score_into(feasible, sel);
+    }
+
+    fn select_into_ctx(
+        &mut self,
+        _t: u64,
+        feasible: &[f32],
+        ctx: &[f64],
+        d: usize,
+        sel: &mut [i32],
+    ) {
+        assert_eq!(d, self.d, "context dimension mismatch");
+        assert_eq!(ctx.len(), self.b * d, "context grid must be (B, D)");
+        self.last_ctx.copy_from_slice(ctx);
+        self.score_into(feasible, sel);
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
+        let (k, d) = (self.k, self.d);
+        for e in 0..sel.len() {
+            if active[e] <= 0.0 {
+                continue;
+            }
+            let arm = sel[e] as usize;
+            debug_assert!(arm < k);
+            let x = &self.last_ctx[e * d..(e + 1) * d];
+            let cell = (e * k + arm) * d * d;
+            // v = A⁻¹x and denom = 1 + xᵀA⁻¹x for the rank-1 downdate.
+            let mut denom = 1.0;
+            for r in 0..d {
+                let row = &self.a_inv[cell + r * d..cell + (r + 1) * d];
+                let mut vr = 0.0;
+                for (c, &xc) in x.iter().enumerate() {
+                    vr += row[c] * xc;
+                }
+                self.v[r] = vr;
+                denom += x[r] * vr;
+            }
+            if denom > 1e-12 {
+                for r in 0..d {
+                    let vr = self.v[r];
+                    for c in 0..d {
+                        self.a_inv[cell + r * d + c] -= vr * self.v[c] / denom;
+                    }
+                }
+            }
+            let bv = &mut self.b_vec[(e * k + arm) * d..(e * k + arm + 1) * d];
+            for (r, &xc) in x.iter().enumerate() {
+                bv[r] += reward[e] * xc;
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.a_inv.iter_mut().for_each(|x| *x = 0.0);
+        let inv_ridge = 1.0 / self.ridge;
+        for cell in 0..self.b * self.k {
+            let base = cell * self.d * self.d;
+            for r in 0..self.d {
+                self.a_inv[base + r * self.d + r] = inv_ridge;
+            }
+        }
+        self.b_vec.iter_mut().for_each(|x| *x = 0.0);
+        self.stash_bias_ctx();
+    }
+}
+
+/// Scalar Contextual LinUCB: a B = 1 [`BatchLinUcb`] behind the
+/// [`Policy`] trait, so sessions, replay, and the cluster tier run it
+/// unchanged. Byte-for-byte identical to the batch policy at B = 1 by
+/// construction (they share the arithmetic).
+pub struct LinUcb {
+    inner: BatchLinUcb,
+    feas: Vec<f32>,
+    sel: [i32; 1],
+}
+
+impl LinUcb {
+    pub fn new(k: usize, d: usize, alpha: f64, ridge: f64) -> LinUcb {
+        LinUcb { inner: BatchLinUcb::new(1, k, d, alpha, ridge), feas: vec![1.0; k], sel: [0] }
+    }
+}
+
+impl Policy for LinUcb {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        self.inner.select_into(t, &self.feas, &mut self.sel);
+        self.sel[0] as usize
+    }
+
+    fn select_ctx(&mut self, t: u64, ctx: &[f64]) -> usize {
+        let d = self.inner.d();
+        self.inner.select_into_ctx(t, &self.feas, ctx, d, &mut self.sel);
+        self.sel[0] as usize
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, progress: f64) {
+        self.inner.update_batch(&[arm as i32], &[reward], &[progress], &[1.0]);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+/// Scalar QoS-constrained Contextual LinUCB: a B = 1 [`BatchCLinUcb`]
+/// behind the [`Policy`] trait (same bridge shape as [`LinUcb`]).
+pub struct CLinUcb {
+    inner: BatchCLinUcb,
+    feas: Vec<f32>,
+    sel: [i32; 1],
+}
+
+impl CLinUcb {
+    pub fn new(k: usize, d: usize, alpha: f64, ridge: f64, delta: f64) -> CLinUcb {
+        CLinUcb {
+            inner: BatchCLinUcb::new(1, k, d, alpha, ridge, delta),
+            feas: vec![1.0; k],
+            sel: [0],
+        }
+    }
+}
+
+impl Policy for CLinUcb {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k()
+    }
+
+    fn select(&mut self, t: u64) -> usize {
+        self.inner.select_into(t, &self.feas, &mut self.sel);
+        self.sel[0] as usize
+    }
+
+    fn select_ctx(&mut self, t: u64, ctx: &[f64]) -> usize {
+        let d = self.inner.inner.d();
+        self.inner.select_into_ctx(t, &self.feas, ctx, d, &mut self.sel);
+        self.sel[0] as usize
+    }
+
+    fn update(&mut self, arm: usize, reward: f64, progress: f64) {
+        self.inner.update_batch(&[arm as i32], &[reward], &[progress], &[1.0]);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+/// QoS-constrained Contextual LinUCB: the slowdown-budget machinery of
+/// [`BatchConstrainedEnergyUcb`][super::batch::BatchConstrainedEnergyUcb]
+/// — clean-progress running means, optimistic unmeasured arms, a
+/// measurement dwell on just-switched-to arms — wrapped around the
+/// LinUCB scorer. Estimates are f64 to match the LinUCB core (the f32
+/// constrained EnergyUCB remains the artifact-contract reference).
+#[derive(Clone, Debug)]
+pub struct BatchCLinUcb {
+    inner: BatchLinUcb,
+    delta: f64,
+    /// Running mean of clean per-interval progress, row-major (B, K).
+    p_hat: Vec<f64>,
+    p_count: Vec<f64>,
+    /// Previous selected arm per environment (-1 = none yet) — the
+    /// LinUCB core carries no switching state, so the dwell logic
+    /// tracks its own.
+    prev: Vec<i32>,
+    /// Combined caller × estimated feasibility, rebuilt each select.
+    mask: Vec<f32>,
+}
+
+impl BatchCLinUcb {
+    pub fn new(b: usize, k: usize, d: usize, alpha: f64, ridge: f64, delta: f64) -> BatchCLinUcb {
+        assert!((0.0..1.0).contains(&delta), "delta must be in [0,1)");
+        BatchCLinUcb {
+            inner: BatchLinUcb::new(b, k, d, alpha, ridge),
+            delta,
+            p_hat: vec![0.0; b * k],
+            p_count: vec![0.0; b * k],
+            prev: vec![-1; b],
+            mask: vec![1.0; b * k],
+        }
+    }
+
+    /// Estimated-feasible mask entry for (env, arm): optimistic until
+    /// both the arm and the max-frequency arm have clean progress
+    /// samples (same rule as the constrained EnergyUCB).
+    fn estimated_feasible(&self, e: usize, i: usize) -> bool {
+        let k = self.inner.k;
+        let row = e * k;
+        let max_arm = k - 1;
+        if i == max_arm {
+            return true; // f_max has zero slowdown by definition
+        }
+        if self.p_count[row + i] <= 0.0 || self.p_count[row + max_arm] <= 0.0 {
+            return true; // optimism: unknown arms stay feasible
+        }
+        let p_max = self.p_hat[row + max_arm];
+        if p_max <= 0.0 {
+            return true;
+        }
+        1.0 - self.p_hat[row + i] / p_max <= self.delta
+    }
+
+    fn build_mask(&mut self, feasible: &[f32]) {
+        let (b, k) = (self.inner.b, self.inner.k);
+        for e in 0..b {
+            for i in 0..k {
+                let idx = e * k + i;
+                self.mask[idx] =
+                    if self.estimated_feasible(e, i) { feasible[idx] } else { 0.0 };
+            }
+        }
+    }
+
+    /// Measurement dwell: a just-switched-to arm has no clean progress
+    /// sample yet — hold it one more interval so its slowdown estimate
+    /// comes from a steady-state reading.
+    fn dwell(&self, sel: &mut [i32]) {
+        let k = self.inner.k;
+        for e in 0..sel.len() {
+            let p = self.prev[e];
+            if p >= 0 && self.p_count[e * k + p as usize] <= 0.0 {
+                sel[e] = p;
+            }
+        }
+    }
+}
+
+impl BatchPolicy for BatchCLinUcb {
+    fn name(&self) -> String {
+        format!("Constrained LinUCB (δ={})", self.delta)
+    }
+
+    fn b(&self) -> usize {
+        self.inner.b
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k
+    }
+
+    fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
+        self.build_mask(feasible);
+        self.inner.select_into(t, &self.mask, sel);
+        self.dwell(sel);
+    }
+
+    fn select_into_ctx(
+        &mut self,
+        t: u64,
+        feasible: &[f32],
+        ctx: &[f64],
+        d: usize,
+        sel: &mut [i32],
+    ) {
+        self.build_mask(feasible);
+        self.inner.select_into_ctx(t, &self.mask, ctx, d, sel);
+        self.dwell(sel);
+    }
+
+    fn update_batch(&mut self, sel: &[i32], reward: &[f64], progress: &[f64], active: &[f32]) {
+        let k = self.inner.k;
+        // Progress estimates first (they need the pre-update `prev` to
+        // tell clean steady-state samples from switch-tainted ones).
+        for e in 0..sel.len() {
+            if active[e] <= 0.0 {
+                continue;
+            }
+            let clean = self.prev[e] == sel[e];
+            if clean && progress[e] > 0.0 {
+                let idx = e * k + sel[e] as usize;
+                self.p_count[idx] += 1.0;
+                self.p_hat[idx] += (progress[e] - self.p_hat[idx]) / self.p_count[idx];
+            }
+            self.prev[e] = sel[e];
+        }
+        self.inner.update_batch(sel, reward, progress, active);
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.p_hat.iter_mut().for_each(|x| *x = 0.0);
+        self.p_count.iter_mut().for_each(|x| *x = 0.0);
+        self.prev.iter_mut().for_each(|x| *x = -1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ones(b: usize, k: usize) -> Vec<f32> {
+        vec![1.0; b * k]
+    }
+
+    /// Context-dependent rewards: arm `ctx_best` is optimal when the
+    /// first feature is high, arm 0 when it is low.
+    fn ctx_reward(arm: usize, ctx: &[f64], ctx_best: usize) -> f64 {
+        let load = ctx[0];
+        let target = if load > 0.5 { ctx_best } else { 0 };
+        -1.0 - 0.2 * (arm as f64 - target as f64).abs()
+    }
+
+    #[test]
+    fn b1_batch_matches_scalar_exactly() {
+        let (k, d) = (5, 4);
+        let mut batch = BatchLinUcb::new(1, k, d, 0.4, 1.0);
+        let mut scalar = LinUcb::new(k, d, 0.4, 1.0);
+        let feas = ones(1, k);
+        let mut sel = [0i32];
+        for t in 1..=200u64 {
+            let load = if t % 7 < 3 { 0.9 } else { 0.1 };
+            let ctx = [load, 0.3, 0.5, 0.8];
+            batch.select_into_ctx(t, &feas, &ctx, d, &mut sel);
+            let s = scalar.select_ctx(t, &ctx);
+            assert_eq!(sel[0] as usize, s, "t={t}");
+            let r = ctx_reward(s, &ctx, 3);
+            batch.update_batch(&sel, &[r], &[1e-3], &[1.0]);
+            scalar.update(s, r, 1e-3);
+        }
+    }
+
+    #[test]
+    fn learns_context_dependent_arms() {
+        let (k, d) = (5, 4);
+        let mut p = BatchLinUcb::new(1, k, d, 0.4, 1.0);
+        let feas = ones(1, k);
+        let mut sel = [0i32];
+        let mut drive = |p: &mut BatchLinUcb, steps: std::ops::RangeInclusive<u64>| {
+            let mut picks = Vec::new();
+            for t in steps {
+                let load = if t % 2 == 0 { 0.9 } else { 0.1 };
+                let ctx = [load, 0.3, 0.5, 0.8];
+                p.select_into_ctx(t, &feas, &ctx, d, &mut sel);
+                picks.push((load, sel[0] as usize));
+                let r = ctx_reward(sel[0] as usize, &ctx, 3);
+                p.update_batch(&sel, &[r], &[1e-3], &[1.0]);
+            }
+            picks
+        };
+        drive(&mut p, 1..=800);
+        // After training, the policy must map high load -> arm 3 and
+        // low load -> arm 0.
+        for (load, arm) in drive(&mut p, 801..=900) {
+            if load > 0.5 {
+                assert_eq!(arm, 3, "high-load pick");
+            } else {
+                assert_eq!(arm, 0, "low-load pick");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restores_fresh_trajectories() {
+        let (k, d) = (4, 4);
+        let mut p = BatchLinUcb::new(2, k, d, 0.3, 1.0);
+        let feas = ones(2, k);
+        let mut drive = |p: &mut BatchLinUcb| {
+            let mut sel = [0i32; 2];
+            let mut hist = Vec::new();
+            for t in 1..=120u64 {
+                let ctx =
+                    [0.1 * (t % 10) as f64, 0.4, 0.6, 0.2, 0.9 - 0.08 * (t % 10) as f64, 0.1, 0.3, 0.7];
+                p.select_into_ctx(t, &feas, &ctx, d, &mut sel);
+                let r = [-(1.0 + 0.1 * sel[0] as f64), -(1.0 + 0.05 * sel[1] as f64)];
+                p.update_batch(&sel, &r, &[1e-3; 2], &[1.0; 2]);
+                hist.push(sel);
+            }
+            hist
+        };
+        let first = drive(&mut p);
+        p.reset();
+        let second = drive(&mut p);
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn feasibility_mask_is_honored() {
+        let (k, d) = (4, 4);
+        let mut p = BatchLinUcb::new(1, k, d, 0.5, 1.0);
+        let mut feas = ones(1, k);
+        feas[2] = 0.0;
+        let mut sel = [0i32];
+        for t in 1..=100u64 {
+            let ctx = [0.8, 0.2, 0.4, 0.6];
+            p.select_into_ctx(t, &feas, &ctx, d, &mut sel);
+            assert_ne!(sel[0], 2);
+            // Arm 2 pays best — only the mask keeps the policy off it.
+            let r = if sel[0] == 2 { -0.5 } else { -1.0 - 0.1 * sel[0] as f64 };
+            p.update_batch(&sel, &[r], &[1e-3], &[1.0]);
+        }
+    }
+
+    #[test]
+    fn frozen_envs_do_not_learn() {
+        let (k, d) = (3, 4);
+        let mut p = BatchLinUcb::new(2, k, d, 0.3, 1.0);
+        let snapshot = p.clone();
+        p.update_batch(&[1, 1], &[-1.0, -1.0], &[1e-3; 2], &[0.0, 0.0]);
+        assert_eq!(p.a_inv, snapshot.a_inv);
+        assert_eq!(p.b_vec, snapshot.b_vec);
+    }
+
+    #[test]
+    fn constrained_excludes_measured_slow_arms() {
+        let (k, d) = (9, 4);
+        let progress_of =
+            |arm: usize| 1e-3 / (0.5 + 0.5 * (1.6 / (0.8 + 0.1 * arm as f64)));
+        let mut p = BatchCLinUcb::new(1, k, d, 0.4, 1.0, 0.05);
+        let feas = ones(1, k);
+        let mut sel = [0i32];
+        for t in 1..=600u64 {
+            let ctx = [0.5, 0.5, 0.5, 0.5];
+            p.select_into_ctx(t, &feas, &ctx, d, &mut sel);
+            let arm = sel[0] as usize;
+            // Cheap-at-low-frequency rewards: only the constraint keeps
+            // the policy near the top arms.
+            let reward = -1.0 - 0.03 * (k - 1 - arm) as f64;
+            p.update_batch(&sel, &[reward], &[progress_of(arm)], &[1.0]);
+        }
+        for t in 601..=700u64 {
+            let ctx = [0.5, 0.5, 0.5, 0.5];
+            p.select_into_ctx(t, &feas, &ctx, d, &mut sel);
+            let arm = sel[0] as usize;
+            let true_s = 1.0 - progress_of(arm) / progress_of(k - 1);
+            p.update_batch(&sel, &[-1.0], &[progress_of(arm)], &[1.0]);
+            assert!(true_s <= 0.07, "picked arm {arm} with slowdown {true_s}");
+        }
+    }
+
+    #[test]
+    fn context_free_select_falls_back_to_bias_vector() {
+        // Without context the scorer sees a constant feature, so LinUCB
+        // degrades to a ridge-mean UCB and still finds the best arm.
+        let k = 4;
+        let mut p = BatchLinUcb::new(1, k, CONTEXT_DIM, 0.4, 1.0);
+        let feas = ones(1, k);
+        let mut sel = [0i32];
+        for t in 1..=400u64 {
+            p.select_into(t, &feas, &mut sel);
+            let r = -1.0 - 0.1 * (sel[0] as f64 - 2.0).abs();
+            p.update_batch(&sel, &[r], &[1e-3], &[1.0]);
+        }
+        p.select_into(401, &feas, &mut sel);
+        assert_eq!(sel[0], 2);
+    }
+}

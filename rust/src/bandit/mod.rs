@@ -11,6 +11,7 @@ pub mod constrained;
 pub mod egreedy;
 pub mod energyucb;
 pub mod fault;
+pub mod linucb;
 pub mod oracle;
 pub mod rrfreq;
 pub mod static_;
@@ -26,6 +27,7 @@ pub use constrained::ConstrainedEnergyUcb;
 pub use egreedy::EpsilonGreedy;
 pub use energyucb::{EnergyUcb, EnergyUcbConfig, InitStrategy};
 pub use fault::PanicAfter;
+pub use linucb::{BatchCLinUcb, BatchLinUcb, CLinUcb, LinUcb, CONTEXT_DIM};
 pub use oracle::Oracle;
 pub use rrfreq::RoundRobin;
 pub use static_::StaticPolicy;
@@ -44,6 +46,19 @@ pub trait Policy: Send {
 
     /// Choose the arm for decision step `t` (1-based).
     fn select(&mut self, t: u64) -> usize;
+
+    /// Context-carrying selection: choose the arm for step `t` given the
+    /// per-step workload feature vector `ctx` (the serving tier's queue
+    /// depth / token rate / occupancy / util ratio). Context-free
+    /// policies ignore the context and fall through to [`select`], so
+    /// every existing policy is trivially context-compatible and
+    /// context-free paths stay byte-identical.
+    ///
+    /// [`select`]: Policy::select
+    fn select_ctx(&mut self, t: u64, ctx: &[f64]) -> usize {
+        let _ = ctx;
+        self.select(t)
+    }
 
     /// Feed back the observed (normalized) reward and the progress made
     /// under `arm` during the interval.
@@ -68,6 +83,10 @@ impl<'a, P: Policy + ?Sized> Policy for &'a mut P {
         (**self).select(t)
     }
 
+    fn select_ctx(&mut self, t: u64, ctx: &[f64]) -> usize {
+        (**self).select_ctx(t, ctx)
+    }
+
     fn update(&mut self, arm: usize, reward: f64, progress: f64) {
         (**self).update(arm, reward, progress)
     }
@@ -90,6 +109,10 @@ impl<P: Policy + ?Sized> Policy for Box<P> {
 
     fn select(&mut self, t: u64) -> usize {
         (**self).select(t)
+    }
+
+    fn select_ctx(&mut self, t: u64, ctx: &[f64]) -> usize {
+        (**self).select_ctx(t, ctx)
     }
 
     fn update(&mut self, arm: usize, reward: f64, progress: f64) {

@@ -23,8 +23,9 @@ use anyhow::{bail, Context, Result};
 use crate::bandit::{BatchPolicy, Policy};
 use crate::config::ExperimentConfig;
 use crate::control::{
-    drive, run_repeated, sweep_replay, Controller, Recording, RepeatedMetrics, ReplayBackend,
-    ReplayHeader, RunResult, SessionCfg, SimBackend, SweepCandidate,
+    drive, run_repeated, run_repeated_serving, sweep_replay, Controller, Recording,
+    RepeatedMetrics, ReplayBackend, ReplayHeader, RunResult, SessionCfg, SimBackend,
+    SweepCandidate,
 };
 use crate::experiments::{all_experiments, experiment_by_id, ExpContext};
 use crate::fleet::{fleet_controller, native, FleetBackend, FleetHyper, FleetParams, FleetState};
@@ -33,6 +34,7 @@ use crate::util::table::{fnum, fnum_sep, Table};
 use crate::util::Rng;
 use crate::workload::calibration;
 use crate::workload::model::AppModel;
+use crate::workload::serving::{ServingCfg, ServingModel};
 use args::Args;
 
 pub const USAGE: &str = "\
@@ -42,16 +44,18 @@ USAGE:
   energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--jobs J]
                 [--policy NAME] [--quick]
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
-                [--record-telemetry] [--record-out FILE]
+                [--serving] [--record-telemetry] [--record-out FILE]
   energyucb replay --in FILE [--policy NAME]
   energyucb sweep --replay FILE [--policies NAME,NAME,...] [--alpha A,A,...]
                   [--lambda L,L,...] [--jobs J]
   energyucb fleet [--apps a,b,...] [--batch B] [--steps N] [--delta D] [--native]
-                  [--policy NAME[,NAME,...]] [--record-telemetry] [--record-out FILE]
+                  [--policy NAME[,NAME,...]] [--serving]
+                  [--record-telemetry] [--record-out FILE]
   energyucb cluster [--nodes N] [--jobs J] [--scenario NAME] [--config FILE]
                     [--seed S] [--heartbeat H] [--csv PATH] [--shards K] [--waves]
                     [--transport in-process|subprocess|tcp] [--listen ADDR]
-                    [--shard-timeout SECS] [--workers N] [--chaos-kill W[:N]]
+                    [--shard-timeout SECS] [--shard-retries N] [--workers N]
+                    [--chaos-kill W[:N]]
   energyucb list
   energyucb help
 
@@ -60,6 +64,12 @@ Experiments regenerate the paper's tables/figures (see `energyucb list`).
 cores); output is byte-identical at any J (see EXPERIMENTS.md).
 
 Run drives the sans-IO controller against the simulated GEOPM backend.
+--serving (or a [serving] config table) layers the inference-serving
+scenario on top: a bursty diurnal arrival process feeds a per-step
+workload context (queue depth, token rate, batch occupancy, util ratio)
+to contextual policies (linucb/clinucb), and the report gains a QoS
+column — the fraction of steps whose queue depth exceeded the TTFT-style
+budget (EXPERIMENTS.md §Serving).
 --record-telemetry tees every sample to a JSONL log (default
 <out_dir>/telemetry_<app>.jsonl; requires --reps 1). `replay` feeds a
 recorded log back through the controller: with the recording's own
@@ -77,9 +87,11 @@ Fleet runs B lockstep environments through the batch policy core
 (EXPERIMENTS.md §Engine). --policy selects any policy from `energyucb
 list`; a comma-separated list builds a mixed-policy fleet (env e runs
 policy e mod len). Non-default policies run on the native engine (the
-HLO artifacts encode EnergyUCB). --record-telemetry tees the fleet run
-to a batched JSONL log (default <out_dir>/telemetry_fleet.jsonl) that
-`sweep --replay` evaluates counterfactually.
+HLO artifacts encode EnergyUCB). --serving attaches a per-row serving
+workload (seeds staggered per row) whose context reaches contextual
+policies. --record-telemetry tees the fleet run to a batched JSONL log
+(default <out_dir>/telemetry_fleet.jsonl) that `sweep --replay`
+evaluates counterfactually.
 
 Cluster runs a simulated multi-node fleet on the work-stealing executor.
 Scenarios: uniform | mixed | staggered | hetero | chaos, or a [cluster]
@@ -91,8 +103,10 @@ or tcp (the leader listens on --listen, default 127.0.0.1:0, and remote
 `energyucb cluster-worker --connect HOST:PORT` processes dial in —
 --workers N spawns that many local workers for you). A worker that hangs
 or dies is detected within --shard-timeout SECS (default 120) and its
-shard is requeued onto survivors; --chaos-kill W[:N] makes spawned worker
-W die after N event frames to exercise exactly that path. Reports are
+shard is requeued onto survivors; --shard-retries N caps how many times
+a dead shard is requeued before the run fails (default 2; 0 = fail
+fast); --chaos-kill W[:N] makes spawned worker W die after N event
+frames to exercise exactly that path. Reports are
 byte-identical at any --jobs, --shards, and transport — including
 requeue runs; --waves uses the legacy fixed-wave scheduler (perf
 baseline).";
@@ -171,11 +185,17 @@ fn cmd_exp(rest: &[String]) -> Result<i32> {
 }
 
 /// The `run`/`replay` report table (shared so record→replay output is
-/// byte-comparable).
-fn session_table() -> Table {
-    Table::new(vec![
+/// byte-comparable). `qos` appends the TTFT-budget violation column —
+/// only serving/contextual reports carry it, so context-free output
+/// stays byte-identical to the pre-serving grammar.
+fn session_table(qos: bool) -> Table {
+    let mut cols = vec![
         "app", "policy", "energy (kJ)", "saved (kJ)", "regret (kJ)", "time (s)", "switches",
-    ])
+    ];
+    if qos {
+        cols.push("QoS viol");
+    }
+    Table::new(cols)
 }
 
 /// One `run`/`replay` report row from per-run metrics. Saved energy goes
@@ -190,12 +210,13 @@ fn session_table_row(
     freqs: &FreqDomain,
     policy_name: &str,
     runs: &[crate::control::RunMetrics],
+    qos: bool,
 ) {
     let agg = RepeatedMetrics::from_runs(runs);
     let saved_mean = crate::util::stats::mean(
         &runs.iter().map(|r| r.saved_energy_kj(app, freqs)).collect::<Vec<_>>(),
     );
-    table.row(vec![
+    let mut cells = vec![
         app.name.to_string(),
         policy_name.to_string(),
         fnum_sep(agg.energy_mean_kj, 2),
@@ -203,13 +224,23 @@ fn session_table_row(
         fnum(agg.energy_mean_kj - app.optimal_energy_kj(), 2),
         fnum(agg.time_mean_s, 2),
         fnum(agg.switches_mean, 0),
-    ]);
+    ];
+    if qos {
+        let viols: Vec<f64> = runs.iter().filter_map(|r| r.qos_violation_frac).collect();
+        cells.push(if viols.is_empty() {
+            "-".to_string()
+        } else {
+            fnum(crate::util::stats::mean(&viols), 3)
+        });
+    }
+    table.row(cells);
 }
 
 fn cmd_run(rest: &[String]) -> Result<i32> {
-    let args = Args::parse(rest, &["trace", "record-telemetry"])?;
+    let args = Args::parse(rest, &["trace", "record-telemetry", "serving"])?;
     args.ensure_known(&[
-        "config", "app", "policy", "reps", "seed", "alpha", "lambda", "delta", "record-out",
+        "config", "app", "policy", "reps", "seed", "alpha", "lambda", "delta", "ridge",
+        "record-out",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -233,6 +264,9 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
         if let Some(d) = args.get_f64("delta")? {
             toml.push_str(&format!("delta = {d}\n"));
         }
+        if let Some(r) = args.get_f64("ridge")? {
+            toml.push_str(&format!("ridge = {r}\n"));
+        }
         cfg.policy = ExperimentConfig::from_toml(&toml)?.policy;
     }
     if let Some(r) = args.get_usize("reps")? {
@@ -251,9 +285,17 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
     if record && args.get("record-out").is_some() && cfg.apps.len() > 1 {
         bail!("run: --record-out names one log; multiple apps would overwrite it");
     }
+    // --serving enables the inference-serving scenario with the config's
+    // [serving] table (or defaults); a [serving] table alone enables it
+    // too, so shipped configs work without the flag.
+    let serving: Option<ServingCfg> = if args.flag("serving") {
+        Some(cfg.serving.clone().unwrap_or_default())
+    } else {
+        cfg.serving.clone()
+    };
 
     let freqs = cfg.freqs.clone().with_switch_cost(cfg.switch_cost);
-    let mut table = session_table();
+    let mut table = session_table(serving.is_some());
     for name in &cfg.apps {
         let app = calibration::app(name).with_context(|| format!("unknown app {name}"))?;
         if app.energy_kj.len() != freqs.k() {
@@ -278,14 +320,17 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
                 Some(p) => PathBuf::from(p),
                 None => PathBuf::from(&cfg.out_dir).join(format!("telemetry_{name}.jsonl")),
             };
-            let result = record_session(&app, policy.as_mut(), &scfg, &cfg.policy, &path)?;
+            let result =
+                record_session(&app, policy.as_mut(), &scfg, &cfg.policy, serving.as_ref(), &path)?;
             eprintln!("recorded telemetry to {}", path.display());
             vec![result]
+        } else if let Some(srv) = &serving {
+            run_repeated_serving(&app, policy.as_mut(), &scfg, srv, cfg.reps, cfg.seed)
         } else {
             run_repeated(&app, policy.as_mut(), &scfg, cfg.reps, cfg.seed)
         };
         let runs: Vec<_> = results.iter().map(|r| r.metrics.clone()).collect();
-        session_table_row(&mut table, &app, &freqs, &policy.name(), &runs);
+        session_table_row(&mut table, &app, &freqs, &policy.name(), &runs, serving.is_some());
         if args.flag("trace") {
             if let Some(tr) = &results[0].trace {
                 let path = PathBuf::from(&cfg.out_dir).join(format!("trace_{name}.csv"));
@@ -306,11 +351,17 @@ fn record_session(
     policy: &mut dyn Policy,
     scfg: &SessionCfg,
     policy_cfg: &crate::config::PolicyConfig,
+    serving: Option<&ServingCfg>,
     path: &std::path::Path,
 ) -> Result<RunResult> {
     policy.reset();
-    let header =
+    let mut header =
         ReplayHeader::session(app.name.to_string(), Some(policy_cfg.clone()), scfg.clone());
+    if let Some(s) = serving {
+        // Contextual recordings declare the context grammar (and QoS
+        // budget) up front so replay scores violations identically.
+        header = header.with_context(Some(s.ttft_budget));
+    }
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)
             .with_context(|| format!("creating {}", parent.display()))?;
@@ -318,8 +369,13 @@ fn record_session(
     let file = std::fs::File::create(path)
         .with_context(|| format!("creating telemetry log {}", path.display()))?;
     let sink = std::io::BufWriter::new(file);
-    let mut backend = Recording::new(SimBackend::new(app, scfg), sink, &header)?;
-    let controller = Controller::new(app, policy, scfg);
+    let mut inner = SimBackend::new(app, scfg);
+    if let Some(s) = serving {
+        inner = inner.with_serving(ServingModel::new(s.clone()));
+    }
+    let mut backend = Recording::new(inner, sink, &header)?;
+    let controller = Controller::new(app, policy, scfg)
+        .with_qos_budget(serving.map(|s| s.ttft_budget));
     let result = drive(controller, &mut backend)?
         .pop()
         .expect("B = 1 drive yields exactly one result");
@@ -382,14 +438,22 @@ fn cmd_replay(rest: &[String]) -> Result<i32> {
     // header's K, so its arity always matches the recorded arm range
     // (ReplayBackend validated every recorded arm against K on load).
     policy.reset();
-    let controller = Controller::new(&app, policy.as_mut(), &scfg);
+    // Contextual recordings carry their QoS budget in the header; scoring
+    // it here (not in the backend) keeps replay byte-identical to the
+    // recorded run's report.
+    let controller = Controller::new(&app, policy.as_mut(), &scfg)
+        .with_qos_budget(header.context.and_then(|c| c.qos_budget));
     let result = drive(controller, &mut backend)?
         .pop()
         .expect("B = 1 drive yields exactly one result");
     let freqs = scfg.freqs.clone().with_switch_cost(scfg.switch_cost);
-    let mut table = session_table();
+    // Column presence mirrors the recording's context declaration, the
+    // same predicate `run` uses (serving configured), so record→replay
+    // reports are byte-identical even in degenerate zero-context runs.
+    let qos = header.context.is_some();
+    let mut table = session_table(qos);
     let runs = [result.metrics.clone()];
-    session_table_row(&mut table, &app, &freqs, &result.metrics.policy, &runs);
+    session_table_row(&mut table, &app, &freqs, &result.metrics.policy, &runs, qos);
     println!("{}", table.render());
     eprintln!("replayed {} recorded steps from {path}", result.metrics.steps);
     Ok(0)
@@ -484,10 +548,11 @@ fn cmd_sweep(rest: &[String]) -> Result<i32> {
         let app = calibration::app(&header.app)
             .with_context(|| format!("recording references unknown app {}", header.app))?;
         let freqs = scfg.domain();
-        let mut table = session_table();
+        let qos = header.context.is_some();
+        let mut table = session_table(qos);
         for out in &outcomes {
             let runs = [out.results[0].metrics.clone()];
-            session_table_row(&mut table, &app, &freqs, &out.label, &runs);
+            session_table_row(&mut table, &app, &freqs, &out.label, &runs, qos);
         }
         println!("{}", table.render());
     } else {
@@ -521,7 +586,7 @@ fn cmd_sweep(rest: &[String]) -> Result<i32> {
 }
 
 fn cmd_fleet(rest: &[String]) -> Result<i32> {
-    let args = Args::parse(rest, &["native", "record-telemetry"])?;
+    let args = Args::parse(rest, &["native", "record-telemetry", "serving"])?;
     args.ensure_known(&[
         "apps", "batch", "steps", "seed", "delta", "artifacts", "policy", "record-out",
     ])?;
@@ -575,10 +640,21 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
     let hyper = FleetHyper::default();
     let mut state = FleetState::fresh(batch, freqs.k());
     let mut rng = Rng::new(seed);
+    let serving_flag = args.flag("serving");
+    // One serving model per fleet row, seeds staggered so rows see
+    // decorrelated arrival streams.
+    let serving_models = || -> Vec<ServingModel> {
+        (0..batch)
+            .map(|e| {
+                ServingModel::new(ServingCfg { seed: seed + e as u64, ..ServingCfg::default() })
+            })
+            .collect()
+    };
+    let qos_budget = serving_flag.then(|| ServingCfg::default().ttft_budget);
 
     let t0 = std::time::Instant::now();
     let engine_name: String;
-    if record || !params.policies.is_empty() {
+    if record || serving_flag || !params.policies.is_empty() {
         // Policy-selected and recorded fleets run the generic batch-policy
         // engine (the HLO artifacts encode EnergyUCB only and have no
         // telemetry tap; the engine is bit-identical to `--native` for the
@@ -586,6 +662,8 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
         if !args.flag("native") {
             if !params.policies.is_empty() {
                 eprintln!("fleet: --policy implies the native engine");
+            } else if serving_flag {
+                eprintln!("fleet: --serving implies the native engine");
             } else {
                 eprintln!("fleet: --record-telemetry implies the native engine");
             }
@@ -619,7 +697,10 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
             };
             let env_names: Vec<String> =
                 names.iter().cycle().take(batch).cloned().collect();
-            let header = ReplayHeader::fleet(env_names, policy_cfg, scfg, feasible);
+            let mut header = ReplayHeader::fleet(env_names, policy_cfg, scfg, feasible);
+            if let Some(budget) = qos_budget {
+                header = header.with_context(Some(budget));
+            }
             if let Some(parent) = path.parent() {
                 std::fs::create_dir_all(parent)
                     .with_context(|| format!("creating {}", parent.display()))?;
@@ -628,16 +709,25 @@ fn cmd_fleet(rest: &[String]) -> Result<i32> {
                 .with_context(|| format!("creating telemetry log {}", path.display()))?;
             let sink = std::io::BufWriter::new(file);
             {
-                let controller = fleet_controller(&params, Box::new(policy.as_mut()), steps);
-                let mut backend = Recording::new(
-                    FleetBackend::new(&mut state, &params, &mut rng),
-                    sink,
-                    &header,
-                )?;
+                let controller = fleet_controller(&params, Box::new(policy.as_mut()), steps)
+                    .with_qos_budget(qos_budget);
+                let mut inner = FleetBackend::new(&mut state, &params, &mut rng);
+                if serving_flag {
+                    inner = inner.with_serving(serving_models());
+                }
+                let mut backend = Recording::new(inner, sink, &header)?;
                 drive(controller, &mut backend)?;
                 backend.finish()?;
             }
             eprintln!("recorded fleet telemetry to {}", path.display());
+        } else if serving_flag {
+            // Serving fleets run the generic drive loop so per-row context
+            // reaches the batch policy (policy_run has no context path).
+            let controller = fleet_controller(&params, Box::new(policy.as_mut()), steps)
+                .with_qos_budget(qos_budget);
+            let mut backend =
+                FleetBackend::new(&mut state, &params, &mut rng).with_serving(serving_models());
+            drive(controller, &mut backend)?;
         } else {
             crate::fleet::policy_run(&mut state, &params, policy.as_mut(), &mut rng, steps);
         }
@@ -698,7 +788,7 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
     let args = Args::parse(rest, &["waves"])?;
     args.ensure_known(&[
         "nodes", "jobs", "scenario", "config", "seed", "heartbeat", "csv", "shards",
-        "transport", "listen", "shard-timeout", "workers", "chaos-kill",
+        "transport", "listen", "shard-timeout", "shard-retries", "workers", "chaos-kill",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -757,6 +847,9 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
             bail!("cluster: --shard-timeout must be > 0 seconds");
         }
         cfg.shard_timeout_s = Some(s);
+    }
+    if let Some(r) = args.get_usize("shard-retries")? {
+        cfg.shard_retries = Some(r);
     }
     if args.flag("waves") && cfg.shards.is_some() {
         bail!("cluster: --waves and --shards are mutually exclusive");
@@ -831,13 +924,17 @@ fn cmd_cluster(rest: &[String]) -> Result<i32> {
     );
 
     let jobs = cfg.jobs.unwrap_or_else(crate::exec::available_jobs);
-    let leader = Leader::new(ClusterConfig {
+    let mut ccfg = ClusterConfig {
         jobs,
         policy: cfg.policy.clone(),
         session: SessionCfg::default(),
         heartbeat_steps: cfg.heartbeat_steps,
         ..ClusterConfig::default()
-    });
+    };
+    if let Some(r) = cfg.shard_retries {
+        ccfg.shard_retries = r;
+    }
+    let leader = Leader::new(ccfg);
     let assignments =
         cfg.schedule.assignments(cfg.nodes).map_err(|e| anyhow::anyhow!("cluster: {e}"))?;
     let mode = if args.flag("waves") {
@@ -1100,7 +1197,8 @@ fn cmd_list() -> Result<i32> {
         );
     }
     println!(
-        "\npolicies: energyucb constrained ucb1 swucb egreedy energyts rrfreq static rlpower drlcap"
+        "\npolicies: energyucb constrained ucb1 swucb egreedy energyts rrfreq static rlpower \
+         drlcap linucb clinucb"
     );
     Ok(0)
 }
@@ -1320,6 +1418,70 @@ mod tests {
             "x.jsonl",
         ])
         .is_err());
+    }
+
+    #[test]
+    fn run_serving_records_replays_and_sweeps_contextual_policies() {
+        let dir =
+            std::env::temp_dir().join(format!("energyucb_cli_serving_{}", std::process::id()));
+        let log = dir.join("serving.jsonl");
+        let log_s = log.to_str().unwrap().to_string();
+        // Record a contextual session (static keeps the sim short; the
+        // trace still carries the context frames and QoS budget).
+        assert_eq!(
+            dispatch(&[
+                "run", "--app", "tealeaf", "--policy", "static", "--serving", "--reps", "1",
+                "--seed", "9", "--record-telemetry", "--record-out", &log_s,
+            ])
+            .unwrap(),
+            0
+        );
+        // Replay reproduces the contextual report (QoS column included).
+        assert_eq!(dispatch(&["replay", "--in", &log_s]).unwrap(), 0);
+        // Contextual candidates evaluate against the frozen contextual
+        // trace alongside a context-free baseline.
+        assert_eq!(
+            dispatch(&[
+                "sweep", "--replay", &log_s, "--policies", "linucb,clinucb,ucb1", "--jobs",
+                "2",
+            ])
+            .unwrap(),
+            0
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fleet_serving_runs_contextual_policies() {
+        for policy in ["linucb", "clinucb"] {
+            let code = dispatch(&[
+                "fleet", "--apps", "tealeaf", "--batch", "3", "--steps", "150", "--serving",
+                "--policy", policy,
+            ])
+            .unwrap();
+            assert_eq!(code, 0, "{policy}");
+        }
+        // --serving without --policy runs the default fleet on the
+        // generic engine (context flows, EnergyUCB ignores it).
+        assert_eq!(
+            dispatch(&["fleet", "--apps", "tealeaf", "--batch", "2", "--steps", "100", "--serving"])
+                .unwrap(),
+            0
+        );
+    }
+
+    #[test]
+    fn cluster_shard_retries_flag_parses_and_rejects_garbage() {
+        assert_eq!(
+            dispatch(&[
+                "cluster", "--nodes", "3", "--jobs", "2", "--scenario", "staggered", "--seed",
+                "5", "--shard-retries", "1",
+            ])
+            .unwrap(),
+            0
+        );
+        assert!(dispatch(&["cluster", "--shard-retries", "x"]).is_err());
+        assert!(dispatch(&["cluster", "--shard-retries", "-1"]).is_err());
     }
 
     #[test]

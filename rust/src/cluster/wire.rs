@@ -163,6 +163,17 @@ impl WireCodec for PolicyConfig {
                 j.set("name", "panicafter");
                 j.set("after", u64_to_json(*after));
             }
+            PolicyConfig::LinUcb { alpha, ridge } => {
+                j.set("name", "linucb");
+                j.set("alpha", f64_to_json(*alpha));
+                j.set("ridge", f64_to_json(*ridge));
+            }
+            PolicyConfig::CLinUcb { alpha, ridge, delta } => {
+                j.set("name", "clinucb");
+                j.set("alpha", f64_to_json(*alpha));
+                j.set("ridge", f64_to_json(*ridge));
+                j.set("delta", f64_to_json(*delta));
+            }
         }
         j
     }
@@ -190,6 +201,15 @@ impl WireCodec for PolicyConfig {
             "rlpower" => PolicyConfig::RlPower,
             "drlcap" => PolicyConfig::DrlCap { mode: str_field(v, "mode")? },
             "panicafter" => PolicyConfig::PanicAfter { after: u64_field(v, "after")? },
+            "linucb" => PolicyConfig::LinUcb {
+                alpha: f64_field(v, "alpha")?,
+                ridge: f64_field(v, "ridge")?,
+            },
+            "clinucb" => PolicyConfig::CLinUcb {
+                alpha: f64_field(v, "alpha")?,
+                ridge: f64_field(v, "ridge")?,
+                delta: f64_field(v, "delta")?,
+            },
             other => return err(format!("unknown policy: {other}")),
         })
     }
@@ -320,10 +340,22 @@ impl WireCodec for RunMetrics {
         j.set("cumulative_regret", f64_to_json(self.cumulative_regret));
         j.set("steps", u64_to_json(self.steps));
         j.set("completed", f64_to_json(self.completed));
+        // Written only when populated, so context-free shard streams
+        // stay byte-identical to the pre-QoS grammar.
+        if let Some(q) = self.qos_violation_frac {
+            j.set("qos_violation_frac", f64_to_json(q));
+        }
         j
     }
 
     fn from_wire(v: &Json) -> Result<Self, WireError> {
+        let qos_violation_frac = match v.get("qos_violation_frac") {
+            None => None,
+            Some(x) => Some(
+                f64_from_json(x)
+                    .map_err(|e| WireError(format!("qos_violation_frac: {}", e.0)))?,
+            ),
+        };
         Ok(RunMetrics {
             app: str_field(v, "app")?,
             policy: str_field(v, "policy")?,
@@ -335,6 +367,7 @@ impl WireCodec for RunMetrics {
             cumulative_regret: f64_field(v, "cumulative_regret")?,
             steps: u64_field(v, "steps")?,
             completed: f64_field(v, "completed")?,
+            qos_violation_frac,
         })
     }
 }
@@ -557,6 +590,8 @@ mod tests {
             PolicyConfig::RlPower,
             PolicyConfig::DrlCap { mode: "cross".into() },
             PolicyConfig::PanicAfter { after: 42 },
+            PolicyConfig::LinUcb { alpha: 0.4, ridge: 1.0 },
+            PolicyConfig::CLinUcb { alpha: 0.4, ridge: 2.0, delta: 0.05 },
         ];
         for p in policies {
             let j = p.to_wire();

@@ -20,6 +20,13 @@ pub enum PolicyConfig {
     Static { arm: usize },
     RlPower,
     DrlCap { mode: String },
+    /// Contextual LinUCB over the serving feature vector
+    /// ([`crate::bandit::LinUcb`]); the context dimension is pinned to
+    /// [`crate::bandit::CONTEXT_DIM`].
+    LinUcb { alpha: f64, ridge: f64 },
+    /// QoS-constrained Contextual LinUCB ([`crate::bandit::CLinUcb`]):
+    /// LinUCB scoring behind the slowdown-budget feasibility machinery.
+    CLinUcb { alpha: f64, ridge: f64, delta: f64 },
     /// Fault-injection test policy: panics after `after` decisions
     /// ([`crate::bandit::PanicAfter`]). Config/wire-buildable so cluster
     /// chaos tests can crash a worker deterministically; deliberately
@@ -47,6 +54,11 @@ pub struct ExperimentConfig {
     /// Per-transition DVFS cost (`[switch] latency_s / energy_j`; defaults
     /// to the paper's measured 150 µs / 0.3 J).
     pub switch_cost: SwitchCost,
+    /// Inference-serving scenario (`[serving]` table): attaches a bursty
+    /// arrival-process workload whose feature vector reaches contextual
+    /// policies as per-step context. `None` = the classic context-free
+    /// session.
+    pub serving: Option<crate::workload::serving::ServingCfg>,
 }
 
 impl Default for ExperimentConfig {
@@ -62,6 +74,7 @@ impl Default for ExperimentConfig {
             out_dir: "results".into(),
             freqs: FreqDomain::aurora(),
             switch_cost: SwitchCost::default(),
+            serving: None,
         }
     }
 }
@@ -183,6 +196,12 @@ impl ExperimentConfig {
             }
             cfg.switch_cost.energy_j = v;
         }
+        if let Some(s) = root.get("serving") {
+            if s.as_table().is_none() {
+                return invalid("[serving] must be a table");
+            }
+            cfg.serving = Some(parse_serving(s)?);
+        }
         if root.get_str("policy.name").is_some() {
             cfg.policy = PolicyConfig::from_value(root.get("policy").unwrap())?;
         }
@@ -193,6 +212,76 @@ impl ExperimentConfig {
     pub fn build_policy(&self, k: usize, seed: u64) -> Box<dyn crate::bandit::Policy> {
         self.policy.build(k, seed)
     }
+}
+
+/// Parse and validate a `[serving]` table into a [`ServingCfg`]. The
+/// checks mirror `ServingModel::new`'s asserts so a bad config surfaces
+/// as a [`ConfigError`] instead of a panic.
+fn parse_serving(
+    s: &Value,
+) -> Result<crate::workload::serving::ServingCfg, ConfigError> {
+    let mut c = crate::workload::serving::ServingCfg::default();
+    if let Some(v) = s.get_float("base_rate") {
+        if v <= 0.0 {
+            return invalid("serving.base_rate must be > 0");
+        }
+        c.base_rate = v;
+    }
+    if let Some(v) = s.get_int("diurnal_period") {
+        if v < 1 {
+            return invalid("serving.diurnal_period must be >= 1");
+        }
+        c.diurnal_period = v as u64;
+    }
+    if let Some(v) = s.get_float("diurnal_amp") {
+        if !(0.0..1.0).contains(&v) {
+            return invalid("serving.diurnal_amp must be in [0, 1)");
+        }
+        c.diurnal_amp = v;
+    }
+    if let Some(v) = s.get_float("burst_prob") {
+        if !(0.0..1.0).contains(&v) {
+            return invalid("serving.burst_prob must be in [0, 1)");
+        }
+        c.burst_prob = v;
+    }
+    if let Some(v) = s.get_float("burst_mean") {
+        if v < 1.0 {
+            return invalid("serving.burst_mean must be >= 1");
+        }
+        c.burst_mean = v;
+    }
+    if let Some(v) = s.get_float("burst_boost") {
+        if v < 1.0 {
+            return invalid("serving.burst_boost must be >= 1");
+        }
+        c.burst_boost = v;
+    }
+    if let Some(v) = s.get_float("tokens_per_req") {
+        if v <= 0.0 {
+            return invalid("serving.tokens_per_req must be > 0");
+        }
+        c.tokens_per_req = v;
+    }
+    if let Some(v) = s.get_float("capacity_tokens") {
+        if v <= 0.0 {
+            return invalid("serving.capacity_tokens must be > 0");
+        }
+        c.capacity_tokens = v;
+    }
+    if let Some(v) = s.get_float("ttft_budget") {
+        if v <= 0.0 {
+            return invalid("serving.ttft_budget must be > 0");
+        }
+        c.ttft_budget = v;
+    }
+    if let Some(v) = s.get_int("seed") {
+        if v < 0 {
+            return invalid("serving.seed must be >= 0");
+        }
+        c.seed = v as u64;
+    }
+    Ok(c)
 }
 
 impl PolicyConfig {
@@ -272,6 +361,25 @@ impl PolicyConfig {
                 }
                 PolicyConfig::Static { arm: arm as usize }
             }
+            "linucb" | "clinucb" => {
+                let alpha = tbl.get_float("alpha").unwrap_or(1.0);
+                if alpha < 0.0 {
+                    return invalid("alpha must be >= 0");
+                }
+                let ridge = tbl.get_float("ridge").unwrap_or(1.0);
+                if ridge <= 0.0 {
+                    return invalid("ridge must be > 0");
+                }
+                if name == "linucb" {
+                    PolicyConfig::LinUcb { alpha, ridge }
+                } else {
+                    let delta = tbl.get_float("delta").unwrap_or(0.05);
+                    if !(0.0..1.0).contains(&delta) {
+                        return invalid("delta must be in [0, 1)");
+                    }
+                    PolicyConfig::CLinUcb { alpha, ridge, delta }
+                }
+            }
             "rlpower" => PolicyConfig::RlPower,
             "drlcap" => PolicyConfig::DrlCap {
                 mode: tbl.get_str("mode").unwrap_or("pretrain").to_string(),
@@ -316,6 +424,12 @@ impl PolicyConfig {
                 Box::new(DrlCap::new(k, m, seed))
             }
             PolicyConfig::PanicAfter { after } => Box::new(PanicAfter::new(k, *after)),
+            PolicyConfig::LinUcb { alpha, ridge } => {
+                Box::new(LinUcb::new(k, CONTEXT_DIM, *alpha, *ridge))
+            }
+            PolicyConfig::CLinUcb { alpha, ridge, delta } => {
+                Box::new(CLinUcb::new(k, CONTEXT_DIM, *alpha, *ridge, *delta))
+            }
         }
     }
 
@@ -356,6 +470,23 @@ impl PolicyConfig {
             PolicyConfig::EpsilonGreedy { eps0, decay_c } => {
                 Box::new(BatchEpsilonGreedy::new(b, k, *eps0, *decay_c, seed))
             }
+            PolicyConfig::LinUcb { alpha, ridge } => Box::new(crate::bandit::BatchLinUcb::new(
+                b,
+                k,
+                crate::bandit::CONTEXT_DIM,
+                *alpha,
+                *ridge,
+            )),
+            PolicyConfig::CLinUcb { alpha, ridge, delta } => {
+                Box::new(crate::bandit::BatchCLinUcb::new(
+                    b,
+                    k,
+                    crate::bandit::CONTEXT_DIM,
+                    *alpha,
+                    *ridge,
+                    *delta,
+                ))
+            }
             // Everything else (Thompson, static, round-robin, RL baselines,
             // warmup/discount ablation configurations) rides the bridge.
             other => Box::new(Scalar::new(
@@ -378,7 +509,9 @@ impl PolicyConfig {
             }
             PolicyConfig::Ucb1 { .. }
             | PolicyConfig::SwUcb { .. }
-            | PolicyConfig::EpsilonGreedy { .. } => true,
+            | PolicyConfig::EpsilonGreedy { .. }
+            | PolicyConfig::LinUcb { .. }
+            | PolicyConfig::CLinUcb { .. } => true,
             _ => false,
         }
     }
@@ -396,6 +529,7 @@ impl PolicyConfig {
 /// transport = "tcp"           # optional: in-process|subprocess|tcp
 /// listen = "127.0.0.1:0"      # optional: TCP listen address
 /// shard_timeout_s = 120.0     # optional: per-shard read deadline
+/// shard_retries = 2           # optional: dead-shard requeue budget
 /// preset = "mixed"            # optional base: uniform|mixed|staggered|hetero|chaos
 /// pick = "weighted"           # or "round_robin"
 ///
@@ -440,6 +574,10 @@ pub struct ClusterFileConfig {
     /// this long is declared dead and its shard requeued. `None` = the
     /// CLI default (120 s).
     pub shard_timeout_s: Option<f64>,
+    /// How many times a shard whose worker died may be requeued before
+    /// the run aborts (`shard_retries = N` / `--shard-retries N`; 0 =
+    /// fail fast on the first death). `None` = the leader default (2).
+    pub shard_retries: Option<usize>,
     pub heartbeat_steps: u64,
     /// Fleet-wide default policy (per-app overrides ride on the slots).
     pub policy: PolicyConfig,
@@ -455,6 +593,7 @@ impl Default for ClusterFileConfig {
             transport: None,
             listen: None,
             shard_timeout_s: None,
+            shard_retries: None,
             heartbeat_steps: 1_000,
             policy: PolicyConfig::EnergyUcb(EnergyUcbConfig::default()),
             schedule: crate::cluster::ScenarioSchedule::preset("uniform", 2026)
@@ -522,6 +661,12 @@ impl ClusterFileConfig {
                 return invalid("cluster.shard_timeout_s must be > 0");
             }
             cfg.shard_timeout_s = Some(v);
+        }
+        if let Some(v) = c.get_int("shard_retries") {
+            if v < 0 {
+                return invalid("cluster.shard_retries must be >= 0");
+            }
+            cfg.shard_retries = Some(v as usize);
         }
         if let Some(v) = c.get_int("heartbeat_steps") {
             if v < 1 {
@@ -681,6 +826,8 @@ alpha = -1.0
             "static",
             "rlpower",
             "drlcap",
+            "linucb",
+            "clinucb",
         ] {
             let text = format!("[policy]\nname = \"{name}\"");
             let c = ExperimentConfig::from_toml(&text).unwrap();
@@ -810,6 +957,79 @@ arm = 7
         let a = c.schedule.assignments(c.nodes).unwrap();
         assert_eq!(a.len(), 24);
         assert!(a.iter().all(|x| x.max_steps.is_some() && x.switch_cost.is_some()));
+    }
+
+    #[test]
+    fn linucb_config_parses_and_validates() {
+        let text = "[policy]\nname = \"linucb\"\nalpha = 0.4\nridge = 2.0";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.policy, PolicyConfig::LinUcb { alpha: 0.4, ridge: 2.0 });
+        assert!(c.policy.batch_honors_mask());
+        let text = "[policy]\nname = \"clinucb\"\ndelta = 0.1";
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        assert_eq!(c.policy, PolicyConfig::CLinUcb { alpha: 1.0, ridge: 1.0, delta: 0.1 });
+        assert!(c.policy.batch_honors_mask());
+        assert!(ExperimentConfig::from_toml("[policy]\nname = \"linucb\"\nalpha = -0.1").is_err());
+        assert!(ExperimentConfig::from_toml("[policy]\nname = \"linucb\"\nridge = 0.0").is_err());
+        assert!(ExperimentConfig::from_toml("[policy]\nname = \"clinucb\"\ndelta = 1.0").is_err());
+    }
+
+    #[test]
+    fn serving_table_parses_and_validates() {
+        // Absent table: no serving scenario.
+        assert_eq!(ExperimentConfig::from_toml("").unwrap().serving, None);
+        let text = r#"
+[serving]
+base_rate = 8.0
+diurnal_period = 500
+diurnal_amp = 0.3
+burst_prob = 0.05
+ttft_budget = 1.5
+seed = 7
+"#;
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        let s = c.serving.unwrap();
+        assert!((s.base_rate - 8.0).abs() < 1e-12);
+        assert_eq!(s.diurnal_period, 500);
+        assert!((s.diurnal_amp - 0.3).abs() < 1e-12);
+        assert!((s.burst_prob - 0.05).abs() < 1e-12);
+        assert!((s.ttft_budget - 1.5).abs() < 1e-12);
+        assert_eq!(s.seed, 7);
+        // Unset keys keep the defaults.
+        let d = crate::workload::serving::ServingCfg::default();
+        assert!((s.capacity_tokens - d.capacity_tokens).abs() < 1e-12);
+        // An empty [serving] table is the default scenario.
+        assert_eq!(
+            ExperimentConfig::from_toml("[serving]\n").unwrap().serving,
+            Some(d)
+        );
+        // Every range check is a config error, not a model panic.
+        for bad in [
+            "[serving]\nbase_rate = 0.0",
+            "[serving]\ndiurnal_period = 0",
+            "[serving]\ndiurnal_amp = 1.0",
+            "[serving]\nburst_prob = 1.0",
+            "[serving]\nburst_mean = 0.5",
+            "[serving]\nburst_boost = 0.9",
+            "[serving]\ntokens_per_req = -1.0",
+            "[serving]\ncapacity_tokens = 0.0",
+            "[serving]\nttft_budget = 0.0",
+            "[serving]\nseed = -1",
+        ] {
+            assert!(ExperimentConfig::from_toml(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn cluster_shard_retries_parses_and_validates() {
+        let c = ClusterFileConfig::from_toml("[cluster]\nshard_retries = 5").unwrap();
+        assert_eq!(c.shard_retries, Some(5));
+        // 0 = fail fast on the first worker death.
+        let c = ClusterFileConfig::from_toml("[cluster]\nshard_retries = 0").unwrap();
+        assert_eq!(c.shard_retries, Some(0));
+        // Absent: the leader default decides.
+        assert_eq!(ClusterFileConfig::from_toml("").unwrap().shard_retries, None);
+        assert!(ClusterFileConfig::from_toml("[cluster]\nshard_retries = -1").is_err());
     }
 
     #[test]

@@ -28,6 +28,7 @@ use std::io::Write;
 use crate::geopm::{Control, Service};
 use crate::sim::node::Node;
 use crate::workload::model::AppModel;
+use crate::workload::serving::ServingModel;
 
 use super::controller::{BackendTotals, StepSample};
 use super::replay::{ReplayHeader, TelemetryFrame};
@@ -74,6 +75,12 @@ pub trait TelemetryBackend {
 #[derive(Debug)]
 pub struct SimBackend {
     service: Service,
+    // Serving tier: an arrival-process model whose feature vector rides
+    // each sample as the optional context block. `None` (the default)
+    // emits context-free samples — every legacy byte contract holds by
+    // construction.
+    serving: Option<ServingModel>,
+    last_arm: usize,
 }
 
 impl SimBackend {
@@ -87,7 +94,15 @@ impl SimBackend {
             "app calibration table must match frequency domain"
         );
         let node = Node::new(app.clone(), freqs, cfg.dt_s, cfg.seed);
-        SimBackend { service: Service::new(node) }
+        SimBackend { service: Service::new(node), serving: None, last_arm: 0 }
+    }
+
+    /// Attach a serving workload: every sample now carries the model's
+    /// feature vector, stepped under the applied arm's relative
+    /// throughput (`(arm + 1) / K`).
+    pub fn with_serving(mut self, model: ServingModel) -> SimBackend {
+        self.serving = Some(model);
+        self
     }
 
     /// The underlying service (signal reads, diagnostics).
@@ -105,6 +120,7 @@ impl TelemetryBackend for SimBackend {
         anyhow::ensure!(sel.len() == 1, "SimBackend serves B = 1, got {} selections", sel.len());
         anyhow::ensure!(sel[0] >= 0, "negative arm {}", sel[0]);
         self.service.write(Control::GpuFrequency(sel[0] as usize))?;
+        self.last_arm = sel[0] as usize;
         Ok(())
     }
 
@@ -121,7 +137,12 @@ impl TelemetryBackend for SimBackend {
             switched: s.switched,
             reward: None,
             active: true,
+            context: None,
         };
+        if let Some(model) = self.serving.as_mut() {
+            let scale = (self.last_arm + 1) as f64 / self.service.k() as f64;
+            out[0].context = Some(model.step(scale));
+        }
         Ok(())
     }
 

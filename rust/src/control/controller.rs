@@ -25,7 +25,7 @@
 //! inputs (EXPERIMENTS.md §Controller).
 
 use crate::bandit::batch::{BatchPolicy, Scalar};
-use crate::bandit::{Policy, RewardForm, RewardNormalizer};
+use crate::bandit::{Policy, RewardForm, RewardNormalizer, CONTEXT_DIM};
 use crate::telemetry::{Counter, Gauge, Recorder};
 use crate::workload::model::AppModel;
 use crate::workload::trace::{Trace, TraceStep};
@@ -64,6 +64,13 @@ pub struct StepSample {
     /// Inactive rows' samples must not move policy statistics, regret,
     /// energy accounting, or traces.
     pub active: bool,
+    /// Workload context observed this interval (the serving tier's
+    /// feature vector: queue depth, arrival rate, batch occupancy,
+    /// recent util ratio — see `workload::serving`). `None` = the
+    /// backend is context-free. The controller stages an observed
+    /// context for the *next* decision, so the first decision of every
+    /// run is context-free on every path — live and replay alike.
+    pub context: Option<[f64; CONTEXT_DIM]>,
 }
 
 impl Default for StepSample {
@@ -78,6 +85,7 @@ impl Default for StepSample {
             switched: false,
             reward: None,
             active: true,
+            context: None,
         }
     }
 }
@@ -180,6 +188,17 @@ pub struct Controller<'p> {
     switch_rate: Vec<Gauge>,
     switch_counter: Vec<Counter>,
     decide_latency_us: Gauge,
+    // Context plumbing: the last observed per-row context, staged for
+    // the next decision (row-major (B, D)); `has_ctx` flips once any
+    // backend sample carries a context block and stays set.
+    ctx: Vec<f64>,
+    has_ctx: bool,
+    // TTFT-style QoS accounting (serving tier): a budget on the queue-
+    // depth context feature, violations counted per env over active
+    // context-carrying intervals.
+    qos_budget: Option<f64>,
+    qos_violations: Vec<u64>,
+    qos_steps: Vec<u64>,
 }
 
 impl<'p> Controller<'p> {
@@ -265,7 +284,23 @@ impl<'p> Controller<'p> {
             switch_rate: vec![Gauge::default(); b],
             switch_counter: vec![Counter::default(); b],
             decide_latency_us: Gauge::default(),
+            ctx: vec![0.0f64; b * CONTEXT_DIM],
+            has_ctx: false,
+            qos_budget: None,
+            qos_violations: vec![0u64; b],
+            qos_steps: vec![0u64; b],
         }
+    }
+
+    /// Attach a TTFT-style QoS budget on the queue-depth context
+    /// feature: active context-carrying intervals whose normalized
+    /// queue depth exceeds `budget` count as QoS violations, reported
+    /// per env through `RunMetrics::qos_violation_frac`. `None` (the
+    /// default) reports no QoS figure — context-free runs are
+    /// untouched.
+    pub fn with_qos_budget(mut self, budget: Option<f64>) -> Self {
+        self.qos_budget = budget;
+        self
     }
 
     /// Batch size (environments).
@@ -319,7 +354,17 @@ impl<'p> Controller<'p> {
     /// read the result from [`selections`](Self::selections).
     pub fn decide(&mut self) {
         self.t += 1;
-        self.driver.select_into(self.t, &self.feasible, &mut self.sel);
+        if self.has_ctx {
+            self.driver.select_into_ctx(
+                self.t,
+                &self.feasible,
+                &self.ctx,
+                CONTEXT_DIM,
+                &mut self.sel,
+            );
+        } else {
+            self.driver.select_into(self.t, &self.feasible, &mut self.sel);
+        }
     }
 
     /// The arms chosen by the last [`decide`](Self::decide), one per
@@ -345,6 +390,10 @@ impl<'p> Controller<'p> {
             };
             self.progress_buf[e] = s.progress;
             self.active_buf[e] = if s.active { 1.0 } else { 0.0 };
+            if let Some(c) = &s.context {
+                self.ctx[e * CONTEXT_DIM..(e + 1) * CONTEXT_DIM].copy_from_slice(c);
+                self.has_ctx = true;
+            }
         }
         self.driver.update_batch(&self.sel, &self.reward_buf, &self.progress_buf, &self.active_buf);
 
@@ -371,6 +420,13 @@ impl<'p> Controller<'p> {
             self.switch_rate[e].record(if s.switched { 1.0 } else { 0.0 });
             if s.switched {
                 self.switch_counter[e].inc();
+            }
+
+            if let (Some(budget), Some(c)) = (self.qos_budget, &s.context) {
+                self.qos_steps[e] += 1;
+                if c[0] > budget {
+                    self.qos_violations[e] += 1;
+                }
             }
 
             if let Some(tr) = self.traces[e].as_mut() {
@@ -421,6 +477,12 @@ impl<'p> Controller<'p> {
                 cumulative_regret: self.cumulative_regret[e],
                 steps: self.t,
                 completed: self.final_completed[e].clamp(0.0, 1.0),
+                qos_violation_frac: match self.qos_budget {
+                    Some(_) if self.qos_steps[e] > 0 => {
+                        Some(self.qos_violations[e] as f64 / self.qos_steps[e] as f64)
+                    }
+                    _ => None,
+                },
             };
             out.push(RunResult {
                 metrics,

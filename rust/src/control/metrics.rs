@@ -26,6 +26,11 @@ pub struct RunMetrics {
     /// Work fraction completed (1.0 = ran to job completion; < 1.0 when
     /// the run was cut off by a step budget).
     pub completed: f64,
+    /// Fraction of active intervals violating the serving tier's
+    /// TTFT-style QoS budget (normalized queue depth above budget).
+    /// `None` for context-free runs and runs without a budget — the
+    /// report surface only grows a QoS column when this is populated.
+    pub qos_violation_frac: Option<f64>,
 }
 
 impl RunMetrics {
@@ -120,6 +125,7 @@ mod tests {
             cumulative_regret: 100.0,
             steps: 4500,
             completed: 1.0,
+            qos_violation_frac: None,
         }
     }
 

@@ -24,6 +24,8 @@ pub mod sweep;
 pub use backend::{Recording, SimBackend, TelemetryBackend};
 pub use controller::{drive, drive_hooked, BackendTotals, BatchOpts, Controller, EnvSpec, StepSample};
 pub use metrics::{RepeatedMetrics, RunMetrics};
-pub use replay::{ReplayBackend, ReplayHeader, TelemetryFrame};
-pub use session::{run_repeated, run_session, RunResult, SessionCfg};
+pub use replay::{ContextSpec, ReplayBackend, ReplayHeader, TelemetryFrame};
+pub use session::{
+    run_repeated, run_repeated_serving, run_session, run_session_serving, RunResult, SessionCfg,
+};
 pub use sweep::{sweep_replay, SweepCandidate, SweepOutcome};

@@ -40,9 +40,44 @@ use crate::util::wire::{
     u64_to_json, usize_field, WireCodec, WireError,
 };
 
+use crate::bandit::CONTEXT_DIM;
+
 use super::backend::TelemetryBackend;
 use super::controller::{BackendTotals, StepSample};
 use super::session::SessionCfg;
+
+/// Grammar-version marker for contextual recordings: declares the
+/// per-step context width (today always [`CONTEXT_DIM`]) and the
+/// TTFT-style QoS budget the recorded run evaluated against, so
+/// counterfactual sweeps over a frozen contextual trace score QoS the
+/// same way the live run did. Context-free recordings omit the whole
+/// block — their header bytes are untouched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContextSpec {
+    /// Context feature-vector width (per-step, per-row).
+    pub dim: usize,
+    /// QoS budget on the queue-depth feature, when the run had one.
+    pub qos_budget: Option<f64>,
+}
+
+impl WireCodec for ContextSpec {
+    fn to_wire(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("dim", self.dim);
+        if let Some(q) = self.qos_budget {
+            j.set("qos_budget", f64_to_json(q));
+        }
+        j
+    }
+
+    fn from_wire(v: &Json) -> Result<Self, WireError> {
+        let qos_budget = match v.get("qos_budget") {
+            None => None,
+            Some(x) => Some(f64_from_json(x)?),
+        };
+        Ok(ContextSpec { dim: usize_field(v, "dim")?, qos_budget })
+    }
+}
 
 /// Run provenance carried at the head of a telemetry log: enough to
 /// rebuild the controller (app or fleet roster, session config including
@@ -65,12 +100,16 @@ pub struct ReplayHeader {
     /// Fleet-tier QoS feasibility mask, row-major (B, K), when the
     /// recorded run was constrained. `None` = all arms feasible.
     pub feasible: Option<Vec<f64>>,
+    /// Contextual-grammar marker: present iff the recording carries
+    /// per-step context blocks (the serving tier). `None` keeps the
+    /// legacy context-free header bytes.
+    pub context: Option<ContextSpec>,
 }
 
 impl ReplayHeader {
     /// Header for a scalar (B = 1) session recording.
     pub fn session(app: String, policy: Option<PolicyConfig>, session: SessionCfg) -> ReplayHeader {
-        ReplayHeader { app, policy, session, envs: Vec::new(), feasible: None }
+        ReplayHeader { app, policy, session, envs: Vec::new(), feasible: None, context: None }
     }
 
     /// Header for a batch fleet recording: one env name per row.
@@ -80,7 +119,13 @@ impl ReplayHeader {
         session: SessionCfg,
         feasible: Option<Vec<f64>>,
     ) -> ReplayHeader {
-        ReplayHeader { app: "fleet".to_string(), policy, session, envs, feasible }
+        ReplayHeader { app: "fleet".to_string(), policy, session, envs, feasible, context: None }
+    }
+
+    /// Mark the recording as contextual (see [`ContextSpec`]).
+    pub fn with_context(mut self, qos_budget: Option<f64>) -> ReplayHeader {
+        self.context = Some(ContextSpec { dim: CONTEXT_DIM, qos_budget });
+        self
     }
 
     /// Batch size of the recording (1 for scalar session logs).
@@ -112,6 +157,9 @@ impl WireCodec for ReplayHeader {
         if let Some(f) = &self.feasible {
             j.set("feasible", f64s_to_json(f));
         }
+        if let Some(c) = &self.context {
+            j.set("context", c.to_wire());
+        }
         j
     }
 
@@ -139,12 +187,17 @@ impl WireCodec for ReplayHeader {
             None => None,
             Some(x) => Some(f64s_from_json(x)?),
         };
+        let context = match v.get("context") {
+            None => None,
+            Some(x) => Some(ContextSpec::from_wire(x)?),
+        };
         Ok(ReplayHeader {
             app: str_field(v, "app")?,
             policy,
             session: SessionCfg::from_wire(field(v, "session")?)?,
             envs,
             feasible,
+            context,
         })
     }
 }
@@ -167,6 +220,11 @@ impl WireCodec for StepSample {
         if !self.active {
             j.set("active", false);
         }
+        // Contextual (serving-tier) samples append their feature
+        // vector; context-free samples keep the legacy byte shape.
+        if let Some(c) = &self.context {
+            j.set("context", f64s_to_json(&c[..]));
+        }
         j
     }
 
@@ -182,6 +240,19 @@ impl WireCodec for StepSample {
                 .as_bool()
                 .ok_or_else(|| WireError("field `active` must be a bool".into()))?,
         };
+        let context = match v.get("context") {
+            None => None,
+            Some(x) => {
+                let vals = f64s_from_json(x)?;
+                let arr: [f64; CONTEXT_DIM] = vals.as_slice().try_into().map_err(|_| {
+                    WireError(format!(
+                        "field `context` must carry exactly {CONTEXT_DIM} features, got {}",
+                        vals.len()
+                    ))
+                })?;
+                Some(arr)
+            }
+        };
         Ok(StepSample {
             gpu_energy_j: f64_field(v, "gpu_energy_j")?,
             core_util: f64_field(v, "core_util")?,
@@ -192,6 +263,7 @@ impl WireCodec for StepSample {
             switched: bool_field(v, "switched")?,
             reward,
             active,
+            context,
         })
     }
 }
@@ -381,6 +453,7 @@ impl ReplayBackend {
         let mut header: Option<ReplayHeader> = None;
         let mut b = 1usize;
         let mut k = 0usize;
+        let mut has_ctx = false;
         let mut steps: Vec<(Vec<i32>, Vec<StepSample>)> = Vec::new();
         let mut end: Option<(Vec<BackendTotals>, Option<u64>, bool)> = None;
         for (i, line) in reader.lines().enumerate() {
@@ -403,6 +476,18 @@ impl ReplayBackend {
                     }
                     b = h.b();
                     k = h.session.freqs.k();
+                    if let Some(spec) = &h.context {
+                        if spec.dim != crate::bandit::CONTEXT_DIM {
+                            anyhow::bail!(
+                                "telemetry log line {}: context spec declares dim = {}, this \
+                                 build replays dim = {} contexts only",
+                                i + 1,
+                                spec.dim,
+                                crate::bandit::CONTEXT_DIM
+                            );
+                        }
+                        has_ctx = true;
+                    }
                     header = Some(h);
                 }
                 TelemetryFrame::Step { arms, samples } => {
@@ -424,6 +509,13 @@ impl ReplayBackend {
                                 i + 1
                             );
                         }
+                    }
+                    if !has_ctx && samples.iter().any(|s| s.context.is_some()) {
+                        anyhow::bail!(
+                            "telemetry log line {}: step carries a context block but the header \
+                             declares no context spec — the recording is malformed",
+                            i + 1
+                        );
                     }
                     steps.push((arms, samples));
                 }

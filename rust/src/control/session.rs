@@ -17,6 +17,7 @@ use crate::bandit::RewardForm;
 use crate::sim::freq::{FreqDomain, SwitchCost};
 use crate::telemetry::Recorder;
 use crate::workload::model::AppModel;
+use crate::workload::serving::{ServingCfg, ServingModel};
 use crate::workload::trace::Trace;
 
 use super::backend::SimBackend;
@@ -115,6 +116,48 @@ pub fn run_session(app: &AppModel, policy: &mut dyn Policy, cfg: &SessionCfg) ->
         .expect("simulated backend is infallible")
         .pop()
         .expect("B = 1 drive yields exactly one result")
+}
+
+/// [`run_session`] under an inference-serving workload: the backend
+/// carries a [`ServingModel`] whose feature vector rides every sample as
+/// context, and the controller scores the TTFT-style QoS budget
+/// ([`RunMetrics::qos_violation_frac`]). Context-free policies behave
+/// exactly as in [`run_session`] modulo the serving model's samples —
+/// the decision plane only *offers* the context.
+pub fn run_session_serving(
+    app: &AppModel,
+    policy: &mut dyn Policy,
+    cfg: &SessionCfg,
+    serving: &ServingCfg,
+) -> RunResult {
+    let mut backend = SimBackend::new(app, cfg).with_serving(ServingModel::new(serving.clone()));
+    let controller =
+        Controller::new(app, policy, cfg).with_qos_budget(Some(serving.ttft_budget));
+    drive(controller, &mut backend)
+        .expect("simulated backend is infallible")
+        .pop()
+        .expect("B = 1 drive yields exactly one result")
+}
+
+/// [`run_repeated`] under a serving workload: rep `r` shifts both the
+/// session seed and the serving arrival-process seed by `r`, so reps see
+/// independent-but-reproducible traffic.
+pub fn run_repeated_serving(
+    app: &AppModel,
+    policy: &mut dyn Policy,
+    cfg: &SessionCfg,
+    serving: &ServingCfg,
+    reps: usize,
+    seed0: u64,
+) -> Vec<RunResult> {
+    (0..reps)
+        .map(|r| {
+            policy.reset();
+            let cfg = SessionCfg { seed: seed0 + r as u64, ..cfg.clone() };
+            let srv = ServingCfg { seed: serving.seed + r as u64, ..serving.clone() };
+            run_session_serving(app, policy, &cfg, &srv)
+        })
+        .collect()
 }
 
 /// Run `reps` sessions with seeds `seed0..seed0+reps`, resetting the policy

@@ -100,7 +100,11 @@ fn run_candidate(
         // Fresh-run contract: reset == freshly built, matching the
         // recorded session's starting state.
         policy.reset();
-        let controller = Controller::new(&app, policy.as_mut(), scfg);
+        // Contextual recordings carry their QoS budget in the header, so
+        // every counterfactual candidate scores QoS the way the live run
+        // did (context-free recordings leave it None — no QoS column).
+        let controller = Controller::new(&app, policy.as_mut(), scfg)
+            .with_qos_budget(header.context.and_then(|c| c.qos_budget));
         drive(controller, &mut backend)
             .with_context(|| format!("sweep candidate {idx} ({})", cand.policy_name()))?
     } else {
@@ -130,7 +134,8 @@ fn run_candidate(
             params.feasible = f.iter().map(|&x| x as f32).collect();
         }
         let driver = cand.policy.build_batch(b, k, scfg.seed);
-        let controller = fleet_controller(&params, driver, scfg.max_steps);
+        let controller = fleet_controller(&params, driver, scfg.max_steps)
+            .with_qos_budget(header.context.and_then(|c| c.qos_budget));
         drive(controller, &mut backend)
             .with_context(|| format!("sweep candidate {idx} ({})", cand.policy_name()))?
     };

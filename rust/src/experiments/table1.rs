@@ -354,6 +354,7 @@ mod tests {
                 cumulative_regret: 0.0,
                 steps: 100,
                 completed: 1.0,
+                qos_violation_frac: None,
             },
             trace: None,
             energy_checkpoints_j: (1..=100).map(|i| i as f64 * 10.0).collect(),

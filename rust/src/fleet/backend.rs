@@ -19,6 +19,7 @@ use crate::bandit::batch::BatchPolicy;
 use crate::bandit::RewardForm;
 use crate::control::{BackendTotals, BatchOpts, Controller, EnvSpec, StepSample, TelemetryBackend};
 use crate::util::Rng;
+use crate::workload::serving::ServingModel;
 
 use super::native::{self, StepScratch};
 use super::state::{FleetParams, FleetState};
@@ -32,6 +33,10 @@ pub struct FleetBackend<'a> {
     noise: Vec<f32>,
     samples: Vec<StepSample>,
     steps: u64,
+    // Serving tier: one arrival-process model per row, stepped after
+    // the bit-pinned dynamics so the HLO contract is untouched. `None`
+    // (the default) emits context-free samples.
+    serving: Option<Vec<ServingModel>>,
 }
 
 impl<'a> FleetBackend<'a> {
@@ -51,7 +56,17 @@ impl<'a> FleetBackend<'a> {
             noise: vec![0.0f32; b],
             samples: vec![StepSample::default(); b],
             steps: 0,
+            serving: None,
         }
+    }
+
+    /// Attach one serving workload per row: every row's sample then
+    /// carries its model's feature vector, stepped under the applied
+    /// arm's relative throughput (`(arm + 1) / K`).
+    pub fn with_serving(mut self, models: Vec<ServingModel>) -> FleetBackend<'a> {
+        assert_eq!(models.len(), self.state.b, "one serving model per fleet row");
+        self.serving = Some(models);
+        self
     }
 
     /// Decision intervals advanced so far.
@@ -108,7 +123,12 @@ impl TelemetryBackend for FleetBackend<'_> {
                 // (f32 widened exactly to f64) — no RewardForm pass.
                 reward: Some(self.scratch.reward[e]),
                 active,
+                context: None,
             };
+            if let Some(models) = self.serving.as_mut() {
+                let scale = (s + 1) as f64 / k as f64;
+                self.samples[e].context = Some(models[e].step(scale));
+            }
         }
         for e in 0..b {
             if self.scratch.active[e] > 0.0 {

@@ -5,8 +5,10 @@
 pub mod calibration;
 pub mod model;
 pub mod phase;
+pub mod serving;
 pub mod trace;
 pub mod trace_calibration;
 
 pub use calibration::{all_apps, app, APP_NAMES};
 pub use model::{AppModel, Boundedness, NoiseSpec, TimeCurve};
+pub use serving::{ServingCfg, ServingModel};

@@ -1,0 +1,305 @@
+//! Inference-serving workload model: a bursty Poisson/diurnal arrival
+//! process standing in for live traffic, emitting the per-step feature
+//! vector the contextual decision plane consumes.
+//!
+//! The model is a token-bucket queue in front of a server whose
+//! throughput scales with the chosen frequency arm. Each decision
+//! interval: requests arrive Poisson(λ(t)) where λ(t) carries a diurnal
+//! sinusoid plus geometric-length burst episodes (the flash-crowd
+//! pattern serving fleets see); each request enqueues a fixed token
+//! budget; the server drains up to `capacity_tokens · service_scale`
+//! tokens. The emitted features (all O(1) magnitude, capacity-relative):
+//!
+//! | index | feature                                                 |
+//! |-------|---------------------------------------------------------|
+//! | 0     | queue depth (tokens backlogged / full capacity)          |
+//! | 1     | recent token arrival rate (EMA, capacity-relative)       |
+//! | 2     | batch occupancy (tokens served / full capacity)          |
+//! | 3     | recent server utilization (EMA of served / offered)      |
+//!
+//! Feature 0 doubles as the TTFT proxy: a backlog of q capacity-units
+//! means a newly arrived request waits ≈ q intervals before its first
+//! token, so the serving tier's QoS budget is expressed against it
+//! (`RunMetrics::qos_violation_frac`).
+//!
+//! Determinism: the model owns its own [`Rng`] stream forked from
+//! `cfg.seed`, independent of the node simulator's noise streams —
+//! attaching a serving model to a backend cannot perturb any existing
+//! context-free byte contract. The feature stream is a pure function of
+//! (cfg, seed, the sequence of applied `service_scale`s).
+
+use crate::util::rng::Rng;
+
+/// Arrival-process and server-capacity knobs for [`ServingModel`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingCfg {
+    /// Mean request arrivals per decision interval at the diurnal
+    /// midpoint, outside bursts.
+    pub base_rate: f64,
+    /// Decision intervals per diurnal cycle.
+    pub diurnal_period: u64,
+    /// Diurnal modulation depth in [0, 1): λ swings between
+    /// `base_rate·(1−amp)` and `base_rate·(1+amp)`.
+    pub diurnal_amp: f64,
+    /// Per-interval probability of entering a burst episode.
+    pub burst_prob: f64,
+    /// Mean burst length, intervals (episode lengths are uniform on
+    /// `1..2·burst_mean`, mean ≈ `burst_mean`).
+    pub burst_mean: f64,
+    /// Arrival-rate multiplier while a burst is active.
+    pub burst_boost: f64,
+    /// Tokens enqueued per request.
+    pub tokens_per_req: f64,
+    /// Tokens the server drains per interval at the top frequency arm.
+    pub capacity_tokens: f64,
+    /// TTFT-style QoS budget on the queue-depth feature (capacity
+    /// units of backlog a request may wait behind).
+    pub ttft_budget: f64,
+    /// Seed of the model's private arrival-noise stream.
+    pub seed: u64,
+}
+
+impl Default for ServingCfg {
+    fn default() -> ServingCfg {
+        ServingCfg {
+            base_rate: 4.0,
+            diurnal_period: 2_000,
+            diurnal_amp: 0.6,
+            burst_prob: 0.02,
+            burst_mean: 4.0,
+            burst_boost: 3.0,
+            tokens_per_req: 48.0,
+            capacity_tokens: 256.0,
+            ttft_budget: 2.0,
+            seed: 0,
+        }
+    }
+}
+
+/// The serving workload state machine (see module docs).
+#[derive(Clone, Debug)]
+pub struct ServingModel {
+    cfg: ServingCfg,
+    rng: Rng,
+    t: u64,
+    queue_tokens: f64,
+    burst_left: u64,
+    arrival_ema: f64,
+    util_ema: f64,
+}
+
+/// EMA retention for the rate/utilization features (≈ 5-interval
+/// effective window: recent enough to track bursts, smooth enough that
+/// the context is not raw noise).
+const EMA_KEEP: f64 = 0.8;
+
+/// Stream key of the serving model's private fork of the seed: keeps
+/// its draws disjoint from every node-simulator noise stream.
+const SERVING_STREAM: u64 = 0x5e12_71c0;
+
+impl ServingModel {
+    pub fn new(cfg: ServingCfg) -> ServingModel {
+        assert!(cfg.base_rate > 0.0, "base_rate must be positive");
+        assert!(cfg.diurnal_period > 0, "diurnal_period must be positive");
+        assert!(
+            (0.0..1.0).contains(&cfg.diurnal_amp),
+            "diurnal_amp must lie in [0, 1)"
+        );
+        assert!((0.0..1.0).contains(&cfg.burst_prob), "burst_prob must lie in [0, 1)");
+        assert!(cfg.burst_mean >= 1.0, "burst_mean must be >= 1");
+        assert!(cfg.burst_boost >= 1.0, "burst_boost must be >= 1");
+        assert!(cfg.tokens_per_req > 0.0, "tokens_per_req must be positive");
+        assert!(cfg.capacity_tokens > 0.0, "capacity_tokens must be positive");
+        assert!(cfg.ttft_budget > 0.0, "ttft_budget must be positive");
+        let rng = Rng::new(cfg.seed).fork(SERVING_STREAM);
+        ServingModel {
+            cfg,
+            rng,
+            t: 0,
+            queue_tokens: 0.0,
+            burst_left: 0,
+            arrival_ema: 0.0,
+            util_ema: 0.0,
+        }
+    }
+
+    /// The configured TTFT budget (queue-depth units).
+    pub fn ttft_budget(&self) -> f64 {
+        self.cfg.ttft_budget
+    }
+
+    /// Current arrival intensity λ(t): diurnal sinusoid times the burst
+    /// boost when an episode is active.
+    fn rate(&self) -> f64 {
+        let phase = std::f64::consts::TAU * (self.t as f64 / self.cfg.diurnal_period as f64);
+        let diurnal = 1.0 + self.cfg.diurnal_amp * phase.sin();
+        let boost = if self.burst_left > 0 { self.cfg.burst_boost } else { 1.0 };
+        self.cfg.base_rate * diurnal * boost
+    }
+
+    /// Poisson(λ) arrival count: Knuth's product method for small λ,
+    /// clamped rounded-normal approximation above (λ > 30 makes the
+    /// product method both slow and numerically degenerate).
+    fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let n = self.rng.normal(lambda, lambda.sqrt()).round();
+            return n.max(0.0) as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0f64;
+        loop {
+            p *= self.rng.uniform();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Advance one decision interval under a server throughput of
+    /// `service_scale` (fraction of top-arm capacity, in (0, 1]) and
+    /// return the emitted feature vector.
+    pub fn step(&mut self, service_scale: f64) -> [f64; 4] {
+        debug_assert!(
+            service_scale > 0.0 && service_scale <= 1.0 + 1e-12,
+            "service_scale must lie in (0, 1], got {service_scale}"
+        );
+        // Burst bookkeeping before sampling arrivals, so an episode's
+        // first interval already sees the boosted rate.
+        if self.burst_left > 0 {
+            self.burst_left -= 1;
+        } else if self.rng.chance(self.cfg.burst_prob) {
+            self.burst_left = 1 + self.rng.below((2.0 * self.cfg.burst_mean) as u64);
+        }
+        let lambda = self.rate();
+        self.t += 1;
+
+        let arrivals = self.poisson(lambda) as f64;
+        self.queue_tokens += arrivals * self.cfg.tokens_per_req;
+
+        let offered = self.cfg.capacity_tokens * service_scale;
+        let served = self.queue_tokens.min(offered);
+        self.queue_tokens -= served;
+
+        let arrival_rate = arrivals * self.cfg.tokens_per_req / self.cfg.capacity_tokens;
+        self.arrival_ema = EMA_KEEP * self.arrival_ema + (1.0 - EMA_KEEP) * arrival_rate;
+        let util = if offered > 0.0 { served / offered } else { 0.0 };
+        self.util_ema = EMA_KEEP * self.util_ema + (1.0 - EMA_KEEP) * util;
+
+        [
+            self.queue_tokens / self.cfg.capacity_tokens,
+            self.arrival_ema,
+            served / self.cfg.capacity_tokens,
+            self.util_ema,
+        ]
+    }
+
+    /// Restore the fresh post-construction state (same seed, same
+    /// future feature stream).
+    pub fn reset(&mut self) {
+        self.rng = Rng::new(self.cfg.seed).fork(SERVING_STREAM);
+        self.t = 0;
+        self.queue_tokens = 0.0;
+        self.burst_left = 0;
+        self.arrival_ema = 0.0;
+        self.util_ema = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_stream_is_deterministic_per_seed() {
+        let mut a = ServingModel::new(ServingCfg { seed: 7, ..ServingCfg::default() });
+        let mut b = ServingModel::new(ServingCfg { seed: 7, ..ServingCfg::default() });
+        let mut c = ServingModel::new(ServingCfg { seed: 8, ..ServingCfg::default() });
+        let mut diverged = false;
+        for i in 0..500 {
+            let scale = 0.4 + 0.6 * ((i % 5) as f64 / 4.0).min(1.0);
+            let fa = a.step(scale);
+            assert_eq!(fa, b.step(scale), "same seed must agree at step {i}");
+            if fa != c.step(scale) {
+                diverged = true;
+            }
+        }
+        assert!(diverged, "different seeds must not produce identical streams");
+    }
+
+    #[test]
+    fn reset_replays_the_exact_stream() {
+        let mut m = ServingModel::new(ServingCfg { seed: 3, ..ServingCfg::default() });
+        let first: Vec<[f64; 4]> = (0..100).map(|_| m.step(0.75)).collect();
+        m.reset();
+        let second: Vec<[f64; 4]> = (0..100).map(|_| m.step(0.75)).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn features_stay_finite_and_capacity_relative() {
+        let mut m = ServingModel::new(ServingCfg::default());
+        for i in 0..2_000 {
+            let scale = if i % 7 == 0 { 0.2 } else { 1.0 };
+            let f = m.step(scale);
+            assert!(f.iter().all(|x| x.is_finite() && *x >= 0.0), "{f:?}");
+            // Occupancy and utilization are bounded by construction.
+            assert!(f[2] <= 1.0 + 1e-12, "{f:?}");
+            assert!(f[3] <= 1.0 + 1e-12, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn low_service_scale_backs_the_queue_up() {
+        // Offered load ≈ 4·48 = 192 tokens/interval vs capacity 256:
+        // serving at full scale keeps the queue near zero, serving at
+        // half scale (128 tokens) cannot keep up and backlog grows.
+        let steps = 400;
+        let mut fast = ServingModel::new(ServingCfg { seed: 1, ..ServingCfg::default() });
+        let mut slow = ServingModel::new(ServingCfg { seed: 1, ..ServingCfg::default() });
+        let mut q_fast = 0.0;
+        let mut q_slow = 0.0;
+        for _ in 0..steps {
+            q_fast = fast.step(1.0)[0];
+            q_slow = slow.step(0.5)[0];
+        }
+        assert!(
+            q_slow > q_fast + 1.0,
+            "half-capacity service must backlog (fast {q_fast}, slow {q_slow})"
+        );
+    }
+
+    #[test]
+    fn bursts_raise_the_arrival_rate() {
+        let mut m = ServingModel::new(ServingCfg::default());
+        let base = m.rate();
+        m.burst_left = 3;
+        assert!((m.rate() - base * m.cfg.burst_boost).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_sampler_tracks_its_mean() {
+        let mut m = ServingModel::new(ServingCfg { seed: 11, ..ServingCfg::default() });
+        for &lambda in &[0.5, 4.0, 25.0, 80.0] {
+            let n = 4_000;
+            let mean =
+                (0..n).map(|_| m.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < 4.0 * (lambda / n as f64).sqrt() + 0.05,
+                "λ = {lambda}: sample mean {mean}"
+            );
+        }
+        assert_eq!(m.poisson(0.0), 0);
+        assert_eq!(m.poisson(-1.0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "diurnal_amp")]
+    fn out_of_range_amp_is_rejected() {
+        let _ = ServingModel::new(ServingCfg { diurnal_amp: 1.0, ..ServingCfg::default() });
+    }
+}

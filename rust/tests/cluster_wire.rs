@@ -48,7 +48,7 @@ impl Gen for PolicyGen {
     type Value = PolicyConfig;
 
     fn generate(&self, rng: &mut Rng) -> PolicyConfig {
-        match rng.index(10) {
+        match rng.index(12) {
             0 => PolicyConfig::EnergyUcb(gen_ucb(rng)),
             1 => PolicyConfig::ConstrainedEnergyUcb { ucb: gen_ucb(rng), delta: rng.uniform() },
             2 => PolicyConfig::Ucb1 { alpha: rng.uniform() },
@@ -64,6 +64,15 @@ impl Gen for PolicyGen {
                 alpha: rng.uniform(),
                 lambda: rng.uniform_range(0.0, 0.1),
                 window: 1 + rng.index(2_000),
+            },
+            9 => PolicyConfig::LinUcb {
+                alpha: rng.uniform_range(0.0, 2.0),
+                ridge: rng.uniform_range(0.1, 5.0),
+            },
+            10 => PolicyConfig::CLinUcb {
+                alpha: rng.uniform_range(0.0, 2.0),
+                ridge: rng.uniform_range(0.1, 5.0),
+                delta: rng.uniform(),
             },
             _ => PolicyConfig::DrlCap {
                 mode: ["pretrain", "online", "cross"][rng.index(3)].to_string(),
@@ -90,6 +99,7 @@ impl Gen for MetricsGen {
             // Full-width u64 stresses the >2^53 string-integer path.
             steps: rng.next_u64(),
             completed: rng.uniform(),
+            qos_violation_frac: if rng.chance(0.5) { Some(rng.uniform()) } else { None },
         }
     }
 }

@@ -103,6 +103,7 @@ fn legacy_run_session(
         cumulative_regret,
         steps: t,
         completed: final_completed.clamp(0.0, 1.0),
+        qos_violation_frac: None,
     };
     (metrics, trace, checkpoints)
 }

@@ -22,8 +22,9 @@ use energyucb::bandit::batch::{
     BatchEnergyUcb, BatchEpsilonGreedy, BatchPolicy, BatchSwUcb, BatchUcb1, SaUcbHyper, Scalar,
 };
 use energyucb::bandit::{
-    ConstrainedEnergyUcb, EnergyTs, EnergyUcb, EnergyUcbConfig, EpsilonGreedy, InitStrategy,
-    Oracle, Policy, RoundRobin, SlidingWindowUcb, StaticPolicy, Ucb1,
+    BatchCLinUcb, BatchLinUcb, CLinUcb, ConstrainedEnergyUcb, EnergyTs, EnergyUcb,
+    EnergyUcbConfig, EpsilonGreedy, InitStrategy, LinUcb, Oracle, Policy, RoundRobin,
+    SlidingWindowUcb, StaticPolicy, Ucb1, CONTEXT_DIM,
 };
 use energyucb::rl::RlPower;
 use energyucb::testutil::proptest_lite::{forall_seeded, Gen};
@@ -57,6 +58,10 @@ fn factories() -> Vec<(&'static str, fn(usize, u64) -> Box<dyn Policy>)> {
             ))
         }),
         ("rlpower", |k, s| Box::new(RlPower::new(k, s))),
+        // Contextual policies under the same contract: drive_scalar never
+        // feeds context, exercising their context-free (bias-only) path.
+        ("linucb", |k, _s| Box::new(LinUcb::new(k, CONTEXT_DIM, 1.0, 1.0))),
+        ("clinucb", |k, _s| Box::new(CLinUcb::new(k, CONTEXT_DIM, 1.0, 1.0, 0.1))),
     ]
 }
 
@@ -175,8 +180,101 @@ fn batched_b1_equals_scalar_bit_for_bit() {
             eprintln!("egreedy B=1 != scalar (k={k}, seed={seed:#x})");
             return false;
         }
+
+        // Contextual policies on the context-free path: B = 1 batched
+        // LinUCB must reproduce the scalar wrapper bit-for-bit too.
+        let mut lin_b = BatchLinUcb::new(1, k, CONTEXT_DIM, 1.0, 1.0);
+        let mut lin_s = LinUcb::new(k, CONTEXT_DIM, 1.0, 1.0);
+        if !pair_runs_identically(&mut lin_b, &mut lin_s, k, 300, stream) {
+            eprintln!("linucb B=1 != scalar (k={k}, seed={seed:#x})");
+            return false;
+        }
         true
     });
+}
+
+/// B = 1 batched contextual LinUCB reproduces the scalar wrapper
+/// bit-for-bit on the *contextual* select path — the same contract as
+/// `batched_b1_equals_scalar_bit_for_bit`, but with a fresh context
+/// vector fed to every decision.
+#[test]
+fn contextual_b1_equals_scalar_bit_for_bit() {
+    forall_seeded(0xC0_0007, 20, SeedK, |(seed, k)| {
+        let k = *k;
+        let pairs: Vec<(Box<dyn BatchPolicy>, Box<dyn Policy>)> = vec![
+            (
+                Box::new(BatchLinUcb::new(1, k, CONTEXT_DIM, 1.0, 1.0)),
+                Box::new(LinUcb::new(k, CONTEXT_DIM, 1.0, 1.0)),
+            ),
+            (
+                Box::new(BatchCLinUcb::new(1, k, CONTEXT_DIM, 1.0, 1.0, 0.1)),
+                Box::new(CLinUcb::new(k, CONTEXT_DIM, 1.0, 1.0, 0.1)),
+            ),
+        ];
+        for (mut b, mut s) in pairs {
+            let ones = vec![1.0f32; k];
+            let mut sel = [0i32; 1];
+            let mut rng = Rng::new(seed ^ 0xC7E7);
+            for t in 1..=300u64 {
+                let ctx: Vec<f64> = (0..CONTEXT_DIM).map(|_| rng.uniform()).collect();
+                b.select_into_ctx(t, &ones, &ctx, CONTEXT_DIM, &mut sel);
+                let s_b = sel[0] as usize;
+                let s_s = s.select_ctx(t, &ctx);
+                if s_b != s_s {
+                    eprintln!(
+                        "{} contextual B=1 != scalar at t={t} (k={k}, seed={seed:#x})",
+                        b.name()
+                    );
+                    return false;
+                }
+                let reward = -(1.0 + 0.05 * s_b as f64) + 0.05 * rng.gaussian();
+                b.update_batch(&sel, &[reward], &[1e-3], &[1.0]);
+                s.update(s_s, reward, 1e-3);
+            }
+        }
+        true
+    });
+}
+
+/// Stationary-context sanity: with a constant context, LinUCB degenerates
+/// to a per-arm mean estimator and must converge to the same best arm as
+/// UCB1 on a fixed reward gap.
+#[test]
+fn stationary_context_linucb_converges_like_ucb1() {
+    let ctx = [0.5; CONTEXT_DIM];
+    let best = |counts: &[u64]| -> usize {
+        counts.iter().enumerate().max_by_key(|(_, &c)| c).map(|(i, _)| i).unwrap()
+    };
+    for seed in [3u64, 11, 42] {
+        let k = 5;
+        let mut lin = LinUcb::new(k, CONTEXT_DIM, 1.0, 1.0);
+        let mut ucb = Ucb1::new(k, 0.05);
+        let mut lin_counts = vec![0u64; k];
+        let mut ucb_counts = vec![0u64; k];
+        let mut rng = Rng::new(seed);
+        for t in 1..=3_000u64 {
+            // Arm 2 is strictly best; noise is small against the 0.1 gap.
+            let reward = |arm: usize, rng: &mut Rng| {
+                -(1.0 + 0.1 * (arm as f64 - 2.0).abs()) + 0.02 * rng.gaussian()
+            };
+            let a = lin.select_ctx(t, &ctx);
+            let r = reward(a, &mut rng);
+            lin.update(a, r, 1e-3);
+            let b = ucb.select(t);
+            let r = reward(b, &mut rng);
+            ucb.update(b, r, 1e-3);
+            if t > 2_000 {
+                lin_counts[a] += 1;
+                ucb_counts[b] += 1;
+            }
+        }
+        assert_eq!(best(&lin_counts), 2, "linucb missed the best arm (seed {seed})");
+        assert_eq!(
+            best(&lin_counts),
+            best(&ucb_counts),
+            "linucb and ucb1 disagree on the best arm (seed {seed})"
+        );
+    }
 }
 
 /// The `Scalar` bridge is a faithful adapter: bridging a policy at B = 1

@@ -6,12 +6,19 @@
 //! replay (a different policy over the frozen sample stream) and the
 //! file-based CLI-shaped path.
 
+use energyucb::bandit::CONTEXT_DIM;
 use energyucb::config::ExperimentConfig;
 use energyucb::control::{
-    drive, Controller, Recording, ReplayBackend, ReplayHeader, RunResult, SessionCfg, SimBackend,
+    drive, sweep_replay, BackendTotals, Controller, Recording, ReplayBackend, ReplayHeader,
+    RunResult, SessionCfg, SimBackend, StepSample, SweepCandidate, TelemetryFrame,
 };
+use energyucb::fleet::{fleet_controller, FleetBackend, FleetParams, FleetState};
+use energyucb::sim::freq::FreqDomain;
+use energyucb::testutil::{forall_seeded, Gen};
+use energyucb::util::Rng;
 use energyucb::workload::calibration;
 use energyucb::workload::model::AppModel;
+use energyucb::workload::serving::{ServingCfg, ServingModel};
 
 /// Every policy name the config surface ships.
 const POLICIES: [&str; 10] = [
@@ -146,6 +153,229 @@ fn file_round_trip_matches_in_memory() {
     let replayed = drive(controller, &mut backend).unwrap().pop().unwrap();
     assert_eq!(replayed.metrics, original.metrics);
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Contextual (serving-tier) grammar: the versioned extension must round-
+// trip exactly, reject malformed context blocks, reproduce contextual
+// runs bit-for-bit through record→replay at B ∈ {1, 32}, and leave the
+// legacy context-free byte shapes untouched.
+// ---------------------------------------------------------------------
+
+/// Record one *serving* session (contextual samples + QoS budget in the
+/// header) into an in-memory JSONL buffer.
+fn record_serving(
+    app: &AppModel,
+    pcfg: &energyucb::config::PolicyConfig,
+    cfg: &SessionCfg,
+    srv: &ServingCfg,
+) -> (RunResult, String) {
+    let mut policy = pcfg.build(cfg.freqs.k(), cfg.seed);
+    policy.reset();
+    let header = ReplayHeader::session(app.name.to_string(), Some(pcfg.clone()), cfg.clone())
+        .with_context(Some(srv.ttft_budget));
+    let mut buf: Vec<u8> = Vec::new();
+    let mut backend = Recording::new(
+        SimBackend::new(app, cfg).with_serving(ServingModel::new(srv.clone())),
+        &mut buf,
+        &header,
+    )
+    .unwrap();
+    let controller =
+        Controller::new(app, policy.as_mut(), cfg).with_qos_budget(Some(srv.ttft_budget));
+    let result = drive(controller, &mut backend).unwrap().pop().unwrap();
+    backend.finish().unwrap();
+    (result, String::from_utf8(buf).unwrap())
+}
+
+#[test]
+fn serving_record_then_replay_is_exact_at_b1() {
+    let app = calibration::app("tealeaf").unwrap();
+    let cfg = SessionCfg { seed: 17, max_steps: 800, ..SessionCfg::default() };
+    let srv = ServingCfg::default();
+    for name in ["linucb", "clinucb", "static"] {
+        let pcfg = policy_config(name);
+        let (original, log) = record_serving(&app, &pcfg, &cfg, &srv);
+        assert!(
+            original.metrics.qos_violation_frac.is_some(),
+            "{name}: serving run reported no QoS fraction"
+        );
+        let mut backend = ReplayBackend::from_text(&log).unwrap();
+        let header = backend.header().clone();
+        assert_eq!(header.context.unwrap().dim, CONTEXT_DIM, "{name}");
+        let mut policy =
+            header.policy.clone().unwrap().build(header.session.freqs.k(), header.session.seed);
+        policy.reset();
+        let controller = Controller::new(&app, policy.as_mut(), &header.session)
+            .with_qos_budget(header.context.and_then(|c| c.qos_budget));
+        let replayed = drive(controller, &mut backend).unwrap().pop().unwrap();
+        assert_eq!(replayed.metrics, original.metrics, "{name}");
+    }
+}
+
+#[test]
+fn serving_fleet_record_then_sweep_replay_is_exact_at_b32() {
+    let b = 32usize;
+    let freqs = FreqDomain::aurora();
+    let names = ["tealeaf", "clvleaf"];
+    let apps: Vec<_> = names.iter().map(|n| calibration::app(n).unwrap()).collect();
+    let assigned: Vec<&_> = apps.iter().cycle().take(b).collect();
+    let params = FleetParams::from_apps(&assigned, &freqs, 0.01);
+    let pcfg = policy_config("linucb");
+    let steps = 200u64;
+    let seed = 5u64;
+    let srv = ServingCfg::default();
+    let scfg = SessionCfg {
+        seed,
+        dt_s: params.dt_s,
+        max_steps: steps,
+        freqs: freqs.clone(),
+        ..SessionCfg::default()
+    };
+    let env_names: Vec<String> = names.iter().cycle().take(b).map(|s| s.to_string()).collect();
+    let header = ReplayHeader::fleet(env_names, Some(pcfg.clone()), scfg.clone(), None)
+        .with_context(Some(srv.ttft_budget));
+    let mut state = FleetState::fresh(b, freqs.k());
+    let mut rng = Rng::new(seed);
+    let mut buf: Vec<u8> = Vec::new();
+    let original = {
+        let mut policy = pcfg.build_batch(b, freqs.k(), seed);
+        let models: Vec<ServingModel> = (0..b)
+            .map(|e| ServingModel::new(ServingCfg { seed: srv.seed + e as u64, ..srv.clone() }))
+            .collect();
+        let controller = fleet_controller(&params, Box::new(policy.as_mut()), steps)
+            .with_qos_budget(Some(srv.ttft_budget));
+        let inner = FleetBackend::new(&mut state, &params, &mut rng).with_serving(models);
+        let mut backend = Recording::new(inner, &mut buf, &header).unwrap();
+        let results = drive(controller, &mut backend).unwrap();
+        backend.finish().unwrap();
+        results
+    };
+    let log = String::from_utf8(buf).unwrap();
+    // Sweeping the recording's own policy over the frozen contextual
+    // trace reproduces every row's metrics bit-for-bit.
+    let trace = ReplayBackend::from_text(&log).unwrap();
+    let swept = sweep_replay(&trace, &[SweepCandidate::new(pcfg)], 2).unwrap();
+    assert_eq!(swept[0].results.len(), b);
+    for (e, (orig, rep)) in original.iter().zip(&swept[0].results).enumerate() {
+        assert_eq!(rep.metrics, orig.metrics, "env {e}");
+    }
+}
+
+/// Step samples with (and without) context blocks, exercising the full
+/// optional-field surface of the extended grammar.
+struct CtxSampleGen;
+
+impl Gen for CtxSampleGen {
+    type Value = StepSample;
+
+    fn generate(&self, rng: &mut Rng) -> StepSample {
+        let mut ctx = [0.0f64; CONTEXT_DIM];
+        for c in &mut ctx {
+            *c = rng.uniform_range(-10.0, 50.0);
+        }
+        StepSample {
+            gpu_energy_j: rng.uniform_range(0.0, 100.0),
+            core_util: rng.uniform(),
+            uncore_util: rng.uniform(),
+            progress: rng.uniform_range(0.0, 1e-2),
+            remaining: rng.uniform(),
+            true_gpu_energy_j: rng.uniform_range(0.0, 100.0),
+            switched: rng.chance(0.5),
+            reward: if rng.chance(0.5) { Some(-rng.uniform()) } else { None },
+            context: if rng.chance(0.8) { Some(ctx) } else { None },
+            ..StepSample::default()
+        }
+    }
+}
+
+#[test]
+fn context_frames_round_trip_exactly() {
+    forall_seeded(0xC0_47E7, 300, CtxSampleGen, |s| {
+        let scalar = TelemetryFrame::Step { arms: vec![4], samples: vec![s.clone()] };
+        let batch = TelemetryFrame::Step {
+            arms: vec![4, 7],
+            samples: vec![s.clone(), StepSample { context: None, ..s.clone() }],
+        };
+        [scalar, batch].into_iter().all(|f| {
+            let line = f.encode_line();
+            !line.contains('\n') && TelemetryFrame::decode_line(&line).ok() == Some(f)
+        })
+    });
+}
+
+#[test]
+fn malformed_context_blocks_are_rejected() {
+    // Context vectors of any width other than CONTEXT_DIM never decode.
+    for n in [0usize, 1, CONTEXT_DIM - 1, CONTEXT_DIM + 1, 16] {
+        let vals = vec!["0.5"; n].join(",");
+        let line = format!(
+            "{{\"kind\":\"step\",\"arm\":1,\"sample\":{{\"gpu_energy_j\":1.5,\"core_util\":0.5,\
+             \"uncore_util\":0.25,\"progress\":0.125,\"remaining\":0.75,\
+             \"true_gpu_energy_j\":1.375,\"switched\":false,\"context\":[{vals}]}}}}"
+        );
+        assert!(TelemetryFrame::decode_line(&line).is_err(), "dim {n} decoded");
+    }
+    // Non-numeric context payloads are rejected, not coerced.
+    let bad = "{\"kind\":\"step\",\"arm\":1,\"sample\":{\"gpu_energy_j\":1.5,\"core_util\":0.5,\
+               \"uncore_util\":0.25,\"progress\":0.125,\"remaining\":0.75,\
+               \"true_gpu_energy_j\":1.375,\"switched\":false,\"context\":\"four\"}}";
+    assert!(TelemetryFrame::decode_line(bad).is_err());
+
+    let end = TelemetryFrame::End {
+        totals: vec![BackendTotals::default()],
+        steps: Some(1),
+        truncated: false,
+    }
+    .encode_line();
+    let ctx_step = TelemetryFrame::Step {
+        arms: vec![0],
+        samples: vec![StepSample {
+            context: Some([1.0, 2.0, 3.0, 4.0]),
+            ..StepSample::default()
+        }],
+    }
+    .encode_line();
+
+    // A contextual step inside a log whose header declares no context
+    // spec is malformed, not silently accepted.
+    let plain = ReplayHeader::session("tealeaf".into(), None, SessionCfg::default());
+    let text =
+        format!("{}\n{ctx_step}\n{end}\n", TelemetryFrame::Header(plain).encode_line());
+    let err = ReplayBackend::from_text(&text).unwrap_err().to_string();
+    assert!(err.contains("declares no context spec"), "{err}");
+
+    // A header declaring an alien context width is refused up front.
+    let mut alien = ReplayHeader::session("tealeaf".into(), None, SessionCfg::default())
+        .with_context(None);
+    alien.context.as_mut().unwrap().dim = 7;
+    let text = format!("{}\n{ctx_step}\n{end}\n", TelemetryFrame::Header(alien).encode_line());
+    let err = ReplayBackend::from_text(&text).unwrap_err().to_string();
+    assert!(err.contains("dim = 7"), "{err}");
+}
+
+#[test]
+fn pinned_legacy_lines_decode_and_reencode_byte_identically() {
+    // Pre-context grammar bytes, written out literally: the contextual
+    // extension must leave them untouched in both directions.
+    let step = "{\"kind\":\"step\",\"arm\":8,\"sample\":{\"gpu_energy_j\":1.5,\
+                \"core_util\":0.5,\"uncore_util\":0.25,\"progress\":0.125,\
+                \"remaining\":0.75,\"true_gpu_energy_j\":1.375,\"switched\":false}}"
+        .replace(char::is_whitespace, "");
+    let end = "{\"kind\":\"end\",\"totals\":{\"gpu_energy_kj\":1.25,\"exec_time_s\":2.5,\
+               \"switches\":3,\"switch_energy_j\":0.375,\"switch_time_s\":0.125},\"steps\":1}"
+        .replace(char::is_whitespace, "");
+    for line in [&step, &end] {
+        let f = TelemetryFrame::decode_line(line).unwrap();
+        assert_eq!(&f.encode_line(), line);
+    }
+    // And a freshly recorded context-free session never grows context or
+    // QoS keys anywhere in the log.
+    let app = calibration::app("tealeaf").unwrap();
+    let cfg = SessionCfg { seed: 11, max_steps: 300, ..SessionCfg::default() };
+    let (_, log) = record(&app, &policy_config("static"), &cfg);
+    assert!(!log.contains("\"context\""), "context key leaked into a context-free log");
+    assert!(!log.contains("qos"), "qos key leaked into a context-free log");
 }
 
 #[test]
