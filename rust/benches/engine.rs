@@ -1,6 +1,7 @@
 //! Batch-policy stepping throughput: SoA-batched vs scalar-loop across
 //! B ∈ {1, 32, 256, 4096} — the hot-loop comparison behind the
-//! batch-native policy core (EXPERIMENTS.md §Engine / §Perf).
+//! batch-native policy core (EXPERIMENTS.md §Engine / §Perf) — plus a
+//! per-kernel decision-core sweep at B ∈ {10k, 100k, 500k}.
 //!
 //! Three shapes per batch size, all reported as env-steps/s:
 //!   * `native`  — the bit-pinned EnergyUCB fleet step (`FleetState`
@@ -12,14 +13,27 @@
 //!     instances through the `Scalar` bridge (the f64 per-env baseline
 //!     the SoA path is measured against).
 //!
+//! The big-B sweep times the raw SA-UCB select and grid-update kernels
+//! (`saucb_select_into_with` / `grid_update_batch_with`) on every kernel
+//! the host can run, so scalar-vs-portable-vs-SSE2-vs-AVX2 gains read
+//! off directly. All kernels are bit-identical by contract
+//! (`tests/simd_conformance.rs`) — only the speed differs.
+//!
+//! Every case lands in a machine-readable bench-summary JSON
+//! (`BENCH_engine.json`, or `$BENCH_SUMMARY_OUT`; see EXPERIMENTS.md
+//! §Perf for the recording workflow).
+//!
 //! The loop-level drive-vs-native overhead comparison at matched
 //! granularity lives in `benches/controller.rs`.
 
-use energyucb::bandit::batch::{BatchEnergyUcb, BatchPolicy, Scalar};
+use energyucb::bandit::batch::{
+    active_kernel, grid_update_batch_with, saucb_select_into_with, BatchEnergyUcb, BatchPolicy,
+    Kernel, Scalar,
+};
 use energyucb::bandit::{BatchLinUcb, EnergyUcb, EnergyUcbConfig, CONTEXT_DIM};
 use energyucb::fleet::{native, policy_run, FleetHyper, FleetParams, FleetState, StepScratch};
 use energyucb::sim::freq::FreqDomain;
-use energyucb::util::bench::{black_box, Bench};
+use energyucb::util::bench::{black_box, Bench, Summary};
 use energyucb::util::Rng;
 use energyucb::workload::calibration;
 
@@ -35,10 +49,50 @@ fn params_for(batch: usize) -> FleetParams {
 /// inside a bench sample.
 const RUN_STEPS: u64 = 200;
 
+/// A synthesized decision-core workload at batch size `b`: mid-run grids
+/// with mixed pull counts, discrete means, ~1-in-8 masked arms, and
+/// every 16th environment frozen.
+struct KernelGrids {
+    n: Vec<f32>,
+    mean: Vec<f32>,
+    prev: Vec<i32>,
+    feasible: Vec<f32>,
+    reward: Vec<f64>,
+    active: Vec<f32>,
+}
+
+fn kernel_grids(b: usize, k: usize, seed: u64) -> KernelGrids {
+    let mut rng = Rng::new(seed);
+    let mut g = KernelGrids {
+        n: Vec::with_capacity(b * k),
+        mean: Vec::with_capacity(b * k),
+        prev: Vec::with_capacity(b),
+        feasible: Vec::with_capacity(b * k),
+        reward: Vec::with_capacity(b),
+        active: Vec::with_capacity(b),
+    };
+    for e in 0..b {
+        for i in 0..k {
+            g.n.push(rng.index(40) as f32);
+            g.mean.push(-0.25 * rng.index(8) as f32);
+            // Keep the max-frequency arm feasible (the mask-builder
+            // contract), mask ~1 in 8 of the rest.
+            g.feasible.push(if i == k - 1 || !rng.chance(0.125) { 1.0 } else { 0.0 });
+        }
+        g.prev.push(rng.index(k + 1) as i32 - 1);
+        g.reward.push(-1.0 - 0.25 * rng.index(8) as f64);
+        g.active.push(if e % 16 == 15 { 0.0 } else { 1.0 });
+    }
+    g
+}
+
 fn main() {
     let b = Bench::default();
     let hyper = FleetHyper::default();
     let k = 9usize;
+    let mut summary = Summary::new("engine");
+    summary.note("kernel", active_kernel().name());
+    summary.note("run_steps", &RUN_STEPS.to_string());
 
     for batch in [1usize, 32, 256, 4096] {
         let params = params_for(batch);
@@ -50,7 +104,7 @@ fn main() {
             let mut noise = vec![0.0f32; batch];
             let mut rng = Rng::new(1);
             let mut step_idx = 0u64;
-            b.case(&format!("native/B={batch}"), batch as f64, || {
+            summary.push(b.case(&format!("native/B={batch}"), batch as f64, || {
                 native::step_noise_into(&params, step_idx, &mut rng, &mut noise);
                 native::native_step_into(&mut state, &params, &hyper, &noise, &mut scratch);
                 black_box(&scratch.sel);
@@ -59,13 +113,13 @@ fn main() {
                     state = FleetState::fresh(batch, k);
                     step_idx = 0;
                 }
-            });
+            }));
         }
 
         // Batch-native control loop + SoA batch policy (identical
         // trajectories to `native`, policy-owned grids).
         {
-            b.case(
+            summary.push(b.case(
                 &format!("batched/B={batch}"),
                 (batch as u64 * RUN_STEPS) as f64,
                 || {
@@ -80,13 +134,13 @@ fn main() {
                         RUN_STEPS,
                     ));
                 },
-            );
+            ));
         }
 
         // Same loop, B scalar policies over the bridge (the baseline the
         // SoA iteration is measured against).
         {
-            b.case(
+            summary.push(b.case(
                 &format!("scalar-loop/B={batch}"),
                 (batch as u64 * RUN_STEPS) as f64,
                 || {
@@ -105,7 +159,7 @@ fn main() {
                         RUN_STEPS,
                     ));
                 },
-            );
+            ));
         }
 
         // Context-carrying select/update (the serving tier's decision
@@ -125,7 +179,7 @@ fn main() {
                 *c = rng.uniform();
             }
             let mut t = 0u64;
-            b.case(&format!("ctx-select/B={batch}"), batch as f64, || {
+            summary.push(b.case(&format!("ctx-select/B={batch}"), batch as f64, || {
                 t += 1;
                 policy.select_into_ctx(t, &feasible, &ctx, CONTEXT_DIM, &mut sel);
                 for e in 0..batch {
@@ -133,7 +187,64 @@ fn main() {
                 }
                 policy.update_batch(&sel, &reward, &progress, &active);
                 black_box(&sel);
-            });
+            }));
         }
+    }
+
+    // Raw decision-core kernels at fleet scale, per kernel tier.
+    for &big in &[10_000usize, 100_000, 500_000] {
+        let grids = kernel_grids(big, k, 42);
+        let mut sel = vec![0i32; big];
+        for kernel in Kernel::available() {
+            let name = kernel.name();
+            summary.push(b.case(
+                &format!("saucb-select/{name}/B={big}"),
+                big as f64,
+                || {
+                    saucb_select_into_with(
+                        kernel,
+                        &grids.n,
+                        &grids.mean,
+                        &grids.prev,
+                        250.0,
+                        &grids.feasible,
+                        &hyper,
+                        k,
+                        &mut sel,
+                    );
+                    black_box(&sel);
+                },
+            ));
+        }
+        // Selections from the last kernel feed the update cases — every
+        // kernel produced the same `sel` (bit-identity contract).
+        for kernel in Kernel::available() {
+            let name = kernel.name();
+            let mut n = grids.n.clone();
+            let mut mean = grids.mean.clone();
+            let mut prev = grids.prev.clone();
+            summary.push(b.case(
+                &format!("grid-update/{name}/B={big}"),
+                big as f64,
+                || {
+                    grid_update_batch_with(
+                        kernel,
+                        &mut n,
+                        &mut mean,
+                        &mut prev,
+                        &sel,
+                        &grids.reward,
+                        &grids.active,
+                        k,
+                    );
+                    black_box(&mean);
+                },
+            ));
+        }
+    }
+
+    match summary.write() {
+        Ok(path) => println!("bench-summary JSON -> {}", path.display()),
+        Err(e) => eprintln!("bench-summary write failed: {e}"),
     }
 }

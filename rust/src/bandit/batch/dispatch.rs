@@ -1,0 +1,214 @@
+//! Decision-kernel dispatch: one enum naming every select/update kernel
+//! implementation, runtime CPU-feature detection, and the force-scalar
+//! escape hatch.
+//!
+//! Every kernel is **bit-identical** by contract (`tests/simd_conformance.rs`
+//! pins SIMD == scalar bit-for-bit across the full shape matrix), so
+//! dispatch is purely a performance choice — switching kernels can never
+//! change a trajectory. Resolution order, applied once per process and
+//! cached:
+//!
+//! 1. `ENERGYUCB_FORCE_SCALAR` (any non-empty value other than `0`) pins
+//!    the preserved scalar reference — the conformance escape hatch.
+//! 2. `ENERGYUCB_KERNEL=scalar|portable|sse2|avx2` picks an explicit
+//!    kernel; names the host cannot run (or typos) fall through to
+//!    auto-detection rather than crashing a run.
+//! 3. Auto-detection: AVX2 where the CPU reports it, the always-present
+//!    SSE2 baseline elsewhere on x86_64, and the portable lane-chunked
+//!    kernel on every other architecture.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A decision-kernel implementation. `Scalar` is the preserved pre-SIMD
+/// reference (`batch::scalar`); the others are the lane-chunked rewrites
+/// it is the conformance baseline for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// The scalar conformance reference (verbatim pre-SIMD loops).
+    Scalar,
+    /// Portable fixed-width lane chunks (8×f32 / 4×f64) in plain Rust —
+    /// the autovectorizer maps lanes onto whatever the target offers.
+    Portable,
+    /// `core::arch` 128-bit f32 path (part of the x86_64 baseline ISA).
+    #[cfg(target_arch = "x86_64")]
+    Sse2,
+    /// `core::arch` 256-bit f32 path (runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+impl Kernel {
+    /// The `ENERGYUCB_KERNEL` grammar name (also used in bench labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Portable => "portable",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse2 => "sse2",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse a kernel name (case-insensitive); `None` for unknown names
+    /// and for `core::arch` names on foreign architectures.
+    pub fn parse(name: &str) -> Option<Kernel> {
+        match name.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Kernel::Scalar),
+            "portable" => Some(Kernel::Portable),
+            #[cfg(target_arch = "x86_64")]
+            "sse2" => Some(Kernel::Sse2),
+            #[cfg(target_arch = "x86_64")]
+            "avx2" => Some(Kernel::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Can the running host execute this kernel?
+    pub fn supported(self) -> bool {
+        match self {
+            Kernel::Scalar | Kernel::Portable => true,
+            // SSE2 is part of the x86_64 baseline ISA.
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => is_x86_feature_detected!("avx2"),
+        }
+    }
+
+    /// Every kernel the running host can execute, scalar first — the
+    /// conformance matrix and the bench sweep iterate this.
+    pub fn available() -> Vec<Kernel> {
+        // `mut` is only exercised on x86_64 (the cfg block below).
+        #[allow(unused_mut)]
+        let mut out = vec![Kernel::Scalar, Kernel::Portable];
+        #[cfg(target_arch = "x86_64")]
+        {
+            out.push(Kernel::Sse2);
+            if Kernel::Avx2.supported() {
+                out.push(Kernel::Avx2);
+            }
+        }
+        out
+    }
+}
+
+/// Cached dispatch decision: 0 = unresolved, otherwise `encode(kernel)`.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+fn encode(k: Kernel) -> u8 {
+    match k {
+        Kernel::Scalar => 1,
+        Kernel::Portable => 2,
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse2 => 3,
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => 4,
+    }
+}
+
+fn decode(code: u8) -> Option<Kernel> {
+    match code {
+        1 => Some(Kernel::Scalar),
+        2 => Some(Kernel::Portable),
+        #[cfg(target_arch = "x86_64")]
+        3 => Some(Kernel::Sse2),
+        #[cfg(target_arch = "x86_64")]
+        4 => Some(Kernel::Avx2),
+        _ => None,
+    }
+}
+
+/// The kernel the dispatching free functions route to. Resolved once
+/// (env + CPU detection) and cached; racing first calls resolve to the
+/// same answer, so the relaxed ordering is fine.
+pub(super) fn active() -> Kernel {
+    match decode(ACTIVE.load(Ordering::Relaxed)) {
+        Some(k) => k,
+        None => {
+            let k = detect();
+            ACTIVE.store(encode(k), Ordering::Relaxed);
+            k
+        }
+    }
+}
+
+/// Pin dispatch to `kernel` for the rest of the process (benches, tests).
+pub(super) fn force(kernel: Kernel) {
+    ACTIVE.store(encode(kernel), Ordering::Relaxed);
+}
+
+fn env_truthy(var: &str) -> bool {
+    std::env::var(var).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+fn detect() -> Kernel {
+    if env_truthy("ENERGYUCB_FORCE_SCALAR") {
+        return Kernel::Scalar;
+    }
+    if let Ok(name) = std::env::var("ENERGYUCB_KERNEL") {
+        if let Some(k) = Kernel::parse(&name) {
+            if k.supported() {
+                return k;
+            }
+        }
+        // Unknown or host-unsupported names fall through to detection:
+        // a typo cannot change results (kernels are bit-identical) and
+        // must not crash a run on a weaker host.
+    }
+    auto()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn auto() -> Kernel {
+    if is_x86_feature_detected!("avx2") {
+        Kernel::Avx2
+    } else {
+        Kernel::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn auto() -> Kernel {
+    Kernel::Portable
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_through_parse() {
+        for k in Kernel::available() {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+            assert_eq!(Kernel::parse(&k.name().to_ascii_uppercase()), Some(k));
+        }
+        assert_eq!(Kernel::parse("neon"), None);
+        assert_eq!(Kernel::parse(""), None);
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        for k in Kernel::available() {
+            assert_eq!(decode(encode(k)), Some(k));
+        }
+        assert_eq!(decode(0), None);
+        assert_eq!(decode(255), None);
+    }
+
+    #[test]
+    fn available_kernels_are_supported_and_lead_with_scalar() {
+        let ks = Kernel::available();
+        assert_eq!(ks[0], Kernel::Scalar);
+        assert!(ks.contains(&Kernel::Portable));
+        assert!(ks.iter().all(|k| k.supported()));
+    }
+
+    #[test]
+    fn active_resolves_to_a_supported_kernel() {
+        let k = active();
+        assert!(k.supported());
+        // Cached: a second resolution returns the same kernel.
+        assert_eq!(active(), k);
+    }
+}

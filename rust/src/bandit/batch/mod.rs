@@ -28,12 +28,49 @@
 //! policy casts back — exact, because the fleet synthesizes rewards in
 //! f32 and f32→f64→f32 round-trips losslessly); feasibility and
 //! active masks are f32 `{0, 1}`, matching the artifact layout.
+//!
+//! ## Kernel dispatch (EXPERIMENTS.md §Engine)
+//!
+//! The free select/update functions dispatch to one of several
+//! bit-identical kernel implementations (see [`Kernel`]): the preserved
+//! scalar reference ([`scalar`]), a portable lane-chunked rewrite
+//! ([`portable`]), and `core::arch` SSE2/AVX2 paths on x86_64
+//! ([`x86`]). Dispatch is resolved once per process —
+//! `ENERGYUCB_FORCE_SCALAR`, then `ENERGYUCB_KERNEL`, then CPU feature
+//! detection — and is *purely* a performance choice: the conformance
+//! suite (`tests/simd_conformance.rs`) pins every kernel against the
+//! scalar reference bit-for-bit, so trajectories (and the fleet HLO
+//! artifact contract) cannot depend on the host's vector unit. The
+//! `*_with` variants take an explicit [`Kernel`] for benches and
+//! conformance tests.
 
 use std::collections::VecDeque;
 
 use super::energyucb::EnergyUcbConfig;
 use super::Policy;
 use crate::util::Rng;
+
+mod dispatch;
+mod portable;
+mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use dispatch::Kernel;
+
+/// The kernel the free select/update functions currently dispatch to
+/// (resolved once; see [`Kernel`] and the module docs for the order).
+pub fn active_kernel() -> Kernel {
+    dispatch::active()
+}
+
+/// Pin dispatch to `kernel` for the rest of the process (benches,
+/// conformance runs). Safe at any point — kernels are bit-identical —
+/// but panics if the host cannot execute the requested kernel.
+pub fn force_kernel(kernel: Kernel) {
+    assert!(kernel.supported(), "kernel '{}' not supported on this host", kernel.name());
+    dispatch::force(kernel);
+}
 
 /// Effectively -inf for f32 masking without NaN risk (matches the python
 /// reference's `NEG_LARGE`).
@@ -121,8 +158,37 @@ pub trait BatchPolicy: Send {
 /// `prev[e] = -1` means "no previous arm": every arm then carries the
 /// penalty λ, a uniform shift that cannot change the argmax — the scalar
 /// `prev = None` semantics.
+///
+/// ## All-infeasible rows
+///
+/// A row whose mask is entirely zero has no meaningful argmax: every arm
+/// scores [`NEG_LARGE`] and the first-index tie-break pins `sel[e] = 0`,
+/// deterministically, on every kernel (the conformance suite includes
+/// all-zero rows). This is a *pinned fallback*, not a sanctioned input —
+/// arm 0 is the lowest frequency, the opposite of a safe QoS default —
+/// so mask builders must keep at least one feasible arm per row. The
+/// shipped builders do (the QoS constraint always keeps the
+/// max-frequency arm) and [`debug_assert_feasible_rows`] guards them in
+/// debug builds.
 #[allow(clippy::too_many_arguments)]
 pub fn saucb_select_into(
+    n: &[f32],
+    mean: &[f32],
+    prev: &[i32],
+    t: f32,
+    feasible: &[f32],
+    hyper: &SaUcbHyper,
+    k: usize,
+    sel: &mut [i32],
+) {
+    saucb_select_into_with(dispatch::active(), n, mean, prev, t, feasible, hyper, k, sel);
+}
+
+/// [`saucb_select_into`] on an explicit kernel — the conformance-suite
+/// and bench entry point (all kernels are bit-identical by contract).
+#[allow(clippy::too_many_arguments)]
+pub fn saucb_select_into_with(
+    kernel: Kernel,
     n: &[f32],
     mean: &[f32],
     prev: &[i32],
@@ -137,31 +203,17 @@ pub fn saucb_select_into(
     debug_assert_eq!(mean.len(), b * k);
     debug_assert_eq!(feasible.len(), b * k);
     debug_assert_eq!(sel.len(), b);
-    let ln_t = t.max(2.0).ln();
-    for e in 0..b {
-        let row = e * k;
-        let mut best_arm = 0usize;
-        let mut best_v = f32::NEG_INFINITY;
-        for i in 0..k {
-            let ni = n[row + i];
-            let denom = hyper.prior_n + ni;
-            let mu_hat = if denom > 0.0 {
-                (hyper.prior_n * hyper.mu_init + ni * mean[row + i]) / denom.max(1e-12)
-            } else {
-                hyper.mu_init
-            };
-            let bonus = hyper.alpha * (ln_t / ni.max(1.0)).sqrt();
-            let penalty = if i as i32 != prev[e] { hyper.lambda } else { 0.0 };
-            let mut v = mu_hat + bonus - penalty;
-            if feasible[row + i] <= 0.0 {
-                v = NEG_LARGE;
-            }
-            if v > best_v {
-                best_v = v;
-                best_arm = i;
-            }
-        }
-        sel[e] = best_arm as i32;
+    assert!(kernel.supported(), "kernel '{}' not supported on this host", kernel.name());
+    match kernel {
+        Kernel::Scalar => scalar::saucb_select_into(n, mean, prev, t, feasible, hyper, k, sel),
+        Kernel::Portable => portable::saucb_select_into(n, mean, prev, t, feasible, hyper, k, sel),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse2 => x86::saucb_select_into_sse2(n, mean, prev, t, feasible, hyper, k, sel),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: supported() just confirmed AVX2 on this host.
+        Kernel::Avx2 => unsafe {
+            x86::saucb_select_into_avx2(n, mean, prev, t, feasible, hyper, k, sel)
+        },
     }
 }
 
@@ -180,20 +232,152 @@ pub fn grid_update_batch(
     active: &[f32],
     k: usize,
 ) {
+    grid_update_batch_with(dispatch::active(), n, mean, prev, sel, reward, active, k);
+}
+
+/// [`grid_update_batch`] on an explicit kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn grid_update_batch_with(
+    kernel: Kernel,
+    n: &mut [f32],
+    mean: &mut [f32],
+    prev: &mut [i32],
+    sel: &[i32],
+    reward: &[f64],
+    active: &[f32],
+    k: usize,
+) {
     debug_assert_eq!(sel.len(), prev.len());
     debug_assert_eq!(reward.len(), prev.len());
     debug_assert_eq!(active.len(), prev.len());
-    for e in 0..sel.len() {
-        let a = active[e];
-        let s = sel[e] as usize;
-        let idx = e * k + s;
-        let r = reward[e] as f32;
-        let n_sel = n[idx] + a;
-        n[idx] = n_sel;
-        let delta = (r - mean[idx]) / n_sel.max(1.0) * a;
-        mean[idx] += delta;
-        if a > 0.0 {
-            prev[e] = sel[e];
+    assert!(kernel.supported(), "kernel '{}' not supported on this host", kernel.name());
+    match kernel {
+        Kernel::Scalar => scalar::grid_update_batch(n, mean, prev, sel, reward, active, k),
+        #[cfg(target_arch = "x86_64")]
+        // Safety: supported() just confirmed AVX2 on this host.
+        Kernel::Avx2 => unsafe {
+            x86::grid_update_batch_avx2(n, mean, prev, sel, reward, active, k)
+        },
+        // The SSE2 tier reuses the portable chunked update: the fold is
+        // gather/scatter-bound and SSE2 has no gather instruction.
+        _ => portable::grid_update_batch(n, mean, prev, sel, reward, active, k),
+    }
+}
+
+/// Masked UCB1 select over SoA grids (the [`BatchUcb1`] arm scan as a
+/// free kernel — f64, exactly the scalar `Ucb1` operation order). Plays
+/// each feasible arm once in index order, then the UCB argmax;
+/// all-infeasible rows pin `sel[e] = 0` like [`saucb_select_into`].
+pub fn ucb1_select_into(
+    n: &[u64],
+    mean: &[f64],
+    alpha: f64,
+    t: u64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    ucb1_select_into_with(dispatch::active(), n, mean, alpha, t, feasible, k, sel);
+}
+
+/// [`ucb1_select_into`] on an explicit kernel. The `core::arch` tiers
+/// route to the portable f64 kernel (the f32 SA-UCB core is where
+/// explicit intrinsics pay; see `batch::x86` docs).
+#[allow(clippy::too_many_arguments)]
+pub fn ucb1_select_into_with(
+    kernel: Kernel,
+    n: &[u64],
+    mean: &[f64],
+    alpha: f64,
+    t: u64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    let b = sel.len();
+    debug_assert_eq!(n.len(), b * k);
+    debug_assert_eq!(mean.len(), b * k);
+    debug_assert_eq!(feasible.len(), b * k);
+    assert!(kernel.supported(), "kernel '{}' not supported on this host", kernel.name());
+    match kernel {
+        Kernel::Scalar => scalar::ucb1_select_into(n, mean, alpha, t, feasible, k, sel),
+        _ => portable::ucb1_select_into(n, mean, alpha, t, feasible, k, sel),
+    }
+}
+
+/// Masked SW-UCB select over SoA grids (the [`BatchSwUcb`] arm scan as a
+/// free kernel — f64, exactly the scalar `SlidingWindowUcb` operation
+/// order). `horizon` is the effective window `min(t, w).max(2)`;
+/// all-infeasible rows pin `sel[e] = 0`.
+#[allow(clippy::too_many_arguments)]
+pub fn swucb_select_into(
+    sum: &[f64],
+    n: &[u64],
+    prev: &[i32],
+    alpha: f64,
+    lambda: f64,
+    horizon: f64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    swucb_select_into_with(
+        dispatch::active(),
+        sum,
+        n,
+        prev,
+        alpha,
+        lambda,
+        horizon,
+        feasible,
+        k,
+        sel,
+    );
+}
+
+/// [`swucb_select_into`] on an explicit kernel (`core::arch` tiers route
+/// to the portable f64 kernel, like UCB1).
+#[allow(clippy::too_many_arguments)]
+pub fn swucb_select_into_with(
+    kernel: Kernel,
+    sum: &[f64],
+    n: &[u64],
+    prev: &[i32],
+    alpha: f64,
+    lambda: f64,
+    horizon: f64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    let b = sel.len();
+    debug_assert_eq!(sum.len(), b * k);
+    debug_assert_eq!(n.len(), b * k);
+    debug_assert_eq!(prev.len(), b);
+    debug_assert_eq!(feasible.len(), b * k);
+    assert!(kernel.supported(), "kernel '{}' not supported on this host", kernel.name());
+    match kernel {
+        Kernel::Scalar => {
+            scalar::swucb_select_into(sum, n, prev, alpha, lambda, horizon, feasible, k, sel)
+        }
+        _ => portable::swucb_select_into(sum, n, prev, alpha, lambda, horizon, feasible, k, sel),
+    }
+}
+
+/// Debug-assert that every `(B, K)` mask row keeps at least one feasible
+/// arm — the upstream guard for the all-infeasible fallback documented
+/// on [`saucb_select_into`]. Mask *builders* call this right after
+/// construction so a constraint bug surfaces where the mask is made, not
+/// as a silent arm-0 pin deep in a fleet run. Release builds compile it
+/// away (the select kernels themselves stay assert-free so the
+/// conformance suite can fuzz all-zero rows).
+pub fn debug_assert_feasible_rows(feasible: &[f32], k: usize) {
+    if cfg!(debug_assertions) && k > 0 {
+        for (e, row) in feasible.chunks_exact(k).enumerate() {
+            debug_assert!(
+                row.iter().any(|&f| f > 0.0),
+                "mask row {e}: all {k} arms infeasible — select would pin arm 0"
+            );
         }
     }
 }
@@ -383,6 +567,10 @@ impl BatchPolicy for BatchConstrainedEnergyUcb {
                     if self.estimated_feasible(e, i) { feasible[idx] } else { 0.0 };
             }
         }
+        // The intersected mask always keeps the max-frequency arm (zero
+        // slowdown by definition) wherever the caller's mask does — guard
+        // that invariant where the mask is built.
+        debug_assert_feasible_rows(&self.mask, k);
         saucb_select_into(
             &self.inner.n,
             &self.inner.mean,
@@ -460,29 +648,7 @@ impl BatchPolicy for BatchUcb1 {
     }
 
     fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
-        let k = self.k;
-        for e in 0..self.b {
-            let row = e * k;
-            // Play each (feasible) arm once first, in index order.
-            if let Some(i) = (0..k).find(|&i| feasible[row + i] > 0.0 && self.n[row + i] == 0) {
-                sel[e] = i as i32;
-                continue;
-            }
-            let mut best = 0usize;
-            let mut best_v = f64::NEG_INFINITY;
-            for i in 0..k {
-                if feasible[row + i] <= 0.0 {
-                    continue;
-                }
-                let v = self.mean[row + i]
-                    + self.alpha * ((t.max(2) as f64).ln() / self.n[row + i] as f64).sqrt();
-                if v > best_v {
-                    best_v = v;
-                    best = i;
-                }
-            }
-            sel[e] = best as i32;
-        }
+        ucb1_select_into(&self.n, &self.mean, self.alpha, t, feasible, self.k, sel);
     }
 
     fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
@@ -549,33 +715,18 @@ impl BatchPolicy for BatchSwUcb {
     }
 
     fn select_into(&mut self, t: u64, feasible: &[f32], sel: &mut [i32]) {
-        let k = self.k;
         let horizon = (t as f64).min(self.window as f64).max(2.0);
-        for e in 0..self.b {
-            let row = e * k;
-            let mut best = 0usize;
-            let mut best_v = f64::NEG_INFINITY;
-            for i in 0..k {
-                if feasible[row + i] <= 0.0 {
-                    continue;
-                }
-                let ni = self.n[row + i];
-                let bonus = self.alpha * (horizon.ln() / (ni.max(1) as f64)).sqrt();
-                // Optimistic (mean 0) when unseen inside the window.
-                let mean = if ni > 0 { self.sum[row + i] / ni as f64 } else { 0.0 };
-                let penalty = if self.prev[e] >= 0 && self.prev[e] != i as i32 {
-                    self.lambda
-                } else {
-                    0.0
-                };
-                let v = mean + bonus - penalty;
-                if v > best_v {
-                    best_v = v;
-                    best = i;
-                }
-            }
-            sel[e] = best as i32;
-        }
+        swucb_select_into(
+            &self.sum,
+            &self.n,
+            &self.prev,
+            self.alpha,
+            self.lambda,
+            horizon,
+            feasible,
+            self.k,
+            sel,
+        );
     }
 
     fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
@@ -1004,6 +1155,76 @@ mod tests {
         bridge.update_batch(&sel, &[-1.0, -1.0], &[0.0, 0.0], &[1.0, 0.0]);
         assert!(bridge.env(0).index(0, 5).is_finite());
         assert!(bridge.env(1).index(0, 5).is_infinite()); // still unplayed
+    }
+
+    #[test]
+    fn all_infeasible_row_pins_arm_zero() {
+        // Pinned fallback (module docs): a mask row with no feasible arm
+        // deterministically selects arm 0 — on every kernel.
+        let (b, k) = (2usize, 4usize);
+        let n = vec![1.0f32; b * k];
+        let mean = vec![-1.0f32; b * k];
+        let prev = vec![-1i32; b];
+        let feas = vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        for kernel in Kernel::available() {
+            let mut sel = vec![9i32; b];
+            saucb_select_into_with(
+                kernel,
+                &n,
+                &mean,
+                &prev,
+                5.0,
+                &feas,
+                &SaUcbHyper::default(),
+                k,
+                &mut sel,
+            );
+            assert_eq!(sel, vec![0, 2], "kernel {}", kernel.name());
+        }
+    }
+
+    #[test]
+    fn kernels_agree_on_a_short_trajectory() {
+        // A compact end-to-end smoke check that every available kernel
+        // walks the same select→update trajectory bit-for-bit (the full
+        // fuzzed matrix lives in tests/simd_conformance.rs).
+        let (b, k) = (11usize, 9usize);
+        let feas = ones(b, k);
+        let mut histories: Vec<(Vec<Vec<i32>>, Vec<u32>)> = Vec::new();
+        for kernel in Kernel::available() {
+            let mut n = vec![0.0f32; b * k];
+            let mut mean = vec![0.0f32; b * k];
+            let mut prev = vec![-1i32; b];
+            let mut sel = vec![0i32; b];
+            let mut hist = Vec::new();
+            for t in 1..=40u64 {
+                saucb_select_into_with(
+                    kernel,
+                    &n,
+                    &mean,
+                    &prev,
+                    t as f32,
+                    &feas,
+                    &SaUcbHyper::default(),
+                    k,
+                    &mut sel,
+                );
+                let reward: Vec<f64> =
+                    sel.iter().map(|&s| -1.0 - 0.05 * (k as f64 - s as f64)).collect();
+                let active: Vec<f32> =
+                    (0..b).map(|e| if e % 4 == 3 { 0.0 } else { 1.0 }).collect();
+                grid_update_batch_with(
+                    kernel, &mut n, &mut mean, &mut prev, &sel, &reward, &active, k,
+                );
+                hist.push(sel.clone());
+            }
+            let bits: Vec<u32> = mean.iter().map(|m| m.to_bits()).collect();
+            histories.push((hist, bits));
+        }
+        for (h, bits) in &histories[1..] {
+            assert_eq!(h, &histories[0].0);
+            assert_eq!(bits, &histories[0].1);
+        }
     }
 
     #[test]

@@ -1,0 +1,330 @@
+//! Portable lane-chunked kernels: fixed-width chunks (8×f32 for the
+//! SA-UCB core, 4×f64 for the scalar-faithful policies) written as plain
+//! Rust over small arrays, so the autovectorizer can map lanes onto
+//! whatever vector unit the target has. This is the default kernel on
+//! non-x86_64 hosts and the model the `core::arch` paths in
+//! [`super::x86`] implement with explicit intrinsics.
+//!
+//! ## Why lane-chunking preserves the bit contract
+//!
+//! Every per-arm score is an *elementwise* function of that arm's grid
+//! cells — there is no cross-arm accumulation — and every IEEE-754
+//! operation used (add, sub, mul, div, sqrt, max) is exactly rounded, so
+//! computing `LANES` arms at once yields, per lane, the same bits as the
+//! scalar loop: Rust never reassociates or contracts float expressions,
+//! and none of the kernels use FMA or approximate reciprocal ops.
+//!
+//! The only cross-arm step is the masked argmax, and its lane-order
+//! argument is what the conformance suite pins:
+//!
+//! * Within the chunk scan, each lane keeps a running `(best, arm)` pair
+//!   updated on strict `>`. Lane `l` therefore ends holding the *lowest*
+//!   arm index among arms `≡ l (mod LANES)` that achieve that lane's
+//!   maximum (later equal values never displace it).
+//! * The horizontal merge picks the maximum lane value, breaking value
+//!   ties toward the lowest stored arm index. The winning value equals
+//!   the scalar scan's maximum, and among all arms achieving it the
+//!   lowest index wins — exactly the scalar first-index rule.
+//! * Remainder arms (`k % LANES`) run the verbatim scalar body,
+//!   continuing the same strict-`>` scan at indices above every chunked
+//!   arm, where strict `>` is again exactly the first-index rule.
+//!
+//! The f64 policies' `continue`-on-infeasible scan is replaced by
+//! masking infeasible lanes to `-inf`: feasible scores are always finite
+//! (counts ≥ 1 after the warm-start pass, windowed means and bonuses
+//! finite), so a masked lane can never win over a feasible arm, and an
+//! all-masked row falls back to arm 0 exactly like the scalar scan.
+
+use super::{SaUcbHyper, NEG_LARGE};
+
+/// f32 lanes per chunk in the SA-UCB kernels.
+pub(super) const LANES_F32: usize = 8;
+/// f64 lanes per chunk in the UCB1/SW-UCB kernels.
+pub(super) const LANES_F64: usize = 4;
+
+/// Horizontal argmax merge over per-lane `(best value, best arm)` pairs:
+/// maximum value, ties toward the lowest stored arm index (see module
+/// docs). With zero chunks there is nothing to merge and the caller's
+/// remainder scan starts from the scalar init state `(-inf, arm 0)`.
+pub(super) fn merge_lanes_f32(lane_v: &[f32], lane_arm: &[i32], chunks: usize) -> (f32, i32) {
+    if chunks == 0 {
+        return (f32::NEG_INFINITY, 0);
+    }
+    let mut best_v = f32::NEG_INFINITY;
+    let mut best_arm = i32::MAX;
+    for (&v, &arm) in lane_v.iter().zip(lane_arm) {
+        if v > best_v || (v == best_v && arm < best_arm) {
+            best_v = v;
+            best_arm = arm;
+        }
+    }
+    (best_v, best_arm)
+}
+
+/// f64 twin of [`merge_lanes_f32`].
+pub(super) fn merge_lanes_f64(lane_v: &[f64], lane_arm: &[i32], chunks: usize) -> (f64, i32) {
+    if chunks == 0 {
+        return (f64::NEG_INFINITY, 0);
+    }
+    let mut best_v = f64::NEG_INFINITY;
+    let mut best_arm = i32::MAX;
+    for (&v, &arm) in lane_v.iter().zip(lane_arm) {
+        if v > best_v || (v == best_v && arm < best_arm) {
+            best_v = v;
+            best_arm = arm;
+        }
+    }
+    (best_v, best_arm)
+}
+
+/// Portable lane-chunked SA-UCB select.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn saucb_select_into(
+    n: &[f32],
+    mean: &[f32],
+    prev: &[i32],
+    t: f32,
+    feasible: &[f32],
+    hyper: &SaUcbHyper,
+    k: usize,
+    sel: &mut [i32],
+) {
+    const L: usize = LANES_F32;
+    let b = prev.len();
+    let ln_t = t.max(2.0).ln();
+    let (alpha, lambda, mu_init, prior_n) =
+        (hyper.alpha, hyper.lambda, hyper.mu_init, hyper.prior_n);
+    let prior_mu = prior_n * mu_init;
+    let chunks = k / L;
+    for e in 0..b {
+        let row = e * k;
+        let prev_e = prev[e];
+        let mut lane_v = [f32::NEG_INFINITY; L];
+        let mut lane_arm = [0i32; L];
+        for c in 0..chunks {
+            let base = row + c * L;
+            let arm0 = (c * L) as i32;
+            let mut v = [0.0f32; L];
+            for l in 0..L {
+                let ni = n[base + l];
+                let denom = prior_n + ni;
+                // Computed unconditionally, selected per lane: the
+                // discarded branch's value never reaches a result (and
+                // with denom == 0 both operands of the division are
+                // finite, so no stray NaN is even produced).
+                let raw = (prior_mu + ni * mean[base + l]) / denom.max(1e-12);
+                let mu_hat = if denom > 0.0 { raw } else { mu_init };
+                let bonus = alpha * (ln_t / ni.max(1.0)).sqrt();
+                let penalty = if arm0 + l as i32 != prev_e { lambda } else { 0.0 };
+                let vl = mu_hat + bonus - penalty;
+                v[l] = if feasible[base + l] > 0.0 { vl } else { NEG_LARGE };
+            }
+            for l in 0..L {
+                if v[l] > lane_v[l] {
+                    lane_v[l] = v[l];
+                    lane_arm[l] = arm0 + l as i32;
+                }
+            }
+        }
+        let (mut best_v, mut best_arm) = merge_lanes_f32(&lane_v, &lane_arm, chunks);
+        for i in (chunks * L)..k {
+            // The scalar reference body, continuing the strict-> scan.
+            let ni = n[row + i];
+            let denom = prior_n + ni;
+            let mu_hat = if denom > 0.0 {
+                (prior_mu + ni * mean[row + i]) / denom.max(1e-12)
+            } else {
+                mu_init
+            };
+            let bonus = alpha * (ln_t / ni.max(1.0)).sqrt();
+            let penalty = if i as i32 != prev_e { lambda } else { 0.0 };
+            let mut v = mu_hat + bonus - penalty;
+            if feasible[row + i] <= 0.0 {
+                v = NEG_LARGE;
+            }
+            if v > best_v {
+                best_v = v;
+                best_arm = i as i32;
+            }
+        }
+        sel[e] = best_arm;
+    }
+}
+
+/// Portable lane-chunked incremental-mean update: gather the selected
+/// cells, compute the fold on arrays, scatter back. Cell indices are
+/// unique within a chunk (one per environment), so gather-then-scatter
+/// cannot alias; each lane's arithmetic chain is the scalar body's.
+pub(super) fn grid_update_batch(
+    n: &mut [f32],
+    mean: &mut [f32],
+    prev: &mut [i32],
+    sel: &[i32],
+    reward: &[f64],
+    active: &[f32],
+    k: usize,
+) {
+    const L: usize = LANES_F32;
+    let b = sel.len();
+    let chunks = b / L;
+    for c in 0..chunks {
+        let e0 = c * L;
+        let mut idx = [0usize; L];
+        let mut n_new = [0.0f32; L];
+        let mut m_new = [0.0f32; L];
+        for l in 0..L {
+            let e = e0 + l;
+            let i = e * k + sel[e] as usize;
+            idx[l] = i;
+            let a = active[e];
+            let r = reward[e] as f32;
+            let n_sel = n[i] + a;
+            n_new[l] = n_sel;
+            let delta = (r - mean[i]) / n_sel.max(1.0) * a;
+            m_new[l] = mean[i] + delta;
+        }
+        for l in 0..L {
+            n[idx[l]] = n_new[l];
+            mean[idx[l]] = m_new[l];
+            let e = e0 + l;
+            if active[e] > 0.0 {
+                prev[e] = sel[e];
+            }
+        }
+    }
+    for e in (chunks * L)..b {
+        // The scalar reference body.
+        let a = active[e];
+        let s = sel[e] as usize;
+        let idx = e * k + s;
+        let r = reward[e] as f32;
+        let n_sel = n[idx] + a;
+        n[idx] = n_sel;
+        let delta = (r - mean[idx]) / n_sel.max(1.0) * a;
+        mean[idx] += delta;
+        if a > 0.0 {
+            prev[e] = sel[e];
+        }
+    }
+}
+
+/// Portable lane-chunked UCB1 select. The warm-start scan ("play each
+/// feasible arm once, in index order") stays scalar — it is a short
+/// early-exit search, not arithmetic — and implies every feasible arm
+/// has `n ≥ 1` when the scoring loop runs, keeping feasible scores
+/// finite (the masking-equivalence precondition, see module docs).
+pub(super) fn ucb1_select_into(
+    n: &[u64],
+    mean: &[f64],
+    alpha: f64,
+    t: u64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    const L: usize = LANES_F64;
+    let b = sel.len();
+    let ln_t = (t.max(2) as f64).ln();
+    let chunks = k / L;
+    for e in 0..b {
+        let row = e * k;
+        if let Some(i) = (0..k).find(|&i| feasible[row + i] > 0.0 && n[row + i] == 0) {
+            sel[e] = i as i32;
+            continue;
+        }
+        let mut lane_v = [f64::NEG_INFINITY; L];
+        let mut lane_arm = [0i32; L];
+        for c in 0..chunks {
+            let base = row + c * L;
+            let arm0 = (c * L) as i32;
+            let mut v = [0.0f64; L];
+            for l in 0..L {
+                let vl = mean[base + l] + alpha * (ln_t / n[base + l] as f64).sqrt();
+                v[l] = if feasible[base + l] > 0.0 { vl } else { f64::NEG_INFINITY };
+            }
+            for l in 0..L {
+                if v[l] > lane_v[l] {
+                    lane_v[l] = v[l];
+                    lane_arm[l] = arm0 + l as i32;
+                }
+            }
+        }
+        let (mut best_v, mut best_arm) = merge_lanes_f64(&lane_v, &lane_arm, chunks);
+        for i in (chunks * L)..k {
+            // The scalar reference body.
+            if feasible[row + i] <= 0.0 {
+                continue;
+            }
+            let v = mean[row + i] + alpha * (ln_t / n[row + i] as f64).sqrt();
+            if v > best_v {
+                best_v = v;
+                best_arm = i as i32;
+            }
+        }
+        sel[e] = best_arm;
+    }
+}
+
+/// Portable lane-chunked SW-UCB select (same masking argument as UCB1:
+/// windowed sums and bonuses of feasible arms are finite, so `-inf`
+/// masking is equivalent to the scalar `continue`).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn swucb_select_into(
+    sum: &[f64],
+    n: &[u64],
+    prev: &[i32],
+    alpha: f64,
+    lambda: f64,
+    horizon: f64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    const L: usize = LANES_F64;
+    let b = sel.len();
+    let ln_h = horizon.ln();
+    let chunks = k / L;
+    for e in 0..b {
+        let row = e * k;
+        let prev_e = prev[e];
+        let mut lane_v = [f64::NEG_INFINITY; L];
+        let mut lane_arm = [0i32; L];
+        for c in 0..chunks {
+            let base = row + c * L;
+            let arm0 = (c * L) as i32;
+            let mut v = [0.0f64; L];
+            for l in 0..L {
+                let ni = n[base + l];
+                let bonus = alpha * (ln_h / (ni.max(1) as f64)).sqrt();
+                let m = if ni > 0 { sum[base + l] / ni as f64 } else { 0.0 };
+                let arm = arm0 + l as i32;
+                let penalty = if prev_e >= 0 && prev_e != arm { lambda } else { 0.0 };
+                let vl = m + bonus - penalty;
+                v[l] = if feasible[base + l] > 0.0 { vl } else { f64::NEG_INFINITY };
+            }
+            for l in 0..L {
+                if v[l] > lane_v[l] {
+                    lane_v[l] = v[l];
+                    lane_arm[l] = arm0 + l as i32;
+                }
+            }
+        }
+        let (mut best_v, mut best_arm) = merge_lanes_f64(&lane_v, &lane_arm, chunks);
+        for i in (chunks * L)..k {
+            // The scalar reference body.
+            if feasible[row + i] <= 0.0 {
+                continue;
+            }
+            let ni = n[row + i];
+            let bonus = alpha * (ln_h / (ni.max(1) as f64)).sqrt();
+            let mean = if ni > 0 { sum[row + i] / ni as f64 } else { 0.0 };
+            let penalty = if prev_e >= 0 && prev_e != i as i32 { lambda } else { 0.0 };
+            let v = mean + bonus - penalty;
+            if v > best_v {
+                best_v = v;
+                best_arm = i as i32;
+            }
+        }
+        sel[e] = best_arm;
+    }
+}

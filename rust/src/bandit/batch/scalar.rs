@@ -1,0 +1,163 @@
+//! The scalar decision kernels — the preserved pre-SIMD reference
+//! implementations and the conformance baseline every lane-chunked
+//! kernel is pinned against, bit-for-bit (`tests/simd_conformance.rs`).
+//!
+//! The loop bodies are the original per-arm scans verbatim, with one
+//! class of change: loop-invariant subexpressions (`ln t`, the
+//! hyper-parameter field reloads, `prior_n·mu_init`) are hoisted out of
+//! the arm loops. Each hoist is provably value-preserving — a pure
+//! function of per-call constants computed once instead of per arm, the
+//! same IEEE operation on the same operands — so the f32/f64 streams are
+//! unchanged and the scalar baseline in `benches/engine.rs` measures the
+//! decision arithmetic, not redundant loads.
+
+use super::{SaUcbHyper, NEG_LARGE};
+
+/// Scalar SA-UCB select: the reference for [`super::saucb_select_into`].
+#[allow(clippy::too_many_arguments)]
+pub(super) fn saucb_select_into(
+    n: &[f32],
+    mean: &[f32],
+    prev: &[i32],
+    t: f32,
+    feasible: &[f32],
+    hyper: &SaUcbHyper,
+    k: usize,
+    sel: &mut [i32],
+) {
+    let b = prev.len();
+    let ln_t = t.max(2.0).ln();
+    let (alpha, lambda, mu_init, prior_n) =
+        (hyper.alpha, hyper.lambda, hyper.mu_init, hyper.prior_n);
+    let prior_mu = prior_n * mu_init;
+    for e in 0..b {
+        let row = e * k;
+        let prev_e = prev[e];
+        let mut best_arm = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for i in 0..k {
+            let ni = n[row + i];
+            let denom = prior_n + ni;
+            let mu_hat = if denom > 0.0 {
+                (prior_mu + ni * mean[row + i]) / denom.max(1e-12)
+            } else {
+                mu_init
+            };
+            let bonus = alpha * (ln_t / ni.max(1.0)).sqrt();
+            let penalty = if i as i32 != prev_e { lambda } else { 0.0 };
+            let mut v = mu_hat + bonus - penalty;
+            if feasible[row + i] <= 0.0 {
+                v = NEG_LARGE;
+            }
+            if v > best_v {
+                best_v = v;
+                best_arm = i;
+            }
+        }
+        sel[e] = best_arm as i32;
+    }
+}
+
+/// Scalar incremental-mean update: the reference for
+/// [`super::grid_update_batch`].
+pub(super) fn grid_update_batch(
+    n: &mut [f32],
+    mean: &mut [f32],
+    prev: &mut [i32],
+    sel: &[i32],
+    reward: &[f64],
+    active: &[f32],
+    k: usize,
+) {
+    for e in 0..sel.len() {
+        let a = active[e];
+        let s = sel[e] as usize;
+        let idx = e * k + s;
+        let r = reward[e] as f32;
+        let n_sel = n[idx] + a;
+        n[idx] = n_sel;
+        let delta = (r - mean[idx]) / n_sel.max(1.0) * a;
+        mean[idx] += delta;
+        if a > 0.0 {
+            prev[e] = sel[e];
+        }
+    }
+}
+
+/// Scalar UCB1 select (the `BatchUcb1` arm scan, extracted): play each
+/// feasible arm once in index order, then the masked UCB argmax. The
+/// reference for [`super::ucb1_select_into`].
+pub(super) fn ucb1_select_into(
+    n: &[u64],
+    mean: &[f64],
+    alpha: f64,
+    t: u64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    let b = sel.len();
+    let ln_t = (t.max(2) as f64).ln();
+    for e in 0..b {
+        let row = e * k;
+        // Play each (feasible) arm once first, in index order.
+        if let Some(i) = (0..k).find(|&i| feasible[row + i] > 0.0 && n[row + i] == 0) {
+            sel[e] = i as i32;
+            continue;
+        }
+        let mut best = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..k {
+            if feasible[row + i] <= 0.0 {
+                continue;
+            }
+            let v = mean[row + i] + alpha * (ln_t / n[row + i] as f64).sqrt();
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        sel[e] = best as i32;
+    }
+}
+
+/// Scalar SW-UCB select (the `BatchSwUcb` arm scan, extracted):
+/// windowed-mean UCB with switching penalty and optimistic unseen arms.
+/// The reference for [`super::swucb_select_into`].
+#[allow(clippy::too_many_arguments)]
+pub(super) fn swucb_select_into(
+    sum: &[f64],
+    n: &[u64],
+    prev: &[i32],
+    alpha: f64,
+    lambda: f64,
+    horizon: f64,
+    feasible: &[f32],
+    k: usize,
+    sel: &mut [i32],
+) {
+    let b = sel.len();
+    let ln_h = horizon.ln();
+    for e in 0..b {
+        let row = e * k;
+        let prev_e = prev[e];
+        let mut best = 0usize;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..k {
+            if feasible[row + i] <= 0.0 {
+                continue;
+            }
+            let ni = n[row + i];
+            let bonus = alpha * (ln_h / (ni.max(1) as f64)).sqrt();
+            // Optimistic (mean 0) when unseen inside the window.
+            let mean = if ni > 0 { sum[row + i] / ni as f64 } else { 0.0 };
+            let penalty = if prev_e >= 0 && prev_e != i as i32 { lambda } else { 0.0 };
+            let v = mean + bonus - penalty;
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        sel[e] = best as i32;
+    }
+}

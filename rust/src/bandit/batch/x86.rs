@@ -1,0 +1,311 @@
+//! `core::arch` x86_64 kernels for the f32 SA-UCB core: a 4-lane SSE2
+//! path (always available — SSE2 is part of the x86_64 baseline ISA) and
+//! an 8-lane AVX2 path behind runtime detection ([`super::dispatch`]).
+//!
+//! Bit-exactness: only exactly-rounded vector operations are used —
+//! add/sub/mul/div/sqrt/max, compares, and bitwise blends. Never the
+//! approximate `rcpps`/`rsqrtps`, and never FMA (scalar Rust does not
+//! contract `a * b + c` either, so fusing here would *break* parity).
+//! Each lane therefore computes bit-for-bit what the scalar reference
+//! computes; the horizontal argmax merge reuses the lane-order argument
+//! (and helper) from [`super::portable`]. `_mm*_max_ps` differs from
+//! `f32::max` only on NaN/±0 operands, which the SA-UCB operands (counts
+//! ≥ 0, positive epsilons) cannot produce.
+//!
+//! The f64 UCB1/SW-UCB selects stay on the portable kernels: their cost
+//! is dominated by u64→f64 conversions and short-row scans, which
+//! SSE2/AVX2 cannot improve without changing the operation stream.
+
+use core::arch::x86_64::*;
+
+use super::portable::merge_lanes_f32;
+use super::{SaUcbHyper, NEG_LARGE};
+
+/// 8-lane AVX2 SA-UCB select.
+///
+/// # Safety
+/// Requires the `avx2` CPU feature (the dispatcher only routes here
+/// after `is_x86_feature_detected!("avx2")`).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn saucb_select_into_avx2(
+    n: &[f32],
+    mean: &[f32],
+    prev: &[i32],
+    t: f32,
+    feasible: &[f32],
+    hyper: &SaUcbHyper,
+    k: usize,
+    sel: &mut [i32],
+) {
+    const L: usize = 8;
+    let b = prev.len();
+    let ln_t = t.max(2.0).ln();
+    let (alpha, lambda, mu_init, prior_n) =
+        (hyper.alpha, hyper.lambda, hyper.mu_init, hyper.prior_n);
+    let prior_mu = prior_n * mu_init;
+    let chunks = k / L;
+
+    let v_alpha = _mm256_set1_ps(alpha);
+    let v_lambda = _mm256_set1_ps(lambda);
+    let v_mu_init = _mm256_set1_ps(mu_init);
+    let v_prior_n = _mm256_set1_ps(prior_n);
+    let v_prior_mu = _mm256_set1_ps(prior_mu);
+    let v_ln_t = _mm256_set1_ps(ln_t);
+    let v_one = _mm256_set1_ps(1.0);
+    let v_eps = _mm256_set1_ps(1e-12);
+    let v_zero = _mm256_setzero_ps();
+    let v_neg_large = _mm256_set1_ps(NEG_LARGE);
+    let v_lane = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+
+    for e in 0..b {
+        let row = e * k;
+        let prev_e = prev[e];
+        let v_prev = _mm256_set1_epi32(prev_e);
+        let mut v_best = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut v_best_arm = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let base = row + c * L;
+            let v_ni = _mm256_loadu_ps(n.as_ptr().add(base));
+            let v_mean = _mm256_loadu_ps(mean.as_ptr().add(base));
+            let v_feas = _mm256_loadu_ps(feasible.as_ptr().add(base));
+            // mu_hat: prior-shrunk mean where denom > 0, mu_init where
+            // denom == 0 (the discarded branch's value is finite and
+            // dropped by the blend, matching the scalar conditional).
+            let v_denom = _mm256_add_ps(v_prior_n, v_ni);
+            let v_raw = _mm256_div_ps(
+                _mm256_add_ps(v_prior_mu, _mm256_mul_ps(v_ni, v_mean)),
+                _mm256_max_ps(v_denom, v_eps),
+            );
+            let m_denom = _mm256_cmp_ps::<_CMP_GT_OQ>(v_denom, v_zero);
+            let v_mu_hat = _mm256_blendv_ps(v_mu_init, v_raw, m_denom);
+            let v_bonus = _mm256_mul_ps(
+                v_alpha,
+                _mm256_sqrt_ps(_mm256_div_ps(v_ln_t, _mm256_max_ps(v_ni, v_one))),
+            );
+            // Penalty λ on every arm except prev (andnot: mask-cleared).
+            let v_arm = _mm256_add_epi32(_mm256_set1_epi32((c * L) as i32), v_lane);
+            let m_prev = _mm256_cmpeq_epi32(v_arm, v_prev);
+            let v_penalty = _mm256_andnot_ps(_mm256_castsi256_ps(m_prev), v_lambda);
+            let v_score = _mm256_sub_ps(_mm256_add_ps(v_mu_hat, v_bonus), v_penalty);
+            let m_feas = _mm256_cmp_ps::<_CMP_GT_OQ>(v_feas, v_zero);
+            let v_masked = _mm256_blendv_ps(v_neg_large, v_score, m_feas);
+            // Per-lane running argmax on strict > (first-index within
+            // each lane's residue class; see portable module docs).
+            let m_gt = _mm256_cmp_ps::<_CMP_GT_OQ>(v_masked, v_best);
+            v_best = _mm256_blendv_ps(v_best, v_masked, m_gt);
+            v_best_arm = _mm256_blendv_epi8(v_best_arm, v_arm, _mm256_castps_si256(m_gt));
+        }
+        let mut lane_v = [0.0f32; L];
+        let mut lane_arm = [0i32; L];
+        _mm256_storeu_ps(lane_v.as_mut_ptr(), v_best);
+        _mm256_storeu_si256(lane_arm.as_mut_ptr() as *mut __m256i, v_best_arm);
+        let (mut best_v, mut best_arm) = merge_lanes_f32(&lane_v, &lane_arm, chunks);
+        for i in (chunks * L)..k {
+            // The scalar reference body, continuing the strict-> scan.
+            let ni = n[row + i];
+            let denom = prior_n + ni;
+            let mu_hat = if denom > 0.0 {
+                (prior_mu + ni * mean[row + i]) / denom.max(1e-12)
+            } else {
+                mu_init
+            };
+            let bonus = alpha * (ln_t / ni.max(1.0)).sqrt();
+            let penalty = if i as i32 != prev_e { lambda } else { 0.0 };
+            let mut v = mu_hat + bonus - penalty;
+            if feasible[row + i] <= 0.0 {
+                v = NEG_LARGE;
+            }
+            if v > best_v {
+                best_v = v;
+                best_arm = i as i32;
+            }
+        }
+        sel[e] = best_arm;
+    }
+}
+
+/// 4-lane SSE2 SA-UCB select. Safe to call on any x86_64 host (SSE2 is
+/// baseline); SSE2 has no `blendv`, so blends are and/andnot/or.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn saucb_select_into_sse2(
+    n: &[f32],
+    mean: &[f32],
+    prev: &[i32],
+    t: f32,
+    feasible: &[f32],
+    hyper: &SaUcbHyper,
+    k: usize,
+    sel: &mut [i32],
+) {
+    const L: usize = 4;
+    let b = prev.len();
+    let ln_t = t.max(2.0).ln();
+    let (alpha, lambda, mu_init, prior_n) =
+        (hyper.alpha, hyper.lambda, hyper.mu_init, hyper.prior_n);
+    let prior_mu = prior_n * mu_init;
+    let chunks = k / L;
+
+    // Safety: all intrinsics below are SSE2, statically present in the
+    // x86_64 baseline target; loads stay in-bounds (base + 4 <= row + k).
+    unsafe {
+        let v_alpha = _mm_set1_ps(alpha);
+        let v_lambda = _mm_set1_ps(lambda);
+        let v_mu_init = _mm_set1_ps(mu_init);
+        let v_prior_n = _mm_set1_ps(prior_n);
+        let v_prior_mu = _mm_set1_ps(prior_mu);
+        let v_ln_t = _mm_set1_ps(ln_t);
+        let v_one = _mm_set1_ps(1.0);
+        let v_eps = _mm_set1_ps(1e-12);
+        let v_zero = _mm_setzero_ps();
+        let v_neg_large = _mm_set1_ps(NEG_LARGE);
+        let v_lane = _mm_setr_epi32(0, 1, 2, 3);
+
+        for e in 0..b {
+            let row = e * k;
+            let prev_e = prev[e];
+            let v_prev = _mm_set1_epi32(prev_e);
+            let mut v_best = _mm_set1_ps(f32::NEG_INFINITY);
+            let mut v_best_arm = _mm_setzero_si128();
+            for c in 0..chunks {
+                let base = row + c * L;
+                let v_ni = _mm_loadu_ps(n.as_ptr().add(base));
+                let v_mean = _mm_loadu_ps(mean.as_ptr().add(base));
+                let v_feas = _mm_loadu_ps(feasible.as_ptr().add(base));
+                let v_denom = _mm_add_ps(v_prior_n, v_ni);
+                let v_raw = _mm_div_ps(
+                    _mm_add_ps(v_prior_mu, _mm_mul_ps(v_ni, v_mean)),
+                    _mm_max_ps(v_denom, v_eps),
+                );
+                let m_denom = _mm_cmpgt_ps(v_denom, v_zero);
+                let v_mu_hat = blend_ps(v_mu_init, v_raw, m_denom);
+                let v_bonus = _mm_mul_ps(
+                    v_alpha,
+                    _mm_sqrt_ps(_mm_div_ps(v_ln_t, _mm_max_ps(v_ni, v_one))),
+                );
+                let v_arm = _mm_add_epi32(_mm_set1_epi32((c * L) as i32), v_lane);
+                let m_prev = _mm_cmpeq_epi32(v_arm, v_prev);
+                let v_penalty = _mm_andnot_ps(_mm_castsi128_ps(m_prev), v_lambda);
+                let v_score = _mm_sub_ps(_mm_add_ps(v_mu_hat, v_bonus), v_penalty);
+                let m_feas = _mm_cmpgt_ps(v_feas, v_zero);
+                let v_masked = blend_ps(v_neg_large, v_score, m_feas);
+                let m_gt = _mm_cmpgt_ps(v_masked, v_best);
+                v_best = blend_ps(v_best, v_masked, m_gt);
+                v_best_arm = blend_si128(v_best_arm, v_arm, _mm_castps_si128(m_gt));
+            }
+            let mut lane_v = [0.0f32; L];
+            let mut lane_arm = [0i32; L];
+            _mm_storeu_ps(lane_v.as_mut_ptr(), v_best);
+            _mm_storeu_si128(lane_arm.as_mut_ptr() as *mut __m128i, v_best_arm);
+            let (mut best_v, mut best_arm) = merge_lanes_f32(&lane_v, &lane_arm, chunks);
+            for i in (chunks * L)..k {
+                // The scalar reference body, continuing the strict-> scan.
+                let ni = n[row + i];
+                let denom = prior_n + ni;
+                let mu_hat = if denom > 0.0 {
+                    (prior_mu + ni * mean[row + i]) / denom.max(1e-12)
+                } else {
+                    mu_init
+                };
+                let bonus = alpha * (ln_t / ni.max(1.0)).sqrt();
+                let penalty = if i as i32 != prev_e { lambda } else { 0.0 };
+                let mut v = mu_hat + bonus - penalty;
+                if feasible[row + i] <= 0.0 {
+                    v = NEG_LARGE;
+                }
+                if v > best_v {
+                    best_v = v;
+                    best_arm = i as i32;
+                }
+            }
+            sel[e] = best_arm;
+        }
+    }
+}
+
+/// `mask ? b : a` per f32 lane (SSE2 has no `blendv_ps`).
+#[inline(always)]
+fn blend_ps(a: __m128, b: __m128, mask: __m128) -> __m128 {
+    unsafe { _mm_or_ps(_mm_and_ps(mask, b), _mm_andnot_ps(mask, a)) }
+}
+
+/// `mask ? b : a` per 128-bit integer lane group.
+#[inline(always)]
+fn blend_si128(a: __m128i, b: __m128i, mask: __m128i) -> __m128i {
+    unsafe { _mm_or_si128(_mm_and_si128(mask, b), _mm_andnot_si128(mask, a)) }
+}
+
+/// 8-lane AVX2 incremental-mean update: gather the selected cells
+/// (`vgatherdps`), fold on registers, scalar scatter (indices are unique
+/// per chunk — one cell per environment — so no aliasing). The f64→f32
+/// reward narrowing uses `vcvtpd2ps`, the same round-to-nearest-even as
+/// the scalar `as f32` cast.
+///
+/// # Safety
+/// Requires the `avx2` CPU feature. Grid cell indices must fit in i32
+/// (`b * k <= i32::MAX`; a fleet that large would need > 8 GiB of grid
+/// memory — debug-asserted).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn grid_update_batch_avx2(
+    n: &mut [f32],
+    mean: &mut [f32],
+    prev: &mut [i32],
+    sel: &[i32],
+    reward: &[f64],
+    active: &[f32],
+    k: usize,
+) {
+    const L: usize = 8;
+    let b = sel.len();
+    debug_assert!(b.saturating_mul(k) <= i32::MAX as usize);
+    let chunks = b / L;
+    let v_one = _mm256_set1_ps(1.0);
+    for c in 0..chunks {
+        let e0 = c * L;
+        let mut idx = [0i32; L];
+        for (l, slot) in idx.iter_mut().enumerate() {
+            let e = e0 + l;
+            *slot = (e * k + sel[e] as usize) as i32;
+        }
+        let v_idx = _mm256_loadu_si256(idx.as_ptr() as *const __m256i);
+        let v_n = _mm256_i32gather_ps::<4>(n.as_ptr(), v_idx);
+        let v_m = _mm256_i32gather_ps::<4>(mean.as_ptr(), v_idx);
+        let v_a = _mm256_loadu_ps(active.as_ptr().add(e0));
+        let r_lo = _mm256_cvtpd_ps(_mm256_loadu_pd(reward.as_ptr().add(e0)));
+        let r_hi = _mm256_cvtpd_ps(_mm256_loadu_pd(reward.as_ptr().add(e0 + 4)));
+        let v_r = _mm256_set_m128(r_hi, r_lo);
+        let v_n_sel = _mm256_add_ps(v_n, v_a);
+        let v_delta = _mm256_mul_ps(
+            _mm256_div_ps(_mm256_sub_ps(v_r, v_m), _mm256_max_ps(v_n_sel, v_one)),
+            v_a,
+        );
+        let v_m_new = _mm256_add_ps(v_m, v_delta);
+        let mut n_new = [0.0f32; L];
+        let mut m_new = [0.0f32; L];
+        _mm256_storeu_ps(n_new.as_mut_ptr(), v_n_sel);
+        _mm256_storeu_ps(m_new.as_mut_ptr(), v_m_new);
+        for l in 0..L {
+            let i = idx[l] as usize;
+            n[i] = n_new[l];
+            mean[i] = m_new[l];
+            let e = e0 + l;
+            if active[e] > 0.0 {
+                prev[e] = sel[e];
+            }
+        }
+    }
+    for e in (chunks * L)..b {
+        // The scalar reference body.
+        let a = active[e];
+        let s = sel[e] as usize;
+        let idx = e * k + s;
+        let r = reward[e] as f32;
+        let n_sel = n[idx] + a;
+        n[idx] = n_sel;
+        let delta = (r - mean[idx]) / n_sel.max(1.0) * a;
+        mean[idx] += delta;
+        if a > 0.0 {
+            prev[e] = sel[e];
+        }
+    }
+}

@@ -50,7 +50,46 @@ pub struct BatchLinUcb {
     /// update pairs rewards with the context they were selected under.
     last_ctx: Vec<f64>,
     /// Scratch: A⁻¹x for the arm being scored/updated (length D).
+    /// Policy-owned so both the scorer and the update are allocation-free
+    /// in the hot loop (mirrors `fleet::native::StepScratch`).
     v: Vec<f64>,
+}
+
+/// Number of matrix rows processed per chunk in [`matvec_rows_into`].
+const MATVEC_LANES: usize = 4;
+
+/// Row-chunked matvec `out = M·x` for a row-major (D, D) matrix: rows go
+/// [`MATVEC_LANES`] at a time through independent per-lane accumulators,
+/// remainder rows through the plain scalar dot. Each lane walks the
+/// columns strictly ascending, so every `out[r]` is the exact
+/// left-to-right accumulation chain of the original nested loop —
+/// bit-identical results, while the independent lanes let the
+/// autovectorizer keep MATVEC_LANES f64 FMA-free multiply-add streams in
+/// flight instead of one serial dependency chain.
+fn matvec_rows_into(m: &[f64], x: &[f64], d: usize, out: &mut [f64]) {
+    debug_assert_eq!(m.len(), d * d);
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(out.len(), d);
+    const L: usize = MATVEC_LANES;
+    let chunks = d / L;
+    for chunk in 0..chunks {
+        let r0 = chunk * L;
+        let mut acc = [0.0f64; L];
+        for (c, &xc) in x.iter().enumerate() {
+            for (l, a) in acc.iter_mut().enumerate() {
+                *a += m[(r0 + l) * d + c] * xc;
+            }
+        }
+        out[r0..r0 + L].copy_from_slice(&acc);
+    }
+    for r in chunks * L..d {
+        let row = &m[r * d..(r + 1) * d];
+        let mut vr = 0.0;
+        for (c, &xc) in x.iter().enumerate() {
+            vr += row[c] * xc;
+        }
+        out[r] = vr;
+    }
 }
 
 impl BatchLinUcb {
@@ -88,11 +127,51 @@ impl BatchLinUcb {
     }
 
     /// Masked argmax of `θ·x + α√(xᵀA⁻¹x)` per environment against the
-    /// stashed contexts.
+    /// stashed contexts. Stages `v = A⁻¹x` through the policy-owned
+    /// scratch via the row-chunked [`matvec_rows_into`], then folds the
+    /// two dots in row order — the same accumulation chains as the
+    /// original interleaved loop (the `chunked_scorer_matches_reference_
+    /// bitwise` test pins it against the preserved reference).
     fn score_into(&mut self, feasible: &[f32], sel: &mut [i32]) {
         let (b, k, d) = (self.b, self.k, self.d);
+        let alpha = self.alpha;
         debug_assert_eq!(feasible.len(), b * k);
         debug_assert_eq!(sel.len(), b);
+        let Self { a_inv, b_vec, last_ctx, v, .. } = self;
+        for e in 0..b {
+            let x = &last_ctx[e * d..(e + 1) * d];
+            let mut best_arm = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for i in 0..k {
+                if feasible[e * k + i] <= 0.0 {
+                    continue;
+                }
+                let cell = (e * k + i) * d * d;
+                let bv = &b_vec[(e * k + i) * d..(e * k + i + 1) * d];
+                // v = A⁻¹x; θ·x = bᵀA⁻¹x = b·v (A⁻¹ stays symmetric
+                // under Sherman–Morrison), so one matvec scores the arm.
+                matvec_rows_into(&a_inv[cell..cell + d * d], x, d, v);
+                let mut mean = 0.0;
+                let mut quad = 0.0;
+                for r in 0..d {
+                    mean += bv[r] * v[r];
+                    quad += x[r] * v[r];
+                }
+                let score = mean + alpha * quad.max(0.0).sqrt();
+                if score > best_v {
+                    best_v = score;
+                    best_arm = i;
+                }
+            }
+            sel[e] = best_arm as i32;
+        }
+    }
+
+    /// The pre-chunking scorer, preserved verbatim as the conformance
+    /// reference for [`score_into`] (test-only).
+    #[cfg(test)]
+    fn score_into_reference(&mut self, feasible: &[f32], sel: &mut [i32]) {
+        let (b, k, d) = (self.b, self.k, self.d);
         for e in 0..b {
             let x = &self.last_ctx[e * d..(e + 1) * d];
             let mut best_arm = 0usize;
@@ -103,8 +182,6 @@ impl BatchLinUcb {
                 }
                 let cell = (e * k + i) * d * d;
                 let bv = &self.b_vec[(e * k + i) * d..(e * k + i + 1) * d];
-                // v = A⁻¹x; θ·x = bᵀA⁻¹x = b·v (A⁻¹ stays symmetric
-                // under Sherman–Morrison), so one matvec scores the arm.
                 let mut mean = 0.0;
                 let mut quad = 0.0;
                 for r in 0..d {
@@ -161,34 +238,32 @@ impl BatchPolicy for BatchLinUcb {
 
     fn update_batch(&mut self, sel: &[i32], reward: &[f64], _progress: &[f64], active: &[f32]) {
         let (k, d) = (self.k, self.d);
+        let Self { a_inv, b_vec, last_ctx, v, .. } = self;
         for e in 0..sel.len() {
             if active[e] <= 0.0 {
                 continue;
             }
             let arm = sel[e] as usize;
             debug_assert!(arm < k);
-            let x = &self.last_ctx[e * d..(e + 1) * d];
+            let x = &last_ctx[e * d..(e + 1) * d];
             let cell = (e * k + arm) * d * d;
-            // v = A⁻¹x and denom = 1 + xᵀA⁻¹x for the rank-1 downdate.
+            // v = A⁻¹x and denom = 1 + xᵀA⁻¹x for the rank-1 downdate;
+            // the chunked matvec and the row-order denom fold reproduce
+            // the original interleaved accumulation chains exactly.
+            matvec_rows_into(&a_inv[cell..cell + d * d], x, d, v);
             let mut denom = 1.0;
             for r in 0..d {
-                let row = &self.a_inv[cell + r * d..cell + (r + 1) * d];
-                let mut vr = 0.0;
-                for (c, &xc) in x.iter().enumerate() {
-                    vr += row[c] * xc;
-                }
-                self.v[r] = vr;
-                denom += x[r] * vr;
+                denom += x[r] * v[r];
             }
             if denom > 1e-12 {
                 for r in 0..d {
-                    let vr = self.v[r];
+                    let vr = v[r];
                     for c in 0..d {
-                        self.a_inv[cell + r * d + c] -= vr * self.v[c] / denom;
+                        a_inv[cell + r * d + c] -= vr * v[c] / denom;
                     }
                 }
             }
-            let bv = &mut self.b_vec[(e * k + arm) * d..(e * k + arm + 1) * d];
+            let bv = &mut b_vec[(e * k + arm) * d..(e * k + arm + 1) * d];
             for (r, &xc) in x.iter().enumerate() {
                 bv[r] += reward[e] * xc;
             }
@@ -364,6 +439,9 @@ impl BatchCLinUcb {
                     if self.estimated_feasible(e, i) { feasible[idx] } else { 0.0 };
             }
         }
+        // The intersection keeps the max-frequency arm wherever the
+        // caller's mask does — guard the invariant at the build site.
+        super::batch::debug_assert_feasible_rows(&self.mask, k);
     }
 
     /// Measurement dwell: a just-switched-to arm has no clean progress
@@ -579,6 +657,42 @@ mod tests {
             let true_s = 1.0 - progress_of(arm) / progress_of(k - 1);
             p.update_batch(&sel, &[-1.0], &[progress_of(arm)], &[1.0]);
             assert!(true_s <= 0.07, "picked arm {arm} with slowdown {true_s}");
+        }
+    }
+
+    #[test]
+    fn chunked_scorer_matches_reference_bitwise() {
+        use crate::util::Rng;
+        // Shapes straddle the 4-row lane width: d < L, d = L, d with a
+        // remainder, d a multiple of L.
+        for &(b, k, d, seed) in
+            &[(1usize, 5usize, 4usize, 1u64), (3, 9, 7, 2), (2, 4, 1, 3), (4, 3, 12, 4), (2, 6, 5, 5)]
+        {
+            let mut p = BatchLinUcb::new(b, k, d, 0.4, 1.0);
+            let mut rng = Rng::new(seed);
+            let mut sel = vec![0i32; b];
+            let mut sel_ref = vec![0i32; b];
+            let mut ctx = vec![0.0f64; b * d];
+            let progress = vec![1e-3f64; b];
+            for t in 1..=60u64 {
+                for c in ctx.iter_mut() {
+                    *c = rng.uniform_range(-1.0, 1.0);
+                }
+                let feas: Vec<f32> =
+                    (0..b * k).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+                let mut reference = p.clone();
+                p.select_into_ctx(t, &feas, &ctx, d, &mut sel);
+                reference.last_ctx.copy_from_slice(&ctx);
+                reference.score_into_reference(&feas, &mut sel_ref);
+                assert_eq!(sel, sel_ref, "b={b} k={k} d={d} t={t}");
+                let reward: Vec<f64> = sel
+                    .iter()
+                    .map(|&s| -1.0 - 0.1 * s as f64 + rng.uniform_range(-0.1, 0.1))
+                    .collect();
+                let active: Vec<f32> =
+                    (0..b).map(|e| if t % 5 == 0 && e == 0 { 0.0 } else { 1.0 }).collect();
+                p.update_batch(&sel, &reward, &progress, &active);
+            }
         }
     }
 

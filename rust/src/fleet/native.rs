@@ -8,7 +8,11 @@
 //! core ([`crate::bandit::batch`]): this module contributes only the
 //! environment dynamics (reward synthesis, progress/energy/regret
 //! accounting) and calls [`saucb_select_into`] / [`grid_update_batch`] on
-//! the `FleetState` grids — there is no inline UCB arithmetic here.
+//! the `FleetState` grids — there is no inline UCB arithmetic here. Those
+//! free functions dispatch to SIMD kernels at runtime, but every kernel
+//! is pinned bit-identical to the scalar reference
+//! (`tests/simd_conformance.rs`), so this module remains the bit-level
+//! reference for the HLO engine on every host.
 //!
 //! The `*_into` variants write into caller-provided [`StepScratch`] /
 //! noise buffers so the hot loop performs no per-step allocations; the

@@ -108,6 +108,10 @@ impl FleetParams {
                 self.feasible[e * self.k + i] = if feasible { 1.0 } else { 0.0 };
             }
         }
+        // Arm k-1 is always kept, so every row stays selectable — guard
+        // the invariant where the mask is built (see
+        // `bandit::batch::saucb_select_into`'s all-infeasible contract).
+        crate::bandit::batch::debug_assert_feasible_rows(&self.feasible, self.k);
     }
 
     /// Best (feasible) normalized reward per env.

@@ -4,10 +4,17 @@
 //! mean/std/throughput reporting, and a black-box to defeat dead-code
 //! elimination. Output format is one line per case:
 //! `bench <name> ... mean <t> ± <std>  [<throughput>]`.
+//!
+//! [`Summary`] collects the per-case results into a machine-readable
+//! bench-summary JSON (`BENCH_<bench>.json`, or `$BENCH_SUMMARY_OUT`) so
+//! perf runs can be recorded and diffed (EXPERIMENTS.md §Perf).
 
+use std::ffi::OsString;
 use std::hint::black_box as std_black_box;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use super::io::{write_file, Json};
 use super::stats::Welford;
 
 /// Re-export of the std black box (stable since 1.66).
@@ -42,6 +49,8 @@ pub struct CaseResult {
     pub mean_ns: f64,
     pub std_ns: f64,
     pub iters_total: u64,
+    /// Items processed per iteration (0 = throughput untracked).
+    pub items_per_iter: f64,
 }
 
 impl Bench {
@@ -86,6 +95,7 @@ impl Bench {
             mean_ns: w.mean(),
             std_ns: w.sample_std(),
             iters_total,
+            items_per_iter,
         };
         let thr = if items_per_iter > 0.0 {
             format!("  [{:>12} items/s]", human_rate(items_per_iter * 1e9 / w.mean()))
@@ -100,6 +110,82 @@ impl Bench {
             thr
         );
         result
+    }
+}
+
+/// Machine-readable bench summary: collects [`CaseResult`]s plus
+/// free-form context notes (kernel name, build flags, host facts) and
+/// renders/writes them as JSON for recording perf runs.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    bench: String,
+    notes: Vec<(String, String)>,
+    cases: Vec<CaseResult>,
+}
+
+impl Summary {
+    pub fn new(bench: &str) -> Summary {
+        Summary { bench: bench.to_string(), notes: Vec::new(), cases: Vec::new() }
+    }
+
+    /// Attach a context note (insertion-ordered in the JSON).
+    pub fn note(&mut self, key: &str, value: &str) -> &mut Self {
+        self.notes.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Record one case result.
+    pub fn push(&mut self, r: CaseResult) -> &mut Self {
+        self.cases.push(r);
+        self
+    }
+
+    /// The summary as a JSON tree: `{bench, notes: {..}, cases: [..]}`.
+    /// Cases with tracked throughput carry a derived `items_per_s`.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("bench", self.bench.as_str());
+        let mut notes = Json::obj();
+        for (k, v) in &self.notes {
+            notes.set(k.as_str(), v.as_str());
+        }
+        root.set("notes", notes);
+        let cases: Vec<Json> = self
+            .cases
+            .iter()
+            .map(|c| {
+                let mut o = Json::obj();
+                o.set("name", c.name.as_str());
+                o.set("mean_ns", c.mean_ns);
+                o.set("std_ns", c.std_ns);
+                o.set("iters", c.iters_total as f64);
+                o.set("items_per_iter", c.items_per_iter);
+                if c.items_per_iter > 0.0 {
+                    o.set("items_per_s", c.items_per_iter * 1e9 / c.mean_ns.max(1e-9));
+                }
+                o
+            })
+            .collect();
+        root.set("cases", cases);
+        root
+    }
+
+    /// Write the summary JSON (atomically) and return the path:
+    /// `$BENCH_SUMMARY_OUT` when set and non-empty, else
+    /// `BENCH_<bench>.json` in the working directory.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = summary_path(std::env::var_os("BENCH_SUMMARY_OUT"), &self.bench);
+        write_file(&path, &self.to_json().render())?;
+        Ok(path)
+    }
+}
+
+/// Pure path resolution for [`Summary::write`] (testable without
+/// touching the process environment).
+fn summary_path(env_override: Option<OsString>, bench: &str) -> PathBuf {
+    match env_override {
+        Some(p) if !p.is_empty() => PathBuf::from(p),
+        _ => PathBuf::from(format!("BENCH_{bench}.json")),
     }
 }
 
@@ -142,6 +228,42 @@ mod tests {
         });
         assert!(r.mean_ns > 0.0);
         assert!(r.iters_total > 0);
+    }
+
+    #[test]
+    fn summary_renders_machine_readable_json() {
+        let b = Bench::quick();
+        let mut acc = 0u64;
+        let mut s = Summary::new("unit");
+        s.note("kernel", "scalar");
+        s.push(b.case("spin", 64.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        }));
+        let parsed = Json::parse(&s.to_json().render()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("unit"));
+        assert_eq!(
+            parsed.get("notes").and_then(|n| n.get("kernel")).and_then(Json::as_str),
+            Some("scalar")
+        );
+        let cases = parsed.get("cases").and_then(Json::as_arr).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("name").and_then(Json::as_str), Some("spin"));
+        assert!(cases[0].get_num("mean_ns").unwrap() > 0.0);
+        assert_eq!(cases[0].get_num("items_per_iter"), Some(64.0));
+        assert!(cases[0].get_num("items_per_s").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn summary_path_prefers_nonempty_env_override() {
+        assert_eq!(summary_path(None, "engine"), PathBuf::from("BENCH_engine.json"));
+        assert_eq!(
+            summary_path(Some(OsString::new()), "engine"),
+            PathBuf::from("BENCH_engine.json")
+        );
+        assert_eq!(
+            summary_path(Some(OsString::from("/tmp/out.json")), "engine"),
+            PathBuf::from("/tmp/out.json")
+        );
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! SIMD conformance suite: every dispatchable decision kernel must be
+//! **bit-identical** to the preserved scalar reference
+//! (`bandit::batch::scalar`), across the full shape matrix — B ∈
+//! {1..1000} (including non-multiples of the 8/4 lane widths), K ∈
+//! {1..64}, random feasibility masks (including fully-infeasible rows
+//! and guaranteed exact score ties from discrete value grids),
+//! `prev = -1`, zero pull counts (UCB1 warm-start), and active-mask
+//! freezes (frozen rows must not move by even one bit).
+//!
+//! CI runs this suite twice: once under the default dispatch and once
+//! with `ENERGYUCB_FORCE_SCALAR=1`, so the escape hatch itself stays
+//! covered. Grid values are drawn from small discrete sets on purpose —
+//! continuous draws essentially never tie, and ties are where a wrong
+//! lane-merge order would show up (first-index tie-breaking is part of
+//! the HLO artifact contract).
+
+use energyucb::bandit::batch::{
+    active_kernel, grid_update_batch_with, saucb_select_into_with, swucb_select_into_with,
+    ucb1_select_into_with, Kernel, SaUcbHyper,
+};
+use energyucb::testutil::proptest_lite::{forall_seeded, Gen};
+use energyucb::util::Rng;
+
+/// Random (B, K, grid-seed) shape; shrinks toward B = 1 / K = 1 and
+/// halves, keeping the grid seed so the counterexample replays.
+struct Shape;
+
+impl Gen for Shape {
+    type Value = (usize, usize, u64);
+    fn generate(&self, rng: &mut Rng) -> (usize, usize, u64) {
+        (1 + rng.index(1000), 1 + rng.index(64), rng.next_u64())
+    }
+    fn shrink(&self, &(b, k, seed): &(usize, usize, u64)) -> Vec<(usize, usize, u64)> {
+        let mut out = Vec::new();
+        if b > 1 {
+            out.push((1, k, seed));
+            out.push((b / 2, k, seed));
+        }
+        if k > 1 {
+            out.push((b, 1, seed));
+            out.push((b, k / 2, seed));
+        }
+        out
+    }
+}
+
+/// Synthesized f32 SA-UCB grids with tie-stressing discrete values.
+/// Means are strictly negative (never ±0.0) so the frozen-row bitwise
+/// invariance is well-defined: `x + ±0.0` is only a bitwise no-op for
+/// nonzero `x`.
+struct SaGrids {
+    hyper: SaUcbHyper,
+    n: Vec<f32>,
+    mean: Vec<f32>,
+    prev: Vec<i32>,
+    feasible: Vec<f32>,
+    reward: Vec<f64>,
+    active: Vec<f32>,
+    t: f32,
+}
+
+fn sa_grids(b: usize, k: usize, seed: u64) -> SaGrids {
+    let mut rng = Rng::new(seed);
+    // Hyper-parameter corners: prior_n = 0 with n = 0 exercises the
+    // denom <= 0 → mu_init branch; lambda = 0 removes the penalty term.
+    let hyper = SaUcbHyper {
+        alpha: [0.0f32, 0.1, 1.0, 2.0][rng.index(4)],
+        lambda: [0.0f32, 0.05, 0.5][rng.index(3)],
+        mu_init: [0.0f32, -1.0][rng.index(2)],
+        prior_n: [0.0f32, 1.0, 4.0][rng.index(3)],
+    };
+    let mut g = SaGrids {
+        hyper,
+        n: Vec::with_capacity(b * k),
+        mean: Vec::with_capacity(b * k),
+        prev: Vec::with_capacity(b),
+        feasible: Vec::with_capacity(b * k),
+        reward: Vec::with_capacity(b),
+        active: Vec::with_capacity(b),
+        t: (1 + rng.index(1000)) as f32,
+    };
+    for e in 0..b {
+        // ~1-in-6 rows are fully infeasible (the pinned arm-0 fallback);
+        // every other row keeps at least one feasible arm.
+        let all_zero = rng.index(6) == 0;
+        for _ in 0..k {
+            g.n.push(rng.index(5) as f32);
+            g.mean.push(-0.5 * (rng.index(4) + 1) as f32);
+            g.feasible.push(if !all_zero && rng.chance(0.8) { 1.0 } else { 0.0 });
+        }
+        if !all_zero {
+            g.feasible[e * k + rng.index(k)] = 1.0;
+        }
+        g.prev.push(rng.index(k + 1) as i32 - 1); // -1 ..= k-1
+        g.reward.push(-0.5 * (rng.index(4) + 1) as f64);
+        g.active.push(if rng.chance(0.25) { 0.0 } else { 1.0 });
+    }
+    g
+}
+
+/// Synthesized f64 grids for the UCB1 / SW-UCB kernels. Zero pull counts
+/// exercise the UCB1 play-each-arm-once warm start.
+struct F64Grids {
+    n: Vec<u64>,
+    sum: Vec<f64>,
+    mean: Vec<f64>,
+    prev: Vec<i32>,
+    feasible: Vec<f32>,
+    t: u64,
+}
+
+fn f64_grids(b: usize, k: usize, seed: u64) -> F64Grids {
+    let mut rng = Rng::new(seed ^ 0xF64);
+    let mut g = F64Grids {
+        n: Vec::with_capacity(b * k),
+        sum: Vec::with_capacity(b * k),
+        mean: Vec::with_capacity(b * k),
+        prev: Vec::with_capacity(b),
+        feasible: Vec::with_capacity(b * k),
+        t: 1 + rng.index(1000) as u64,
+    };
+    for e in 0..b {
+        let all_zero = rng.index(6) == 0;
+        for _ in 0..k {
+            g.n.push(rng.index(4) as u64);
+            g.sum.push(-0.5 * (rng.index(8) + 1) as f64);
+            g.mean.push(-0.5 * (rng.index(4) + 1) as f64);
+            g.feasible.push(if !all_zero && rng.chance(0.8) { 1.0 } else { 0.0 });
+        }
+        if !all_zero {
+            g.feasible[e * k + rng.index(k)] = 1.0;
+        }
+        g.prev.push(rng.index(k + 1) as i32 - 1);
+    }
+    g
+}
+
+#[test]
+fn saucb_select_matches_scalar_bitwise() {
+    forall_seeded(0x51D_0001, 40, Shape, |&(b, k, seed)| {
+        let g = sa_grids(b, k, seed);
+        let mut want = vec![0i32; b];
+        saucb_select_into_with(
+            Kernel::Scalar,
+            &g.n,
+            &g.mean,
+            &g.prev,
+            g.t,
+            &g.feasible,
+            &g.hyper,
+            k,
+            &mut want,
+        );
+        Kernel::available().into_iter().all(|kernel| {
+            let mut got = vec![0i32; b];
+            saucb_select_into_with(
+                kernel, &g.n, &g.mean, &g.prev, g.t, &g.feasible, &g.hyper, k, &mut got,
+            );
+            if got != want {
+                eprintln!("saucb mismatch: {} (b={b} k={k} seed={seed:#x})", kernel.name());
+                return false;
+            }
+            true
+        })
+    });
+}
+
+#[test]
+fn grid_update_matches_scalar_bitwise_and_freezes() {
+    forall_seeded(0x51D_0002, 40, Shape, |&(b, k, seed)| {
+        let g = sa_grids(b, k, seed);
+        let mut rng = Rng::new(seed ^ 0x5E1);
+        let sel: Vec<i32> = (0..b).map(|_| rng.index(k) as i32).collect();
+
+        let (mut n0, mut m0, mut p0) = (g.n.clone(), g.mean.clone(), g.prev.clone());
+        grid_update_batch_with(
+            Kernel::Scalar,
+            &mut n0,
+            &mut m0,
+            &mut p0,
+            &sel,
+            &g.reward,
+            &g.active,
+            k,
+        );
+        // Frozen rows are bitwise-invariant on the reference itself.
+        for e in 0..b {
+            if g.active[e] > 0.0 {
+                continue;
+            }
+            if p0[e] != g.prev[e] {
+                eprintln!("frozen prev moved (e={e}, b={b} k={k} seed={seed:#x})");
+                return false;
+            }
+            for i in 0..k {
+                let idx = e * k + i;
+                if n0[idx].to_bits() != g.n[idx].to_bits()
+                    || m0[idx].to_bits() != g.mean[idx].to_bits()
+                {
+                    eprintln!("frozen cell moved (e={e} i={i}, b={b} k={k} seed={seed:#x})");
+                    return false;
+                }
+            }
+        }
+
+        Kernel::available().into_iter().all(|kernel| {
+            let (mut n1, mut m1, mut p1) = (g.n.clone(), g.mean.clone(), g.prev.clone());
+            grid_update_batch_with(
+                kernel, &mut n1, &mut m1, &mut p1, &sel, &g.reward, &g.active, k,
+            );
+            let ok = p1 == p0
+                && n1.iter().zip(&n0).all(|(a, b)| a.to_bits() == b.to_bits())
+                && m1.iter().zip(&m0).all(|(a, b)| a.to_bits() == b.to_bits());
+            if !ok {
+                eprintln!("update mismatch: {} (b={b} k={k} seed={seed:#x})", kernel.name());
+            }
+            ok
+        })
+    });
+}
+
+#[test]
+fn ucb1_select_matches_scalar_bitwise() {
+    forall_seeded(0x51D_0003, 40, Shape, |&(b, k, seed)| {
+        let g = f64_grids(b, k, seed);
+        let alpha = 0.05;
+        let mut want = vec![0i32; b];
+        ucb1_select_into_with(
+            Kernel::Scalar,
+            &g.n,
+            &g.mean,
+            alpha,
+            g.t,
+            &g.feasible,
+            k,
+            &mut want,
+        );
+        Kernel::available().into_iter().all(|kernel| {
+            let mut got = vec![0i32; b];
+            ucb1_select_into_with(kernel, &g.n, &g.mean, alpha, g.t, &g.feasible, k, &mut got);
+            if got != want {
+                eprintln!("ucb1 mismatch: {} (b={b} k={k} seed={seed:#x})", kernel.name());
+                return false;
+            }
+            true
+        })
+    });
+}
+
+#[test]
+fn swucb_select_matches_scalar_bitwise() {
+    forall_seeded(0x51D_0004, 40, Shape, |&(b, k, seed)| {
+        let g = f64_grids(b, k, seed);
+        let (alpha, lambda) = (0.05, 0.01);
+        // The effective window, exactly as BatchSwUcb computes it.
+        let horizon = (g.t as f64).min(64.0).max(2.0);
+        let mut want = vec![0i32; b];
+        swucb_select_into_with(
+            Kernel::Scalar,
+            &g.sum,
+            &g.n,
+            &g.prev,
+            alpha,
+            lambda,
+            horizon,
+            &g.feasible,
+            k,
+            &mut want,
+        );
+        Kernel::available().into_iter().all(|kernel| {
+            let mut got = vec![0i32; b];
+            swucb_select_into_with(
+                kernel, &g.sum, &g.n, &g.prev, alpha, lambda, horizon, &g.feasible, k, &mut got,
+            );
+            if got != want {
+                eprintln!("swucb mismatch: {} (b={b} k={k} seed={seed:#x})", kernel.name());
+                return false;
+            }
+            true
+        })
+    });
+}
+
+#[test]
+fn multi_step_trajectories_stay_bit_identical() {
+    // A 60-step select→reward→update loop per kernel: selection history,
+    // final grids, and prev must agree bit-for-bit across kernels (one
+    // diverging bit anywhere would compound and show here).
+    let (b, k) = (37usize, 13usize);
+    let hyper = SaUcbHyper::default();
+    let mut results: Vec<(Vec<i32>, Vec<u32>, Vec<u32>, Vec<i32>)> = Vec::new();
+    for kernel in Kernel::available() {
+        let mut n = vec![0.0f32; b * k];
+        let mut mean = vec![0.0f32; b * k];
+        let mut prev = vec![-1i32; b];
+        let mut sel = vec![0i32; b];
+        let mut hist: Vec<i32> = Vec::new();
+        for t in 1..=60u64 {
+            let feasible: Vec<f32> = (0..b * k)
+                .map(|j| if (j + t as usize) % 11 == 0 { 0.0 } else { 1.0 })
+                .collect();
+            saucb_select_into_with(
+                kernel, &n, &mean, &prev, t as f32, &feasible, &hyper, k, &mut sel,
+            );
+            let reward: Vec<f64> = sel
+                .iter()
+                .enumerate()
+                .map(|(e, &s)| -1.0 - 0.25 * ((s as usize + e + t as usize) % 5) as f64)
+                .collect();
+            let active: Vec<f32> =
+                (0..b).map(|e| if (e + t as usize) % 7 == 0 { 0.0 } else { 1.0 }).collect();
+            grid_update_batch_with(kernel, &mut n, &mut mean, &mut prev, &sel, &reward, &active, k);
+            hist.extend_from_slice(&sel);
+        }
+        results.push((
+            hist,
+            n.iter().map(|x| x.to_bits()).collect(),
+            mean.iter().map(|x| x.to_bits()).collect(),
+            prev,
+        ));
+    }
+    let (h0, n0, m0, p0) = &results[0];
+    for (i, (h, n, m, p)) in results.iter().enumerate().skip(1) {
+        let name = Kernel::available()[i].name();
+        assert_eq!(h, h0, "selection history diverged on {name}");
+        assert_eq!(n, n0, "count grid diverged on {name}");
+        assert_eq!(m, m0, "mean grid diverged on {name}");
+        assert_eq!(p, p0, "prev diverged on {name}");
+    }
+}
+
+#[test]
+fn dispatch_resolution_is_consistent_with_env() {
+    // This binary never calls force_kernel, so active_kernel() reflects
+    // the process environment: forced scalar under the CI escape-hatch
+    // leg, a chunked kernel under plain auto-detection.
+    let k = active_kernel();
+    assert!(k.supported());
+    let forced = std::env::var("ENERGYUCB_FORCE_SCALAR")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if forced {
+        assert_eq!(k, Kernel::Scalar);
+    } else if std::env::var_os("ENERGYUCB_KERNEL").is_none() {
+        assert_ne!(k, Kernel::Scalar, "auto-detection must pick a chunked kernel");
+    }
+}
