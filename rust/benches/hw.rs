@@ -1,0 +1,41 @@
+//! Live-hardware backend overhead: one apply+sample decision interval of
+//! [`HwBackend`] over the deterministic MockDriver, across device counts.
+//! This is the control-plane cost a live session pays per interval on top
+//! of the driver's own call latency (which the `hw.*_latency_us` gauges
+//! measure in situ), so it bounds how fine a dt_s the hw tier can pace.
+
+use energyucb::control::{SessionCfg, StepSample, TelemetryBackend};
+use energyucb::hw::{HwBackend, HwTuning, MockDriver};
+use energyucb::util::bench::{black_box, Bench};
+use energyucb::workload::calibration;
+
+fn main() {
+    let b = Bench::default();
+    let app = calibration::app("tealeaf").unwrap();
+    let cfg = SessionCfg::default();
+    let freqs = cfg.domain();
+
+    println!("# hw backend apply+sample interval (device-intervals/s; mock driver)");
+    for devices in [1usize, 4, 16] {
+        let driver = MockDriver::calibrated(&app, &freqs, devices, cfg.dt_s, cfg.seed);
+        let mut backend = HwBackend::new(Box::new(driver), &cfg, HwTuning::default()).unwrap();
+        let mut out = vec![StepSample::default(); devices];
+        let mut sel = vec![0i32; devices];
+        let mut arm = 0i32;
+        b.case(&format!("mock/B={devices}"), devices as f64, || {
+            // Alternate arms so half the intervals exercise a real clock
+            // switch through the driver, half the same-arm fast path.
+            arm = (arm + 1) % 2;
+            sel.fill(arm);
+            backend.apply(&sel).unwrap();
+            backend.sample_into(&mut out).unwrap();
+            black_box(&out);
+            if backend.done() {
+                // Long runs outlive the virtual workload: start a fresh
+                // one so every iteration measures the live path.
+                let driver = MockDriver::calibrated(&app, &freqs, devices, cfg.dt_s, cfg.seed);
+                backend = HwBackend::new(Box::new(driver), &cfg, HwTuning::default()).unwrap();
+            }
+        });
+    }
+}

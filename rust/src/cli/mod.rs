@@ -3,6 +3,8 @@
 //! ```text
 //! energyucb exp <id>|all [--reps N] [--seed S] [--out DIR] [--policy NAME] [--quick]
 //! energyucb run [--config cfg.toml] [--app NAME] [--policy NAME] [--reps N]
+//!               [--backend sim|mock|nvml] [--devices N]
+//! energyucb devices [--config cfg.toml] [--backend mock|nvml]
 //! energyucb replay --in FILE [--policy NAME]
 //! energyucb sweep --replay FILE [--policies a,b,..] [--alpha L] [--lambda L] [--jobs J]
 //! energyucb fleet [--apps a,b,..] [--batch B] [--steps N] [--native] [--delta D]
@@ -25,7 +27,7 @@ use crate::config::ExperimentConfig;
 use crate::control::{
     drive, run_repeated, run_repeated_serving, sweep_replay, Controller, Recording,
     RepeatedMetrics, ReplayBackend, ReplayHeader, RunResult, SessionCfg, SimBackend,
-    SweepCandidate,
+    SweepCandidate, TelemetryBackend,
 };
 use crate::experiments::{all_experiments, experiment_by_id, ExpContext};
 use crate::fleet::{fleet_controller, native, FleetBackend, FleetHyper, FleetParams, FleetState};
@@ -45,6 +47,8 @@ USAGE:
                 [--policy NAME] [--quick]
   energyucb run [--config FILE] [--app NAME] [--policy NAME] [--reps N] [--seed S]
                 [--serving] [--record-telemetry] [--record-out FILE]
+                [--backend sim|mock|nvml] [--devices N]
+  energyucb devices [--config FILE] [--backend mock|nvml] [--devices N]
   energyucb replay --in FILE [--policy NAME]
   energyucb sweep --replay FILE [--policies NAME,NAME,...] [--alpha A,A,...]
                   [--lambda L,L,...] [--jobs J]
@@ -76,6 +80,17 @@ recorded log back through the controller: with the recording's own
 policy the report is byte-identical to the original run; with --policy
 it evaluates a different policy counterfactually on the frozen telemetry
 (EXPERIMENTS.md §Controller).
+
+--backend selects where run's telemetry comes from: sim (default), mock
+(the deterministic fault-scriptable hardware driver; --devices N maps one
+controller row per mock GPU), or nvml (live GPUs via a dlopen'd
+libnvidia-ml; needs a build with --features nvml and the clock-management
+privilege `nvidia-smi -lgc` uses). The [hw] config table sets the default
+backend, device count, safety-rail tuning (min_dwell_steps,
+watchdog_errors), and scripted mock faults; `devices` enumerates the
+GPUs the active driver sees. Hardware runs record through the same
+telemetry grammar, so `replay` and `sweep --replay` consume a mock or
+live trace unchanged (EXPERIMENTS.md §Live hardware).
 
 Sweep evaluates many policies against one frozen recording (session or
 fleet), fanned out over --jobs threads with byte-identical output at any
@@ -122,6 +137,7 @@ pub fn dispatch<S: AsRef<str>>(raw: &[S]) -> Result<i32> {
     match cmd.as_str() {
         "exp" => cmd_exp(rest),
         "run" => cmd_run(rest),
+        "devices" => cmd_devices(rest),
         "replay" => cmd_replay(rest),
         "sweep" => cmd_sweep(rest),
         "fleet" => cmd_fleet(rest),
@@ -240,7 +256,7 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
     let args = Args::parse(rest, &["trace", "record-telemetry", "serving"])?;
     args.ensure_known(&[
         "config", "app", "policy", "reps", "seed", "alpha", "lambda", "delta", "ridge",
-        "record-out",
+        "record-out", "backend", "devices",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -293,6 +309,19 @@ fn cmd_run(rest: &[String]) -> Result<i32> {
     } else {
         cfg.serving.clone()
     };
+
+    // Backend selection: --backend overrides the [hw] table's default;
+    // absent both, the simulated GEOPM service.
+    let backend_name = match args.get("backend") {
+        Some(b) => b.to_string(),
+        None => cfg.hw.as_ref().map(|h| h.backend.clone()).unwrap_or_else(|| "sim".into()),
+    };
+    if backend_name != "sim" {
+        if serving.is_some() {
+            bail!("run: --serving is simulation-only (hardware backends have no serving model)");
+        }
+        return cmd_run_hw(&args, &cfg, &backend_name, record);
+    }
 
     let freqs = cfg.freqs.clone().with_switch_cost(cfg.switch_cost);
     let mut table = session_table(serving.is_some());
@@ -381,6 +410,220 @@ fn record_session(
         .expect("B = 1 drive yields exactly one result");
     backend.finish()?;
     Ok(result)
+}
+
+/// Build the configured hardware driver (`--backend mock|nvml`). `app`
+/// and the session geometry calibrate the mock's virtual counters; the
+/// nvml driver enumerates the host instead and rejects mock-only knobs.
+fn build_hw_driver(
+    backend_name: &str,
+    app: &AppModel,
+    scfg: &SessionCfg,
+    hw: &crate::config::HwFileConfig,
+    devices_flag: Option<usize>,
+) -> Result<Box<dyn crate::hw::GpuDriver>> {
+    match backend_name {
+        "mock" => {
+            let devices = devices_flag.unwrap_or(hw.devices);
+            if devices == 0 {
+                bail!("--devices must be >= 1");
+            }
+            let faults = hw
+                .parsed_faults()
+                .map_err(|e| anyhow::anyhow!("hw.faults: {e}"))?;
+            Ok(Box::new(
+                crate::hw::MockDriver::calibrated(
+                    app,
+                    &scfg.domain(),
+                    devices,
+                    scfg.dt_s,
+                    scfg.seed,
+                )
+                .with_faults(faults),
+            ))
+        }
+        "nvml" => {
+            if devices_flag.is_some() {
+                bail!("--devices applies to the mock backend (nvml enumerates the host)");
+            }
+            if !hw.faults.is_empty() {
+                bail!("[hw] faults apply to the mock backend only");
+            }
+            crate::hw::nvml_driver()
+        }
+        other => bail!("unknown backend {other} (sim|mock|nvml)"),
+    }
+}
+
+/// `run --backend mock|nvml`: drive the controller against the
+/// live-hardware backend — one controller row per detected GPU — with
+/// the same report table and (optionally) the same [`Recording`] tee as
+/// the simulated path, so a hardware trace replays byte-for-byte through
+/// `replay` (one device) or `sweep --replay` (multi-device).
+fn cmd_run_hw(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    backend_name: &str,
+    record: bool,
+) -> Result<i32> {
+    if cfg.reps != 1 {
+        bail!("run: hardware backends drive one live session (use --reps 1)");
+    }
+    if cfg.apps.len() != 1 {
+        bail!("run: hardware backends run one app per invocation");
+    }
+    let name = &cfg.apps[0];
+    let app = calibration::app(name).with_context(|| format!("unknown app {name}"))?;
+    let freqs = cfg.freqs.clone().with_switch_cost(cfg.switch_cost);
+    if app.energy_kj.len() != freqs.k() {
+        bail!(
+            "run: [freq] domain has {} arms but app {name} is calibrated for {}",
+            freqs.k(),
+            app.energy_kj.len()
+        );
+    }
+    let hw = cfg.hw.clone().unwrap_or_default();
+    let tuning = crate::hw::HwTuning {
+        min_dwell_steps: hw.min_dwell_steps,
+        watchdog_errors: hw.watchdog_errors,
+    };
+    let scfg = SessionCfg {
+        seed: cfg.seed,
+        dt_s: cfg.dt_s,
+        reward_form: cfg.reward_form,
+        record_trace: args.flag("trace"),
+        freqs: cfg.freqs.clone(),
+        switch_cost: cfg.switch_cost,
+        ..SessionCfg::default()
+    };
+    let driver = build_hw_driver(backend_name, &app, &scfg, &hw, args.get_usize("devices")?)
+        .map_err(|e| e.context("run"))?;
+    eprintln!("run: {} driver, backend {backend_name}", driver.name());
+    let mut backend = crate::hw::HwBackend::new(driver, &scfg, tuning)?;
+    for w in backend.warnings() {
+        eprintln!("{w}");
+    }
+    let b = backend.b();
+    let record_path = record.then(|| match args.get("record-out") {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(&cfg.out_dir).join(format!("telemetry_{name}.jsonl")),
+    });
+    let make_sink = |path: &std::path::Path| -> Result<std::io::BufWriter<std::fs::File>> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating telemetry log {}", path.display()))?;
+        Ok(std::io::BufWriter::new(file))
+    };
+
+    let mut results = if b == 1 {
+        // Scalar tier: identical construction to the sim path (and to
+        // `replay`'s rebuild), so record→replay is byte-for-byte.
+        let mut policy: Box<dyn Policy> = cfg.build_policy(freqs.k(), cfg.seed);
+        policy.reset();
+        let controller = Controller::new(&app, policy.as_mut(), &scfg);
+        if let Some(path) = &record_path {
+            let header =
+                ReplayHeader::session(app.name.to_string(), Some(cfg.policy.clone()), scfg.clone());
+            let mut rec = Recording::new(backend, make_sink(path)?, &header)?;
+            let mut results = drive(controller, &mut rec)?;
+            rec.inner().export_telemetry(&mut results[0].telemetry);
+            rec.finish()?;
+            results
+        } else {
+            let mut results = drive(controller, &mut backend)?;
+            backend.export_telemetry(&mut results[0].telemetry);
+            results
+        }
+    } else {
+        // One controller row per GPU: the batch tier over B copies of the
+        // app's ground truth. Multi-device recordings use the fleet
+        // header grammar, which `sweep --replay` consumes — so the
+        // controller is built exactly the way sweep rebuilds it from the
+        // header (fleet_controller over FleetParams::from_apps), keeping
+        // live and swept reports byte-identical.
+        let refs: Vec<&AppModel> = vec![&app; b];
+        let params = FleetParams::from_apps(&refs, &scfg.domain(), scfg.dt_s);
+        let driver_policy = cfg.policy.build_batch(b, freqs.k(), cfg.seed);
+        let controller = fleet_controller(&params, driver_policy, scfg.max_steps);
+        if let Some(path) = &record_path {
+            let header = ReplayHeader::fleet(
+                vec![app.name.to_string(); b],
+                Some(cfg.policy.clone()),
+                scfg.clone(),
+                None,
+            );
+            let mut rec = Recording::new(backend, make_sink(path)?, &header)?;
+            let mut results = drive(controller, &mut rec)?;
+            for r in &mut results {
+                rec.inner().export_telemetry(&mut r.telemetry);
+            }
+            rec.finish()?;
+            results
+        } else {
+            let mut results = drive(controller, &mut backend)?;
+            for r in &mut results {
+                backend.export_telemetry(&mut r.telemetry);
+            }
+            results
+        }
+    };
+    if let Some(path) = &record_path {
+        eprintln!("recorded telemetry to {}", path.display());
+    }
+    let mut table = session_table(false);
+    for r in &results {
+        session_table_row(&mut table, &app, &freqs, &r.metrics.policy, &[r.metrics.clone()], false);
+    }
+    println!("{}", table.render());
+    if args.flag("trace") {
+        if let Some(tr) = results[0].trace.take() {
+            let path = PathBuf::from(&cfg.out_dir).join(format!("trace_{name}.csv"));
+            tr.write_csv(&path)?;
+            eprintln!("wrote {}", path.display());
+        }
+    }
+    Ok(0)
+}
+
+/// Enumerate the GPUs the active hardware driver sees
+/// (`energyucb devices [--backend mock|nvml]`): index, name, core-clock
+/// range, supported-step count, board power limit. Deterministic under
+/// the mock driver (pinned by CLI tests).
+fn cmd_devices(rest: &[String]) -> Result<i32> {
+    let args = Args::parse(rest, &[])?;
+    args.ensure_known(&["config", "backend", "devices"])?;
+    let cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            ExperimentConfig::from_toml(&text)?
+        }
+        None => ExperimentConfig::default(),
+    };
+    let hw = cfg.hw.clone().unwrap_or_default();
+    // `devices` is hardware-only, so default to the mock driver even
+    // when no [hw] table selected a backend.
+    let backend_name = args.get("backend").unwrap_or(&hw.backend);
+    if backend_name == "sim" {
+        bail!("devices: the sim backend has no enumerable devices (try --backend mock)");
+    }
+    let name = cfg.apps.first().context("devices: config lists no apps")?;
+    let app = calibration::app(name).with_context(|| format!("unknown app {name}"))?;
+    let scfg = SessionCfg {
+        seed: cfg.seed,
+        dt_s: cfg.dt_s,
+        freqs: cfg.freqs.clone(),
+        switch_cost: cfg.switch_cost,
+        ..SessionCfg::default()
+    };
+    let driver = build_hw_driver(backend_name, &app, &scfg, &hw, args.get_usize("devices")?)
+        .map_err(|e| e.context("devices"))?;
+    eprintln!("driver: {}", driver.name());
+    println!("{}", crate::hw::devices_table(driver.as_ref())?);
+    Ok(0)
 }
 
 /// Feed a recorded telemetry log back through the controller
@@ -1237,6 +1480,54 @@ mod tests {
         ])
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn devices_enumerates_the_mock_driver() {
+        assert_eq!(dispatch(&["devices"]).unwrap(), 0); // defaults to mock
+        assert_eq!(dispatch(&["devices", "--backend", "mock", "--devices", "2"]).unwrap(), 0);
+        assert!(dispatch(&["devices", "--backend", "sim"]).is_err());
+        assert!(dispatch(&["devices", "--backend", "warp"]).is_err());
+        assert!(dispatch(&["devices", "--devices", "0"]).is_err());
+    }
+
+    #[test]
+    fn hw_run_records_and_replays() {
+        let dir = std::env::temp_dir().join(format!("energyucb_cli_hw_{}", std::process::id()));
+        let log = dir.join("hw.jsonl");
+        let log_s = log.to_str().unwrap().to_string();
+        let code = dispatch(&[
+            "run", "--app", "tealeaf", "--policy", "static", "--backend", "mock", "--seed", "5",
+            "--record-telemetry", "--record-out", &log_s,
+        ])
+        .unwrap();
+        assert_eq!(code, 0);
+        // A mock-hardware trace is a standard telemetry recording: the
+        // session replays (and counterfactual-replays) unchanged.
+        assert_eq!(dispatch(&["replay", "--in", &log_s]).unwrap(), 0);
+        assert_eq!(dispatch(&["replay", "--in", &log_s, "--policy", "rrfreq"]).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hw_run_rejects_bad_invocations() {
+        assert!(
+            dispatch(&["run", "--app", "tealeaf", "--backend", "mock", "--reps", "2"]).is_err()
+        );
+        assert!(
+            dispatch(&["run", "--app", "tealeaf", "--backend", "mock", "--serving"]).is_err()
+        );
+        assert!(dispatch(&["run", "--app", "tealeaf", "--backend", "warp"]).is_err());
+        assert!(dispatch(&[
+            "run", "--app", "tealeaf", "--backend", "mock", "--devices", "0"
+        ])
+        .is_err());
+        // Without the nvml feature the backend fails fast with a rebuild
+        // hint; --devices is mock-only under any build.
+        assert!(dispatch(&[
+            "run", "--app", "tealeaf", "--backend", "nvml", "--devices", "2"
+        ])
+        .is_err());
     }
 
     #[test]

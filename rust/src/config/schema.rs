@@ -59,6 +59,11 @@ pub struct ExperimentConfig {
     /// policies as per-step context. `None` = the classic context-free
     /// session.
     pub serving: Option<crate::workload::serving::ServingCfg>,
+    /// Live-hardware backend selection (`[hw]` table): which driver
+    /// `energyucb run --backend` defaults to, mock device count,
+    /// safety-rail tuning, and scripted fault injection. `None` = the
+    /// simulated backend.
+    pub hw: Option<HwFileConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -75,6 +80,7 @@ impl Default for ExperimentConfig {
             freqs: FreqDomain::aurora(),
             switch_cost: SwitchCost::default(),
             serving: None,
+            hw: None,
         }
     }
 }
@@ -202,6 +208,12 @@ impl ExperimentConfig {
             }
             cfg.serving = Some(parse_serving(s)?);
         }
+        if let Some(h) = root.get("hw") {
+            if h.as_table().is_none() {
+                return invalid("[hw] must be a table");
+            }
+            cfg.hw = Some(parse_hw(h)?);
+        }
         if root.get_str("policy.name").is_some() {
             cfg.policy = PolicyConfig::from_value(root.get("policy").unwrap())?;
         }
@@ -280,6 +292,97 @@ fn parse_serving(
             return invalid("serving.seed must be >= 0");
         }
         c.seed = v as u64;
+    }
+    Ok(c)
+}
+
+/// `[hw]` table: live-hardware backend selection and safety-rail tuning
+/// for `energyucb run --backend` / `energyucb devices` (EXPERIMENTS.md
+/// §Live hardware).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HwFileConfig {
+    /// Backend the CLI defaults to: `"sim"`, `"mock"`, or `"nvml"`.
+    pub backend: String,
+    /// Mock device count (the nvml driver enumerates the host instead).
+    pub devices: usize,
+    /// Minimum decision intervals a device must dwell on a clock before
+    /// the backend forwards the next switch to the driver.
+    pub min_dwell_steps: u64,
+    /// Consecutive driver errors before a device degrades to its
+    /// frozen-arm fallback.
+    pub watchdog_errors: u32,
+    /// Scripted mock faults, `kind@call[/dev]` grammar
+    /// ([`crate::hw::parse_fault`]).
+    pub faults: Vec<String>,
+}
+
+impl Default for HwFileConfig {
+    fn default() -> Self {
+        HwFileConfig {
+            backend: "mock".into(),
+            devices: 1,
+            min_dwell_steps: 1,
+            watchdog_errors: 3,
+            faults: Vec::new(),
+        }
+    }
+}
+
+impl HwFileConfig {
+    /// The fault specs as hw-layer faults. Infallible after a successful
+    /// parse (`parse_hw` validated each spec), but re-validated here so
+    /// hand-built configs fail loudly too.
+    pub fn parsed_faults(&self) -> Result<Vec<crate::hw::Fault>, String> {
+        self.faults.iter().map(|s| crate::hw::parse_fault(s)).collect()
+    }
+}
+
+/// Parse and validate an `[hw]` table. Fault specs are parsed eagerly so
+/// a typo fails at config load, not mid-run.
+fn parse_hw(h: &Value) -> Result<HwFileConfig, ConfigError> {
+    let mut c = HwFileConfig::default();
+    if let Some(v) = h.get_str("backend") {
+        match v {
+            "sim" | "mock" | "nvml" => c.backend = v.to_string(),
+            other => {
+                return invalid(format!("hw.backend must be sim|mock|nvml, got {other}"))
+            }
+        }
+    }
+    if let Some(v) = h.get_int("devices") {
+        if v < 1 {
+            return invalid("hw.devices must be >= 1");
+        }
+        c.devices = v as usize;
+    }
+    if let Some(v) = h.get_int("min_dwell_steps") {
+        if v < 1 {
+            return invalid("hw.min_dwell_steps must be >= 1");
+        }
+        c.min_dwell_steps = v as u64;
+    }
+    if let Some(v) = h.get_int("watchdog_errors") {
+        if v < 1 {
+            return invalid("hw.watchdog_errors must be >= 1");
+        }
+        c.watchdog_errors = v as u32;
+    }
+    if let Some(arr) = h.get("faults") {
+        let arr = arr
+            .as_array()
+            .ok_or_else(|| ConfigError::Invalid("hw.faults must be an array".into()))?;
+        c.faults = arr
+            .iter()
+            .map(|v| v.as_str().map(str::to_string))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| ConfigError::Invalid("hw.faults must be strings".into()))?;
+        for f in &c.faults {
+            crate::hw::parse_fault(f)
+                .map_err(|e| ConfigError::Invalid(format!("hw.faults: {e}")))?;
+        }
+    }
+    if c.backend == "nvml" && !c.faults.is_empty() {
+        return invalid("hw.faults only applies to the mock backend");
     }
     Ok(c)
 }
@@ -1091,6 +1194,41 @@ shard_timeout_s = 2.5
         .is_err());
         // Staggered fractions out of range.
         assert!(ClusterFileConfig::from_toml("[cluster.arrivals]\nmin_frac = 1.5").is_err());
+    }
+
+    #[test]
+    fn hw_table_parses_validates_and_defaults() {
+        let text = r#"
+[hw]
+backend = "mock"
+devices = 2
+min_dwell_steps = 4
+watchdog_errors = 5
+faults = ["reject@3", "lost@10/1"]
+"#;
+        let c = ExperimentConfig::from_toml(text).unwrap();
+        let hw = c.hw.unwrap();
+        assert_eq!(hw.backend, "mock");
+        assert_eq!(hw.devices, 2);
+        assert_eq!(hw.min_dwell_steps, 4);
+        assert_eq!(hw.watchdog_errors, 5);
+        let faults = hw.parsed_faults().unwrap();
+        assert_eq!(faults.len(), 2);
+        assert_eq!(faults[1].device, 1);
+        // Absent table → None; empty table → defaults.
+        assert_eq!(ExperimentConfig::from_toml("").unwrap().hw, None);
+        let d = ExperimentConfig::from_toml("[hw]").unwrap().hw.unwrap();
+        assert_eq!(d, HwFileConfig::default());
+        // Bad values are config errors, not mid-run surprises.
+        assert!(ExperimentConfig::from_toml("[hw]\nbackend = \"fpga\"").is_err());
+        assert!(ExperimentConfig::from_toml("[hw]\ndevices = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[hw]\nmin_dwell_steps = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[hw]\nwatchdog_errors = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[hw]\nfaults = [\"typo@\"]").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[hw]\nbackend = \"nvml\"\nfaults = [\"reject@1\"]"
+        )
+        .is_err());
     }
 
     #[test]

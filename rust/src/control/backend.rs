@@ -19,9 +19,12 @@
 //! * [`Recording`] — a tee: wraps any backend and mirrors every sample
 //!   batch to a JSONL sink in the replay grammar
 //!   (EXPERIMENTS.md §Controller).
-//!
-//! A live NVML/GEOPM binding slots in as a fifth implementation without
-//! touching the controller.
+//! * [`HwBackend`][crate::hw::HwBackend] — the live-hardware tier: one
+//!   row per detected GPU behind the [`GpuDriver`][crate::hw::GpuDriver]
+//!   trait (deterministic fault-scriptable mock by default, dlopen'd
+//!   libnvidia-ml behind `--features nvml`), with safety rails the
+//!   controller never sees (reset-on-drop, dwell limiting, an error
+//!   watchdog that degrades rows instead of crashing).
 
 use std::io::Write;
 
@@ -206,6 +209,12 @@ impl<B: TelemetryBackend, W: Write> Recording<B, W> {
     /// marks the log truncated.
     pub fn finish(mut self) -> anyhow::Result<()> {
         self.write_end(false)
+    }
+
+    /// The wrapped backend, for post-drive inspection (e.g. the hw tier
+    /// exports its driver-health instruments before `finish`).
+    pub fn inner(&self) -> &B {
+        &self.inner
     }
 }
 

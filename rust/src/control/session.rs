@@ -83,7 +83,10 @@ pub struct RunResult {
     /// Operational telemetry: `controller.switch_rate` gauge,
     /// `controller.steps`/`controller.switches` counters (deterministic),
     /// and the driver's `controller.decide_latency_us` gauge (wall
-    /// clock, sampled every 64th decision).
+    /// clock, sampled every 64th decision). Hw-backend runs add the
+    /// `hw.apply_latency_us`/`hw.sample_latency_us` gauges and the
+    /// `hw.driver_errors`/`hw.dwell_deferred`/`hw.clamped`/
+    /// `hw.watchdog_trips` counters (see `hw::HwBackend::export_telemetry`).
     pub telemetry: Recorder,
 }
 

@@ -1,0 +1,644 @@
+//! [`HwBackend`]: the live-hardware [`TelemetryBackend`].
+//!
+//! Maps one controller row per detected GPU (B = device count, so a
+//! multi-device host is a single batched backend), converts the session
+//! [`FreqDomain`] arms to driver clocks (snapping to the device's
+//! supported steps — see [`HwBackend::new`]), and derives the paper's
+//! reward inputs (per-interval energy, core/uncore utilization) by
+//! differencing consecutive [`DeviceCounters`] snapshots.
+//!
+//! Live control gets three safety rails the simulator never needed:
+//!
+//! * **Reset on drop** — `Drop` best-effort releases the clock lock on
+//!   every device, including panic-unwind paths, so an aborted run never
+//!   leaves a GPU pinned at a frequency.
+//! * **Minimum dwell** — a per-device rate limiter on [`apply`]: a
+//!   switch request arriving sooner than `min_dwell_steps` intervals
+//!   after the last one is deferred (the previous clock is kept), which
+//!   bounds DVFS churn against a driver that is slower than `dt_s`.
+//! * **Watchdog** — after `watchdog_errors` *consecutive* driver errors
+//!   on one device (rejected requests, failed/stale/NaN counter reads,
+//!   device loss), that row degrades to a frozen arm and reports
+//!   inactive samples instead of crashing the controller; healthy
+//!   devices keep running.
+//!
+//! Degraded telemetry is absorbed, never invented: a failed or invalid
+//! counter read repeats the row's last good sample (with `switched =
+//! false`) so the policy keeps stepping, but [`totals`] only accumulate
+//! measured deltas.
+//!
+//! [`apply`]: TelemetryBackend::apply
+//! [`totals`]: TelemetryBackend::totals
+
+use std::time::Instant;
+
+use crate::control::{BackendTotals, SessionCfg, StepSample, TelemetryBackend};
+use crate::sim::freq::FreqDomain;
+use crate::telemetry::{Counter, Gauge, Recorder};
+
+use super::driver::{DeviceCounters, GpuDriver};
+
+/// Safety-rail tuning (the `[hw]` config table's knobs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HwTuning {
+    /// Minimum decision intervals between clock switches per device
+    /// (1 = switch every interval, the simulator's behavior).
+    pub min_dwell_steps: u64,
+    /// Consecutive driver errors before a device degrades to its frozen
+    /// arm.
+    pub watchdog_errors: u32,
+}
+
+impl Default for HwTuning {
+    fn default() -> Self {
+        HwTuning { min_dwell_steps: 1, watchdog_errors: 3 }
+    }
+}
+
+struct DevState {
+    /// Session arm index → driver clock (MHz), snapped to supported.
+    arm_mhz: Vec<u32>,
+    /// Clock currently applied on the device.
+    cur_mhz: u32,
+    /// Arm the device currently runs (nearest to `cur_mhz`).
+    cur_arm: usize,
+    /// A successful clock change happened since the last sample.
+    switched_pending: bool,
+    /// Intervals since the last clock change (dwell limiter input).
+    steps_since_switch: u64,
+    /// Last good counter snapshot (the differencing baseline).
+    base: DeviceCounters,
+    /// Last good sample, repeated verbatim when a read fails.
+    last_sample: StepSample,
+    consec_errors: u32,
+    degraded: bool,
+    totals: BackendTotals,
+}
+
+impl DevState {
+    fn finished(&self) -> bool {
+        self.base.progress >= 1.0
+    }
+
+    fn inactive_sample(&self) -> StepSample {
+        StepSample {
+            active: false,
+            remaining: (1.0 - self.base.progress).max(0.0),
+            ..StepSample::default()
+        }
+    }
+}
+
+fn nearest_arm(arm_mhz: &[u32], mhz: u32) -> usize {
+    let mut best = 0;
+    let mut best_d = u32::MAX;
+    for (i, &a) in arm_mhz.iter().enumerate() {
+        let d = a.abs_diff(mhz);
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// A valid snapshot is finite, strictly advances the driver clock (a
+/// repeated timestamp is a stale read), and keeps the energy counter
+/// monotone.
+fn counters_ok(c: &DeviceCounters, base: &DeviceCounters) -> bool {
+    let finite = c.timestamp_s.is_finite()
+        && c.energy_j.is_finite()
+        && c.power_w.is_finite()
+        && c.core_util.is_finite()
+        && c.uncore_util.is_finite()
+        && c.progress.is_finite();
+    finite && c.timestamp_s > base.timestamp_s && c.energy_j >= base.energy_j - 1e-9
+}
+
+fn note_driver_error(
+    d: &mut DevState,
+    driver_errors: &mut Counter,
+    watchdog_trips: &mut Counter,
+    watchdog_errors: u32,
+) {
+    driver_errors.inc();
+    d.consec_errors += 1;
+    if !d.degraded && d.consec_errors >= watchdog_errors {
+        d.degraded = true;
+        watchdog_trips.inc();
+    }
+}
+
+/// The live-hardware telemetry backend (see module docs).
+pub struct HwBackend {
+    driver: Box<dyn GpuDriver>,
+    freqs: FreqDomain,
+    dt_s: f64,
+    tuning: HwTuning,
+    devs: Vec<DevState>,
+    warnings: Vec<String>,
+    apply_latency_us: Gauge,
+    sample_latency_us: Gauge,
+    driver_errors: Counter,
+    dwell_deferred: Counter,
+    clamped: Counter,
+    watchdog_trips: Counter,
+}
+
+impl HwBackend {
+    /// Enumerate the driver's devices and validate the session
+    /// [`FreqDomain`] against each device's supported core clocks: every
+    /// arm snaps to the nearest supported step (with a warning when the
+    /// snap moved it), and two arms collapsing onto the same step is a
+    /// hard error — the policy would have two indistinguishable arms.
+    /// Reads one baseline counter snapshot per device.
+    pub fn new(
+        driver: Box<dyn GpuDriver>,
+        cfg: &SessionCfg,
+        tuning: HwTuning,
+    ) -> anyhow::Result<HwBackend> {
+        anyhow::ensure!(tuning.min_dwell_steps >= 1, "hw: min_dwell_steps must be >= 1");
+        anyhow::ensure!(tuning.watchdog_errors >= 1, "hw: watchdog_errors must be >= 1");
+        let mut driver = driver;
+        let freqs = cfg.domain();
+        let n = driver.device_count()?;
+        anyhow::ensure!(n >= 1, "hw: driver {} reports no GPUs", driver.name());
+        let mut warnings = Vec::new();
+        let mut devs = Vec::with_capacity(n);
+        for e in 0..n {
+            let mut supported = driver.supported_core_clocks_mhz(e)?;
+            anyhow::ensure!(
+                !supported.is_empty(),
+                "hw: device {e} reports no supported core clocks"
+            );
+            supported.sort_unstable();
+            supported.dedup();
+            let mut arm_mhz: Vec<u32> = Vec::with_capacity(freqs.k());
+            for i in 0..freqs.k() {
+                let target = freqs.ghz(i) * 1000.0;
+                let snapped = *supported
+                    .iter()
+                    .min_by(|a, b| {
+                        let da = (**a as f64 - target).abs();
+                        let db = (**b as f64 - target).abs();
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                if (snapped as f64 - target).abs() > 0.5 {
+                    warnings.push(format!(
+                        "hw: device {e}: arm {i} ({:.3} GHz) snapped to supported {snapped} MHz",
+                        freqs.ghz(i)
+                    ));
+                }
+                if let Some(&prev) = arm_mhz.last() {
+                    anyhow::ensure!(
+                        snapped > prev,
+                        "hw: device {e}: arms {} and {i} both snap to {snapped} MHz — \
+                         thin the [freq] domain to the device's supported clocks",
+                        i - 1
+                    );
+                }
+                arm_mhz.push(snapped);
+            }
+            let base = driver.read_counters(e)?;
+            let cur_arm = nearest_arm(&arm_mhz, base.sm_mhz);
+            devs.push(DevState {
+                cur_mhz: base.sm_mhz,
+                cur_arm,
+                arm_mhz,
+                switched_pending: false,
+                // MAX: the first switch is never dwell-deferred.
+                steps_since_switch: u64::MAX,
+                base,
+                last_sample: StepSample::default(),
+                consec_errors: 0,
+                degraded: false,
+                totals: BackendTotals::default(),
+            });
+        }
+        Ok(HwBackend {
+            driver,
+            freqs,
+            dt_s: cfg.dt_s,
+            tuning,
+            devs,
+            warnings,
+            apply_latency_us: Gauge::default(),
+            sample_latency_us: Gauge::default(),
+            driver_errors: Counter::default(),
+            dwell_deferred: Counter::default(),
+            clamped: Counter::default(),
+            watchdog_trips: Counter::default(),
+        })
+    }
+
+    /// Human-readable construction warnings (arm snapping).
+    pub fn warnings(&self) -> &[String] {
+        &self.warnings
+    }
+
+    /// Whether device `e`'s watchdog has tripped (row frozen/inactive).
+    pub fn degraded(&self, e: usize) -> bool {
+        self.devs[e].degraded
+    }
+
+    /// Total driver errors absorbed so far (all devices).
+    pub fn driver_errors(&self) -> u64 {
+        self.driver_errors.get()
+    }
+
+    /// Switch requests deferred by the minimum-dwell limiter.
+    pub fn dwell_deferred(&self) -> u64 {
+        self.dwell_deferred.get()
+    }
+
+    /// Applies where the driver clamped the requested clock.
+    pub fn clamped(&self) -> u64 {
+        self.clamped.get()
+    }
+
+    /// Devices degraded by the watchdog.
+    pub fn watchdog_trips(&self) -> u64 {
+        self.watchdog_trips.get()
+    }
+
+    /// The underlying driver (diagnostics).
+    pub fn driver(&self) -> &dyn GpuDriver {
+        self.driver.as_ref()
+    }
+
+    /// Merge the hw-path instruments into a run's [`Recorder`] —
+    /// `hw.apply_latency_us` / `hw.sample_latency_us` gauges plus the
+    /// `hw.driver_errors` / `hw.dwell_deferred` / `hw.clamped` /
+    /// `hw.watchdog_trips` counters — surfacing them through
+    /// `RunResult::telemetry` next to `controller.decide_latency_us`.
+    pub fn export_telemetry(&self, rec: &mut Recorder) {
+        rec.insert_gauge("hw.apply_latency_us", self.apply_latency_us.clone());
+        rec.insert_gauge("hw.sample_latency_us", self.sample_latency_us.clone());
+        rec.insert_counter("hw.driver_errors", self.driver_errors.clone());
+        rec.insert_counter("hw.dwell_deferred", self.dwell_deferred.clone());
+        rec.insert_counter("hw.clamped", self.clamped.clone());
+        rec.insert_counter("hw.watchdog_trips", self.watchdog_trips.clone());
+    }
+}
+
+impl TelemetryBackend for HwBackend {
+    fn b(&self) -> usize {
+        self.devs.len()
+    }
+
+    fn k(&self) -> usize {
+        self.freqs.k()
+    }
+
+    fn apply(&mut self, sel: &[i32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            sel.len() == self.devs.len(),
+            "hw: {} selections for B = {}",
+            sel.len(),
+            self.devs.len()
+        );
+        let t0 = Instant::now();
+        let k = self.freqs.k();
+        let sc = self.freqs.switch_cost();
+        let Self {
+            driver,
+            devs,
+            tuning,
+            driver_errors,
+            watchdog_trips,
+            dwell_deferred,
+            clamped,
+            ..
+        } = self;
+        for (e, (&a, d)) in sel.iter().zip(devs.iter_mut()).enumerate() {
+            if d.degraded || d.finished() {
+                continue;
+            }
+            anyhow::ensure!(a >= 0 && (a as usize) < k, "hw: arm {a} out of range (K = {k})");
+            let arm = a as usize;
+            if arm == d.cur_arm {
+                continue;
+            }
+            if d.steps_since_switch < tuning.min_dwell_steps {
+                dwell_deferred.inc();
+                continue;
+            }
+            let want = d.arm_mhz[arm];
+            match driver.set_locked_clocks(e, want) {
+                Ok(applied) => {
+                    d.consec_errors = 0;
+                    if applied != want {
+                        clamped.inc();
+                    }
+                    if applied != d.cur_mhz {
+                        d.switched_pending = true;
+                        d.steps_since_switch = 0;
+                        d.totals.switches += 1;
+                        d.totals.switch_energy_j += sc.energy_j;
+                        d.totals.switch_time_s += sc.latency_s;
+                    }
+                    d.cur_mhz = applied;
+                    d.cur_arm = nearest_arm(&d.arm_mhz, applied);
+                }
+                Err(_) => {
+                    // Request refused: keep the previous clock and count
+                    // toward the watchdog.
+                    note_driver_error(d, driver_errors, watchdog_trips, tuning.watchdog_errors);
+                }
+            }
+        }
+        self.apply_latency_us.record(t0.elapsed().as_secs_f64() * 1e6);
+        Ok(())
+    }
+
+    fn sample_into(&mut self, out: &mut [StepSample]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            out.len() == self.devs.len(),
+            "hw: {} sample slots for B = {}",
+            out.len(),
+            self.devs.len()
+        );
+        if self.driver.wall_pacing() {
+            // Live counters integrate wall time; let one decision
+            // interval elapse. (Coarse pacing: the interval is dt_s plus
+            // driver-call latency, which the latency gauges quantify.)
+            std::thread::sleep(std::time::Duration::from_secs_f64(self.dt_s));
+        }
+        let t0 = Instant::now();
+        let Self { driver, devs, tuning, driver_errors, watchdog_trips, .. } = self;
+        for (e, (d, slot)) in devs.iter_mut().zip(out.iter_mut()).enumerate() {
+            if d.degraded || d.finished() {
+                *slot = d.inactive_sample();
+                continue;
+            }
+            let read = driver.read_counters(e);
+            match read {
+                Ok(c) if counters_ok(&c, &d.base) => {
+                    d.consec_errors = 0;
+                    let de = (c.energy_j - d.base.energy_j).max(0.0);
+                    let dt = c.timestamp_s - d.base.timestamp_s;
+                    let s = StepSample {
+                        gpu_energy_j: de,
+                        core_util: c.core_util,
+                        uncore_util: c.uncore_util,
+                        progress: (c.progress - d.base.progress).max(0.0),
+                        remaining: (1.0 - c.progress).max(0.0),
+                        true_gpu_energy_j: de,
+                        switched: d.switched_pending,
+                        reward: None,
+                        active: true,
+                        context: None,
+                    };
+                    d.totals.gpu_energy_kj += de / 1000.0;
+                    d.totals.exec_time_s += dt;
+                    d.base = c;
+                    d.last_sample = s;
+                    *slot = s;
+                }
+                _ => {
+                    // Failed, stale, or non-finite read: repeat the last
+                    // good sample so the policy keeps stepping (totals
+                    // untouched — only measured deltas accumulate), and
+                    // count toward the watchdog.
+                    note_driver_error(d, driver_errors, watchdog_trips, tuning.watchdog_errors);
+                    *slot = if d.degraded {
+                        d.inactive_sample()
+                    } else {
+                        StepSample { switched: false, ..d.last_sample }
+                    };
+                }
+            }
+            d.switched_pending = false;
+            d.steps_since_switch = d.steps_since_switch.saturating_add(1);
+        }
+        self.sample_latency_us.record(t0.elapsed().as_secs_f64() * 1e6);
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        self.devs.iter().all(|d| d.degraded || d.finished())
+    }
+
+    fn totals(&self) -> Vec<BackendTotals> {
+        self.devs.iter().map(|d| d.totals).collect()
+    }
+}
+
+impl Drop for HwBackend {
+    fn drop(&mut self) {
+        // The reset-on-drop rail: best-effort clock release on every
+        // device — including panic unwinds and degraded/lost devices
+        // (a device that comes back should not come back locked).
+        for e in 0..self.devs.len() {
+            let _ = self.driver.reset_locked_clocks(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::mock::{parse_fault, MockDriver};
+    use crate::workload::calibration;
+
+    fn scfg() -> SessionCfg {
+        SessionCfg { seed: 7, ..SessionCfg::default() }
+    }
+
+    fn mock(devices: usize) -> MockDriver {
+        let app = calibration::app("tealeaf").unwrap();
+        let cfg = scfg();
+        MockDriver::calibrated(&app, &cfg.domain(), devices, cfg.dt_s, cfg.seed)
+    }
+
+    #[test]
+    fn maps_one_row_per_device() {
+        let b = HwBackend::new(Box::new(mock(3)), &scfg(), HwTuning::default()).unwrap();
+        assert_eq!(b.b(), 3);
+        assert_eq!(b.k(), 9);
+        assert!(b.warnings().is_empty(), "exact-match clocks must not warn");
+        assert!(!b.done());
+    }
+
+    #[test]
+    fn arms_snap_to_supported_clocks_with_warnings() {
+        // Device steps offset 7 MHz from the session arms: every arm
+        // snaps, none collapse.
+        let clocks: Vec<u32> = (0..9).map(|i| 807 + 100 * i).collect();
+        let m = mock(1).with_supported_clocks(0, clocks);
+        let b = HwBackend::new(Box::new(m), &scfg(), HwTuning::default()).unwrap();
+        assert_eq!(b.warnings().len(), 9);
+        assert!(b.warnings()[0].contains("snapped"), "{}", b.warnings()[0]);
+    }
+
+    #[test]
+    fn collapsing_arms_is_a_construction_error() {
+        // Two supported steps for nine arms: neighbors must collide.
+        let m = mock(1).with_supported_clocks(0, vec![800, 1600]);
+        let err = HwBackend::new(Box::new(m), &scfg(), HwTuning::default())
+            .err()
+            .expect("collapsed arms must fail")
+            .to_string();
+        assert!(err.contains("snap to"), "{err}");
+    }
+
+    #[test]
+    fn bad_tuning_is_rejected() {
+        let t = HwTuning { min_dwell_steps: 0, ..HwTuning::default() };
+        assert!(HwBackend::new(Box::new(mock(1)), &scfg(), t).is_err());
+        let t = HwTuning { watchdog_errors: 0, ..HwTuning::default() };
+        assert!(HwBackend::new(Box::new(mock(1)), &scfg(), t).is_err());
+    }
+
+    #[test]
+    fn apply_validates_arity_and_range() {
+        let mut b = HwBackend::new(Box::new(mock(1)), &scfg(), HwTuning::default()).unwrap();
+        assert!(b.apply(&[0, 1]).is_err());
+        assert!(b.apply(&[99]).is_err());
+        assert!(b.apply(&[-1]).is_err());
+        b.apply(&[2]).unwrap();
+        let mut out = [StepSample::default()];
+        b.sample_into(&mut out).unwrap();
+        assert!(out[0].switched);
+        assert!(out[0].active);
+        assert!(out[0].gpu_energy_j > 0.0);
+        assert_eq!(b.totals()[0].switches, 1);
+    }
+
+    #[test]
+    fn dwell_limiter_defers_rapid_switches() {
+        let t = HwTuning { min_dwell_steps: 4, ..HwTuning::default() };
+        let mut b = HwBackend::new(Box::new(mock(1)), &scfg(), t).unwrap();
+        let mut out = [StepSample::default()];
+        // Alternate arms every interval; only every 4th change can land.
+        for step in 0..16i32 {
+            b.apply(&[step % 2]).unwrap();
+            b.sample_into(&mut out).unwrap();
+        }
+        assert!(b.dwell_deferred() > 0, "limiter never engaged");
+        // First switch plus at most one per 4 intervals.
+        assert!(b.totals()[0].switches <= 1 + 16 / 4, "{}", b.totals()[0].switches);
+    }
+
+    #[test]
+    fn stale_and_nan_reads_repeat_last_good_sample() {
+        let app = calibration::app("tealeaf").unwrap();
+        let cfg = scfg();
+        // Construction does read 1; session reads start at 2.
+        let m = MockDriver::calibrated(&app, &cfg.domain(), 1, cfg.dt_s, cfg.seed)
+            .with_faults(vec![parse_fault("stale@3").unwrap(), parse_fault("nan@5").unwrap()]);
+        let mut b = HwBackend::new(Box::new(m), &cfg, HwTuning::default()).unwrap();
+        let mut out = [StepSample::default()];
+        b.apply(&[4]).unwrap();
+        b.sample_into(&mut out).unwrap(); // read 2: good
+        let good = out[0];
+        b.apply(&[4]).unwrap();
+        b.sample_into(&mut out).unwrap(); // read 3: stale
+        assert_eq!(out[0].gpu_energy_j, good.gpu_energy_j, "stale read must repeat");
+        assert!(!out[0].switched);
+        assert_eq!(b.driver_errors(), 1);
+        b.apply(&[4]).unwrap();
+        b.sample_into(&mut out).unwrap(); // read 4: good again
+        assert_eq!(b.driver_errors(), 1, "clean read resets nothing extra");
+        let before = out[0];
+        b.apply(&[4]).unwrap();
+        b.sample_into(&mut out).unwrap(); // read 5: NaN energy
+        assert_eq!(out[0].gpu_energy_j, before.gpu_energy_j);
+        assert!(out[0].gpu_energy_j.is_finite(), "NaN must never reach the policy");
+        assert_eq!(b.driver_errors(), 2);
+        assert!(!b.degraded(0), "isolated glitches must not trip the watchdog");
+    }
+
+    #[test]
+    fn totals_skip_unmeasured_intervals() {
+        let app = calibration::app("tealeaf").unwrap();
+        let cfg = scfg();
+        let m = MockDriver::calibrated(&app, &cfg.domain(), 1, cfg.dt_s, cfg.seed)
+            .with_faults(vec![parse_fault("stale@3").unwrap()]);
+        let mut b = HwBackend::new(Box::new(m), &cfg, HwTuning::default()).unwrap();
+        let mut out = [StepSample::default()];
+        for _ in 0..3 {
+            b.apply(&[8]).unwrap();
+            b.sample_into(&mut out).unwrap();
+        }
+        // 3 intervals sampled, 1 stale: totals integrate 2 measured dts.
+        let t = b.totals()[0];
+        assert!((t.exec_time_s - 2.0 * cfg.dt_s).abs() < 1e-12, "{}", t.exec_time_s);
+    }
+
+    #[test]
+    fn watchdog_degrades_after_consecutive_errors() {
+        let app = calibration::app("tealeaf").unwrap();
+        let cfg = scfg();
+        let m = MockDriver::calibrated(&app, &cfg.domain(), 1, cfg.dt_s, cfg.seed)
+            .with_faults(vec![parse_fault("lost@4").unwrap()]);
+        let t = HwTuning { watchdog_errors: 3, ..HwTuning::default() };
+        let mut b = HwBackend::new(Box::new(m), &cfg, t).unwrap();
+        let mut out = [StepSample::default()];
+        let mut steps = 0;
+        while !b.done() && steps < 100 {
+            b.apply(&[8]).unwrap();
+            b.sample_into(&mut out).unwrap();
+            steps += 1;
+        }
+        assert!(b.degraded(0), "watchdog never tripped");
+        assert_eq!(b.watchdog_trips(), 1);
+        assert!(b.driver_errors() >= 3);
+        assert!(b.done(), "a fully degraded backend is done");
+        assert!(!out[0].active, "degraded rows report inactive samples");
+        // Further drive calls are absorbed without touching the driver.
+        b.apply(&[0]).unwrap();
+        b.sample_into(&mut out).unwrap();
+        assert!(!out[0].active);
+    }
+
+    #[test]
+    fn clocks_reset_on_drop() {
+        let m = mock(1);
+        let h = m.handle();
+        {
+            let mut b = HwBackend::new(Box::new(m), &scfg(), HwTuning::default()).unwrap();
+            b.apply(&[1]).unwrap();
+            assert_eq!(h.locked_mhz(0), Some(900));
+        }
+        assert_eq!(h.locked_mhz(0), None, "drop must release the clock lock");
+        assert_eq!(h.resets(0), 1);
+    }
+
+    #[test]
+    fn clocks_reset_on_panic_unwind() {
+        let m = mock(1);
+        let h = m.handle();
+        let cfg = scfg();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut b = HwBackend::new(Box::new(m), &cfg, HwTuning::default()).unwrap();
+            b.apply(&[2]).unwrap();
+            assert_eq!(h.locked_mhz(0), Some(1000));
+            panic!("scripted mid-run panic");
+        }));
+        assert!(result.is_err());
+        assert_eq!(h.locked_mhz(0), None, "unwind must release the clock lock");
+        assert!(h.resets(0) >= 1);
+    }
+
+    #[test]
+    fn telemetry_export_carries_the_hw_instruments() {
+        let app = calibration::app("tealeaf").unwrap();
+        let cfg = scfg();
+        let m = MockDriver::calibrated(&app, &cfg.domain(), 1, cfg.dt_s, cfg.seed)
+            .with_faults(vec![parse_fault("reject@1").unwrap()]);
+        let mut b = HwBackend::new(Box::new(m), &cfg, HwTuning::default()).unwrap();
+        let mut out = [StepSample::default()];
+        for step in 0..4i32 {
+            b.apply(&[step % 2]).unwrap();
+            b.sample_into(&mut out).unwrap();
+        }
+        let mut rec = Recorder::default();
+        b.export_telemetry(&mut rec);
+        assert_eq!(rec.counter_value("hw.driver_errors"), Some(1));
+        assert!(rec.gauge_get("hw.apply_latency_us").is_some());
+        assert!(rec.gauge_get("hw.sample_latency_us").is_some());
+        assert_eq!(rec.counter_value("hw.watchdog_trips"), Some(0));
+    }
+}

@@ -1,0 +1,176 @@
+//! The device boundary of the live-hardware subsystem: [`GpuDriver`].
+//!
+//! Everything above this trait — [`HwBackend`][super::HwBackend], the
+//! CLI, record→replay — is driver-agnostic. Two implementations ship:
+//! the deterministic, fault-scriptable [`MockDriver`][super::MockDriver]
+//! (default features; what CI drives), and the dlopen'd libnvidia-ml
+//! binding [`NvmlDriver`][super::nvml::NvmlDriver] behind `--features
+//! nvml` (no link-time dependency, so a GPU-less build stays green).
+//!
+//! Counter snapshots use the GEOPM signal vocabulary from
+//! [`geopm::signals`][crate::geopm::signals]: each [`DeviceCounters`]
+//! field maps to exactly one [`Signal`][crate::geopm::Signal] via
+//! [`signal_value`][super::signal_value], so the simulated and live
+//! worlds report the same names.
+
+use std::fmt;
+
+/// Errors a device driver can surface. Every variant is survivable at
+/// the backend layer: [`HwBackend`][super::HwBackend] counts them toward
+/// the per-device watchdog instead of failing the controller.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DriverError {
+    /// The driver library could not be loaded/initialized (or a symbol
+    /// is missing). Construction-time only.
+    NotLoaded(String),
+    /// The device does not support the requested operation.
+    NotSupported(String),
+    /// The calling process lacks the capability (e.g. clock locking
+    /// needs the `nvidia-smi -lgc` privilege).
+    NoPermission(String),
+    /// Malformed request (device index out of range, bad clock).
+    InvalidArgument(String),
+    /// The device fell off the bus / stopped responding.
+    DeviceLost { device: usize },
+    /// The driver refused a control request (policy, thermal, ...).
+    Rejected { device: usize, reason: String },
+    /// A counter read failed.
+    Counter { device: usize, reason: String },
+    /// Unmapped driver API status code.
+    Api { call: &'static str, code: i32 },
+}
+
+impl fmt::Display for DriverError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DriverError::NotLoaded(m) => write!(f, "driver not loaded: {m}"),
+            DriverError::NotSupported(m) => write!(f, "not supported: {m}"),
+            DriverError::NoPermission(m) => write!(f, "no permission: {m}"),
+            DriverError::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            DriverError::DeviceLost { device } => write!(f, "device {device} lost"),
+            DriverError::Rejected { device, reason } => {
+                write!(f, "device {device} rejected request: {reason}")
+            }
+            DriverError::Counter { device, reason } => {
+                write!(f, "device {device} counter read failed: {reason}")
+            }
+            DriverError::Api { call, code } => write!(f, "{call} returned status {code}"),
+        }
+    }
+}
+
+impl std::error::Error for DriverError {}
+
+/// Static device identity, reported by `energyucb devices`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceInfo {
+    pub index: usize,
+    pub name: String,
+    /// Lowest supported core (graphics) clock, MHz.
+    pub min_core_mhz: u32,
+    /// Highest supported core clock, MHz.
+    pub max_core_mhz: u32,
+    /// Board power limit, Watts.
+    pub power_limit_w: f64,
+}
+
+/// One counter snapshot for one device. Cumulative fields are monotone
+/// from an arbitrary per-driver epoch; the backend differences
+/// consecutive snapshots, so only deltas matter.
+///
+/// Field ↔ signal mapping (see [`signal_value`][super::signal_value]):
+/// `energy_j` = `GPU::ENERGY`, `core_active_s` = `GPU::CORE_ACTIVE_TIME`,
+/// `uncore_active_s` = `GPU::UNCORE_ACTIVE_TIME`, `timestamp_s` = `TIME`,
+/// `progress` = `EPOCH::PROGRESS`, `cpu_energy_j` = `CPU::ENERGY`.
+/// Drivers without an application progress or CPU energy source report
+/// 0.0 there (NVML does); the mock fills every field.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceCounters {
+    /// Monotone driver timestamp, seconds ("TIME"). Must strictly
+    /// advance between reads — a repeated timestamp is how the backend
+    /// detects a stale snapshot.
+    pub timestamp_s: f64,
+    /// Cumulative GPU energy, Joules ("GPU::ENERGY").
+    pub energy_j: f64,
+    /// Instantaneous board power, Watts.
+    pub power_w: f64,
+    /// Current core (SM) clock, MHz.
+    pub sm_mhz: u32,
+    /// Instantaneous compute-engine utilization in [0, 1].
+    pub core_util: f64,
+    /// Instantaneous copy-engine utilization in [0, 1].
+    pub uncore_util: f64,
+    /// Cumulative compute-engine active time, s ("GPU::CORE_ACTIVE_TIME").
+    pub core_active_s: f64,
+    /// Cumulative copy-engine active time, s ("GPU::UNCORE_ACTIVE_TIME").
+    pub uncore_active_s: f64,
+    /// Cumulative application progress in [0, 1] ("EPOCH::PROGRESS");
+    /// 0.0 where no progress source exists.
+    pub progress: f64,
+    /// Cumulative CPU package energy, Joules ("CPU::ENERGY"); 0.0 where
+    /// unmeasured.
+    pub cpu_energy_j: f64,
+}
+
+impl Default for DeviceCounters {
+    fn default() -> Self {
+        DeviceCounters {
+            timestamp_s: 0.0,
+            energy_j: 0.0,
+            power_w: 0.0,
+            sm_mhz: 0,
+            core_util: 0.0,
+            uncore_util: 0.0,
+            core_active_s: 0.0,
+            uncore_active_s: 0.0,
+            progress: 0.0,
+            cpu_energy_j: 0.0,
+        }
+    }
+}
+
+/// The abstract GPU device surface: enumerate devices, query supported
+/// core clocks, lock/reset clocks, read counters.
+///
+/// Mirrors the slice of NVML the paper's control loop needs (AGFT's
+/// nvidia-smi/pynvml loop): `nvmlDeviceGetSupportedGraphicsClocks`,
+/// `nvmlDeviceSetGpuLockedClocks`, `nvmlDeviceResetGpuLockedClocks`,
+/// and the energy/power/utilization/clock counter reads.
+///
+/// Any call may fail; callers must treat errors as per-device, transient
+/// events (the backend's watchdog decides when a device is gone for
+/// good). Implementations are NOT required to be deterministic — only
+/// [`MockDriver`][super::MockDriver] is, which is what makes the CI
+/// record→replay contract testable without hardware.
+pub trait GpuDriver {
+    /// Short driver identity ("mock", "nvml").
+    fn name(&self) -> &'static str;
+
+    /// Number of GPUs on the host.
+    fn device_count(&self) -> Result<usize, DriverError>;
+
+    /// Static identity of device `dev`.
+    fn device_info(&self, dev: usize) -> Result<DeviceInfo, DriverError>;
+
+    /// Supported core-clock steps for device `dev`, MHz, ascending.
+    fn supported_core_clocks_mhz(&self, dev: usize) -> Result<Vec<u32>, DriverError>;
+
+    /// Lock device `dev`'s core clock to `mhz`. Returns the clock the
+    /// driver actually applied — drivers may clamp a request to the
+    /// nearest supported step, and callers must observe that.
+    fn set_locked_clocks(&mut self, dev: usize, mhz: u32) -> Result<u32, DriverError>;
+
+    /// Release the clock lock on device `dev` (back to driver default).
+    fn reset_locked_clocks(&mut self, dev: usize) -> Result<(), DriverError>;
+
+    /// Read one counter snapshot from device `dev`.
+    fn read_counters(&mut self, dev: usize) -> Result<DeviceCounters, DriverError>;
+
+    /// Whether counters track wall-clock time (live hardware), in which
+    /// case the backend must let one decision interval of real time pass
+    /// between reads. The mock advances its own virtual clock per read
+    /// and keeps the default `false`, so tests and CI never sleep.
+    fn wall_pacing(&self) -> bool {
+        false
+    }
+}

@@ -1,0 +1,521 @@
+//! Deterministic mock GPU driver with scripted fault injection.
+//!
+//! [`MockDriver`] implements [`GpuDriver`] over the same calibrated
+//! [`AppModel`] curves the simulator uses: each device advances its own
+//! virtual clock by one decision interval per counter read, synthesizing
+//! power/utilization/progress from the app's per-arm calibration (plus
+//! the app's deterministic noise model). A fixed `(app, freqs, devices,
+//! dt, seed)` construction therefore yields a bit-reproducible counter
+//! stream — the property that lets CI prove the live-hardware stack's
+//! record→replay contract without a GPU.
+//!
+//! Faults are scripted as [`Fault`] entries (`kind@call[/dev]`, see
+//! [`parse_fault`]) and fire on exact driver-call indices:
+//!
+//! | kind     | fires on                  | effect                                   |
+//! |----------|---------------------------|------------------------------------------|
+//! | `reject` | Nth `set_locked_clocks`   | request refused ([`DriverError::Rejected`]) |
+//! | `clamp`  | Nth `set_locked_clocks`   | locks the lowest supported clock instead |
+//! | `stale`  | Nth `read_counters`       | returns the previous snapshot unchanged  |
+//! | `nan`    | Nth `read_counters`       | energy counter reads NaN                 |
+//! | `lost`   | Nth `read_counters` onward| device vanishes: every later call errors |
+//!
+//! Call indices are 1-based and count every call on that device —
+//! including the baseline `read_counters` that
+//! [`HwBackend::new`][super::HwBackend] performs per device.
+//!
+//! A [`MockHandle`] (cloned `Arc` over the shared state) lets tests
+//! observe the device after the driver was moved into a backend — the
+//! reset-on-drop rail is asserted exactly this way.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::sim::freq::FreqDomain;
+use crate::util::Rng;
+use crate::workload::model::AppModel;
+
+use super::driver::{DeviceCounters, DeviceInfo, DriverError, GpuDriver};
+
+/// Scripted fault classes (see module docs for the matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Reject,
+    Clamp,
+    Stale,
+    Nan,
+    DeviceLost,
+}
+
+/// One scripted fault: `kind` fires at driver-call index `at` (1-based)
+/// on device `device`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub at: u64,
+    pub device: usize,
+}
+
+/// Parse a fault spec, grammar `kind@call[/dev]` with kind one of
+/// `reject | clamp | stale | nan | lost` (device defaults to 0):
+/// `"reject@5"`, `"lost@30/1"`.
+pub fn parse_fault(spec: &str) -> Result<Fault, String> {
+    let Some((kind_s, rest)) = spec.split_once('@') else {
+        return Err(format!("fault {spec:?}: expected kind@call[/dev]"));
+    };
+    let kind = match kind_s {
+        "reject" => FaultKind::Reject,
+        "clamp" => FaultKind::Clamp,
+        "stale" => FaultKind::Stale,
+        "nan" => FaultKind::Nan,
+        "lost" => FaultKind::DeviceLost,
+        other => {
+            return Err(format!(
+                "fault {spec:?}: unknown kind {other:?} (reject|clamp|stale|nan|lost)"
+            ))
+        }
+    };
+    let (at_s, dev_s) = match rest.split_once('/') {
+        Some((a, d)) => (a, Some(d)),
+        None => (rest, None),
+    };
+    let at: u64 = at_s
+        .parse()
+        .map_err(|_| format!("fault {spec:?}: bad call index {at_s:?}"))?;
+    if at == 0 {
+        return Err(format!("fault {spec:?}: call indices are 1-based"));
+    }
+    let device: usize = match dev_s {
+        Some(d) => d.parse().map_err(|_| format!("fault {spec:?}: bad device {d:?}"))?,
+        None => 0,
+    };
+    Ok(Fault { kind, at, device })
+}
+
+struct MockDev {
+    name: String,
+    supported_mhz: Vec<u32>,
+    power_limit_w: f64,
+    locked_mhz: Option<u32>,
+    cur_mhz: u32,
+    applies: u64,
+    reads: u64,
+    resets: u64,
+    lost: bool,
+    // Virtual device state, advanced one dt per counter read.
+    now_s: f64,
+    energy_j: f64,
+    core_active_s: f64,
+    uncore_active_s: f64,
+    cpu_energy_j: f64,
+    progress: f64,
+    last: DeviceCounters,
+    rng: Rng,
+}
+
+struct MockState {
+    app: AppModel,
+    freqs: FreqDomain,
+    dt_s: f64,
+    faults: Vec<Fault>,
+    devs: Vec<MockDev>,
+}
+
+/// The deterministic, fault-scriptable in-process GPU driver.
+pub struct MockDriver {
+    state: Arc<Mutex<MockState>>,
+}
+
+/// Test probe into a [`MockDriver`]'s shared state — stays valid after
+/// the driver is moved into a backend (and after that backend drops).
+#[derive(Clone)]
+pub struct MockHandle {
+    state: Arc<Mutex<MockState>>,
+}
+
+fn lock(state: &Arc<Mutex<MockState>>) -> MutexGuard<'_, MockState> {
+    // A panicking policy must not wedge the Drop-path clock reset, so a
+    // poisoned lock is recovered rather than propagated.
+    state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn fault_at(faults: &[Fault], kind: FaultKind, dev: usize, call: u64) -> bool {
+    faults.iter().any(|f| f.kind == kind && f.device == dev && f.at == call)
+}
+
+fn lost_by(faults: &[Fault], dev: usize, read: u64) -> bool {
+    faults.iter().any(|f| f.kind == FaultKind::DeviceLost && f.device == dev && f.at <= read)
+}
+
+fn nearest_index(ghz_of: &FreqDomain, mhz: u32) -> usize {
+    let ghz = mhz as f64 / 1000.0;
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for i in 0..ghz_of.k() {
+        let d = (ghz_of.ghz(i) - ghz).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+impl MockDriver {
+    /// A `devices`-GPU host calibrated to `app` under `freqs`: supported
+    /// core clocks are exactly the domain's arms (in MHz), and each read
+    /// advances that device by `dt_s` of virtual time at its current
+    /// clock. Per-device RNGs are forked from `seed`, so devices are
+    /// decorrelated but the whole host is reproducible.
+    pub fn calibrated(
+        app: &AppModel,
+        freqs: &FreqDomain,
+        devices: usize,
+        dt_s: f64,
+        seed: u64,
+    ) -> MockDriver {
+        assert!(devices >= 1, "mock host needs at least one device");
+        assert_eq!(
+            app.energy_kj.len(),
+            freqs.k(),
+            "app calibration table must match frequency domain"
+        );
+        let supported: Vec<u32> =
+            (0..freqs.k()).map(|i| (freqs.ghz(i) * 1000.0).round() as u32).collect();
+        let mut root = Rng::new(seed ^ 0x6877_6d6f_636b); // "hwmock"
+        let devs = (0..devices)
+            .map(|d| MockDev {
+                name: format!("Mock PVC GPU {d}"),
+                supported_mhz: supported.clone(),
+                power_limit_w: 600.0,
+                locked_mhz: None,
+                cur_mhz: *supported.last().unwrap(),
+                applies: 0,
+                reads: 0,
+                resets: 0,
+                lost: false,
+                now_s: 0.0,
+                energy_j: 0.0,
+                core_active_s: 0.0,
+                uncore_active_s: 0.0,
+                cpu_energy_j: 0.0,
+                progress: 0.0,
+                last: DeviceCounters::default(),
+                rng: root.fork(d as u64),
+            })
+            .collect();
+        MockDriver {
+            state: Arc::new(Mutex::new(MockState {
+                app: app.clone(),
+                freqs: freqs.clone(),
+                dt_s,
+                faults: Vec::new(),
+                devs,
+            })),
+        }
+    }
+
+    /// Replace device `dev`'s supported clock list (ascending MHz) —
+    /// the snap/collapse validation tests drive mismatched domains
+    /// through this.
+    pub fn with_supported_clocks(self, dev: usize, mut mhz: Vec<u32>) -> MockDriver {
+        assert!(!mhz.is_empty(), "supported clock list cannot be empty");
+        mhz.sort_unstable();
+        mhz.dedup();
+        {
+            let mut st = lock(&self.state);
+            let d = &mut st.devs[dev];
+            d.cur_mhz = *mhz.last().unwrap();
+            d.supported_mhz = mhz;
+        }
+        self
+    }
+
+    /// Install the fault script.
+    pub fn with_faults(self, faults: Vec<Fault>) -> MockDriver {
+        lock(&self.state).faults = faults;
+        self
+    }
+
+    /// A probe into this driver's shared state.
+    pub fn handle(&self) -> MockHandle {
+        MockHandle { state: Arc::clone(&self.state) }
+    }
+}
+
+impl MockHandle {
+    /// Currently locked clock of device `dev` (`None` after a reset).
+    pub fn locked_mhz(&self, dev: usize) -> Option<u32> {
+        lock(&self.state).devs[dev].locked_mhz
+    }
+
+    /// `reset_locked_clocks` attempts on device `dev` (counted even if
+    /// the device was lost and the call errored).
+    pub fn resets(&self, dev: usize) -> u64 {
+        lock(&self.state).devs[dev].resets
+    }
+
+    /// `set_locked_clocks` calls on device `dev`.
+    pub fn applies(&self, dev: usize) -> u64 {
+        lock(&self.state).devs[dev].applies
+    }
+
+    /// `read_counters` calls on device `dev`.
+    pub fn reads(&self, dev: usize) -> u64 {
+        lock(&self.state).devs[dev].reads
+    }
+}
+
+impl MockState {
+    fn dev(&mut self, dev: usize) -> Result<&mut MockDev, DriverError> {
+        let n = self.devs.len();
+        self.devs
+            .get_mut(dev)
+            .ok_or_else(|| DriverError::InvalidArgument(format!("device {dev} of {n}")))
+    }
+}
+
+impl GpuDriver for MockDriver {
+    fn name(&self) -> &'static str {
+        "mock"
+    }
+
+    fn device_count(&self) -> Result<usize, DriverError> {
+        Ok(lock(&self.state).devs.len())
+    }
+
+    fn device_info(&self, dev: usize) -> Result<DeviceInfo, DriverError> {
+        let mut st = lock(&self.state);
+        let d = st.dev(dev)?;
+        if d.lost {
+            return Err(DriverError::DeviceLost { device: dev });
+        }
+        Ok(DeviceInfo {
+            index: dev,
+            name: d.name.clone(),
+            min_core_mhz: *d.supported_mhz.first().unwrap(),
+            max_core_mhz: *d.supported_mhz.last().unwrap(),
+            power_limit_w: d.power_limit_w,
+        })
+    }
+
+    fn supported_core_clocks_mhz(&self, dev: usize) -> Result<Vec<u32>, DriverError> {
+        let mut st = lock(&self.state);
+        let d = st.dev(dev)?;
+        if d.lost {
+            return Err(DriverError::DeviceLost { device: dev });
+        }
+        Ok(d.supported_mhz.clone())
+    }
+
+    fn set_locked_clocks(&mut self, dev: usize, mhz: u32) -> Result<u32, DriverError> {
+        let mut st = lock(&self.state);
+        let MockState { faults, devs, .. } = &mut *st;
+        let n = devs.len();
+        let d = devs
+            .get_mut(dev)
+            .ok_or_else(|| DriverError::InvalidArgument(format!("device {dev} of {n}")))?;
+        d.applies += 1;
+        if d.lost {
+            return Err(DriverError::DeviceLost { device: dev });
+        }
+        if fault_at(faults, FaultKind::Reject, dev, d.applies) {
+            return Err(DriverError::Rejected {
+                device: dev,
+                reason: "scripted rejection".into(),
+            });
+        }
+        let applied = if fault_at(faults, FaultKind::Clamp, dev, d.applies) {
+            // The driver refused the requested ceiling and pinned the
+            // floor instead — visibly different from what was asked.
+            *d.supported_mhz.first().unwrap()
+        } else {
+            // Real drivers accept any value and snap to a supported
+            // step; mirror that so off-grid requests are observable.
+            *d.supported_mhz
+                .iter()
+                .min_by_key(|s| s.abs_diff(mhz))
+                .unwrap()
+        };
+        d.locked_mhz = Some(applied);
+        d.cur_mhz = applied;
+        Ok(applied)
+    }
+
+    fn reset_locked_clocks(&mut self, dev: usize) -> Result<(), DriverError> {
+        let mut st = lock(&self.state);
+        let d = st.dev(dev)?;
+        d.resets += 1;
+        if d.lost {
+            return Err(DriverError::DeviceLost { device: dev });
+        }
+        d.locked_mhz = None;
+        d.cur_mhz = *d.supported_mhz.last().unwrap();
+        Ok(())
+    }
+
+    fn read_counters(&mut self, dev: usize) -> Result<DeviceCounters, DriverError> {
+        let mut st = lock(&self.state);
+        let MockState { app, freqs, dt_s, faults, devs } = &mut *st;
+        let n = devs.len();
+        let d = devs
+            .get_mut(dev)
+            .ok_or_else(|| DriverError::InvalidArgument(format!("device {dev} of {n}")))?;
+        d.reads += 1;
+        if d.lost || lost_by(faults, dev, d.reads) {
+            d.lost = true;
+            return Err(DriverError::DeviceLost { device: dev });
+        }
+        if fault_at(faults, FaultKind::Stale, dev, d.reads) {
+            // Frozen snapshot: identical timestamp, no state advance.
+            return Ok(d.last);
+        }
+        // Advance one interval of virtual time at the current clock.
+        let arm = nearest_index(freqs, d.cur_mhz);
+        let dt = *dt_s;
+        let power_w = app.power_kw(freqs, arm) * 1000.0;
+        let e_j = (power_w * dt * (1.0 + app.noise.energy_frac * d.rng.gaussian())).max(0.0);
+        let core = (app.uc(freqs, arm) + app.noise.util_std * d.rng.gaussian()).clamp(0.0, 1.0);
+        let uncore = (app.uu(freqs, arm) + app.noise.util_std * d.rng.gaussian()).clamp(0.0, 1.0);
+        d.now_s += dt;
+        d.energy_j += e_j;
+        d.core_active_s += core * dt;
+        d.uncore_active_s += uncore * dt;
+        d.cpu_energy_j += app.cpu_kw * 1000.0 * dt;
+        d.progress = (d.progress + app.progress_per_step(freqs, arm, dt)).min(1.0);
+        let mut c = DeviceCounters {
+            timestamp_s: d.now_s,
+            energy_j: d.energy_j,
+            power_w,
+            sm_mhz: d.cur_mhz,
+            core_util: core,
+            uncore_util: uncore,
+            core_active_s: d.core_active_s,
+            uncore_active_s: d.uncore_active_s,
+            progress: d.progress,
+            cpu_energy_j: d.cpu_energy_j,
+        };
+        if fault_at(faults, FaultKind::Nan, dev, d.reads) {
+            // Corrupt the snapshot without corrupting the device state:
+            // the next read is clean again.
+            c.energy_j = f64::NAN;
+        } else {
+            d.last = c;
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::calibration;
+
+    fn mock(devices: usize) -> MockDriver {
+        let app = calibration::app("tealeaf").unwrap();
+        MockDriver::calibrated(&app, &FreqDomain::aurora(), devices, 0.01, 7)
+    }
+
+    #[test]
+    fn fault_grammar_parses_and_rejects() {
+        assert_eq!(
+            parse_fault("reject@5").unwrap(),
+            Fault { kind: FaultKind::Reject, at: 5, device: 0 }
+        );
+        assert_eq!(
+            parse_fault("lost@30/1").unwrap(),
+            Fault { kind: FaultKind::DeviceLost, at: 30, device: 1 }
+        );
+        assert_eq!(parse_fault("clamp@1").unwrap().kind, FaultKind::Clamp);
+        assert_eq!(parse_fault("stale@2").unwrap().kind, FaultKind::Stale);
+        assert_eq!(parse_fault("nan@3").unwrap().kind, FaultKind::Nan);
+        for bad in ["reject", "explode@1", "reject@0", "reject@x", "reject@1/x"] {
+            assert!(parse_fault(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn calibrated_counter_stream_is_deterministic() {
+        let mut a = mock(2);
+        let mut b = mock(2);
+        for _ in 0..50 {
+            for dev in 0..2 {
+                assert_eq!(a.read_counters(dev).unwrap(), b.read_counters(dev).unwrap());
+            }
+        }
+        // Monotone cumulative counters, plausible magnitudes.
+        let c = a.read_counters(0).unwrap();
+        assert!(c.energy_j > 0.0 && c.timestamp_s > 0.0);
+        assert!(c.progress > 0.0 && c.progress < 1.0);
+        assert!((0.0..=1.0).contains(&c.core_util));
+    }
+
+    #[test]
+    fn devices_are_decorrelated_but_reproducible() {
+        let mut a = mock(2);
+        let c0 = a.read_counters(0).unwrap();
+        let c1 = a.read_counters(1).unwrap();
+        // Same calibration, different noise draws.
+        assert_ne!(c0.energy_j, c1.energy_j);
+    }
+
+    #[test]
+    fn lock_snap_and_reset() {
+        let mut m = mock(1);
+        let h = m.handle();
+        assert_eq!(m.set_locked_clocks(0, 1200).unwrap(), 1200);
+        assert_eq!(h.locked_mhz(0), Some(1200));
+        // Off-grid request snaps to the nearest supported step.
+        assert_eq!(m.set_locked_clocks(0, 1190).unwrap(), 1200);
+        m.reset_locked_clocks(0).unwrap();
+        assert_eq!(h.locked_mhz(0), None);
+        assert_eq!(h.resets(0), 1);
+        // Back at the default (max) clock.
+        assert_eq!(m.read_counters(0).unwrap().sm_mhz, 1600);
+    }
+
+    #[test]
+    fn scripted_faults_fire_on_exact_calls() {
+        let app = calibration::app("tealeaf").unwrap();
+        let mut m = MockDriver::calibrated(&app, &FreqDomain::aurora(), 1, 0.01, 7).with_faults(
+            vec![
+                parse_fault("reject@2").unwrap(),
+                parse_fault("clamp@3").unwrap(),
+                parse_fault("stale@2").unwrap(),
+                parse_fault("nan@3").unwrap(),
+                parse_fault("lost@5").unwrap(),
+            ],
+        );
+        // Applies: 1 ok, 2 rejected, 3 clamped to the floor.
+        assert_eq!(m.set_locked_clocks(0, 1400).unwrap(), 1400);
+        assert!(matches!(
+            m.set_locked_clocks(0, 1400),
+            Err(DriverError::Rejected { device: 0, .. })
+        ));
+        assert_eq!(m.set_locked_clocks(0, 1400).unwrap(), 800);
+        // Reads: 1 ok, 2 stale (same timestamp), 3 NaN energy, 4 clean,
+        // 5+ lost.
+        let c1 = m.read_counters(0).unwrap();
+        let c2 = m.read_counters(0).unwrap();
+        assert_eq!(c1.timestamp_s, c2.timestamp_s, "stale read must not advance");
+        let c3 = m.read_counters(0).unwrap();
+        assert!(c3.energy_j.is_nan());
+        let c4 = m.read_counters(0).unwrap();
+        assert!(c4.energy_j.is_finite() && c4.timestamp_s > c1.timestamp_s);
+        assert!(matches!(m.read_counters(0), Err(DriverError::DeviceLost { device: 0 })));
+        // Lost is sticky, and control calls fail too.
+        assert!(m.read_counters(0).is_err());
+        assert!(m.set_locked_clocks(0, 800).is_err());
+        assert!(m.reset_locked_clocks(0).is_err());
+        assert!(m.device_info(0).is_err());
+    }
+
+    #[test]
+    fn faults_are_per_device() {
+        let app = calibration::app("tealeaf").unwrap();
+        let mut m = MockDriver::calibrated(&app, &FreqDomain::aurora(), 2, 0.01, 7)
+            .with_faults(vec![parse_fault("lost@1/1").unwrap()]);
+        assert!(m.read_counters(0).is_ok());
+        assert!(m.read_counters(1).is_err());
+        assert!(m.read_counters(0).is_ok(), "device 0 unaffected by device 1's loss");
+    }
+}

@@ -1,0 +1,174 @@
+//! Live-hardware telemetry subsystem (EXPERIMENTS.md §Live hardware).
+//!
+//! The layer cake, bottom-up:
+//!
+//! * [`GpuDriver`] — the abstract device surface (enumerate, supported
+//!   clocks, lock/reset clocks, read counters).
+//! * [`MockDriver`] — a deterministic, app-calibrated driver with
+//!   scripted fault injection (reject / clamp / stale / NaN / device
+//!   loss); what CI and the default test suite drive.
+//! * `nvml` (feature `nvml`) — a dlopen'd libnvidia-ml binding with no
+//!   link-time dependency: the feature builds and unit-tests green on a
+//!   GPU-less host, and only [`nvml_driver`] at runtime reports whether
+//!   the library is actually present.
+//! * [`HwBackend`] — the [`TelemetryBackend`][crate::control::TelemetryBackend]
+//!   over any driver: one controller row per GPU, arm→clock conversion
+//!   with snap validation, and the live-control safety rails
+//!   (reset-on-drop, minimum dwell, error watchdog).
+//!
+//! The hw layer is also where the GEOPM signal vocabulary from
+//! [`geopm::signals`][crate::geopm::signals] becomes canonical for
+//! counters: [`signal_value`] maps every [`Signal`] onto a
+//! [`DeviceCounters`] field (a total mapping, test-asserted), so the
+//! simulated service and the live driver report the same names.
+//!
+//! Wired through `energyucb run --backend sim|mock|nvml` (plus the
+//! `[hw]` config table) and `energyucb devices`; a mock or live session
+//! records through the standard [`Recording`][crate::control::Recording]
+//! tee, and `replay` / `sweep --replay` consume the trace unchanged.
+
+pub mod backend;
+pub mod driver;
+pub mod mock;
+#[cfg(feature = "nvml")]
+pub mod nvml;
+
+pub use backend::{HwBackend, HwTuning};
+pub use driver::{DeviceCounters, DeviceInfo, DriverError, GpuDriver};
+pub use mock::{parse_fault, Fault, FaultKind, MockDriver, MockHandle};
+
+// The canonical counter-name vocabulary, shared verbatim with the
+// simulated GEOPM service: one source of names for both worlds.
+pub use crate::geopm::signals::{Control, Signal};
+
+use crate::util::table::{fnum, Table};
+
+/// Value of GEOPM signal `s` in a driver counter snapshot. The match is
+/// total over [`Signal::ALL`] by construction (no wildcard arm), so the
+/// hw layer can never silently drop a signal the sim service exposes —
+/// asserted by `signal_vocabulary_is_total`.
+pub fn signal_value(c: &DeviceCounters, s: Signal) -> f64 {
+    match s {
+        Signal::GpuEnergy => c.energy_j,
+        Signal::GpuCoreActiveTime => c.core_active_s,
+        Signal::GpuUncoreActiveTime => c.uncore_active_s,
+        Signal::Time => c.timestamp_s,
+        Signal::AppProgress => c.progress,
+        Signal::CpuEnergy => c.cpu_energy_j,
+    }
+}
+
+/// Open the dlopen'd libnvidia-ml driver. Without `--features nvml`
+/// this fails fast with a rebuild hint (the binding is compiled out);
+/// with the feature it fails at runtime only if the library or a GPU is
+/// actually missing.
+pub fn nvml_driver() -> anyhow::Result<Box<dyn GpuDriver>> {
+    #[cfg(feature = "nvml")]
+    {
+        Ok(Box::new(nvml::NvmlDriver::open()?))
+    }
+    #[cfg(not(feature = "nvml"))]
+    {
+        anyhow::bail!(
+            "nvml backend requires building with `--features nvml` \
+             (libnvidia-ml is dlopen'd at runtime; no GPU needed to build)"
+        )
+    }
+}
+
+/// Render the `energyucb devices` enumeration table for any driver:
+/// index, name, core-clock range, supported-step count, power limit.
+/// Deterministic under [`MockDriver`] (pinned by CLI tests).
+pub fn devices_table(driver: &dyn GpuDriver) -> anyhow::Result<String> {
+    let n = driver.device_count()?;
+    let mut t = Table::new(vec!["gpu", "name", "core clocks (MHz)", "steps", "power limit (W)"]);
+    for i in 0..n {
+        let info = driver.device_info(i)?;
+        let clocks = driver.supported_core_clocks_mhz(i)?;
+        t.row(vec![
+            i.to_string(),
+            info.name.clone(),
+            format!("{}-{}", info.min_core_mhz, info.max_core_mhz),
+            clocks.len().to_string(),
+            fnum(info.power_limit_w, 0),
+        ]);
+    }
+    Ok(t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geopm::Service;
+    use crate::sim::freq::FreqDomain;
+    use crate::sim::node::Node;
+    use crate::workload::calibration;
+
+    #[test]
+    fn signal_vocabulary_is_total() {
+        // Distinct sentinels per field prove each signal maps to its own
+        // counter (a collapsed mapping would alias two sentinels).
+        let c = DeviceCounters {
+            timestamp_s: 1.0,
+            energy_j: 2.0,
+            power_w: 3.0,
+            sm_mhz: 4,
+            core_util: 5.0,
+            uncore_util: 6.0,
+            core_active_s: 7.0,
+            uncore_active_s: 8.0,
+            progress: 9.0,
+            cpu_energy_j: 10.0,
+        };
+        let mut seen = Vec::new();
+        for s in Signal::ALL {
+            let v = signal_value(&c, s);
+            assert!(v.is_finite(), "{s} unmapped");
+            assert!(!seen.contains(&v.to_bits()), "{s} aliases another signal");
+            seen.push(v.to_bits());
+        }
+        assert_eq!(seen.len(), Signal::ALL.len());
+        assert_eq!(signal_value(&c, Signal::GpuEnergy), 2.0);
+        assert_eq!(signal_value(&c, Signal::Time), 1.0);
+        assert_eq!(signal_value(&c, Signal::AppProgress), 9.0);
+    }
+
+    #[test]
+    fn sim_service_and_hw_share_the_signal_vocabulary() {
+        // Every name the hw layer maps must be readable from the
+        // simulated service too — same vocabulary, two worlds.
+        let app = calibration::app("tealeaf").unwrap();
+        let node = Node::new(app, FreqDomain::aurora(), 0.01, 1);
+        let service = Service::new(node);
+        for s in Signal::ALL {
+            assert!(Signal::from_name(s.name()).is_some());
+            let v = service.read(s);
+            assert!(v.is_finite(), "sim service cannot read {s}");
+        }
+        // And the control name both sides write under.
+        assert_eq!(Control::GpuFrequency(0).name(), "GPU::FREQUENCY_CONTROL");
+    }
+
+    #[test]
+    fn devices_table_is_pinned_and_deterministic() {
+        let app = calibration::app("tealeaf").unwrap();
+        let freqs = FreqDomain::aurora();
+        let make = || MockDriver::calibrated(&app, &freqs, 2, 0.01, 0);
+        let a = devices_table(&make()).unwrap();
+        let b = devices_table(&make()).unwrap();
+        assert_eq!(a, b, "enumeration must be deterministic");
+        assert!(a.contains("Mock PVC GPU 0"), "{a}");
+        assert!(a.contains("Mock PVC GPU 1"), "{a}");
+        assert!(a.contains("800-1600"), "{a}");
+        assert!(a.contains("600"), "{a}");
+        // Header + rule + one row per device.
+        assert!(a.lines().count() >= 4, "{a}");
+    }
+
+    #[cfg(not(feature = "nvml"))]
+    #[test]
+    fn nvml_driver_requires_the_feature() {
+        let err = nvml_driver().err().expect("gated out by default").to_string();
+        assert!(err.contains("--features nvml"), "{err}");
+    }
+}

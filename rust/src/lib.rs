@@ -40,6 +40,7 @@ pub mod exec;
 pub mod experiments;
 pub mod geopm;
 pub mod fleet;
+pub mod hw;
 pub mod rl;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,242 @@
+//! End-to-end tests of the live-hardware subsystem: the real controller
+//! driving [`HwBackend`] over the fault-scripted [`MockDriver`], and the
+//! record→replay / sweep contract on hardware telemetry traces.
+//!
+//! Every fault class from the mock's matrix (reject, clamp, stale
+//! counter, NaN counter, device loss) is driven through `drive` here —
+//! the controller must survive all of them, the watchdog must degrade a
+//! dead device instead of crashing the run, and clocks must be released
+//! on every exit path including panic unwinds.
+
+use std::sync::{Arc, Mutex};
+
+use energyucb::bandit::EnergyUcbConfig;
+use energyucb::config::PolicyConfig;
+use energyucb::control::{
+    drive, sweep_replay, Controller, Recording, ReplayBackend, ReplayHeader, RunMetrics,
+    SessionCfg, SweepCandidate, TelemetryBackend,
+};
+use energyucb::fleet::{fleet_controller, FleetParams};
+use energyucb::hw::{parse_fault, HwBackend, HwTuning, MockDriver, MockHandle};
+use energyucb::workload::calibration;
+use energyucb::workload::model::AppModel;
+
+/// A clonable in-memory JSONL sink, so record→replay needs no disk.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn text(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl std::io::Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn scfg(max_steps: u64) -> SessionCfg {
+    SessionCfg { seed: 7, max_steps, ..SessionCfg::default() }
+}
+
+fn app() -> AppModel {
+    calibration::app("tealeaf").unwrap()
+}
+
+/// Calibrated mock + backend, returning a handle into the driver state.
+fn mock_backend(
+    faults: &[&str],
+    devices: usize,
+    cfg: &SessionCfg,
+    tuning: HwTuning,
+) -> (HwBackend, MockHandle) {
+    let parsed = faults.iter().map(|s| parse_fault(s).unwrap()).collect();
+    let driver = MockDriver::calibrated(&app(), &cfg.domain(), devices, cfg.dt_s, cfg.seed)
+        .with_faults(parsed);
+    let handle = driver.handle();
+    let backend = HwBackend::new(Box::new(driver), cfg, tuning).unwrap();
+    (backend, handle)
+}
+
+fn policy_cfg() -> PolicyConfig {
+    PolicyConfig::EnergyUcb(EnergyUcbConfig::default())
+}
+
+#[test]
+fn controller_survives_the_full_fault_matrix() {
+    // Reject on an early clock request, clamp on the next, then a stale
+    // and a NaN counter read: the drive loop must run to its step budget
+    // with the rails absorbing every fault.
+    let cfg = scfg(120);
+    let (mut backend, _h) = mock_backend(
+        &["reject@1", "clamp@2", "stale@4", "nan@6"],
+        1,
+        &cfg,
+        HwTuning::default(),
+    );
+    let mut policy = policy_cfg().build(9, cfg.seed);
+    policy.reset();
+    let a = app();
+    let controller = Controller::new(&a, policy.as_mut(), &cfg);
+    let results = drive(controller, &mut backend).unwrap();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].metrics.steps, 120);
+    assert!(results[0].metrics.gpu_energy_kj > 0.0);
+    // Optimistic-init UCB revisits arms throughout warmup, so the
+    // scripted apply faults (calls 1 and 2) both fired.
+    assert!(backend.driver_errors() >= 3, "reject + stale + nan not all observed");
+    assert!(backend.clamped() >= 1, "clamp not observed");
+    // Isolated faults interleaved with good calls never reach the
+    // watchdog's consecutive-error threshold.
+    assert!(!backend.degraded(0));
+    assert_eq!(backend.watchdog_trips(), 0);
+}
+
+#[test]
+fn device_loss_degrades_one_row_and_the_run_survives() {
+    // Device 1 falls off the bus at its 5th read and stays gone; device 0
+    // is healthy. The watchdog must freeze row 1 only, and the batch run
+    // must still produce a result for every row.
+    let cfg = scfg(40);
+    let tuning = HwTuning { min_dwell_steps: 1, watchdog_errors: 2 };
+    let (mut backend, _h) = mock_backend(&["lost@5/1"], 2, &cfg, tuning);
+    let freqs = cfg.domain();
+    let apps = [app(), app()];
+    let refs: Vec<&AppModel> = apps.iter().collect();
+    let params = FleetParams::from_apps(&refs, &freqs, cfg.dt_s);
+    let driver = policy_cfg().build_batch(2, 9, cfg.seed);
+    let controller = fleet_controller(&params, driver, cfg.max_steps);
+    let results = drive(controller, &mut backend).unwrap();
+    assert_eq!(results.len(), 2);
+    assert!(!backend.degraded(0), "healthy device must stay live");
+    assert!(backend.degraded(1), "lost device must degrade");
+    assert_eq!(backend.watchdog_trips(), 1);
+    // Two consecutive read errors tripped it; after that the row is
+    // frozen and the driver is never polled for it again.
+    assert_eq!(backend.driver_errors(), 2);
+    // The healthy row kept measuring; the dead row's totals froze at the
+    // last good read.
+    let totals = backend.totals();
+    assert!(totals[0].exec_time_s > totals[1].exec_time_s);
+}
+
+#[test]
+fn clocks_unlock_on_drop_after_a_drive() {
+    let cfg = scfg(5);
+    let (mut backend, h) = mock_backend(&[], 1, &cfg, HwTuning::default());
+    let mut policy = PolicyConfig::Static { arm: 0 }.build(9, cfg.seed);
+    policy.reset();
+    let a = app();
+    let controller = Controller::new(&a, policy.as_mut(), &cfg);
+    drive(controller, &mut backend).unwrap();
+    // The static policy locked the lowest arm on its first decision.
+    assert_eq!(h.locked_mhz(0), Some(800));
+    drop(backend);
+    assert_eq!(h.locked_mhz(0), None, "drop must release the clock lock");
+    assert_eq!(h.resets(0), 1);
+}
+
+#[test]
+fn clocks_unlock_when_the_policy_panics_mid_drive() {
+    // PanicAfter is the config-buildable chaos policy: it decides
+    // normally for `after` steps, then panics inside the drive loop. The
+    // unwind must still release the device clocks via HwBackend's Drop.
+    let cfg = scfg(100);
+    let (mut backend, h) = mock_backend(&[], 1, &cfg, HwTuning::default());
+    backend.apply(&[0]).unwrap(); // hold a lock before the crash
+    assert_eq!(h.locked_mhz(0), Some(800));
+    let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        let mut policy = PolicyConfig::PanicAfter { after: 10 }.build(9, cfg.seed);
+        policy.reset();
+        let a = app();
+        let controller = Controller::new(&a, policy.as_mut(), &cfg);
+        let _ = drive(controller, &mut backend);
+    }));
+    assert!(unwound.is_err(), "the chaos policy must have panicked");
+    assert_eq!(h.locked_mhz(0), None, "unwind must release the clock lock");
+    assert!(h.resets(0) >= 1);
+}
+
+/// Record a B = 1 mock-hardware session (with mid-run faults) through
+/// the standard Recording tee; returns (trace text, live metrics).
+fn record_session_trace(cfg: &SessionCfg) -> (String, RunMetrics) {
+    let (backend, _h) = mock_backend(&["stale@3", "nan@5"], 1, cfg, HwTuning::default());
+    let buf = SharedBuf::default();
+    let header = ReplayHeader::session("tealeaf".into(), Some(policy_cfg()), cfg.clone());
+    let mut rec = Recording::new(backend, buf.clone(), &header).unwrap();
+    let mut policy = policy_cfg().build(9, cfg.seed);
+    policy.reset();
+    let a = app();
+    let controller = Controller::new(&a, policy.as_mut(), cfg);
+    let mut results = drive(controller, &mut rec).unwrap();
+    rec.finish().unwrap();
+    (buf.text(), results.pop().unwrap().metrics)
+}
+
+#[test]
+fn recorded_mock_session_replays_with_identical_metrics() {
+    let cfg = scfg(300);
+    let (text, live) = record_session_trace(&cfg);
+    assert!(text.contains("\"step\""), "trace must use the standard grammar:\n{text}");
+    let mut backend = ReplayBackend::from_text(&text).unwrap();
+    let header = backend.header().clone();
+    assert_eq!(header.app, "tealeaf");
+    let mut policy =
+        header.policy.clone().unwrap().build(header.session.freqs.k(), header.session.seed);
+    policy.reset();
+    let a = app();
+    let controller = Controller::new(&a, policy.as_mut(), &header.session);
+    let replayed = drive(controller, &mut backend).unwrap().pop().unwrap().metrics;
+    assert_eq!(live, replayed, "replay must reproduce the hardware run exactly");
+}
+
+#[test]
+fn sweep_over_a_mock_recording_matches_direct_replay() {
+    let cfg = scfg(300);
+    let (text, live) = record_session_trace(&cfg);
+    let trace = ReplayBackend::from_text(&text).unwrap();
+    let outcomes = sweep_replay(&trace, &[SweepCandidate::new(policy_cfg())], 1).unwrap();
+    assert_eq!(outcomes.len(), 1);
+    assert_eq!(outcomes[0].results.len(), 1);
+    assert_eq!(outcomes[0].results[0].metrics, live);
+}
+
+#[test]
+fn multi_device_recording_sweeps_byte_identically() {
+    // Three mock GPUs, one of which dies mid-run: the recorded fleet-
+    // grammar trace must drive `sweep --replay` to the exact metrics the
+    // live run produced, per device.
+    let cfg = scfg(60);
+    let b = 3;
+    let (backend, _h) =
+        mock_backend(&["lost@30/2"], b, &cfg, HwTuning { min_dwell_steps: 2, watchdog_errors: 2 });
+    let freqs = cfg.domain();
+    let apps = [app(), app(), app()];
+    let refs: Vec<&AppModel> = apps.iter().collect();
+    let params = FleetParams::from_apps(&refs, &freqs, cfg.dt_s);
+    let driver = policy_cfg().build_batch(b, 9, cfg.seed);
+    let controller = fleet_controller(&params, driver, cfg.max_steps);
+    let buf = SharedBuf::default();
+    let header = ReplayHeader::fleet(
+        vec!["tealeaf".into(); b],
+        Some(policy_cfg()),
+        cfg.clone(),
+        None,
+    );
+    let mut rec = Recording::new(backend, buf.clone(), &header).unwrap();
+    let live: Vec<RunMetrics> =
+        drive(controller, &mut rec).unwrap().into_iter().map(|r| r.metrics).collect();
+    rec.finish().unwrap();
+    assert_eq!(live.len(), b);
+
+    let trace = ReplayBackend::from_text(&buf.text()).unwrap();
+    let outcomes = sweep_replay(&trace, &[SweepCandidate::new(policy_cfg())], 1).unwrap();
+    let swept: Vec<RunMetrics> = outcomes[0].results.iter().map(|r| r.metrics.clone()).collect();
+    assert_eq!(live, swept, "sweep must reproduce the live multi-device run exactly");
+}
